@@ -1,0 +1,104 @@
+//! Capacity planner — the paper's Section 5.2 use case.
+//!
+//! "An LLM user needs to choose a model and the number of GPUs across which
+//! to deploy": for each Vicuna size × GPU count this example reports the
+//! measured inference time per token next to the PIE-P-*predicted* energy
+//! per token, and recommends the Pareto-efficient configurations under a
+//! user latency budget.
+//!
+//! Run with: `cargo run --release --example capacity_planner [budget_ms]`
+
+use piep::config::{Parallelism, RunConfig, SimKnobs};
+use piep::models::{self, Family};
+use piep::predict::{PieP, PiepOptions};
+use piep::profiler::Campaign;
+use piep::util::stats::mean;
+
+struct Option_ {
+    model: &'static str,
+    gpus: usize,
+    ms_per_token: f64,
+    pred_j_per_token: f64,
+}
+
+fn main() {
+    let budget_ms: f64 = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(45.0);
+
+    let campaign = Campaign {
+        passes: 4,
+        knobs: SimKnobs {
+            sim_decode_steps: 12,
+            ..SimKnobs::default()
+        },
+        ..Campaign::default()
+    };
+
+    // Train PIE-P on the Vicuna tensor-parallel grid.
+    let grid = piep::workload::family_grid_tp(Family::Vicuna, &campaign.hw);
+    eprintln!("profiling {} configs ...", grid.len());
+    let ds = campaign.profile(&grid);
+    let piep = PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
+
+    // Candidate deployments: highest batch per config (as in Figure 3).
+    let mut options = Vec::new();
+    for variant in models::family_variants(Family::Vicuna) {
+        for gpus in [1usize, 2, 4] {
+            if !piep::workload::runnable(&variant, Parallelism::Tensor, gpus, &campaign.hw) {
+                continue;
+            }
+            let cfg = RunConfig::new(variant.name, Parallelism::Tensor, gpus, 64).with_seed(777);
+            let probe: Vec<_> = (0..3)
+                .map(|s| {
+                    piep::simulator::simulate_run(
+                        &cfg.clone().with_seed(1000 + s),
+                        &campaign.hw,
+                        &campaign.knobs,
+                    )
+                })
+                .collect();
+            let ms = mean(&probe.iter().map(|r| r.time_per_token_s() * 1e3).collect::<Vec<_>>());
+            let pred = mean(
+                &probe
+                    .iter()
+                    .map(|r| piep.predict_total(r, &ds.sync_db) / r.tokens_out as f64)
+                    .collect::<Vec<_>>(),
+            );
+            options.push(Option_ {
+                model: variant.name,
+                gpus,
+                ms_per_token: ms,
+                pred_j_per_token: pred,
+            });
+        }
+    }
+
+    println!("\nPIE-P capacity planning (Vicuna, TP, batch 64):");
+    println!("{:<12} {:>5} {:>12} {:>16}", "model", "gpus", "ms/token", "pred J/token");
+    for o in &options {
+        println!(
+            "{:<12} {:>5} {:>12.2} {:>16.3}",
+            o.model, o.gpus, o.ms_per_token, o.pred_j_per_token
+        );
+    }
+
+    // Recommendation: lowest predicted energy within the latency budget.
+    let feasible: Vec<&Option_> = options
+        .iter()
+        .filter(|o| o.ms_per_token <= budget_ms)
+        .collect();
+    println!("\nlatency budget: {budget_ms:.1} ms/token");
+    match feasible
+        .iter()
+        .min_by(|a, b| a.pred_j_per_token.partial_cmp(&b.pred_j_per_token).unwrap())
+    {
+        Some(best) => println!(
+            "recommended: {} on {} GPUs — {:.2} ms/token at {:.3} J/token (predicted)",
+            best.model, best.gpus, best.ms_per_token, best.pred_j_per_token
+        ),
+        None => println!("no configuration meets the budget; fastest is {:.2} ms/token",
+            options.iter().map(|o| o.ms_per_token).fold(f64::INFINITY, f64::min)),
+    }
+}

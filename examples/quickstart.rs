@@ -1,0 +1,74 @@
+//! Quickstart: the 60-second tour of the PIE-P reproduction.
+//!
+//! 1. Profile a tensor-parallel configuration (repeated passes).
+//! 2. Train PIE-P on a small family dataset.
+//! 3. Predict model- and module-level energy for an unseen run.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use piep::config::{Parallelism, RunConfig, SimKnobs};
+use piep::predict::{PieP, PiepOptions};
+use piep::profiler::Campaign;
+use piep::simulator::timeline::ModuleKind;
+
+fn main() {
+    // --- 1. profile ------------------------------------------------------
+    let campaign = Campaign {
+        passes: 5,
+        knobs: SimKnobs {
+            sim_decode_steps: 12,
+            ..SimKnobs::default()
+        },
+        ..Campaign::default()
+    };
+    let mut grid = Vec::new();
+    for model in ["Vicuna-7B", "Vicuna-13B"] {
+        for gpus in [2usize, 4] {
+            for batch in [8usize, 32] {
+                grid.push(RunConfig::new(model, Parallelism::Tensor, gpus, batch));
+            }
+        }
+    }
+    println!("profiling {} configs × {} passes ...", grid.len(), campaign.passes);
+    let ds = campaign.profile(&grid);
+    let r0 = &ds.runs[0];
+    println!(
+        "example run {}: wall {:.1}s, meter {:.2} Wh, NVML {:.2} Wh (GPU-only)",
+        r0.config.key(),
+        r0.wall_s,
+        r0.meter_total_j / 3600.0,
+        r0.nvml_total_j / 3600.0
+    );
+
+    // --- 2. train --------------------------------------------------------
+    let piep = PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
+    println!(
+        "trained PIE-P: {} leaf regressors + Eq.1 combiner",
+        piep.leaf.len()
+    );
+
+    // --- 3. predict an unseen run ---------------------------------------
+    let unseen = RunConfig::new("Vicuna-13B", Parallelism::Tensor, 4, 16).with_seed(9999);
+    let target = piep::simulator::simulate_run(&unseen, &campaign.hw, &campaign.knobs);
+    let pred = piep.predict_total(&target, &ds.sync_db);
+    println!("\nunseen config {}:", unseen.key());
+    println!("  predicted : {:>8.1} J ({:.3} Wh)", pred, pred / 3600.0);
+    println!(
+        "  measured  : {:>8.1} J ({:.3} Wh)",
+        target.meter_total_j,
+        target.meter_total_j / 3600.0
+    );
+    println!(
+        "  error     : {:>7.1}%",
+        100.0 * (pred - target.meter_total_j).abs() / target.meter_total_j
+    );
+    println!("\nmodule-level hotspots (predicted):");
+    let mut rows: Vec<(ModuleKind, f64)> = ModuleKind::ALL
+        .iter()
+        .filter_map(|&k| piep.predict_module(&target, k, &ds.sync_db).map(|p| (k, p)))
+        .collect();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (k, p) in rows {
+        println!("  {:<20} {:>8.1} J", k.name(), p);
+    }
+}

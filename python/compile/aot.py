@@ -1,0 +1,121 @@
+"""AOT lowering: JAX module forwards → HLO text artifacts for Rust/PJRT.
+
+Interchange format is HLO *text*, not `.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Usage (from `make artifacts`):
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one `<module>.hlo.txt` per profiled module plus `manifest.json`
+describing entry shapes so the Rust runtime can build input literals
+without re-deriving them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import FEATURE_DIM, PREDICT_BATCH, SimDims
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax fn → XLA HLO text (return_tuple=True; unwrap with
+    to_tuple1 on the Rust side for single-output fns)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def module_entries(dims: SimDims):
+    """(name, fn, input_shapes) for every AOT-exported executable."""
+    x_shape = (dims.batch, dims.seq, dims.d_model)
+    shapes = model.param_shapes(dims)
+
+    def entry(name, fn, first_input):
+        ins = [first_input] + list(shapes[name])
+        return name, fn, ins
+
+    return [
+        entry(
+            "self_attention",
+            functools.partial(model.self_attention, dims=dims),
+            x_shape,
+        ),
+        entry("mlp", functools.partial(model.mlp, dims=dims), x_shape),
+        entry("rmsnorm", functools.partial(model.norm, dims=dims), x_shape),
+        entry(
+            "logits_head",
+            functools.partial(model.logits_head, dims=dims),
+            x_shape,
+        ),
+        entry("block", functools.partial(model.block, dims=dims), x_shape),
+        entry(
+            "ridge_predict",
+            model.ridge_predict,
+            (PREDICT_BATCH, FEATURE_DIM),
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    dims = SimDims()
+    manifest: dict = {
+        "sim_dims": {
+            "batch": dims.batch,
+            "seq": dims.seq,
+            "d_model": dims.d_model,
+            "n_heads": dims.n_heads,
+            "n_kv_heads": dims.n_kv_heads,
+            "d_ff": dims.d_ff,
+            "vocab": dims.vocab,
+        },
+        "feature_dim": FEATURE_DIM,
+        "predict_batch": PREDICT_BATCH,
+        "modules": {},
+    }
+
+    for name, fn, in_shapes in module_entries(dims):
+        specs = [_spec(s) for s in in_shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shape = jax.eval_shape(fn, *specs)
+        manifest["modules"][name] = {
+            "inputs": [list(s) for s in in_shapes],
+            "output": list(out_shape.shape),
+            "hlo": f"{name}.hlo.txt",
+            "hlo_chars": len(text),
+        }
+        print(f"aot: {name}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"aot: wrote manifest with {len(manifest['modules'])} modules")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+Kernels: flash-style tiled attention, fused SwiGLU MLP, RMSNorm.
+`ref.py` holds the pure-jnp oracles used by the pytest suite.
+"""
+
+from .attention import flash_attention
+from .mlp import swiglu_mlp
+from .rmsnorm import rmsnorm
+
+__all__ = ["flash_attention", "swiglu_mlp", "rmsnorm"]

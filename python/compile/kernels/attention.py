@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernel: tiled (flash-style) causal attention.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+testbed runs CUDA attention kernels that stream K/V through SMEM per
+threadblock. On TPU the analogous structure is a grid over
+(batch*heads, q-blocks) where each grid cell holds a Q tile resident in
+VMEM and streams K/V tiles HBM→VMEM, maintaining an online-softmax
+accumulator so the S×S score matrix is never materialized.
+
+Executed with ``interpret=True`` — the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the AOT artifact runs
+anywhere (including the Rust PJRT client).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Mask fill value. A large-negative finite value (not -inf) so that a
+# fully-masked score row produces exp(s - m) == 0 rather than NaN.
+_MASK_VALUE = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale, block_k, seq_len, causal):
+    """One grid cell: one (batch*head, q-block) tile.
+
+    q_ref: [1, block_q, Dh] VMEM tile; k_ref/v_ref: [1, S, Dh] (streamed in
+    block_k chunks below); o_ref: [1, block_q, Dh].
+    """
+    q = q_ref[0].astype(jnp.float32)  # [bq, Dh]
+    block_q, head_dim = q.shape
+    q_block = pl.program_id(1)
+
+    m0 = jnp.full((block_q,), _MASK_VALUE, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+
+    num_k_blocks = seq_len // block_k
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        s = (q @ k.T) * sm_scale  # [bq, bk]
+        if causal:
+            q_ids = q_block * block_q + jax.lax.iota(jnp.int32, block_q)
+            k_ids = i * block_k + jax.lax.iota(jnp.int32, block_k)
+            s = jnp.where(q_ids[:, None] >= k_ids[None, :], s, _MASK_VALUE)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_k_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 32,
+    block_k: int = 32,
+):
+    """Tiled attention. q/k/v: [B, H, S, Dh] (KV already head-expanded).
+
+    Requires S % block_q == 0 and S % block_k == 0 (the sweep tests cover
+    several block sizes; `model.py` picks blocks that divide the AOT
+    shapes). Accumulation is always f32 regardless of input dtype.
+    """
+    batch, heads, seq, head_dim = q.shape
+    assert k.shape == q.shape and v.shape == q.shape, "expand KV heads first"
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+    assert seq % block_q == 0 and seq % block_k == 0
+    if sm_scale is None:
+        sm_scale = 1.0 / (head_dim**0.5)
+
+    qf = q.reshape(batch * heads, seq, head_dim)
+    kf = k.reshape(batch * heads, seq, head_dim)
+    vf = v.reshape(batch * heads, seq, head_dim)
+
+    grid = (batch * heads, seq // block_q)
+    kernel = functools.partial(
+        _attn_kernel,
+        sm_scale=sm_scale,
+        block_k=block_k,
+        seq_len=seq,
+        causal=causal,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, head_dim), lambda bh, qb: (bh, qb, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda bh, qb: (bh, 0, 0)),
+            pl.BlockSpec((1, seq, head_dim), lambda bh, qb: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim), lambda bh, qb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct(qf.shape, q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(batch, heads, seq, head_dim)
+
+
+def vmem_footprint_bytes(
+    *, block_q: int, block_k: int, seq: int, head_dim: int, dtype_bytes: int = 4
+) -> int:
+    """Estimated per-cell VMEM residency of the kernel (DESIGN.md §Perf).
+
+    Q tile + one K tile + one V tile + f32 accumulator/stats + output tile.
+    The full K/V rows are *streamed*, so only one block_k tile of each is
+    live at a time.
+    """
+    q_tile = block_q * head_dim * dtype_bytes
+    kv_tiles = 2 * block_k * head_dim * dtype_bytes
+    acc = block_q * head_dim * 4 + 2 * block_q * 4
+    out = block_q * head_dim * dtype_bytes
+    return q_tile + kv_tiles + acc + out

@@ -1,0 +1,66 @@
+"""Layer-1 Pallas kernel: fused SwiGLU feed-forward.
+
+One kernel computes ``(silu(x @ Wg) * (x @ Wu)) @ Wd`` per row-block so the
+[block_rows, d_ff] gate/up intermediates live only in VMEM — the TPU
+analogue of the paper testbed's CUDA epilogue fusion (DESIGN.md
+§Hardware-Adaptation). Weights are kept whole per grid cell at sim scale
+(d_model=256, d_ff=1024 ⇒ ~3 MiB f32, inside the ~16 MiB VMEM budget);
+the d_ff axis would be tiled next for larger shapes.
+
+interpret=True: see attention.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # [block_rows, D]
+    wg = wg_ref[...].astype(jnp.float32)  # [D, F]
+    wu = wu_ref[...].astype(jnp.float32)
+    wd = wd_ref[...].astype(jnp.float32)  # [F, D]
+    g = x @ wg
+    u = x @ wu
+    h = (g * jnp.reciprocal(1.0 + jnp.exp(-g))) * u  # silu(g) * u, f32 accum
+    o_ref[...] = (h @ wd).astype(o_ref.dtype)
+
+
+def swiglu_mlp(x, w_gate, w_up, w_down, *, block_rows: int = 64):
+    """Fused SwiGLU MLP. x: [N, D]; w_gate/w_up: [D, F]; w_down: [F, D]."""
+    n, d = x.shape
+    f = w_gate.shape[1]
+    assert w_gate.shape == (d, f) and w_up.shape == (d, f) and w_down.shape == (f, d)
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0
+
+    grid = (n // block_rows,)
+    out = pl.pallas_call(
+        _swiglu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+            pl.BlockSpec((d, f), lambda r: (0, 0)),
+            pl.BlockSpec((d, f), lambda r: (0, 0)),
+            pl.BlockSpec((f, d), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, w_gate, w_up, w_down)
+    return out
+
+
+def vmem_footprint_bytes(
+    *, block_rows: int, d_model: int, d_ff: int, dtype_bytes: int = 4
+) -> int:
+    """Per-cell VMEM residency estimate (DESIGN.md §Perf)."""
+    x_tile = block_rows * d_model * dtype_bytes
+    weights = (2 * d_model * d_ff + d_ff * d_model) * dtype_bytes
+    inter = 2 * block_rows * d_ff * 4  # f32 gate/up intermediates
+    out = block_rows * d_model * dtype_bytes
+    return x_tile + weights + inter + out

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain `jax.numpy` ops (no Pallas, no tiling, no online softmax).
+`python/tests/` asserts `assert_allclose(kernel(...), ref(...))` across a
+hypothesis-driven sweep of shapes/dtypes — this is the core correctness
+signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """Reference multi-head attention.
+
+    q: [B, H, S, Dh]; k, v: [B, H, S, Dh] (KV heads already expanded for
+    grouped-query attention). Returns [B, H, S, Dh].
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    if causal:
+        seq = q.shape[2]
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def swiglu_mlp(x, w_gate, w_up, w_down):
+    """Reference SwiGLU feed-forward: (silu(x Wg) * (x Wu)) Wd.
+
+    x: [N, D]; w_gate/w_up: [D, F]; w_down: [F, D].
+    """
+    xf = x.astype(jnp.float32)
+    g = xf @ w_gate.astype(jnp.float32)
+    u = xf @ w_up.astype(jnp.float32)
+    h = (g * jnp.reciprocal(1.0 + jnp.exp(-g))) * u  # silu(g) * u
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm(x, gain, *, eps: float = 1e-6):
+    """Reference RMSNorm over the last axis. x: [N, D], gain: [D]."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jnp.reciprocal(jnp.sqrt(ms + eps)) * gain.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def expand_kv(k, *, n_heads: int):
+    """Expand grouped KV heads [B, Hkv, S, D] -> [B, H, S, D] by repetition."""
+    n_kv = k.shape[1]
+    assert n_heads % n_kv == 0
+    return jnp.repeat(k, n_heads // n_kv, axis=1)

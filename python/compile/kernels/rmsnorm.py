@@ -1,0 +1,40 @@
+"""Layer-1 Pallas kernel: RMSNorm over the last axis, row-block tiled.
+
+interpret=True: see attention.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)  # [block_rows, D]
+    g = g_ref[...].astype(jnp.float32)  # [D]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g).astype(o_ref.dtype)
+
+
+def rmsnorm(x, gain, *, eps: float = 1e-6, block_rows: int = 64):
+    """RMSNorm. x: [N, D]; gain: [D]."""
+    n, d = x.shape
+    assert gain.shape == (d,)
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+            pl.BlockSpec((d,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, gain)
+    return out

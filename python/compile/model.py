@@ -1,0 +1,126 @@
+"""Layer-2: JAX compute graphs for the profiled LLM modules.
+
+These functions are the *functional* forward passes of the model-tree leaf
+modules PIE-P profiles (Self-Attention, MLP, RMSNorm, LLMEmbedding/logits)
+plus the composed transformer block, all calling the Layer-1 Pallas
+kernels. `aot.py` lowers each one once to HLO text; the Rust coordinator
+executes the artifacts via PJRT on the request path (Python never runs at
+inference time).
+
+The AOT shapes are the reduced "sim scale" dimensions (SimDims): energy in
+the reproduction substrate depends on the *architecture descriptors* (see
+rust/src/models/), while these executables prove the three-layer stack
+composes and supply real activations whose tensor shapes drive the
+simulator's communication volumes.
+
+All module functions take positional array arguments only (x, then flat
+params) so the Rust side can feed PJRT literals in a documented order —
+see `aot.py`'s manifest.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention, rmsnorm as rmsnorm_kernel, swiglu_mlp
+from .kernels.ref import expand_kv
+
+
+@dataclass(frozen=True)
+class SimDims:
+    """Reduced dimensions used for the AOT artifacts."""
+
+    batch: int = 2
+    seq: int = 64
+    d_model: int = 256
+    n_heads: int = 8
+    n_kv_heads: int = 4  # grouped-query, mirroring Mistral/Llama-70B style
+    d_ff: int = 1024
+    vocab: int = 2048
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Feature-vector width shared with rust/src/features/ (padded). Keep in
+# sync with `piep::features::FEATURE_DIM`.
+FEATURE_DIM = 48
+# Row count of the batched ridge-predict executable; Rust pads partial
+# batches with zero rows.
+PREDICT_BATCH = 256
+
+
+def self_attention(x, wq, wk, wv, wo, *, dims: SimDims):
+    """Self-attention module: QKV projection + tiled attention + out-proj.
+
+    x: [B, S, D]; wq: [D, H*Dh]; wk/wv: [D, Hkv*Dh]; wo: [H*Dh, D].
+    """
+    b, s, d = x.shape
+    h, hk, dh = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    q = (x @ wq).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, s, hk, dh).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, s, hk, dh).transpose(0, 2, 1, 3)
+    k = expand_kv(k, n_heads=h)
+    v = expand_kv(v, n_heads=h)
+    o = flash_attention(q, k, v, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return o @ wo
+
+
+def mlp(x, w_gate, w_up, w_down, *, dims: SimDims):
+    """SwiGLU MLP module. x: [B, S, D]."""
+    b, s, d = x.shape
+    out = swiglu_mlp(x.reshape(b * s, d), w_gate, w_up, w_down)
+    return out.reshape(b, s, d)
+
+
+def norm(x, gain, *, dims: SimDims):
+    """RMSNorm module. x: [B, S, D]; gain: [D]."""
+    b, s, d = x.shape
+    return rmsnorm_kernel(x.reshape(b * s, d), gain).reshape(b, s, d)
+
+
+def logits_head(x, w_embed_t, *, dims: SimDims):
+    """LLMEmbedding (tied) output head: last-token logits. x: [B, S, D]."""
+    return x[:, -1, :] @ w_embed_t  # [B, V]
+
+
+def block(x, g1, wq, wk, wv, wo, g2, w_gate, w_up, w_down, *, dims: SimDims):
+    """Pre-norm transformer block: x + Attn(RMS(x)); x + MLP(RMS(x))."""
+    h = x + self_attention(norm(x, g1, dims=dims), wq, wk, wv, wo, dims=dims)
+    return h + mlp(norm(h, g2, dims=dims), w_gate, w_up, w_down, dims=dims)
+
+
+def ridge_predict(features, weights, bias):
+    """Batched leaf-regressor inference used on the Rust prediction path.
+
+    features: [PREDICT_BATCH, FEATURE_DIM]; weights: [FEATURE_DIM]; bias: [1].
+    Returns [PREDICT_BATCH] predicted energies (Joules).
+    """
+    return features @ weights + bias[0]
+
+
+def param_shapes(dims: SimDims) -> dict[str, list[tuple[int, ...]]]:
+    """Positional parameter shapes per module (after x), used by aot.py's
+    manifest and mirrored by the Rust runtime when building literals."""
+    d, h, hk, dh, f = (
+        dims.d_model,
+        dims.n_heads,
+        dims.n_kv_heads,
+        dims.head_dim,
+        dims.d_ff,
+    )
+    attn = [(d, h * dh), (d, hk * dh), (d, hk * dh), (h * dh, d)]
+    mlp_p = [(d, f), (d, f), (f, d)]
+    return {
+        "self_attention": attn,
+        "mlp": mlp_p,
+        "rmsnorm": [(d,)],
+        "logits_head": [(d, dims.vocab)],
+        "block": [(d,)] + attn + [(d,)] + mlp_p,
+        "ridge_predict": [(FEATURE_DIM,), (1,)],
+    }

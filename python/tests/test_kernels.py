@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/block sizes; every property asserts
+allclose against `kernels.ref`. This is the build-time gate for the AOT
+artifacts — if these fail, `make artifacts` must not be trusted.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.rmsnorm import rmsnorm as rmsnorm_kernel
+from compile.kernels import attention, mlp, ref
+
+jax.config.update("jax_enable_x64", False)
+
+# Interpret-mode Pallas is slow; keep example counts modest but meaningful.
+SETTINGS = settings(max_examples=12, deadline=None)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- attention
+@given(
+    batch=st.sampled_from([1, 2]),
+    heads=st.sampled_from([1, 2, 4]),
+    seq=st.sampled_from([32, 64, 128]),
+    head_dim=st.sampled_from([16, 32, 64]),
+    block_q=st.sampled_from([16, 32]),
+    block_k=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SETTINGS
+def test_attention_matches_ref(batch, heads, seq, head_dim, block_q, block_k, causal, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _rand(keys[0], (batch, heads, seq, head_dim))
+    k = _rand(keys[1], (batch, heads, seq, head_dim))
+    v = _rand(keys[2], (batch, heads, seq, head_dim))
+    got = attention.flash_attention(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_non_causal_uniform_values():
+    # With identical V rows, non-causal attention output == that row exactly.
+    b, h, s, d = 1, 2, 32, 16
+    q = _rand(jax.random.PRNGKey(0), (b, h, s, d))
+    k = _rand(jax.random.PRNGKey(1), (b, h, s, d))
+    v = jnp.broadcast_to(jnp.arange(d, dtype=jnp.float32), (b, h, s, d))
+    got = attention.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(got, v, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_causal_first_row_is_v0():
+    # Causal: position 0 can only attend to itself.
+    b, h, s, d = 1, 1, 64, 32
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (_rand(kk, (b, h, s, d)) for kk in keys)
+    got = attention.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got[:, :, 0, :], v[:, :, 0, :], rtol=1e-5, atol=1e-5)
+
+
+def test_attention_scale_override():
+    b, h, s, d = 1, 1, 32, 16
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (_rand(kk, (b, h, s, d)) for kk in keys)
+    got = attention.flash_attention(q, k, v, causal=True, sm_scale=0.5)
+    want = ref.attention(q, k, v, causal=True, sm_scale=0.5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_large_magnitude_stability():
+    # Online softmax must survive large score magnitudes without overflow.
+    b, h, s, d = 1, 1, 64, 32
+    keys = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = _rand(keys[0], (b, h, s, d), scale=30.0)
+    k = _rand(keys[1], (b, h, s, d), scale=30.0)
+    v = _rand(keys[2], (b, h, s, d))
+    got = attention.flash_attention(q, k, v, causal=True)
+    want = ref.attention(q, k, v, causal=True)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_rejects_unexpanded_kv():
+    q = jnp.zeros((1, 4, 32, 16))
+    k = jnp.zeros((1, 2, 32, 16))
+    with pytest.raises(AssertionError):
+        attention.flash_attention(q, k, k)
+
+
+def test_attention_vmem_footprint_budget():
+    # DESIGN.md §Perf: per-cell VMEM residency ≤ 2 MiB at profile shapes.
+    bytes_ = attention.vmem_footprint_bytes(block_q=32, block_k=32, seq=64, head_dim=64)
+    assert bytes_ <= 2 * 1024 * 1024
+
+
+# ---------------------------------------------------------------- swiglu mlp
+@given(
+    rows=st.sampled_from([32, 64, 128]),
+    d_model=st.sampled_from([32, 64, 128]),
+    d_ff=st.sampled_from([64, 128, 256]),
+    block_rows=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SETTINGS
+def test_swiglu_matches_ref(rows, d_model, d_ff, block_rows, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(keys[0], (rows, d_model))
+    wg = _rand(keys[1], (d_model, d_ff), scale=0.1)
+    wu = _rand(keys[2], (d_model, d_ff), scale=0.1)
+    wd = _rand(keys[3], (d_ff, d_model), scale=0.1)
+    got = mlp.swiglu_mlp(x, wg, wu, wd, block_rows=block_rows)
+    want = ref.swiglu_mlp(x, wg, wu, wd)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_swiglu_zero_input_is_zero():
+    x = jnp.zeros((32, 64))
+    w = jnp.ones((64, 128)) * 0.1
+    wd = jnp.ones((128, 64)) * 0.1
+    got = mlp.swiglu_mlp(x, w, w, wd)
+    np.testing.assert_allclose(got, jnp.zeros_like(x), atol=1e-7)
+
+
+def test_swiglu_block_rows_larger_than_n_clamps():
+    x = _rand(jax.random.PRNGKey(0), (16, 32))
+    w = _rand(jax.random.PRNGKey(1), (32, 64), scale=0.1)
+    wd = _rand(jax.random.PRNGKey(2), (64, 32), scale=0.1)
+    got = mlp.swiglu_mlp(x, w, w, wd, block_rows=512)
+    want = ref.swiglu_mlp(x, w, w, wd)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------ rmsnorm
+@given(
+    rows=st.sampled_from([16, 64, 128]),
+    d_model=st.sampled_from([32, 128, 256]),
+    block_rows=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SETTINGS
+def test_rmsnorm_matches_ref(rows, d_model, block_rows, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = _rand(keys[0], (rows, d_model), scale=3.0)
+    g = _rand(keys[1], (d_model,))
+    got = rmsnorm_kernel(x, g, block_rows=block_rows)
+    want = ref.rmsnorm(x, g)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_rmsnorm_unit_gain_unit_rows():
+    # Rows with RMS 1 and unit gain pass through unchanged.
+    d = 64
+    x = jnp.ones((16, d))
+    got = rmsnorm_kernel(x, jnp.ones((d,)))
+    np.testing.assert_allclose(got, x, rtol=1e-5)
+
+
+def test_rmsnorm_output_rms_is_gain_rms():
+    # After normalization with gain g, each row's per-dim values are g * x_hat
+    # where rms(x_hat) == 1.
+    keys = jax.random.split(jax.random.PRNGKey(5), 2)
+    x = _rand(keys[0], (32, 128), scale=10.0)
+    got = rmsnorm_kernel(x, jnp.ones((128,)))
+    rms = np.sqrt(np.mean(np.asarray(got) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, np.ones(32), rtol=1e-3)

@@ -1,0 +1,118 @@
+"""L2 correctness: composed module forwards vs pure-jnp block, shapes, GQA."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.model import SimDims
+
+
+def _params(key, shapes):
+    keys = jax.random.split(key, len(shapes))
+    return [jax.random.normal(k, s) * 0.05 for k, s in zip(keys, shapes)]
+
+
+@pytest.fixture(scope="module")
+def dims():
+    return SimDims()
+
+
+@pytest.fixture(scope="module")
+def x(dims):
+    return jax.random.normal(jax.random.PRNGKey(0), (dims.batch, dims.seq, dims.d_model))
+
+
+def _ref_self_attention(x, wq, wk, wv, wo, dims):
+    b, s, _ = x.shape
+    h, hk, dh = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    q = (x @ wq).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, s, hk, dh).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, s, hk, dh).transpose(0, 2, 1, 3)
+    k = ref.expand_kv(k, n_heads=h)
+    v = ref.expand_kv(v, n_heads=h)
+    o = ref.attention(q, k, v, causal=True)
+    return o.transpose(0, 2, 1, 3).reshape(b, s, h * dh) @ wo
+
+
+def test_self_attention_module(dims, x):
+    shapes = model.param_shapes(dims)["self_attention"]
+    p = _params(jax.random.PRNGKey(1), shapes)
+    got = model.self_attention(x, *p, dims=dims)
+    want = _ref_self_attention(x, *p, dims=dims)
+    assert got.shape == x.shape
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_mlp_module(dims, x):
+    shapes = model.param_shapes(dims)["mlp"]
+    p = _params(jax.random.PRNGKey(2), shapes)
+    got = model.mlp(x, *p, dims=dims)
+    b, s, d = x.shape
+    want = ref.swiglu_mlp(x.reshape(b * s, d), *p).reshape(b, s, d)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_norm_module(dims, x):
+    (gshape,) = model.param_shapes(dims)["rmsnorm"]
+    g = jax.random.normal(jax.random.PRNGKey(3), gshape)
+    got = model.norm(x, g, dims=dims)
+    b, s, d = x.shape
+    want = ref.rmsnorm(x.reshape(b * s, d), g).reshape(b, s, d)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_logits_head_shape(dims, x):
+    (wshape,) = model.param_shapes(dims)["logits_head"]
+    w = jax.random.normal(jax.random.PRNGKey(4), wshape) * 0.05
+    out = model.logits_head(x, w, dims=dims)
+    assert out.shape == (dims.batch, dims.vocab)
+    np.testing.assert_allclose(out, x[:, -1, :] @ w, rtol=1e-5, atol=1e-6)
+
+
+def test_block_composition(dims, x):
+    """Full pre-norm block vs a pure-jnp recomposition of the oracles."""
+    shapes = model.param_shapes(dims)["block"]
+    p = _params(jax.random.PRNGKey(5), shapes)
+    g1, wq, wk, wv, wo, g2, wg, wu, wd = p
+    got = model.block(x, *p, dims=dims)
+
+    b, s, d = x.shape
+    xn = ref.rmsnorm(x.reshape(b * s, d), g1).reshape(b, s, d)
+    h = x + _ref_self_attention(xn, wq, wk, wv, wo, dims)
+    hn = ref.rmsnorm(h.reshape(b * s, d), g2).reshape(b, s, d)
+    want = h + ref.swiglu_mlp(hn.reshape(b * s, d), wg, wu, wd).reshape(b, s, d)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-5)
+
+
+def test_block_residual_identity_at_zero_params(dims, x):
+    """Zero weights + zero gains ⇒ the block is the identity (residuals only)."""
+    shapes = model.param_shapes(dims)["block"]
+    p = [jnp.zeros(s) for s in shapes]
+    got = model.block(x, *p, dims=dims)
+    np.testing.assert_allclose(got, x, atol=1e-6)
+
+
+def test_ridge_predict(dims):
+    feats = jax.random.normal(jax.random.PRNGKey(6), (model.PREDICT_BATCH, model.FEATURE_DIM))
+    w = jax.random.normal(jax.random.PRNGKey(7), (model.FEATURE_DIM,))
+    b = jnp.array([1.5])
+    out = model.ridge_predict(feats, w, b)
+    assert out.shape == (model.PREDICT_BATCH,)
+    np.testing.assert_allclose(out, feats @ w + 1.5, rtol=1e-5, atol=1e-5)
+
+
+def test_param_shapes_cover_all_modules(dims):
+    shapes = model.param_shapes(dims)
+    assert set(shapes) == {
+        "self_attention",
+        "mlp",
+        "rmsnorm",
+        "logits_head",
+        "block",
+        "ridge_predict",
+    }
+    # block params = norm + attn + norm + mlp
+    assert len(shapes["block"]) == 1 + 4 + 1 + 3

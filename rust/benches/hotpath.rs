@@ -1,0 +1,131 @@
+//! Hot-path microbenchmarks (criterion-style output, harness = false).
+//!
+//! Covers the three performance-critical paths of DESIGN.md §8:
+//!   sim/*        — the DES substrate (runs/s, phases/s)
+//!   features/*   — feature extraction (modules/s)
+//!   predict/*    — leaf regression + combiner (predictions/s)
+//!   train/*      — full PIE-P fit on a family-sized dataset
+//!   pjrt/*       — batched ridge prediction through the AOT executable
+//!                  (skipped when artifacts/ is absent)
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use piep::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use piep::features::{module_features, FeatureOpts};
+use piep::predict::{PieP, PiepOptions};
+use piep::profiler::Campaign;
+use piep::simulator::simulate_run;
+use piep::simulator::timeline::ModuleKind;
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut(usize)) -> f64 {
+    // Warmup.
+    f(0);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        f(i);
+    }
+    let dt = t0.elapsed();
+    let per = dt / iters as u32;
+    println!(
+        "bench:hotpath/{name:<28} time: {per:>12.2?}   ({iters} iters, total {dt:?})"
+    );
+    dt.as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let hw = HwSpec::default();
+    let knobs = SimKnobs {
+        sim_decode_steps: 16,
+        ..SimKnobs::default()
+    };
+
+    // --- simulator -------------------------------------------------------
+    let cfg70 = RunConfig::new("Llama-70B", Parallelism::Tensor, 4, 32);
+    let per_run = bench("sim/llama70b_tp4_run", 20, |i| {
+        black_box(simulate_run(&cfg70.clone().with_seed(i as u64), &hw, &knobs));
+    });
+    // Phases per run: steps × layers × ranks × ~8 phase pushes.
+    let phases = 16.0 * 80.0 * 4.0 * 8.0 + 80.0 * 4.0 * 8.0;
+    println!(
+        "bench:hotpath/sim_throughput            {:.2} Mphases/s",
+        phases / per_run / 1e6
+    );
+
+    let cfg7 = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8);
+    bench("sim/vicuna7b_tp2_run", 50, |i| {
+        black_box(simulate_run(&cfg7.clone().with_seed(i as u64), &hw, &knobs));
+    });
+    let cfg_pp = RunConfig::new("Vicuna-13B", Parallelism::Pipeline, 4, 32);
+    bench("sim/vicuna13b_pp4_run", 20, |i| {
+        black_box(simulate_run(&cfg_pp.clone().with_seed(i as u64), &hw, &knobs));
+    });
+
+    // --- dataset for the downstream benches ------------------------------
+    let campaign = Campaign {
+        passes: 4,
+        knobs: knobs.clone(),
+        ..Campaign::default()
+    };
+    let grid = piep::workload::family_grid_tp(piep::models::Family::Vicuna, &hw);
+    let ds = campaign.profile(&grid);
+    let r0 = ds.runs[0].clone();
+
+    // --- features ---------------------------------------------------------
+    let per_feat = bench("features/module_vector", 20_000, |_| {
+        black_box(module_features(
+            &r0,
+            ModuleKind::AllReduce,
+            64.0,
+            Some(&ds.sync_db),
+            FeatureOpts::default(),
+        ));
+    });
+    println!(
+        "bench:hotpath/feature_throughput        {:.2} Mmodules/s",
+        1.0 / per_feat / 1e6
+    );
+
+    // --- training ---------------------------------------------------------
+    bench("train/piep_fit_vicuna", 3, |_| {
+        black_box(PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default()));
+    });
+
+    // --- prediction --------------------------------------------------------
+    let piep = PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
+    let per_pred = bench("predict/total_per_run", 5_000, |i| {
+        let r = &ds.runs[i % ds.runs.len()];
+        black_box(piep.predict_total(r, &ds.sync_db));
+    });
+    println!(
+        "bench:hotpath/predict_throughput        {:.1} kpred/s",
+        1.0 / per_pred / 1e3
+    );
+
+    // --- PJRT batched predict ----------------------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = piep::runtime::Runtime::load("artifacts").expect("artifacts");
+        let leaf = piep.leaf.get(&ModuleKind::Mlp).unwrap();
+        let (w, b) = leaf.flatten();
+        let rows: Vec<Vec<f64>> = (0..256)
+            .map(|i| {
+                module_features(
+                    &ds.runs[i % ds.runs.len()],
+                    ModuleKind::Mlp,
+                    32.0,
+                    Some(&ds.sync_db),
+                    FeatureOpts::default(),
+                )
+            })
+            .collect();
+        let per_batch = bench("pjrt/ridge_predict_256rows", 200, |_| {
+            black_box(rt.predict_batch(&rows, &w, b).unwrap());
+        });
+        println!(
+            "bench:hotpath/pjrt_predict_throughput   {:.1} kpred/s",
+            256.0 / per_batch / 1e3
+        );
+    } else {
+        println!("bench:hotpath/pjrt/*  skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,58 @@
+//! End-to-end benchmark: one timed run per paper table/figure harness.
+//!
+//! criterion is unavailable on the offline image, so this is a
+//! `harness = false` bench that reports criterion-style lines: each
+//! experiment harness is executed end-to-end (profiling campaign +
+//! training + evaluation + table emission) and timed. Profiling campaigns
+//! are cached inside one `ReportCtx` exactly as `piep reproduce --all`
+//! runs them, so the first experiment of each parallelism carries the
+//! campaign cost and the rest measure harness overhead — both numbers are
+//! reported.
+//!
+//! Run with: `cargo bench` (writes tables to target/bench-reports/).
+
+use std::time::Instant;
+
+use piep::config::SimKnobs;
+use piep::profiler::Campaign;
+use piep::report::{self, ReportCtx};
+
+fn timed(name: &str, f: impl FnOnce()) {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed();
+    println!("bench:tables/{name:<22} time: {dt:?}");
+}
+
+fn main() {
+    let campaign = Campaign {
+        passes: 4,
+        knobs: SimKnobs {
+            sim_decode_steps: 12,
+            ..SimKnobs::default()
+        },
+        ..Campaign::default()
+    };
+    let mut ctx = ReportCtx::new("target/bench-reports", campaign);
+
+    let t0 = Instant::now();
+    timed("campaign_tp", || {
+        ctx.tp_dataset();
+    });
+    timed("figure2", || drop(report::figure2(&mut ctx)));
+    timed("table2", || drop(report::table2(&mut ctx)));
+    timed("table3", || drop(report::table3(&mut ctx)));
+    timed("table4", || drop(report::table4(&mut ctx)));
+    timed("figure3", || drop(report::figure3(&mut ctx)));
+    timed("figure4", || drop(report::figure4(&mut ctx)));
+    timed("figure5", || drop(report::figure5(&mut ctx)));
+    timed("figure6", || drop(report::figure6(&mut ctx)));
+    timed("table5", || drop(report::table5(&mut ctx)));
+    timed("table6", || drop(report::table6(&mut ctx)));
+    timed("table7", || drop(report::table7(&mut ctx)));
+    timed("table8", || drop(report::table8(&mut ctx)));
+    timed("figure7", || drop(report::figure7(&mut ctx)));
+    timed("figure8", || drop(report::figure8(&mut ctx)));
+    timed("table9", || drop(report::table9(&mut ctx)));
+    println!("bench:tables/ALL                 time: {:?}", t0.elapsed());
+}

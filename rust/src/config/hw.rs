@@ -1,0 +1,252 @@
+//! Simulated testbed description + substrate calibration knobs.
+//!
+//! Defaults describe the paper's server: AMD EPYC Milan 7543P (32 cores),
+//! 4× NVIDIA RTX A6000 (48 GB GDDR6, PCIe 4.0), wall power measured by a
+//! Watts Up Pro. Power/time constants come from public spec sheets and the
+//! usual measured-behavior literature (NCCL busy-wait draw, PCIe effective
+//! bandwidth, PSU conversion losses); DESIGN.md §7 documents the model.
+
+/// Static hardware description.
+#[derive(Debug, Clone)]
+pub struct HwSpec {
+    /// GPUs installed.
+    pub num_gpus: usize,
+    /// Per-GPU VRAM bytes (A6000: 48 GB).
+    pub vram_bytes: f64,
+    /// Peak dense FP16 throughput per GPU, FLOP/s (A6000 ≈ 77.4 TFLOPS
+    /// tensor, ~45% achievable in decode kernels).
+    pub gpu_peak_flops: f64,
+    /// Achievable fraction of peak in LLM kernels.
+    pub gpu_mfu: f64,
+    /// HBM/GDDR6 bandwidth per GPU, bytes/s (A6000: 768 GB/s).
+    pub gpu_mem_bw: f64,
+    /// Achievable fraction of memory bandwidth.
+    pub gpu_mem_eff: f64,
+    /// GPU idle board power, W.
+    pub gpu_idle_w: f64,
+    /// GPU board power limit, W (A6000: 300).
+    pub gpu_tdp_w: f64,
+    /// Board power while a collective busy-waits (NCCL spins SMs).
+    pub gpu_wait_w: f64,
+    /// Board power while driving the interconnect.
+    pub gpu_comm_w: f64,
+    /// Inter-GPU link bandwidth, bytes/s (PCIe 4.0 x16 ≈ 25 GB/s effective
+    /// ≈ 17 GB/s with NCCL protocol overhead).
+    pub link_bw: f64,
+    /// Per-ring-step latency, s (kernel launch + DMA setup).
+    pub link_step_latency: f64,
+    /// Fixed per-collective-call latency, s.
+    pub coll_base_latency: f64,
+    /// CPU package idle power, W (EPYC 7543P idles high on servers).
+    pub cpu_idle_w: f64,
+    /// CPU package max power, W (TDP 225).
+    pub cpu_max_w: f64,
+    /// DRAM + fans + board baseline, W.
+    pub dram_base_w: f64,
+    /// DRAM active adder, W.
+    pub dram_active_w: f64,
+    /// PSU fixed overhead, W.
+    pub psu_base_w: f64,
+    /// PSU proportional conversion loss (fraction of subtotal).
+    pub psu_loss_frac: f64,
+    /// GPU base/boost clock, GHz (telemetry feature).
+    pub gpu_clock_ghz: f64,
+    /// GPU memory clock, GHz.
+    pub gpu_mem_clock_ghz: f64,
+    /// CPU clock, GHz.
+    pub cpu_clock_ghz: f64,
+    /// CPU memory clock, GHz.
+    pub cpu_mem_clock_ghz: f64,
+    /// Wall-meter sampling interval, s (Watts Up Pro: 1 Hz).
+    pub meter_interval_s: f64,
+    /// NVML polling interval, s (the paper's profilers poll ~10 Hz).
+    pub nvml_interval_s: f64,
+}
+
+impl Default for HwSpec {
+    fn default() -> Self {
+        HwSpec {
+            num_gpus: 4,
+            vram_bytes: 48.0 * (1u64 << 30) as f64,
+            gpu_peak_flops: 77.4e12,
+            gpu_mfu: 0.45,
+            gpu_mem_bw: 768.0e9,
+            gpu_mem_eff: 0.75,
+            gpu_idle_w: 22.0,
+            gpu_tdp_w: 300.0,
+            gpu_wait_w: 95.0,
+            gpu_comm_w: 120.0,
+            link_bw: 12.0e9,
+            link_step_latency: 5.0e-6,
+            coll_base_latency: 14.0e-6,
+            cpu_idle_w: 85.0,
+            cpu_max_w: 225.0,
+            dram_base_w: 28.0,
+            dram_active_w: 22.0,
+            psu_base_w: 30.0,
+            psu_loss_frac: 0.10,
+            gpu_clock_ghz: 1.80,
+            gpu_mem_clock_ghz: 2.00,
+            cpu_clock_ghz: 2.80,
+            cpu_mem_clock_ghz: 1.60,
+            meter_interval_s: 1.0,
+            nvml_interval_s: 0.1,
+        }
+    }
+}
+
+impl HwSpec {
+    /// The paper's testbed: 4x RTX A6000 over PCIe 4.0 + EPYC 7543P.
+    pub fn a6000_testbed() -> Self {
+        Self::default()
+    }
+
+    /// An alternative testbed for the cross-hardware extension study
+    /// (the paper's stated limitation -- "PIE-P is hardware-dependent"):
+    /// 4x H100-PCIe-class GPUs (faster HBM and compute, higher idle/TDP,
+    /// wider links) on a newer host. Used by `piep crosshw`.
+    pub fn h100_testbed() -> Self {
+        HwSpec {
+            num_gpus: 4,
+            vram_bytes: 80.0 * (1u64 << 30) as f64,
+            gpu_peak_flops: 756.0e12,
+            gpu_mfu: 0.40,
+            gpu_mem_bw: 2000.0e9,
+            gpu_mem_eff: 0.70,
+            gpu_idle_w: 60.0,
+            gpu_tdp_w: 350.0,
+            gpu_wait_w: 130.0,
+            gpu_comm_w: 160.0,
+            link_bw: 40.0e9,
+            link_step_latency: 3.0e-6,
+            coll_base_latency: 10.0e-6,
+            cpu_idle_w: 95.0,
+            cpu_max_w: 280.0,
+            dram_base_w: 35.0,
+            dram_active_w: 28.0,
+            psu_base_w: 35.0,
+            psu_loss_frac: 0.09,
+            gpu_clock_ghz: 1.98,
+            gpu_mem_clock_ghz: 2.62,
+            cpu_clock_ghz: 3.1,
+            cpu_mem_clock_ghz: 2.4,
+            meter_interval_s: 1.0,
+            nvml_interval_s: 0.1,
+        }
+    }
+}
+
+/// Stochastic-substrate calibration knobs (the "non-determinism" the paper
+/// measures: rank skew, stragglers, thermal drift, host interference).
+#[derive(Debug, Clone)]
+pub struct SimKnobs {
+    /// Coefficient of variation of per-module compute time across ranks
+    /// and steps (caching effects, memory access, hardware scheduling).
+    pub compute_cv: f64,
+    /// Persistent per-rank speed bias cv (silicon lottery / slot cooling):
+    /// the same GPU lags all run long — the main source of the
+    /// synchronization waiting the paper samples.
+    pub rank_bias_cv: f64,
+    /// Mean of the exponential per-rank launch desynchronization at each
+    /// collective (host kernel-launch skew, memory-allocator stalls, NCCL
+    /// channel setup). On PCIe testbeds this — not the wire time — is the
+    /// dominant AllReduce cost, and it is what synchronization sampling
+    /// measures. Seconds.
+    pub sync_jitter_s: f64,
+    /// Run-to-run lognormal cv of the launch-desync scale: communication
+    /// variance persists within a run but differs across runs (driver
+    /// state, NCCL channel placement) — the paper's "higher variance ...
+    /// due to the inherent non-determinism in communication".
+    pub sync_jitter_cv: f64,
+    /// Probability that a (rank, step) compute phase is a straggler.
+    pub straggler_p: f64,
+    /// Straggler slowdown multiplier range (uniform).
+    pub straggler_scale: (f64, f64),
+    /// Run-level thermal/power drift: multiplier on all GPU power draw,
+    /// lognormal cv.
+    pub thermal_cv: f64,
+    /// Run-level cv of the busy-wait power draw: the NCCL spin/yield mix
+    /// (and hence the power burned while waiting) varies run to run, which
+    /// decouples communication energy from communication time — the reason
+    /// the paper's AllReduce module error exceeds the compute modules'
+    /// (Table 5).
+    pub wait_power_cv: f64,
+    /// Probability per run of background host interference.
+    pub interference_p: f64,
+    /// Host interference adds this fraction of extra CPU activity.
+    pub interference_frac: (f64, f64),
+    /// Relative std of wall-meter reading error per sample.
+    pub meter_noise: f64,
+    /// Relative std of NVML power reading error per sample.
+    pub nvml_noise: f64,
+    /// NVML reading bias (board power telemetry reads low on Ampere).
+    pub nvml_bias: f64,
+    /// Run-to-run jitter of the NVML bias (driver/sampling-phase effects) —
+    /// decorrelates the NVML feature from true GPU energy.
+    pub nvml_bias_cv: f64,
+    /// Fraction of energy in brief synchronization/transfer states that
+    /// NVML's slow power telemetry fails to register (the "misses the
+    /// fine-grained multi-GPU sync/transfer events" effect, Section 5.1).
+    pub nvml_transient_miss: f64,
+    /// Probability that background host work (other tenants, system
+    /// daemons) draws extra wall power during a run. Invisible to the
+    /// Table-1 features; the wall meter sees it. This is the substrate's
+    /// irreducible-error channel.
+    pub background_p: f64,
+    /// Mean of the exponential background power draw, W.
+    pub background_mean_w: f64,
+    /// Decode steps simulated explicitly per run (remaining steps are
+    /// extrapolated with CLT-scaled variance; the paper's profiler samples
+    /// the same way).
+    pub sim_decode_steps: usize,
+}
+
+impl Default for SimKnobs {
+    fn default() -> Self {
+        SimKnobs {
+            compute_cv: 0.10,
+            rank_bias_cv: 0.08,
+            sync_jitter_s: 40.0e-6,
+            sync_jitter_cv: 0.35,
+            straggler_p: 0.006,
+            straggler_scale: (1.4, 2.8),
+            thermal_cv: 0.14,
+            wait_power_cv: 0.25,
+            interference_p: 0.60,
+            interference_frac: (0.10, 0.90),
+            meter_noise: 0.02,
+            nvml_noise: 0.03,
+            nvml_bias: 0.94,
+            nvml_bias_cv: 0.09,
+            nvml_transient_miss: 0.8,
+            background_p: 0.70,
+            background_mean_w: 155.0,
+            sim_decode_steps: 24,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_physical() {
+        let hw = HwSpec::default();
+        assert!(hw.gpu_idle_w < hw.gpu_wait_w);
+        assert!(hw.gpu_wait_w < hw.gpu_tdp_w);
+        assert!(hw.gpu_comm_w < hw.gpu_tdp_w);
+        assert!(hw.cpu_idle_w < hw.cpu_max_w);
+        assert!(hw.link_bw < hw.gpu_mem_bw);
+        assert!(hw.psu_loss_frac > 0.0 && hw.psu_loss_frac < 0.2);
+    }
+
+    #[test]
+    fn knob_defaults_sane() {
+        let k = SimKnobs::default();
+        assert!(k.compute_cv > 0.0 && k.compute_cv < 0.5);
+        assert!(k.straggler_scale.0 > 1.0);
+        assert!(k.straggler_scale.1 > k.straggler_scale.0);
+        assert!(k.sim_decode_steps >= 8);
+    }
+}

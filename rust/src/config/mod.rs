@@ -1,0 +1,118 @@
+//! Run/experiment configuration.
+//!
+//! `HwSpec` describes the simulated testbed (the paper's 4× RTX A6000 +
+//! AMD EPYC 7543P server with an inline wall meter); `SimKnobs` holds the
+//! calibration constants of the energy/time substrate. Both are plain
+//! structs with documented defaults rather than an external config file
+//! format (the offline image has no serde/toml) — the CLI exposes the
+//! fields that experiments sweep.
+
+pub mod hw;
+
+pub use hw::{HwSpec, SimKnobs};
+
+/// Parallelism strategy (Section 3 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Parallelism {
+    Tensor,
+    Pipeline,
+    Data,
+}
+
+impl Parallelism {
+    pub const ALL: [Parallelism; 3] =
+        [Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Parallelism::Tensor => "tensor",
+            Parallelism::Pipeline => "pipeline",
+            Parallelism::Data => "data",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Parallelism> {
+        match s.to_ascii_lowercase().as_str() {
+            "tensor" | "tp" => Some(Parallelism::Tensor),
+            "pipeline" | "pp" => Some(Parallelism::Pipeline),
+            "data" | "dp" => Some(Parallelism::Data),
+            _ => None,
+        }
+    }
+}
+
+/// One profiled inference run: the unit of both measurement and prediction.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model variant display name (key into `models::zoo()`).
+    pub model: String,
+    pub parallelism: Parallelism,
+    /// Number of GPUs (TP degree / pipeline stages / replicas).
+    pub gpus: usize,
+    /// Request batch size.
+    pub batch: usize,
+    /// Prompt length (tokens).
+    pub seq_in: usize,
+    /// Generated length (tokens).
+    pub seq_out: usize,
+    /// Substrate seed; repeated passes vary this.
+    pub seed: u64,
+}
+
+impl RunConfig {
+    pub fn new(model: &str, parallelism: Parallelism, gpus: usize, batch: usize) -> Self {
+        RunConfig {
+            model: model.to_string(),
+            parallelism,
+            gpus,
+            batch,
+            seq_in: 128,
+            seq_out: 512,
+            seed: 0,
+        }
+    }
+
+    pub fn with_seq_out(mut self, seq_out: usize) -> Self {
+        self.seq_out = seq_out;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Stable identifier for grouping repeated passes of a configuration.
+    pub fn key(&self) -> String {
+        format!(
+            "{}/{}/g{}/b{}/s{}",
+            self.model,
+            self.parallelism.name(),
+            self.gpus,
+            self.batch,
+            self.seq_out
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelism_parse() {
+        assert_eq!(Parallelism::parse("tp"), Some(Parallelism::Tensor));
+        assert_eq!(Parallelism::parse("Pipeline"), Some(Parallelism::Pipeline));
+        assert_eq!(Parallelism::parse("dp"), Some(Parallelism::Data));
+        assert_eq!(Parallelism::parse("zz"), None);
+    }
+
+    #[test]
+    fn run_key_distinguishes_configs() {
+        let a = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8);
+        let b = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8);
+        assert_ne!(a.key(), b.key());
+        // Seed does not change the key (passes group together).
+        assert_eq!(a.key(), a.clone().with_seed(9).key());
+    }
+}

@@ -1,0 +1,209 @@
+//! Evaluation protocols: train/test splits, k-fold CV, leave-one-out
+//! generalization (variant / batch size / family), MAPE scoring, and the
+//! Spearman feature-correlation analysis behind Figure 7.
+
+use std::collections::BTreeSet;
+
+use crate::features::SyncDb;
+use crate::models::Family;
+use crate::predict::{PieP, PiepOptions};
+use crate::simulator::run::RunRecord;
+use crate::util::rng::Rng;
+use crate::util::stats::{self, mape, mape_std_err};
+
+/// Deterministic shuffled split of run indices into `frac` train and rest
+/// test, stratified by configuration key so every config appears in both
+/// sides when it has enough passes.
+pub fn split_train_test(runs: &[RunRecord], train_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    let mut by_key: std::collections::BTreeMap<String, Vec<usize>> = Default::default();
+    for (i, r) in runs.iter().enumerate() {
+        by_key.entry(r.config.key()).or_default().push(i);
+    }
+    let mut rng = Rng::new(seed);
+    let mut train = Vec::new();
+    let mut test = Vec::new();
+    for (_, mut idxs) in by_key {
+        rng.shuffle(&mut idxs);
+        let k = ((idxs.len() as f64) * train_frac).round().max(1.0) as usize;
+        let k = k.min(idxs.len().saturating_sub(1)).max(1);
+        train.extend_from_slice(&idxs[..k]);
+        test.extend_from_slice(&idxs[k..]);
+    }
+    (train, test)
+}
+
+/// K-fold partition of indices (shuffled, deterministic).
+pub fn kfold(n: usize, k: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut idxs: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut idxs);
+    let mut folds = vec![Vec::new(); k];
+    for (pos, i) in idxs.into_iter().enumerate() {
+        folds[pos % k].push(i);
+    }
+    folds
+}
+
+/// Score a fitted PieP-family model on test runs: MAPE of model-level
+/// predictions against the wall-meter ground truth.
+pub fn score_total(
+    model: &PieP,
+    sync_db: &SyncDb,
+    test: &[&RunRecord],
+) -> (f64, f64) {
+    let pred: Vec<f64> = test
+        .iter()
+        .map(|r| model.predict_total(r, sync_db))
+        .collect();
+    let truth: Vec<f64> = test.iter().map(|r| r.meter_total_j).collect();
+    (mape(&pred, &truth), mape_std_err(&pred, &truth))
+}
+
+/// 3-fold cross-validated MAPE of a PieP variant over `runs`.
+pub fn cv_mape(
+    runs: &[RunRecord],
+    sync_db: &SyncDb,
+    opts: PiepOptions,
+    folds: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let parts = kfold(runs.len(), folds, seed);
+    let mut preds = Vec::new();
+    let mut truths = Vec::new();
+    for f in 0..folds {
+        let test_idx: BTreeSet<usize> = parts[f].iter().copied().collect();
+        let train: Vec<RunRecord> = runs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !test_idx.contains(i))
+            .map(|(_, r)| r.clone())
+            .collect();
+        if train.is_empty() || test_idx.is_empty() {
+            continue;
+        }
+        let model = PieP::fit(&train, sync_db, opts);
+        for &i in &parts[f] {
+            preds.push(model.predict_total(&runs[i], sync_db));
+            truths.push(runs[i].meter_total_j);
+        }
+    }
+    (mape(&preds, &truths), mape_std_err(&preds, &truths))
+}
+
+/// Leave-one-group-out evaluation: train on runs where `group(r)` is false,
+/// test where true. Returns (mape, std_err, n_test).
+pub fn leave_out_mape<F: Fn(&RunRecord) -> bool>(
+    runs: &[RunRecord],
+    sync_db: &SyncDb,
+    opts: PiepOptions,
+    held_out: F,
+) -> (f64, f64, usize) {
+    let (train, test): (Vec<&RunRecord>, Vec<&RunRecord>) =
+        runs.iter().partition(|r| !held_out(r));
+    if train.is_empty() || test.is_empty() {
+        return (f64::NAN, 0.0, 0);
+    }
+    let train_owned: Vec<RunRecord> = train.into_iter().cloned().collect();
+    let model = PieP::fit(&train_owned, sync_db, opts);
+    let (m, se) = score_total(&model, sync_db, &test);
+    (m, se, test.len())
+}
+
+/// Family of a run.
+pub fn run_family(r: &RunRecord) -> Family {
+    r.spec.family
+}
+
+/// Spearman correlation of each run-level feature against total energy
+/// (Figure 7): returns (feature name, ρ) pairs for the given runs.
+pub fn feature_correlations(runs: &[RunRecord]) -> Vec<(&'static str, f64)> {
+    use crate::features::{run_features, FeatureOpts, RUN_FEATURES, RUN_FEATURE_NAMES};
+    let xs: Vec<Vec<f64>> = runs
+        .iter()
+        .map(|r| run_features(r, FeatureOpts::default()))
+        .collect();
+    let energy: Vec<f64> = runs.iter().map(|r| r.meter_total_j).collect();
+    (0..RUN_FEATURES)
+        .map(|j| {
+            let col: Vec<f64> = xs.iter().map(|x| x[j]).collect();
+            (RUN_FEATURE_NAMES[j], stats::spearman(&col, &energy))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Parallelism, RunConfig, SimKnobs};
+    use crate::profiler::Campaign;
+
+    fn dataset() -> crate::profiler::Dataset {
+        let c = Campaign {
+            passes: 4,
+            knobs: SimKnobs {
+                sim_decode_steps: 6,
+                ..SimKnobs::default()
+            },
+            ..Campaign::default()
+        };
+        let mut cfgs = Vec::new();
+        for model in ["Vicuna-7B", "Vicuna-13B"] {
+            for g in [2usize, 4] {
+                for b in [8usize, 32] {
+                    cfgs.push(RunConfig::new(model, Parallelism::Tensor, g, b));
+                }
+            }
+        }
+        c.profile(&cfgs)
+    }
+
+    #[test]
+    fn split_covers_everything_once() {
+        let ds = dataset();
+        let (tr, te) = split_train_test(&ds.runs, 0.7, 1);
+        assert_eq!(tr.len() + te.len(), ds.runs.len());
+        let mut all: Vec<usize> = tr.iter().chain(te.iter()).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), ds.runs.len());
+        assert!(!te.is_empty());
+    }
+
+    #[test]
+    fn kfold_partitions() {
+        let folds = kfold(10, 3, 2);
+        let total: usize = folds.iter().map(|f| f.len()).sum();
+        assert_eq!(total, 10);
+        assert!(folds.iter().all(|f| !f.is_empty()));
+    }
+
+    #[test]
+    fn cv_mape_is_finite_and_reasonable() {
+        let ds = dataset();
+        let (m, se) = cv_mape(&ds.runs, &ds.sync_db, PiepOptions::default(), 3, 7);
+        assert!(m.is_finite() && m > 0.0 && m < 60.0, "mape={m}");
+        assert!(se >= 0.0);
+    }
+
+    #[test]
+    fn leave_one_variant_out_runs() {
+        let ds = dataset();
+        let (m, _, n) = leave_out_mape(&ds.runs, &ds.sync_db, PiepOptions::default(), |r| {
+            r.config.model == "Vicuna-13B"
+        });
+        assert!(n > 0);
+        assert!(m.is_finite() && m < 80.0, "loo mape={m}");
+    }
+
+    #[test]
+    fn correlations_have_expected_signs() {
+        let ds = dataset();
+        let cors = feature_correlations(&ds.runs);
+        let get = |name: &str| cors.iter().find(|(n, _)| *n == name).unwrap().1;
+        // NVML energy and execution time must correlate positively and
+        // strongly with total energy (paper: ρ ≈ 0.63–0.76).
+        assert!(get("nvml_energy_wh") > 0.5);
+        assert!(get("exec_time_s") > 0.3);
+        assert!(get("batch_size") > 0.0);
+    }
+}

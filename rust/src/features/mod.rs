@@ -1,0 +1,293 @@
+//! Feature pipeline (Table 1 of the paper).
+//!
+//! Three groups: resource-utilization features (cross-GPU statistical
+//! aggregates — mean/std/min/max — for scalability across parallelization
+//! degrees), execution features, and the model-structure features PIE-P
+//! adds. Module-level samples append module descriptors (FLOPs, payload,
+//! ring steps) and the synchronization-sampling statistics for
+//! communication modules.
+//!
+//! The vector is padded to `FEATURE_DIM` = 48, which is part of the AOT
+//! artifact ABI (`python/compile/model.py::FEATURE_DIM`): the batched
+//! ridge-predict executable is lowered once for `[256, 48]` inputs.
+
+pub mod sync;
+
+use crate::models::{flops, ModelSpec};
+use crate::simulator::run::RunRecord;
+use crate::simulator::timeline::ModuleKind;
+use crate::util::stats::Aggregates;
+
+pub use sync::SyncDb;
+
+/// Padded feature width (must equal python `FEATURE_DIM`).
+pub const FEATURE_DIM: usize = 48;
+
+/// Number of run-level (shared) features before module descriptors.
+pub const RUN_FEATURES: usize = 32;
+
+/// Human-readable names for the run-level features (Figure-7 heatmap rows).
+pub const RUN_FEATURE_NAMES: [&str; RUN_FEATURES] = [
+    "cpu_util",
+    "cpu_mem_util",
+    "cpu_clock",
+    "cpu_mem_clock",
+    "gpu_util_mean",
+    "gpu_util_std",
+    "gpu_util_min",
+    "gpu_util_max",
+    "gpu_mem_util_mean",
+    "gpu_mem_util_std",
+    "gpu_mem_util_min",
+    "gpu_mem_util_max",
+    "gpu_clock_mean",
+    "gpu_clock_std",
+    "gpu_clock_min",
+    "gpu_clock_max",
+    "gpu_mem_clock_mean",
+    "gpu_mem_clock_std",
+    "gpu_mem_clock_min",
+    "gpu_mem_clock_max",
+    "memory_gb",
+    "batch_size",
+    "seq_len",
+    "flops_per_token_b",
+    "exec_time_s",
+    "nvml_energy_wh",
+    "num_gpus",
+    "ffn_dim_k",
+    "n_blocks",
+    "hidden_k",
+    "attn_heads",
+    "kv_heads",
+];
+
+/// Offsets of the module-descriptor features (after the run features).
+pub mod module_feat {
+    pub const FLOPS_B: usize = super::RUN_FEATURES;
+    pub const TIME_SHARE: usize = super::RUN_FEATURES + 1;
+    pub const PAYLOAD_MB: usize = super::RUN_FEATURES + 2;
+    pub const RING_STEPS: usize = super::RUN_FEATURES + 3;
+    pub const WAIT_MEAN_MS: usize = super::RUN_FEATURES + 4;
+    pub const WAIT_STD_MS: usize = super::RUN_FEATURES + 5;
+    pub const COMM_MBPS_STEP: usize = super::RUN_FEATURES + 6;
+    pub const MULTIPLICITY: usize = super::RUN_FEATURES + 7;
+}
+
+/// Indices of the model-structure features (for the Table-9 ablation).
+pub const STRUCT_FEATURE_IDX: [usize; 5] = [27, 28, 29, 30, 31];
+
+/// Options controlling which feature groups are populated (ablations).
+#[derive(Debug, Clone, Copy)]
+pub struct FeatureOpts {
+    /// Include the model-structure features (Table 9 ablation toggles off).
+    pub use_struct: bool,
+    /// Include synchronization-sampling wait features (Appendix J ablation
+    /// — "PIE-P w/o waiting" — toggles off).
+    pub use_wait: bool,
+}
+
+impl Default for FeatureOpts {
+    fn default() -> Self {
+        FeatureOpts {
+            use_struct: true,
+            use_wait: true,
+        }
+    }
+}
+
+/// Scale-type features are stored as `ln(1+x)`: the leaf regressors fit
+/// log-energy, so log features make them power laws — which is what keeps
+/// leave-one-size-out extrapolation (7B→70B) finite. Utilization, clocks
+/// and wait statistics stay linear.
+#[inline]
+fn logf(x: f64) -> f64 {
+    x.max(0.0).ln_1p()
+}
+
+/// Run-level feature vector (length `FEATURE_DIM`, module slots zero).
+pub fn run_features(r: &RunRecord, opts: FeatureOpts) -> Vec<f64> {
+    let mut x = vec![0.0; FEATURE_DIM];
+    let gu = Aggregates::of(&r.gpu_util);
+    let gm = Aggregates::of(&r.gpu_mem_util);
+    let gc = Aggregates::of(&r.gpu_clock_ghz);
+    let gmc = Aggregates::of(&r.gpu_mem_clock_ghz);
+    x[0] = r.cpu_util_pct / 100.0;
+    x[1] = r.cpu_mem_util_pct / 100.0;
+    x[2] = r.cpu_clock_ghz;
+    x[3] = r.cpu_mem_clock_ghz;
+    x[4] = gu.mean;
+    x[5] = gu.std;
+    x[6] = gu.min;
+    x[7] = gu.max;
+    x[8] = gm.mean;
+    x[9] = gm.std;
+    x[10] = gm.min;
+    x[11] = gm.max;
+    x[12] = gc.mean;
+    x[13] = gc.std;
+    x[14] = gc.min;
+    x[15] = gc.max;
+    x[16] = gmc.mean;
+    x[17] = gmc.std;
+    x[18] = gmc.min;
+    x[19] = gmc.max;
+    x[20] = logf(r.mem_bytes / 1e9);
+    x[21] = logf(r.config.batch as f64);
+    x[22] = logf(r.config.seq_out as f64 / 1e3);
+    let context = r.config.seq_in + r.config.seq_out / 2;
+    x[23] = logf(flops::flops_per_token_billion(&r.spec, context));
+    x[24] = logf(r.wall_s);
+    x[25] = logf(r.nvml_total_j / 3600.0); // Wh, as NVML tooling reports
+    x[26] = r.config.gpus as f64;
+    if opts.use_struct {
+        x[27] = logf(r.spec.ffn as f64 / 1e3);
+        x[28] = logf(r.spec.layers as f64);
+        x[29] = logf(r.spec.hidden as f64 / 1e3);
+        x[30] = logf(r.spec.heads as f64);
+        x[31] = logf(r.spec.kv_heads as f64);
+    }
+    x
+}
+
+/// Module FLOPs per token (billions) for the descriptor slot.
+fn module_flops_b(spec: &ModelSpec, kind: ModuleKind, context: usize) -> f64 {
+    let f = crate::models::ModuleFlops::per_token(spec, context);
+    let v = match kind {
+        ModuleKind::SelfAttention => f.attention,
+        ModuleKind::Mlp => f.mlp,
+        ModuleKind::Norm => f.norm,
+        ModuleKind::LogitsHead => f.logits,
+        ModuleKind::Embedding => 2.0 * spec.hidden as f64,
+        // Communication modules do no arithmetic.
+        _ => 0.0,
+    };
+    v / 1e9
+}
+
+/// Full module-level feature vector: run features + module descriptors.
+///
+/// Wait statistics come from the *offline* synchronization-sampling
+/// database (`SyncDb`), never from the run's own measured waits — this is
+/// what makes the features legal at prediction time for unseen runs.
+pub fn module_features(
+    r: &RunRecord,
+    kind: ModuleKind,
+    multiplicity: f64,
+    sync_db: Option<&SyncDb>,
+    opts: FeatureOpts,
+) -> Vec<f64> {
+    let mut x = run_features(r, opts);
+    let context = r.config.seq_in + r.config.seq_out / 2;
+    x[module_feat::FLOPS_B] = logf(module_flops_b(&r.spec, kind, context));
+    let total_busy: f64 = r.module_time_s.values().sum();
+    x[module_feat::TIME_SHARE] =
+        r.module_time_s.get(&kind).copied().unwrap_or(0.0) / total_busy.max(1e-12);
+    x[module_feat::MULTIPLICITY] = logf(multiplicity);
+
+    if kind.is_comm() {
+        let g = r.config.gpus;
+        let payload = match kind {
+            ModuleKind::AllReduce => r.spec.allreduce_payload_bytes(r.config.batch, 1),
+            ModuleKind::AllGather => r.spec.allgather_payload_bytes(r.config.batch),
+            ModuleKind::P2PTransfer => {
+                r.spec.p2p_payload_bytes((r.config.batch + g - 1) / g, 1)
+            }
+            _ => 0.0,
+        };
+        x[module_feat::PAYLOAD_MB] = logf(payload / 1e6);
+        x[module_feat::RING_STEPS] = match kind {
+            ModuleKind::AllReduce => (2 * g.saturating_sub(1)) as f64,
+            ModuleKind::AllGather => g.saturating_sub(1) as f64,
+            ModuleKind::P2PTransfer => 1.0,
+            _ => 0.0,
+        };
+        x[module_feat::COMM_MBPS_STEP] = logf(r.comm_bytes_per_step / 1e6);
+        if opts.use_wait {
+            if let Some(db) = sync_db {
+                let (wm, ws) = db.wait_estimate(r);
+                x[module_feat::WAIT_MEAN_MS] = wm * 1e3;
+                x[module_feat::WAIT_STD_MS] = ws * 1e3;
+            }
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+    use crate::simulator::simulate_run;
+
+    fn record() -> RunRecord {
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8).with_seed(1);
+        simulate_run(&cfg, &HwSpec::default(), &SimKnobs::default())
+    }
+
+    #[test]
+    fn run_features_have_expected_width_and_padding() {
+        let x = run_features(&record(), FeatureOpts::default());
+        assert_eq!(x.len(), FEATURE_DIM);
+        // Module slots are zero at run level.
+        assert_eq!(x[module_feat::PAYLOAD_MB], 0.0);
+        // Padding tail is zero.
+        assert!(x[40..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn struct_ablation_zeroes_struct_slots() {
+        let r = record();
+        let with = run_features(&r, FeatureOpts::default());
+        let without = run_features(
+            &r,
+            FeatureOpts {
+                use_struct: false,
+                ..FeatureOpts::default()
+            },
+        );
+        for &i in &STRUCT_FEATURE_IDX {
+            assert!(with[i] > 0.0);
+            assert_eq!(without[i], 0.0);
+        }
+        // Other slots untouched.
+        assert_eq!(with[21], without[21]);
+    }
+
+    #[test]
+    fn comm_module_gets_payload_and_steps() {
+        let r = record();
+        let x = module_features(
+            &r,
+            crate::simulator::timeline::ModuleKind::AllReduce,
+            64.0,
+            None,
+            FeatureOpts::default(),
+        );
+        assert!(x[module_feat::PAYLOAD_MB] > 0.0);
+        assert_eq!(x[module_feat::RING_STEPS], 2.0);
+        assert_eq!(x[module_feat::MULTIPLICITY], 64.0f64.ln_1p());
+        // No sync DB provided ⇒ wait slots zero.
+        assert_eq!(x[module_feat::WAIT_MEAN_MS], 0.0);
+    }
+
+    #[test]
+    fn compute_module_has_flops_not_payload() {
+        let r = record();
+        let x = module_features(
+            &r,
+            crate::simulator::timeline::ModuleKind::Mlp,
+            32.0,
+            None,
+            FeatureOpts::default(),
+        );
+        assert!(x[module_feat::FLOPS_B] > 0.0);
+        assert_eq!(x[module_feat::PAYLOAD_MB], 0.0);
+        assert!(x[module_feat::TIME_SHARE] > 0.0);
+    }
+
+    #[test]
+    fn feature_names_match_count() {
+        assert_eq!(RUN_FEATURE_NAMES.len(), RUN_FEATURES);
+    }
+}

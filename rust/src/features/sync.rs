@@ -1,0 +1,147 @@
+//! Synchronization sampling (the paper's key idea (i), Section 4).
+//!
+//! During offline profiling we record the full distribution of per-rank
+//! waiting times at tensor-parallel collectives. Rather than memorizing
+//! absolute waits per configuration (which would not transfer to unseen
+//! variants), the database stores waits *normalized by the per-layer
+//! compute interval* between synchronization points, grouped by GPU count:
+//! skew-induced waiting scales with the compute phase it trails. At
+//! prediction time the estimate is `κ(g) × (decode time / steps / layers)`
+//! computed purely from the target run's execution features.
+
+use std::collections::BTreeMap;
+
+use crate::config::Parallelism;
+use crate::simulator::run::RunRecord;
+use crate::util::stats;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Kappa {
+    /// mean(wait) / layer-interval.
+    mean: f64,
+    /// std(wait) / layer-interval.
+    std: f64,
+    n: usize,
+}
+
+/// Offline wait-time distribution database.
+#[derive(Debug, Clone, Default)]
+pub struct SyncDb {
+    by_gpus: BTreeMap<(Parallelism, usize), Kappa>,
+}
+
+/// Per-layer synchronization interval of a run: decode time per step per
+/// layer (the compute span between consecutive collectives).
+fn layer_interval(r: &RunRecord) -> f64 {
+    let steps = r.config.seq_out.max(1) as f64;
+    (r.decode_s / steps / r.spec.layers as f64).max(1e-9)
+}
+
+impl SyncDb {
+    /// Build from profiled runs (uses their recorded wait samples — this is
+    /// the offline, training-side pass).
+    pub fn build(runs: &[RunRecord]) -> SyncDb {
+        let mut acc: BTreeMap<(Parallelism, usize), (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+        for r in runs {
+            if r.wait_samples.is_empty() || r.config.gpus < 2 {
+                continue;
+            }
+            let li = layer_interval(r);
+            let e = acc
+                .entry((r.config.parallelism, r.config.gpus))
+                .or_default();
+            e.0.push(stats::mean(&r.wait_samples) / li);
+            e.1.push(stats::std_dev(&r.wait_samples) / li);
+        }
+        let by_gpus = acc
+            .into_iter()
+            .map(|(k, (means, stds))| {
+                (
+                    k,
+                    Kappa {
+                        mean: stats::mean(&means),
+                        std: stats::mean(&stds),
+                        n: means.len(),
+                    },
+                )
+            })
+            .collect();
+        SyncDb { by_gpus }
+    }
+
+    /// Predicted (wait_mean_s, wait_std_s) for a run, from its execution
+    /// features and the offline κ table only.
+    pub fn wait_estimate(&self, r: &RunRecord) -> (f64, f64) {
+        let key = (r.config.parallelism, r.config.gpus);
+        match self.by_gpus.get(&key) {
+            Some(k) if k.n > 0 => {
+                let li = layer_interval(r);
+                (k.mean * li, k.std * li)
+            }
+            _ => (0.0, 0.0),
+        }
+    }
+
+    pub fn groups(&self) -> usize {
+        self.by_gpus.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwSpec, RunConfig, SimKnobs};
+    use crate::simulator::simulate_run;
+
+    fn runs(g: usize, n: u64) -> Vec<RunRecord> {
+        (0..n)
+            .map(|s| {
+                let cfg =
+                    RunConfig::new("Vicuna-7B", Parallelism::Tensor, g, 8).with_seed(s);
+                simulate_run(&cfg, &HwSpec::default(), &SimKnobs::default())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn db_builds_groups_per_gpu_count() {
+        let mut rs = runs(2, 3);
+        rs.extend(runs(4, 3));
+        let db = SyncDb::build(&rs);
+        assert_eq!(db.groups(), 2);
+    }
+
+    #[test]
+    fn estimate_close_to_observed_waits() {
+        let rs = runs(4, 6);
+        let db = SyncDb::build(&rs);
+        for r in &rs {
+            let (wm, _) = db.wait_estimate(r);
+            assert!(wm > 0.0);
+            // κ-based estimate within 3× of the run's own measured mean.
+            let obs = stats::mean(&r.wait_samples);
+            assert!(wm / obs < 3.0 && obs / wm < 3.0, "wm={wm} obs={obs}");
+        }
+    }
+
+    #[test]
+    fn estimate_transfers_to_unseen_model() {
+        // Build the DB on Vicuna, query for Mistral: κ transfers because it
+        // is normalized by the layer interval.
+        let db = SyncDb::build(&runs(2, 5));
+        let cfg = RunConfig::new("Mistral-8B", Parallelism::Tensor, 2, 8).with_seed(99);
+        let r = simulate_run(&cfg, &HwSpec::default(), &SimKnobs::default());
+        let (wm, ws) = db.wait_estimate(&r);
+        assert!(wm > 0.0 && ws > 0.0);
+        let obs = stats::mean(&r.wait_samples);
+        assert!(wm / obs < 4.0 && obs / wm < 4.0, "wm={wm} obs={obs}");
+    }
+
+    #[test]
+    fn unknown_group_returns_zero() {
+        let db = SyncDb::build(&runs(2, 2));
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Data, 4, 8).with_seed(1);
+        let r = simulate_run(&cfg, &HwSpec::default(), &SimKnobs::default());
+        assert_eq!(db.wait_estimate(&r), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,35 @@
+//! # PIE-P — Parallelized Inference Energy Predictor (reproduction)
+//!
+//! A full reproduction of *"Fine-Grained Energy Prediction For Parallelized
+//! LLM Inference With PIE-P"* (CS.DC 2025) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the multi-GPU inference-energy substrate
+//!   (discrete-event simulator of the paper's 4×A6000 testbed), the PIE-P
+//!   measurement methodology (synchronization sampling, module
+//!   attribution), the expanded model-tree abstraction, the feature
+//!   pipeline, the multi-level regressor, all baselines, and the
+//!   evaluation harness that regenerates every table and figure.
+//! * **Layer 2 (python/compile/model.py)** — JAX forwards of the profiled
+//!   transformer modules, AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled
+//!   attention, fused SwiGLU, RMSNorm) called by Layer 2.
+//!
+//! The `runtime` module loads the AOT artifacts through PJRT so the Rust
+//! binary executes real module forwards — Python never runs at inference
+//! time. See DESIGN.md for the system inventory and experiment index.
+
+pub mod config;
+pub mod eval;
+pub mod features;
+pub mod models;
+pub mod parallelism;
+pub mod predict;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod telemetry;
+pub mod tree;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,260 @@
+//! `piep` — CLI for the PIE-P reproduction.
+//!
+//! Subcommands:
+//!   profile     run a profiling campaign and print run summaries
+//!   train       fit PIE-P on a family and report CV error
+//!   predict     per-run prediction demo on a config
+//!   reproduce   regenerate paper tables/figures (`--all` or ids)
+//!   figure2..8, table2..9   individual experiments
+//!   runtime     PJRT smoke: load artifacts, run the functional forwards
+//!   bench-sim   quick simulator throughput numbers
+//!
+//! Common flags: --passes N --steps N --seed N --out DIR --threads N
+
+use piep::config::{Parallelism, RunConfig, SimKnobs};
+use piep::profiler::Campaign;
+use piep::report::{self, ReportCtx};
+use piep::util::cli::Args;
+
+fn campaign_from(args: &Args) -> Campaign {
+    let mut c = Campaign::default();
+    c.passes = args.get_usize("passes", 5);
+    c.knobs = SimKnobs {
+        sim_decode_steps: args.get_usize("steps", 16),
+        ..SimKnobs::default()
+    };
+    c.base_seed = args.get_u64("seed", c.base_seed);
+    c.threads = args.get_usize("threads", 0);
+    c
+}
+
+fn cmd_profile(args: &Args) {
+    let model = args.get_or("model", "Vicuna-7B").to_string();
+    let par = Parallelism::parse(args.get_or("parallelism", "tensor")).expect("parallelism");
+    let gpus = args.get_usize("gpus", 2);
+    let batch = args.get_usize("batch", 8);
+    let seq = args.get_usize("seq-out", 512);
+    let campaign = campaign_from(args);
+    let cfg = RunConfig::new(&model, par, gpus, batch).with_seq_out(seq);
+    let ds = campaign.profile(&[cfg]);
+    println!("profiled {} passes of {}", ds.runs.len(), ds.runs[0].config.key());
+    for r in &ds.runs {
+        println!(
+            "  pass: wall {:.2}s  meter {:.1} J ({:.2} Wh)  nvml {:.1} J  comm {:.1} J  wait_mean {:.1} µs",
+            r.wall_s,
+            r.meter_total_j,
+            r.meter_total_j / 3600.0,
+            r.nvml_total_j,
+            r.comm_energy_j(),
+            r.wait_mean_s * 1e6,
+        );
+    }
+    println!("module attribution (pass 0, J):");
+    for (k, v) in &ds.runs[0].module_energy_j {
+        println!("  {:<20} {:>10.1}", k.name(), v);
+    }
+    if let Some(path) = args.get("save") {
+        piep::profiler::store::save_dataset(&ds.runs, path).expect("save dataset");
+        println!("saved dataset -> {path}");
+    }
+}
+
+fn cmd_train(args: &Args) {
+    use piep::eval;
+    use piep::models::Family;
+    use piep::predict::PiepOptions;
+    use piep::workload;
+
+    let family = Family::parse(args.get_or("family", "vicuna")).expect("family");
+    let campaign = campaign_from(args);
+    // Reuse a saved dataset when provided (offline-profiling workflow).
+    let ds = if let Some(path) = args.get("dataset") {
+        piep::profiler::store::load_dataset(path).expect("load dataset")
+    } else {
+        let grid = workload::family_grid_tp(family, &campaign.hw);
+        eprintln!("[profile] {} configs × {} passes", grid.len(), campaign.passes);
+        let ds = campaign.profile(&grid);
+        if let Some(path) = args.get("save") {
+            piep::profiler::store::save_dataset(&ds.runs, path).expect("save dataset");
+            eprintln!("saved dataset -> {path}");
+        }
+        ds
+    };
+    let (m, se) = eval::cv_mape(&ds.runs, &ds.sync_db, PiepOptions::default(), 3, 7);
+    println!("{}: 3-fold CV MAPE {:.2}% (±{:.2})", family.name(), m, se);
+    if let Some(path) = args.get("save-model") {
+        let model = piep::predict::PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
+        piep::profiler::store::save_model(&model, path).expect("save model");
+        println!("saved fitted PIE-P -> {path}");
+    }
+}
+
+fn cmd_predict(args: &Args) {
+    use piep::predict::{PieP, PiepOptions};
+    use piep::workload;
+
+    let model = args.get_or("model", "Vicuna-7B").to_string();
+    let spec = piep::models::by_name(&model).expect("model");
+    let par = Parallelism::parse(args.get_or("parallelism", "tensor")).expect("parallelism");
+    let gpus = args.get_usize("gpus", 2);
+    let batch = args.get_usize("batch", 8);
+    let campaign = campaign_from(args);
+
+    // Train on the rest of the family (leave-this-variant-out).
+    let train_grid: Vec<RunConfig> = workload::family_grid_tp(spec.family, &campaign.hw)
+        .into_iter()
+        .filter(|c| c.model != model)
+        .collect();
+    eprintln!("[profile] training on {} configs", train_grid.len());
+    let ds = campaign.profile(&train_grid);
+    let piep = PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
+
+    let cfg = RunConfig::new(&model, par, gpus, batch).with_seed(424242);
+    let target = piep::simulator::simulate_run(&cfg, &campaign.hw, &campaign.knobs);
+    let pred = piep.predict_total(&target, &ds.sync_db);
+    println!("config: {}", cfg.key());
+    println!("predicted energy : {:>10.1} J  ({:.3} Wh)", pred, pred / 3600.0);
+    println!(
+        "measured (meter) : {:>10.1} J  ({:.3} Wh)",
+        target.meter_total_j,
+        target.meter_total_j / 3600.0
+    );
+    println!(
+        "error            : {:>9.1}%",
+        100.0 * (pred - target.meter_total_j).abs() / target.meter_total_j
+    );
+    println!("\nmodule-level predictions (J):");
+    for kind in piep::simulator::timeline::ModuleKind::ALL {
+        if let Some(p) = piep.predict_module(&target, kind, &ds.sync_db) {
+            let truth = target.module_energy_j.get(&kind).copied().unwrap_or(0.0);
+            println!("  {:<20} pred {:>9.1}   measured {:>9.1}", kind.name(), p, truth);
+        }
+    }
+}
+
+fn cmd_runtime(args: &Args) {
+    let dir = args.get_or("artifacts", "artifacts");
+    let rt = piep::runtime::Runtime::load(dir).expect("load artifacts (run `make artifacts`)");
+    println!(
+        "PJRT {} with {} modules",
+        rt.client.platform_name(),
+        rt.modules.len()
+    );
+    for name in ["rmsnorm", "mlp", "self_attention", "block", "logits_head"] {
+        let inputs = rt.random_inputs(name, 1, 0.05).unwrap();
+        let t0 = std::time::Instant::now();
+        let out = rt.execute(name, &inputs).unwrap();
+        println!(
+            "  {name:<16} -> {:>8} f32 out in {:>8.2?}  (first: {:+.4})",
+            out.len(),
+            t0.elapsed(),
+            out[0]
+        );
+    }
+}
+
+fn cmd_bench_sim(args: &Args) {
+    use piep::config::HwSpec;
+    let knobs = SimKnobs {
+        sim_decode_steps: args.get_usize("steps", 16),
+        ..SimKnobs::default()
+    };
+    let hw = HwSpec::default();
+    let cfg = RunConfig::new("Llama-70B", Parallelism::Tensor, 4, 32);
+    let t0 = std::time::Instant::now();
+    let n = args.get_usize("runs", 20);
+    let mut samples = 0usize;
+    for seed in 0..n as u64 {
+        let r = piep::simulator::simulate_run(&cfg.clone().with_seed(seed), &hw, &knobs);
+        samples += r.wait_samples.len();
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{n} Llama-70B g=4 runs in {dt:?} ({:.1} runs/s, {} wait samples)",
+        n as f64 / dt.as_secs_f64(),
+        samples
+    );
+}
+
+fn run_experiments(ctx: &mut ReportCtx, ids: &[String]) {
+    for id in ids {
+        match id.as_str() {
+            "figure2" => drop(report::figure2(ctx)),
+            "figure3" => drop(report::figure3(ctx)),
+            "figure4" => drop(report::figure4(ctx)),
+            "figure5" => drop(report::figure5(ctx)),
+            "figure6" => drop(report::figure6(ctx)),
+            "figure7" => drop(report::figure7(ctx)),
+            "figure8" => drop(report::figure8(ctx)),
+            "table2" => drop(report::table2(ctx)),
+            "table3" => drop(report::table3(ctx)),
+            "table4" => drop(report::table4(ctx)),
+            "table5" => drop(report::table5(ctx)),
+            "table6" => drop(report::table6(ctx)),
+            "table7" => drop(report::table7(ctx)),
+            "table8" => drop(report::table8(ctx)),
+            "table9" => drop(report::table9(ctx)),
+            "crosshw" => drop(report::crosshw(ctx)),
+            "sensitivity" => drop(report::sensitivity(ctx)),
+            "ablate-ring" => drop(report::ablate_ring(ctx)),
+            "parallelism-matrix" => drop(report::parallelism_matrix(ctx)),
+            other => eprintln!("unknown experiment id: {other}"),
+        }
+    }
+}
+
+const ALL_EXPERIMENTS: [&str; 19] = [
+    "figure2", "table2", "table3", "table4", "figure3", "figure4", "figure5", "figure6",
+    "table5", "table6", "table7", "table8", "figure7", "figure8", "table9",
+    // extension studies (not in the paper's evaluation; see DESIGN.md)
+    "crosshw", "sensitivity", "ablate-ring", "parallelism-matrix",
+];
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.command.clone().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "profile" => cmd_profile(&args),
+        "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
+        "runtime" => cmd_runtime(&args),
+        "bench-sim" => cmd_bench_sim(&args),
+        "reproduce" => {
+            let out = args.get_or("out", "reports").to_string();
+            let mut ctx = ReportCtx::new(&out, campaign_from(&args));
+            let ids: Vec<String> = if args.has("all") || args.positional.is_empty() {
+                ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect()
+            } else {
+                args.positional.clone()
+            };
+            let t0 = std::time::Instant::now();
+            run_experiments(&mut ctx, &ids);
+            eprintln!("[reproduce] {} experiments in {:?}", ids.len(), t0.elapsed());
+        }
+        id if id.starts_with("figure")
+            || id.starts_with("table")
+            || matches!(id, "crosshw" | "sensitivity" | "ablate-ring" | "parallelism-matrix") => {
+            let out = args.get_or("out", "reports").to_string();
+            let mut ctx = ReportCtx::new(&out, campaign_from(&args));
+            run_experiments(&mut ctx, &[id.to_string()]);
+        }
+        _ => {
+            println!(
+                "piep — Parallelized Inference Energy Predictor (reproduction)\n\n\
+                 USAGE: piep <command> [flags]\n\n\
+                 COMMANDS\n\
+                 \x20 reproduce [--all | ids…]   regenerate paper tables/figures into --out\n\
+                 \x20 figure2..figure8           individual figure harnesses\n\
+                 \x20 table2..table9             individual table harnesses\n\
+                 \x20 profile                    profile one configuration (passes × seeds)\n\
+                 \x20 train                      fit PIE-P on a family, report 3-fold CV MAPE\n\
+                 \x20 predict                    leave-variant-out prediction demo\n\
+                 \x20 runtime                    load AOT artifacts, execute module forwards (PJRT)\n\
+                 \x20 bench-sim                  simulator throughput check\n\n\
+                 FLAGS\n\
+                 \x20 --model NAME --family NAME --parallelism tp|pp|dp --gpus N --batch N\n\
+                 \x20 --seq-out N --passes N --steps N --seed N --threads N --out DIR\n"
+            );
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Data-parallel planner.
+//!
+//! The full model is replicated on every GPU; the batch is split evenly
+//! across replicas which decode independently (no per-layer coupling).
+//! Outputs are collated by a single terminal AllGather (Appendix E):
+//! faster replicas busy-wait for stragglers, then exchange final logits.
+
+use crate::config::{HwSpec, RunConfig, SimKnobs};
+use crate::models::ModelSpec;
+use crate::simulator::collective;
+use crate::simulator::perf::PerfModel;
+use crate::simulator::power::PowerModel;
+use crate::simulator::skew::SkewModel;
+use crate::simulator::timeline::{ModuleKind, PhaseKind, Timeline};
+use crate::util::rng::Rng;
+
+use super::BuiltRun;
+
+pub fn build(
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+    power: &PowerModel,
+    rng: &mut Rng,
+) -> BuiltRun {
+    let g = cfg.gpus;
+    let perf = PerfModel::new(hw);
+    let skew = SkewModel::with_complexity(knobs, g, spec.complexity_factor(), rng);
+    let mut tl = Timeline::new(g, power.gpu_power(PhaseKind::Idle, 0.0));
+    let mut wait_samples = Vec::new();
+
+    let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
+    let shard = (cfg.batch + g - 1) / g; // per-replica batch
+
+    let compute = |tl: &mut Timeline,
+                       rng: &mut Rng,
+                       rank: usize,
+                       t: crate::simulator::perf::ModuleTiming,
+                       module: ModuleKind,
+                       layer: u16,
+                       step: u32| {
+        let dur = skew.sample_module(t.dur_s, rank, module, rng);
+        tl.push(rank, PhaseKind::Compute, module, layer, step, dur, power.gpu_power(PhaseKind::Compute, t.util));
+    };
+
+    // Each replica runs prefill + decode independently.
+    let mut prefill_end = 0.0f64;
+    for rank in 0..g {
+        // Prefill.
+        compute(&mut tl, rng, rank, perf.embed_decode(spec, shard * cfg.seq_in), ModuleKind::Embedding, 0, 0);
+        for layer in 0..spec.layers as u16 {
+            compute(&mut tl, rng, rank, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+            compute(&mut tl, rng, rank, perf.attn_prefill(spec, shard, cfg.seq_in, 1), ModuleKind::SelfAttention, layer, 0);
+            compute(&mut tl, rng, rank, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+            compute(&mut tl, rng, rank, perf.mlp_prefill(spec, shard, cfg.seq_in, 1), ModuleKind::Mlp, layer, 0);
+        }
+        prefill_end = prefill_end.max(tl.clock(rank));
+        // Decode.
+        for si in 0..sim_steps {
+            let step = (si + 1) as u32;
+            let frac = (si as f64 + 0.5) / sim_steps as f64;
+            let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
+            compute(&mut tl, rng, rank, perf.embed_decode(spec, shard), ModuleKind::Embedding, 0, step);
+            for layer in 0..spec.layers as u16 {
+                compute(&mut tl, rng, rank, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+                compute(&mut tl, rng, rank, perf.attn_decode(spec, shard, context, 1), ModuleKind::SelfAttention, layer, step);
+                compute(&mut tl, rng, rank, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+                compute(&mut tl, rng, rank, perf.mlp_decode(spec, shard, 1), ModuleKind::Mlp, layer, step);
+            }
+            compute(&mut tl, rng, rank, perf.logits_decode(spec, shard, 1), ModuleKind::LogitsHead, 0, step);
+        }
+    }
+
+    // Terminal collation: replicas synchronize once, then AllGather their
+    // final output logits.
+    let mut comm_bytes_per_step = 0.0;
+    if g > 1 {
+        let arrive_max = (0..g).map(|r| tl.clock(r)).fold(0.0, f64::max);
+        let wait_w = power.gpu_power(PhaseKind::Wait, 0.0);
+        for rank in 0..g {
+            let w = tl.wait_until(
+                rank,
+                arrive_max,
+                ModuleKind::AllGather,
+                0,
+                sim_steps as u32,
+                wait_w,
+            );
+            wait_samples.push(w);
+        }
+        let payload = spec.allgather_payload_bytes(shard);
+        let cost = collective::allgather(hw, g, payload);
+        let comm_w = power.gpu_power(PhaseKind::Transfer, 0.0);
+        for rank in 0..g {
+            tl.push(rank, PhaseKind::Transfer, ModuleKind::AllGather, 0, sim_steps as u32, cost.transfer_s, comm_w);
+        }
+        comm_bytes_per_step = cost.bytes_moved / sim_steps as f64;
+    }
+
+    tl.finalize();
+    BuiltRun {
+        timeline: tl,
+        wait_samples,
+        prefill_end,
+        sim_steps,
+        comm_bytes_per_step,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Parallelism;
+    use crate::models::by_name;
+
+    fn build_run(gpus: usize, seed: u64) -> BuiltRun {
+        let spec = by_name("Vicuna-7B").unwrap();
+        let hw = HwSpec::default();
+        let knobs = SimKnobs {
+            sim_decode_steps: 4,
+            ..SimKnobs::default()
+        };
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Data, gpus, 8).with_seed(seed);
+        let power = PowerModel::new(&hw);
+        let mut rng = Rng::new(seed);
+        build(&spec, &hw, &knobs, &cfg, &power, &mut rng)
+    }
+
+    #[test]
+    fn single_terminal_allgather() {
+        let r = build_run(2, 1);
+        let gathers = r
+            .timeline
+            .phases
+            .iter()
+            .filter(|p| p.module == ModuleKind::AllGather && p.kind == PhaseKind::Transfer)
+            .count();
+        assert_eq!(gathers, 2); // one per replica
+    }
+
+    #[test]
+    fn no_per_layer_comm() {
+        let r = build_run(4, 2);
+        assert!(!r
+            .timeline
+            .phases
+            .iter()
+            .any(|p| p.module == ModuleKind::AllReduce || p.module == ModuleKind::P2PTransfer));
+    }
+
+    #[test]
+    fn replicas_do_full_model_work() {
+        let r = build_run(2, 3);
+        // Both replicas run logits (unlike PP where only the last stage does).
+        for rank in 0..2 {
+            assert!(r
+                .timeline
+                .phases
+                .iter()
+                .any(|p| p.gpu == rank && p.module == ModuleKind::LogitsHead));
+        }
+    }
+
+    #[test]
+    fn waits_recorded_at_collation() {
+        let r = build_run(4, 4);
+        assert_eq!(r.wait_samples.len(), 4);
+        // Exactly one replica (the slowest) waits zero.
+        let zeros = r.wait_samples.iter().filter(|&&w| w == 0.0).count();
+        assert_eq!(zeros, 1);
+    }
+
+    #[test]
+    fn dp_decode_wall_time_less_than_replica_sum() {
+        let r = build_run(4, 5);
+        let makespan = r.timeline.makespan();
+        let busy: f64 = r
+            .timeline
+            .phases
+            .iter()
+            .filter(|p| p.kind == PhaseKind::Compute)
+            .map(|p| p.dur())
+            .sum();
+        assert!(makespan < busy, "replicas must run concurrently");
+    }
+}

@@ -1,0 +1,33 @@
+//! Parallel-inference execution planners.
+//!
+//! Each planner turns a `RunConfig` into a power-annotated `Timeline` by
+//! walking the model's modules under the given parallelism strategy,
+//! sampling per-rank skew, and synchronizing ranks at the strategy's
+//! communication points (Section 3 of the paper):
+//!
+//! * tensor: per-layer ring AllReduce after the attention out-projection
+//!   and after the MLP (Megatron-style), logits AllGather at the head;
+//! * pipeline: stage-partitioned layers, point-to-point activation
+//!   transfers at stage boundaries, microbatch pipelining;
+//! * data: independent replicas, terminal output AllGather.
+
+pub mod data;
+pub mod pipeline;
+pub mod tensor;
+
+use crate::simulator::timeline::Timeline;
+
+/// Output of a planner: the timeline plus profiler-visible side channels.
+#[derive(Debug, Clone)]
+pub struct BuiltRun {
+    pub timeline: Timeline,
+    /// Per-sync per-rank wait durations (s) — the raw material of PIE-P's
+    /// synchronization sampling.
+    pub wait_samples: Vec<f64>,
+    /// Time at which prefill finished (phases with step 0 are prefill).
+    pub prefill_end: f64,
+    /// Decode steps actually simulated (before extrapolation).
+    pub sim_steps: usize,
+    /// Total collective/P2P payload bytes moved per simulated decode step.
+    pub comm_bytes_per_step: f64,
+}

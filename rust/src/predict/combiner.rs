@@ -1,0 +1,250 @@
+//! The paper's Eq. 1 multi-level combiner.
+//!
+//! `P(n) = Σ_{c ∈ child(n)} α(c) · P(c)` with
+//! `α(c) = 1 + tanh(W·feat(c) + b) / τ`.
+//!
+//! Children here are the (collapsed) tree leaves: each contributes its leaf
+//! prediction times multiplicity; α learns per-child corrections from the
+//! child's feature vector (shared `W`, as in the paper where weights are
+//! learned over a training set of ground-truth measurements). Training is
+//! full-batch gradient descent on squared root-level error; with `W = 0`
+//! the combiner is the identity sum, so it can only improve on it.
+
+#[derive(Debug, Clone)]
+pub struct Combiner {
+    pub w: Vec<f64>,
+    pub b: f64,
+    pub tau: f64,
+    /// Feature standardization (fitted on training children).
+    pub x_mean: Vec<f64>,
+    pub x_std: Vec<f64>,
+}
+
+/// One child node instance for the combiner: features, leaf-level energy
+/// prediction (already multiplied by multiplicity), used for both training
+/// and inference.
+#[derive(Debug, Clone)]
+pub struct Child {
+    pub feat: Vec<f64>,
+    pub energy_j: f64,
+}
+
+/// One training example: the children of a root plus the measured total.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub children: Vec<Child>,
+    pub target_j: f64,
+}
+
+impl Combiner {
+    pub fn identity(dim: usize, tau: f64) -> Combiner {
+        Combiner {
+            w: vec![0.0; dim],
+            b: 0.0,
+            tau,
+            x_mean: vec![0.0; dim],
+            x_std: vec![1.0; dim],
+        }
+    }
+
+    fn z(&self, feat: &[f64]) -> f64 {
+        let mut acc = self.b;
+        for j in 0..self.w.len() {
+            acc += self.w[j] * (feat[j] - self.x_mean[j]) / self.x_std[j];
+        }
+        acc
+    }
+
+    pub fn alpha(&self, feat: &[f64]) -> f64 {
+        1.0 + self.z(feat).tanh() / self.tau
+    }
+
+    /// Root prediction over a set of children.
+    pub fn predict(&self, children: &[Child]) -> f64 {
+        children
+            .iter()
+            .map(|c| self.alpha(&c.feat) * c.energy_j)
+            .sum()
+    }
+
+    /// Train by full-batch GD on relative squared error.
+    pub fn fit(examples: &[Example], tau: f64, iters: usize, lr: f64) -> Combiner {
+        assert!(!examples.is_empty());
+        let dim = examples[0].children[0].feat.len();
+
+        // Standardize over all children.
+        let mut mean = vec![0.0; dim];
+        let mut count = 0usize;
+        for e in examples {
+            for c in &e.children {
+                for j in 0..dim {
+                    mean[j] += c.feat[j];
+                }
+                count += 1;
+            }
+        }
+        for m in &mut mean {
+            *m /= count as f64;
+        }
+        let mut std = vec![0.0; dim];
+        for e in examples {
+            for c in &e.children {
+                for j in 0..dim {
+                    let d = c.feat[j] - mean[j];
+                    std[j] += d * d;
+                }
+            }
+        }
+        for s in &mut std {
+            *s = (*s / count as f64).sqrt();
+            if *s < 1e-12 {
+                *s = 1.0;
+            }
+        }
+
+        let mut cb = Combiner {
+            w: vec![0.0; dim],
+            b: 0.0,
+            tau,
+            x_mean: mean,
+            x_std: std,
+        };
+
+        // Pre-standardize every child's features once (EXPERIMENTS.md
+        // §Perf: the per-iteration (x−μ)/σ recomputation dominated fit
+        // time). `zs` is a flat [total_children × dim] matrix; `offsets`
+        // marks each example's child range.
+        let mut zs: Vec<f64> = Vec::with_capacity(count * dim);
+        let mut energies: Vec<f64> = Vec::with_capacity(count);
+        let mut offsets: Vec<(usize, usize)> = Vec::with_capacity(examples.len());
+        for e in examples {
+            let start = energies.len();
+            for c in &e.children {
+                for j in 0..dim {
+                    zs.push((c.feat[j] - cb.x_mean[j]) / cb.x_std[j]);
+                }
+                energies.push(c.energy_j);
+            }
+            offsets.push((start, energies.len()));
+        }
+
+        let mut gw = vec![0.0; dim];
+        for _ in 0..iters {
+            gw.iter_mut().for_each(|g| *g = 0.0);
+            let mut gb = 0.0;
+            for (e, &(lo, hi)) in examples.iter().zip(&offsets) {
+                // Forward: prediction over pre-standardized children.
+                let mut pred = 0.0;
+                for ci in lo..hi {
+                    let zrow = &zs[ci * dim..(ci + 1) * dim];
+                    let z: f64 =
+                        cb.b + cb.w.iter().zip(zrow).map(|(w, x)| w * x).sum::<f64>();
+                    pred += (1.0 + z.tanh() / cb.tau) * energies[ci];
+                }
+                // Relative error keeps large-model runs from dominating.
+                let scale = e.target_j.max(1e-9);
+                let err = 2.0 * (pred - e.target_j) / (scale * scale);
+                for ci in lo..hi {
+                    let zrow = &zs[ci * dim..(ci + 1) * dim];
+                    let z: f64 =
+                        cb.b + cb.w.iter().zip(zrow).map(|(w, x)| w * x).sum::<f64>();
+                    let sech2 = 1.0 - z.tanh() * z.tanh();
+                    let g = err * energies[ci] * sech2 / cb.tau;
+                    for j in 0..dim {
+                        gw[j] += g * zrow[j];
+                    }
+                    gb += g;
+                }
+            }
+            let n = examples.len() as f64;
+            for j in 0..dim {
+                cb.w[j] -= lr * gw[j] / n;
+            }
+            cb.b -= lr * gb / n;
+        }
+        cb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Children whose true total is a fixed 1.15× of the naive sum when a
+    /// marker feature is 1, and 1.0× when 0 — the combiner must learn it.
+    fn synth(n: usize, seed: u64) -> Vec<Example> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let marker = if rng.chance(0.5) { 1.0 } else { 0.0 };
+                let children: Vec<Child> = (0..4)
+                    .map(|_| Child {
+                        feat: vec![marker, rng.uniform()],
+                        energy_j: rng.range(5.0, 50.0),
+                    })
+                    .collect();
+                let naive: f64 = children.iter().map(|c| c.energy_j).sum();
+                let factor = if marker > 0.5 { 1.15 } else { 1.0 };
+                Example {
+                    children,
+                    target_j: naive * factor,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn identity_combiner_is_plain_sum() {
+        let cb = Combiner::identity(2, 4.0);
+        let kids = vec![
+            Child {
+                feat: vec![1.0, 2.0],
+                energy_j: 10.0,
+            },
+            Child {
+                feat: vec![0.0, 0.0],
+                energy_j: 5.0,
+            },
+        ];
+        assert!((cb.predict(&kids) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_bounded_by_tau() {
+        let mut cb = Combiner::identity(1, 4.0);
+        cb.w = vec![100.0];
+        assert!(cb.alpha(&[1e9]) <= 1.25 + 1e-9);
+        assert!(cb.alpha(&[-1e9]) >= 0.75 - 1e-9);
+    }
+
+    #[test]
+    fn learns_marker_correction() {
+        let train = synth(300, 1);
+        let cb = Combiner::fit(&train, 4.0, 400, 0.5);
+        let test = synth(100, 2);
+        let mut worst: f64 = 0.0;
+        for e in &test {
+            let rel = (cb.predict(&e.children) - e.target_j).abs() / e.target_j;
+            worst = worst.max(rel);
+        }
+        assert!(worst < 0.05, "worst rel err {worst}");
+    }
+
+    #[test]
+    fn fit_never_worse_than_identity() {
+        let train = synth(200, 3);
+        let cb = Combiner::fit(&train, 4.0, 200, 0.3);
+        let id = Combiner::identity(2, 4.0);
+        let sse = |c: &Combiner| {
+            train
+                .iter()
+                .map(|e| {
+                    let d = (c.predict(&e.children) - e.target_j) / e.target_j;
+                    d * d
+                })
+                .sum::<f64>()
+        };
+        assert!(sse(&cb) <= sse(&id) + 1e-9);
+    }
+}

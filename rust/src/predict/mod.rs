@@ -1,0 +1,25 @@
+//! Energy predictors: PIE-P, its ablations, and all paper baselines.
+//!
+//! * `ridge` — standardized ridge regression (closed form, Cholesky), the
+//!   leaf/module regressor family.
+//! * `combiner` — the paper's Eq. 1 multi-level tree combiner
+//!   (`α(c) = 1 + tanh(W·feat(c) + b)/τ`), trained by gradient descent on
+//!   root-level error.
+//! * `piep` — the full predictor: per-module leaf regressors over the
+//!   expanded model tree + combiner; options toggle the ablations
+//!   (w/o waiting, w/o model features) and the IrEne baseline (no
+//!   communication modules).
+//! * `codecarbon` — telemetry-based estimator (NVML + CPU-TDP heuristic).
+//! * `wilkins` — token-in/token-out regression (Eq. 2).
+//! * `nvml_proxy` — linear regression on NVML energy alone (Appendix G/H).
+
+pub mod codecarbon;
+pub mod combiner;
+pub mod nvml_proxy;
+pub mod piep;
+pub mod ridge;
+pub mod wilkins;
+
+pub use combiner::Combiner;
+pub use piep::{PieP, PiepOptions};
+pub use ridge::Ridge;

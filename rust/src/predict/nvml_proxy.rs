@@ -1,0 +1,65 @@
+//! NVML-as-proxy regression (Appendices G and H).
+//!
+//! Can readily-available NVML GPU energy predict total system energy
+//! through a simple regression? The paper shows it cannot: GPU-only
+//! measurements miss host/PSU dynamics that vary with configuration, so
+//! both in-sample error (Table 6) and leave-one-out generalization
+//! (Table 7) are poor.
+
+use crate::simulator::run::RunRecord;
+use crate::predict::ridge::Ridge;
+
+#[derive(Debug, Clone)]
+pub struct NvmlProxy {
+    model: Ridge,
+}
+
+impl NvmlProxy {
+    pub fn fit(train: &[RunRecord]) -> NvmlProxy {
+        let xs: Vec<Vec<f64>> = train.iter().map(|r| vec![r.nvml_total_j]).collect();
+        let ys: Vec<f64> = train.iter().map(|r| r.meter_total_j).collect();
+        NvmlProxy {
+            model: Ridge::fit(&xs, &ys, 1e-6, false),
+        }
+    }
+
+    pub fn predict(&self, r: &RunRecord) -> f64 {
+        self.model.predict(&[r.nvml_total_j])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+    use crate::simulator::simulate_run;
+    use crate::util::stats::mape;
+
+    #[test]
+    fn proxy_fits_scale_but_misses_configuration_effects() {
+        let hw = HwSpec::default();
+        let knobs = SimKnobs {
+            sim_decode_steps: 6,
+            ..SimKnobs::default()
+        };
+        let mut rs = Vec::new();
+        for model in ["Vicuna-7B", "Vicuna-13B"] {
+            for g in [2usize, 4] {
+                for b in [8usize, 64] {
+                    for seed in 0..3u64 {
+                        let cfg =
+                            RunConfig::new(model, Parallelism::Tensor, g, b).with_seed(seed);
+                        rs.push(simulate_run(&cfg, &hw, &knobs));
+                    }
+                }
+            }
+        }
+        let m = NvmlProxy::fit(&rs);
+        let pred: Vec<f64> = rs.iter().map(|r| m.predict(r)).collect();
+        let truth: Vec<f64> = rs.iter().map(|r| r.meter_total_j).collect();
+        let e = mape(&pred, &truth);
+        // One scalar can track overall scale but not host-side variation.
+        assert!(e > 3.0, "{e:.1}%");
+        assert!(e < 80.0, "{e:.1}%");
+    }
+}

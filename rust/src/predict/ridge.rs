@@ -1,0 +1,197 @@
+//! Standardized ridge regression with optional log-space targets.
+//!
+//! Module energies span four orders of magnitude across variants and
+//! configurations, so leaf regressors fit `log(J)` by default and
+//! exponentiate at prediction time; features are z-scored with the training
+//! statistics. Solve is closed-form `(XᵀX + λI) w = Xᵀy` via Cholesky.
+
+use crate::util::stats::cholesky_solve;
+
+#[derive(Debug, Clone)]
+pub struct Ridge {
+    pub w: Vec<f64>,
+    pub b: f64,
+    pub x_mean: Vec<f64>,
+    pub x_std: Vec<f64>,
+    pub log_target: bool,
+    pub lambda: f64,
+}
+
+impl Ridge {
+    /// Fit on rows `xs` with targets `ys`.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], lambda: f64, log_target: bool) -> Ridge {
+        assert!(!xs.is_empty());
+        assert_eq!(xs.len(), ys.len());
+        let d = xs[0].len();
+        let n = xs.len();
+
+        // Standardize features.
+        let mut x_mean = vec![0.0; d];
+        for x in xs {
+            for j in 0..d {
+                x_mean[j] += x[j];
+            }
+        }
+        for m in &mut x_mean {
+            *m /= n as f64;
+        }
+        let mut x_std = vec![0.0; d];
+        for x in xs {
+            for j in 0..d {
+                let c = x[j] - x_mean[j];
+                x_std[j] += c * c;
+            }
+        }
+        for s in &mut x_std {
+            *s = (*s / n as f64).sqrt();
+            if *s < 1e-12 {
+                *s = 1.0; // constant feature: zero after centering
+            }
+        }
+
+        let ty: Vec<f64> = ys
+            .iter()
+            .map(|&y| if log_target { y.max(1e-9).ln() } else { y })
+            .collect();
+        let y_mean = ty.iter().sum::<f64>() / n as f64;
+
+        // Normal equations on standardized, centered data.
+        let mut xtx = vec![0.0; d * d];
+        let mut xty = vec![0.0; d];
+        let mut z = vec![0.0; d];
+        for (x, &y) in xs.iter().zip(&ty) {
+            for j in 0..d {
+                z[j] = (x[j] - x_mean[j]) / x_std[j];
+            }
+            let yc = y - y_mean;
+            for j in 0..d {
+                xty[j] += z[j] * yc;
+                for k in j..d {
+                    xtx[j * d + k] += z[j] * z[k];
+                }
+            }
+        }
+        // Mirror + ridge.
+        for j in 0..d {
+            for k in 0..j {
+                xtx[j * d + k] = xtx[k * d + j];
+            }
+            xtx[j * d + j] += lambda * n as f64;
+        }
+        let mut w = xty;
+        cholesky_solve(&mut xtx, &mut w, d);
+
+        Ridge {
+            w,
+            b: y_mean,
+            x_mean,
+            x_std,
+            log_target,
+            lambda,
+        }
+    }
+
+    /// Linear response in (possibly log) target space.
+    pub fn raw(&self, x: &[f64]) -> f64 {
+        let mut acc = self.b;
+        for j in 0..self.w.len() {
+            acc += self.w[j] * (x[j] - self.x_mean[j]) / self.x_std[j];
+        }
+        acc
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let r = self.raw(x);
+        if self.log_target {
+            r.exp()
+        } else {
+            r
+        }
+    }
+
+    /// Standardized weight vector (for the PJRT batched-predict path):
+    /// returns (w', b') such that prediction = w'·x + b' in raw space.
+    pub fn flatten(&self) -> (Vec<f64>, f64) {
+        let mut w = vec![0.0; self.w.len()];
+        let mut b = self.b;
+        for j in 0..self.w.len() {
+            w[j] = self.w[j] / self.x_std[j];
+            b -= self.w[j] * self.x_mean[j] / self.x_std[j];
+        }
+        (w, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn synth(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let a = rng.range(0.0, 10.0);
+            let b = rng.range(-5.0, 5.0);
+            let c = rng.range(0.0, 1.0);
+            xs.push(vec![a, b, c]);
+            ys.push(3.0 * a - 2.0 * b + 0.5 + rng.normal() * 0.01);
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn recovers_linear_relationship() {
+        let (xs, ys) = synth(500, 1);
+        let m = Ridge::fit(&xs, &ys, 1e-6, false);
+        for (x, &y) in xs.iter().zip(&ys).take(50) {
+            assert!((m.predict(x) - y).abs() < 0.1, "{} vs {}", m.predict(x), y);
+        }
+    }
+
+    #[test]
+    fn log_target_handles_scale_spread() {
+        let mut rng = Rng::new(2);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..400 {
+            let a = rng.range(0.0, 6.0);
+            xs.push(vec![a]);
+            ys.push((a).exp() * rng.lognormal_mean_cv(1.0, 0.02));
+        }
+        let m = Ridge::fit(&xs, &ys, 1e-6, true);
+        for (x, &y) in xs.iter().zip(&ys).take(50) {
+            let rel = (m.predict(x) - y).abs() / y;
+            assert!(rel < 0.15, "rel={rel}");
+        }
+    }
+
+    #[test]
+    fn constant_features_do_not_break_fit() {
+        let xs = vec![vec![1.0, 5.0], vec![2.0, 5.0], vec![3.0, 5.0], vec![4.0, 5.0]];
+        let ys = vec![2.0, 4.0, 6.0, 8.0];
+        let m = Ridge::fit(&xs, &ys, 1e-9, false);
+        assert!((m.predict(&[2.5, 5.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn flatten_matches_predict() {
+        let (xs, ys) = synth(200, 3);
+        let m = Ridge::fit(&xs, &ys, 1e-4, false);
+        let (w, b) = m.flatten();
+        for x in xs.iter().take(20) {
+            let flat: f64 = b + w.iter().zip(x).map(|(wi, xi)| wi * xi).sum::<f64>();
+            assert!((flat - m.raw(x)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn heavier_ridge_shrinks_weights() {
+        let (xs, ys) = synth(300, 4);
+        let light = Ridge::fit(&xs, &ys, 1e-8, false);
+        let heavy = Ridge::fit(&xs, &ys, 10.0, false);
+        let norm = |w: &[f64]| w.iter().map(|v| v * v).sum::<f64>();
+        assert!(norm(&heavy.w) < norm(&light.w));
+    }
+}

@@ -1,0 +1,154 @@
+//! Offline profiling campaigns (the paper's "Fine-grained Measurement").
+//!
+//! A campaign runs repeated, controlled passes over a configuration grid,
+//! capturing for every run the wall-meter total, NVML channels, runtime
+//! utilization, module-level energy attribution, and the raw wait-time
+//! samples that feed synchronization sampling. All passes are seeded, so a
+//! campaign is exactly reproducible; passes of one config differ only by
+//! seed (the paper's repeated-runs distribution capture).
+//!
+//! Campaigns fan out over std::thread workers (the image has no tokio);
+//! the simulator is CPU-bound and embarrassingly parallel across runs.
+
+pub mod store;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::{HwSpec, RunConfig, SimKnobs};
+use crate::features::SyncDb;
+use crate::simulator::{simulate_run, RunRecord};
+
+/// A profiling campaign description.
+#[derive(Debug, Clone)]
+pub struct Campaign {
+    pub hw: HwSpec,
+    pub knobs: SimKnobs,
+    /// Repeated passes per configuration (distribution capture).
+    pub passes: usize,
+    pub base_seed: u64,
+    /// Worker threads (0 ⇒ available_parallelism).
+    pub threads: usize,
+}
+
+impl Default for Campaign {
+    fn default() -> Self {
+        Campaign {
+            hw: HwSpec::default(),
+            knobs: SimKnobs::default(),
+            passes: 6,
+            base_seed: 0x91E9 << 8, // "PIEP"
+            threads: 0,
+        }
+    }
+}
+
+/// Profiled dataset: records plus the offline sync-sampling database.
+#[derive(Debug)]
+pub struct Dataset {
+    pub runs: Vec<RunRecord>,
+    pub sync_db: SyncDb,
+}
+
+impl Campaign {
+    /// Expand configs × passes and simulate them all.
+    pub fn profile(&self, configs: &[RunConfig]) -> Dataset {
+        let mut jobs: Vec<RunConfig> = Vec::with_capacity(configs.len() * self.passes);
+        for cfg in configs {
+            for pass in 0..self.passes {
+                jobs.push(cfg.clone().with_seed(self.base_seed ^ (pass as u64 + 1)));
+            }
+        }
+
+        let threads = if self.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            self.threads
+        };
+
+        let next = AtomicUsize::new(0);
+        let out: Mutex<Vec<Option<RunRecord>>> = Mutex::new(vec![None; jobs.len()]);
+        std::thread::scope(|scope| {
+            for _ in 0..threads.min(jobs.len().max(1)) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let rec = simulate_run(&jobs[i], &self.hw, &self.knobs);
+                    out.lock().unwrap()[i] = Some(rec);
+                });
+            }
+        });
+
+        let runs: Vec<RunRecord> = out
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("worker completed every job"))
+            .collect();
+        let sync_db = SyncDb::build(&runs);
+        Dataset { runs, sync_db }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Parallelism;
+
+    #[test]
+    fn campaign_runs_passes_per_config() {
+        let c = Campaign {
+            passes: 3,
+            knobs: SimKnobs {
+                sim_decode_steps: 4,
+                ..SimKnobs::default()
+            },
+            ..Campaign::default()
+        };
+        let cfgs = vec![
+            RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8),
+            RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8),
+        ];
+        let ds = c.profile(&cfgs);
+        assert_eq!(ds.runs.len(), 6);
+        assert!(ds.sync_db.groups() >= 2);
+    }
+
+    #[test]
+    fn campaign_is_deterministic() {
+        let c = Campaign {
+            passes: 2,
+            threads: 3,
+            knobs: SimKnobs {
+                sim_decode_steps: 4,
+                ..SimKnobs::default()
+            },
+            ..Campaign::default()
+        };
+        let cfgs = vec![RunConfig::new("Mistral-8B", Parallelism::Tensor, 2, 16)];
+        let a = c.profile(&cfgs);
+        let b = c.profile(&cfgs);
+        for (x, y) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(x.true_total_j, y.true_total_j);
+            assert_eq!(x.meter_total_j, y.meter_total_j);
+        }
+    }
+
+    #[test]
+    fn passes_differ_from_each_other() {
+        let c = Campaign {
+            passes: 2,
+            knobs: SimKnobs {
+                sim_decode_steps: 4,
+                ..SimKnobs::default()
+            },
+            ..Campaign::default()
+        };
+        let ds = c.profile(&[RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8)]);
+        assert_ne!(ds.runs[0].true_total_j, ds.runs[1].true_total_j);
+    }
+}

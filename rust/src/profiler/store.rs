@@ -1,0 +1,346 @@
+//! Dataset and model persistence.
+//!
+//! The paper's released artifact separates (i) offline profiling from
+//! (iii) training/evaluation; this module provides the same workflow:
+//! `piep profile --save runs.json` writes a campaign to disk and
+//! `piep train --dataset runs.json` / `piep predict --model-file m.json`
+//! consume it without re-simulating. Everything serializes through the
+//! in-repo JSON layer (no serde on the offline image).
+
+use std::collections::BTreeMap;
+
+use crate::config::{Parallelism, RunConfig};
+use crate::features::SyncDb;
+use crate::models;
+use crate::predict::{Combiner, PieP, PiepOptions, Ridge};
+use crate::simulator::timeline::ModuleKind;
+use crate::simulator::RunRecord;
+use crate::util::json::{arr, num, obj, s, Json};
+
+fn vecf(xs: &[f64]) -> Json {
+    arr(xs.iter().map(|&x| num(x)).collect())
+}
+
+fn getf(j: &Json, k: &str) -> Result<f64, String> {
+    j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing {k}"))
+}
+
+fn getv(j: &Json, k: &str) -> Result<Vec<f64>, String> {
+    Ok(j.get(k)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("missing {k}"))?
+        .iter()
+        .filter_map(Json::as_f64)
+        .collect())
+}
+
+fn module_key(m: ModuleKind) -> &'static str {
+    match m {
+        ModuleKind::Embedding => "embedding",
+        ModuleKind::Norm => "norm",
+        ModuleKind::SelfAttention => "self_attention",
+        ModuleKind::Mlp => "mlp",
+        ModuleKind::LogitsHead => "logits_head",
+        ModuleKind::AllReduce => "allreduce",
+        ModuleKind::P2PTransfer => "p2p",
+        ModuleKind::AllGather => "allgather",
+    }
+}
+
+fn module_from_key(k: &str) -> Option<ModuleKind> {
+    ModuleKind::ALL.into_iter().find(|m| module_key(*m) == k)
+}
+
+/// Serialize one run record.
+pub fn run_to_json(r: &RunRecord) -> Json {
+    let modules: Vec<Json> = r
+        .module_energy_j
+        .iter()
+        .map(|(k, &e)| {
+            obj(vec![
+                ("kind", s(module_key(*k))),
+                ("energy_j", num(e)),
+                ("time_s", num(r.module_time_s.get(k).copied().unwrap_or(0.0))),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("model", s(&r.config.model)),
+        ("parallelism", s(r.config.parallelism.name())),
+        ("gpus", num(r.config.gpus as f64)),
+        ("batch", num(r.config.batch as f64)),
+        ("seq_in", num(r.config.seq_in as f64)),
+        ("seq_out", num(r.config.seq_out as f64)),
+        ("seed", num(r.config.seed as f64)),
+        ("wall_s", num(r.wall_s)),
+        ("prefill_s", num(r.prefill_s)),
+        ("decode_s", num(r.decode_s)),
+        ("tokens_out", num(r.tokens_out as f64)),
+        ("true_total_j", num(r.true_total_j)),
+        ("gpu_energy_j", num(r.gpu_energy_j)),
+        ("host_energy_j", num(r.host_energy_j)),
+        ("meter_total_j", num(r.meter_total_j)),
+        ("nvml_gpu_j", vecf(&r.nvml_gpu_j)),
+        ("nvml_total_j", num(r.nvml_total_j)),
+        ("modules", Json::Arr(modules)),
+        ("ar_wait_j", num(r.allreduce_split_j.0)),
+        ("ar_xfer_j", num(r.allreduce_split_j.1)),
+        ("gpu_util", vecf(&r.gpu_util)),
+        ("gpu_mem_util", vecf(&r.gpu_mem_util)),
+        ("gpu_clock", vecf(&r.gpu_clock_ghz)),
+        ("gpu_mem_clock", vecf(&r.gpu_mem_clock_ghz)),
+        ("cpu_util_pct", num(r.cpu_util_pct)),
+        ("cpu_mem_util_pct", num(r.cpu_mem_util_pct)),
+        ("cpu_clock", num(r.cpu_clock_ghz)),
+        ("cpu_mem_clock", num(r.cpu_mem_clock_ghz)),
+        ("mem_bytes", num(r.mem_bytes)),
+        ("wait_samples", vecf(&r.wait_samples)),
+        ("comm_bytes_per_step", num(r.comm_bytes_per_step)),
+        ("host_activity", num(r.host_activity)),
+    ])
+}
+
+/// Deserialize one run record.
+pub fn run_from_json(j: &Json) -> Result<RunRecord, String> {
+    let model = j.get("model").and_then(Json::as_str).ok_or("model")?.to_string();
+    let spec = models::by_name(&model).ok_or_else(|| format!("unknown model {model}"))?;
+    let parallelism = Parallelism::parse(j.get("parallelism").and_then(Json::as_str).ok_or("parallelism")?)
+        .ok_or("bad parallelism")?;
+    let config = RunConfig {
+        model,
+        parallelism,
+        gpus: getf(j, "gpus")? as usize,
+        batch: getf(j, "batch")? as usize,
+        seq_in: getf(j, "seq_in")? as usize,
+        seq_out: getf(j, "seq_out")? as usize,
+        seed: getf(j, "seed")? as u64,
+    };
+    let mut module_energy_j = BTreeMap::new();
+    let mut module_time_s = BTreeMap::new();
+    for m in j.get("modules").and_then(Json::as_arr).ok_or("modules")? {
+        let kind = module_from_key(m.get("kind").and_then(Json::as_str).ok_or("kind")?)
+            .ok_or("bad module kind")?;
+        module_energy_j.insert(kind, getf(m, "energy_j")?);
+        module_time_s.insert(kind, getf(m, "time_s")?);
+    }
+    let wait_samples = getv(j, "wait_samples")?;
+    let (wm, ws, wx) = (
+        crate::util::stats::mean(&wait_samples),
+        crate::util::stats::std_dev(&wait_samples),
+        if wait_samples.is_empty() { 0.0 } else { crate::util::stats::max(&wait_samples) },
+    );
+    Ok(RunRecord {
+        config,
+        spec,
+        wall_s: getf(j, "wall_s")?,
+        prefill_s: getf(j, "prefill_s")?,
+        decode_s: getf(j, "decode_s")?,
+        tokens_out: getf(j, "tokens_out")? as usize,
+        true_total_j: getf(j, "true_total_j")?,
+        gpu_energy_j: getf(j, "gpu_energy_j")?,
+        host_energy_j: getf(j, "host_energy_j")?,
+        module_energy_j,
+        module_time_s,
+        allreduce_split_j: (getf(j, "ar_wait_j")?, getf(j, "ar_xfer_j")?),
+        meter_total_j: getf(j, "meter_total_j")?,
+        nvml_gpu_j: getv(j, "nvml_gpu_j")?,
+        nvml_total_j: getf(j, "nvml_total_j")?,
+        gpu_util: getv(j, "gpu_util")?,
+        gpu_mem_util: getv(j, "gpu_mem_util")?,
+        gpu_clock_ghz: getv(j, "gpu_clock")?,
+        gpu_mem_clock_ghz: getv(j, "gpu_mem_clock")?,
+        cpu_util_pct: getf(j, "cpu_util_pct")?,
+        cpu_mem_util_pct: getf(j, "cpu_mem_util_pct")?,
+        cpu_clock_ghz: getf(j, "cpu_clock")?,
+        cpu_mem_clock_ghz: getf(j, "cpu_mem_clock")?,
+        mem_bytes: getf(j, "mem_bytes")?,
+        wait_samples,
+        wait_mean_s: wm,
+        wait_std_s: ws,
+        wait_max_s: wx,
+        comm_bytes_per_step: getf(j, "comm_bytes_per_step")?,
+        host_activity: getf(j, "host_activity")?,
+    })
+}
+
+/// Save a profiled dataset (runs; the sync DB is rebuilt on load).
+pub fn save_dataset(runs: &[RunRecord], path: &str) -> std::io::Result<()> {
+    let j = obj(vec![
+        ("format", s("piep-dataset-v1")),
+        ("runs", Json::Arr(runs.iter().map(run_to_json).collect())),
+    ]);
+    std::fs::write(path, j.render())
+}
+
+/// Load a dataset saved by `save_dataset`.
+pub fn load_dataset(path: &str) -> Result<super::Dataset, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let j = Json::parse(&text)?;
+    if j.get("format").and_then(Json::as_str) != Some("piep-dataset-v1") {
+        return Err("not a piep dataset file".into());
+    }
+    let runs: Result<Vec<RunRecord>, String> = j
+        .get("runs")
+        .and_then(Json::as_arr)
+        .ok_or("runs")?
+        .iter()
+        .map(run_from_json)
+        .collect();
+    let runs = runs?;
+    let sync_db = SyncDb::build(&runs);
+    Ok(super::Dataset { runs, sync_db })
+}
+
+fn ridge_to_json(r: &Ridge) -> Json {
+    obj(vec![
+        ("w", vecf(&r.w)),
+        ("b", num(r.b)),
+        ("x_mean", vecf(&r.x_mean)),
+        ("x_std", vecf(&r.x_std)),
+        ("log_target", Json::Bool(r.log_target)),
+        ("lambda", num(r.lambda)),
+    ])
+}
+
+fn ridge_from_json(j: &Json) -> Result<Ridge, String> {
+    Ok(Ridge {
+        w: getv(j, "w")?,
+        b: getf(j, "b")?,
+        x_mean: getv(j, "x_mean")?,
+        x_std: getv(j, "x_std")?,
+        log_target: matches!(j.get("log_target"), Some(Json::Bool(true))),
+        lambda: getf(j, "lambda")?,
+    })
+}
+
+/// Save a fitted PIE-P model.
+pub fn save_model(m: &PieP, path: &str) -> std::io::Result<()> {
+    let leaves: Vec<Json> = m
+        .leaf
+        .iter()
+        .map(|(k, r)| obj(vec![("kind", s(module_key(*k))), ("ridge", ridge_to_json(r))]))
+        .collect();
+    let j = obj(vec![
+        ("format", s("piep-model-v1")),
+        ("include_comm", Json::Bool(m.opts.include_comm)),
+        ("use_wait", Json::Bool(m.opts.use_wait)),
+        ("use_struct", Json::Bool(m.opts.use_struct)),
+        ("tau", num(m.combiner.tau)),
+        ("leaves", Json::Arr(leaves)),
+        (
+            "combiner",
+            obj(vec![
+                ("w", vecf(&m.combiner.w)),
+                ("b", num(m.combiner.b)),
+                ("x_mean", vecf(&m.combiner.x_mean)),
+                ("x_std", vecf(&m.combiner.x_std)),
+            ]),
+        ),
+    ]);
+    std::fs::write(path, j.render())
+}
+
+/// Load a fitted PIE-P model.
+pub fn load_model(path: &str) -> Result<PieP, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let j = Json::parse(&text)?;
+    if j.get("format").and_then(Json::as_str) != Some("piep-model-v1") {
+        return Err("not a piep model file".into());
+    }
+    let mut leaf = BTreeMap::new();
+    for l in j.get("leaves").and_then(Json::as_arr).ok_or("leaves")? {
+        let kind = module_from_key(l.get("kind").and_then(Json::as_str).ok_or("kind")?)
+            .ok_or("bad kind")?;
+        leaf.insert(kind, ridge_from_json(l.get("ridge").ok_or("ridge")?)?);
+    }
+    let cj = j.get("combiner").ok_or("combiner")?;
+    let combiner = Combiner {
+        w: getv(cj, "w")?,
+        b: getf(cj, "b")?,
+        tau: getf(&j, "tau")?,
+        x_mean: getv(cj, "x_mean")?,
+        x_std: getv(cj, "x_std")?,
+    };
+    let opts = PiepOptions {
+        include_comm: matches!(j.get("include_comm"), Some(Json::Bool(true))),
+        use_wait: matches!(j.get("use_wait"), Some(Json::Bool(true))),
+        use_struct: matches!(j.get("use_struct"), Some(Json::Bool(true))),
+        ..PiepOptions::default()
+    };
+    Ok(PieP {
+        opts,
+        leaf,
+        combiner,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwSpec, SimKnobs};
+    use crate::predict::PiepOptions;
+    use crate::profiler::Campaign;
+
+    fn tiny_dataset() -> crate::profiler::Dataset {
+        let c = Campaign {
+            passes: 3,
+            knobs: SimKnobs {
+                sim_decode_steps: 4,
+                ..SimKnobs::default()
+            },
+            ..Campaign::default()
+        };
+        c.profile(&[
+            RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8),
+            RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 16),
+        ])
+    }
+
+    #[test]
+    fn dataset_roundtrip_preserves_everything_relevant() {
+        let ds = tiny_dataset();
+        let path = "target/test-store-dataset.json";
+        save_dataset(&ds.runs, path).unwrap();
+        let loaded = load_dataset(path).unwrap();
+        assert_eq!(loaded.runs.len(), ds.runs.len());
+        for (a, b) in ds.runs.iter().zip(&loaded.runs) {
+            assert_eq!(a.config.key(), b.config.key());
+            assert!((a.meter_total_j - b.meter_total_j).abs() < 1e-9);
+            assert!((a.true_total_j - b.true_total_j).abs() < 1e-9);
+            assert_eq!(a.module_energy_j.len(), b.module_energy_j.len());
+            assert_eq!(a.wait_samples.len(), b.wait_samples.len());
+            assert_eq!(a.gpu_util, b.gpu_util);
+        }
+        // Sync DB rebuilt identically.
+        assert_eq!(loaded.sync_db.groups(), ds.sync_db.groups());
+    }
+
+    #[test]
+    fn model_roundtrip_predicts_identically() {
+        let ds = tiny_dataset();
+        let m = PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
+        let path = "target/test-store-model.json";
+        save_model(&m, path).unwrap();
+        let loaded = load_model(path).unwrap();
+        for r in &ds.runs {
+            let a = m.predict_total(r, &ds.sync_db);
+            let b = loaded.predict_total(r, &ds.sync_db);
+            assert!((a - b).abs() / a.abs().max(1e-9) < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn load_rejects_wrong_format() {
+        let path = "target/test-store-bad.json";
+        std::fs::write(path, "{\"format\":\"nope\"}").unwrap();
+        assert!(load_dataset(path).is_err());
+        assert!(load_model(path).is_err());
+    }
+
+    #[test]
+    fn module_keys_roundtrip() {
+        for m in ModuleKind::ALL {
+            assert_eq!(module_from_key(module_key(m)), Some(m));
+        }
+    }
+}

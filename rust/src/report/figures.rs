@@ -1,0 +1,378 @@
+//! Figure harnesses (Figures 2–8 of the paper).
+
+use crate::config::Parallelism;
+use crate::eval;
+use crate::models::{self, Family};
+use crate::predict::codecarbon::CodeCarbon;
+use crate::predict::wilkins::Wilkins;
+use crate::predict::{PieP, PiepOptions};
+use crate::simulator::timeline::ModuleKind;
+use crate::simulator::RunRecord;
+use crate::util::stats::{self, mape};
+use crate::util::table::{fnum, pct, Table};
+
+use super::{family_fit, ReportCtx};
+
+/// MAPE of a predictor closure over a filtered slice of test runs.
+fn cell_mape<F: Fn(&RunRecord) -> f64>(test: &[&RunRecord], pred: F) -> f64 {
+    let p: Vec<f64> = test.iter().map(|r| pred(r)).collect();
+    let t: Vec<f64> = test.iter().map(|r| r.meter_total_j).collect();
+    mape(&p, &t)
+}
+
+/// Figure 2: model-level MAPE across families/variants/GPU counts under
+/// tensor parallelism — PIE-P vs IrEne vs CodeCarbon vs Wilkins.
+pub fn figure2(ctx: &mut ReportCtx) -> Table {
+    let split_seed = ctx.split_seed;
+    let cc = CodeCarbon::new(ctx.campaign.hw.cpu_max_w);
+    let ds = ctx.tp_dataset();
+    let mut t = Table::new(
+        "Figure 2 — MAPE under tensor parallelism (PIE-P vs baselines)",
+        &["Family", "Variant", "GPUs", "PIE-P", "±se", "CodeCarbon", "IrEne", "Wilkins"],
+    );
+    let mut avgs: Vec<(f64, f64, f64, f64)> = Vec::new();
+    for family in Family::ALL {
+        let fit = family_fit(ds, family, split_seed);
+        let wilkins = Wilkins::fit(&fit.train);
+        for variant in models::family_variants(family) {
+            for gpus in crate::workload::GPU_COUNTS {
+                let cell: Vec<&RunRecord> = fit
+                    .test
+                    .iter()
+                    .copied()
+                    .filter(|r| r.config.model == variant.name && r.config.gpus == gpus)
+                    .collect();
+                if cell.is_empty() {
+                    continue;
+                }
+                let piep_pred: Vec<f64> = cell
+                    .iter()
+                    .map(|r| fit.piep.predict_total(r, &ds.sync_db))
+                    .collect();
+                let truth: Vec<f64> = cell.iter().map(|r| r.meter_total_j).collect();
+                let (pm, pse) = (mape(&piep_pred, &truth), stats::mape_std_err(&piep_pred, &truth));
+                let ccm = cell_mape(&cell, |r| cc.estimate(r));
+                let irm = cell_mape(&cell, |r| fit.irene.predict_total(r, &ds.sync_db));
+                let wim = cell_mape(&cell, |r| wilkins.predict(r));
+                avgs.push((pm, ccm, irm, wim));
+                t.row(vec![
+                    family.name().into(),
+                    variant.name.into(),
+                    gpus.to_string(),
+                    pct(pm),
+                    fnum(pse, 1),
+                    pct(ccm),
+                    pct(irm),
+                    pct(wim),
+                ]);
+            }
+        }
+    }
+    let n = avgs.len() as f64;
+    let mean_of = |f: fn(&(f64, f64, f64, f64)) -> f64| avgs.iter().map(f).sum::<f64>() / n;
+    t.row(vec![
+        "AVERAGE".into(),
+        "-".into(),
+        "-".into(),
+        pct(mean_of(|a| a.0)),
+        "-".into(),
+        pct(mean_of(|a| a.1)),
+        pct(mean_of(|a| a.2)),
+        pct(mean_of(|a| a.3)),
+    ]);
+    ctx.emit(&t, "figure2");
+    t
+}
+
+/// Figure 3: predicted trade-off between inference time per token and
+/// energy per token for Vicuna under TP (highest batch per size).
+pub fn figure3(ctx: &mut ReportCtx) -> Table {
+    let split_seed = ctx.split_seed;
+    let ds = ctx.tp_dataset();
+    let fit = family_fit(ds, Family::Vicuna, split_seed);
+    let mut t = Table::new(
+        "Figure 3 — Vicuna TP: time/token vs PIE-P-predicted energy/token",
+        &["Variant", "GPUs", "ms/token", "pred J/token", "true J/token"],
+    );
+    for variant in models::family_variants(Family::Vicuna) {
+        for gpus in crate::workload::GPU_COUNTS {
+            let cell: Vec<&RunRecord> = ds
+                .runs
+                .iter()
+                .filter(|r| {
+                    r.config.model == variant.name
+                        && r.config.gpus == gpus
+                        && r.config.batch == 64
+                        && r.config.seq_out == 512
+                })
+                .collect();
+            if cell.is_empty() {
+                continue;
+            }
+            let ms: Vec<f64> = cell.iter().map(|r| r.time_per_token_s() * 1e3).collect();
+            let pred: Vec<f64> = cell
+                .iter()
+                .map(|r| fit.piep.predict_total(r, &ds.sync_db) / r.tokens_out as f64)
+                .collect();
+            let truth: Vec<f64> = cell.iter().map(|r| r.energy_per_token_j()).collect();
+            t.row(vec![
+                variant.name.into(),
+                gpus.to_string(),
+                fnum(stats::mean(&ms), 2),
+                fnum(stats::mean(&pred), 3),
+                fnum(stats::mean(&truth), 3),
+            ]);
+        }
+    }
+    ctx.emit(&t, "figure3");
+    t
+}
+
+/// Figure 4: MAPE for Vicuna under pipeline and data parallelism.
+pub fn figure4(ctx: &mut ReportCtx) -> Table {
+    let split_seed = ctx.split_seed;
+    let cc = CodeCarbon::new(ctx.campaign.hw.cpu_max_w);
+    let mut t = Table::new(
+        "Figure 4 — Vicuna MAPE under pipeline / data parallelism",
+        &["Parallelism", "Variant", "GPUs", "PIE-P", "CodeCarbon", "IrEne"],
+    );
+    let mut summary: Vec<(Parallelism, f64, f64, f64)> = Vec::new();
+    for parallelism in [Parallelism::Pipeline, Parallelism::Data] {
+        let ds = ctx.vicuna_dataset(parallelism);
+        let fit = family_fit(ds, Family::Vicuna, split_seed);
+        for variant in models::family_variants(Family::Vicuna) {
+            for gpus in crate::workload::GPU_COUNTS {
+                let cell: Vec<&RunRecord> = fit
+                    .test
+                    .iter()
+                    .copied()
+                    .filter(|r| r.config.model == variant.name && r.config.gpus == gpus)
+                    .collect();
+                if cell.is_empty() {
+                    continue;
+                }
+                let pm = cell_mape(&cell, |r| fit.piep.predict_total(r, &ds.sync_db));
+                let ccm = cell_mape(&cell, |r| cc.estimate(r));
+                let irm = cell_mape(&cell, |r| fit.irene.predict_total(r, &ds.sync_db));
+                summary.push((parallelism, pm, ccm, irm));
+                t.row(vec![
+                    parallelism.name().into(),
+                    variant.name.into(),
+                    gpus.to_string(),
+                    pct(pm),
+                    pct(ccm),
+                    pct(irm),
+                ]);
+            }
+        }
+    }
+    for parallelism in [Parallelism::Pipeline, Parallelism::Data] {
+        let rows: Vec<&(Parallelism, f64, f64, f64)> =
+            summary.iter().filter(|s| s.0 == parallelism).collect();
+        let n = rows.len().max(1) as f64;
+        t.row(vec![
+            format!("AVG {}", parallelism.name()),
+            "-".into(),
+            "-".into(),
+            pct(rows.iter().map(|s| s.1).sum::<f64>() / n),
+            pct(rows.iter().map(|s| s.2).sum::<f64>() / n),
+            pct(rows.iter().map(|s| s.3).sum::<f64>() / n),
+        ]);
+    }
+    ctx.emit(&t, "figure4");
+    t
+}
+
+/// Figure 5: energy breakdown — total Wh per run with the AllReduce
+/// (communication) share, per family × GPU count (batch 64, the paper's
+/// batched-inference setting).
+pub fn figure5(ctx: &mut ReportCtx) -> Table {
+    let ds = ctx.tp_dataset();
+    let mut t = Table::new(
+        "Figure 5 — energy breakdown: AllReduce share of total (TP, batch 64)",
+        &["Family", "Variant", "GPUs", "Total Wh", "AllReduce Wh", "Share"],
+    );
+    for family in Family::ALL {
+        for variant in models::family_variants(family) {
+            for gpus in crate::workload::GPU_COUNTS {
+                let cell: Vec<&RunRecord> = ds
+                    .runs
+                    .iter()
+                    .filter(|r| {
+                        r.config.model == variant.name
+                            && r.config.gpus == gpus
+                            && r.config.batch == 64
+                            && r.config.seq_out == 512
+                    })
+                    .collect();
+                if cell.is_empty() {
+                    continue;
+                }
+                let total: f64 =
+                    stats::mean(&cell.iter().map(|r| r.true_total_j / 3600.0).collect::<Vec<_>>());
+                let ar: f64 = stats::mean(
+                    &cell
+                        .iter()
+                        .map(|r| {
+                            (r.module_energy_j
+                                .get(&ModuleKind::AllReduce)
+                                .copied()
+                                .unwrap_or(0.0)
+                                + r.module_energy_j
+                                    .get(&ModuleKind::AllGather)
+                                    .copied()
+                                    .unwrap_or(0.0))
+                                / 3600.0
+                        })
+                        .collect::<Vec<_>>(),
+                );
+                t.row(vec![
+                    family.name().into(),
+                    variant.name.into(),
+                    gpus.to_string(),
+                    fnum(total, 2),
+                    fnum(ar, 2),
+                    pct(100.0 * ar / total),
+                ]);
+            }
+        }
+    }
+    ctx.emit(&t, "figure5");
+    t
+}
+
+/// Figure 6: ablation — PIE-P vs PIE-P without the waiting phase, per
+/// variant/GPU count under TP.
+pub fn figure6(ctx: &mut ReportCtx) -> Table {
+    let split_seed = ctx.split_seed;
+    let ds = ctx.tp_dataset();
+    let mut t = Table::new(
+        "Figure 6 — ablation: PIE-P vs PIE-P w/o waiting (TP)",
+        &["Family", "Variant", "GPUs", "PIE-P", "w/o waiting"],
+    );
+    let mut accs = (Vec::new(), Vec::new());
+    for family in Family::ALL {
+        let fit = family_fit(ds, family, split_seed);
+        let ablated = PieP::fit(&fit.train, &ds.sync_db, PiepOptions::without_waiting());
+        for variant in models::family_variants(family) {
+            for gpus in crate::workload::GPU_COUNTS {
+                let cell: Vec<&RunRecord> = fit
+                    .test
+                    .iter()
+                    .copied()
+                    .filter(|r| r.config.model == variant.name && r.config.gpus == gpus)
+                    .collect();
+                if cell.is_empty() {
+                    continue;
+                }
+                let pm = cell_mape(&cell, |r| fit.piep.predict_total(r, &ds.sync_db));
+                let am = cell_mape(&cell, |r| ablated.predict_total(r, &ds.sync_db));
+                accs.0.push(pm);
+                accs.1.push(am);
+                t.row(vec![
+                    family.name().into(),
+                    variant.name.into(),
+                    gpus.to_string(),
+                    pct(pm),
+                    pct(am),
+                ]);
+            }
+        }
+    }
+    t.row(vec![
+        "AVERAGE".into(),
+        "-".into(),
+        "-".into(),
+        pct(stats::mean(&accs.0)),
+        pct(stats::mean(&accs.1)),
+    ]);
+    ctx.emit(&t, "figure6");
+    t
+}
+
+/// Figure 7: Spearman rank correlation of each runtime feature with total
+/// energy, per Vicuna size (the paper's heatmap, rendered as a table).
+pub fn figure7(ctx: &mut ReportCtx) -> Table {
+    let ds = ctx.tp_dataset();
+    let variants = models::family_variants(Family::Vicuna);
+    let headers: Vec<String> = std::iter::once("Feature".to_string())
+        .chain(variants.iter().map(|v| v.name.to_string()))
+        .collect();
+    let mut t = Table::new(
+        "Figure 7 — Spearman ρ of runtime features vs total energy (Vicuna)",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut per_variant: Vec<Vec<(&'static str, f64)>> = Vec::new();
+    for v in &variants {
+        let runs: Vec<RunRecord> = ds
+            .runs
+            .iter()
+            .filter(|r| r.config.model == v.name)
+            .cloned()
+            .collect();
+        per_variant.push(eval::feature_correlations(&runs));
+    }
+    // Keep the paper-salient subset in its order.
+    let salient = [
+        "nvml_energy_wh",
+        "exec_time_s",
+        "batch_size",
+        "memory_gb",
+        "gpu_util_mean",
+        "gpu_mem_util_mean",
+        "cpu_util",
+        "seq_len",
+        "num_gpus",
+        "gpu_clock_mean",
+    ];
+    for name in salient {
+        let mut row = vec![name.to_string()];
+        for cors in &per_variant {
+            let rho = cors.iter().find(|(n, _)| *n == name).map(|(_, r)| *r).unwrap_or(0.0);
+            row.push(fnum(rho, 3));
+        }
+        t.row(row);
+    }
+    ctx.emit(&t, "figure7");
+    t
+}
+
+/// Figure 8: the Figure-3 trade-off with *ground-truth* energy.
+pub fn figure8(ctx: &mut ReportCtx) -> Table {
+    let ds = ctx.tp_dataset();
+    let mut t = Table::new(
+        "Figure 8 — Vicuna TP: time/token vs ground-truth energy/token",
+        &["Variant", "GPUs", "ms/token", "true J/token"],
+    );
+    for variant in models::family_variants(Family::Vicuna) {
+        for gpus in crate::workload::GPU_COUNTS {
+            let cell: Vec<&RunRecord> = ds
+                .runs
+                .iter()
+                .filter(|r| {
+                    r.config.model == variant.name
+                        && r.config.gpus == gpus
+                        && r.config.batch == 64
+                        && r.config.seq_out == 512
+                })
+                .collect();
+            if cell.is_empty() {
+                continue;
+            }
+            t.row(vec![
+                variant.name.into(),
+                gpus.to_string(),
+                fnum(
+                    stats::mean(&cell.iter().map(|r| r.time_per_token_s() * 1e3).collect::<Vec<_>>()),
+                    2,
+                ),
+                fnum(
+                    stats::mean(&cell.iter().map(|r| r.energy_per_token_j()).collect::<Vec<_>>()),
+                    3,
+                ),
+            ]);
+        }
+    }
+    ctx.emit(&t, "figure8");
+    t
+}

@@ -1,0 +1,122 @@
+//! Experiment harnesses: one function per paper table/figure (DESIGN.md §6).
+//!
+//! Every harness runs its profiling campaign (cached per parallelism),
+//! applies the paper's training/evaluation protocol, prints an aligned
+//! console table, and saves a CSV under the report directory. Numbers are
+//! expected to match the paper in *shape* (ordering, ratios, trends), not
+//! absolute values — the substrate is a simulator, not the authors'
+//! testbed (see EXPERIMENTS.md for the side-by-side).
+
+mod extensions;
+mod figures;
+mod tables;
+
+pub use extensions::*;
+pub use figures::*;
+pub use tables::*;
+
+use crate::config::Parallelism;
+use crate::models::Family;
+use crate::predict::{PieP, PiepOptions};
+use crate::profiler::{Campaign, Dataset};
+use crate::util::table::Table;
+use crate::workload;
+
+/// Shared context: campaign parameters + dataset caches + output sink.
+pub struct ReportCtx {
+    pub campaign: Campaign,
+    pub out_dir: String,
+    pub split_seed: u64,
+    tp: Option<Dataset>,
+    pp: Option<Dataset>,
+    dp: Option<Dataset>,
+}
+
+impl ReportCtx {
+    pub fn new(out_dir: &str, campaign: Campaign) -> Self {
+        ReportCtx {
+            campaign,
+            out_dir: out_dir.to_string(),
+            split_seed: 17,
+            tp: None,
+            pp: None,
+            dp: None,
+        }
+    }
+
+    /// The full tensor-parallel dataset (all families), profiled once.
+    pub fn tp_dataset(&mut self) -> &Dataset {
+        if self.tp.is_none() {
+            let grid = workload::paper_grid_tp(&self.campaign.hw);
+            eprintln!(
+                "[profile] tensor-parallel campaign: {} configs × {} passes",
+                grid.len(),
+                self.campaign.passes
+            );
+            self.tp = Some(self.campaign.profile(&grid));
+        }
+        self.tp.as_ref().unwrap()
+    }
+
+    /// Vicuna pipeline-/data-parallel datasets (Figure 4).
+    pub fn vicuna_dataset(&mut self, parallelism: Parallelism) -> &Dataset {
+        let slot = match parallelism {
+            Parallelism::Pipeline => &mut self.pp,
+            Parallelism::Data => &mut self.dp,
+            Parallelism::Tensor => panic!("use tp_dataset"),
+        };
+        if slot.is_none() {
+            let grid = workload::vicuna_grid(parallelism, &self.campaign.hw);
+            eprintln!(
+                "[profile] vicuna {} campaign: {} configs × {} passes",
+                parallelism.name(),
+                grid.len(),
+                self.campaign.passes
+            );
+            *slot = Some(self.campaign.profile(&grid));
+        }
+        slot.as_ref().unwrap()
+    }
+
+    /// Print the table and persist its CSV.
+    pub fn emit(&self, t: &Table, slug: &str) {
+        print!("{}", t.render());
+        match t.save_csv(&self.out_dir, slug) {
+            Ok(path) => println!("  -> {path}\n"),
+            Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
+        }
+    }
+}
+
+/// Per-family 70/30 split + fitted PIE-P-family models, shared by several
+/// experiments (the Figure-2 protocol: "train a regressor on 70% of
+/// module-level predictions aggregated across all variants").
+pub struct FamilyFit<'a> {
+    pub family: Family,
+    pub train: Vec<crate::simulator::RunRecord>,
+    pub test: Vec<&'a crate::simulator::RunRecord>,
+    pub piep: PieP,
+    pub irene: PieP,
+}
+
+pub fn family_fit<'a>(ds: &'a Dataset, family: Family, split_seed: u64) -> FamilyFit<'a> {
+    let fam_runs: Vec<&crate::simulator::RunRecord> = ds
+        .runs
+        .iter()
+        .filter(|r| r.spec.family == family)
+        .collect();
+    let owned: Vec<crate::simulator::RunRecord> = fam_runs.iter().map(|r| (*r).clone()).collect();
+    let (tr_i, te_i) = crate::eval::split_train_test(&owned, 0.7, split_seed);
+    let train: Vec<crate::simulator::RunRecord> =
+        tr_i.iter().map(|&i| owned[i].clone()).collect();
+    let test: Vec<&crate::simulator::RunRecord> = te_i.iter().map(|&i| fam_runs[i]).collect();
+    let piep = PieP::fit(&train, &ds.sync_db, PiepOptions::default());
+    let irene = PieP::fit(&train, &ds.sync_db, PiepOptions::irene());
+    FamilyFit {
+        family,
+        train,
+        test,
+        piep,
+        irene,
+    }
+}

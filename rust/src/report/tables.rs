@@ -1,0 +1,279 @@
+//! Table harnesses (Tables 2–9 of the paper).
+
+use crate::eval;
+use crate::models::{self, Family, ModuleFlops};
+use crate::predict::nvml_proxy::NvmlProxy;
+use crate::predict::{PieP, PiepOptions};
+use crate::simulator::timeline::ModuleKind;
+use crate::simulator::RunRecord;
+use crate::util::stats::{self, mape};
+use crate::util::table::{fnum, pct, Table};
+
+use super::{family_fit, ReportCtx};
+
+/// Module-level MAPE of a fitted model over test runs, for one module kind.
+fn module_mape(
+    model: &PieP,
+    sync_db: &crate::features::SyncDb,
+    test: &[&RunRecord],
+    kind: ModuleKind,
+) -> Option<f64> {
+    let mut pred = Vec::new();
+    let mut truth = Vec::new();
+    for r in test {
+        if let (Some(p), Some(&t)) = (
+            model.predict_module(r, kind, sync_db),
+            r.module_energy_j.get(&kind),
+        ) {
+            pred.push(p);
+            truth.push(t);
+        }
+    }
+    (!pred.is_empty()).then(|| mape(&pred, &truth))
+}
+
+/// Table 2: transformer-module-level prediction error per family, with the
+/// FLOPs/block and block-complexity columns.
+pub fn table2(ctx: &mut ReportCtx) -> Table {
+    let split_seed = ctx.split_seed;
+    let ds = ctx.tp_dataset();
+    let mut t = Table::new(
+        "Table 2 — module-level MAPE vs block complexity",
+        &["Family", "Module MAPE", "GFLOPs/Block", "Modules/Block"],
+    );
+    for family in Family::ALL {
+        let fit = family_fit(ds, family, split_seed);
+        // Mean over the transformer-block modules (Self-Attn, MLP, Norm).
+        let kinds = [ModuleKind::SelfAttention, ModuleKind::Mlp, ModuleKind::Norm];
+        let mapes: Vec<f64> = kinds
+            .iter()
+            .filter_map(|&k| module_mape(&fit.piep, &ds.sync_db, &fit.test, k))
+            .collect();
+        let smallest = &models::family_variants(family)[0];
+        let desc = match family {
+            Family::Vicuna => "Standard Self-Attn., MLP",
+            Family::Mistral => "Grouped-Query Attn., SwiGLU",
+            Family::Llama => "Rotary Embeddings, RMSNorm",
+            Family::Qwen => "Multi-Query Attn., Rotary",
+        };
+        t.row(vec![
+            family.name().into(),
+            pct(stats::mean(&mapes)),
+            fnum(ModuleFlops::table2_gflops_per_block(smallest), 0),
+            desc.into(),
+        ]);
+    }
+    ctx.emit(&t, "table2");
+    t
+}
+
+/// Table 3: leave-one-out generalization — exclude one model size (or one
+/// batch size) from training, test on it.
+pub fn table3(ctx: &mut ReportCtx) -> Table {
+    let ds = ctx.tp_dataset();
+    let mut t = Table::new(
+        "Table 3 — leave-one-out prediction (variant / batch size held out)",
+        &["Family", "Held out", "MAPE", "n"],
+    );
+    for family in Family::ALL {
+        let fam: Vec<RunRecord> = ds
+            .runs
+            .iter()
+            .filter(|r| r.spec.family == family)
+            .cloned()
+            .collect();
+        for variant in models::family_variants(family) {
+            let (m, _, n) =
+                eval::leave_out_mape(&fam, &ds.sync_db, PiepOptions::default(), |r| {
+                    r.config.model == variant.name
+                });
+            t.row(vec![
+                family.name().into(),
+                variant.name.into(),
+                pct(m),
+                n.to_string(),
+            ]);
+        }
+        for batch in [16usize, 32] {
+            let (m, _, n) =
+                eval::leave_out_mape(&fam, &ds.sync_db, PiepOptions::default(), |r| {
+                    r.config.batch == batch
+                });
+            t.row(vec![
+                family.name().into(),
+                format!("BS-{batch}"),
+                pct(m),
+                n.to_string(),
+            ]);
+        }
+    }
+    ctx.emit(&t, "table3");
+    t
+}
+
+/// Table 4: cross-architecture generalization — exclude an entire family.
+pub fn table4(ctx: &mut ReportCtx) -> Table {
+    let ds = ctx.tp_dataset();
+    let mut t = Table::new(
+        "Table 4 — cross-architecture generalization (family held out)",
+        &["Excluded family", "PIE-P", "IrEne"],
+    );
+    for family in Family::ALL {
+        let (pm, _, _) =
+            eval::leave_out_mape(&ds.runs, &ds.sync_db, PiepOptions::default(), |r| {
+                r.spec.family == family
+            });
+        let (im, _, _) = eval::leave_out_mape(&ds.runs, &ds.sync_db, PiepOptions::irene(), |r| {
+            r.spec.family == family
+        });
+        t.row(vec![family.name().into(), pct(pm), pct(im)]);
+    }
+    ctx.emit(&t, "table4");
+    t
+}
+
+/// Table 5: module-level MAPE per module kind, 2 vs 4 GPUs (Vicuna).
+pub fn table5(ctx: &mut ReportCtx) -> Table {
+    let split_seed = ctx.split_seed;
+    let ds = ctx.tp_dataset();
+    let fit = family_fit(ds, Family::Vicuna, split_seed);
+    let mut t = Table::new(
+        "Table 5 — module-level MAPE, Vicuna (PIE-P)",
+        &["Module", "2 GPUs", "4 GPUs"],
+    );
+    for kind in [
+        ModuleKind::SelfAttention,
+        ModuleKind::Mlp,
+        ModuleKind::AllReduce,
+        ModuleKind::Norm,
+        ModuleKind::Embedding,
+    ] {
+        let cell = |gpus: usize| -> String {
+            let test: Vec<&RunRecord> = fit
+                .test
+                .iter()
+                .copied()
+                .filter(|r| r.config.gpus == gpus)
+                .collect();
+            module_mape(&fit.piep, &ds.sync_db, &test, kind)
+                .map(pct)
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(vec![kind.name().into(), cell(2), cell(4)]);
+    }
+    ctx.emit(&t, "table5");
+    t
+}
+
+/// Table 6: NVML-as-proxy in-sample error per model (global regression, as
+/// a deployment would have: one mapping from NVML energy to wall energy).
+pub fn table6(ctx: &mut ReportCtx) -> Table {
+    let split_seed = ctx.split_seed;
+    let ds = ctx.tp_dataset();
+    let (tr_i, te_i) = eval::split_train_test(&ds.runs, 0.7, split_seed);
+    let train: Vec<RunRecord> = tr_i.iter().map(|&i| ds.runs[i].clone()).collect();
+    let proxy = NvmlProxy::fit(&train);
+    let mut t = Table::new(
+        "Table 6 — NVML-reported GPU energy as a proxy for total energy",
+        &["Model", "MAPE"],
+    );
+    for variant in models::zoo() {
+        let test: Vec<&RunRecord> = te_i
+            .iter()
+            .map(|&i| &ds.runs[i])
+            .filter(|r| r.config.model == variant.name)
+            .collect();
+        if test.is_empty() {
+            continue;
+        }
+        let pred: Vec<f64> = test.iter().map(|r| proxy.predict(r)).collect();
+        let truth: Vec<f64> = test.iter().map(|r| r.meter_total_j).collect();
+        t.row(vec![variant.name.into(), pct(mape(&pred, &truth))]);
+    }
+    ctx.emit(&t, "table6");
+    t
+}
+
+/// Table 7: NVML proxy leave-one-out generalization.
+pub fn table7(ctx: &mut ReportCtx) -> Table {
+    let ds = ctx.tp_dataset();
+    let mut t = Table::new(
+        "Table 7 — NVML proxy leave-one-out generalization",
+        &["Model", "MAPE"],
+    );
+    for variant in models::zoo() {
+        let train: Vec<RunRecord> = ds
+            .runs
+            .iter()
+            .filter(|r| r.spec.family == variant.family && r.config.model != variant.name)
+            .cloned()
+            .collect();
+        let test: Vec<&RunRecord> = ds
+            .runs
+            .iter()
+            .filter(|r| r.config.model == variant.name)
+            .collect();
+        if train.is_empty() || test.is_empty() {
+            continue;
+        }
+        let proxy = NvmlProxy::fit(&train);
+        let pred: Vec<f64> = test.iter().map(|r| proxy.predict(r)).collect();
+        let truth: Vec<f64> = test.iter().map(|r| r.meter_total_j).collect();
+        t.row(vec![variant.name.into(), pct(mape(&pred, &truth))]);
+    }
+    ctx.emit(&t, "table7");
+    t
+}
+
+/// Table 8: cross-architecture generalization with and without waiting.
+pub fn table8(ctx: &mut ReportCtx) -> Table {
+    let ds = ctx.tp_dataset();
+    let mut t = Table::new(
+        "Table 8 — cross-architecture generalization: PIE-P vs w/o waiting",
+        &["Excluded family", "PIE-P", "PIE-P w/o waiting"],
+    );
+    for family in Family::ALL {
+        let (pm, _, _) =
+            eval::leave_out_mape(&ds.runs, &ds.sync_db, PiepOptions::default(), |r| {
+                r.spec.family == family
+            });
+        let (am, _, _) =
+            eval::leave_out_mape(&ds.runs, &ds.sync_db, PiepOptions::without_waiting(), |r| {
+                r.spec.family == family
+            });
+        t.row(vec![family.name().into(), pct(pm), pct(am)]);
+    }
+    ctx.emit(&t, "table8");
+    t
+}
+
+/// Table 9: role of model-structure features (leave-one-variant-out on
+/// Vicuna, with vs without the structural feature group).
+pub fn table9(ctx: &mut ReportCtx) -> Table {
+    let ds = ctx.tp_dataset();
+    let vicuna: Vec<RunRecord> = ds
+        .runs
+        .iter()
+        .filter(|r| r.spec.family == Family::Vicuna)
+        .cloned()
+        .collect();
+    let mut t = Table::new(
+        "Table 9 — ablation: model-structure features (Vicuna LOO)",
+        &["Variant", "With features", "Without features"],
+    );
+    for variant in models::family_variants(Family::Vicuna) {
+        let (with, _, _) =
+            eval::leave_out_mape(&vicuna, &ds.sync_db, PiepOptions::default(), |r| {
+                r.config.model == variant.name
+            });
+        let (without, _, _) = eval::leave_out_mape(
+            &vicuna,
+            &ds.sync_db,
+            PiepOptions::without_struct_features(),
+            |r| r.config.model == variant.name,
+        );
+        t.row(vec![variant.name.into(), pct(with), pct(without)]);
+    }
+    ctx.emit(&t, "table9");
+    t
+}

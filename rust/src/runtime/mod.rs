@@ -1,0 +1,273 @@
+//! PJRT runtime: load the AOT artifacts and execute them from Rust.
+//!
+//! This is the request-path bridge of the three-layer architecture: the
+//! Python side (`make artifacts`) lowered the JAX module forwards (which
+//! call the Pallas kernels) to HLO *text*; here we parse the text with the
+//! `xla` crate, compile once per module on the PJRT CPU client, and execute
+//! with concrete buffers. Python never runs after artifacts exist.
+//!
+//! Two consumers:
+//! * the functional-forward path (`execute`): the end-to-end example runs
+//!   real transformer-module forwards whose tensors correspond to the
+//!   modules the profiler measures;
+//! * the prediction hot path (`predict_batch`): PIE-P's fitted leaf
+//!   regressors are flattened to a weight vector and evaluated for 256
+//!   module instances per PJRT call via the `ridge_predict` executable.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Shape/ABI info for one AOT module.
+#[derive(Debug, Clone)]
+pub struct ModuleInfo {
+    pub name: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub output: Vec<usize>,
+    pub hlo_path: String,
+}
+
+/// A compiled module executable.
+pub struct Compiled {
+    pub info: ModuleInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: client + all compiled module executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub modules: BTreeMap<String, Compiled>,
+    pub feature_dim: usize,
+    pub predict_batch: usize,
+}
+
+fn parse_manifest(dir: &Path) -> Result<(Vec<ModuleInfo>, usize, usize)> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let feature_dim = j
+        .get("feature_dim")
+        .and_then(Json::as_usize)
+        .context("feature_dim")?;
+    let predict_batch = j
+        .get("predict_batch")
+        .and_then(Json::as_usize)
+        .context("predict_batch")?;
+    let modules = j.get("modules").and_then(Json::as_obj).context("modules")?;
+    let mut out = Vec::new();
+    for (name, m) in modules {
+        let inputs = m
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .context("inputs")?
+            .iter()
+            .map(|shape| {
+                shape
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect()
+            })
+            .collect();
+        let output = m
+            .get("output")
+            .and_then(Json::as_arr)
+            .context("output")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let hlo = m.get("hlo").and_then(Json::as_str).context("hlo")?;
+        out.push(ModuleInfo {
+            name: name.clone(),
+            inputs,
+            output,
+            hlo_path: dir.join(hlo).to_string_lossy().into_owned(),
+        });
+    }
+    Ok((out, feature_dim, predict_batch))
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` and compile it on the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let (infos, feature_dim, predict_batch) = parse_manifest(dir)?;
+        if feature_dim != crate::features::FEATURE_DIM {
+            bail!(
+                "artifact ABI mismatch: manifest feature_dim {feature_dim} != crate {}",
+                crate::features::FEATURE_DIM
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let mut modules = BTreeMap::new();
+        for info in infos {
+            let proto = xla::HloModuleProto::from_text_file(&info.hlo_path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            modules.insert(info.name.clone(), Compiled { info, exe });
+        }
+        Ok(Runtime {
+            client,
+            modules,
+            feature_dim,
+            predict_batch,
+        })
+    }
+
+    pub fn module(&self, name: &str) -> Result<&Compiled> {
+        self.modules
+            .get(name)
+            .ok_or_else(|| anyhow!("no AOT module named {name}"))
+    }
+
+    /// Execute a module with f32 input buffers (row-major, shapes per the
+    /// manifest). Returns the flattened f32 output.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let c = self.module(name)?;
+        if inputs.len() != c.info.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                c.info.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&c.info.inputs) {
+            let n: usize = shape.iter().product();
+            if buf.len() != n {
+                bail!("{name}: input length {} != shape {:?}", buf.len(), shape);
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = c.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Random (seeded) f32 inputs matching a module's signature — used by
+    /// the examples/benches to exercise the functional path.
+    pub fn random_inputs(&self, name: &str, seed: u64, scale: f32) -> Result<Vec<Vec<f32>>> {
+        let c = self.module(name)?;
+        let mut rng = Rng::new(seed);
+        Ok(c.info
+            .inputs
+            .iter()
+            .map(|shape| rng.f32_vec(shape.iter().product(), scale))
+            .collect())
+    }
+
+    /// Batched ridge prediction on the PJRT path: evaluates `w·x + b` for
+    /// up to `predict_batch` feature rows per call (rows padded with
+    /// zeros). Returns one raw prediction per input row.
+    pub fn predict_batch(&self, features: &[Vec<f64>], w: &[f64], b: f64) -> Result<Vec<f64>> {
+        if w.len() != self.feature_dim {
+            bail!("weight length {} != feature_dim {}", w.len(), self.feature_dim);
+        }
+        let mut out = Vec::with_capacity(features.len());
+        let wf: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+        for chunk in features.chunks(self.predict_batch) {
+            let mut x = vec![0.0f32; self.predict_batch * self.feature_dim];
+            for (i, row) in chunk.iter().enumerate() {
+                if row.len() != self.feature_dim {
+                    bail!("feature row length {} != {}", row.len(), self.feature_dim);
+                }
+                for (j, &v) in row.iter().enumerate() {
+                    x[i * self.feature_dim + j] = v as f32;
+                }
+            }
+            let y = self.execute("ridge_predict", &[x, wf.clone(), vec![b as f32]])?;
+            out.extend(y[..chunk.len()].iter().map(|&v| v as f64));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (infos, fd, pb) = parse_manifest(&dir).unwrap();
+        assert_eq!(fd, crate::features::FEATURE_DIM);
+        assert_eq!(pb, 256);
+        let names: Vec<&str> = infos.iter().map(|i| i.name.as_str()).collect();
+        for want in ["self_attention", "mlp", "rmsnorm", "logits_head", "block", "ridge_predict"] {
+            assert!(names.contains(&want), "{want}");
+        }
+    }
+
+    #[test]
+    fn runtime_loads_and_executes_all_modules() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        for name in ["rmsnorm", "mlp", "self_attention", "block", "logits_head"] {
+            let inputs = rt.random_inputs(name, 7, 0.05).unwrap();
+            let out = rt.execute(name, &inputs).unwrap();
+            let expect: usize = rt.module(name).unwrap().info.output.iter().product();
+            assert_eq!(out.len(), expect, "{name}");
+            assert!(out.iter().all(|v| v.is_finite()), "{name} finite");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_numerics_match_reference() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        let info = rt.module("rmsnorm").unwrap().info.clone();
+        let (b, s, d) = (info.inputs[0][0], info.inputs[0][1], info.inputs[0][2]);
+        let mut rng = Rng::new(3);
+        let x = rng.f32_vec(b * s * d, 1.0);
+        let gain = vec![1.0f32; d];
+        let out = rt.execute("rmsnorm", &[x.clone(), gain]).unwrap();
+        // Row-wise RMS of the output must be ≈ 1 for unit gain.
+        for row in 0..b * s {
+            let xs = &out[row * d..(row + 1) * d];
+            let rms = (xs.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / d as f64).sqrt();
+            assert!((rms - 1.0).abs() < 1e-2, "row {row}: rms={rms}");
+        }
+    }
+
+    #[test]
+    fn predict_batch_matches_cpu_math() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        let mut rng = Rng::new(5);
+        let rows: Vec<Vec<f64>> = (0..300)
+            .map(|_| (0..rt.feature_dim).map(|_| rng.range(-1.0, 1.0)).collect())
+            .collect();
+        let w: Vec<f64> = (0..rt.feature_dim).map(|_| rng.range(-0.5, 0.5)).collect();
+        let b = 0.25;
+        let got = rt.predict_batch(&rows, &w, b).unwrap();
+        assert_eq!(got.len(), 300);
+        for (row, &g) in rows.iter().zip(&got) {
+            let want: f64 = b + row.iter().zip(&w).map(|(x, wi)| x * wi).sum::<f64>();
+            assert!((g - want).abs() < 1e-4, "{g} vs {want}");
+        }
+    }
+}

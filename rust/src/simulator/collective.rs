@@ -1,0 +1,187 @@
+//! Inter-GPU communication time models (Appendix B, D, E of the paper).
+//!
+//! Ring AllReduce: 2(n−1) steps (ReduceScatter then AllGather), each moving
+//! payload/n bytes per rank over the slowest link, plus per-step launch/DMA
+//! latency and a per-call base latency. AllGather: (n−1) steps. P2P: single
+//! hop. These are the standard α–β cost models (Xiong et al., 2024), with
+//! the constants in `HwSpec`.
+
+use crate::config::HwSpec;
+
+/// Decomposition of one collective call on one rank.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveCost {
+    /// Time driving the interconnect, s.
+    pub transfer_s: f64,
+    /// Number of ring steps (for telemetry/features).
+    pub steps: usize,
+    /// Bytes this rank moves in total.
+    pub bytes_moved: f64,
+}
+
+/// Ring AllReduce of `payload` bytes across `n` ranks.
+pub fn allreduce(hw: &HwSpec, n: usize, payload: f64) -> CollectiveCost {
+    assert!(n >= 1);
+    if n == 1 {
+        return CollectiveCost {
+            transfer_s: 0.0,
+            steps: 0,
+            bytes_moved: 0.0,
+        };
+    }
+    let steps = 2 * (n - 1);
+    let chunk = payload / n as f64;
+    let bytes_moved = chunk * steps as f64;
+    let transfer_s = hw.coll_base_latency
+        + steps as f64 * (hw.link_step_latency + chunk / hw.link_bw);
+    CollectiveCost {
+        transfer_s,
+        steps,
+        bytes_moved,
+    }
+}
+
+/// Ring AllGather: each rank contributes `payload` bytes; n−1 steps.
+pub fn allgather(hw: &HwSpec, n: usize, payload_per_rank: f64) -> CollectiveCost {
+    assert!(n >= 1);
+    if n == 1 {
+        return CollectiveCost {
+            transfer_s: 0.0,
+            steps: 0,
+            bytes_moved: 0.0,
+        };
+    }
+    let steps = n - 1;
+    let bytes_moved = payload_per_rank * steps as f64;
+    let transfer_s = hw.coll_base_latency
+        + steps as f64 * (hw.link_step_latency + payload_per_rank / hw.link_bw);
+    CollectiveCost {
+        transfer_s,
+        steps,
+        bytes_moved,
+    }
+}
+
+/// Interleaved bidirectional ring AllReduce (IBing-style, Zong et al. 2025,
+/// cited by the paper): the payload is split across both ring directions,
+/// halving the per-step chunk at the cost of a slightly higher per-step
+/// latency. Used by the collective-algorithm ablation (`piep ablate`).
+pub fn allreduce_bidirectional(hw: &HwSpec, n: usize, payload: f64) -> CollectiveCost {
+    assert!(n >= 1);
+    if n == 1 {
+        return CollectiveCost {
+            transfer_s: 0.0,
+            steps: 0,
+            bytes_moved: 0.0,
+        };
+    }
+    let steps = 2 * (n - 1);
+    // Each direction carries payload/2; chunks move concurrently.
+    let chunk = payload / (2.0 * n as f64);
+    let bytes_moved = 2.0 * chunk * steps as f64;
+    let transfer_s = hw.coll_base_latency
+        + steps as f64 * (1.25 * hw.link_step_latency + chunk / hw.link_bw);
+    CollectiveCost {
+        transfer_s,
+        steps,
+        bytes_moved,
+    }
+}
+
+/// Point-to-point transfer of `payload` bytes between adjacent stages.
+pub fn p2p(hw: &HwSpec, payload: f64) -> CollectiveCost {
+    CollectiveCost {
+        transfer_s: hw.coll_base_latency + hw.link_step_latency + payload / hw.link_bw,
+        steps: 1,
+        bytes_moved: payload,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HwSpec {
+        HwSpec::default()
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let c = allreduce(&hw(), 1, 1e6);
+        assert_eq!(c.transfer_s, 0.0);
+        assert_eq!(allgather(&hw(), 1, 1e6).transfer_s, 0.0);
+    }
+
+    #[test]
+    fn allreduce_steps_2n_minus_2() {
+        assert_eq!(allreduce(&hw(), 2, 1e6).steps, 2);
+        assert_eq!(allreduce(&hw(), 4, 1e6).steps, 6);
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_matches_2nm1_over_n() {
+        // For large payloads the time tends to 2(n-1)/n * payload / bw.
+        let h = hw();
+        let payload = 1e9;
+        let c = allreduce(&h, 4, payload);
+        let ideal = 2.0 * 3.0 / 4.0 * payload / h.link_bw;
+        assert!((c.transfer_s - ideal).abs() / ideal < 0.01, "{}", c.transfer_s);
+    }
+
+    #[test]
+    fn latency_dominates_small_payloads() {
+        // The paper's key TP effect: per-call latency makes many small
+        // AllReduces expensive even when payloads are tiny.
+        let h = hw();
+        let small = allreduce(&h, 4, 64.0 * 1024.0);
+        let latency_floor = h.coll_base_latency + 6.0 * h.link_step_latency;
+        assert!(small.transfer_s > latency_floor);
+        assert!(small.transfer_s < 2.0 * latency_floor + 1e-3);
+    }
+
+    #[test]
+    fn more_ranks_more_time_at_fixed_payload() {
+        let h = hw();
+        let t2 = allreduce(&h, 2, 1e6).transfer_s;
+        let t4 = allreduce(&h, 4, 1e6).transfer_s;
+        assert!(t4 > t2);
+    }
+
+    #[test]
+    fn p2p_single_hop() {
+        let h = hw();
+        let c = p2p(&h, 1e6);
+        assert_eq!(c.steps, 1);
+        assert!(c.transfer_s > 1e6 / h.link_bw);
+    }
+
+    #[test]
+    fn allgather_cheaper_than_allreduce() {
+        let h = hw();
+        assert!(allgather(&h, 4, 1e6).transfer_s < allreduce(&h, 4, 4e6).transfer_s);
+    }
+
+    #[test]
+    fn bidirectional_wins_large_payloads_loses_small() {
+        let h = hw();
+        // Large payload: bandwidth-bound, halved chunks win.
+        let big = 64e6;
+        assert!(
+            allreduce_bidirectional(&h, 4, big).transfer_s < allreduce(&h, 4, big).transfer_s
+        );
+        // Tiny payload: latency-bound, the extra per-step cost loses.
+        let small = 8.0 * 1024.0;
+        assert!(
+            allreduce_bidirectional(&h, 4, small).transfer_s
+                > allreduce(&h, 4, small).transfer_s
+        );
+    }
+
+    #[test]
+    fn bidirectional_preserves_total_bytes() {
+        let h = hw();
+        let a = allreduce(&h, 4, 1e6);
+        let b = allreduce_bidirectional(&h, 4, 1e6);
+        assert!((a.bytes_moved - b.bytes_moved).abs() < 1e-6);
+    }
+}

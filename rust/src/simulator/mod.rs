@@ -1,0 +1,19 @@
+//! Multi-GPU LLM inference substrate: a deterministic, seeded simulator of
+//! the paper's testbed (DESIGN.md §2, §7).
+//!
+//! The simulator produces, for one inference run, a *timeline* of
+//! power-annotated phases per GPU (compute / synchronization-wait /
+//! transfer / idle), from which the telemetry layer derives everything the
+//! paper measures: wall-meter system energy, NVML GPU energy, utilization
+//! counters, and the fine-grained module windows PIE-P's profiler
+//! timestamps.
+
+pub mod collective;
+pub mod perf;
+pub mod power;
+pub mod run;
+pub mod skew;
+pub mod timeline;
+
+pub use run::{simulate_run, RunRecord};
+pub use timeline::{ModuleKind, Phase, PhaseKind, Timeline};

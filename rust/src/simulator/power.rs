@@ -1,0 +1,137 @@
+//! System power model (DESIGN.md §7).
+//!
+//! Total wall power = PSU(CPU + DRAM + Σ GPU). GPU board power is a state
+//! machine parameterized by the phase kind and the module's arithmetic
+//! utilization; CPU power follows host-side driver/serving activity.
+
+use crate::config::HwSpec;
+use crate::simulator::timeline::PhaseKind;
+
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub hw: HwSpec,
+    /// Run-level thermal drift multiplier on GPU power (sampled per run).
+    pub thermal_mult: f64,
+    /// Run-level multiplier on busy-wait power (NCCL spin/yield mix).
+    pub wait_mult: f64,
+}
+
+impl PowerModel {
+    pub fn new(hw: &HwSpec) -> Self {
+        PowerModel {
+            hw: hw.clone(),
+            thermal_mult: 1.0,
+            wait_mult: 1.0,
+        }
+    }
+
+    /// GPU board power for a phase. `util` is the module's arithmetic
+    /// utilization in [0,1] (compute-bound prefill ≈ 0.9, memory-bound
+    /// decode ≈ 0.5).
+    pub fn gpu_power(&self, kind: PhaseKind, util: f64) -> f64 {
+        let hw = &self.hw;
+        let p = match kind {
+            PhaseKind::Compute => {
+                hw.gpu_idle_w + util.clamp(0.0, 1.0) * (hw.gpu_tdp_w - hw.gpu_idle_w)
+            }
+            PhaseKind::Wait => hw.gpu_wait_w * self.wait_mult,
+            PhaseKind::Transfer => hw.gpu_comm_w,
+            PhaseKind::Idle => hw.gpu_idle_w,
+        };
+        p * self.thermal_mult
+    }
+
+    /// CPU package power given a host activity fraction in [0,1].
+    pub fn cpu_power(&self, activity: f64) -> f64 {
+        self.hw.cpu_idle_w + activity.clamp(0.0, 1.0) * (self.hw.cpu_max_w - self.hw.cpu_idle_w)
+    }
+
+    /// DRAM/board power given the same activity fraction.
+    pub fn dram_power(&self, activity: f64) -> f64 {
+        self.hw.dram_base_w + activity.clamp(0.0, 1.0) * self.hw.dram_active_w
+    }
+
+    /// Wall power from a subtotal (adds PSU conversion loss + base).
+    pub fn wall_from_subtotal(&self, subtotal_w: f64) -> f64 {
+        self.hw.psu_base_w + subtotal_w * (1.0 + self.hw.psu_loss_frac)
+    }
+
+    /// Host (non-GPU) wall-side power for a given activity level: CPU +
+    /// DRAM + PSU base; the proportional PSU loss on the GPU side is
+    /// applied by the caller via `wall_from_subtotal`.
+    pub fn host_power(&self, activity: f64) -> f64 {
+        self.cpu_power(activity) + self.dram_power(activity)
+    }
+
+    /// Host activity fraction for a run: driven by kernel-launch pressure
+    /// (decode steps/s × layers × GPUs) and serving-layer work (batch).
+    /// Matches the intuition that multi-GPU runs keep the host busier.
+    pub fn host_activity(&self, gpus: usize, batch: usize, steps_per_s: f64, layers: usize) -> f64 {
+        let launch_rate = steps_per_s * layers as f64 * gpus as f64; // kernels/s
+        let launch_load = (launch_rate / 60_000.0).min(1.0); // ~60k launches/s saturates a core pool
+        let serving_load = (batch as f64 / 256.0).min(0.3);
+        (0.08 + 0.75 * launch_load + serving_load).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pm() -> PowerModel {
+        PowerModel::new(&HwSpec::default())
+    }
+
+    #[test]
+    fn gpu_power_ordering() {
+        let p = pm();
+        let idle = p.gpu_power(PhaseKind::Idle, 0.0);
+        let wait = p.gpu_power(PhaseKind::Wait, 0.0);
+        let comm = p.gpu_power(PhaseKind::Transfer, 0.0);
+        let decode = p.gpu_power(PhaseKind::Compute, 0.5);
+        let prefill = p.gpu_power(PhaseKind::Compute, 0.9);
+        assert!(idle < wait && wait <= comm && comm < decode && decode < prefill);
+        assert!(prefill <= p.hw.gpu_tdp_w);
+    }
+
+    #[test]
+    fn util_clamped() {
+        let p = pm();
+        assert_eq!(
+            p.gpu_power(PhaseKind::Compute, 1.5),
+            p.gpu_power(PhaseKind::Compute, 1.0)
+        );
+        assert_eq!(
+            p.gpu_power(PhaseKind::Compute, -1.0),
+            p.gpu_power(PhaseKind::Idle, 0.0)
+        );
+    }
+
+    #[test]
+    fn thermal_drift_scales_gpu_only() {
+        let mut p = pm();
+        let base = p.gpu_power(PhaseKind::Compute, 0.5);
+        let cpu = p.cpu_power(0.5);
+        p.thermal_mult = 1.1;
+        assert!((p.gpu_power(PhaseKind::Compute, 0.5) - base * 1.1).abs() < 1e-9);
+        assert_eq!(p.cpu_power(0.5), cpu);
+    }
+
+    #[test]
+    fn host_activity_monotone_in_gpus() {
+        let p = pm();
+        let a2 = p.host_activity(2, 8, 60.0, 32);
+        let a4 = p.host_activity(4, 8, 60.0, 32);
+        assert!(a4 > a2);
+        assert!(a2 > 0.0 && a4 <= 1.0);
+    }
+
+    #[test]
+    fn wall_power_adds_overhead() {
+        let p = pm();
+        let w = p.wall_from_subtotal(500.0);
+        assert!(w > 500.0);
+        let expect = p.hw.psu_base_w + 500.0 * (1.0 + p.hw.psu_loss_frac);
+        assert!((w - expect).abs() < 1e-9);
+    }
+}

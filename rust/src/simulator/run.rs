@@ -1,0 +1,421 @@
+//! Run orchestration: RunConfig → planner → timeline → telemetry →
+//! `RunRecord`, the unit record the profiler and feature pipeline consume.
+//!
+//! Decode extrapolation: the planner simulates `SimKnobs::sim_decode_steps`
+//! representative decode steps (KV contexts spread across the output
+//! length); aggregate decode quantities are scaled to the full `seq_out`.
+//! This mirrors the paper's own sampling-based profiling (Appendix L) and
+//! keeps a full profiling campaign tractable.
+
+use std::collections::BTreeMap;
+
+use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use crate::models::{self, ModelSpec};
+use crate::parallelism::{self, BuiltRun};
+use crate::simulator::power::PowerModel;
+use crate::simulator::timeline::{ModuleKind, PhaseKind};
+use crate::telemetry;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Everything measured about one profiled inference run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub config: RunConfig,
+    pub spec: ModelSpec,
+
+    // --- timing ---
+    /// Full-run wall time after extrapolation, s.
+    pub wall_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    /// Generated tokens (batch × seq_out).
+    pub tokens_out: usize,
+
+    // --- ground-truth energy (wall-referenced, J) ---
+    pub true_total_j: f64,
+    pub gpu_energy_j: f64,
+    pub host_energy_j: f64,
+    /// Exact per-module energy attribution (communication modules split
+    /// below), wall-referenced.
+    pub module_energy_j: BTreeMap<ModuleKind, f64>,
+    pub module_time_s: BTreeMap<ModuleKind, f64>,
+    /// AllReduce energy split: (waiting phase, network transfer), J.
+    pub allreduce_split_j: (f64, f64),
+
+    // --- instruments ---
+    /// Wall-meter measurement (training ground truth), J.
+    pub meter_total_j: f64,
+    /// NVML per-GPU energies, J.
+    pub nvml_gpu_j: Vec<f64>,
+    pub nvml_total_j: f64,
+
+    // --- runtime features (Table 1) ---
+    pub gpu_util: Vec<f64>,
+    pub gpu_mem_util: Vec<f64>,
+    pub gpu_clock_ghz: Vec<f64>,
+    pub gpu_mem_clock_ghz: Vec<f64>,
+    pub cpu_util_pct: f64,
+    pub cpu_mem_util_pct: f64,
+    pub cpu_clock_ghz: f64,
+    pub cpu_mem_clock_ghz: f64,
+    /// Resident bytes per GPU (mean).
+    pub mem_bytes: f64,
+
+    // --- synchronization sampling ---
+    /// Raw per-sync per-rank wait durations, s (simulated window).
+    pub wait_samples: Vec<f64>,
+    pub wait_mean_s: f64,
+    pub wait_std_s: f64,
+    pub wait_max_s: f64,
+
+    // --- comm descriptors ---
+    pub comm_bytes_per_step: f64,
+    pub host_activity: f64,
+}
+
+impl RunRecord {
+    /// Energy per generated token, J.
+    pub fn energy_per_token_j(&self) -> f64 {
+        self.true_total_j / self.tokens_out.max(1) as f64
+    }
+
+    /// Decode latency per generated token (per-sequence), s.
+    pub fn time_per_token_s(&self) -> f64 {
+        self.decode_s / self.config.seq_out.max(1) as f64
+    }
+
+    /// Total communication energy (AllReduce + P2P + AllGather), J.
+    pub fn comm_energy_j(&self) -> f64 {
+        ModuleKind::ALL
+            .iter()
+            .filter(|m| m.is_comm())
+            .map(|m| self.module_energy_j.get(m).copied().unwrap_or(0.0))
+            .sum()
+    }
+}
+
+/// Simulate one run. Panics if the model does not fit the configuration
+/// (callers use `models::ModelSpec::fits_tp` to build valid grids).
+pub fn simulate_run(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord {
+    let spec = models::by_name(&cfg.model)
+        .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
+
+    // Seed stream: decorrelate across configs and passes.
+    let mut key_hash = 0xcbf29ce484222325u64;
+    for b in cfg.key().bytes() {
+        key_hash = (key_hash ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    let mut rng = Rng::new(cfg.seed ^ key_hash);
+
+    // Run-level stochastic conditions.
+    let mut power = PowerModel::new(hw);
+    power.thermal_mult = rng.lognormal_mean_cv(1.0, knobs.thermal_cv);
+    power.wait_mult = rng.lognormal_mean_cv(1.0, knobs.wait_power_cv);
+    let interference = if rng.chance(knobs.interference_p) {
+        rng.range(knobs.interference_frac.0, knobs.interference_frac.1)
+    } else {
+        0.0
+    };
+
+    // Plan + simulate.
+    let built: BuiltRun = match cfg.parallelism {
+        Parallelism::Tensor => parallelism::tensor::build(&spec, hw, knobs, cfg, &power, &mut rng),
+        Parallelism::Pipeline => {
+            parallelism::pipeline::build(&spec, hw, knobs, cfg, &power, &mut rng)
+        }
+        Parallelism::Data => parallelism::data::build(&spec, hw, knobs, cfg, &power, &mut rng),
+    };
+    let tl = &built.timeline;
+    let g = cfg.gpus;
+
+    // ---- split prefill vs decode, scale decode to full seq_out ----
+    let scale = cfg.seq_out as f64 / built.sim_steps as f64;
+    let prefill_s = built.prefill_end;
+    let decode_sim_s = (tl.makespan() - built.prefill_end).max(0.0);
+    let decode_s = decode_sim_s * scale;
+    let wall_s = prefill_s + decode_s;
+
+    // Per-module and per-GPU energies with decode scaling. Dense arrays
+    // indexed by ModuleKind::idx on the per-phase hot loop (EXPERIMENTS.md
+    // §Perf); converted to maps once at the end.
+    let mut module_gpu_arr = [0.0f64; 8];
+    let mut module_time_arr = [0.0f64; 8];
+    let mut gpu_j = vec![0.0f64; g];
+    let mut ar_wait = 0.0f64;
+    let mut ar_xfer = 0.0f64;
+    let mut busy_time = 0.0f64;
+    for p in &tl.phases {
+        let s = if p.step == 0 { 1.0 } else { scale };
+        let e = p.energy_j() * s;
+        gpu_j[p.gpu as usize] += e;
+        if p.kind == PhaseKind::Idle {
+            continue;
+        }
+        let mi = p.module.idx();
+        module_gpu_arr[mi] += e;
+        module_time_arr[mi] += p.dur() * s;
+        busy_time += p.dur() * s;
+        if p.module == ModuleKind::AllReduce {
+            match p.kind {
+                PhaseKind::Wait => ar_wait += e,
+                PhaseKind::Transfer => ar_xfer += e,
+                _ => {}
+            }
+        }
+    }
+    let mut module_gpu_j: BTreeMap<ModuleKind, f64> = BTreeMap::new();
+    let mut module_time: BTreeMap<ModuleKind, f64> = BTreeMap::new();
+    for kind in ModuleKind::ALL {
+        let mi = kind.idx();
+        if module_time_arr[mi] > 0.0 {
+            module_gpu_j.insert(kind, module_gpu_arr[mi]);
+            module_time.insert(kind, module_time_arr[mi]);
+        }
+    }
+    let gpu_energy_j: f64 = gpu_j.iter().sum();
+
+    // ---- host side ----
+    let steps_per_s = if decode_s > 0.0 {
+        cfg.seq_out as f64 / decode_s
+    } else {
+        0.0
+    };
+    let host_activity = (power.host_activity(g, cfg.batch, steps_per_s, spec.layers)
+        + interference)
+        .clamp(0.0, 1.0);
+    let host_power_w = power.host_power(host_activity);
+    let host_energy_j = host_power_w * wall_s;
+
+    // Background host work (other tenants / daemons): drawn on the wall
+    // meter, invisible to the Table-1 feature channels — the substrate's
+    // irreducible-error source (DESIGN.md §7).
+    let background_w = if rng.chance(knobs.background_p) {
+        rng.exponential(knobs.background_mean_w).min(250.0)
+    } else {
+        0.0
+    };
+    let background_j = background_w * wall_s;
+
+    // ---- wall-referenced totals (PSU overhead) ----
+    let loss = 1.0 + hw.psu_loss_frac;
+    let true_total_j =
+        hw.psu_base_w * wall_s + loss * (gpu_energy_j + host_energy_j + background_j);
+
+    // Wall-referenced module attribution: GPU part scaled by PSU loss, host
+    // + PSU base spread over modules by busy-time share.
+    let overhead_j = host_energy_j * loss + hw.psu_base_w * wall_s;
+    let mut module_energy_j = BTreeMap::new();
+    for (m, e) in &module_gpu_j {
+        let tshare = module_time.get(m).copied().unwrap_or(0.0) / busy_time.max(1e-12);
+        module_energy_j.insert(*m, e * loss + overhead_j * tshare);
+    }
+    let ar_total_gpu = ar_wait + ar_xfer;
+    let ar_overhead = if ar_total_gpu > 0.0 {
+        module_energy_j
+            .get(&ModuleKind::AllReduce)
+            .copied()
+            .unwrap_or(0.0)
+            - ar_total_gpu * loss
+    } else {
+        0.0
+    };
+    // Split AllReduce wall energy proportionally between wait and transfer.
+    let allreduce_split_j = if ar_total_gpu > 0.0 {
+        let w = ar_wait * loss + ar_overhead * ar_wait / ar_total_gpu;
+        let x = ar_xfer * loss + ar_overhead * ar_xfer / ar_total_gpu;
+        (w, x)
+    } else {
+        (0.0, 0.0)
+    };
+
+    // ---- instruments ----
+    let (_pmean, pcv) = tl.power_mean_cv();
+    let meter = telemetry::meter::measure(hw, knobs, true_total_j, wall_s, pcv, &mut rng);
+    // GPU-side energy fraction in brief sync/transfer states (NVML's slow
+    // telemetry undercounts it).
+    let comm_gpu_j: f64 = ModuleKind::ALL
+        .iter()
+        .filter(|m| m.is_comm())
+        .map(|m| module_gpu_j.get(m).copied().unwrap_or(0.0))
+        .sum();
+    let comm_frac = comm_gpu_j / gpu_energy_j.max(1e-9);
+    let nvml = telemetry::nvml::measure(hw, knobs, &gpu_j, wall_s, pcv, comm_frac, &mut rng);
+
+    // ---- runtime features ----
+    let gpu_util = tl.busy_fraction();
+    let kv_bytes_total = (cfg.batch * (cfg.seq_in + cfg.seq_out)) as f64
+        * 2.0
+        * spec.kv_heads as f64
+        * spec.head_dim() as f64
+        * spec.dtype_bytes as f64
+        * spec.layers as f64;
+    let (weights_per_gpu, kv_per_gpu) = match cfg.parallelism {
+        Parallelism::Tensor => (
+            spec.weight_bytes_per_gpu_tp(g),
+            kv_bytes_total / g as f64,
+        ),
+        Parallelism::Pipeline => (
+            spec.param_count() * spec.dtype_bytes as f64 / g as f64,
+            kv_bytes_total / g as f64,
+        ),
+        Parallelism::Data => (
+            spec.param_count() * spec.dtype_bytes as f64,
+            kv_bytes_total / g as f64,
+        ),
+    };
+    let gpu_mem_util: Vec<f64> = (0..g)
+        .map(|_| {
+            ((weights_per_gpu + kv_per_gpu) / hw.vram_bytes * rng.lognormal_mean_cv(1.0, 0.005))
+                .clamp(0.0, 1.0)
+        })
+        .collect();
+    let gpu_clock_ghz: Vec<f64> = gpu_util
+        .iter()
+        .map(|u| hw.gpu_clock_ghz * (1.03 - 0.08 * u) * rng.lognormal_mean_cv(1.0, 0.008))
+        .collect();
+    let gpu_mem_clock_ghz: Vec<f64> = (0..g)
+        .map(|_| hw.gpu_mem_clock_ghz * rng.lognormal_mean_cv(1.0, 0.002))
+        .collect();
+    let procfs = telemetry::procfs::measure(
+        hw,
+        host_activity,
+        cfg.batch,
+        spec.param_count() * spec.dtype_bytes as f64,
+        &mut rng,
+    );
+
+    // ---- sync sampling stats ----
+    let wait_mean_s = stats::mean(&built.wait_samples);
+    let wait_std_s = stats::std_dev(&built.wait_samples);
+    let wait_max_s = if built.wait_samples.is_empty() {
+        0.0
+    } else {
+        stats::max(&built.wait_samples)
+    };
+
+    RunRecord {
+        config: cfg.clone(),
+        spec,
+        wall_s,
+        prefill_s,
+        decode_s,
+        tokens_out: cfg.batch * cfg.seq_out,
+        true_total_j,
+        gpu_energy_j,
+        host_energy_j,
+        module_energy_j,
+        module_time_s: module_time,
+        allreduce_split_j,
+        meter_total_j: meter.energy_j,
+        nvml_gpu_j: nvml.gpu_energy_j,
+        nvml_total_j: nvml.total_j,
+        gpu_util,
+        gpu_mem_util,
+        gpu_clock_ghz,
+        gpu_mem_clock_ghz,
+        cpu_util_pct: procfs.cpu_util_pct,
+        cpu_mem_util_pct: procfs.cpu_mem_util_pct,
+        cpu_clock_ghz: procfs.cpu_clock_ghz,
+        cpu_mem_clock_ghz: procfs.cpu_mem_clock_ghz,
+        mem_bytes: weights_per_gpu + kv_per_gpu,
+        wait_samples: built.wait_samples,
+        wait_mean_s,
+        wait_std_s,
+        wait_max_s,
+        comm_bytes_per_step: built.comm_bytes_per_step,
+        host_activity,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(model: &str, par: Parallelism, g: usize, batch: usize, seed: u64) -> RunRecord {
+        let cfg = RunConfig::new(model, par, g, batch).with_seed(seed);
+        simulate_run(&cfg, &HwSpec::default(), &SimKnobs::default())
+    }
+
+    #[test]
+    fn totals_are_consistent() {
+        let r = run("Vicuna-7B", Parallelism::Tensor, 2, 8, 1);
+        assert!(r.true_total_j > r.gpu_energy_j, "wall > gpu side");
+        // Module attribution sums to ≈ total minus GPU idle slack.
+        let module_sum: f64 = r.module_energy_j.values().sum();
+        assert!(module_sum <= r.true_total_j * 1.001);
+        assert!(module_sum > 0.6 * r.true_total_j, "modules cover most energy");
+    }
+
+    #[test]
+    fn meter_close_to_truth_nvml_below() {
+        let r = run("Vicuna-7B", Parallelism::Tensor, 2, 8, 2);
+        let meter_err = (r.meter_total_j - r.true_total_j).abs() / r.true_total_j;
+        assert!(meter_err < 0.2, "meter_err={meter_err}");
+        // NVML misses host+PSU: far below wall truth.
+        assert!(r.nvml_total_j < 0.85 * r.true_total_j);
+        assert!(r.nvml_total_j > 0.2 * r.true_total_j);
+    }
+
+    #[test]
+    fn tp_has_allreduce_energy_pp_has_p2p_dp_has_allgather() {
+        let tp = run("Vicuna-7B", Parallelism::Tensor, 2, 8, 3);
+        assert!(tp.module_energy_j[&ModuleKind::AllReduce] > 0.0);
+        let pp = run("Vicuna-7B", Parallelism::Pipeline, 2, 8, 3);
+        assert!(pp.module_energy_j[&ModuleKind::P2PTransfer] > 0.0);
+        assert!(!pp.module_energy_j.contains_key(&ModuleKind::AllReduce));
+        let dp = run("Vicuna-7B", Parallelism::Data, 2, 8, 3);
+        assert!(dp.module_energy_j[&ModuleKind::AllGather] > 0.0);
+    }
+
+    #[test]
+    fn allreduce_split_sums_to_module_energy() {
+        let r = run("Vicuna-13B", Parallelism::Tensor, 4, 16, 4);
+        let (w, x) = r.allreduce_split_j;
+        let total = r.module_energy_j[&ModuleKind::AllReduce];
+        assert!((w + x - total).abs() / total < 1e-6, "{w}+{x} vs {total}");
+        assert!(w > 0.0 && x > 0.0);
+    }
+
+    #[test]
+    fn more_gpus_lower_time_per_token() {
+        let r2 = run("Vicuna-13B", Parallelism::Tensor, 2, 8, 5);
+        let r4 = run("Vicuna-13B", Parallelism::Tensor, 4, 8, 5);
+        assert!(r4.time_per_token_s() < r2.time_per_token_s());
+    }
+
+    #[test]
+    fn repeated_passes_vary_but_not_wildly() {
+        let energies: Vec<f64> = (0..10)
+            .map(|s| run("Vicuna-7B", Parallelism::Tensor, 2, 8, s).true_total_j)
+            .collect();
+        let cv = stats::std_dev(&energies) / stats::mean(&energies);
+        assert!(cv > 0.01, "non-determinism must be visible, cv={cv}");
+        assert!(cv < 0.5, "but bounded, cv={cv}");
+    }
+
+    #[test]
+    fn bigger_model_more_energy() {
+        let small = run("Vicuna-7B", Parallelism::Tensor, 4, 8, 6);
+        let big = run("Vicuna-33B", Parallelism::Tensor, 4, 8, 6);
+        assert!(big.true_total_j > small.true_total_j);
+    }
+
+    #[test]
+    fn wait_stats_populated_under_tp() {
+        let r = run("Mistral-8B", Parallelism::Tensor, 4, 8, 7);
+        assert!(!r.wait_samples.is_empty());
+        assert!(r.wait_mean_s > 0.0);
+        assert!(r.wait_max_s >= r.wait_mean_s);
+    }
+
+    #[test]
+    fn features_have_expected_shapes() {
+        let r = run("Qwen-8B", Parallelism::Tensor, 4, 8, 8);
+        assert_eq!(r.gpu_util.len(), 4);
+        assert_eq!(r.gpu_mem_util.len(), 4);
+        assert_eq!(r.gpu_clock_ghz.len(), 4);
+        assert!(r.cpu_util_pct > 0.0);
+        assert!(r.mem_bytes > 0.0);
+    }
+}

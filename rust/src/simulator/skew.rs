@@ -1,0 +1,162 @@
+//! Rank-skew / non-determinism model.
+//!
+//! The paper's central measurement challenge (Section 3): GPUs lead/lag
+//! each other through compute phases because of memory-access variation,
+//! caching effects, and hardware scheduling, so collectives begin with a
+//! non-deterministic waiting phase. We model per-(rank, step, module)
+//! compute durations as lognormal around the deterministic performance
+//! model, with occasional heavy-tailed stragglers.
+
+use crate::config::SimKnobs;
+use crate::simulator::timeline::ModuleKind;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SkewModel {
+    pub compute_cv: f64,
+    pub straggler_p: f64,
+    pub straggler_scale: (f64, f64),
+    /// Per-rank persistent speed bias (silicon lottery / slot cooling):
+    /// multiplier per rank, sampled once per run.
+    rank_bias: Vec<f64>,
+    /// Run-level duration bias of the complex block modules (attention,
+    /// MLP): caching state and access-pattern irregularity persist within
+    /// a run and scale with the architecture's complexity factor — this is
+    /// what makes Mistral/Qwen modules harder to predict (paper Table 2).
+    attn_bias: f64,
+    mlp_bias: f64,
+    /// Precomputed lognormal sigma for `compute_cv` (hot path: one
+    /// `exp` per sample instead of two `ln` + `sqrt` + `exp`).
+    sigma: f64,
+}
+
+impl SkewModel {
+    pub fn new(knobs: &SimKnobs, num_gpus: usize, rng: &mut Rng) -> Self {
+        Self::with_complexity(knobs, num_gpus, 1.0, rng)
+    }
+
+    /// `complexity` scales the transient jitter (see
+    /// `ModelSpec::complexity_factor`): irregular attention/MLP variants
+    /// skew more at synchronization points.
+    pub fn with_complexity(
+        knobs: &SimKnobs,
+        num_gpus: usize,
+        complexity: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        // Persistent rank bias: the same GPU tends to lag all run long,
+        // which is what makes synchronization sampling informative.
+        let rank_bias = (0..num_gpus)
+            .map(|_| rng.lognormal_mean_cv(1.0, knobs.rank_bias_cv))
+            .collect();
+        let module_cv = 0.45 * (complexity - 1.0).max(0.0);
+        let compute_cv = knobs.compute_cv * complexity;
+        SkewModel {
+            compute_cv,
+            straggler_p: knobs.straggler_p,
+            straggler_scale: knobs.straggler_scale,
+            rank_bias,
+            attn_bias: rng.lognormal_mean_cv(1.0, module_cv),
+            mlp_bias: rng.lognormal_mean_cv(1.0, module_cv * 0.8),
+            sigma: (1.0 + compute_cv * compute_cv).ln().sqrt(),
+        }
+    }
+
+    /// Run-level duration multiplier for a module kind.
+    pub fn module_mult(&self, module: ModuleKind) -> f64 {
+        match module {
+            ModuleKind::SelfAttention => self.attn_bias,
+            ModuleKind::Mlp => self.mlp_bias,
+            _ => 1.0,
+        }
+    }
+
+    /// Sample a compute duration with the module-kind bias applied.
+    pub fn sample_module(
+        &self,
+        nominal: f64,
+        rank: usize,
+        module: ModuleKind,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.sample(nominal * self.module_mult(module), rank, rng)
+    }
+
+    /// Sample the actual duration of a compute phase with nominal duration
+    /// `nominal` on `rank`.
+    #[inline]
+    pub fn sample(&self, nominal: f64, rank: usize, rng: &mut Rng) -> f64 {
+        let mut t = nominal * rng.lognormal_factor(self.sigma) * self.rank_bias[rank];
+        if rng.chance(self.straggler_p) {
+            t *= rng.range(self.straggler_scale.0, self.straggler_scale.1);
+        }
+        t
+    }
+
+    pub fn rank_bias(&self, rank: usize) -> f64 {
+        self.rank_bias[rank]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(seed: u64) -> (SkewModel, Rng) {
+        let mut rng = Rng::new(seed);
+        let m = SkewModel::new(&SimKnobs::default(), 4, &mut rng);
+        (m, rng)
+    }
+
+    #[test]
+    fn mean_preserved_approximately() {
+        let (m, mut rng) = model(1);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| m.sample(1.0, 0, &mut rng)).sum::<f64>() / n as f64;
+        // Stragglers push the mean slightly above 1.0; persistent rank
+        // bias (cv ≈ 8%) widens the band.
+        assert!((0.85..1.25).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn samples_positive() {
+        let (m, mut rng) = model(2);
+        for _ in 0..10_000 {
+            assert!(m.sample(1e-3, rng.below(4), &mut rng) > 0.0);
+        }
+    }
+
+    #[test]
+    fn stragglers_produce_heavy_tail() {
+        let (m, mut rng) = model(3);
+        let n = 100_000;
+        let big = (0..n)
+            .filter(|_| m.sample(1.0, 1, &mut rng) > 1.35)
+            .count();
+        // straggler_p = 0.6% with scale ≥1.4 ⇒ expect roughly that rate.
+        let rate = big as f64 / n as f64;
+        assert!(rate > 0.002 && rate < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn rank_bias_is_persistent_and_near_one() {
+        let (m, _) = model(4);
+        for r in 0..4 {
+            let b = m.rank_bias(r);
+            assert!((0.7..1.4).contains(&b));
+            assert_eq!(b, m.rank_bias(r));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (m1, mut r1) = model(7);
+        let (m2, mut r2) = model(7);
+        for i in 0..100 {
+            assert_eq!(
+                m1.sample(1.0, i % 4, &mut r1),
+                m2.sample(1.0, i % 4, &mut r2)
+            );
+        }
+    }
+}

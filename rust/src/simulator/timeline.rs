@@ -1,0 +1,484 @@
+//! Power-annotated execution timelines.
+//!
+//! A `Timeline` is the ground-truth record of one simulated run: per GPU, a
+//! contiguous sequence of phases, each with a start/end time, a board power
+//! draw, and a module tag. All energies derive from exact integration over
+//! phases; the telemetry layer (meter/NVML) then *samples* the same
+//! timeline the way real instruments would.
+
+use std::collections::BTreeMap;
+
+/// Model-tree leaf module kinds, including the communication modules PIE-P
+/// adds to IrEne's abstraction (AllReduce / P2PTransfer / AllGather).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModuleKind {
+    Embedding,
+    Norm,
+    SelfAttention,
+    Mlp,
+    LogitsHead,
+    /// Tensor-parallel ring AllReduce (ReduceScatter + AllGather phases).
+    AllReduce,
+    /// Pipeline-parallel point-to-point stage transfer.
+    P2PTransfer,
+    /// Data-parallel terminal output collation.
+    AllGather,
+}
+
+impl ModuleKind {
+    pub const ALL: [ModuleKind; 8] = [
+        ModuleKind::Embedding,
+        ModuleKind::Norm,
+        ModuleKind::SelfAttention,
+        ModuleKind::Mlp,
+        ModuleKind::LogitsHead,
+        ModuleKind::AllReduce,
+        ModuleKind::P2PTransfer,
+        ModuleKind::AllGather,
+    ];
+
+    /// Dense index (0..8) for array-based aggregation on hot paths.
+    #[inline]
+    pub fn idx(&self) -> usize {
+        match self {
+            ModuleKind::Embedding => 0,
+            ModuleKind::Norm => 1,
+            ModuleKind::SelfAttention => 2,
+            ModuleKind::Mlp => 3,
+            ModuleKind::LogitsHead => 4,
+            ModuleKind::AllReduce => 5,
+            ModuleKind::P2PTransfer => 6,
+            ModuleKind::AllGather => 7,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModuleKind::Embedding => "LLMEmbedding",
+            ModuleKind::Norm => "LayerNorm/RMSNorm",
+            ModuleKind::SelfAttention => "Self-Attention",
+            ModuleKind::Mlp => "MLP",
+            ModuleKind::LogitsHead => "LogitsHead",
+            ModuleKind::AllReduce => "AllReduce",
+            ModuleKind::P2PTransfer => "P2PTransfer",
+            ModuleKind::AllGather => "AllGather",
+        }
+    }
+
+    /// Is this one of PIE-P's communication modules?
+    pub fn is_comm(&self) -> bool {
+        matches!(
+            self,
+            ModuleKind::AllReduce | ModuleKind::P2PTransfer | ModuleKind::AllGather
+        )
+    }
+}
+
+/// What the GPU is doing during a phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseKind {
+    Compute,
+    /// Blocked at a synchronization point waiting for peers (the paper's
+    /// non-deterministic "waiting phase").
+    Wait,
+    /// Driving the interconnect (ring step / P2P send-recv).
+    Transfer,
+    Idle,
+}
+
+/// One contiguous activity interval on one GPU.
+#[derive(Debug, Clone, Copy)]
+pub struct Phase {
+    pub gpu: u16,
+    pub kind: PhaseKind,
+    pub module: ModuleKind,
+    pub layer: u16,
+    pub step: u32,
+    pub t0: f64,
+    pub t1: f64,
+    /// Board power during the phase, W.
+    pub power_w: f64,
+}
+
+impl Phase {
+    pub fn dur(&self) -> f64 {
+        self.t1 - self.t0
+    }
+    pub fn energy_j(&self) -> f64 {
+        self.dur() * self.power_w
+    }
+}
+
+/// Builder + container for a run's phases.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub num_gpus: usize,
+    pub phases: Vec<Phase>,
+    /// Per-GPU logical clock (s).
+    clocks: Vec<f64>,
+    /// Per-GPU idle power used to backfill gaps.
+    idle_w: f64,
+}
+
+impl Timeline {
+    pub fn new(num_gpus: usize, idle_w: f64) -> Self {
+        Timeline {
+            num_gpus,
+            phases: Vec::new(),
+            clocks: vec![0.0; num_gpus],
+            idle_w,
+        }
+    }
+
+    pub fn clock(&self, gpu: usize) -> f64 {
+        self.clocks[gpu]
+    }
+
+    /// Append a phase on `gpu` starting at its current clock.
+    pub fn push(
+        &mut self,
+        gpu: usize,
+        kind: PhaseKind,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        dur: f64,
+        power_w: f64,
+    ) {
+        debug_assert!(dur >= 0.0, "negative phase duration {dur}");
+        let t0 = self.clocks[gpu];
+        let t1 = t0 + dur;
+        self.clocks[gpu] = t1;
+        if dur > 0.0 {
+            self.phases.push(Phase {
+                gpu: gpu as u16,
+                kind,
+                module,
+                layer,
+                step,
+                t0,
+                t1,
+                power_w,
+            });
+        }
+    }
+
+    /// Advance `gpu`'s clock to `t`, recording an idle phase for the gap.
+    pub fn idle_until(&mut self, gpu: usize, t: f64, module: ModuleKind, step: u32) {
+        let now = self.clocks[gpu];
+        if t > now {
+            self.push(gpu, PhaseKind::Idle, module, 0, step, t - now, self.idle_w);
+        }
+    }
+
+    /// Advance `gpu`'s clock to `t`, recording a synchronization *wait*
+    /// phase (elevated busy-spin power, attributed to `module`).
+    pub fn wait_until(
+        &mut self,
+        gpu: usize,
+        t: f64,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        wait_w: f64,
+    ) -> f64 {
+        let now = self.clocks[gpu];
+        let waited = (t - now).max(0.0);
+        if waited > 0.0 {
+            self.push(gpu, PhaseKind::Wait, module, layer, step, waited, wait_w);
+        }
+        waited
+    }
+
+    /// Wall-clock of the run (max GPU clock).
+    pub fn makespan(&self) -> f64 {
+        self.clocks.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Pad every GPU with idle time to the makespan so all GPUs cover the
+    /// same interval (as on the real machine where the meter sees them all).
+    pub fn finalize(&mut self) {
+        let end = self.makespan();
+        for g in 0..self.num_gpus {
+            self.idle_until(g, end, ModuleKind::Embedding, u32::MAX);
+        }
+    }
+
+    /// Exact GPU-side energy (J), all phases.
+    pub fn gpu_energy_j(&self) -> f64 {
+        self.phases.iter().map(|p| p.energy_j()).sum()
+    }
+
+    /// Exact per-GPU energy (J).
+    pub fn gpu_energy_per_gpu(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.num_gpus];
+        for p in &self.phases {
+            out[p.gpu as usize] += p.energy_j();
+        }
+        out
+    }
+
+    /// Exact GPU energy grouped by module tag (J).
+    pub fn energy_by_module(&self) -> BTreeMap<ModuleKind, f64> {
+        let mut out = BTreeMap::new();
+        for p in &self.phases {
+            if p.kind == PhaseKind::Idle {
+                continue;
+            }
+            *out.entry(p.module).or_insert(0.0) += p.energy_j();
+        }
+        out
+    }
+
+    /// Busy time grouped by module tag (GPU-seconds, waits included).
+    pub fn time_by_module(&self) -> BTreeMap<ModuleKind, f64> {
+        let mut out = BTreeMap::new();
+        for p in &self.phases {
+            if p.kind == PhaseKind::Idle {
+                continue;
+            }
+            *out.entry(p.module).or_insert(0.0) += p.dur();
+        }
+        out
+    }
+
+    /// Energy split of a communication module into (wait, transfer) — the
+    /// paper's synchronization-sampling decomposition.
+    pub fn comm_split_j(&self, module: ModuleKind) -> (f64, f64) {
+        let mut wait = 0.0;
+        let mut xfer = 0.0;
+        for p in self.phases.iter().filter(|p| p.module == module) {
+            match p.kind {
+                PhaseKind::Wait => wait += p.energy_j(),
+                PhaseKind::Transfer => xfer += p.energy_j(),
+                _ => {}
+            }
+        }
+        (wait, xfer)
+    }
+
+    /// Per-GPU utilization: fraction of the run spent executing compute or
+    /// copy kernels. Synchronization busy-waits are excluded — nvidia-smi's
+    /// utilization counter tracks SM occupancy by real kernels, which is
+    /// why utilization dips on sync-heavy configurations (a signal the
+    /// Table-1 features rely on).
+    pub fn busy_fraction(&self) -> Vec<f64> {
+        let span = self.makespan().max(1e-12);
+        let mut busy = vec![0.0; self.num_gpus];
+        for p in &self.phases {
+            if matches!(p.kind, PhaseKind::Compute | PhaseKind::Transfer) {
+                busy[p.gpu as usize] += p.dur();
+            }
+        }
+        busy.iter().map(|b| (b / span).min(1.0)).collect()
+    }
+
+    /// Time-weighted mean and coefficient of variation of the *total* GPU
+    /// power signal over the run — used by the sampling telemetry to model
+    /// aliasing error without replaying every sample. Sweep over phase
+    /// boundaries maintaining the sum of active powers.
+    pub fn power_mean_cv(&self) -> (f64, f64) {
+        let base = self.idle_w * self.num_gpus as f64;
+        if self.phases.is_empty() {
+            return (base, 0.0);
+        }
+        // Per-GPU phase index lists. Phases are pushed in nondecreasing
+        // time order *per GPU* by construction, so instead of sorting all
+        // 2n boundary events (O(n log n), the former hot spot of
+        // simulate_run — see EXPERIMENTS.md §Perf) we k-way merge the g
+        // already-sorted streams with simple cursors (g ≤ 4).
+        let mut per: Vec<Vec<u32>> = vec![Vec::new(); self.num_gpus];
+        for (i, p) in self.phases.iter().enumerate() {
+            per[p.gpu as usize].push(i as u32);
+        }
+        let mut cursor = vec![0usize; self.num_gpus];
+        // Current board power per GPU (idle until its first phase).
+        let mut gpu_power = vec![self.idle_w; self.num_gpus];
+        let mut power: f64 = base;
+        let mut last_t = 0.0f64;
+        let (mut e1, mut e2, mut total_t) = (0.0f64, 0.0f64, 0.0f64);
+        loop {
+            // Next boundary: the earliest un-entered phase start across GPUs.
+            let mut next_t = f64::INFINITY;
+            let mut next_g = usize::MAX;
+            for g in 0..self.num_gpus {
+                if let Some(&pi) = per[g].get(cursor[g]) {
+                    let t0 = self.phases[pi as usize].t0;
+                    if t0 < next_t {
+                        next_t = t0;
+                        next_g = g;
+                    }
+                }
+            }
+            if next_g == usize::MAX {
+                break;
+            }
+            let dt = next_t - last_t;
+            if dt > 0.0 {
+                e1 += power * dt;
+                e2 += power * power * dt;
+                total_t += dt;
+            }
+            let ph = &self.phases[per[next_g][cursor[next_g]] as usize];
+            power += ph.power_w - gpu_power[next_g];
+            gpu_power[next_g] = ph.power_w;
+            cursor[next_g] += 1;
+            last_t = next_t;
+            // Handle a trailing gap after this GPU's last phase: phases per
+            // GPU are contiguous, so the next start is also the previous
+            // end; only the final makespan tail needs closing below.
+        }
+        // Close the interval to the makespan with the last powers.
+        let end = self.makespan();
+        let dt = end - last_t;
+        if dt > 0.0 {
+            e1 += power * dt;
+            e2 += power * power * dt;
+            total_t += dt;
+        }
+        if total_t <= 0.0 {
+            return (base, 0.0);
+        }
+        let mean = e1 / total_t;
+        let var = (e2 / total_t - mean * mean).max(0.0);
+        (mean, var.sqrt() / mean.max(1e-9))
+    }
+
+    /// Instantaneous total GPU power at time `t` (W). Phases per GPU are
+    /// contiguous and time-ordered per construction; this scans with a
+    /// cursor and is only used by the sampling telemetry.
+    pub fn power_at(&self, t: f64) -> f64 {
+        let mut total = 0.0;
+        let mut seen = vec![false; self.num_gpus];
+        for p in &self.phases {
+            if p.t0 <= t && t < p.t1 {
+                total += p.power_w;
+                seen[p.gpu as usize] = true;
+            }
+        }
+        for s in seen {
+            if !s {
+                total += self.idle_w;
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> Timeline {
+        Timeline::new(2, 20.0)
+    }
+
+    #[test]
+    fn clocks_advance_and_energy_integrates() {
+        let mut tl = mk();
+        tl.push(0, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 2.0, 100.0);
+        tl.push(1, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 1.0, 100.0);
+        assert_eq!(tl.clock(0), 2.0);
+        assert_eq!(tl.clock(1), 1.0);
+        assert_eq!(tl.gpu_energy_j(), 300.0);
+    }
+
+    #[test]
+    fn wait_until_records_wait_phase() {
+        let mut tl = mk();
+        tl.push(0, PhaseKind::Compute, ModuleKind::SelfAttention, 0, 0, 2.0, 150.0);
+        tl.push(1, PhaseKind::Compute, ModuleKind::SelfAttention, 0, 0, 1.0, 150.0);
+        let w = tl.wait_until(1, 2.0, ModuleKind::AllReduce, 0, 0, 95.0);
+        assert!((w - 1.0).abs() < 1e-12);
+        let (wait_j, xfer_j) = tl.comm_split_j(ModuleKind::AllReduce);
+        assert!((wait_j - 95.0).abs() < 1e-12);
+        assert_eq!(xfer_j, 0.0);
+        // GPU 0 waited zero.
+        assert_eq!(tl.wait_until(0, 2.0, ModuleKind::AllReduce, 0, 0, 95.0), 0.0);
+    }
+
+    #[test]
+    fn finalize_pads_to_makespan() {
+        let mut tl = mk();
+        tl.push(0, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 3.0, 100.0);
+        tl.push(1, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 1.0, 100.0);
+        tl.finalize();
+        assert_eq!(tl.clock(1), 3.0);
+        // Idle energy for the 2s gap at 20 W.
+        assert!((tl.gpu_energy_j() - (400.0 + 40.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_by_module_excludes_idle() {
+        let mut tl = mk();
+        tl.push(0, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 1.0, 100.0);
+        tl.finalize();
+        let by = tl.energy_by_module();
+        assert_eq!(by.len(), 1);
+        assert!((by[&ModuleKind::Mlp] - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_at_sums_active_gpus() {
+        let mut tl = mk();
+        tl.push(0, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 2.0, 100.0);
+        tl.push(1, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 1.0, 150.0);
+        assert!((tl.power_at(0.5) - 250.0).abs() < 1e-12);
+        // After GPU 1 finished: its idle power counts.
+        assert!((tl.power_at(1.5) - 120.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_mean_cv_matches_reference_sweep() {
+        // Reference: sort-based boundary sweep (the pre-optimization
+        // implementation, kept here as the correctness oracle).
+        fn reference(tl: &Timeline) -> (f64, f64) {
+            let mut evs: Vec<(f64, f64)> = Vec::new();
+            for p in &tl.phases {
+                evs.push((p.t0, p.power_w - tl.idle_w));
+                evs.push((p.t1, -(p.power_w - tl.idle_w)));
+            }
+            evs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let base = tl.idle_w * tl.num_gpus as f64;
+            let mut power = base;
+            let mut last_t = evs[0].0;
+            let (mut e1, mut e2, mut tt) = (0.0, 0.0, 0.0);
+            for (t, dp) in evs {
+                let dt = t - last_t;
+                if dt > 0.0 {
+                    e1 += power * dt;
+                    e2 += power * power * dt;
+                    tt += dt;
+                }
+                power += dp;
+                last_t = t;
+            }
+            let mean = e1 / tt;
+            ((mean), ((e2 / tt - mean * mean).max(0.0)).sqrt() / mean)
+        }
+        let mut tl = mk();
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..200 {
+            let g = rng.below(2);
+            let dur = rng.range(0.001, 0.1);
+            let pw = rng.range(20.0, 300.0);
+            tl.push(g, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, dur, pw);
+        }
+        tl.finalize();
+        let (m_fast, cv_fast) = tl.power_mean_cv();
+        let (m_ref, cv_ref) = reference(&tl);
+        assert!((m_fast - m_ref).abs() / m_ref < 1e-9, "{m_fast} vs {m_ref}");
+        assert!((cv_fast - cv_ref).abs() < 1e-9, "{cv_fast} vs {cv_ref}");
+    }
+
+    #[test]
+    fn busy_fraction_bounds() {
+        let mut tl = mk();
+        tl.push(0, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 4.0, 100.0);
+        tl.push(1, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 2.0, 100.0);
+        tl.finalize();
+        let b = tl.busy_fraction();
+        assert!((b[0] - 1.0).abs() < 1e-9);
+        assert!((b[1] - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,89 @@
+//! External wall-power meter simulation (Watts Up Pro class).
+//!
+//! The meter integrates true system power but at a coarse sampling
+//! interval, so fast power transitions alias. We model the measured total
+//! as `true × (1 + ε)` with ε combining per-sample reading noise and the
+//! aliasing error implied by the power signal's coefficient of variation
+//! and the number of samples taken over the run.
+
+use crate::config::{HwSpec, SimKnobs};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct MeterReading {
+    /// Measured total system energy over the run, J.
+    pub energy_j: f64,
+    /// Number of samples the meter took.
+    pub samples: usize,
+    /// Mean measured wall power, W.
+    pub mean_power_w: f64,
+}
+
+/// Simulate a wall-meter measurement of a run.
+///
+/// * `true_energy_j` — exact wall-side energy of the run.
+/// * `wall_s` — run duration.
+/// * `power_cv` — coefficient of variation of the instantaneous power
+///   signal (from `Timeline::power_mean_cv`).
+pub fn measure(
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    true_energy_j: f64,
+    wall_s: f64,
+    power_cv: f64,
+    rng: &mut Rng,
+) -> MeterReading {
+    let samples = ((wall_s / hw.meter_interval_s).floor() as usize).max(1);
+    // Reading noise shrinks with averaging; aliasing error shrinks with
+    // sample count relative to signal variability.
+    let rel_std = (knobs.meter_noise.powi(2) + power_cv.powi(2) / samples as f64).sqrt();
+    let energy_j = true_energy_j * (1.0 + rng.normal_ms(0.0, rel_std));
+    MeterReading {
+        energy_j: energy_j.max(0.0),
+        samples,
+        mean_power_w: energy_j / wall_s.max(1e-9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_close_to_truth_for_long_runs() {
+        let hw = HwSpec::default();
+        let knobs = SimKnobs::default();
+        let mut rng = Rng::new(1);
+        let mut errs = Vec::new();
+        for _ in 0..200 {
+            let r = measure(&hw, &knobs, 10_000.0, 60.0, 0.3, &mut rng);
+            errs.push((r.energy_j - 10_000.0).abs() / 10_000.0);
+        }
+        let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean_err < 0.05, "mean_err={mean_err}");
+    }
+
+    #[test]
+    fn short_runs_noisier() {
+        let hw = HwSpec::default();
+        let knobs = SimKnobs::default();
+        let spread = |wall: f64| {
+            let mut rng = Rng::new(7);
+            let xs: Vec<f64> = (0..500)
+                .map(|_| measure(&hw, &knobs, 1000.0, wall, 0.4, &mut rng).energy_j)
+                .collect();
+            crate::util::stats::std_dev(&xs)
+        };
+        assert!(spread(2.0) > spread(120.0));
+    }
+
+    #[test]
+    fn sample_count_floor() {
+        let hw = HwSpec::default();
+        let knobs = SimKnobs::default();
+        let mut rng = Rng::new(2);
+        let r = measure(&hw, &knobs, 100.0, 0.2, 0.1, &mut rng);
+        assert_eq!(r.samples, 1);
+        assert!(r.energy_j > 0.0);
+    }
+}

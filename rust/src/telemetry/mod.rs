@@ -1,0 +1,18 @@
+//! Instrument simulations: the three ways the paper observes energy.
+//!
+//! * `meter` — the external Watts Up Pro wall meter: sees *everything*
+//!   (GPUs + CPU + DRAM + PSU losses) but samples slowly (1 Hz) and with
+//!   reading noise. This is the ground-truth instrument for training.
+//! * `nvml` — NVIDIA NVML board power: GPU-only (systematically misses
+//!   host/PSU energy), polls at ~10 Hz, small reading bias. The paper's
+//!   Appendices G/H show why it is a poor proxy; our CodeCarbon and
+//!   NVML-proxy baselines consume this channel.
+//! * `procfs` — Linux procfs-style CPU/memory utilization counters.
+
+pub mod meter;
+pub mod nvml;
+pub mod procfs;
+
+pub use meter::MeterReading;
+pub use nvml::NvmlReading;
+pub use procfs::ProcfsReading;

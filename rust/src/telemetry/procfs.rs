@@ -1,0 +1,78 @@
+//! Host-side procfs/psutil-style counters: CPU utilization, CPU memory,
+//! clock speeds. Derived from the simulator's host-activity level with
+//! reading jitter, these populate the CPU rows of the Table-1 feature set.
+
+use crate::config::HwSpec;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ProcfsReading {
+    /// CPU utilization, percent of all cores.
+    pub cpu_util_pct: f64,
+    /// CPU (host) memory utilization, percent.
+    pub cpu_mem_util_pct: f64,
+    /// Effective CPU clock, GHz (governor scales with load).
+    pub cpu_clock_ghz: f64,
+    /// Memory clock, GHz.
+    pub cpu_mem_clock_ghz: f64,
+}
+
+pub fn measure(
+    hw: &HwSpec,
+    host_activity: f64,
+    batch: usize,
+    model_bytes: f64,
+    rng: &mut Rng,
+) -> ProcfsReading {
+    let cpu_util_pct = (100.0 * host_activity * rng.lognormal_mean_cv(1.0, 0.03)).clamp(0.0, 100.0);
+    // Host RAM: weights staged at load + serving buffers per request.
+    let host_ram_bytes = 256.0 * (1u64 << 30) as f64;
+    let used = 0.08 * host_ram_bytes + model_bytes * 0.15 + batch as f64 * 64e6;
+    let cpu_mem_util_pct = (100.0 * used / host_ram_bytes).clamp(0.0, 100.0)
+        * rng.lognormal_mean_cv(1.0, 0.02);
+    // Governor: clocks rise with activity.
+    let cpu_clock_ghz = hw.cpu_clock_ghz * (0.85 + 0.25 * host_activity)
+        * rng.lognormal_mean_cv(1.0, 0.01);
+    ProcfsReading {
+        cpu_util_pct,
+        cpu_mem_util_pct,
+        cpu_clock_ghz,
+        cpu_mem_clock_ghz: hw.cpu_mem_clock_ghz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_in_range() {
+        let hw = HwSpec::default();
+        let mut rng = Rng::new(1);
+        for act in [0.0, 0.3, 0.8, 1.0] {
+            let r = measure(&hw, act, 32, 14e9, &mut rng);
+            assert!((0.0..=100.0).contains(&r.cpu_util_pct));
+            assert!((0.0..=100.0).contains(&r.cpu_mem_util_pct));
+            assert!(r.cpu_clock_ghz > 0.0);
+        }
+    }
+
+    #[test]
+    fn higher_activity_higher_util_and_clock() {
+        let hw = HwSpec::default();
+        let mut rng = Rng::new(2);
+        let lo = measure(&hw, 0.1, 8, 14e9, &mut rng);
+        let hi = measure(&hw, 0.9, 8, 14e9, &mut rng);
+        assert!(hi.cpu_util_pct > lo.cpu_util_pct);
+        assert!(hi.cpu_clock_ghz > lo.cpu_clock_ghz);
+    }
+
+    #[test]
+    fn bigger_models_more_host_memory() {
+        let hw = HwSpec::default();
+        let mut rng = Rng::new(3);
+        let small = measure(&hw, 0.5, 8, 14e9, &mut rng).cpu_mem_util_pct;
+        let big = measure(&hw, 0.5, 8, 140e9, &mut rng).cpu_mem_util_pct;
+        assert!(big > small);
+    }
+}

@@ -1,0 +1,200 @@
+//! PIE-P's expanded model-tree abstraction (Section 4, Appendix A/B).
+//!
+//! IrEne's model tree captures the computational structure of the model;
+//! PIE-P expands it with dedicated *communication modules* at the precise
+//! synchronization points of each parallelism strategy:
+//!
+//! * tensor: an `AllReduce` node after the self-attention output projection
+//!   and after the MLP, inside every block; an `AllGather` at the
+//!   vocab-parallel logits head;
+//! * pipeline: `P2PTransfer` nodes at each stage boundary;
+//! * data: a terminal `AllGather` (batch-output module).
+//!
+//! Because every transformer block is structurally identical, the tree
+//! stores one `Block` child with a *multiplicity* equal to the layer count
+//! (and boundary counts for P2P) — an exactly equivalent collapsed form of
+//! the paper's per-block tree, since combiner weights are shared by node
+//! kind (Eq. 1 applies `W` to each child's features, not per layer).
+
+use crate::config::Parallelism;
+use crate::models::ModelSpec;
+use crate::simulator::timeline::ModuleKind;
+
+/// A node of the model tree.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub kind: NodeKind,
+    /// How many times this node occurs under its parent.
+    pub multiplicity: f64,
+    pub children: Vec<Node>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    Root,
+    Block,
+    Leaf(ModuleKind),
+}
+
+impl Node {
+    fn leaf(kind: ModuleKind, multiplicity: f64) -> Node {
+        Node {
+            kind: NodeKind::Leaf(kind),
+            multiplicity,
+            children: Vec::new(),
+        }
+    }
+
+    /// All leaf (kind, total multiplicity from the root) pairs.
+    pub fn leaf_multiplicities(&self) -> Vec<(ModuleKind, f64)> {
+        fn walk(n: &Node, mult: f64, out: &mut Vec<(ModuleKind, f64)>) {
+            let m = mult * n.multiplicity;
+            match n.kind {
+                NodeKind::Leaf(k) => out.push((k, m)),
+                _ => {
+                    for c in &n.children {
+                        walk(c, m, out);
+                    }
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(self, 1.0, &mut out);
+        out
+    }
+
+    pub fn count_nodes(&self) -> usize {
+        1 + self.children.iter().map(Node::count_nodes).sum::<usize>()
+    }
+}
+
+/// Build the model tree for a (model, parallelism, degree) configuration.
+/// `include_comm = false` reproduces IrEne's original abstraction (the
+/// baseline that omits inter-GPU collectives).
+pub fn build(spec: &ModelSpec, parallelism: Parallelism, gpus: usize, include_comm: bool) -> Node {
+    let mut block_children = vec![
+        Node::leaf(ModuleKind::Norm, 2.0),
+        Node::leaf(ModuleKind::SelfAttention, 1.0),
+        Node::leaf(ModuleKind::Mlp, 1.0),
+    ];
+    let mut root_children = vec![Node::leaf(ModuleKind::Embedding, 1.0)];
+
+    let comm = include_comm && gpus > 1;
+    if comm && parallelism == Parallelism::Tensor {
+        // After attention out-projection and after the MLP (Section 4).
+        block_children.push(Node::leaf(ModuleKind::AllReduce, 2.0));
+    }
+
+    root_children.push(Node {
+        kind: NodeKind::Block,
+        multiplicity: spec.layers as f64,
+        children: block_children,
+    });
+    root_children.push(Node::leaf(ModuleKind::LogitsHead, 1.0));
+
+    if comm {
+        match parallelism {
+            Parallelism::Tensor => {
+                // Vocab-parallel logits collation.
+                root_children.push(Node::leaf(ModuleKind::AllGather, 1.0));
+            }
+            Parallelism::Pipeline => {
+                // One transfer node per stage boundary.
+                root_children.push(Node::leaf(ModuleKind::P2PTransfer, (gpus - 1) as f64));
+            }
+            Parallelism::Data => {
+                // The batch-output module: terminal collation (Appendix E).
+                root_children.push(Node::leaf(ModuleKind::AllGather, 1.0));
+            }
+        }
+    }
+
+    Node {
+        kind: NodeKind::Root,
+        multiplicity: 1.0,
+        children: root_children,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+
+    #[test]
+    fn tensor_tree_has_allreduce_inside_blocks() {
+        let spec = by_name("Vicuna-7B").unwrap();
+        let tree = build(&spec, Parallelism::Tensor, 2, true);
+        let leaves = tree.leaf_multiplicities();
+        let ar = leaves
+            .iter()
+            .find(|(k, _)| *k == ModuleKind::AllReduce)
+            .unwrap();
+        // 2 AllReduces per block × 32 blocks.
+        assert_eq!(ar.1, 64.0);
+        assert!(leaves.iter().any(|(k, _)| *k == ModuleKind::AllGather));
+    }
+
+    #[test]
+    fn irene_tree_has_no_comm_nodes() {
+        let spec = by_name("Vicuna-7B").unwrap();
+        let tree = build(&spec, Parallelism::Tensor, 4, false);
+        assert!(!tree
+            .leaf_multiplicities()
+            .iter()
+            .any(|(k, _)| k.is_comm()));
+    }
+
+    #[test]
+    fn single_gpu_tree_has_no_comm_nodes() {
+        let spec = by_name("Vicuna-7B").unwrap();
+        let tree = build(&spec, Parallelism::Tensor, 1, true);
+        assert!(!tree
+            .leaf_multiplicities()
+            .iter()
+            .any(|(k, _)| k.is_comm()));
+    }
+
+    #[test]
+    fn pipeline_tree_has_boundary_transfers() {
+        let spec = by_name("Llama-70B").unwrap();
+        let tree = build(&spec, Parallelism::Pipeline, 4, true);
+        let p2p = tree
+            .leaf_multiplicities()
+            .into_iter()
+            .find(|(k, _)| *k == ModuleKind::P2PTransfer)
+            .unwrap();
+        assert_eq!(p2p.1, 3.0);
+    }
+
+    #[test]
+    fn data_tree_has_single_terminal_allgather() {
+        let spec = by_name("Vicuna-13B").unwrap();
+        let tree = build(&spec, Parallelism::Data, 4, true);
+        let ag = tree
+            .leaf_multiplicities()
+            .into_iter()
+            .find(|(k, _)| *k == ModuleKind::AllGather)
+            .unwrap();
+        assert_eq!(ag.1, 1.0);
+    }
+
+    #[test]
+    fn norm_multiplicity_two_per_block() {
+        let spec = by_name("Qwen-14B").unwrap();
+        let tree = build(&spec, Parallelism::Tensor, 2, true);
+        let norm = tree
+            .leaf_multiplicities()
+            .into_iter()
+            .find(|(k, _)| *k == ModuleKind::Norm)
+            .unwrap();
+        assert_eq!(norm.1, 2.0 * spec.layers as f64);
+    }
+
+    #[test]
+    fn node_counts_reasonable() {
+        let spec = by_name("Vicuna-7B").unwrap();
+        let t = build(&spec, Parallelism::Tensor, 2, true);
+        assert!(t.count_nodes() >= 7);
+    }
+}

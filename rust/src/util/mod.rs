@@ -1,0 +1,9 @@
+//! Self-contained utility layer (the offline image has no access to the
+//! usual crates — see Cargo.toml).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

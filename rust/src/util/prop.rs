@@ -1,0 +1,218 @@
+//! Minimal property-testing harness (no proptest on this offline image).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` against `cases` generated
+//! inputs; on failure it performs a bounded shrink search (halving numeric
+//! fields via the `Shrink` impl) and panics with the minimal failing case.
+
+use crate::util::rng::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate smaller values, roughly ordered most-aggressive first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.abs() > 1e-9 {
+            out.push(self / 2.0);
+            out.push(0.0);
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink, D: Shrink> Shrink for (A, B, C, D) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone(), self.3.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone(), self.3.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c, self.3.clone())),
+        );
+        out.extend(
+            self.3
+                .shrink()
+                .into_iter()
+                .map(|d| (self.0.clone(), self.1.clone(), self.2.clone(), d)),
+        );
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+impl Shrink for Vec<f64> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.len() > 1 {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+        }
+        out
+    }
+}
+
+/// Run `prop` on `cases` random inputs from `gen`; shrink on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Bounded greedy shrink.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = 200usize;
+            'outer: while budget > 0 {
+                for cand in best.shrink() {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input (shrunk): {best:?}\n  reason: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |r| r.below(100),
+            |_| {
+                Ok(())
+            },
+        );
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        forall(
+            2,
+            100,
+            |r| 10 + r.below(1000),
+            |&x| ensure(x < 5, format!("x={x} not < 5")),
+        );
+    }
+
+    #[test]
+    fn shrink_reduces_usize() {
+        let s = 100usize.shrink();
+        assert!(s.contains(&50));
+        assert!(s.contains(&99));
+        assert!(0usize.shrink().is_empty());
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_fields() {
+        let t = (4usize, 2.0f64);
+        let s = t.shrink();
+        assert!(s.iter().any(|(a, _)| *a < 4));
+        assert!(s.iter().any(|(_, b)| *b < 2.0));
+    }
+}

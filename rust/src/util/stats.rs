@@ -1,0 +1,252 @@
+//! Small statistics toolkit: aggregates, MAPE, Spearman rank correlation,
+//! linear algebra helpers used by the regressors.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// The four cross-GPU aggregates PIE-P uses (mean, std, min, max).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Aggregates {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Aggregates {
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self::default();
+        }
+        Aggregates {
+            mean: mean(xs),
+            std: std_dev(xs),
+            min: min(xs),
+            max: max(xs),
+        }
+    }
+}
+
+/// Mean absolute percentage error over (prediction, truth) pairs.
+/// Pairs with |truth| < 1e-12 are skipped (undefined percentage).
+pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (&p, &t) in pred.iter().zip(truth) {
+        if t.abs() > 1e-12 {
+            acc += ((p - t) / t).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * acc / n as f64
+    }
+}
+
+/// Standard error of the per-sample absolute percentage errors (the paper's
+/// Figure-2 error bars).
+pub fn mape_std_err(pred: &[f64], truth: &[f64]) -> f64 {
+    let apes: Vec<f64> = pred
+        .iter()
+        .zip(truth)
+        .filter(|(_, &t)| t.abs() > 1e-12)
+        .map(|(&p, &t)| 100.0 * ((p - t) / t).abs())
+        .collect();
+    if apes.len() < 2 {
+        return 0.0;
+    }
+    std_dev(&apes) / (apes.len() as f64).sqrt()
+}
+
+/// Ranks with average ties (1-based), as used by Spearman.
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut out = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg_rank;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Pearson correlation.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let (mx, my) = (mean(xs), mean(ys));
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    if dx <= 0.0 || dy <= 0.0 {
+        return 0.0;
+    }
+    num / (dx * dy).sqrt()
+}
+
+/// Spearman rank correlation (Pearson over average ranks; tie-safe).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&ranks(xs), &ranks(ys))
+}
+
+/// Solve the symmetric positive-definite system `A x = b` in place via
+/// Cholesky. `a` is row-major n×n. Panics if not SPD (callers add a ridge).
+pub fn cholesky_solve(a: &mut [f64], b: &mut [f64], n: usize) {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    // Decompose A = L L^T (lower triangle stored in `a`).
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            d -= a[j * n + k] * a[j * n + k];
+        }
+        assert!(d > 0.0, "matrix not positive definite (d={d} at {j})");
+        let ljj = d.sqrt();
+        a[j * n + j] = ljj;
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = s / ljj;
+        }
+    }
+    // Forward solve L y = b.
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= a[i * n + k] * b[k];
+        }
+        b[i] = s / a[i * n + i];
+    }
+    // Back solve L^T x = y.
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in (i + 1)..n {
+            s -= a[k * n + i] * b[k];
+        }
+        b[i] = s / a[i * n + i];
+    }
+}
+
+/// Percentile (linear interpolation), p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_basic() {
+        let a = Aggregates::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.mean, 2.5);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 4.0);
+        assert!((a.std - 1.118).abs() < 1e-3);
+    }
+
+    #[test]
+    fn mape_exact_prediction_is_zero() {
+        assert_eq!(mape(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn mape_known_value() {
+        // |110-100|/100 = 10%, |90-100|/100 = 10% -> 10%
+        assert!((mape(&[110.0, 90.0], &[100.0, 100.0]) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mape_skips_zero_truth() {
+        assert!((mape(&[5.0, 110.0], &[0.0, 100.0]) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_is_one() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = [10.0, 100.0, 1000.0, 1e4, 1e5];
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_reverse_is_minus_one() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&xs, &ys) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let xs = [1.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 1.0, 2.0, 3.0];
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = [[4,2],[2,3]], b = [10, 9] -> x = [1.5, 2]
+        let mut a = vec![4.0, 2.0, 2.0, 3.0];
+        let mut b = vec![10.0, 9.0];
+        cholesky_solve(&mut a, &mut b, 2);
+        assert!((b[0] - 1.5).abs() < 1e-12);
+        assert!((b[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_median() {
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 50.0), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 100.0), 4.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.0), 1.0);
+    }
+}

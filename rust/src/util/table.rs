@@ -1,0 +1,138 @@
+//! ASCII table / CSV rendering for the report layer. Every paper table and
+//! figure is emitted both as an aligned console table and as a CSV row set
+//! under `reports/`.
+
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render an aligned console table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let _ = writeln!(out, "{sep}");
+        let hdr: String = self
+            .headers
+            .iter()
+            .zip(&widths)
+            .map(|(h, w)| format!("| {h:<w$} "))
+            .collect();
+        let _ = writeln!(out, "{hdr}|");
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let line: String = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("| {c:<w$} "))
+                .collect();
+            let _ = writeln!(out, "{line}|");
+        }
+        let _ = writeln!(out, "{sep}");
+        out
+    }
+
+    /// CSV (RFC-4180-ish: quotes cells containing separators).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains([',', '"', '\n']) {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Write CSV under `dir/<slug>.csv` (creating dir) and return the path.
+    pub fn save_csv(&self, dir: &str, slug: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{slug}.csv");
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Format a float with `d` decimals (helper for table cells).
+pub fn fnum(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+/// Format a percentage cell.
+pub fn pct(x: f64) -> String {
+    format!("{x:.1}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| a "));
+        assert!(s.contains("| bbbb "));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("x", &["h1", "h2"]);
+        t.row(vec!["a,b".into(), "c\"d".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"c\"\"d\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["h1", "h2"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

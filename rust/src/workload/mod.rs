@@ -1,0 +1,139 @@
+//! Experiment grids: the configuration sets behind each paper experiment.
+//!
+//! The paper's sampling regime (Appendix L): batch sizes {8, 16, 32, 64},
+//! output lengths {512, 1024}, 2- and 4-GPU configurations, with models
+//! that exceed single-GPU memory restricted to multi-GPU configs
+//! (Llama-70B to 4 GPUs only).
+
+use crate::config::{HwSpec, Parallelism, RunConfig};
+use crate::models::{self, Family, ModelSpec};
+
+pub const BATCHES: [usize; 4] = [8, 16, 32, 64];
+pub const SEQ_OUTS: [usize; 2] = [512, 1024];
+pub const GPU_COUNTS: [usize; 2] = [2, 4];
+
+/// Can `spec` run under (parallelism, gpus) on this hardware?
+pub fn runnable(spec: &ModelSpec, parallelism: Parallelism, gpus: usize, hw: &HwSpec) -> bool {
+    if gpus > hw.num_gpus {
+        return false;
+    }
+    match parallelism {
+        Parallelism::Tensor => spec.fits_tp(gpus, hw.vram_bytes),
+        // Pipeline shards layers: per-stage weights ≈ total/g.
+        Parallelism::Pipeline => {
+            spec.param_count() * spec.dtype_bytes as f64 / gpus as f64 * 1.05 < hw.vram_bytes
+        }
+        // Data parallelism replicates the full model per GPU.
+        Parallelism::Data => spec.fits_tp(1, hw.vram_bytes),
+    }
+}
+
+/// Full grid for one model under one parallelism (paper sampling regime).
+pub fn model_grid(
+    spec: &ModelSpec,
+    parallelism: Parallelism,
+    hw: &HwSpec,
+) -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    for &g in &GPU_COUNTS {
+        if !runnable(spec, parallelism, g, hw) {
+            continue;
+        }
+        for &b in &BATCHES {
+            for &s in &SEQ_OUTS {
+                out.push(RunConfig::new(spec.name, parallelism, g, b).with_seq_out(s));
+            }
+        }
+    }
+    out
+}
+
+/// Tensor-parallel grid over every variant of a family.
+pub fn family_grid_tp(family: Family, hw: &HwSpec) -> Vec<RunConfig> {
+    models::family_variants(family)
+        .iter()
+        .flat_map(|m| model_grid(m, Parallelism::Tensor, hw))
+        .collect()
+}
+
+/// The Figure-2 campaign: all four families under tensor parallelism.
+pub fn paper_grid_tp(hw: &HwSpec) -> Vec<RunConfig> {
+    Family::ALL
+        .iter()
+        .flat_map(|&f| family_grid_tp(f, hw))
+        .collect()
+}
+
+/// Figure-4 campaigns: Vicuna family under pipeline / data parallelism.
+pub fn vicuna_grid(parallelism: Parallelism, hw: &HwSpec) -> Vec<RunConfig> {
+    models::family_variants(Family::Vicuna)
+        .iter()
+        .flat_map(|m| model_grid(m, parallelism, hw))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HwSpec {
+        HwSpec::default()
+    }
+
+    #[test]
+    fn llama70b_only_on_4_gpus_tp() {
+        let spec = models::by_name("Llama-70B").unwrap();
+        assert!(!runnable(&spec, Parallelism::Tensor, 2, &hw()));
+        assert!(runnable(&spec, Parallelism::Tensor, 4, &hw()));
+        let grid = model_grid(&spec, Parallelism::Tensor, &hw());
+        assert!(grid.iter().all(|c| c.gpus == 4));
+        assert_eq!(grid.len(), 8); // 4 batches × 2 seqs
+    }
+
+    #[test]
+    fn vicuna33b_excluded_from_dp() {
+        // Section 5.3: Vicuna-33B does not fit in single-GPU memory, so no
+        // data-parallel configs exist for it.
+        let spec = models::by_name("Vicuna-33B").unwrap();
+        assert!(model_grid(&spec, Parallelism::Data, &hw()).is_empty());
+        // But it runs under TP and PP.
+        assert!(!model_grid(&spec, Parallelism::Tensor, &hw()).is_empty());
+        assert!(!model_grid(&spec, Parallelism::Pipeline, &hw()).is_empty());
+    }
+
+    #[test]
+    fn small_models_get_both_gpu_counts() {
+        let spec = models::by_name("Vicuna-7B").unwrap();
+        let grid = model_grid(&spec, Parallelism::Tensor, &hw());
+        assert_eq!(grid.len(), 16); // 2 gpu counts × 4 batches × 2 seqs
+        assert!(grid.iter().any(|c| c.gpus == 2));
+        assert!(grid.iter().any(|c| c.gpus == 4));
+    }
+
+    #[test]
+    fn paper_grid_covers_all_families() {
+        let grid = paper_grid_tp(&hw());
+        for f in Family::ALL {
+            assert!(
+                grid.iter()
+                    .any(|c| models::by_name(&c.model).unwrap().family == f),
+                "{f:?} missing"
+            );
+        }
+        // Sanity on total size: 12 variants × ≤16 configs.
+        assert!(grid.len() > 100 && grid.len() <= 12 * 16, "{}", grid.len());
+    }
+
+    #[test]
+    fn pipeline_admits_large_models() {
+        let spec = models::by_name("Mistral-48B").unwrap();
+        assert!(runnable(&spec, Parallelism::Pipeline, 4, &hw()));
+        assert!(!runnable(&spec, Parallelism::Data, 2, &hw()));
+    }
+
+    #[test]
+    fn gpu_count_exceeding_host_rejected() {
+        let spec = models::by_name("Vicuna-7B").unwrap();
+        assert!(!runnable(&spec, Parallelism::Tensor, 8, &hw()));
+    }
+}

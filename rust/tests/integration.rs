@@ -1,0 +1,229 @@
+//! Cross-module integration tests: the full profile → features → train →
+//! predict pipeline, the paper's headline orderings, and the PJRT runtime
+//! round-trip against the AOT artifacts.
+
+use piep::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use piep::eval;
+use piep::models::Family;
+use piep::predict::codecarbon::CodeCarbon;
+use piep::predict::wilkins::Wilkins;
+use piep::predict::{PieP, PiepOptions};
+use piep::profiler::{Campaign, Dataset};
+use piep::simulator::timeline::ModuleKind;
+use piep::util::stats::{mape, mean};
+
+fn campaign() -> Campaign {
+    Campaign {
+        passes: 4,
+        knobs: SimKnobs {
+            sim_decode_steps: 8,
+            ..SimKnobs::default()
+        },
+        ..Campaign::default()
+    }
+}
+
+fn vicuna_tp_dataset() -> Dataset {
+    let c = campaign();
+    let grid = piep::workload::family_grid_tp(Family::Vicuna, &c.hw);
+    c.profile(&grid)
+}
+
+#[test]
+fn pipeline_end_to_end_orderings_hold() {
+    // The paper's Figure-2 ordering must hold on a family-scale dataset:
+    // PIE-P < CodeCarbon ≈< IrEne < Wilkins.
+    let ds = vicuna_tp_dataset();
+    let (tr, te) = eval::split_train_test(&ds.runs, 0.7, 5);
+    let train: Vec<_> = tr.iter().map(|&i| ds.runs[i].clone()).collect();
+    let test: Vec<&_> = te.iter().map(|&i| &ds.runs[i]).collect();
+
+    let piep = PieP::fit(&train, &ds.sync_db, PiepOptions::default());
+    let irene = PieP::fit(&train, &ds.sync_db, PiepOptions::irene());
+    let wilkins = Wilkins::fit(&train);
+    let cc = CodeCarbon::new(225.0);
+
+    let truth: Vec<f64> = test.iter().map(|r| r.meter_total_j).collect();
+    let m_piep = mape(
+        &test.iter().map(|r| piep.predict_total(r, &ds.sync_db)).collect::<Vec<_>>(),
+        &truth,
+    );
+    let m_irene = mape(
+        &test.iter().map(|r| irene.predict_total(r, &ds.sync_db)).collect::<Vec<_>>(),
+        &truth,
+    );
+    let m_cc = mape(&test.iter().map(|r| cc.estimate(r)).collect::<Vec<_>>(), &truth);
+    let m_wil = mape(&test.iter().map(|r| wilkins.predict(r)).collect::<Vec<_>>(), &truth);
+
+    assert!(m_piep < m_cc, "PIE-P {m_piep:.1} < CodeCarbon {m_cc:.1}");
+    assert!(m_piep < m_irene, "PIE-P {m_piep:.1} < IrEne {m_irene:.1}");
+    assert!(m_piep < m_wil, "PIE-P {m_piep:.1} < Wilkins {m_wil:.1}");
+    assert!(m_irene < m_wil, "IrEne {m_irene:.1} < Wilkins {m_wil:.1}");
+    assert!(m_piep < 30.0, "PIE-P in a sane band: {m_piep:.1}");
+}
+
+#[test]
+fn baseline_gap_widens_with_parallelization() {
+    // Section 5.1: the PIE-P-vs-IrEne gap grows from 2 to 4 GPUs.
+    let ds = vicuna_tp_dataset();
+    let (tr, te) = eval::split_train_test(&ds.runs, 0.7, 6);
+    let train: Vec<_> = tr.iter().map(|&i| ds.runs[i].clone()).collect();
+    let piep = PieP::fit(&train, &ds.sync_db, PiepOptions::default());
+    let irene = PieP::fit(&train, &ds.sync_db, PiepOptions::irene());
+
+    let gap = |gpus: usize| {
+        let test: Vec<&_> = te
+            .iter()
+            .map(|&i| &ds.runs[i])
+            .filter(|r| r.config.gpus == gpus)
+            .collect();
+        let truth: Vec<f64> = test.iter().map(|r| r.meter_total_j).collect();
+        let mp = mape(
+            &test.iter().map(|r| piep.predict_total(r, &ds.sync_db)).collect::<Vec<_>>(),
+            &truth,
+        );
+        let mi = mape(
+            &test.iter().map(|r| irene.predict_total(r, &ds.sync_db)).collect::<Vec<_>>(),
+            &truth,
+        );
+        mi - mp
+    };
+    assert!(gap(4) > gap(2), "gap(4)={:.1} > gap(2)={:.1}", gap(4), gap(2));
+}
+
+#[test]
+fn allreduce_share_grows_with_gpus_and_model_size() {
+    // Appendix C: communication share rises with GPU count; larger models
+    // spend more absolute energy on AllReduce.
+    let c = campaign();
+    let share = |model: &str, gpus: usize| {
+        let runs: Vec<_> = (0..3u64)
+            .map(|s| {
+                let cfg = RunConfig::new(model, Parallelism::Tensor, gpus, 64).with_seed(s);
+                piep::simulator::simulate_run(&cfg, &c.hw, &c.knobs)
+            })
+            .collect();
+        mean(&runs.iter().map(|r| r.comm_energy_j() / r.true_total_j).collect::<Vec<_>>())
+    };
+    assert!(share("Vicuna-7B", 4) > share("Vicuna-7B", 2));
+    assert!(share("Vicuna-13B", 4) > share("Vicuna-13B", 2));
+}
+
+#[test]
+fn sync_ablation_degrades_and_is_biased_low() {
+    let ds = vicuna_tp_dataset();
+    let (tr, te) = eval::split_train_test(&ds.runs, 0.7, 7);
+    let train: Vec<_> = tr.iter().map(|&i| ds.runs[i].clone()).collect();
+    let test: Vec<&_> = te.iter().map(|&i| &ds.runs[i]).collect();
+    let piep = PieP::fit(&train, &ds.sync_db, PiepOptions::default());
+    let ablated = PieP::fit(&train, &ds.sync_db, PiepOptions::without_waiting());
+
+    let truth: Vec<f64> = test.iter().map(|r| r.meter_total_j).collect();
+    let m_full = mape(
+        &test.iter().map(|r| piep.predict_total(r, &ds.sync_db)).collect::<Vec<_>>(),
+        &truth,
+    );
+    let preds_abl: Vec<f64> = test
+        .iter()
+        .map(|r| ablated.predict_total(r, &ds.sync_db))
+        .collect();
+    let m_abl = mape(&preds_abl, &truth);
+    assert!(m_abl > m_full, "ablated {m_abl:.1} > full {m_full:.1}");
+    // And the ablation is systematically *below* truth (it cannot see the
+    // waiting-phase energy).
+    let bias = mean(
+        &preds_abl
+            .iter()
+            .zip(&truth)
+            .map(|(p, t)| (p - t) / t)
+            .collect::<Vec<_>>(),
+    );
+    assert!(bias < -0.02, "ablated bias {bias:.3} must be negative");
+}
+
+#[test]
+fn cross_family_generalization_is_bounded() {
+    // Table-4 behaviour at small scale: train on Vicuna+Llama, test Mistral.
+    let c = campaign();
+    let mut grid = piep::workload::family_grid_tp(Family::Vicuna, &c.hw);
+    grid.extend(piep::workload::family_grid_tp(Family::Llama, &c.hw));
+    grid.extend(piep::workload::family_grid_tp(Family::Mistral, &c.hw));
+    let ds = c.profile(&grid);
+    let (m, _, n) = eval::leave_out_mape(&ds.runs, &ds.sync_db, PiepOptions::default(), |r| {
+        r.spec.family == Family::Mistral
+    });
+    assert!(n > 0);
+    assert!(m < 60.0, "cross-family MAPE bounded: {m:.1}%");
+}
+
+#[test]
+fn pp_and_dp_pipelines_work_end_to_end() {
+    let c = campaign();
+    for par in [Parallelism::Pipeline, Parallelism::Data] {
+        let grid = piep::workload::vicuna_grid(par, &c.hw);
+        assert!(!grid.is_empty());
+        let ds = c.profile(&grid);
+        let (tr, te) = eval::split_train_test(&ds.runs, 0.7, 8);
+        let train: Vec<_> = tr.iter().map(|&i| ds.runs[i].clone()).collect();
+        let test: Vec<&_> = te.iter().map(|&i| &ds.runs[i]).collect();
+        let piep = PieP::fit(&train, &ds.sync_db, PiepOptions::default());
+        let truth: Vec<f64> = test.iter().map(|r| r.meter_total_j).collect();
+        let m = mape(
+            &test.iter().map(|r| piep.predict_total(r, &ds.sync_db)).collect::<Vec<_>>(),
+            &truth,
+        );
+        assert!(m < 35.0, "{par:?} MAPE {m:.1}%");
+    }
+}
+
+#[test]
+fn module_level_errors_reasonable_for_core_modules() {
+    let ds = vicuna_tp_dataset();
+    let (tr, te) = eval::split_train_test(&ds.runs, 0.7, 9);
+    let train: Vec<_> = tr.iter().map(|&i| ds.runs[i].clone()).collect();
+    let test: Vec<&_> = te.iter().map(|&i| &ds.runs[i]).collect();
+    let piep = PieP::fit(&train, &ds.sync_db, PiepOptions::default());
+    for kind in [ModuleKind::SelfAttention, ModuleKind::Mlp] {
+        let mut pred = Vec::new();
+        let mut truth = Vec::new();
+        for r in &test {
+            if let (Some(p), Some(&t)) = (
+                piep.predict_module(r, kind, &ds.sync_db),
+                r.module_energy_j.get(&kind),
+            ) {
+                pred.push(p);
+                truth.push(t);
+            }
+        }
+        let m = mape(&pred, &truth);
+        assert!(m < 30.0, "{kind:?} module MAPE {m:.1}%");
+    }
+}
+
+#[test]
+fn runtime_roundtrip_when_artifacts_present() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping runtime integration (run `make artifacts`)");
+        return;
+    }
+    let rt = piep::runtime::Runtime::load("artifacts").unwrap();
+    // Execute the composed block and its pieces; shapes must line up.
+    for name in ["self_attention", "mlp", "rmsnorm", "block", "logits_head"] {
+        let inputs = rt.random_inputs(name, 21, 0.05).unwrap();
+        let out = rt.execute(name, &inputs).unwrap();
+        assert!(out.iter().all(|v| v.is_finite()), "{name}");
+    }
+    // Wrong input count must error, not crash.
+    assert!(rt.execute("mlp", &[vec![0.0; 16]]).is_err());
+    // Unknown module must error.
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn unknown_model_panics_cleanly() {
+    let result = std::panic::catch_unwind(|| {
+        let cfg = RunConfig::new("GPT-5", Parallelism::Tensor, 2, 8);
+        piep::simulator::simulate_run(&cfg, &HwSpec::default(), &SimKnobs::default())
+    });
+    assert!(result.is_err());
+}

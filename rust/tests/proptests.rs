@@ -1,0 +1,227 @@
+//! Property-based tests over the coordinator invariants (routing of work
+//! to planners, batching effects, state/energy accounting), driven by the
+//! in-repo `util::prop` harness (proptest is unavailable offline).
+
+use piep::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use piep::simulator::simulate_run;
+use piep::simulator::timeline::ModuleKind;
+use piep::util::prop::{ensure, forall};
+use piep::util::rng::Rng;
+
+const MODELS: [&str; 6] = [
+    "Vicuna-7B",
+    "Vicuna-13B",
+    "Mistral-8B",
+    "Llama-7B",
+    "Qwen-8B",
+    "Qwen-14B",
+];
+
+fn knobs() -> SimKnobs {
+    SimKnobs {
+        sim_decode_steps: 4,
+        ..SimKnobs::default()
+    }
+}
+
+/// Random valid run configuration (as (model_idx, gpus_pick, batch, seed)).
+fn gen_cfg(r: &mut Rng) -> (usize, usize, usize, u64) {
+    (
+        r.below(MODELS.len()),
+        r.below(3),
+        8 << r.below(4),
+        r.next_u64() & 0xffff,
+    )
+}
+
+fn cfg_of(t: &(usize, usize, usize, u64), par: Parallelism) -> RunConfig {
+    let gpus = [1usize, 2, 4][t.1];
+    RunConfig::new(MODELS[t.0], par, gpus, t.2).with_seed(t.3)
+}
+
+#[test]
+fn prop_energy_accounting_invariants() {
+    let hw = HwSpec::default();
+    let k = knobs();
+    forall(101, 60, gen_cfg, |t| {
+        let r = simulate_run(&cfg_of(t, Parallelism::Tensor), &hw, &k);
+        ensure(r.true_total_j > 0.0, "total energy positive")?;
+        ensure(r.gpu_energy_j > 0.0, "gpu energy positive")?;
+        ensure(
+            r.true_total_j > r.gpu_energy_j,
+            format!("wall {} > gpu {}", r.true_total_j, r.gpu_energy_j),
+        )?;
+        let module_sum: f64 = r.module_energy_j.values().sum();
+        ensure(
+            module_sum <= r.true_total_j * 1.001,
+            format!("module sum {} <= total {}", module_sum, r.true_total_j),
+        )?;
+        ensure(
+            r.nvml_total_j < r.true_total_j,
+            "NVML (GPU-only, biased) below wall truth",
+        )?;
+        ensure(r.wall_s > 0.0 && r.prefill_s >= 0.0 && r.decode_s > 0.0, "times positive")?;
+        ensure(
+            (r.wall_s - (r.prefill_s + r.decode_s)).abs() < 1e-9,
+            "wall = prefill + decode",
+        )
+    });
+}
+
+#[test]
+fn prop_comm_modules_match_parallelism() {
+    let hw = HwSpec::default();
+    let k = knobs();
+    forall(102, 40, gen_cfg, |t| {
+        for par in [Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data] {
+            let cfg = cfg_of(t, par);
+            let spec = piep::models::by_name(&cfg.model).unwrap();
+            if !piep::workload::runnable(&spec, par, cfg.gpus, &hw) {
+                continue;
+            }
+            let r = simulate_run(&cfg, &hw, &k);
+            let has = |m: ModuleKind| r.module_energy_j.get(&m).copied().unwrap_or(0.0) > 0.0;
+            if cfg.gpus == 1 {
+                ensure(
+                    !has(ModuleKind::AllReduce) && !has(ModuleKind::P2PTransfer),
+                    "no comm on 1 GPU",
+                )?;
+                continue;
+            }
+            match par {
+                Parallelism::Tensor => {
+                    ensure(has(ModuleKind::AllReduce), "TP has AllReduce")?;
+                    ensure(!has(ModuleKind::P2PTransfer), "TP has no P2P")?;
+                }
+                Parallelism::Pipeline => {
+                    ensure(has(ModuleKind::P2PTransfer), "PP has P2P")?;
+                    ensure(!has(ModuleKind::AllReduce), "PP has no AllReduce")?;
+                }
+                Parallelism::Data => {
+                    ensure(has(ModuleKind::AllGather), "DP has AllGather")?;
+                    ensure(!has(ModuleKind::AllReduce), "DP has no AllReduce")?;
+                    ensure(!has(ModuleKind::P2PTransfer), "DP has no P2P")?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_determinism_same_seed_same_record() {
+    let hw = HwSpec::default();
+    let k = knobs();
+    forall(103, 25, gen_cfg, |t| {
+        let cfg = cfg_of(t, Parallelism::Tensor);
+        let a = simulate_run(&cfg, &hw, &k);
+        let b = simulate_run(&cfg, &hw, &k);
+        ensure(a.true_total_j == b.true_total_j, "total deterministic")?;
+        ensure(a.meter_total_j == b.meter_total_j, "meter deterministic")?;
+        ensure(a.wait_samples == b.wait_samples, "waits deterministic")
+    });
+}
+
+#[test]
+fn prop_batching_monotonicity_in_expectation() {
+    // More requests in a batch ⇒ more total energy, less energy per token
+    // (weight streaming amortizes). Averaged over passes to beat the noise.
+    let hw = HwSpec::default();
+    let k = knobs();
+    forall(104, 12, |r| (r.below(MODELS.len()), r.next_u64() & 0xff), |&(mi, seed)| {
+        let avg = |batch: usize| -> (f64, f64) {
+            let mut tot = 0.0;
+            let mut per = 0.0;
+            for s in 0..6u64 {
+                let cfg = RunConfig::new(MODELS[mi], Parallelism::Tensor, 2, batch)
+                    .with_seed(seed ^ (s << 8));
+                let r = simulate_run(&cfg, &hw, &k);
+                tot += r.true_total_j;
+                per += r.energy_per_token_j();
+            }
+            (tot / 6.0, per / 6.0)
+        };
+        let (tot8, per8) = avg(8);
+        let (tot64, per64) = avg(64);
+        ensure(tot64 > tot8, format!("total energy grows with batch: {tot64} vs {tot8}"))?;
+        ensure(
+            per64 < per8,
+            format!("energy/token shrinks with batch: {per64} vs {per8}"),
+        )
+    });
+}
+
+#[test]
+fn prop_features_finite_and_padded() {
+    use piep::features::{module_features, run_features, FeatureOpts, FEATURE_DIM};
+    let hw = HwSpec::default();
+    let k = knobs();
+    forall(105, 30, gen_cfg, |t| {
+        let r = simulate_run(&cfg_of(t, Parallelism::Tensor), &hw, &k);
+        let x = run_features(&r, FeatureOpts::default());
+        ensure(x.len() == FEATURE_DIM, "run feature width")?;
+        ensure(x.iter().all(|v| v.is_finite()), "run features finite")?;
+        for kind in ModuleKind::ALL {
+            let m = module_features(&r, kind, 32.0, None, FeatureOpts::default());
+            ensure(m.len() == FEATURE_DIM, "module feature width")?;
+            ensure(m.iter().all(|v| v.is_finite()), "module features finite")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tree_leaves_cover_measured_modules() {
+    // Every module that shows up in the measured attribution must be a
+    // leaf of the full (comm-inclusive) tree for that configuration.
+    let hw = HwSpec::default();
+    let k = knobs();
+    forall(106, 30, gen_cfg, |t| {
+        for par in [Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data] {
+            let cfg = cfg_of(t, par);
+            let spec = piep::models::by_name(&cfg.model).unwrap();
+            if !piep::workload::runnable(&spec, par, cfg.gpus, &hw) {
+                continue;
+            }
+            let r = simulate_run(&cfg, &hw, &k);
+            let tree = piep::tree::build(&spec, par, cfg.gpus, true);
+            let leaves: Vec<ModuleKind> =
+                tree.leaf_multiplicities().into_iter().map(|(k, _)| k).collect();
+            for m in r.module_energy_j.keys() {
+                ensure(
+                    leaves.contains(m),
+                    format!("{par:?}: measured module {m:?} missing from tree"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ridge_interpolates_noiseless_linear_data() {
+    use piep::predict::Ridge;
+    forall(
+        107,
+        20,
+        |r| {
+            let n = 20 + r.below(50);
+            let w0 = r.range(-3.0, 3.0);
+            let w1 = r.range(-3.0, 3.0);
+            (n, w0, w1)
+        },
+        |&(n, w0, w1)| {
+            let mut rng = Rng::new(n as u64);
+            let xs: Vec<Vec<f64>> = (0..n)
+                .map(|_| vec![rng.range(0.0, 10.0), rng.range(-5.0, 5.0)])
+                .collect();
+            let ys: Vec<f64> = xs.iter().map(|x| w0 * x[0] + w1 * x[1] + 1.0).collect();
+            let m = Ridge::fit(&xs, &ys, 1e-9, false);
+            for (x, y) in xs.iter().zip(&ys) {
+                let err = (m.predict(x) - y).abs();
+                ensure(err < 1e-6 * (1.0 + y.abs()), format!("err {err}"))?;
+            }
+            Ok(())
+        },
+    );
+}
