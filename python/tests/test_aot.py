@@ -60,11 +60,16 @@ def test_hlo_numerics_roundtrip_via_xla_client(entries, dims):
 
     # The text itself is validated structurally above; execute the same
     # lowered computation through the raw xla_client (the Rust `xla` crate
-    # drives the equivalent C API) and compare numerics.
+    # drives the equivalent C API) and compare numerics. The client API
+    # renamed compile() -> compile_and_load() across jaxlib releases; take
+    # whichever this jaxlib carries.
     client = xc.make_cpu_client()
     mlir_mod = jax.jit(fn).lower(*specs).compiler_ir("stablehlo")
-    devices = xc.DeviceList(tuple(client.local_devices()[:1]))
-    exe = client.compile_and_load(str(mlir_mod), devices)
+    if hasattr(client, "compile_and_load"):
+        devices = xc.DeviceList(tuple(client.local_devices()[:1]))
+        exe = client.compile_and_load(str(mlir_mod), devices)
+    else:
+        exe = client.compile(str(mlir_mod))
     out = exe.execute_sharded(
         [client.buffer_from_pyval(a) for a in args]
     ).disassemble_into_single_device_arrays()

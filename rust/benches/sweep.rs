@@ -1,0 +1,92 @@
+//! Sweep-engine benchmark (criterion-style output, harness = false).
+//!
+//! Times the scenario sweep — profile + 3-fold CV + per-config MAPE over a
+//! reduced paper grid plus the three hybrid-mesh combinations — on the
+//! serial baseline and on the `util::par` pool, and prints the speedup.
+//! `piep sweep --bench` runs the same comparison on the *full* grid and
+//! records it into BENCH_sweep.json; this target keeps the comparison
+//! compiling and cheap enough for CI smoke runs.
+
+use std::time::Instant;
+
+use piep::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use piep::eval::sweep::{run_sweep, Scenario, SweepOptions};
+use piep::profiler::Campaign;
+
+fn reduced_scenarios(hw: &HwSpec) -> Vec<Scenario> {
+    let mut tensor = Vec::new();
+    for model in ["Vicuna-7B", "Vicuna-13B"] {
+        for g in [2usize, 4] {
+            for b in [8usize, 32] {
+                tensor.push(RunConfig::new(model, Parallelism::Tensor, g, b));
+            }
+        }
+    }
+    let mut out = vec![Scenario {
+        label: "tp".into(),
+        configs: tensor,
+    }];
+    for (inner, outer) in Parallelism::HYBRID_COMBOS {
+        let par = Parallelism::hybrid(inner, outer, 2).unwrap();
+        let configs: Vec<RunConfig> = ["Vicuna-7B", "Vicuna-13B"]
+            .into_iter()
+            .flat_map(|m| [8usize, 32].into_iter().map(move |b| RunConfig::new(m, par, 4, b)))
+            .filter(|c| {
+                let spec = piep::models::by_name(&c.model).unwrap();
+                piep::workload::runnable(&spec, c.parallelism, c.gpus, hw)
+            })
+            .collect();
+        out.push(Scenario {
+            label: format!("{}x{}", inner.short(), outer.short()),
+            configs,
+        });
+    }
+    out
+}
+
+fn main() {
+    let hw = HwSpec::default();
+    let scenarios = reduced_scenarios(&hw);
+    let opts = SweepOptions {
+        campaign: Campaign {
+            passes: 3,
+            knobs: SimKnobs {
+                sim_decode_steps: 8,
+                ..SimKnobs::default()
+            },
+            ..Campaign::default()
+        },
+        ..SweepOptions::default()
+    };
+    let configs: usize = scenarios.iter().map(|s| s.configs.len()).sum();
+    println!(
+        "bench:sweep/grid                 {} scenarios, {configs} configs × {} passes",
+        scenarios.len(),
+        opts.campaign.passes
+    );
+
+    let t0 = Instant::now();
+    let serial = run_sweep(&scenarios, &SweepOptions { parallel: false, ..opts.clone() });
+    let serial_s = t0.elapsed();
+    println!("bench:sweep/serial               time: {serial_s:?}");
+
+    let t1 = Instant::now();
+    let parallel = run_sweep(&scenarios, &SweepOptions { parallel: true, ..opts });
+    let parallel_s = t1.elapsed();
+    println!("bench:sweep/parallel             time: {parallel_s:?}");
+
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.mape, b.mape, "{}: serial/parallel must agree", a.label);
+    }
+    let threads = piep::util::par::effective_threads(0);
+    println!(
+        "bench:sweep/speedup              {:.2}x on {threads} threads",
+        serial_s.as_secs_f64() / parallel_s.as_secs_f64().max(1e-9)
+    );
+    for r in &parallel {
+        println!(
+            "bench:sweep/scenario/{:<10}  mape {:>5.1}%  {} runs in {:.2}s",
+            r.label, r.mape, r.runs, r.wall_s
+        );
+    }
+}

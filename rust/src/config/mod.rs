@@ -11,33 +11,188 @@ pub mod hw;
 
 pub use hw::{HwSpec, SimKnobs};
 
-/// Parallelism strategy (Section 3 of the paper).
+/// One of the three base parallelization strategies (Section 3 of the
+/// paper). `Parallelism` composes these into pure or hybrid deployments.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum Parallelism {
+pub enum Strategy {
     Tensor,
     Pipeline,
     Data,
 }
 
+impl Strategy {
+    pub const ALL: [Strategy; 3] = [Strategy::Tensor, Strategy::Pipeline, Strategy::Data];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Tensor => "tensor",
+            Strategy::Pipeline => "pipeline",
+            Strategy::Data => "data",
+        }
+    }
+
+    /// Two-letter shorthand used in hybrid labels ("tp2xpp").
+    pub fn short(&self) -> &'static str {
+        match self {
+            Strategy::Tensor => "tp",
+            Strategy::Pipeline => "pp",
+            Strategy::Data => "dp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "tensor" | "tp" => Some(Strategy::Tensor),
+            "pipeline" | "pp" => Some(Strategy::Pipeline),
+            "data" | "dp" => Some(Strategy::Data),
+            _ => None,
+        }
+    }
+}
+
+/// Parallelism strategy of a run: one of the paper's three pure strategies,
+/// or a pairwise hybrid over a 2-D rank mesh.
+///
+/// A hybrid splits the `gpus` ranks into contiguous groups of
+/// `inner_degree`; the `inner` strategy runs within each group and the
+/// `outer` strategy runs across the groups (e.g. `tp2xpp` on 4 GPUs is two
+/// pipeline stages of two tensor-parallel ranks each). Canonical nesting
+/// order is Tensor < Pipeline < Data — TP innermost (it needs the highest
+/// link bandwidth), DP outermost — matching production deployments; the
+/// `hybrid` constructor enforces it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Parallelism {
+    Tensor,
+    Pipeline,
+    Data,
+    Hybrid {
+        inner: Strategy,
+        outer: Strategy,
+        /// Ranks per inner group (the outer degree is `gpus / inner_degree`).
+        inner_degree: usize,
+    },
+}
+
 impl Parallelism {
+    /// The three pure strategies (the paper's evaluation set).
     pub const ALL: [Parallelism; 3] =
         [Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
 
+    /// The three canonical pairwise hybrid combinations as (inner, outer).
+    pub const HYBRID_COMBOS: [(Strategy, Strategy); 3] = [
+        (Strategy::Tensor, Strategy::Pipeline),
+        (Strategy::Tensor, Strategy::Data),
+        (Strategy::Pipeline, Strategy::Data),
+    ];
+
+    /// Construct a validated hybrid: the pair must be in canonical order
+    /// (Tensor < Pipeline < Data), distinct, and `inner_degree >= 2`
+    /// (degree 1 degenerates to the pure outer strategy).
+    pub fn hybrid(inner: Strategy, outer: Strategy, inner_degree: usize) -> Option<Parallelism> {
+        if inner >= outer || inner_degree < 2 {
+            return None;
+        }
+        Some(Parallelism::Hybrid {
+            inner,
+            outer,
+            inner_degree,
+        })
+    }
+
+    pub fn is_hybrid(&self) -> bool {
+        matches!(self, Parallelism::Hybrid { .. })
+    }
+
+    /// Tensor-parallel degree within the composition (1 when absent).
+    pub fn tensor_degree(&self, gpus: usize) -> usize {
+        match *self {
+            Parallelism::Tensor => gpus,
+            Parallelism::Hybrid {
+                inner: Strategy::Tensor,
+                inner_degree,
+                ..
+            } => inner_degree,
+            _ => 1,
+        }
+    }
+
+    /// Pipeline-stage count within the composition (1 when absent).
+    pub fn pipeline_degree(&self, gpus: usize) -> usize {
+        match *self {
+            Parallelism::Pipeline => gpus,
+            Parallelism::Hybrid {
+                inner: Strategy::Pipeline,
+                inner_degree,
+                ..
+            } => inner_degree,
+            Parallelism::Hybrid {
+                outer: Strategy::Pipeline,
+                inner_degree,
+                ..
+            } => gpus / inner_degree.max(1),
+            _ => 1,
+        }
+    }
+
+    /// Data-parallel replica count within the composition (1 when absent).
+    /// Data can only sit on the outer axis under the canonical ordering.
+    pub fn data_degree(&self, gpus: usize) -> usize {
+        match *self {
+            Parallelism::Data => gpus,
+            Parallelism::Hybrid {
+                outer: Strategy::Data,
+                inner_degree,
+                ..
+            } => gpus / inner_degree.max(1),
+            _ => 1,
+        }
+    }
+
+    /// Display/grouping name. Hybrid names omit the inner degree (use
+    /// `label` for the unambiguous serialized form).
     pub fn name(&self) -> &'static str {
         match self {
             Parallelism::Tensor => "tensor",
             Parallelism::Pipeline => "pipeline",
             Parallelism::Data => "data",
+            Parallelism::Hybrid { inner, outer, .. } => match (inner, outer) {
+                (Strategy::Tensor, Strategy::Pipeline) => "tensor+pipeline",
+                (Strategy::Tensor, Strategy::Data) => "tensor+data",
+                (Strategy::Pipeline, Strategy::Data) => "pipeline+data",
+                _ => "hybrid",
+            },
+        }
+    }
+
+    /// Unambiguous label, stable under `parse` roundtrips: pure strategies
+    /// keep their names; hybrids serialize as `"<inner><degree>x<outer>"`
+    /// (e.g. `"tp2xpp"`).
+    pub fn label(&self) -> String {
+        match *self {
+            Parallelism::Hybrid {
+                inner,
+                outer,
+                inner_degree,
+            } => format!("{}{}x{}", inner.short(), inner_degree, outer.short()),
+            _ => self.name().to_string(),
         }
     }
 
     pub fn parse(s: &str) -> Option<Parallelism> {
-        match s.to_ascii_lowercase().as_str() {
-            "tensor" | "tp" => Some(Parallelism::Tensor),
-            "pipeline" | "pp" => Some(Parallelism::Pipeline),
-            "data" | "dp" => Some(Parallelism::Data),
-            _ => None,
+        let t = s.to_ascii_lowercase();
+        match t.as_str() {
+            "tensor" | "tp" => return Some(Parallelism::Tensor),
+            "pipeline" | "pp" => return Some(Parallelism::Pipeline),
+            "data" | "dp" => return Some(Parallelism::Data),
+            _ => {}
         }
+        // Hybrid labels: "<inner><degree>x<outer>", e.g. "tp2xpp".
+        let (lhs, rhs) = t.split_once('x')?;
+        let outer = Strategy::parse(rhs)?;
+        let digits_at = lhs.find(|c: char| c.is_ascii_digit())?;
+        let inner = Strategy::parse(&lhs[..digits_at])?;
+        let inner_degree: usize = lhs[digits_at..].parse().ok()?;
+        Parallelism::hybrid(inner, outer, inner_degree)
     }
 }
 
@@ -83,11 +238,12 @@ impl RunConfig {
     }
 
     /// Stable identifier for grouping repeated passes of a configuration.
+    /// Uses `Parallelism::label` so hybrid inner degrees stay distinct.
     pub fn key(&self) -> String {
         format!(
             "{}/{}/g{}/b{}/s{}",
             self.model,
-            self.parallelism.name(),
+            self.parallelism.label(),
             self.gpus,
             self.batch,
             self.seq_out
@@ -105,6 +261,68 @@ mod tests {
         assert_eq!(Parallelism::parse("Pipeline"), Some(Parallelism::Pipeline));
         assert_eq!(Parallelism::parse("dp"), Some(Parallelism::Data));
         assert_eq!(Parallelism::parse("zz"), None);
+    }
+
+    #[test]
+    fn hybrid_constructor_enforces_canonical_order() {
+        assert!(Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).is_some());
+        assert!(Parallelism::hybrid(Strategy::Tensor, Strategy::Data, 2).is_some());
+        assert!(Parallelism::hybrid(Strategy::Pipeline, Strategy::Data, 2).is_some());
+        // Reversed order, same-strategy pairs, and degenerate degrees are rejected.
+        assert!(Parallelism::hybrid(Strategy::Pipeline, Strategy::Tensor, 2).is_none());
+        assert!(Parallelism::hybrid(Strategy::Data, Strategy::Tensor, 2).is_none());
+        assert!(Parallelism::hybrid(Strategy::Tensor, Strategy::Tensor, 2).is_none());
+        assert!(Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 1).is_none());
+    }
+
+    #[test]
+    fn hybrid_label_parse_roundtrip() {
+        for (inner, outer) in Parallelism::HYBRID_COMBOS {
+            for degree in [2usize, 4] {
+                let p = Parallelism::hybrid(inner, outer, degree).unwrap();
+                assert_eq!(Parallelism::parse(&p.label()), Some(p), "{}", p.label());
+            }
+        }
+        assert_eq!(
+            Parallelism::parse("tp2xpp"),
+            Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2)
+        );
+        assert_eq!(Parallelism::parse("tpxpp"), None); // degree is mandatory
+        assert_eq!(Parallelism::parse("dp2xtp"), None); // non-canonical order
+    }
+
+    #[test]
+    fn hybrid_degrees_decompose_the_mesh() {
+        let p = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
+        assert_eq!(p.tensor_degree(4), 2);
+        assert_eq!(p.pipeline_degree(4), 2);
+        assert_eq!(p.data_degree(4), 1);
+        let p = Parallelism::hybrid(Strategy::Pipeline, Strategy::Data, 2).unwrap();
+        assert_eq!(p.tensor_degree(8), 1);
+        assert_eq!(p.pipeline_degree(8), 2);
+        assert_eq!(p.data_degree(8), 4);
+        // Pure strategies take the whole mesh on their own axis.
+        assert_eq!(Parallelism::Tensor.tensor_degree(4), 4);
+        assert_eq!(Parallelism::Pipeline.pipeline_degree(4), 4);
+        assert_eq!(Parallelism::Data.data_degree(4), 4);
+        assert_eq!(Parallelism::Data.tensor_degree(4), 1);
+    }
+
+    #[test]
+    fn hybrid_keys_distinguish_inner_degree() {
+        let a = RunConfig::new(
+            "Vicuna-7B",
+            Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap(),
+            8,
+            8,
+        );
+        let b = RunConfig::new(
+            "Vicuna-7B",
+            Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 4).unwrap(),
+            8,
+            8,
+        );
+        assert_ne!(a.key(), b.key());
     }
 
     #[test]

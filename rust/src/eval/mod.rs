@@ -1,8 +1,11 @@
 //! Evaluation protocols: train/test splits, k-fold CV, leave-one-out
-//! generalization (variant / batch size / family), MAPE scoring, and the
-//! Spearman feature-correlation analysis behind Figure 7.
+//! generalization (variant / batch size / family), MAPE scoring, the
+//! Spearman feature-correlation analysis behind Figure 7, and the
+//! parallel scenario sweep engine (`sweep`).
 
-use std::collections::BTreeSet;
+pub mod sweep;
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::features::SyncDb;
 use crate::models::Family;
@@ -88,6 +91,79 @@ pub fn cv_mape(
         }
     }
     (mape(&preds, &truths), mape_std_err(&preds, &truths))
+}
+
+/// Cross-validated MAPE broken down per configuration key: k-fold over the
+/// runs, out-of-fold predictions pooled per `RunConfig::key`. This is what
+/// the sweep engine reports for every scenario grid cell.
+#[derive(Debug, Clone)]
+pub struct ConfigMape {
+    pub key: String,
+    pub mape: f64,
+    pub std_err: f64,
+    /// Out-of-fold test predictions behind this cell.
+    pub n: usize,
+}
+
+/// One k-fold CV pass producing both the pooled overall (MAPE, std-err)
+/// and the per-config breakdown — the fold models are fitted once and
+/// shared by both aggregations (fitting dominates sweep cost).
+pub fn cv_breakdown(
+    runs: &[RunRecord],
+    sync_db: &SyncDb,
+    opts: PiepOptions,
+    folds: usize,
+    seed: u64,
+) -> ((f64, f64), Vec<ConfigMape>) {
+    let parts = kfold(runs.len(), folds, seed);
+    let mut by_key: BTreeMap<String, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    let mut all_preds = Vec::new();
+    let mut all_truths = Vec::new();
+    for part in parts.iter().take(folds) {
+        let test_idx: BTreeSet<usize> = part.iter().copied().collect();
+        let train: Vec<RunRecord> = runs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !test_idx.contains(i))
+            .map(|(_, r)| r.clone())
+            .collect();
+        if train.is_empty() || test_idx.is_empty() {
+            continue;
+        }
+        let model = PieP::fit(&train, sync_db, opts);
+        for &i in part {
+            let pred = model.predict_total(&runs[i], sync_db);
+            let truth = runs[i].meter_total_j;
+            let e = by_key.entry(runs[i].config.key()).or_default();
+            e.0.push(pred);
+            e.1.push(truth);
+            all_preds.push(pred);
+            all_truths.push(truth);
+        }
+    }
+    let per_config = by_key
+        .into_iter()
+        .map(|(key, (preds, truths))| ConfigMape {
+            key,
+            mape: mape(&preds, &truths),
+            std_err: mape_std_err(&preds, &truths),
+            n: preds.len(),
+        })
+        .collect();
+    (
+        (mape(&all_preds, &all_truths), mape_std_err(&all_preds, &all_truths)),
+        per_config,
+    )
+}
+
+pub fn per_config_mape(
+    runs: &[RunRecord],
+    sync_db: &SyncDb,
+    opts: PiepOptions,
+    folds: usize,
+    seed: u64,
+) -> Vec<ConfigMape> {
+    cv_breakdown(runs, sync_db, opts, folds, seed).1
 }
 
 /// Leave-one-group-out evaluation: train on runs where `group(r)` is false,
@@ -183,6 +259,23 @@ mod tests {
         let (m, se) = cv_mape(&ds.runs, &ds.sync_db, PiepOptions::default(), 3, 7);
         assert!(m.is_finite() && m > 0.0 && m < 60.0, "mape={m}");
         assert!(se >= 0.0);
+    }
+
+    #[test]
+    fn per_config_mape_covers_every_config_key() {
+        let ds = dataset();
+        let cells = per_config_mape(&ds.runs, &ds.sync_db, PiepOptions::default(), 3, 7);
+        let keys: BTreeSet<String> = ds.runs.iter().map(|r| r.config.key()).collect();
+        assert_eq!(cells.len(), keys.len());
+        let mut total = 0usize;
+        for c in &cells {
+            assert!(keys.contains(&c.key));
+            assert!(c.mape.is_finite() && c.mape >= 0.0, "{}: {}", c.key, c.mape);
+            assert!(c.n > 0);
+            total += c.n;
+        }
+        // Every run is an out-of-fold test point exactly once.
+        assert_eq!(total, ds.runs.len());
     }
 
     #[test]

@@ -186,19 +186,33 @@ pub fn module_features(
     x[module_feat::MULTIPLICITY] = logf(multiplicity);
 
     if kind.is_comm() {
+        // Communicator geometry: under a hybrid mesh each collective runs
+        // over its strategy's own axis, not the full GPU count — AllReduce
+        // rings span the TP degree, stage transfers the pipeline axis, and
+        // payloads shrink with replica/microbatch sharding. Pure strategies
+        // reduce to the original whole-mesh descriptors.
         let g = r.config.gpus;
+        let par = r.config.parallelism;
+        let (tp, pp, dp) = (par.tensor_degree(g), par.pipeline_degree(g), par.data_degree(g));
+        let (ar_batch, p2p_micro, ag_batch) = if par.is_hybrid() {
+            let shard = (r.config.batch + dp - 1) / dp; // per-replica batch
+            let micro = (shard + pp - 1) / pp; // per-stage microbatch
+            (micro.max(1), micro.max(1), shard.max(1))
+        } else {
+            // Pure strategies keep the original whole-batch descriptors.
+            (r.config.batch, (r.config.batch + g - 1) / g, r.config.batch)
+        };
         let payload = match kind {
-            ModuleKind::AllReduce => r.spec.allreduce_payload_bytes(r.config.batch, 1),
-            ModuleKind::AllGather => r.spec.allgather_payload_bytes(r.config.batch),
-            ModuleKind::P2PTransfer => {
-                r.spec.p2p_payload_bytes((r.config.batch + g - 1) / g, 1)
-            }
+            ModuleKind::AllReduce => r.spec.allreduce_payload_bytes(ar_batch, 1),
+            ModuleKind::AllGather => r.spec.allgather_payload_bytes(ag_batch),
+            ModuleKind::P2PTransfer => r.spec.p2p_payload_bytes(p2p_micro, 1) / tp as f64,
             _ => 0.0,
         };
         x[module_feat::PAYLOAD_MB] = logf(payload / 1e6);
+        let ag_ring = if tp > 1 { tp } else { dp };
         x[module_feat::RING_STEPS] = match kind {
-            ModuleKind::AllReduce => (2 * g.saturating_sub(1)) as f64,
-            ModuleKind::AllGather => g.saturating_sub(1) as f64,
+            ModuleKind::AllReduce => (2 * tp.saturating_sub(1)) as f64,
+            ModuleKind::AllGather => ag_ring.saturating_sub(1) as f64,
             ModuleKind::P2PTransfer => 1.0,
             _ => 0.0,
         };
@@ -289,5 +303,24 @@ mod tests {
     #[test]
     fn feature_names_match_count() {
         assert_eq!(RUN_FEATURE_NAMES.len(), RUN_FEATURES);
+    }
+
+    #[test]
+    fn hybrid_comm_descriptors_use_strategy_axes() {
+        use crate::config::Strategy;
+        let par = crate::config::Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
+        let cfg = RunConfig::new("Vicuna-7B", par, 4, 8).with_seed(1);
+        let r = simulate_run(&cfg, &HwSpec::default(), &SimKnobs::default());
+        let ar = module_features(&r, ModuleKind::AllReduce, 64.0, None, FeatureOpts::default());
+        // AllReduce ring spans the TP axis (degree 2), not all 4 GPUs.
+        assert_eq!(ar[module_feat::RING_STEPS], 2.0);
+        // Payload reflects the per-stage microbatch (8 / 2 stages = 4), not
+        // the full batch.
+        let full = run_features(&r, FeatureOpts::default());
+        assert!(ar[module_feat::PAYLOAD_MB] > 0.0);
+        assert_eq!(full[module_feat::PAYLOAD_MB], 0.0);
+        let p2p = module_features(&r, ModuleKind::P2PTransfer, 1.0, None, FeatureOpts::default());
+        assert_eq!(p2p[module_feat::RING_STEPS], 1.0);
+        assert!(p2p[module_feat::PAYLOAD_MB] > 0.0);
     }
 }

@@ -4,9 +4,10 @@
 //!   profile     run a profiling campaign and print run summaries
 //!   train       fit PIE-P on a family and report CV error
 //!   predict     per-run prediction demo on a config
+//!   sweep       parallel sweep over the full paper + hybrid scenario grid
 //!   reproduce   regenerate paper tables/figures (`--all` or ids)
 //!   figure2..8, table2..9   individual experiments
-//!   runtime     PJRT smoke: load artifacts, run the functional forwards
+//!   runtime     validate AOT artifacts, exercise the prediction hot path
 //!   bench-sim   quick simulator throughput numbers
 //!
 //! Common flags: --passes N --steps N --seed N --out DIR --threads N
@@ -134,22 +135,172 @@ fn cmd_predict(args: &Args) {
 
 fn cmd_runtime(args: &Args) {
     let dir = args.get_or("artifacts", "artifacts");
-    let rt = piep::runtime::Runtime::load(dir).expect("load artifacts (run `make artifacts`)");
-    println!(
-        "PJRT {} with {} modules",
-        rt.client.platform_name(),
-        rt.modules.len()
-    );
-    for name in ["rmsnorm", "mlp", "self_attention", "block", "logits_head"] {
-        let inputs = rt.random_inputs(name, 1, 0.05).unwrap();
-        let t0 = std::time::Instant::now();
-        let out = rt.execute(name, &inputs).unwrap();
+    let rt = match piep::runtime::Runtime::load(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime: {e}");
+            eprintln!("hint: run `make artifacts` to generate the AOT manifest + HLO files");
+            return;
+        }
+    };
+    println!("{} — {} AOT modules validated", rt.platform_name(), rt.modules.len());
+    for c in rt.modules.values() {
         println!(
-            "  {name:<16} -> {:>8} f32 out in {:>8.2?}  (first: {:+.4})",
-            out.len(),
-            t0.elapsed(),
-            out[0]
+            "  {:<16} inputs {:?} -> output {:?}",
+            c.info.name, c.info.inputs, c.info.output
         );
+    }
+    // Exercise the prediction hot path (native ridge evaluation).
+    let mut rng = piep::util::rng::Rng::new(7);
+    let rows: Vec<Vec<f64>> = (0..rt.predict_batch)
+        .map(|_| (0..rt.feature_dim).map(|_| rng.range(-1.0, 1.0)).collect())
+        .collect();
+    let w: Vec<f64> = (0..rt.feature_dim).map(|_| rng.range(-0.5, 0.5)).collect();
+    let t0 = std::time::Instant::now();
+    let y = rt.predict_batch(&rows, &w, 0.25).expect("predict_batch");
+    println!(
+        "ridge_predict hot path: {} rows in {:?} (first: {:+.4})",
+        y.len(),
+        t0.elapsed(),
+        y.first().copied().unwrap_or(0.0)
+    );
+    let functional = rt
+        .random_inputs("block", 1, 0.05)
+        .and_then(|inputs| rt.execute("block", &inputs));
+    match functional {
+        Err(e) => println!("functional forwards: {e}"),
+        Ok(_) => println!("functional forwards: PJRT backend active"),
+    }
+}
+
+fn cmd_sweep(args: &Args) {
+    use piep::eval::sweep::{paper_scenarios, run_sweep, SweepOptions};
+    use piep::util::json::{arr, num, obj, s};
+    use piep::util::table::{fnum, pct, Table};
+
+    let campaign = {
+        let mut c = campaign_from(args);
+        // The sweep covers a much larger grid than one experiment; default
+        // to a lighter per-run sampling unless overridden.
+        c.passes = args.get_usize("passes", 3);
+        c.knobs.sim_decode_steps = args.get_usize("steps", 8);
+        c
+    };
+    let scenarios = paper_scenarios(&campaign.hw);
+    let total_cfgs: usize = scenarios.iter().map(|s| s.configs.len()).sum();
+    eprintln!(
+        "[sweep] {} scenarios, {} configs × {} passes",
+        scenarios.len(),
+        total_cfgs,
+        campaign.passes
+    );
+    let opts = SweepOptions {
+        campaign,
+        folds: args.get_usize("folds", 3),
+        parallel: !args.has("serial"),
+        threads: args.get_usize("threads", 0),
+        ..SweepOptions::default()
+    };
+
+    // --bench: time the serial baseline against the parallel engine on the
+    // same grid and record the perf-trajectory file.
+    if args.has("bench") {
+        let t0 = std::time::Instant::now();
+        let serial = run_sweep(&scenarios, &SweepOptions { parallel: false, ..opts.clone() });
+        let serial_s = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let parallel = run_sweep(&scenarios, &SweepOptions { parallel: true, ..opts.clone() });
+        let parallel_s = t1.elapsed().as_secs_f64();
+        let threads = piep::util::par::effective_threads(opts.threads);
+        println!(
+            "sweep bench: serial {serial_s:.2}s vs parallel {parallel_s:.2}s on {threads} threads ({:.2}x)",
+            serial_s / parallel_s.max(1e-9)
+        );
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.mape, b.mape, "{}: serial/parallel MAPE must agree", a.label);
+        }
+        let path = args.get_or("save-bench", "BENCH_sweep.json");
+        let j = obj(vec![
+            ("schema", s("piep-sweep-bench-v1")),
+            ("threads", num(threads as f64)),
+            ("passes", num(opts.campaign.passes as f64)),
+            ("sim_decode_steps", num(opts.campaign.knobs.sim_decode_steps as f64)),
+            ("configs", num(total_cfgs as f64)),
+            ("runs", num(parallel.iter().map(|r| r.runs).sum::<usize>() as f64)),
+            ("serial_wall_s", num(serial_s)),
+            ("parallel_wall_s", num(parallel_s)),
+            ("speedup", num(serial_s / parallel_s.max(1e-9))),
+            (
+                "scenarios",
+                arr(parallel
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("label", s(&r.label)),
+                            ("configs", num(r.configs as f64)),
+                            ("runs", num(r.runs as f64)),
+                            ("mape", num(r.mape)),
+                            ("wall_s", num(r.wall_s)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ]);
+        std::fs::write(path, j.render()).expect("write bench file");
+        println!("saved sweep baseline -> {path}");
+        return;
+    }
+
+    let t0 = std::time::Instant::now();
+    let results = run_sweep(&scenarios, &opts);
+    let wall = t0.elapsed();
+
+    let mut summary = Table::new(
+        "Sweep — PIE-P cross-validated MAPE per scenario (pure + hybrid)",
+        &["Scenario", "Configs", "Runs", "MAPE", "±se", "Wall s"],
+    );
+    for r in &results {
+        summary.row(vec![
+            r.label.clone(),
+            r.configs.to_string(),
+            r.runs.to_string(),
+            pct(r.mape),
+            fnum(r.std_err, 2),
+            fnum(r.wall_s, 1),
+        ]);
+    }
+    print!("{}", summary.render());
+    println!(
+        "[sweep] total {:?} ({}, {} threads)\n",
+        wall,
+        if opts.parallel { "parallel" } else { "serial" },
+        piep::util::par::effective_threads(opts.threads)
+    );
+
+    let mut per_config = Table::new(
+        "Sweep — per-config MAPE",
+        &["Scenario", "Config", "MAPE", "±se", "n"],
+    );
+    for r in &results {
+        for c in &r.per_config {
+            per_config.row(vec![
+                r.label.clone(),
+                c.key.clone(),
+                pct(c.mape),
+                fnum(c.std_err, 2),
+                c.n.to_string(),
+            ]);
+        }
+    }
+    if args.has("per-config") {
+        print!("{}", per_config.render());
+    }
+    let out = args.get_or("out", "reports");
+    for (t, slug) in [(&summary, "sweep_summary"), (&per_config, "sweep_per_config")] {
+        match t.save_csv(out, slug) {
+            Ok(path) => println!("  -> {path}"),
+            Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
+        }
     }
 }
 
@@ -217,6 +368,7 @@ fn main() {
         "profile" => cmd_profile(&args),
         "train" => cmd_train(&args),
         "predict" => cmd_predict(&args),
+        "sweep" => cmd_sweep(&args),
         "runtime" => cmd_runtime(&args),
         "bench-sim" => cmd_bench_sim(&args),
         "reproduce" => {
@@ -249,10 +401,13 @@ fn main() {
                  \x20 profile                    profile one configuration (passes × seeds)\n\
                  \x20 train                      fit PIE-P on a family, report 3-fold CV MAPE\n\
                  \x20 predict                    leave-variant-out prediction demo\n\
-                 \x20 runtime                    load AOT artifacts, execute module forwards (PJRT)\n\
+                 \x20 sweep                      parallel sweep: paper grid + hybrid meshes,\n\
+                 \x20                            per-config MAPE (--serial, --bench, --per-config)\n\
+                 \x20 runtime                    validate AOT artifacts, run the native hot path\n\
                  \x20 bench-sim                  simulator throughput check\n\n\
                  FLAGS\n\
-                 \x20 --model NAME --family NAME --parallelism tp|pp|dp --gpus N --batch N\n\
+                 \x20 --model NAME --family NAME --gpus N --batch N\n\
+                 \x20 --parallelism tp|pp|dp|<hybrid label, e.g. tp2xpp>\n\
                  \x20 --seq-out N --passes N --steps N --seed N --threads N --out DIR\n"
             );
         }

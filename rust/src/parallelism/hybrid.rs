@@ -1,0 +1,754 @@
+//! Hybrid-parallelism planner: composes two base strategies over a 2-D
+//! rank mesh (inner strategy within contiguous groups of `inner_degree`
+//! ranks, outer strategy across the groups).
+//!
+//! Three canonical combinations (see `config::Parallelism::hybrid`):
+//!
+//! * **TP×PP** — pipeline stages across groups, Megatron-style tensor
+//!   parallelism within each stage. Per-layer ring AllReduces stay
+//!   group-local; stage boundaries move shard-wise point-to-point
+//!   transfers (rank *i* of stage *s* feeds rank *i* of stage *s+1*);
+//!   the last stage collates its vocab-parallel logits with a group-local
+//!   AllGather. Decode steps serialize across the whole mesh (the token
+//!   sampled on the last stage feeds the first stage's embedding).
+//! * **TP×DP** — independent replicas across groups, TP within each; each
+//!   replica decodes its batch shard, then replicas synchronize once and
+//!   exchange final logits (terminal AllGather, ring across groups).
+//! * **PP×DP** — independent replicas across groups, a GPipe-style
+//!   pipeline within each; terminal replica collation as above.
+//!
+//! The planner reuses the pure planners' building blocks — the α–β
+//! collective cost models (`simulator::collective`), the roofline perf
+//! model, per-rank skew sampling, and `pipeline::stage_layers` — and
+//! mirrors their module sequences group-locally (the per-group loops are
+//! deliberately written out rather than delegating to `tensor::build` /
+//! `pipeline::build`, whose whole-mesh rank addressing and single
+//! `BuiltRun` output don't decompose; their unit tests pin the shared
+//! semantics). The result is that the profiler, feature pipeline, and
+//! PIE-P regressor consume hybrid runs unchanged.
+
+use std::ops::Range;
+
+use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs, Strategy};
+use crate::models::ModelSpec;
+use crate::simulator::collective;
+use crate::simulator::perf::{ModuleTiming, PerfModel};
+use crate::simulator::power::PowerModel;
+use crate::simulator::skew::SkewModel;
+use crate::simulator::timeline::{ModuleKind, PhaseKind, Timeline};
+use crate::util::rng::Rng;
+
+use super::pipeline::stage_layers;
+use super::BuiltRun;
+
+/// Per-run context shared by the mesh builders: the deterministic perf
+/// model, the sampled skew state, and the launch-desync scale.
+struct Mesh<'a> {
+    spec: &'a ModelSpec,
+    hw: &'a HwSpec,
+    perf: PerfModel,
+    skew: SkewModel,
+    power: &'a PowerModel,
+    sync_jitter: f64,
+}
+
+impl Mesh<'_> {
+    /// Skewed compute phase on every rank in `ranks`.
+    fn compute(
+        &self,
+        tl: &mut Timeline,
+        rng: &mut Rng,
+        ranks: Range<usize>,
+        t: ModuleTiming,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+    ) {
+        let p = self.power.gpu_power(PhaseKind::Compute, t.util);
+        for rank in ranks {
+            let dur = self.skew.sample_module(t.dur_s, rank, module, rng);
+            tl.push(rank, PhaseKind::Compute, module, layer, step, dur, p);
+        }
+    }
+
+    /// Group-local ring AllReduce with per-rank launch desynchronization
+    /// (the tensor planner's synchronization point). Returns bytes moved.
+    fn allreduce(
+        &self,
+        tl: &mut Timeline,
+        rng: &mut Rng,
+        waits: &mut Vec<f64>,
+        ranks: Range<usize>,
+        payload: f64,
+        layer: u16,
+        step: u32,
+    ) -> f64 {
+        let n = ranks.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        let wait_w = self.power.gpu_power(PhaseKind::Wait, 0.0);
+        let arrive_max = ranks
+            .clone()
+            .map(|r| tl.clock(r) + rng.exponential(self.sync_jitter))
+            .fold(0.0, f64::max);
+        for rank in ranks.clone() {
+            let w = tl.wait_until(rank, arrive_max, ModuleKind::AllReduce, layer, step, wait_w);
+            waits.push(w);
+        }
+        let cost = collective::allreduce(self.hw, n, payload);
+        let comm_w = self.power.gpu_power(PhaseKind::Transfer, 0.0);
+        for rank in ranks {
+            tl.push(rank, PhaseKind::Transfer, ModuleKind::AllReduce, layer, step, cost.transfer_s, comm_w);
+        }
+        cost.bytes_moved
+    }
+
+    /// Group-local barrier + ring AllGather (the logits / replica collation
+    /// point of the tensor and data planners). Returns bytes moved.
+    fn allgather(
+        &self,
+        tl: &mut Timeline,
+        waits: &mut Vec<f64>,
+        ranks: Range<usize>,
+        payload_per_rank: f64,
+        step: u32,
+    ) -> f64 {
+        let n = ranks.len();
+        if n <= 1 {
+            return 0.0;
+        }
+        let arrive = ranks.clone().map(|r| tl.clock(r)).fold(0.0, f64::max);
+        let wait_w = self.power.gpu_power(PhaseKind::Wait, 0.0);
+        for rank in ranks.clone() {
+            let w = tl.wait_until(rank, arrive, ModuleKind::AllGather, 0, step, wait_w);
+            waits.push(w);
+        }
+        let cost = collective::allgather(self.hw, n, payload_per_rank);
+        let comm_w = self.power.gpu_power(PhaseKind::Transfer, 0.0);
+        for rank in ranks {
+            tl.push(rank, PhaseKind::Transfer, ModuleKind::AllGather, 0, step, cost.transfer_s, comm_w);
+        }
+        cost.bytes_moved
+    }
+
+    /// Terminal cross-replica collation: global barrier over all ranks,
+    /// then an AllGather whose ring spans the `groups` replica groups.
+    fn terminal_collation(
+        &self,
+        tl: &mut Timeline,
+        waits: &mut Vec<f64>,
+        groups: usize,
+        payload_per_group: f64,
+        step: u32,
+    ) -> f64 {
+        let arrive = (0..tl.num_gpus).map(|r| tl.clock(r)).fold(0.0, f64::max);
+        let wait_w = self.power.gpu_power(PhaseKind::Wait, 0.0);
+        for rank in 0..tl.num_gpus {
+            let w = tl.wait_until(rank, arrive, ModuleKind::AllGather, 0, step, wait_w);
+            waits.push(w);
+        }
+        let cost = collective::allgather(self.hw, groups, payload_per_group);
+        let comm_w = self.power.gpu_power(PhaseKind::Transfer, 0.0);
+        for rank in 0..tl.num_gpus {
+            tl.push(rank, PhaseKind::Transfer, ModuleKind::AllGather, 0, step, cost.transfer_s, comm_w);
+        }
+        cost.bytes_moved
+    }
+}
+
+pub fn build(
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+    power: &PowerModel,
+    rng: &mut Rng,
+) -> BuiltRun {
+    let g = cfg.gpus;
+    let (inner, outer, di) = match cfg.parallelism {
+        Parallelism::Hybrid {
+            inner,
+            outer,
+            inner_degree,
+        } => (inner, outer, inner_degree),
+        other => panic!("hybrid planner invoked for {other:?}"),
+    };
+    assert!(
+        di >= 2 && g % di == 0 && g / di >= 2,
+        "invalid hybrid mesh: inner degree {di} over {g} GPUs"
+    );
+    let do_ = g / di;
+
+    let mesh = Mesh {
+        spec,
+        hw,
+        perf: PerfModel::new(hw),
+        skew: SkewModel::with_complexity(knobs, g, spec.complexity_factor(), rng),
+        power,
+        sync_jitter: knobs.sync_jitter_s
+            * spec.complexity_factor()
+            * rng.lognormal_mean_cv(1.0, knobs.sync_jitter_cv),
+    };
+    let mut tl = Timeline::new(g, power.gpu_power(PhaseKind::Idle, 0.0));
+    let mut waits = Vec::new();
+    let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
+
+    let (prefill_end, comm_bytes_per_step) = match (inner, outer) {
+        (Strategy::Tensor, Strategy::Pipeline) => {
+            tp_pp(&mesh, cfg, &mut tl, rng, &mut waits, di, do_, sim_steps)
+        }
+        (Strategy::Tensor, Strategy::Data) => {
+            tp_dp(&mesh, cfg, &mut tl, rng, &mut waits, di, do_, sim_steps)
+        }
+        (Strategy::Pipeline, Strategy::Data) => {
+            pp_dp(&mesh, cfg, &mut tl, rng, &mut waits, di, do_, sim_steps)
+        }
+        other => panic!("unsupported hybrid combination {other:?}"),
+    };
+
+    tl.finalize();
+    BuiltRun {
+        timeline: tl,
+        wait_samples: waits,
+        prefill_end,
+        sim_steps,
+        comm_bytes_per_step,
+    }
+}
+
+/// TP within each of `do_` pipeline stages: one pipelined pass (prefill or
+/// a decode step) over all microbatches. Returns total collective/P2P bytes
+/// moved during the pass.
+#[allow(clippy::too_many_arguments)]
+fn tp_pp_pass(
+    mesh: &Mesh,
+    cfg: &RunConfig,
+    tl: &mut Timeline,
+    rng: &mut Rng,
+    waits: &mut Vec<f64>,
+    di: usize,
+    do_: usize,
+    ranges: &[Range<usize>],
+    micro: usize,
+    num_micro: usize,
+    step: u32,
+    context: usize,
+    prefill: bool,
+) -> f64 {
+    let spec = mesh.spec;
+    let mut bytes = 0.0;
+    let mut prev_stage_ready = vec![0.0f64; num_micro];
+    let p2p_payload = if prefill {
+        spec.p2p_payload_bytes(micro, cfg.seq_in)
+    } else {
+        spec.p2p_payload_bytes(micro, 1)
+    };
+    let ar_payload = if prefill {
+        (micro * cfg.seq_in * spec.hidden * spec.dtype_bytes) as f64
+    } else {
+        spec.allreduce_payload_bytes(micro, 1)
+    };
+    for (stage, range) in ranges.iter().enumerate() {
+        let ranks = stage * di..(stage + 1) * di;
+        for mb in 0..num_micro {
+            if stage > 0 {
+                // Hop-local recv: every TP rank of the stage busy-waits for
+                // its shard of the boundary activations (the paper's
+                // timestamped producer→consumer interval).
+                let wait_w = mesh.power.gpu_power(PhaseKind::Wait, 0.0);
+                for rank in ranks.clone() {
+                    let waited = tl.wait_until(
+                        rank,
+                        prev_stage_ready[mb],
+                        ModuleKind::P2PTransfer,
+                        range.start as u16,
+                        step,
+                        wait_w,
+                    );
+                    if waited > 0.0 {
+                        waits.push(waited);
+                    }
+                }
+            }
+            if stage == 0 {
+                let t = if prefill {
+                    mesh.perf.embed_decode(spec, micro * cfg.seq_in)
+                } else {
+                    mesh.perf.embed_decode(spec, micro)
+                };
+                mesh.compute(tl, rng, ranks.clone(), t, ModuleKind::Embedding, 0, step);
+            }
+            for layer in range.clone() {
+                let (tn, ta, tm) = if prefill {
+                    (
+                        mesh.perf.norm_prefill(spec, micro, cfg.seq_in),
+                        mesh.perf.attn_prefill(spec, micro, cfg.seq_in, di),
+                        mesh.perf.mlp_prefill(spec, micro, cfg.seq_in, di),
+                    )
+                } else {
+                    (
+                        mesh.perf.norm_decode(spec, micro),
+                        mesh.perf.attn_decode(spec, micro, context, di),
+                        mesh.perf.mlp_decode(spec, micro, di),
+                    )
+                };
+                mesh.compute(tl, rng, ranks.clone(), tn, ModuleKind::Norm, layer as u16, step);
+                mesh.compute(tl, rng, ranks.clone(), ta, ModuleKind::SelfAttention, layer as u16, step);
+                bytes += mesh.allreduce(tl, rng, waits, ranks.clone(), ar_payload, layer as u16, step);
+                mesh.compute(tl, rng, ranks.clone(), tn, ModuleKind::Norm, layer as u16, step);
+                mesh.compute(tl, rng, ranks.clone(), tm, ModuleKind::Mlp, layer as u16, step);
+                bytes += mesh.allreduce(tl, rng, waits, ranks.clone(), ar_payload, layer as u16, step);
+            }
+            if stage + 1 == do_ {
+                // Vocab-parallel logits on the last stage's TP group, then
+                // the group-local shard AllGather (decode only).
+                mesh.compute(
+                    tl,
+                    rng,
+                    ranks.clone(),
+                    mesh.perf.logits_decode(spec, micro, di),
+                    ModuleKind::LogitsHead,
+                    0,
+                    step,
+                );
+                if !prefill {
+                    let shard_payload = spec.allgather_payload_bytes(micro) / di as f64;
+                    bytes += mesh.allgather(tl, waits, ranks.clone(), shard_payload, step);
+                }
+            } else {
+                // Shard-wise boundary send: rank i of this stage feeds rank
+                // i of the next stage (1/di of the activation tensor each).
+                let cost = collective::p2p(mesh.hw, p2p_payload / di as f64);
+                let comm_w = mesh.power.gpu_power(PhaseKind::Transfer, 0.0);
+                for rank in ranks.clone() {
+                    tl.push(
+                        rank,
+                        PhaseKind::Transfer,
+                        ModuleKind::P2PTransfer,
+                        range.end as u16,
+                        step,
+                        cost.transfer_s,
+                        comm_w,
+                    );
+                }
+                bytes += cost.bytes_moved * di as f64;
+                prev_stage_ready[mb] = ranks.clone().map(|r| tl.clock(r)).fold(0.0, f64::max);
+            }
+        }
+    }
+    bytes
+}
+
+#[allow(clippy::too_many_arguments)]
+fn tp_pp(
+    mesh: &Mesh,
+    cfg: &RunConfig,
+    tl: &mut Timeline,
+    rng: &mut Rng,
+    waits: &mut Vec<f64>,
+    di: usize,
+    do_: usize,
+    sim_steps: usize,
+) -> (f64, f64) {
+    let spec = mesh.spec;
+    let ranges = stage_layers(spec.layers, do_);
+    let micro = (cfg.batch + do_ - 1) / do_;
+    let num_micro = (cfg.batch + micro - 1) / micro;
+
+    tp_pp_pass(mesh, cfg, tl, rng, waits, di, do_, &ranges, micro, num_micro, 0, cfg.seq_in, true);
+    let prefill_end = tl.makespan();
+
+    let mut comm = 0.0;
+    for si in 0..sim_steps {
+        let step = (si + 1) as u32;
+        let frac = (si as f64 + 0.5) / sim_steps as f64;
+        let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
+        let b = tp_pp_pass(
+            mesh, cfg, tl, rng, waits, di, do_, &ranges, micro, num_micro, step, context, false,
+        );
+        if si == 0 {
+            comm = b;
+        }
+        // Autoregressive serialization: the token sampled on the last stage
+        // gates the next step's stage-0 embedding on every rank.
+        let token_ready = tl.makespan();
+        let wait_w = mesh.power.gpu_power(PhaseKind::Wait, 0.0);
+        for rank in 0..tl.num_gpus {
+            tl.wait_until(rank, token_ready, ModuleKind::P2PTransfer, 0, step, wait_w);
+        }
+    }
+    (prefill_end, comm)
+}
+
+/// TP within each of `do_` independent replicas; terminal collation across.
+#[allow(clippy::too_many_arguments)]
+fn tp_dp(
+    mesh: &Mesh,
+    cfg: &RunConfig,
+    tl: &mut Timeline,
+    rng: &mut Rng,
+    waits: &mut Vec<f64>,
+    di: usize,
+    do_: usize,
+    sim_steps: usize,
+) -> (f64, f64) {
+    let spec = mesh.spec;
+    let shard = (cfg.batch + do_ - 1) / do_;
+    let mut comm = 0.0;
+    let mut prefill_end = 0.0f64;
+
+    for rep in 0..do_ {
+        let ranks = rep * di..(rep + 1) * di;
+        // ---- Prefill within this replica group (tensor-planner semantics).
+        let prefill_payload = (shard * cfg.seq_in * spec.hidden * spec.dtype_bytes) as f64;
+        mesh.compute(
+            tl,
+            rng,
+            ranks.clone(),
+            mesh.perf.embed_decode(spec, shard * cfg.seq_in),
+            ModuleKind::Embedding,
+            0,
+            0,
+        );
+        for layer in 0..spec.layers as u16 {
+            mesh.compute(tl, rng, ranks.clone(), mesh.perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+            mesh.compute(
+                tl,
+                rng,
+                ranks.clone(),
+                mesh.perf.attn_prefill(spec, shard, cfg.seq_in, di),
+                ModuleKind::SelfAttention,
+                layer,
+                0,
+            );
+            mesh.allreduce(tl, rng, waits, ranks.clone(), prefill_payload, layer, 0);
+            mesh.compute(tl, rng, ranks.clone(), mesh.perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+            mesh.compute(
+                tl,
+                rng,
+                ranks.clone(),
+                mesh.perf.mlp_prefill(spec, shard, cfg.seq_in, di),
+                ModuleKind::Mlp,
+                layer,
+                0,
+            );
+            mesh.allreduce(tl, rng, waits, ranks.clone(), prefill_payload, layer, 0);
+        }
+        prefill_end = prefill_end.max(ranks.clone().map(|r| tl.clock(r)).fold(0.0, f64::max));
+
+        // ---- Decode steps within this replica group.
+        let decode_payload = spec.allreduce_payload_bytes(shard, 1);
+        for si in 0..sim_steps {
+            let step = (si + 1) as u32;
+            let frac = (si as f64 + 0.5) / sim_steps as f64;
+            let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
+            mesh.compute(tl, rng, ranks.clone(), mesh.perf.embed_decode(spec, shard), ModuleKind::Embedding, 0, step);
+            for layer in 0..spec.layers as u16 {
+                mesh.compute(tl, rng, ranks.clone(), mesh.perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+                mesh.compute(
+                    tl,
+                    rng,
+                    ranks.clone(),
+                    mesh.perf.attn_decode(spec, shard, context, di),
+                    ModuleKind::SelfAttention,
+                    layer,
+                    step,
+                );
+                let b1 = mesh.allreduce(tl, rng, waits, ranks.clone(), decode_payload, layer, step);
+                mesh.compute(tl, rng, ranks.clone(), mesh.perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+                mesh.compute(tl, rng, ranks.clone(), mesh.perf.mlp_decode(spec, shard, di), ModuleKind::Mlp, layer, step);
+                let b2 = mesh.allreduce(tl, rng, waits, ranks.clone(), decode_payload, layer, step);
+                if si == 0 {
+                    comm += b1 + b2;
+                }
+            }
+            // Vocab-parallel logits + group-local shard AllGather.
+            mesh.compute(
+                tl,
+                rng,
+                ranks.clone(),
+                mesh.perf.logits_decode(spec, shard, di),
+                ModuleKind::LogitsHead,
+                0,
+                step,
+            );
+            let shard_payload = spec.allgather_payload_bytes(shard) / di as f64;
+            let b = mesh.allgather(tl, waits, ranks.clone(), shard_payload, step);
+            if si == 0 {
+                comm += b;
+            }
+        }
+    }
+
+    let terminal = mesh.terminal_collation(
+        tl,
+        waits,
+        do_,
+        spec.allgather_payload_bytes(shard),
+        sim_steps as u32,
+    );
+    (prefill_end, comm + terminal / sim_steps as f64)
+}
+
+/// One pipelined pass within a replica group occupying ranks
+/// `base..base+stages`. Returns P2P bytes moved during the pass.
+#[allow(clippy::too_many_arguments)]
+fn pp_group_pass(
+    mesh: &Mesh,
+    cfg: &RunConfig,
+    tl: &mut Timeline,
+    rng: &mut Rng,
+    waits: &mut Vec<f64>,
+    base: usize,
+    stages: usize,
+    ranges: &[Range<usize>],
+    micro: usize,
+    num_micro: usize,
+    step: u32,
+    context: usize,
+    prefill: bool,
+) -> f64 {
+    let spec = mesh.spec;
+    let mut prev_stage_ready = vec![0.0f64; num_micro];
+    let payload = if prefill {
+        spec.p2p_payload_bytes(micro, cfg.seq_in)
+    } else {
+        spec.p2p_payload_bytes(micro, 1)
+    };
+    for (stage, range) in ranges.iter().enumerate() {
+        let rank = base + stage;
+        for mb in 0..num_micro {
+            if stage > 0 {
+                let waited = tl.wait_until(
+                    rank,
+                    prev_stage_ready[mb],
+                    ModuleKind::P2PTransfer,
+                    range.start as u16,
+                    step,
+                    mesh.power.gpu_power(PhaseKind::Wait, 0.0),
+                );
+                if waited > 0.0 {
+                    waits.push(waited);
+                }
+            }
+            if stage == 0 {
+                let t = if prefill {
+                    mesh.perf.embed_decode(spec, micro * cfg.seq_in)
+                } else {
+                    mesh.perf.embed_decode(spec, micro)
+                };
+                let dur = mesh.skew.sample(t.dur_s, rank, rng);
+                tl.push(rank, PhaseKind::Compute, ModuleKind::Embedding, 0, step, dur, mesh.power.gpu_power(PhaseKind::Compute, t.util));
+            }
+            for layer in range.clone() {
+                let (tn, ta, tm) = if prefill {
+                    (
+                        mesh.perf.norm_prefill(spec, micro, cfg.seq_in),
+                        mesh.perf.attn_prefill(spec, micro, cfg.seq_in, 1),
+                        mesh.perf.mlp_prefill(spec, micro, cfg.seq_in, 1),
+                    )
+                } else {
+                    (
+                        mesh.perf.norm_decode(spec, micro),
+                        mesh.perf.attn_decode(spec, micro, context, 1),
+                        mesh.perf.mlp_decode(spec, micro, 1),
+                    )
+                };
+                for (t, module) in [
+                    (tn, ModuleKind::Norm),
+                    (ta, ModuleKind::SelfAttention),
+                    (tn, ModuleKind::Norm),
+                    (tm, ModuleKind::Mlp),
+                ] {
+                    let dur = mesh.skew.sample_module(t.dur_s, rank, module, rng);
+                    tl.push(rank, PhaseKind::Compute, module, layer as u16, step, dur, mesh.power.gpu_power(PhaseKind::Compute, t.util));
+                }
+            }
+            if stage + 1 == stages {
+                let t = mesh.perf.logits_decode(spec, micro, 1);
+                let dur = mesh.skew.sample(t.dur_s, rank, rng);
+                tl.push(rank, PhaseKind::Compute, ModuleKind::LogitsHead, 0, step, dur, mesh.power.gpu_power(PhaseKind::Compute, t.util));
+            } else {
+                let cost = collective::p2p(mesh.hw, payload);
+                tl.push(
+                    rank,
+                    PhaseKind::Transfer,
+                    ModuleKind::P2PTransfer,
+                    range.end as u16,
+                    step,
+                    cost.transfer_s,
+                    mesh.power.gpu_power(PhaseKind::Transfer, 0.0),
+                );
+                prev_stage_ready[mb] = tl.clock(rank);
+            }
+        }
+    }
+    payload * (stages - 1) as f64 * num_micro as f64
+}
+
+/// A GPipe-style pipeline within each of `do_` independent replicas.
+#[allow(clippy::too_many_arguments)]
+fn pp_dp(
+    mesh: &Mesh,
+    cfg: &RunConfig,
+    tl: &mut Timeline,
+    rng: &mut Rng,
+    waits: &mut Vec<f64>,
+    di: usize,
+    do_: usize,
+    sim_steps: usize,
+) -> (f64, f64) {
+    let spec = mesh.spec;
+    let shard = (cfg.batch + do_ - 1) / do_;
+    let ranges = stage_layers(spec.layers, di);
+    let micro = (shard + di - 1) / di;
+    let num_micro = (shard + micro - 1) / micro;
+    let mut decode_bytes_group = 0.0;
+    let mut prefill_end = 0.0f64;
+
+    for rep in 0..do_ {
+        let base = rep * di;
+        pp_group_pass(
+            mesh, cfg, tl, rng, waits, base, di, &ranges, micro, num_micro, 0, cfg.seq_in, true,
+        );
+        prefill_end = prefill_end.max((base..base + di).map(|r| tl.clock(r)).fold(0.0, f64::max));
+
+        for si in 0..sim_steps {
+            let step = (si + 1) as u32;
+            let frac = (si as f64 + 0.5) / sim_steps as f64;
+            let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
+            let b = pp_group_pass(
+                mesh, cfg, tl, rng, waits, base, di, &ranges, micro, num_micro, step, context, false,
+            );
+            if si == 0 && rep == 0 {
+                decode_bytes_group = b;
+            }
+            // Group-local autoregressive step barrier.
+            let token_ready = (base..base + di).map(|r| tl.clock(r)).fold(0.0, f64::max);
+            let wait_w = mesh.power.gpu_power(PhaseKind::Wait, 0.0);
+            for stage in 0..di {
+                tl.wait_until(base + stage, token_ready, ModuleKind::P2PTransfer, 0, step, wait_w);
+            }
+        }
+    }
+
+    let terminal = mesh.terminal_collation(
+        tl,
+        waits,
+        do_,
+        spec.allgather_payload_bytes(shard),
+        sim_steps as u32,
+    );
+    (
+        prefill_end,
+        decode_bytes_group * do_ as f64 + terminal / sim_steps as f64,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+
+    fn build_run(inner: Strategy, outer: Strategy, di: usize, gpus: usize, seed: u64) -> BuiltRun {
+        let spec = by_name("Vicuna-7B").unwrap();
+        let hw = HwSpec::default();
+        let knobs = SimKnobs {
+            sim_decode_steps: 4,
+            ..SimKnobs::default()
+        };
+        let par = Parallelism::hybrid(inner, outer, di).unwrap();
+        let cfg = RunConfig::new("Vicuna-7B", par, gpus, 8).with_seed(seed);
+        let power = PowerModel::new(&hw);
+        let mut rng = Rng::new(seed);
+        build(&spec, &hw, &knobs, &cfg, &power, &mut rng)
+    }
+
+    fn count(r: &BuiltRun, module: ModuleKind, kind: PhaseKind) -> usize {
+        r.timeline
+            .phases
+            .iter()
+            .filter(|p| p.module == module && p.kind == kind)
+            .count()
+    }
+
+    #[test]
+    fn tp_pp_has_group_local_allreduce_and_boundary_p2p() {
+        let r = build_run(Strategy::Tensor, Strategy::Pipeline, 2, 4, 1);
+        // 2 AllReduces/layer × 32 layers × 2 microbatches × (prefill + 4
+        // decode passes) × 2 TP ranks per stage.
+        assert_eq!(count(&r, ModuleKind::AllReduce, PhaseKind::Transfer), 2 * 32 * 2 * 5 * 2);
+        // 1 stage boundary × 2 shard-wise sends × 2 microbatches × 5 passes.
+        assert_eq!(count(&r, ModuleKind::P2PTransfer, PhaseKind::Transfer), 2 * 2 * 5);
+        // Logits AllGather on the last stage's TP group, decode steps only.
+        assert_eq!(count(&r, ModuleKind::AllGather, PhaseKind::Transfer), 2 * 2 * 4);
+    }
+
+    #[test]
+    fn tp_dp_has_allreduce_and_allgather_but_no_p2p() {
+        let r = build_run(Strategy::Tensor, Strategy::Data, 2, 4, 2);
+        assert!(count(&r, ModuleKind::AllReduce, PhaseKind::Transfer) > 0);
+        assert!(count(&r, ModuleKind::AllGather, PhaseKind::Transfer) > 0);
+        assert_eq!(count(&r, ModuleKind::P2PTransfer, PhaseKind::Transfer), 0);
+    }
+
+    #[test]
+    fn pp_dp_has_p2p_and_allgather_but_no_allreduce() {
+        let r = build_run(Strategy::Pipeline, Strategy::Data, 2, 4, 3);
+        assert!(count(&r, ModuleKind::P2PTransfer, PhaseKind::Transfer) > 0);
+        // Terminal replica collation only: one transfer phase per rank.
+        assert_eq!(count(&r, ModuleKind::AllGather, PhaseKind::Transfer), 4);
+        assert_eq!(count(&r, ModuleKind::AllReduce, PhaseKind::Transfer), 0);
+    }
+
+    #[test]
+    fn waits_are_nonnegative_and_some_positive() {
+        for (inner, outer) in Parallelism::HYBRID_COMBOS {
+            let r = build_run(inner, outer, 2, 4, 4);
+            assert!(r.wait_samples.iter().all(|&w| w >= 0.0));
+            assert!(
+                r.wait_samples.iter().any(|&w| w > 0.0),
+                "{inner:?}x{outer:?} records waiting"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        for (inner, outer) in Parallelism::HYBRID_COMBOS {
+            let a = build_run(inner, outer, 2, 4, 9);
+            let b = build_run(inner, outer, 2, 4, 9);
+            assert_eq!(a.timeline.makespan(), b.timeline.makespan());
+            assert_eq!(a.wait_samples, b.wait_samples);
+        }
+    }
+
+    #[test]
+    fn replica_hybrids_end_synchronized() {
+        // The terminal collation aligns all ranks.
+        for (inner, outer) in [(Strategy::Tensor, Strategy::Data), (Strategy::Pipeline, Strategy::Data)] {
+            let r = build_run(inner, outer, 2, 4, 5);
+            let clocks: Vec<f64> = (0..4).map(|g| r.timeline.clock(g)).collect();
+            for c in &clocks {
+                assert!((c - clocks[0]).abs() < 1e-12, "{inner:?}x{outer:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn comm_bytes_and_prefill_tracked() {
+        for (inner, outer) in Parallelism::HYBRID_COMBOS {
+            let r = build_run(inner, outer, 2, 4, 6);
+            assert!(r.comm_bytes_per_step > 0.0, "{inner:?}x{outer:?}");
+            assert!(r.prefill_end > 0.0 && r.prefill_end < r.timeline.makespan());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid hybrid mesh")]
+    fn degenerate_mesh_rejected() {
+        // 2 GPUs with inner degree 2 leaves no outer axis.
+        build_run(Strategy::Tensor, Strategy::Pipeline, 2, 2, 1);
+    }
+}

@@ -9,9 +9,12 @@
 //!   and after the MLP (Megatron-style), logits AllGather at the head;
 //! * pipeline: stage-partitioned layers, point-to-point activation
 //!   transfers at stage boundaries, microbatch pipelining;
-//! * data: independent replicas, terminal output AllGather.
+//! * data: independent replicas, terminal output AllGather;
+//! * hybrid: pairwise compositions of the above over a 2-D rank mesh
+//!   (TP×PP, TP×DP, PP×DP), reusing the same communication points.
 
 pub mod data;
+pub mod hybrid;
 pub mod pipeline;
 pub mod tensor;
 

@@ -7,17 +7,16 @@
 //! campaign is exactly reproducible; passes of one config differ only by
 //! seed (the paper's repeated-runs distribution capture).
 //!
-//! Campaigns fan out over std::thread workers (the image has no tokio);
-//! the simulator is CPU-bound and embarrassingly parallel across runs.
+//! Campaigns fan out over the shared `util::par` thread pool (the image
+//! has no tokio/rayon); the simulator is CPU-bound and embarrassingly
+//! parallel across runs.
 
 pub mod store;
-
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::features::SyncDb;
 use crate::simulator::{simulate_run, RunRecord};
+use crate::util::par;
 
 /// A profiling campaign description.
 #[derive(Debug, Clone)]
@@ -60,35 +59,7 @@ impl Campaign {
             }
         }
 
-        let threads = if self.threads == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
-        } else {
-            self.threads
-        };
-
-        let next = AtomicUsize::new(0);
-        let out: Mutex<Vec<Option<RunRecord>>> = Mutex::new(vec![None; jobs.len()]);
-        std::thread::scope(|scope| {
-            for _ in 0..threads.min(jobs.len().max(1)) {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= jobs.len() {
-                        break;
-                    }
-                    let rec = simulate_run(&jobs[i], &self.hw, &self.knobs);
-                    out.lock().unwrap()[i] = Some(rec);
-                });
-            }
-        });
-
-        let runs: Vec<RunRecord> = out
-            .into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|r| r.expect("worker completed every job"))
-            .collect();
+        let runs = par::par_map(&jobs, self.threads, |cfg| simulate_run(cfg, &self.hw, &self.knobs));
         let sync_db = SyncDb::build(&runs);
         Dataset { runs, sync_db }
     }

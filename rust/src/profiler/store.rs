@@ -66,7 +66,7 @@ pub fn run_to_json(r: &RunRecord) -> Json {
         .collect();
     obj(vec![
         ("model", s(&r.config.model)),
-        ("parallelism", s(r.config.parallelism.name())),
+        ("parallelism", s(&r.config.parallelism.label())),
         ("gpus", num(r.config.gpus as f64)),
         ("batch", num(r.config.batch as f64)),
         ("seq_in", num(r.config.seq_in as f64)),
@@ -290,9 +290,17 @@ mod tests {
             },
             ..Campaign::default()
         };
+        let hybrid = Parallelism::hybrid(
+            crate::config::Strategy::Tensor,
+            crate::config::Strategy::Pipeline,
+            2,
+        )
+        .unwrap();
         c.profile(&[
             RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8),
             RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 16),
+            // Hybrid config: exercises the label()/parse() roundtrip.
+            RunConfig::new("Vicuna-7B", hybrid, 4, 8),
         ])
     }
 

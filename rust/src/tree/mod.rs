@@ -79,8 +79,15 @@ pub fn build(spec: &ModelSpec, parallelism: Parallelism, gpus: usize, include_co
     ];
     let mut root_children = vec![Node::leaf(ModuleKind::Embedding, 1.0)];
 
+    // Decompose the (possibly hybrid) parallelism into its per-strategy
+    // degrees; a hybrid contributes the communication modules of both of
+    // its component strategies.
     let comm = include_comm && gpus > 1;
-    if comm && parallelism == Parallelism::Tensor {
+    let tp = parallelism.tensor_degree(gpus);
+    let pp = parallelism.pipeline_degree(gpus);
+    let dp = parallelism.data_degree(gpus);
+
+    if comm && tp > 1 {
         // After attention out-projection and after the MLP (Section 4).
         block_children.push(Node::leaf(ModuleKind::AllReduce, 2.0));
     }
@@ -93,19 +100,15 @@ pub fn build(spec: &ModelSpec, parallelism: Parallelism, gpus: usize, include_co
     root_children.push(Node::leaf(ModuleKind::LogitsHead, 1.0));
 
     if comm {
-        match parallelism {
-            Parallelism::Tensor => {
-                // Vocab-parallel logits collation.
-                root_children.push(Node::leaf(ModuleKind::AllGather, 1.0));
-            }
-            Parallelism::Pipeline => {
-                // One transfer node per stage boundary.
-                root_children.push(Node::leaf(ModuleKind::P2PTransfer, (gpus - 1) as f64));
-            }
-            Parallelism::Data => {
-                // The batch-output module: terminal collation (Appendix E).
-                root_children.push(Node::leaf(ModuleKind::AllGather, 1.0));
-            }
+        // Vocab-parallel logits collation (TP) and/or terminal replica
+        // collation (DP, Appendix E) — one AllGather node each.
+        let allgathers = usize::from(tp > 1) + usize::from(dp > 1);
+        if allgathers > 0 {
+            root_children.push(Node::leaf(ModuleKind::AllGather, allgathers as f64));
+        }
+        if pp > 1 {
+            // One transfer node per stage boundary.
+            root_children.push(Node::leaf(ModuleKind::P2PTransfer, (pp - 1) as f64));
         }
     }
 
@@ -177,6 +180,33 @@ mod tests {
             .find(|(k, _)| *k == ModuleKind::AllGather)
             .unwrap();
         assert_eq!(ag.1, 1.0);
+    }
+
+    #[test]
+    fn hybrid_trees_compose_both_strategies_comm_modules() {
+        use crate::config::Strategy;
+        let spec = by_name("Vicuna-7B").unwrap();
+
+        let tp_pp = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
+        let leaves = build(&spec, tp_pp, 4, true).leaf_multiplicities();
+        let get = |kind: ModuleKind| leaves.iter().find(|(k, _)| *k == kind).map(|(_, m)| *m);
+        assert_eq!(get(ModuleKind::AllReduce), Some(64.0)); // 2 × 32 blocks
+        assert_eq!(get(ModuleKind::P2PTransfer), Some(1.0)); // 2 stages → 1 boundary
+        assert_eq!(get(ModuleKind::AllGather), Some(1.0)); // logits collation
+
+        let tp_dp = Parallelism::hybrid(Strategy::Tensor, Strategy::Data, 2).unwrap();
+        let leaves = build(&spec, tp_dp, 4, true).leaf_multiplicities();
+        let get = |kind: ModuleKind| leaves.iter().find(|(k, _)| *k == kind).map(|(_, m)| *m);
+        assert_eq!(get(ModuleKind::AllReduce), Some(64.0));
+        assert_eq!(get(ModuleKind::AllGather), Some(2.0)); // logits + terminal
+        assert_eq!(get(ModuleKind::P2PTransfer), None);
+
+        let pp_dp = Parallelism::hybrid(Strategy::Pipeline, Strategy::Data, 2).unwrap();
+        let leaves = build(&spec, pp_dp, 4, true).leaf_multiplicities();
+        let get = |kind: ModuleKind| leaves.iter().find(|(k, _)| *k == kind).map(|(_, m)| *m);
+        assert_eq!(get(ModuleKind::AllReduce), None);
+        assert_eq!(get(ModuleKind::P2PTransfer), Some(1.0));
+        assert_eq!(get(ModuleKind::AllGather), Some(1.0)); // terminal collation
     }
 
     #[test]

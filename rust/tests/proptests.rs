@@ -8,6 +8,11 @@ use piep::simulator::timeline::ModuleKind;
 use piep::util::prop::{ensure, forall};
 use piep::util::rng::Rng;
 
+/// All hybrid parallelisms realizable on a 4-GPU mesh (the testbed size).
+fn hybrids4() -> Vec<Parallelism> {
+    piep::workload::hybrid_parallelisms(4)
+}
+
 const MODELS: [&str; 6] = [
     "Vicuna-7B",
     "Vicuna-13B",
@@ -102,6 +107,42 @@ fn prop_comm_modules_match_parallelism() {
                     ensure(!has(ModuleKind::AllReduce), "DP has no AllReduce")?;
                     ensure(!has(ModuleKind::P2PTransfer), "DP has no P2P")?;
                 }
+                Parallelism::Hybrid { .. } => unreachable!("pure strategies only here"),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hybrid_energy_and_comm_invariants() {
+    // Hybrid meshes satisfy the same accounting invariants as the pure
+    // strategies, and carry exactly their component strategies' comm
+    // modules (AllReduce ⇔ TP axis, P2P ⇔ PP axis, AllGather ⇔ TP or DP).
+    let hw = HwSpec::default();
+    let k = knobs();
+    forall(108, 20, |r| (r.below(MODELS.len()), 8usize << r.below(3), r.next_u64() & 0xffff), |t| {
+        for par in hybrids4() {
+            let cfg = RunConfig::new(MODELS[t.0], par, 4, t.1).with_seed(t.2);
+            let spec = piep::models::by_name(&cfg.model).unwrap();
+            if !piep::workload::runnable(&spec, par, cfg.gpus, &hw) {
+                continue;
+            }
+            let r = simulate_run(&cfg, &hw, &k);
+            ensure(r.true_total_j > r.gpu_energy_j && r.gpu_energy_j > 0.0, "energy accounting")?;
+            let module_sum: f64 = r.module_energy_j.values().sum();
+            ensure(module_sum <= r.true_total_j * 1.001, "module sum bounded by total")?;
+            ensure(!r.wait_samples.is_empty(), "hybrids sample waits")?;
+            let has = |m: ModuleKind| r.module_energy_j.get(&m).copied().unwrap_or(0.0) > 0.0;
+            ensure(has(ModuleKind::AllReduce) == (par.tensor_degree(4) > 1), "AllReduce ⇔ TP axis")?;
+            ensure(has(ModuleKind::P2PTransfer) == (par.pipeline_degree(4) > 1), "P2P ⇔ PP axis")?;
+            ensure(has(ModuleKind::AllGather), "hybrids collate output")?;
+            // Tree leaves cover everything the profiler attributes.
+            let tree = piep::tree::build(&spec, par, cfg.gpus, true);
+            let leaves: Vec<ModuleKind> =
+                tree.leaf_multiplicities().into_iter().map(|(kind, _)| kind).collect();
+            for m in r.module_energy_j.keys() {
+                ensure(leaves.contains(m), format!("{par:?}: {m:?} missing from tree"))?;
             }
         }
         Ok(())
