@@ -6,14 +6,19 @@
 //!          loaded and ABI-validated; the functional-forward path
 //!          additionally needs a PJRT-enabled build (the offline image has
 //!          no `xla` crate), so it is reported and skipped gracefully.
-//!   L3     The profiling campaign runs over pure TP *and* a hybrid
-//!          TP×PP mesh, PIE-P trains on the measurements, and the fitted
-//!          MLP leaf regressor is evaluated through the runtime's batched
+//!   L3     A run configuration is lowered into the shared **Plan IR**,
+//!          executed by the per-rank discrete-event engine (serial and
+//!          parallel rank materialization cross-checked bit-for-bit, with
+//!          the sync-wait vs transfer energy split printed), then the
+//!          profiling campaign runs over pure TP *and* a hybrid TP×PP
+//!          mesh, PIE-P trains on the measurements, and the fitted MLP
+//!          leaf regressor is evaluated through the runtime's batched
 //!          `ridge_predict` hot path, cross-checked against direct CPU
 //!          math.
 //!
-//! Prints the headline numbers: training set size, model-level MAPE on
-//! held-out runs (pure and hybrid), and hot-path agreement.
+//! Prints the headline numbers: plan shape, sync/transfer isolation,
+//! training set size, model-level MAPE on held-out runs (pure and hybrid),
+//! and hot-path agreement.
 //!
 //! Run with: `cargo run --release --example end_to_end`
 
@@ -26,6 +31,7 @@ use piep::predict::{PieP, PiepOptions};
 use piep::profiler::Campaign;
 use piep::runtime::Runtime;
 use piep::simulator::timeline::ModuleKind;
+use piep::tree::Leaf;
 use piep::util::stats::mape;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -45,7 +51,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
     };
 
-    // ---------- Layer 3: profile → train → evaluate ----------------------
+    // ---------- Plan IR: lower once, execute through the event engine ----
     let campaign = Campaign {
         passes: 5,
         knobs: SimKnobs {
@@ -56,6 +62,49 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     };
     let tp2pp = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2)
         .expect("canonical hybrid");
+    {
+        let cfg = RunConfig::new("Vicuna-13B", tp2pp, 4, 32).with_seed(99);
+        let spec = piep::models::by_name(&cfg.model).unwrap();
+        let plan = piep::parallelism::lower(&spec, &campaign.hw, &campaign.knobs, &cfg);
+        let (compute, coll, send, recv) = plan.op_census();
+        println!(
+            "\n[plan] {} lowers to {} ops over {} ranks: {compute} compute, \
+             {coll} collectives, {send} sends / {recv} recvs on {} P2P edges",
+            cfg.key(),
+            plan.ops.len(),
+            plan.num_ranks,
+            plan.num_edges,
+        );
+        // One stochastic execution per engine mode — bit-identical.
+        let exec = |threads: usize| {
+            let knobs = SimKnobs {
+                engine_threads: threads,
+                ..campaign.knobs.clone()
+            };
+            piep::simulator::simulate_run_planned(&cfg, &campaign.hw, &knobs, &plan)
+        };
+        let serial = exec(1);
+        let parallel = exec(0);
+        assert_eq!(serial.true_total_j, parallel.true_total_j);
+        assert_eq!(serial.wait_samples, parallel.wait_samples);
+        println!("[engine] serial and parallel rank execution agree bit-for-bit");
+        println!("[engine] sync-wait vs transfer energy isolation (wall J):");
+        for (kind, (wait, xfer)) in &serial.comm_split_j {
+            println!(
+                "  {:<16} sync-wait {:>8.1}  transfer {:>8.1}  ({:.0}% waiting)",
+                kind.name(),
+                wait,
+                xfer,
+                100.0 * wait / (wait + xfer).max(1e-12)
+            );
+        }
+        let covered: f64 =
+            serial.module_energy_j.values().sum::<f64>() + serial.unattributed_j;
+        assert!((covered - serial.true_total_j).abs() / serial.true_total_j < 1e-9);
+        println!("[engine] attribution conserves total energy to 1e-9");
+    }
+
+    // ---------- Layer 3: profile → train → evaluate ----------------------
     let mut grid = Vec::new();
     for model in ["Vicuna-7B", "Vicuna-13B", "Vicuna-33B"] {
         let spec = piep::models::by_name(model).unwrap();
@@ -71,7 +120,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
     }
     println!(
-        "\n[l3] profiling {} configs × {} passes (pure TP + tp2xpp hybrid) ...",
+        "\n[l3] profiling {} configs × {} passes (pure TP + tp2xpp hybrid, plan-cached) ...",
         grid.len(),
         campaign.passes
     );
@@ -105,14 +154,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // ---------- Prediction hot path --------------------------------------
     // Evaluate the fitted MLP leaf regressor for every test run through the
     // runtime's batched path and cross-check against direct CPU math.
-    let leaf = piep.leaf.get(&ModuleKind::Mlp).expect("mlp leaf");
+    let leaf = piep
+        .leaf
+        .get(&Leaf::compute(ModuleKind::Mlp))
+        .expect("mlp leaf");
     let (w, b) = leaf.flatten();
     let rows: Vec<Vec<f64>> = test
         .iter()
         .map(|r| {
             module_features(
                 r,
-                ModuleKind::Mlp,
+                Leaf::compute(ModuleKind::Mlp),
                 r.spec.layers as f64,
                 Some(&ds.sync_db),
                 FeatureOpts::default(),

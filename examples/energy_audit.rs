@@ -35,17 +35,21 @@ fn audit(model: &str, gpus: usize, hw: &HwSpec, knobs: &SimKnobs) {
         let bar = "#".repeat((share / 2.0).round() as usize);
         println!("  {:<20} {:>7.2} Wh {:>5.1}%  {}", k.name(), wh, share, bar);
     }
-    let (wait, xfer) = (
-        mean(&passes.iter().map(|r| r.allreduce_split_j.0).collect::<Vec<_>>()),
-        mean(&passes.iter().map(|r| r.allreduce_split_j.1).collect::<Vec<_>>()),
-    );
-    if wait + xfer > 0.0 {
-        println!(
-            "  AllReduce split: waiting {:.2} Wh / transfer {:.2} Wh ({:.0}% waiting)",
-            wait / 3600.0,
-            xfer / 3600.0,
-            100.0 * wait / (wait + xfer)
+    // Phase-resolved comm split (sync-wait vs transfer) per comm module.
+    for k in ModuleKind::ALL.iter().filter(|k| k.is_comm()) {
+        let (wait, xfer) = (
+            mean(&passes.iter().map(|r| r.comm_split_j.get(k).map_or(0.0, |s| s.0)).collect::<Vec<_>>()),
+            mean(&passes.iter().map(|r| r.comm_split_j.get(k).map_or(0.0, |s| s.1)).collect::<Vec<_>>()),
         );
+        if wait + xfer > 0.0 {
+            println!(
+                "  {} split: waiting {:.2} Wh / transfer {:.2} Wh ({:.0}% waiting)",
+                k.name(),
+                wait / 3600.0,
+                xfer / 3600.0,
+                100.0 * wait / (wait + xfer)
+            );
+        }
     }
 }
 

@@ -17,6 +17,7 @@ use piep::predict::{PieP, PiepOptions};
 use piep::profiler::Campaign;
 use piep::simulator::simulate_run;
 use piep::simulator::timeline::ModuleKind;
+use piep::tree::Leaf;
 
 fn bench(name: &str, iters: usize, mut f: impl FnMut(usize)) -> f64 {
     // Warmup.
@@ -75,7 +76,7 @@ fn main() {
     let per_feat = bench("features/module_vector", 20_000, |_| {
         black_box(module_features(
             &r0,
-            ModuleKind::AllReduce,
+            Leaf::transfer(ModuleKind::AllReduce),
             64.0,
             Some(&ds.sync_db),
             FeatureOpts::default(),
@@ -105,13 +106,13 @@ fn main() {
     // --- PJRT batched predict ----------------------------------------------
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let rt = piep::runtime::Runtime::load("artifacts").expect("artifacts");
-        let leaf = piep.leaf.get(&ModuleKind::Mlp).unwrap();
+        let leaf = piep.leaf.get(&Leaf::compute(ModuleKind::Mlp)).unwrap();
         let (w, b) = leaf.flatten();
         let rows: Vec<Vec<f64>> = (0..256)
             .map(|i| {
                 module_features(
                     &ds.runs[i % ds.runs.len()],
-                    ModuleKind::Mlp,
+                    Leaf::compute(ModuleKind::Mlp),
                     32.0,
                     Some(&ds.sync_db),
                     FeatureOpts::default(),

@@ -199,6 +199,11 @@ pub struct SimKnobs {
     /// extrapolated with CLT-scaled variance; the paper's profiler samples
     /// the same way).
     pub sim_decode_steps: usize,
+    /// Worker threads for the event engine's per-rank phase
+    /// materialization (`simulator::engine`): 1 ⇒ serial (the default —
+    /// campaigns already parallelize across runs), 0 ⇒ available cores.
+    /// Serial and parallel execution are bit-identical.
+    pub engine_threads: usize,
 }
 
 impl Default for SimKnobs {
@@ -222,6 +227,7 @@ impl Default for SimKnobs {
             background_p: 0.70,
             background_mean_w: 155.0,
             sim_decode_steps: 24,
+            engine_threads: 1,
         }
     }
 }

@@ -3,9 +3,11 @@
 //! Three groups: resource-utilization features (cross-GPU statistical
 //! aggregates — mean/std/min/max — for scalability across parallelization
 //! degrees), execution features, and the model-structure features PIE-P
-//! adds. Module-level samples append module descriptors (FLOPs, payload,
-//! ring steps) and the synchronization-sampling statistics for
-//! communication modules.
+//! adds. Module-level samples append module descriptors keyed by the tree
+//! leaf's *part* (see `tree::LeafPart`): compute leaves carry FLOPs,
+//! transfer leaves carry payload/ring geometry, and sync-wait leaves carry
+//! the synchronization-sampling statistics plus a part indicator — the
+//! phase-resolved attribution threaded up from the event engine.
 //!
 //! The vector is padded to `FEATURE_DIM` = 48, which is part of the AOT
 //! artifact ABI (`python/compile/model.py::FEATURE_DIM`): the batched
@@ -16,6 +18,7 @@ pub mod sync;
 use crate::models::{flops, ModelSpec};
 use crate::simulator::run::RunRecord;
 use crate::simulator::timeline::ModuleKind;
+use crate::tree::{Leaf, LeafPart};
 use crate::util::stats::Aggregates;
 
 pub use sync::SyncDb;
@@ -72,6 +75,8 @@ pub mod module_feat {
     pub const WAIT_STD_MS: usize = super::RUN_FEATURES + 5;
     pub const COMM_MBPS_STEP: usize = super::RUN_FEATURES + 6;
     pub const MULTIPLICITY: usize = super::RUN_FEATURES + 7;
+    /// 1.0 on synchronization-wait leaves, 0.0 elsewhere.
+    pub const IS_SYNC: usize = super::RUN_FEATURES + 8;
 }
 
 /// Indices of the model-structure features (for the Table-9 ablation).
@@ -165,18 +170,20 @@ fn module_flops_b(spec: &ModelSpec, kind: ModuleKind, context: usize) -> f64 {
     v / 1e9
 }
 
-/// Full module-level feature vector: run features + module descriptors.
+/// Full module-level feature vector for one tree leaf: run features +
+/// part-specific descriptors.
 ///
 /// Wait statistics come from the *offline* synchronization-sampling
 /// database (`SyncDb`), never from the run's own measured waits — this is
 /// what makes the features legal at prediction time for unseen runs.
 pub fn module_features(
     r: &RunRecord,
-    kind: ModuleKind,
+    leaf: Leaf,
     multiplicity: f64,
     sync_db: Option<&SyncDb>,
     opts: FeatureOpts,
 ) -> Vec<f64> {
+    let kind = leaf.kind;
     let mut x = run_features(r, opts);
     let context = r.config.seq_in + r.config.seq_out / 2;
     x[module_feat::FLOPS_B] = logf(module_flops_b(&r.spec, kind, context));
@@ -202,13 +209,8 @@ pub fn module_features(
             // Pure strategies keep the original whole-batch descriptors.
             (r.config.batch, (r.config.batch + g - 1) / g, r.config.batch)
         };
-        let payload = match kind {
-            ModuleKind::AllReduce => r.spec.allreduce_payload_bytes(ar_batch, 1),
-            ModuleKind::AllGather => r.spec.allgather_payload_bytes(ag_batch),
-            ModuleKind::P2PTransfer => r.spec.p2p_payload_bytes(p2p_micro, 1) / tp as f64,
-            _ => 0.0,
-        };
-        x[module_feat::PAYLOAD_MB] = logf(payload / 1e6);
+        // The ring geometry shapes both the transfer time and the number of
+        // rendezvous participants, so both parts carry it.
         let ag_ring = if tp > 1 { tp } else { dp };
         x[module_feat::RING_STEPS] = match kind {
             ModuleKind::AllReduce => (2 * tp.saturating_sub(1)) as f64,
@@ -216,12 +218,25 @@ pub fn module_features(
             ModuleKind::P2PTransfer => 1.0,
             _ => 0.0,
         };
-        x[module_feat::COMM_MBPS_STEP] = logf(r.comm_bytes_per_step / 1e6);
-        if opts.use_wait {
-            if let Some(db) = sync_db {
-                let (wm, ws) = db.wait_estimate(r);
-                x[module_feat::WAIT_MEAN_MS] = wm * 1e3;
-                x[module_feat::WAIT_STD_MS] = ws * 1e3;
+        if leaf.part == LeafPart::Transfer {
+            // Payload-driven descriptors belong to the transfer phase.
+            let payload = match kind {
+                ModuleKind::AllReduce => r.spec.allreduce_payload_bytes(ar_batch, 1),
+                ModuleKind::AllGather => r.spec.allgather_payload_bytes(ag_batch),
+                ModuleKind::P2PTransfer => r.spec.p2p_payload_bytes(p2p_micro, 1) / tp as f64,
+                _ => 0.0,
+            };
+            x[module_feat::PAYLOAD_MB] = logf(payload / 1e6);
+            x[module_feat::COMM_MBPS_STEP] = logf(r.comm_bytes_per_step / 1e6);
+        }
+        if leaf.part == LeafPart::Sync {
+            x[module_feat::IS_SYNC] = 1.0;
+            if opts.use_wait {
+                if let Some(db) = sync_db {
+                    let (wm, ws) = db.wait_estimate(r);
+                    x[module_feat::WAIT_MEAN_MS] = wm * 1e3;
+                    x[module_feat::WAIT_STD_MS] = ws * 1e3;
+                }
             }
         }
     }
@@ -245,8 +260,9 @@ mod tests {
         assert_eq!(x.len(), FEATURE_DIM);
         // Module slots are zero at run level.
         assert_eq!(x[module_feat::PAYLOAD_MB], 0.0);
+        assert_eq!(x[module_feat::IS_SYNC], 0.0);
         // Padding tail is zero.
-        assert!(x[40..].iter().all(|&v| v == 0.0));
+        assert!(x[41..].iter().all(|&v| v == 0.0));
     }
 
     #[test]
@@ -269,20 +285,63 @@ mod tests {
     }
 
     #[test]
-    fn comm_module_gets_payload_and_steps() {
+    fn transfer_leaf_gets_payload_sync_leaf_gets_marker() {
         let r = record();
-        let x = module_features(
+        let xfer = module_features(
             &r,
-            crate::simulator::timeline::ModuleKind::AllReduce,
+            Leaf::transfer(ModuleKind::AllReduce),
             64.0,
             None,
             FeatureOpts::default(),
         );
-        assert!(x[module_feat::PAYLOAD_MB] > 0.0);
-        assert_eq!(x[module_feat::RING_STEPS], 2.0);
-        assert_eq!(x[module_feat::MULTIPLICITY], 64.0f64.ln_1p());
+        assert!(xfer[module_feat::PAYLOAD_MB] > 0.0);
+        assert_eq!(xfer[module_feat::RING_STEPS], 2.0);
+        assert_eq!(xfer[module_feat::MULTIPLICITY], 64.0f64.ln_1p());
+        assert_eq!(xfer[module_feat::IS_SYNC], 0.0);
+
+        let sync = module_features(
+            &r,
+            Leaf::sync(ModuleKind::AllReduce),
+            64.0,
+            None,
+            FeatureOpts::default(),
+        );
+        assert_eq!(sync[module_feat::PAYLOAD_MB], 0.0);
+        assert_eq!(sync[module_feat::RING_STEPS], 2.0);
+        assert_eq!(sync[module_feat::IS_SYNC], 1.0);
         // No sync DB provided ⇒ wait slots zero.
-        assert_eq!(x[module_feat::WAIT_MEAN_MS], 0.0);
+        assert_eq!(sync[module_feat::WAIT_MEAN_MS], 0.0);
+    }
+
+    #[test]
+    fn sync_leaf_wait_features_come_from_the_db() {
+        let runs: Vec<RunRecord> = (0..4u64)
+            .map(|s| {
+                let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8).with_seed(s);
+                simulate_run(&cfg, &HwSpec::default(), &SimKnobs::default())
+            })
+            .collect();
+        let db = SyncDb::build(&runs);
+        let x = module_features(
+            &runs[0],
+            Leaf::sync(ModuleKind::AllReduce),
+            64.0,
+            Some(&db),
+            FeatureOpts::default(),
+        );
+        assert!(x[module_feat::WAIT_MEAN_MS] > 0.0);
+        // The w/o-waiting ablation drops them even with a DB at hand.
+        let ablated = module_features(
+            &runs[0],
+            Leaf::sync(ModuleKind::AllReduce),
+            64.0,
+            Some(&db),
+            FeatureOpts {
+                use_wait: false,
+                ..FeatureOpts::default()
+            },
+        );
+        assert_eq!(ablated[module_feat::WAIT_MEAN_MS], 0.0);
     }
 
     #[test]
@@ -290,7 +349,7 @@ mod tests {
         let r = record();
         let x = module_features(
             &r,
-            crate::simulator::timeline::ModuleKind::Mlp,
+            Leaf::compute(ModuleKind::Mlp),
             32.0,
             None,
             FeatureOpts::default(),
@@ -311,7 +370,13 @@ mod tests {
         let par = crate::config::Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
         let cfg = RunConfig::new("Vicuna-7B", par, 4, 8).with_seed(1);
         let r = simulate_run(&cfg, &HwSpec::default(), &SimKnobs::default());
-        let ar = module_features(&r, ModuleKind::AllReduce, 64.0, None, FeatureOpts::default());
+        let ar = module_features(
+            &r,
+            Leaf::transfer(ModuleKind::AllReduce),
+            64.0,
+            None,
+            FeatureOpts::default(),
+        );
         // AllReduce ring spans the TP axis (degree 2), not all 4 GPUs.
         assert_eq!(ar[module_feat::RING_STEPS], 2.0);
         // Payload reflects the per-stage microbatch (8 / 2 stages = 4), not
@@ -319,7 +384,13 @@ mod tests {
         let full = run_features(&r, FeatureOpts::default());
         assert!(ar[module_feat::PAYLOAD_MB] > 0.0);
         assert_eq!(full[module_feat::PAYLOAD_MB], 0.0);
-        let p2p = module_features(&r, ModuleKind::P2PTransfer, 1.0, None, FeatureOpts::default());
+        let p2p = module_features(
+            &r,
+            Leaf::transfer(ModuleKind::P2PTransfer),
+            1.0,
+            None,
+            FeatureOpts::default(),
+        );
         assert_eq!(p2p[module_feat::RING_STEPS], 1.0);
         assert!(p2p[module_feat::PAYLOAD_MB] > 0.0);
     }

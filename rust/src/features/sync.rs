@@ -1,13 +1,17 @@
 //! Synchronization sampling (the paper's key idea (i), Section 4).
 //!
-//! During offline profiling we record the full distribution of per-rank
-//! waiting times at tensor-parallel collectives. Rather than memorizing
+//! During offline profiling the event engine records the full distribution
+//! of per-rank waiting times at every rendezvous. Rather than memorizing
 //! absolute waits per configuration (which would not transfer to unseen
 //! variants), the database stores waits *normalized by the per-layer
-//! compute interval* between synchronization points, grouped by GPU count:
-//! skew-induced waiting scales with the compute phase it trails. At
-//! prediction time the estimate is `κ(g) × (decode time / steps / layers)`
-//! computed purely from the target run's execution features.
+//! compute interval* between synchronization points, grouped by
+//! (parallelism, GPU count): skew-induced waiting scales with the compute
+//! phase it trails. At prediction time the estimate is
+//! `κ(g) × (decode time / steps / layers)` computed purely from the target
+//! run's execution features; it populates the wait descriptors of the
+//! *sync-wait leaves* of the expanded model tree (`tree::LeafPart::Sync`),
+//! the leaves whose energy target is the phase-resolved waiting energy the
+//! engine isolates.
 
 use std::collections::BTreeMap;
 

@@ -24,6 +24,7 @@ pub mod eval;
 pub mod features;
 pub mod models;
 pub mod parallelism;
+pub mod plan;
 pub mod predict;
 pub mod profiler;
 pub mod report;

@@ -22,6 +22,7 @@ fn campaign_from(args: &Args) -> Campaign {
     c.passes = args.get_usize("passes", 5);
     c.knobs = SimKnobs {
         sim_decode_steps: args.get_usize("steps", 16),
+        engine_threads: args.get_usize("engine-threads", 1),
         ..SimKnobs::default()
     };
     c.base_seed = args.get_u64("seed", c.base_seed);
@@ -53,6 +54,18 @@ fn cmd_profile(args: &Args) {
     println!("module attribution (pass 0, J):");
     for (k, v) in &ds.runs[0].module_energy_j {
         println!("  {:<20} {:>10.1}", k.name(), v);
+    }
+    if !ds.runs[0].comm_split_j.is_empty() {
+        println!("comm phase split (pass 0, J):");
+        for (k, (wait, xfer)) in &ds.runs[0].comm_split_j {
+            println!(
+                "  {:<20} sync-wait {:>9.1}   transfer {:>9.1}   ({:.0}% waiting)",
+                k.name(),
+                wait,
+                xfer,
+                100.0 * wait / (wait + xfer).max(1e-12)
+            );
+        }
     }
     if let Some(path) = args.get("save") {
         piep::profiler::store::save_dataset(&ds.runs, path).expect("save dataset");
@@ -203,8 +216,23 @@ fn cmd_sweep(args: &Args) {
     };
 
     // --bench: time the serial baseline against the parallel engine on the
-    // same grid and record the perf-trajectory file.
+    // same grid and record the perf-trajectory file. With --baseline FILE,
+    // compare against a previously committed baseline and fail (exit 2) on
+    // a >2× parallel-wall-time regression — the CI perf gate.
     if args.has("bench") {
+        // Read the committed baseline before anything overwrites it. A
+        // missing or corrupt baseline is a misconfigured gate, not a
+        // dormant one — fail loudly rather than silently disarming.
+        let baseline = args.get("baseline").map(|p| {
+            let src = std::fs::read_to_string(p).unwrap_or_else(|e| {
+                eprintln!("sweep --baseline {p}: unreadable ({e})");
+                std::process::exit(2);
+            });
+            piep::util::json::Json::parse(&src).unwrap_or_else(|e| {
+                eprintln!("sweep --baseline {p}: invalid JSON ({e})");
+                std::process::exit(2);
+            })
+        });
         let t0 = std::time::Instant::now();
         let serial = run_sweep(&scenarios, &SweepOptions { parallel: false, ..opts.clone() });
         let serial_s = t0.elapsed().as_secs_f64();
@@ -240,6 +268,7 @@ fn cmd_sweep(args: &Args) {
                             ("configs", num(r.configs as f64)),
                             ("runs", num(r.runs as f64)),
                             ("mape", num(r.mape)),
+                            ("sync_share", num(r.sync_share)),
                             ("wall_s", num(r.wall_s)),
                         ])
                     })
@@ -248,6 +277,32 @@ fn cmd_sweep(args: &Args) {
         ]);
         std::fs::write(path, j.render()).expect("write bench file");
         println!("saved sweep baseline -> {path}");
+        // Regression gate: only armed once a baseline with real wall-times
+        // has been committed (the seed file carries nulls), and only when
+        // the baseline was measured on the same workload — comparing
+        // wall-times across different grids/passes/steps is meaningless.
+        if let Some(base) = baseline.as_ref() {
+            let basef = |k: &str| base.get(k).and_then(|v| v.as_f64());
+            let comparable = basef("passes") == Some(opts.campaign.passes as f64)
+                && basef("sim_decode_steps") == Some(opts.campaign.knobs.sim_decode_steps as f64)
+                && basef("configs") == Some(total_cfgs as f64);
+            match basef("parallel_wall_s") {
+                Some(base_wall) if comparable => {
+                    let ratio = parallel_s / base_wall.max(1e-9);
+                    println!("baseline parallel wall: {base_wall:.2}s -> ratio {ratio:.2}x (gate: 2.0x)");
+                    if ratio > 2.0 {
+                        eprintln!(
+                            "sweep regression: parallel wall {parallel_s:.2}s exceeds 2x baseline {base_wall:.2}s"
+                        );
+                        std::process::exit(2);
+                    }
+                }
+                Some(_) => println!(
+                    "baseline workload differs (passes/steps/configs); regression gate skipped"
+                ),
+                None => println!("baseline has no wall-times yet; regression gate dormant"),
+            }
+        }
         return;
     }
 
@@ -257,7 +312,7 @@ fn cmd_sweep(args: &Args) {
 
     let mut summary = Table::new(
         "Sweep — PIE-P cross-validated MAPE per scenario (pure + hybrid)",
-        &["Scenario", "Configs", "Runs", "MAPE", "±se", "Wall s"],
+        &["Scenario", "Configs", "Runs", "MAPE", "±se", "Sync%", "Wall s"],
     );
     for r in &results {
         summary.row(vec![
@@ -266,6 +321,7 @@ fn cmd_sweep(args: &Args) {
             r.runs.to_string(),
             pct(r.mape),
             fnum(r.std_err, 2),
+            pct(100.0 * r.sync_share),
             fnum(r.wall_s, 1),
         ]);
     }
@@ -402,13 +458,15 @@ fn main() {
                  \x20 train                      fit PIE-P on a family, report 3-fold CV MAPE\n\
                  \x20 predict                    leave-variant-out prediction demo\n\
                  \x20 sweep                      parallel sweep: paper grid + hybrid meshes,\n\
-                 \x20                            per-config MAPE (--serial, --bench, --per-config)\n\
+                 \x20                            per-config MAPE + sync-wait share (--serial,\n\
+                 \x20                            --bench [--baseline FILE], --per-config)\n\
                  \x20 runtime                    validate AOT artifacts, run the native hot path\n\
                  \x20 bench-sim                  simulator throughput check\n\n\
                  FLAGS\n\
                  \x20 --model NAME --family NAME --gpus N --batch N\n\
                  \x20 --parallelism tp|pp|dp|<hybrid label, e.g. tp2xpp>\n\
-                 \x20 --seq-out N --passes N --steps N --seed N --threads N --out DIR\n"
+                 \x20 --seq-out N --passes N --steps N --seed N --threads N\n\
+                 \x20 --engine-threads N (per-rank event-engine pool; 1 = serial) --out DIR\n"
             );
         }
     }

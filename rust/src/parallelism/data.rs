@@ -1,111 +1,65 @@
-//! Data-parallel planner.
+//! Data-parallel lowerer.
 //!
 //! The full model is replicated on every GPU; the batch is split evenly
 //! across replicas which decode independently (no per-layer coupling).
-//! Outputs are collated by a single terminal AllGather (Appendix E):
-//! faster replicas busy-wait for stragglers, then exchange final logits.
+//! Outputs are collated by a single terminal AllGather rendezvous
+//! (Appendix E): at execution, faster replicas busy-wait for stragglers,
+//! then exchange final logits.
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::models::ModelSpec;
+use crate::plan::{Plan, PlanBuilder, WaitRecord};
 use crate::simulator::collective;
 use crate::simulator::perf::PerfModel;
-use crate::simulator::power::PowerModel;
-use crate::simulator::skew::SkewModel;
-use crate::simulator::timeline::{ModuleKind, PhaseKind, Timeline};
-use crate::util::rng::Rng;
+use crate::simulator::timeline::ModuleKind;
 
-use super::BuiltRun;
-
-pub fn build(
-    spec: &ModelSpec,
-    hw: &HwSpec,
-    knobs: &SimKnobs,
-    cfg: &RunConfig,
-    power: &PowerModel,
-    rng: &mut Rng,
-) -> BuiltRun {
+pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
     let g = cfg.gpus;
     let perf = PerfModel::new(hw);
-    let skew = SkewModel::with_complexity(knobs, g, spec.complexity_factor(), rng);
-    let mut tl = Timeline::new(g, power.gpu_power(PhaseKind::Idle, 0.0));
-    let mut wait_samples = Vec::new();
+    let mut b = PlanBuilder::new(g);
 
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
     let shard = (cfg.batch + g - 1) / g; // per-replica batch
 
-    let compute = |tl: &mut Timeline,
-                       rng: &mut Rng,
-                       rank: usize,
-                       t: crate::simulator::perf::ModuleTiming,
-                       module: ModuleKind,
-                       layer: u16,
-                       step: u32| {
-        let dur = skew.sample_module(t.dur_s, rank, module, rng);
-        tl.push(rank, PhaseKind::Compute, module, layer, step, dur, power.gpu_power(PhaseKind::Compute, t.util));
-    };
-
     // Each replica runs prefill + decode independently.
-    let mut prefill_end = 0.0f64;
     for rank in 0..g {
         // Prefill.
-        compute(&mut tl, rng, rank, perf.embed_decode(spec, shard * cfg.seq_in), ModuleKind::Embedding, 0, 0);
+        b.compute(rank..rank + 1, perf.embed_decode(spec, shard * cfg.seq_in), ModuleKind::Embedding, 0, 0);
         for layer in 0..spec.layers as u16 {
-            compute(&mut tl, rng, rank, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
-            compute(&mut tl, rng, rank, perf.attn_prefill(spec, shard, cfg.seq_in, 1), ModuleKind::SelfAttention, layer, 0);
-            compute(&mut tl, rng, rank, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
-            compute(&mut tl, rng, rank, perf.mlp_prefill(spec, shard, cfg.seq_in, 1), ModuleKind::Mlp, layer, 0);
+            b.compute(rank..rank + 1, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+            let ta = perf.attn_prefill(spec, shard, cfg.seq_in, 1);
+            b.compute(rank..rank + 1, ta, ModuleKind::SelfAttention, layer, 0);
+            b.compute(rank..rank + 1, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+            b.compute(rank..rank + 1, perf.mlp_prefill(spec, shard, cfg.seq_in, 1), ModuleKind::Mlp, layer, 0);
         }
-        prefill_end = prefill_end.max(tl.clock(rank));
         // Decode.
         for si in 0..sim_steps {
             let step = (si + 1) as u32;
             let frac = (si as f64 + 0.5) / sim_steps as f64;
             let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
-            compute(&mut tl, rng, rank, perf.embed_decode(spec, shard), ModuleKind::Embedding, 0, step);
+            b.compute(rank..rank + 1, perf.embed_decode(spec, shard), ModuleKind::Embedding, 0, step);
             for layer in 0..spec.layers as u16 {
-                compute(&mut tl, rng, rank, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
-                compute(&mut tl, rng, rank, perf.attn_decode(spec, shard, context, 1), ModuleKind::SelfAttention, layer, step);
-                compute(&mut tl, rng, rank, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
-                compute(&mut tl, rng, rank, perf.mlp_decode(spec, shard, 1), ModuleKind::Mlp, layer, step);
+                b.compute(rank..rank + 1, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+                let ta = perf.attn_decode(spec, shard, context, 1);
+                b.compute(rank..rank + 1, ta, ModuleKind::SelfAttention, layer, step);
+                b.compute(rank..rank + 1, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+                b.compute(rank..rank + 1, perf.mlp_decode(spec, shard, 1), ModuleKind::Mlp, layer, step);
             }
-            compute(&mut tl, rng, rank, perf.logits_decode(spec, shard, 1), ModuleKind::LogitsHead, 0, step);
+            b.compute(rank..rank + 1, perf.logits_decode(spec, shard, 1), ModuleKind::LogitsHead, 0, step);
         }
     }
 
-    // Terminal collation: replicas synchronize once, then AllGather their
+    // Terminal collation: replicas rendezvous once, then AllGather their
     // final output logits.
     let mut comm_bytes_per_step = 0.0;
     if g > 1 {
-        let arrive_max = (0..g).map(|r| tl.clock(r)).fold(0.0, f64::max);
-        let wait_w = power.gpu_power(PhaseKind::Wait, 0.0);
-        for rank in 0..g {
-            let w = tl.wait_until(
-                rank,
-                arrive_max,
-                ModuleKind::AllGather,
-                0,
-                sim_steps as u32,
-                wait_w,
-            );
-            wait_samples.push(w);
-        }
         let payload = spec.allgather_payload_bytes(shard);
         let cost = collective::allgather(hw, g, payload);
-        let comm_w = power.gpu_power(PhaseKind::Transfer, 0.0);
-        for rank in 0..g {
-            tl.push(rank, PhaseKind::Transfer, ModuleKind::AllGather, 0, sim_steps as u32, cost.transfer_s, comm_w);
-        }
+        b.collective(0..g, ModuleKind::AllGather, 0, sim_steps as u32, cost.transfer_s, false, WaitRecord::All);
         comm_bytes_per_step = cost.bytes_moved / sim_steps as f64;
     }
 
-    tl.finalize();
-    BuiltRun {
-        timeline: tl,
-        wait_samples,
-        prefill_end,
-        sim_steps,
-        comm_bytes_per_step,
-    }
+    b.finish(sim_steps, comm_bytes_per_step, false)
 }
 
 #[cfg(test)]
@@ -113,6 +67,10 @@ mod tests {
     use super::*;
     use crate::config::Parallelism;
     use crate::models::by_name;
+    use crate::parallelism::BuiltRun;
+    use crate::simulator::power::PowerModel;
+    use crate::simulator::timeline::PhaseKind;
+    use crate::util::rng::Rng;
 
     fn build_run(gpus: usize, seed: u64) -> BuiltRun {
         let spec = by_name("Vicuna-7B").unwrap();
@@ -124,7 +82,7 @@ mod tests {
         let cfg = RunConfig::new("Vicuna-7B", Parallelism::Data, gpus, 8).with_seed(seed);
         let power = PowerModel::new(&hw);
         let mut rng = Rng::new(seed);
-        build(&spec, &hw, &knobs, &cfg, &power, &mut rng)
+        crate::parallelism::build(&spec, &hw, &knobs, &cfg, &power, &mut rng)
     }
 
     #[test]

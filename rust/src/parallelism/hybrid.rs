@@ -1,4 +1,4 @@
-//! Hybrid-parallelism planner: composes two base strategies over a 2-D
+//! Hybrid-parallelism lowerer: composes two base strategies over a 2-D
 //! rank mesh (inner strategy within contiguous groups of `inner_degree`
 //! ranks, outer strategy across the groups).
 //!
@@ -6,78 +6,47 @@
 //!
 //! * **TP×PP** — pipeline stages across groups, Megatron-style tensor
 //!   parallelism within each stage. Per-layer ring AllReduces stay
-//!   group-local; stage boundaries move shard-wise point-to-point
-//!   transfers (rank *i* of stage *s* feeds rank *i* of stage *s+1*);
-//!   the last stage collates its vocab-parallel logits with a group-local
-//!   AllGather. Decode steps serialize across the whole mesh (the token
-//!   sampled on the last stage feeds the first stage's embedding).
+//!   group-local; stage boundaries lower to shard-wise P2P edges (rank *i*
+//!   of stage *s* feeds rank *i* of stage *s+1*); the last stage collates
+//!   its vocab-parallel logits with a group-local AllGather. Decode steps
+//!   serialize across the whole mesh (the token sampled on the last stage
+//!   feeds the first stage's embedding).
 //! * **TP×DP** — independent replicas across groups, TP within each; each
-//!   replica decodes its batch shard, then replicas synchronize once and
+//!   replica decodes its batch shard, then replicas rendezvous once and
 //!   exchange final logits (terminal AllGather, ring across groups).
 //! * **PP×DP** — independent replicas across groups, a GPipe-style
 //!   pipeline within each; terminal replica collation as above.
 //!
-//! The planner reuses the pure planners' building blocks — the α–β
+//! The lowerer reuses the pure lowerers' building blocks — the α–β
 //! collective cost models (`simulator::collective`), the roofline perf
-//! model, per-rank skew sampling, and `pipeline::stage_layers` — and
-//! mirrors their module sequences group-locally (the per-group loops are
-//! deliberately written out rather than delegating to `tensor::build` /
-//! `pipeline::build`, whose whole-mesh rank addressing and single
-//! `BuiltRun` output don't decompose; their unit tests pin the shared
-//! semantics). The result is that the profiler, feature pipeline, and
-//! PIE-P regressor consume hybrid runs unchanged.
+//! model, and `pipeline::stage_layers` — and mirrors their op sequences
+//! group-locally into the shared Plan IR. The engine, profiler, feature
+//! pipeline, and PIE-P regressor consume hybrid plans unchanged.
 
 use std::ops::Range;
 
 use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs, Strategy};
 use crate::models::ModelSpec;
+use crate::plan::{Plan, PlanBuilder, WaitRecord};
 use crate::simulator::collective;
-use crate::simulator::perf::{ModuleTiming, PerfModel};
-use crate::simulator::power::PowerModel;
-use crate::simulator::skew::SkewModel;
-use crate::simulator::timeline::{ModuleKind, PhaseKind, Timeline};
-use crate::util::rng::Rng;
+use crate::simulator::perf::PerfModel;
+use crate::simulator::timeline::ModuleKind;
 
 use super::pipeline::stage_layers;
-use super::BuiltRun;
 
-/// Per-run context shared by the mesh builders: the deterministic perf
-/// model, the sampled skew state, and the launch-desync scale.
+/// Lowering context shared by the mesh emitters.
 struct Mesh<'a> {
     spec: &'a ModelSpec,
     hw: &'a HwSpec,
     perf: PerfModel,
-    skew: SkewModel,
-    power: &'a PowerModel,
-    sync_jitter: f64,
 }
 
 impl Mesh<'_> {
-    /// Skewed compute phase on every rank in `ranks`.
-    fn compute(
-        &self,
-        tl: &mut Timeline,
-        rng: &mut Rng,
-        ranks: Range<usize>,
-        t: ModuleTiming,
-        module: ModuleKind,
-        layer: u16,
-        step: u32,
-    ) {
-        let p = self.power.gpu_power(PhaseKind::Compute, t.util);
-        for rank in ranks {
-            let dur = self.skew.sample_module(t.dur_s, rank, module, rng);
-            tl.push(rank, PhaseKind::Compute, module, layer, step, dur, p);
-        }
-    }
-
-    /// Group-local ring AllReduce with per-rank launch desynchronization
-    /// (the tensor planner's synchronization point). Returns bytes moved.
+    /// Group-local ring AllReduce rendezvous (jittered launch desync — the
+    /// tensor planner's synchronization point). Returns bytes moved.
     fn allreduce(
         &self,
-        tl: &mut Timeline,
-        rng: &mut Rng,
-        waits: &mut Vec<f64>,
+        b: &mut PlanBuilder,
         ranks: Range<usize>,
         payload: f64,
         layer: u16,
@@ -87,20 +56,8 @@ impl Mesh<'_> {
         if n <= 1 {
             return 0.0;
         }
-        let wait_w = self.power.gpu_power(PhaseKind::Wait, 0.0);
-        let arrive_max = ranks
-            .clone()
-            .map(|r| tl.clock(r) + rng.exponential(self.sync_jitter))
-            .fold(0.0, f64::max);
-        for rank in ranks.clone() {
-            let w = tl.wait_until(rank, arrive_max, ModuleKind::AllReduce, layer, step, wait_w);
-            waits.push(w);
-        }
         let cost = collective::allreduce(self.hw, n, payload);
-        let comm_w = self.power.gpu_power(PhaseKind::Transfer, 0.0);
-        for rank in ranks {
-            tl.push(rank, PhaseKind::Transfer, ModuleKind::AllReduce, layer, step, cost.transfer_s, comm_w);
-        }
+        b.collective(ranks, ModuleKind::AllReduce, layer, step, cost.transfer_s, true, WaitRecord::All);
         cost.bytes_moved
     }
 
@@ -108,8 +65,7 @@ impl Mesh<'_> {
     /// point of the tensor and data planners). Returns bytes moved.
     fn allgather(
         &self,
-        tl: &mut Timeline,
-        waits: &mut Vec<f64>,
+        b: &mut PlanBuilder,
         ranks: Range<usize>,
         payload_per_rank: f64,
         step: u32,
@@ -118,53 +74,28 @@ impl Mesh<'_> {
         if n <= 1 {
             return 0.0;
         }
-        let arrive = ranks.clone().map(|r| tl.clock(r)).fold(0.0, f64::max);
-        let wait_w = self.power.gpu_power(PhaseKind::Wait, 0.0);
-        for rank in ranks.clone() {
-            let w = tl.wait_until(rank, arrive, ModuleKind::AllGather, 0, step, wait_w);
-            waits.push(w);
-        }
         let cost = collective::allgather(self.hw, n, payload_per_rank);
-        let comm_w = self.power.gpu_power(PhaseKind::Transfer, 0.0);
-        for rank in ranks {
-            tl.push(rank, PhaseKind::Transfer, ModuleKind::AllGather, 0, step, cost.transfer_s, comm_w);
-        }
+        b.collective(ranks, ModuleKind::AllGather, 0, step, cost.transfer_s, false, WaitRecord::All);
         cost.bytes_moved
     }
 
-    /// Terminal cross-replica collation: global barrier over all ranks,
-    /// then an AllGather whose ring spans the `groups` replica groups.
+    /// Terminal cross-replica collation: rendezvous over all ranks, then an
+    /// AllGather whose ring spans the `groups` replica groups.
     fn terminal_collation(
         &self,
-        tl: &mut Timeline,
-        waits: &mut Vec<f64>,
+        b: &mut PlanBuilder,
+        num_ranks: usize,
         groups: usize,
         payload_per_group: f64,
         step: u32,
     ) -> f64 {
-        let arrive = (0..tl.num_gpus).map(|r| tl.clock(r)).fold(0.0, f64::max);
-        let wait_w = self.power.gpu_power(PhaseKind::Wait, 0.0);
-        for rank in 0..tl.num_gpus {
-            let w = tl.wait_until(rank, arrive, ModuleKind::AllGather, 0, step, wait_w);
-            waits.push(w);
-        }
         let cost = collective::allgather(self.hw, groups, payload_per_group);
-        let comm_w = self.power.gpu_power(PhaseKind::Transfer, 0.0);
-        for rank in 0..tl.num_gpus {
-            tl.push(rank, PhaseKind::Transfer, ModuleKind::AllGather, 0, step, cost.transfer_s, comm_w);
-        }
+        b.collective(0..num_ranks, ModuleKind::AllGather, 0, step, cost.transfer_s, false, WaitRecord::All);
         cost.bytes_moved
     }
 }
 
-pub fn build(
-    spec: &ModelSpec,
-    hw: &HwSpec,
-    knobs: &SimKnobs,
-    cfg: &RunConfig,
-    power: &PowerModel,
-    rng: &mut Rng,
-) -> BuiltRun {
+pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
     let g = cfg.gpus;
     let (inner, outer, di) = match cfg.parallelism {
         Parallelism::Hybrid {
@@ -172,7 +103,7 @@ pub fn build(
             outer,
             inner_degree,
         } => (inner, outer, inner_degree),
-        other => panic!("hybrid planner invoked for {other:?}"),
+        other => panic!("hybrid lowerer invoked for {other:?}"),
     };
     assert!(
         di >= 2 && g % di == 0 && g / di >= 2,
@@ -184,37 +115,22 @@ pub fn build(
         spec,
         hw,
         perf: PerfModel::new(hw),
-        skew: SkewModel::with_complexity(knobs, g, spec.complexity_factor(), rng),
-        power,
-        sync_jitter: knobs.sync_jitter_s
-            * spec.complexity_factor()
-            * rng.lognormal_mean_cv(1.0, knobs.sync_jitter_cv),
     };
-    let mut tl = Timeline::new(g, power.gpu_power(PhaseKind::Idle, 0.0));
-    let mut waits = Vec::new();
+    let mut b = PlanBuilder::new(g);
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
 
-    let (prefill_end, comm_bytes_per_step) = match (inner, outer) {
+    let comm_bytes_per_step = match (inner, outer) {
         (Strategy::Tensor, Strategy::Pipeline) => {
-            tp_pp(&mesh, cfg, &mut tl, rng, &mut waits, di, do_, sim_steps)
+            tp_pp(&mesh, cfg, &mut b, di, do_, sim_steps)
         }
-        (Strategy::Tensor, Strategy::Data) => {
-            tp_dp(&mesh, cfg, &mut tl, rng, &mut waits, di, do_, sim_steps)
-        }
-        (Strategy::Pipeline, Strategy::Data) => {
-            pp_dp(&mesh, cfg, &mut tl, rng, &mut waits, di, do_, sim_steps)
-        }
+        (Strategy::Tensor, Strategy::Data) => tp_dp(&mesh, cfg, &mut b, di, do_, sim_steps),
+        (Strategy::Pipeline, Strategy::Data) => pp_dp(&mesh, cfg, &mut b, di, do_, sim_steps),
         other => panic!("unsupported hybrid combination {other:?}"),
     };
 
-    tl.finalize();
-    BuiltRun {
-        timeline: tl,
-        wait_samples: waits,
-        prefill_end,
-        sim_steps,
-        comm_bytes_per_step,
-    }
+    // Every hybrid run draws the launch-desync scale once (the Mesh of the
+    // legacy builder sampled it at construction, PP×DP included).
+    b.finish(sim_steps, comm_bytes_per_step, true)
 }
 
 /// TP within each of `do_` pipeline stages: one pipelined pass (prefill or
@@ -224,9 +140,7 @@ pub fn build(
 fn tp_pp_pass(
     mesh: &Mesh,
     cfg: &RunConfig,
-    tl: &mut Timeline,
-    rng: &mut Rng,
-    waits: &mut Vec<f64>,
+    b: &mut PlanBuilder,
     di: usize,
     do_: usize,
     ranges: &[Range<usize>],
@@ -238,7 +152,7 @@ fn tp_pp_pass(
 ) -> f64 {
     let spec = mesh.spec;
     let mut bytes = 0.0;
-    let mut prev_stage_ready = vec![0.0f64; num_micro];
+    let mut boundary: Vec<u32> = vec![u32::MAX; num_micro];
     let p2p_payload = if prefill {
         spec.p2p_payload_bytes(micro, cfg.seq_in)
     } else {
@@ -256,20 +170,7 @@ fn tp_pp_pass(
                 // Hop-local recv: every TP rank of the stage busy-waits for
                 // its shard of the boundary activations (the paper's
                 // timestamped producer→consumer interval).
-                let wait_w = mesh.power.gpu_power(PhaseKind::Wait, 0.0);
-                for rank in ranks.clone() {
-                    let waited = tl.wait_until(
-                        rank,
-                        prev_stage_ready[mb],
-                        ModuleKind::P2PTransfer,
-                        range.start as u16,
-                        step,
-                        wait_w,
-                    );
-                    if waited > 0.0 {
-                        waits.push(waited);
-                    }
-                }
+                b.recv(ranks.clone(), range.start as u16, step, boundary[mb]);
             }
             if stage == 0 {
                 let t = if prefill {
@@ -277,7 +178,7 @@ fn tp_pp_pass(
                 } else {
                     mesh.perf.embed_decode(spec, micro)
                 };
-                mesh.compute(tl, rng, ranks.clone(), t, ModuleKind::Embedding, 0, step);
+                b.compute(ranks.clone(), t, ModuleKind::Embedding, 0, step);
             }
             for layer in range.clone() {
                 let (tn, ta, tm) = if prefill {
@@ -293,149 +194,94 @@ fn tp_pp_pass(
                         mesh.perf.mlp_decode(spec, micro, di),
                     )
                 };
-                mesh.compute(tl, rng, ranks.clone(), tn, ModuleKind::Norm, layer as u16, step);
-                mesh.compute(tl, rng, ranks.clone(), ta, ModuleKind::SelfAttention, layer as u16, step);
-                bytes += mesh.allreduce(tl, rng, waits, ranks.clone(), ar_payload, layer as u16, step);
-                mesh.compute(tl, rng, ranks.clone(), tn, ModuleKind::Norm, layer as u16, step);
-                mesh.compute(tl, rng, ranks.clone(), tm, ModuleKind::Mlp, layer as u16, step);
-                bytes += mesh.allreduce(tl, rng, waits, ranks.clone(), ar_payload, layer as u16, step);
+                b.compute(ranks.clone(), tn, ModuleKind::Norm, layer as u16, step);
+                b.compute(ranks.clone(), ta, ModuleKind::SelfAttention, layer as u16, step);
+                bytes += mesh.allreduce(b, ranks.clone(), ar_payload, layer as u16, step);
+                b.compute(ranks.clone(), tn, ModuleKind::Norm, layer as u16, step);
+                b.compute(ranks.clone(), tm, ModuleKind::Mlp, layer as u16, step);
+                bytes += mesh.allreduce(b, ranks.clone(), ar_payload, layer as u16, step);
             }
             if stage + 1 == do_ {
                 // Vocab-parallel logits on the last stage's TP group, then
                 // the group-local shard AllGather (decode only).
-                mesh.compute(
-                    tl,
-                    rng,
-                    ranks.clone(),
-                    mesh.perf.logits_decode(spec, micro, di),
-                    ModuleKind::LogitsHead,
-                    0,
-                    step,
-                );
+                b.compute(ranks.clone(), mesh.perf.logits_decode(spec, micro, di), ModuleKind::LogitsHead, 0, step);
                 if !prefill {
                     let shard_payload = spec.allgather_payload_bytes(micro) / di as f64;
-                    bytes += mesh.allgather(tl, waits, ranks.clone(), shard_payload, step);
+                    bytes += mesh.allgather(b, ranks.clone(), shard_payload, step);
                 }
             } else {
-                // Shard-wise boundary send: rank i of this stage feeds rank
+                // Shard-wise boundary edge: rank i of this stage feeds rank
                 // i of the next stage (1/di of the activation tensor each).
                 let cost = collective::p2p(mesh.hw, p2p_payload / di as f64);
-                let comm_w = mesh.power.gpu_power(PhaseKind::Transfer, 0.0);
-                for rank in ranks.clone() {
-                    tl.push(
-                        rank,
-                        PhaseKind::Transfer,
-                        ModuleKind::P2PTransfer,
-                        range.end as u16,
-                        step,
-                        cost.transfer_s,
-                        comm_w,
-                    );
-                }
+                boundary[mb] = b.send(ranks.clone(), range.end as u16, step, cost.transfer_s);
                 bytes += cost.bytes_moved * di as f64;
-                prev_stage_ready[mb] = ranks.clone().map(|r| tl.clock(r)).fold(0.0, f64::max);
             }
         }
     }
     bytes
 }
 
-#[allow(clippy::too_many_arguments)]
 fn tp_pp(
     mesh: &Mesh,
     cfg: &RunConfig,
-    tl: &mut Timeline,
-    rng: &mut Rng,
-    waits: &mut Vec<f64>,
+    b: &mut PlanBuilder,
     di: usize,
     do_: usize,
     sim_steps: usize,
-) -> (f64, f64) {
+) -> f64 {
     let spec = mesh.spec;
     let ranges = stage_layers(spec.layers, do_);
     let micro = (cfg.batch + do_ - 1) / do_;
     let num_micro = (cfg.batch + micro - 1) / micro;
+    let g = di * do_;
 
-    tp_pp_pass(mesh, cfg, tl, rng, waits, di, do_, &ranges, micro, num_micro, 0, cfg.seq_in, true);
-    let prefill_end = tl.makespan();
+    tp_pp_pass(mesh, cfg, b, di, do_, &ranges, micro, num_micro, 0, cfg.seq_in, true);
 
     let mut comm = 0.0;
     for si in 0..sim_steps {
         let step = (si + 1) as u32;
         let frac = (si as f64 + 0.5) / sim_steps as f64;
         let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
-        let b = tp_pp_pass(
-            mesh, cfg, tl, rng, waits, di, do_, &ranges, micro, num_micro, step, context, false,
+        let bytes = tp_pp_pass(
+            mesh, cfg, b, di, do_, &ranges, micro, num_micro, step, context, false,
         );
         if si == 0 {
-            comm = b;
+            comm = bytes;
         }
         // Autoregressive serialization: the token sampled on the last stage
         // gates the next step's stage-0 embedding on every rank.
-        let token_ready = tl.makespan();
-        let wait_w = mesh.power.gpu_power(PhaseKind::Wait, 0.0);
-        for rank in 0..tl.num_gpus {
-            tl.wait_until(rank, token_ready, ModuleKind::P2PTransfer, 0, step, wait_w);
-        }
+        b.collective(0..g, ModuleKind::P2PTransfer, 0, step, 0.0, false, WaitRecord::None);
     }
-    (prefill_end, comm)
+    comm
 }
 
 /// TP within each of `do_` independent replicas; terminal collation across.
-#[allow(clippy::too_many_arguments)]
 fn tp_dp(
     mesh: &Mesh,
     cfg: &RunConfig,
-    tl: &mut Timeline,
-    rng: &mut Rng,
-    waits: &mut Vec<f64>,
+    b: &mut PlanBuilder,
     di: usize,
     do_: usize,
     sim_steps: usize,
-) -> (f64, f64) {
+) -> f64 {
     let spec = mesh.spec;
     let shard = (cfg.batch + do_ - 1) / do_;
     let mut comm = 0.0;
-    let mut prefill_end = 0.0f64;
 
     for rep in 0..do_ {
         let ranks = rep * di..(rep + 1) * di;
         // ---- Prefill within this replica group (tensor-planner semantics).
         let prefill_payload = (shard * cfg.seq_in * spec.hidden * spec.dtype_bytes) as f64;
-        mesh.compute(
-            tl,
-            rng,
-            ranks.clone(),
-            mesh.perf.embed_decode(spec, shard * cfg.seq_in),
-            ModuleKind::Embedding,
-            0,
-            0,
-        );
+        b.compute(ranks.clone(), mesh.perf.embed_decode(spec, shard * cfg.seq_in), ModuleKind::Embedding, 0, 0);
         for layer in 0..spec.layers as u16 {
-            mesh.compute(tl, rng, ranks.clone(), mesh.perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
-            mesh.compute(
-                tl,
-                rng,
-                ranks.clone(),
-                mesh.perf.attn_prefill(spec, shard, cfg.seq_in, di),
-                ModuleKind::SelfAttention,
-                layer,
-                0,
-            );
-            mesh.allreduce(tl, rng, waits, ranks.clone(), prefill_payload, layer, 0);
-            mesh.compute(tl, rng, ranks.clone(), mesh.perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
-            mesh.compute(
-                tl,
-                rng,
-                ranks.clone(),
-                mesh.perf.mlp_prefill(spec, shard, cfg.seq_in, di),
-                ModuleKind::Mlp,
-                layer,
-                0,
-            );
-            mesh.allreduce(tl, rng, waits, ranks.clone(), prefill_payload, layer, 0);
+            b.compute(ranks.clone(), mesh.perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+            let ta = mesh.perf.attn_prefill(spec, shard, cfg.seq_in, di);
+            b.compute(ranks.clone(), ta, ModuleKind::SelfAttention, layer, 0);
+            mesh.allreduce(b, ranks.clone(), prefill_payload, layer, 0);
+            b.compute(ranks.clone(), mesh.perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+            b.compute(ranks.clone(), mesh.perf.mlp_prefill(spec, shard, cfg.seq_in, di), ModuleKind::Mlp, layer, 0);
+            mesh.allreduce(b, ranks.clone(), prefill_payload, layer, 0);
         }
-        prefill_end = prefill_end.max(ranks.clone().map(|r| tl.clock(r)).fold(0.0, f64::max));
 
         // ---- Decode steps within this replica group.
         let decode_payload = spec.allreduce_payload_bytes(shard, 1);
@@ -443,52 +289,37 @@ fn tp_dp(
             let step = (si + 1) as u32;
             let frac = (si as f64 + 0.5) / sim_steps as f64;
             let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
-            mesh.compute(tl, rng, ranks.clone(), mesh.perf.embed_decode(spec, shard), ModuleKind::Embedding, 0, step);
+            b.compute(ranks.clone(), mesh.perf.embed_decode(spec, shard), ModuleKind::Embedding, 0, step);
             for layer in 0..spec.layers as u16 {
-                mesh.compute(tl, rng, ranks.clone(), mesh.perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
-                mesh.compute(
-                    tl,
-                    rng,
-                    ranks.clone(),
-                    mesh.perf.attn_decode(spec, shard, context, di),
-                    ModuleKind::SelfAttention,
-                    layer,
-                    step,
-                );
-                let b1 = mesh.allreduce(tl, rng, waits, ranks.clone(), decode_payload, layer, step);
-                mesh.compute(tl, rng, ranks.clone(), mesh.perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
-                mesh.compute(tl, rng, ranks.clone(), mesh.perf.mlp_decode(spec, shard, di), ModuleKind::Mlp, layer, step);
-                let b2 = mesh.allreduce(tl, rng, waits, ranks.clone(), decode_payload, layer, step);
+                b.compute(ranks.clone(), mesh.perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+                let ta = mesh.perf.attn_decode(spec, shard, context, di);
+                b.compute(ranks.clone(), ta, ModuleKind::SelfAttention, layer, step);
+                let b1 = mesh.allreduce(b, ranks.clone(), decode_payload, layer, step);
+                b.compute(ranks.clone(), mesh.perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+                b.compute(ranks.clone(), mesh.perf.mlp_decode(spec, shard, di), ModuleKind::Mlp, layer, step);
+                let b2 = mesh.allreduce(b, ranks.clone(), decode_payload, layer, step);
                 if si == 0 {
                     comm += b1 + b2;
                 }
             }
             // Vocab-parallel logits + group-local shard AllGather.
-            mesh.compute(
-                tl,
-                rng,
-                ranks.clone(),
-                mesh.perf.logits_decode(spec, shard, di),
-                ModuleKind::LogitsHead,
-                0,
-                step,
-            );
+            b.compute(ranks.clone(), mesh.perf.logits_decode(spec, shard, di), ModuleKind::LogitsHead, 0, step);
             let shard_payload = spec.allgather_payload_bytes(shard) / di as f64;
-            let b = mesh.allgather(tl, waits, ranks.clone(), shard_payload, step);
+            let bytes = mesh.allgather(b, ranks.clone(), shard_payload, step);
             if si == 0 {
-                comm += b;
+                comm += bytes;
             }
         }
     }
 
     let terminal = mesh.terminal_collation(
-        tl,
-        waits,
+        b,
+        di * do_,
         do_,
         spec.allgather_payload_bytes(shard),
         sim_steps as u32,
     );
-    (prefill_end, comm + terminal / sim_steps as f64)
+    comm + terminal / sim_steps as f64
 }
 
 /// One pipelined pass within a replica group occupying ranks
@@ -497,9 +328,7 @@ fn tp_dp(
 fn pp_group_pass(
     mesh: &Mesh,
     cfg: &RunConfig,
-    tl: &mut Timeline,
-    rng: &mut Rng,
-    waits: &mut Vec<f64>,
+    b: &mut PlanBuilder,
     base: usize,
     stages: usize,
     ranges: &[Range<usize>],
@@ -510,7 +339,7 @@ fn pp_group_pass(
     prefill: bool,
 ) -> f64 {
     let spec = mesh.spec;
-    let mut prev_stage_ready = vec![0.0f64; num_micro];
+    let mut boundary: Vec<u32> = vec![u32::MAX; num_micro];
     let payload = if prefill {
         spec.p2p_payload_bytes(micro, cfg.seq_in)
     } else {
@@ -520,17 +349,7 @@ fn pp_group_pass(
         let rank = base + stage;
         for mb in 0..num_micro {
             if stage > 0 {
-                let waited = tl.wait_until(
-                    rank,
-                    prev_stage_ready[mb],
-                    ModuleKind::P2PTransfer,
-                    range.start as u16,
-                    step,
-                    mesh.power.gpu_power(PhaseKind::Wait, 0.0),
-                );
-                if waited > 0.0 {
-                    waits.push(waited);
-                }
+                b.recv(rank..rank + 1, range.start as u16, step, boundary[mb]);
             }
             if stage == 0 {
                 let t = if prefill {
@@ -538,8 +357,7 @@ fn pp_group_pass(
                 } else {
                     mesh.perf.embed_decode(spec, micro)
                 };
-                let dur = mesh.skew.sample(t.dur_s, rank, rng);
-                tl.push(rank, PhaseKind::Compute, ModuleKind::Embedding, 0, step, dur, mesh.power.gpu_power(PhaseKind::Compute, t.util));
+                b.compute(rank..rank + 1, t, ModuleKind::Embedding, 0, step);
             }
             for layer in range.clone() {
                 let (tn, ta, tm) = if prefill {
@@ -561,26 +379,14 @@ fn pp_group_pass(
                     (tn, ModuleKind::Norm),
                     (tm, ModuleKind::Mlp),
                 ] {
-                    let dur = mesh.skew.sample_module(t.dur_s, rank, module, rng);
-                    tl.push(rank, PhaseKind::Compute, module, layer as u16, step, dur, mesh.power.gpu_power(PhaseKind::Compute, t.util));
+                    b.compute(rank..rank + 1, t, module, layer as u16, step);
                 }
             }
             if stage + 1 == stages {
-                let t = mesh.perf.logits_decode(spec, micro, 1);
-                let dur = mesh.skew.sample(t.dur_s, rank, rng);
-                tl.push(rank, PhaseKind::Compute, ModuleKind::LogitsHead, 0, step, dur, mesh.power.gpu_power(PhaseKind::Compute, t.util));
+                b.compute(rank..rank + 1, mesh.perf.logits_decode(spec, micro, 1), ModuleKind::LogitsHead, 0, step);
             } else {
                 let cost = collective::p2p(mesh.hw, payload);
-                tl.push(
-                    rank,
-                    PhaseKind::Transfer,
-                    ModuleKind::P2PTransfer,
-                    range.end as u16,
-                    step,
-                    cost.transfer_s,
-                    mesh.power.gpu_power(PhaseKind::Transfer, 0.0),
-                );
-                prev_stage_ready[mb] = tl.clock(rank);
+                boundary[mb] = b.send(rank..rank + 1, range.end as u16, step, cost.transfer_s);
             }
         }
     }
@@ -588,68 +394,58 @@ fn pp_group_pass(
 }
 
 /// A GPipe-style pipeline within each of `do_` independent replicas.
-#[allow(clippy::too_many_arguments)]
 fn pp_dp(
     mesh: &Mesh,
     cfg: &RunConfig,
-    tl: &mut Timeline,
-    rng: &mut Rng,
-    waits: &mut Vec<f64>,
+    b: &mut PlanBuilder,
     di: usize,
     do_: usize,
     sim_steps: usize,
-) -> (f64, f64) {
+) -> f64 {
     let spec = mesh.spec;
     let shard = (cfg.batch + do_ - 1) / do_;
     let ranges = stage_layers(spec.layers, di);
     let micro = (shard + di - 1) / di;
     let num_micro = (shard + micro - 1) / micro;
     let mut decode_bytes_group = 0.0;
-    let mut prefill_end = 0.0f64;
 
     for rep in 0..do_ {
         let base = rep * di;
-        pp_group_pass(
-            mesh, cfg, tl, rng, waits, base, di, &ranges, micro, num_micro, 0, cfg.seq_in, true,
-        );
-        prefill_end = prefill_end.max((base..base + di).map(|r| tl.clock(r)).fold(0.0, f64::max));
+        pp_group_pass(mesh, cfg, b, base, di, &ranges, micro, num_micro, 0, cfg.seq_in, true);
 
         for si in 0..sim_steps {
             let step = (si + 1) as u32;
             let frac = (si as f64 + 0.5) / sim_steps as f64;
             let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
-            let b = pp_group_pass(
-                mesh, cfg, tl, rng, waits, base, di, &ranges, micro, num_micro, step, context, false,
+            let bytes = pp_group_pass(
+                mesh, cfg, b, base, di, &ranges, micro, num_micro, step, context, false,
             );
             if si == 0 && rep == 0 {
-                decode_bytes_group = b;
+                decode_bytes_group = bytes;
             }
             // Group-local autoregressive step barrier.
-            let token_ready = (base..base + di).map(|r| tl.clock(r)).fold(0.0, f64::max);
-            let wait_w = mesh.power.gpu_power(PhaseKind::Wait, 0.0);
-            for stage in 0..di {
-                tl.wait_until(base + stage, token_ready, ModuleKind::P2PTransfer, 0, step, wait_w);
-            }
+            b.collective(base..base + di, ModuleKind::P2PTransfer, 0, step, 0.0, false, WaitRecord::None);
         }
     }
 
     let terminal = mesh.terminal_collation(
-        tl,
-        waits,
+        b,
+        di * do_,
         do_,
         spec.allgather_payload_bytes(shard),
         sim_steps as u32,
     );
-    (
-        prefill_end,
-        decode_bytes_group * do_ as f64 + terminal / sim_steps as f64,
-    )
+    decode_bytes_group * do_ as f64 + terminal / sim_steps as f64
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::models::by_name;
+    use crate::parallelism::BuiltRun;
+    use crate::simulator::power::PowerModel;
+    use crate::simulator::timeline::PhaseKind;
+    use crate::util::rng::Rng;
 
     fn build_run(inner: Strategy, outer: Strategy, di: usize, gpus: usize, seed: u64) -> BuiltRun {
         let spec = by_name("Vicuna-7B").unwrap();
@@ -662,7 +458,7 @@ mod tests {
         let cfg = RunConfig::new("Vicuna-7B", par, gpus, 8).with_seed(seed);
         let power = PowerModel::new(&hw);
         let mut rng = Rng::new(seed);
-        build(&spec, &hw, &knobs, &cfg, &power, &mut rng)
+        crate::parallelism::build(&spec, &hw, &knobs, &cfg, &power, &mut rng)
     }
 
     fn count(r: &BuiltRun, module: ModuleKind, kind: PhaseKind) -> usize {

@@ -1,36 +1,84 @@
-//! Parallel-inference execution planners.
+//! Parallel-inference planners: lowering from `RunConfig` to the shared
+//! Plan IR (DESIGN.md §3, §9).
 //!
-//! Each planner turns a `RunConfig` into a power-annotated `Timeline` by
-//! walking the model's modules under the given parallelism strategy,
-//! sampling per-rank skew, and synchronizing ranks at the strategy's
-//! communication points (Section 3 of the paper):
+//! Each strategy module contains a *lowerer* that walks the model's
+//! modules under its parallelism strategy and emits per-rank compute ops
+//! and inter-rank communication edges into a `plan::Plan` (Section 3 of
+//! the paper):
 //!
-//! * tensor: per-layer ring AllReduce after the attention out-projection
-//!   and after the MLP (Megatron-style), logits AllGather at the head;
-//! * pipeline: stage-partitioned layers, point-to-point activation
-//!   transfers at stage boundaries, microbatch pipelining;
+//! * tensor: per-layer ring AllReduce rendezvous after the attention
+//!   out-projection and after the MLP (Megatron-style), logits AllGather
+//!   at the head;
+//! * pipeline: stage-partitioned layers, point-to-point activation edges
+//!   at stage boundaries, microbatch pipelining, autoregressive step
+//!   barriers;
 //! * data: independent replicas, terminal output AllGather;
 //! * hybrid: pairwise compositions of the above over a 2-D rank mesh
-//!   (TP×PP, TP×DP, PP×DP), reusing the same communication points.
+//!   (TP×PP, TP×DP, PP×DP), reusing the same communication points
+//!   group-locally.
+//!
+//! Lowering is deterministic (no seed enters a plan); the discrete-event
+//! engine (`simulator::engine`) injects rank skew and launch-desync jitter
+//! at execution time and resolves the collectives as straggler-determined
+//! rendezvous events.
 
 pub mod data;
 pub mod hybrid;
 pub mod pipeline;
 pub mod tensor;
 
-use crate::simulator::timeline::Timeline;
+use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use crate::models::ModelSpec;
+use crate::plan::Plan;
+use crate::simulator::engine;
+use crate::simulator::power::PowerModel;
+use crate::simulator::skew::SkewModel;
+use crate::util::rng::Rng;
 
-/// Output of a planner: the timeline plus profiler-visible side channels.
-#[derive(Debug, Clone)]
-pub struct BuiltRun {
-    pub timeline: Timeline,
-    /// Per-sync per-rank wait durations (s) — the raw material of PIE-P's
-    /// synchronization sampling.
-    pub wait_samples: Vec<f64>,
-    /// Time at which prefill finished (phases with step 0 are prefill).
-    pub prefill_end: f64,
-    /// Decode steps actually simulated (before extrapolation).
-    pub sim_steps: usize,
-    /// Total collective/P2P payload bytes moved per simulated decode step.
-    pub comm_bytes_per_step: f64,
+pub use crate::simulator::engine::BuiltRun;
+
+/// Lower a run configuration into the shared Plan IR.
+pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
+    match cfg.parallelism {
+        Parallelism::Tensor => tensor::lower(spec, hw, knobs, cfg),
+        Parallelism::Pipeline => pipeline::lower(spec, hw, knobs, cfg),
+        Parallelism::Data => data::lower(spec, hw, knobs, cfg),
+        Parallelism::Hybrid { .. } => hybrid::lower(spec, hw, knobs, cfg),
+    }
+}
+
+/// Execute a lowered plan under one run's stochastic conditions: sample
+/// the run-level skew state and (for strategies with jittered collectives)
+/// the launch-desync scale, then drive the event engine.
+pub fn execute_plan(
+    plan: &Plan,
+    spec: &ModelSpec,
+    knobs: &SimKnobs,
+    power: &PowerModel,
+    rng: &mut Rng,
+    threads: usize,
+) -> BuiltRun {
+    let skew = SkewModel::with_complexity(knobs, plan.num_ranks, spec.complexity_factor(), rng);
+    let sync_jitter = if plan.draws_sync_jitter {
+        knobs.sync_jitter_s
+            * spec.complexity_factor()
+            * rng.lognormal_mean_cv(1.0, knobs.sync_jitter_cv)
+    } else {
+        0.0
+    };
+    engine::execute(plan, power, &skew, sync_jitter, rng, threads)
+}
+
+/// Lower + execute in one call (single-run paths and planner tests; the
+/// profiling campaigns cache the lowering via `plan::PlanCache`).
+pub fn build(
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+    power: &PowerModel,
+    rng: &mut Rng,
+) -> BuiltRun {
+    let plan = lower(spec, hw, knobs, cfg);
+    execute_plan(&plan, spec, knobs, power, rng, knobs.engine_threads)
 }

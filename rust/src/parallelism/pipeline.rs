@@ -1,24 +1,21 @@
-//! Pipeline-parallel planner.
+//! Pipeline-parallel lowerer.
 //!
 //! Layers are split into g contiguous stages; the batch is split into g
 //! microbatches that flow through the stages (GPipe-style inference
-//! schedule). Communication is hop-local: stage i sends its boundary
-//! activations to stage i+1 (Appendix D). Pipeline bubbles appear as idle
-//! phases; transfers are point-to-point `P2PTransfer` phases on the sender
-//! with the receiver idling until arrival — matching the paper's
-//! timestamping of (end of producing stage, first byte, first op of
-//! consuming stage).
+//! schedule). Communication lowers to hop-local P2P *edges*: stage i's
+//! boundary send produces an edge that stage i+1's receive consumes — the
+//! engine keeps the receiver busy-waiting (recorded wait phase, matching
+//! the paper's timestamping of (end of producing stage, first byte, first
+//! op of consuming stage)) until the edge is ready. Pipeline bubbles
+//! appear as those waits plus the autoregressive step barrier after every
+//! decode pass.
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::models::ModelSpec;
+use crate::plan::{Plan, PlanBuilder, WaitRecord};
 use crate::simulator::collective;
 use crate::simulator::perf::PerfModel;
-use crate::simulator::power::PowerModel;
-use crate::simulator::skew::SkewModel;
-use crate::simulator::timeline::{ModuleKind, PhaseKind, Timeline};
-use crate::util::rng::Rng;
-
-use super::BuiltRun;
+use crate::simulator::timeline::ModuleKind;
 
 /// Contiguous layer ranges per stage (remainder to the earliest stages).
 pub fn stage_layers(layers: usize, stages: usize) -> Vec<std::ops::Range<usize>> {
@@ -34,19 +31,10 @@ pub fn stage_layers(layers: usize, stages: usize) -> Vec<std::ops::Range<usize>>
     out
 }
 
-pub fn build(
-    spec: &ModelSpec,
-    hw: &HwSpec,
-    knobs: &SimKnobs,
-    cfg: &RunConfig,
-    power: &PowerModel,
-    rng: &mut Rng,
-) -> BuiltRun {
+pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
     let g = cfg.gpus;
     let perf = PerfModel::new(hw);
-    let skew = SkewModel::with_complexity(knobs, g, spec.complexity_factor(), rng);
-    let mut tl = Timeline::new(g, power.gpu_power(PhaseKind::Idle, 0.0));
-    let mut wait_samples = Vec::new();
+    let mut b = PlanBuilder::new(g);
 
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
     let ranges = stage_layers(spec.layers, g);
@@ -54,17 +42,10 @@ pub fn build(
     let num_micro = (cfg.batch + micro - 1) / micro;
 
     // One full pass (prefill with seq tokens, or a decode step) pipelined
-    // over microbatches. Returns payload bytes transferred per microbatch
-    // per boundary.
-    let run_pass = |tl: &mut Timeline,
-                        rng: &mut Rng,
-                        wait_samples: &mut Vec<f64>,
-                        step: u32,
-                        context: usize,
-                        prefill: bool|
-     -> f64 {
-        // end[(stage, mb)] completion times for the dependency recurrence.
-        let mut prev_stage_ready = vec![0.0f64; num_micro];
+    // over microbatches. Returns payload bytes transferred per pass.
+    let run_pass = |b: &mut PlanBuilder, step: u32, context: usize, prefill: bool| -> f64 {
+        // Boundary edge per microbatch (overwritten stage by stage).
+        let mut boundary: Vec<u32> = vec![u32::MAX; num_micro];
         let payload = if prefill {
             spec.p2p_payload_bytes(micro, cfg.seq_in)
         } else {
@@ -72,24 +53,10 @@ pub fn build(
         };
         for (stage, range) in ranges.iter().enumerate() {
             for mb in 0..num_micro {
-                // Wait for our input: previous stage's send completed. The
-                // paper timestamps exactly this interval — (end of boundary
-                // layer in the producing stage) → (first op of the consuming
-                // stage) — and attributes it to the Point-to-Point transfer;
-                // the NCCL recv busy-waits, so it burns wait power, not idle.
+                // Consume our input edge: the previous stage's boundary
+                // send for this microbatch.
                 if stage > 0 {
-                    let ready = prev_stage_ready[mb];
-                    let waited = tl.wait_until(
-                        stage,
-                        ready,
-                        ModuleKind::P2PTransfer,
-                        range.start as u16,
-                        step,
-                        power.gpu_power(PhaseKind::Wait, 0.0),
-                    );
-                    if waited > 0.0 {
-                        wait_samples.push(waited);
-                    }
+                    b.recv(stage..stage + 1, range.start as u16, step, boundary[mb]);
                 }
                 // Stage compute: embed on stage 0, layers, logits on last.
                 if stage == 0 {
@@ -98,8 +65,7 @@ pub fn build(
                     } else {
                         perf.embed_decode(spec, micro)
                     };
-                    let dur = skew.sample(t.dur_s, stage, rng);
-                    tl.push(stage, PhaseKind::Compute, ModuleKind::Embedding, 0, step, dur, power.gpu_power(PhaseKind::Compute, t.util));
+                    b.compute(stage..stage + 1, t, ModuleKind::Embedding, 0, step);
                 }
                 for layer in range.clone() {
                     let (tn, ta, tm) = if prefill {
@@ -121,19 +87,15 @@ pub fn build(
                         (tn, ModuleKind::Norm),
                         (tm, ModuleKind::Mlp),
                     ] {
-                        let dur = skew.sample_module(t.dur_s, stage, module, rng);
-                        tl.push(stage, PhaseKind::Compute, module, layer as u16, step, dur, power.gpu_power(PhaseKind::Compute, t.util));
+                        b.compute(stage..stage + 1, t, module, layer as u16, step);
                     }
                 }
                 if stage + 1 == g {
-                    let t = perf.logits_decode(spec, micro, 1);
-                    let dur = skew.sample(t.dur_s, stage, rng);
-                    tl.push(stage, PhaseKind::Compute, ModuleKind::LogitsHead, 0, step, dur, power.gpu_power(PhaseKind::Compute, t.util));
+                    b.compute(stage..stage + 1, perf.logits_decode(spec, micro, 1), ModuleKind::LogitsHead, 0, step);
                 } else {
                     // Send boundary activations to the next stage.
                     let cost = collective::p2p(hw, payload);
-                    tl.push(stage, PhaseKind::Transfer, ModuleKind::P2PTransfer, range.end as u16, step, cost.transfer_s, power.gpu_power(PhaseKind::Transfer, 0.0));
-                    prev_stage_ready[mb] = tl.clock(stage);
+                    boundary[mb] = b.send(stage..stage + 1, range.end as u16, step, cost.transfer_s);
                 }
             }
         }
@@ -141,44 +103,24 @@ pub fn build(
     };
 
     // Prefill.
-    run_pass(&mut tl, rng, &mut wait_samples, 0, cfg.seq_in, true);
-    let prefill_end = tl.makespan();
+    run_pass(&mut b, 0, cfg.seq_in, true);
 
     // Decode steps. Autoregressive serialization: the next step's stage-0
     // embedding needs the token sampled from the last stage's logits, so
-    // every stage waits for the step boundary (the defining bubble of
-    // pipeline-parallel decode) — receiver-side, attributed like any other
-    // hop-local recv.
+    // every stage synchronizes at the step boundary (the defining bubble
+    // of pipeline-parallel decode) — a mesh-wide barrier rendezvous.
     let mut decode_bytes = 0.0;
     for si in 0..sim_steps {
         let frac = (si as f64 + 0.5) / sim_steps as f64;
         let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
-        let b = run_pass(&mut tl, rng, &mut wait_samples, (si + 1) as u32, context, false);
+        let bytes = run_pass(&mut b, (si + 1) as u32, context, false);
         if si == 0 {
-            decode_bytes = b;
+            decode_bytes = bytes;
         }
-        let token_ready = tl.makespan();
-        for stage in 0..g {
-            tl.wait_until(
-                stage,
-                token_ready,
-                ModuleKind::P2PTransfer,
-                0,
-                (si + 1) as u32,
-                power.gpu_power(PhaseKind::Wait, 0.0),
-            );
-        }
+        b.collective(0..g, ModuleKind::P2PTransfer, 0, (si + 1) as u32, 0.0, false, WaitRecord::None);
     }
-    let comm_bytes_per_step = decode_bytes;
 
-    tl.finalize();
-    BuiltRun {
-        timeline: tl,
-        wait_samples,
-        prefill_end,
-        sim_steps,
-        comm_bytes_per_step,
-    }
+    b.finish(sim_steps, decode_bytes, false)
 }
 
 #[cfg(test)]
@@ -186,6 +128,10 @@ mod tests {
     use super::*;
     use crate::config::Parallelism;
     use crate::models::by_name;
+    use crate::parallelism::BuiltRun;
+    use crate::simulator::power::PowerModel;
+    use crate::simulator::timeline::PhaseKind;
+    use crate::util::rng::Rng;
 
     fn build_run(gpus: usize, seed: u64) -> BuiltRun {
         let spec = by_name("Vicuna-7B").unwrap();
@@ -197,7 +143,7 @@ mod tests {
         let cfg = RunConfig::new("Vicuna-7B", Parallelism::Pipeline, gpus, 8).with_seed(seed);
         let power = PowerModel::new(&hw);
         let mut rng = Rng::new(seed);
-        build(&spec, &hw, &knobs, &cfg, &power, &mut rng)
+        crate::parallelism::build(&spec, &hw, &knobs, &cfg, &power, &mut rng)
     }
 
     #[test]
@@ -222,6 +168,26 @@ mod tests {
             .count();
         // 1 boundary × 2 microbatches × (prefill + 4 steps).
         assert_eq!(sends, 2 * 5);
+    }
+
+    #[test]
+    fn plan_has_matched_edges_and_no_jitter_draw() {
+        let spec = by_name("Vicuna-7B").unwrap();
+        let hw = HwSpec::default();
+        let knobs = SimKnobs {
+            sim_decode_steps: 4,
+            ..SimKnobs::default()
+        };
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Pipeline, 4, 8);
+        let plan = lower(&spec, &hw, &knobs, &cfg);
+        let (_, coll, send, recv) = plan.op_census();
+        // 3 boundaries × 4 microbatches × 5 passes, each edge consumed once.
+        assert_eq!(send, 3 * 4 * 5);
+        assert_eq!(recv, send);
+        assert_eq!(plan.num_edges as usize, send);
+        // One step barrier per decode step.
+        assert_eq!(coll, 4);
+        assert!(!plan.draws_sync_jitter);
     }
 
     #[test]

@@ -1,117 +1,50 @@
-//! Tensor-parallel planner (Megatron-style).
+//! Tensor-parallel lowerer (Megatron-style).
 //!
 //! Every transformer block runs its attention and MLP shards on all g GPUs
 //! concurrently; results are combined by a ring AllReduce after (1) the
 //! attention output projection and (2) the MLP down-projection — exactly
-//! the two synchronization points PIE-P adds to the model tree. Because
-//! ranks skew during compute, each AllReduce opens with a non-deterministic
-//! waiting phase (recorded per rank into `wait_samples`).
+//! the two synchronization points PIE-P adds to the model tree. The
+//! AllReduce ops are *jittered rendezvous* events: at execution each rank
+//! arrives with its own launch-desync delay and the straggler determines
+//! the start, producing the non-deterministic waiting phase the paper
+//! samples.
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::models::ModelSpec;
+use crate::plan::{Plan, PlanBuilder, WaitRecord};
 use crate::simulator::collective;
-use crate::simulator::perf::{ModuleTiming, PerfModel};
-use crate::simulator::power::PowerModel;
-use crate::simulator::skew::SkewModel;
-use crate::simulator::timeline::{ModuleKind, PhaseKind, Timeline};
-use crate::util::rng::Rng;
+use crate::simulator::perf::PerfModel;
+use crate::simulator::timeline::ModuleKind;
 
-use super::BuiltRun;
-
-pub fn build(
-    spec: &ModelSpec,
-    hw: &HwSpec,
-    knobs: &SimKnobs,
-    cfg: &RunConfig,
-    power: &PowerModel,
-    rng: &mut Rng,
-) -> BuiltRun {
+pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
     let g = cfg.gpus;
     let perf = PerfModel::new(hw);
-    let skew = SkewModel::with_complexity(knobs, g, spec.complexity_factor(), rng);
-    let mut tl = Timeline::new(g, power.gpu_power(PhaseKind::Idle, 0.0));
-    let mut wait_samples = Vec::new();
+    let mut b = PlanBuilder::new(g);
     let mut comm_bytes_per_step = 0.0;
-
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
 
-    // Per-module compute helper: sample skewed duration per rank, push.
-    let compute =
-        |tl: &mut Timeline,
-         rng: &mut Rng,
-         timing: ModuleTiming,
-         module: ModuleKind,
-         layer: u16,
-         step: u32| {
-            for rank in 0..g {
-                let dur = skew.sample_module(timing.dur_s, rank, module, rng);
-                let p = power.gpu_power(PhaseKind::Compute, timing.util);
-                tl.push(rank, PhaseKind::Compute, module, layer, step, dur, p);
-            }
-        };
-
-    // Ring AllReduce sync: each rank arrives with its own launch-desync
-    // delay, waits for the slowest, then all transfer in lockstep. Returns
-    // per-rank waits into wait_samples.
-    let sync_jitter = knobs.sync_jitter_s
-        * spec.complexity_factor()
-        * rng.lognormal_mean_cv(1.0, knobs.sync_jitter_cv);
-    let allreduce = |tl: &mut Timeline,
-                         rng: &mut Rng,
-                         wait_samples: &mut Vec<f64>,
-                         payload: f64,
-                         layer: u16,
-                         step: u32| {
+    // Ring AllReduce rendezvous over all g ranks. Returns bytes moved.
+    let allreduce = |b: &mut PlanBuilder, payload: f64, layer: u16, step: u32| -> f64 {
         if g == 1 {
             // No collective is emitted at all on a single GPU.
             return 0.0;
         }
-        let wait_w = power.gpu_power(PhaseKind::Wait, 0.0);
-        // Launch desynchronization: host-side skew before the collective
-        // kernel is live on each rank (recorded as waiting-phase energy —
-        // the GPU spins in the NCCL kernel).
-        let arrive_max = (0..g)
-            .map(|r| tl.clock(r) + rng.exponential(sync_jitter))
-            .fold(0.0, f64::max);
-        for rank in 0..g {
-            let w = tl.wait_until(rank, arrive_max, ModuleKind::AllReduce, layer, step, wait_w);
-            wait_samples.push(w);
-        }
         let cost = collective::allreduce(hw, g, payload);
-        let comm_w = power.gpu_power(PhaseKind::Transfer, 0.0);
-        for rank in 0..g {
-            tl.push(
-                rank,
-                PhaseKind::Transfer,
-                ModuleKind::AllReduce,
-                layer,
-                step,
-                cost.transfer_s,
-                comm_w,
-            );
-        }
+        b.collective(0..g, ModuleKind::AllReduce, layer, step, cost.transfer_s, true, WaitRecord::All);
         cost.bytes_moved
     };
 
     // ---- Prefill (step 0): compute-bound pass over the prompt.
     let prefill_payload = (cfg.batch * cfg.seq_in * spec.hidden * spec.dtype_bytes) as f64;
-    compute(
-        &mut tl,
-        rng,
-        perf.embed_decode(spec, cfg.batch * cfg.seq_in),
-        ModuleKind::Embedding,
-        0,
-        0,
-    );
+    b.compute(0..g, perf.embed_decode(spec, cfg.batch * cfg.seq_in), ModuleKind::Embedding, 0, 0);
     for layer in 0..spec.layers as u16 {
-        compute(&mut tl, rng, perf.norm_prefill(spec, cfg.batch, cfg.seq_in), ModuleKind::Norm, layer, 0);
-        compute(&mut tl, rng, perf.attn_prefill(spec, cfg.batch, cfg.seq_in, g), ModuleKind::SelfAttention, layer, 0);
-        allreduce(&mut tl, rng, &mut wait_samples, prefill_payload, layer, 0);
-        compute(&mut tl, rng, perf.norm_prefill(spec, cfg.batch, cfg.seq_in), ModuleKind::Norm, layer, 0);
-        compute(&mut tl, rng, perf.mlp_prefill(spec, cfg.batch, cfg.seq_in, g), ModuleKind::Mlp, layer, 0);
-        allreduce(&mut tl, rng, &mut wait_samples, prefill_payload, layer, 0);
+        b.compute(0..g, perf.norm_prefill(spec, cfg.batch, cfg.seq_in), ModuleKind::Norm, layer, 0);
+        b.compute(0..g, perf.attn_prefill(spec, cfg.batch, cfg.seq_in, g), ModuleKind::SelfAttention, layer, 0);
+        allreduce(&mut b, prefill_payload, layer, 0);
+        b.compute(0..g, perf.norm_prefill(spec, cfg.batch, cfg.seq_in), ModuleKind::Norm, layer, 0);
+        b.compute(0..g, perf.mlp_prefill(spec, cfg.batch, cfg.seq_in, g), ModuleKind::Mlp, layer, 0);
+        allreduce(&mut b, prefill_payload, layer, 0);
     }
-    let prefill_end = tl.makespan();
 
     // ---- Decode: `sim_steps` representative steps spread over seq_out.
     let decode_payload = spec.allreduce_payload_bytes(cfg.batch, 1);
@@ -121,47 +54,33 @@ pub fn build(
         let frac = (si as f64 + 0.5) / sim_steps as f64;
         let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
 
-        compute(&mut tl, rng, perf.embed_decode(spec, cfg.batch), ModuleKind::Embedding, 0, step);
+        b.compute(0..g, perf.embed_decode(spec, cfg.batch), ModuleKind::Embedding, 0, step);
         for layer in 0..spec.layers as u16 {
-            compute(&mut tl, rng, perf.norm_decode(spec, cfg.batch), ModuleKind::Norm, layer, step);
-            compute(&mut tl, rng, perf.attn_decode(spec, cfg.batch, context, g), ModuleKind::SelfAttention, layer, step);
-            let b1 = allreduce(&mut tl, rng, &mut wait_samples, decode_payload, layer, step);
-            compute(&mut tl, rng, perf.norm_decode(spec, cfg.batch), ModuleKind::Norm, layer, step);
-            compute(&mut tl, rng, perf.mlp_decode(spec, cfg.batch, g), ModuleKind::Mlp, layer, step);
-            let b2 = allreduce(&mut tl, rng, &mut wait_samples, decode_payload, layer, step);
+            b.compute(0..g, perf.norm_decode(spec, cfg.batch), ModuleKind::Norm, layer, step);
+            b.compute(0..g, perf.attn_decode(spec, cfg.batch, context, g), ModuleKind::SelfAttention, layer, step);
+            let b1 = allreduce(&mut b, decode_payload, layer, step);
+            b.compute(0..g, perf.norm_decode(spec, cfg.batch), ModuleKind::Norm, layer, step);
+            b.compute(0..g, perf.mlp_decode(spec, cfg.batch, g), ModuleKind::Mlp, layer, step);
+            let b2 = allreduce(&mut b, decode_payload, layer, step);
             if si == 0 {
                 comm_bytes_per_step += b1 + b2;
             }
         }
         // Vocab-parallel logits + AllGather of the shards.
-        compute(&mut tl, rng, perf.logits_decode(spec, cfg.batch, g), ModuleKind::LogitsHead, 0, step);
+        b.compute(0..g, perf.logits_decode(spec, cfg.batch, g), ModuleKind::LogitsHead, 0, step);
         if g > 1 {
-            let arrive_max = (0..g).map(|r| tl.clock(r)).fold(0.0, f64::max);
-            let wait_w = power.gpu_power(PhaseKind::Wait, 0.0);
-            for rank in 0..g {
-                let w = tl.wait_until(rank, arrive_max, ModuleKind::AllGather, 0, step, wait_w);
-                wait_samples.push(w);
-            }
             let shard = spec.allgather_payload_bytes(cfg.batch) / g as f64;
             let cost = collective::allgather(hw, g, shard);
-            let comm_w = power.gpu_power(PhaseKind::Transfer, 0.0);
-            for rank in 0..g {
-                tl.push(rank, PhaseKind::Transfer, ModuleKind::AllGather, 0, step, cost.transfer_s, comm_w);
-            }
+            b.collective(0..g, ModuleKind::AllGather, 0, step, cost.transfer_s, false, WaitRecord::All);
             if si == 0 {
                 comm_bytes_per_step += cost.bytes_moved;
             }
         }
     }
 
-    tl.finalize();
-    BuiltRun {
-        timeline: tl,
-        wait_samples,
-        prefill_end,
-        sim_steps,
-        comm_bytes_per_step,
-    }
+    // The tensor planner draws the per-run launch-desync scale even on a
+    // single GPU (the seed stream predates the g == 1 early return).
+    b.finish(sim_steps, comm_bytes_per_step, true)
 }
 
 #[cfg(test)]
@@ -169,6 +88,10 @@ mod tests {
     use super::*;
     use crate::config::Parallelism;
     use crate::models::by_name;
+    use crate::parallelism::BuiltRun;
+    use crate::simulator::power::PowerModel;
+    use crate::simulator::timeline::PhaseKind;
+    use crate::util::rng::Rng;
 
     fn build_run(gpus: usize, seed: u64) -> BuiltRun {
         let spec = by_name("Vicuna-7B").unwrap();
@@ -180,7 +103,7 @@ mod tests {
         let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, gpus, 8).with_seed(seed);
         let power = PowerModel::new(&hw);
         let mut rng = Rng::new(seed);
-        build(&spec, &hw, &knobs, &cfg, &power, &mut rng)
+        crate::parallelism::build(&spec, &hw, &knobs, &cfg, &power, &mut rng)
     }
 
     #[test]
@@ -195,6 +118,25 @@ mod tests {
             .count();
         let expected = 2 * 32 * (1 + 4) * 2; // syncs × ranks
         assert_eq!(ar_xfers, expected);
+    }
+
+    #[test]
+    fn plan_is_seed_free_and_structured() {
+        let spec = by_name("Vicuna-7B").unwrap();
+        let hw = HwSpec::default();
+        let knobs = SimKnobs {
+            sim_decode_steps: 4,
+            ..SimKnobs::default()
+        };
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8);
+        let plan = lower(&spec, &hw, &knobs, &cfg);
+        let (compute, coll, send, recv) = plan.op_census();
+        assert!(compute > 0);
+        // 2 AllReduces × 32 layers × 5 passes + 4 decode AllGathers.
+        assert_eq!(coll, 2 * 32 * 5 + 4);
+        assert_eq!((send, recv), (0, 0));
+        assert!(plan.draws_sync_jitter);
+        assert!(plan.comm_bytes_per_step > 0.0);
     }
 
     #[test]

@@ -1,0 +1,110 @@
+//! Lowered-plan cache.
+//!
+//! Plans are deterministic functions of (model, parallelism, gpus, batch,
+//! sequence lengths, decode-step knob, hardware) — the seed never enters
+//! lowering — so the repeated passes of a profiling campaign and the sweep
+//! configs that share a (model, strategy) grid cell can all execute one
+//! lowered plan. The cache is shared across the `util::par` workers of a
+//! campaign; on a miss the worker lowers outside the lock (a racing
+//! duplicate lowering is harmless: plans are deterministic, last insert
+//! wins).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::config::{HwSpec, RunConfig, SimKnobs};
+use crate::parallelism;
+use crate::plan::Plan;
+
+/// Thread-safe map from configuration identity to its lowered plan. One
+/// cache instance assumes one `HwSpec` (campaigns hold hardware fixed).
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<String, Arc<Plan>>>,
+    hits: Mutex<usize>,
+}
+
+/// Everything lowering depends on besides the hardware: `RunConfig::key`
+/// covers model/parallelism/gpus/batch/seq_out; seq_in and the decode-step
+/// knob complete the identity.
+fn cache_key(cfg: &RunConfig, knobs: &SimKnobs) -> String {
+    format!("{}/in{}/steps{}", cfg.key(), cfg.seq_in, knobs.sim_decode_steps)
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The lowered plan for `cfg`, reusing a cached one when the identity
+    /// matches (passes of one config differ only by seed, which lowering
+    /// never sees).
+    pub fn get_or_lower(&self, cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> Arc<Plan> {
+        let key = cache_key(cfg, knobs);
+        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+            *self.hits.lock().unwrap() += 1;
+            return Arc::clone(plan);
+        }
+        let spec = crate::models::by_name(&cfg.model)
+            .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
+        let plan = Arc::new(parallelism::lower(&spec, hw, knobs, cfg));
+        self.plans
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert(plan)
+            .clone()
+    }
+
+    /// (cached plans, cache hits) — exposed for tests and diagnostics.
+    pub fn stats(&self) -> (usize, usize) {
+        (
+            self.plans.lock().unwrap().len(),
+            *self.hits.lock().unwrap(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Parallelism;
+
+    #[test]
+    fn passes_share_one_plan() {
+        let cache = PlanCache::new();
+        let hw = HwSpec::default();
+        let knobs = SimKnobs {
+            sim_decode_steps: 4,
+            ..SimKnobs::default()
+        };
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8);
+        let a = cache.get_or_lower(&cfg.clone().with_seed(1), &hw, &knobs);
+        let b = cache.get_or_lower(&cfg.clone().with_seed(2), &hw, &knobs);
+        assert!(Arc::ptr_eq(&a, &b), "seed must not fork the plan");
+        assert_eq!(cache.stats(), (1, 1));
+    }
+
+    #[test]
+    fn distinct_configs_get_distinct_plans() {
+        let cache = PlanCache::new();
+        let hw = HwSpec::default();
+        let knobs = SimKnobs {
+            sim_decode_steps: 4,
+            ..SimKnobs::default()
+        };
+        let a = cache.get_or_lower(
+            &RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8),
+            &hw,
+            &knobs,
+        );
+        let b = cache.get_or_lower(
+            &RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8),
+            &hw,
+            &knobs,
+        );
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(a.num_ranks, 2);
+        assert_eq!(b.num_ranks, 4);
+    }
+}

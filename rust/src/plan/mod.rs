@@ -1,0 +1,345 @@
+//! The shared **Plan IR**: the single lowering target of every parallelism
+//! planner (DESIGN.md §9).
+//!
+//! A `Plan` is a DAG of per-rank compute ops and inter-rank communication
+//! edges over the 2-D rank mesh, flattened into a topologically ordered op
+//! list (every op appears after everything it depends on). Four op kinds
+//! cover all of the paper's strategies:
+//!
+//! * `Compute` — a module runs on every rank of a range; the plan carries
+//!   the *nominal* roofline timing, the engine samples per-rank skew.
+//! * `Collective` — a rendezvous over a rank range (ring AllReduce,
+//!   AllGather collation, or — with zero transfer time — a pure barrier):
+//!   the straggler determines the start, then all ranks transfer in
+//!   lockstep.
+//! * `Send` / `Recv` — a point-to-point edge between pipeline stages: the
+//!   edge becomes ready when the slowest sender finishes; receivers
+//!   busy-wait on it.
+//!
+//! Plans are **deterministic**: they depend only on the model spec, the
+//! hardware, the decode-step knob, and the run configuration — never on
+//! the seed. All stochastic behavior (rank skew, stragglers, launch
+//! desynchronization) is injected by the event engine at execution time
+//! (`simulator::engine`), which is what makes plans cacheable across the
+//! repeated passes of a profiling campaign (`plan::cache::PlanCache`).
+
+pub mod cache;
+
+use std::ops::Range;
+
+use crate::simulator::perf::ModuleTiming;
+use crate::simulator::timeline::ModuleKind;
+
+pub use cache::PlanCache;
+
+/// How a collective rendezvous records per-rank waiting durations into
+/// the run's synchronization samples (the raw material of the paper's
+/// synchronization sampling). P2P receives (`Op::Recv`) always record
+/// strictly positive waits and carry no knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitRecord {
+    /// Record every participant's wait, including zeros (collectives).
+    All,
+    /// Record nothing (autoregressive step barriers).
+    None,
+}
+
+/// Contiguous rank range `[first, first + count)` — every communicator in
+/// the canonical 2-D meshes is a contiguous rank group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankRange {
+    pub first: u16,
+    pub count: u16,
+}
+
+impl RankRange {
+    pub fn of(r: Range<usize>) -> RankRange {
+        RankRange {
+            first: r.start as u16,
+            count: (r.end - r.start) as u16,
+        }
+    }
+
+    #[inline]
+    pub fn iter(&self) -> Range<usize> {
+        self.first as usize..(self.first + self.count) as usize
+    }
+
+    #[inline]
+    pub fn contains(&self, rank: usize) -> bool {
+        (self.first as usize) <= rank && rank < (self.first + self.count) as usize
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+/// One node of the lowered execution DAG.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Skewed module compute on every rank of `ranks`.
+    Compute {
+        ranks: RankRange,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        /// Nominal (unskewed) duration from the roofline perf model, s.
+        nominal_s: f64,
+        /// Arithmetic utilization for the power model.
+        util: f64,
+    },
+    /// Rendezvous over `ranks`: every participant arrives at its own clock
+    /// (plus exponential launch-desync jitter when `jitter` is set), waits
+    /// for the straggler, then transfers for `transfer_s` in lockstep.
+    /// `transfer_s == 0` is a pure synchronization barrier.
+    Collective {
+        ranks: RankRange,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        transfer_s: f64,
+        jitter: bool,
+        record: WaitRecord,
+    },
+    /// P2P edge producer: each rank of `ranks` drives the link for
+    /// `transfer_s`; edge `edge` becomes ready at the slowest sender's
+    /// completion.
+    Send {
+        ranks: RankRange,
+        layer: u16,
+        step: u32,
+        transfer_s: f64,
+        edge: u32,
+    },
+    /// P2P edge consumer: each rank of `ranks` busy-waits until edge
+    /// `edge` is ready (positive waits are recorded as sync samples).
+    Recv {
+        ranks: RankRange,
+        layer: u16,
+        step: u32,
+        edge: u32,
+    },
+}
+
+impl Op {
+    /// Ranks whose clocks this op advances.
+    pub fn ranks(&self) -> RankRange {
+        match self {
+            Op::Compute { ranks, .. }
+            | Op::Collective { ranks, .. }
+            | Op::Send { ranks, .. }
+            | Op::Recv { ranks, .. } => *ranks,
+        }
+    }
+
+    /// Decode step tag (0 = prefill).
+    pub fn step(&self) -> u32 {
+        match self {
+            Op::Compute { step, .. }
+            | Op::Collective { step, .. }
+            | Op::Send { step, .. }
+            | Op::Recv { step, .. } => *step,
+        }
+    }
+
+    /// Is this a synchronization point (rendezvous or P2P edge)?
+    pub fn is_sync(&self) -> bool {
+        !matches!(self, Op::Compute { .. })
+    }
+}
+
+/// A lowered run: the op DAG plus the profiler-visible descriptors the
+/// planners used to compute inline.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub num_ranks: usize,
+    /// Topologically ordered op list (dependencies always point backwards).
+    pub ops: Vec<Op>,
+    /// Number of P2P edges referenced by `Send`/`Recv` ops.
+    pub num_edges: u32,
+    /// Whether this strategy draws the per-run launch-desync scale (the
+    /// tensor and hybrid planners sample it once per run even when no
+    /// collective ends up jittered, preserving the seed stream).
+    pub draws_sync_jitter: bool,
+    /// Decode steps simulated explicitly (before extrapolation).
+    pub sim_steps: usize,
+    /// Collective/P2P payload bytes moved per simulated decode step.
+    pub comm_bytes_per_step: f64,
+}
+
+impl Plan {
+    /// Number of ops per kind: (compute, collective, send, recv) — used by
+    /// diagnostics and the end-to-end example.
+    pub fn op_census(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for op in &self.ops {
+            match op {
+                Op::Compute { .. } => c.0 += 1,
+                Op::Collective { .. } => c.1 += 1,
+                Op::Send { .. } => c.2 += 1,
+                Op::Recv { .. } => c.3 += 1,
+            }
+        }
+        c
+    }
+}
+
+/// Incremental builder used by the strategy lowerers.
+#[derive(Debug)]
+pub struct PlanBuilder {
+    num_ranks: usize,
+    ops: Vec<Op>,
+    num_edges: u32,
+}
+
+impl PlanBuilder {
+    pub fn new(num_ranks: usize) -> PlanBuilder {
+        PlanBuilder {
+            num_ranks,
+            ops: Vec::new(),
+            num_edges: 0,
+        }
+    }
+
+    /// Skewed compute of `timing` on every rank of `ranks`.
+    pub fn compute(
+        &mut self,
+        ranks: Range<usize>,
+        timing: ModuleTiming,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+    ) {
+        self.ops.push(Op::Compute {
+            ranks: RankRange::of(ranks),
+            module,
+            layer,
+            step,
+            nominal_s: timing.dur_s,
+            util: timing.util,
+        });
+    }
+
+    /// Rendezvous collective (or, with `transfer_s == 0`, a barrier).
+    #[allow(clippy::too_many_arguments)]
+    pub fn collective(
+        &mut self,
+        ranks: Range<usize>,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        transfer_s: f64,
+        jitter: bool,
+        record: WaitRecord,
+    ) {
+        self.ops.push(Op::Collective {
+            ranks: RankRange::of(ranks),
+            module,
+            layer,
+            step,
+            transfer_s,
+            jitter,
+            record,
+        });
+    }
+
+    /// P2P send from `ranks`; returns the edge id for the matching `recv`.
+    pub fn send(&mut self, ranks: Range<usize>, layer: u16, step: u32, transfer_s: f64) -> u32 {
+        let edge = self.num_edges;
+        self.num_edges += 1;
+        self.ops.push(Op::Send {
+            ranks: RankRange::of(ranks),
+            layer,
+            step,
+            transfer_s,
+            edge,
+        });
+        edge
+    }
+
+    /// P2P receive on `ranks` of a previously emitted edge.
+    pub fn recv(&mut self, ranks: Range<usize>, layer: u16, step: u32, edge: u32) {
+        debug_assert!(edge < self.num_edges, "recv of unsent edge {edge}");
+        self.ops.push(Op::Recv {
+            ranks: RankRange::of(ranks),
+            layer,
+            step,
+            edge,
+        });
+    }
+
+    pub fn finish(
+        self,
+        sim_steps: usize,
+        comm_bytes_per_step: f64,
+        draws_sync_jitter: bool,
+    ) -> Plan {
+        Plan {
+            num_ranks: self.num_ranks,
+            ops: self.ops,
+            num_edges: self.num_edges,
+            draws_sync_jitter,
+            sim_steps,
+            comm_bytes_per_step,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing() -> ModuleTiming {
+        ModuleTiming {
+            dur_s: 1e-3,
+            util: 0.7,
+        }
+    }
+
+    #[test]
+    fn builder_assigns_sequential_edges() {
+        let mut b = PlanBuilder::new(2);
+        b.compute(0..2, timing(), ModuleKind::Mlp, 0, 0);
+        let e0 = b.send(0..1, 8, 0, 1e-4);
+        b.recv(1..2, 8, 0, e0);
+        let e1 = b.send(0..1, 8, 1, 1e-4);
+        b.recv(1..2, 8, 1, e1);
+        let plan = b.finish(1, 64.0, false);
+        assert_eq!((e0, e1), (0, 1));
+        assert_eq!(plan.num_edges, 2);
+        assert_eq!(plan.op_census(), (1, 0, 2, 2));
+    }
+
+    #[test]
+    fn rank_range_iterates_and_contains() {
+        let r = RankRange::of(2..5);
+        assert_eq!(r.iter().collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert!(r.contains(2) && r.contains(4) && !r.contains(5) && !r.contains(1));
+        assert_eq!(r.len(), 3);
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn op_accessors_cover_all_kinds() {
+        let mut b = PlanBuilder::new(4);
+        b.compute(0..4, timing(), ModuleKind::Norm, 3, 2);
+        b.collective(0..4, ModuleKind::AllReduce, 3, 2, 1e-4, true, WaitRecord::All);
+        let e = b.send(0..1, 0, 2, 1e-5);
+        b.recv(1..2, 0, 2, e);
+        let plan = b.finish(1, 0.0, true);
+        assert!(plan.draws_sync_jitter);
+        assert!(!plan.ops[0].is_sync());
+        for op in &plan.ops[1..] {
+            assert!(op.is_sync());
+        }
+        assert_eq!(plan.ops[0].step(), 2);
+        assert_eq!(plan.ops[1].ranks().len(), 4);
+    }
+}

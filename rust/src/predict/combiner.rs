@@ -3,12 +3,15 @@
 //! `P(n) = Σ_{c ∈ child(n)} α(c) · P(c)` with
 //! `α(c) = 1 + tanh(W·feat(c) + b) / τ`.
 //!
-//! Children here are the (collapsed) tree leaves: each contributes its leaf
-//! prediction times multiplicity; α learns per-child corrections from the
-//! child's feature vector (shared `W`, as in the paper where weights are
-//! learned over a training set of ground-truth measurements). Training is
-//! full-batch gradient descent on squared root-level error; with `W = 0`
-//! the combiner is the identity sum, so it can only improve on it.
+//! Children here are the (collapsed) tree leaves — compute modules plus
+//! the phase-resolved *sync-wait* and *transfer* leaves of every
+//! communication module: each contributes its leaf prediction times
+//! multiplicity; α learns per-child corrections from the child's feature
+//! vector (shared `W`, as in the paper where weights are learned over a
+//! training set of ground-truth measurements; the `IS_SYNC` descriptor
+//! lets α correct the two comm parts differently). Training is full-batch
+//! gradient descent on squared root-level error; with `W = 0` the
+//! combiner is the identity sum, so it can only improve on it.
 
 #[derive(Debug, Clone)]
 pub struct Combiner {

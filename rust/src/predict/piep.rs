@@ -1,16 +1,20 @@
 //! The PIE-P predictor (Section 4) and its tree-structured variants.
 //!
-//! Architecture: one ridge leaf regressor per module kind over the expanded
-//! model tree (communication modules included), features per Table 1 plus
-//! module descriptors and synchronization-sampling statistics; the Eq. 1
-//! combiner composes leaf predictions into the model-level estimate.
+//! Architecture: one ridge leaf regressor per tree leaf — module kind ×
+//! execution part — over the expanded model tree, with communication
+//! modules split into *sync-wait* and *transfer* leaves (the event
+//! engine's phase-resolved attribution). Sync leaves regress the
+//! straggler-waiting energy from the synchronization-sampling statistics;
+//! transfer leaves regress the network-transfer energy from payload/ring
+//! descriptors; the Eq. 1 combiner composes leaf predictions into the
+//! model-level estimate.
 //!
 //! The same struct implements the paper's ablations and the IrEne baseline
 //! through `PiepOptions`:
 //! * `include_comm = false`  → IrEne (no inter-GPU collectives in the tree);
-//! * `use_wait = false`      → "PIE-P w/o waiting" (Appendix J): AllReduce
-//!   leaves are trained on *network-transfer-only* energy and the wait
-//!   features are dropped;
+//! * `use_wait = false`      → "PIE-P w/o waiting" (Appendix J): the
+//!   sync-wait leaves are dropped from the tree, so waiting energy is not
+//!   represented anywhere in the regression, and the wait features vanish;
 //! * `use_struct = false`    → Table-9 ablation (no model-structure
 //!   features).
 
@@ -21,7 +25,7 @@ use crate::predict::combiner::{Child, Combiner, Example};
 use crate::predict::ridge::Ridge;
 use crate::simulator::run::RunRecord;
 use crate::simulator::timeline::ModuleKind;
-use crate::tree;
+use crate::tree::{self, CommDetail, Leaf, LeafPart};
 
 /// What the model-level combiner regresses against.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,7 +33,7 @@ pub enum CombinerTarget {
     /// The external wall-meter measurement — full PIE-P, whose expanded
     /// abstraction accounts for every energy source.
     MeterTotal,
-    /// The summed measured energy of the modules the abstraction *covers*.
+    /// The summed measured energy of the leaves the abstraction *covers*.
     /// This is what a method that "excludes AllReduce energy completely
     /// from the regression" (Appendix L) can be trained on: it never sees
     /// the energy its tree does not represent, so its model-level
@@ -41,7 +45,8 @@ pub enum CombinerTarget {
 pub struct PiepOptions {
     /// Include communication modules in the tree (false ⇒ IrEne baseline).
     pub include_comm: bool,
-    /// Use synchronization sampling (false ⇒ w/o-waiting ablation).
+    /// Use synchronization sampling (false ⇒ w/o-waiting ablation: no
+    /// sync-wait leaves, no wait features).
     pub use_wait: bool,
     /// Use model-structure features (false ⇒ Table-9 ablation).
     pub use_struct: bool,
@@ -79,8 +84,8 @@ impl PiepOptions {
         }
     }
 
-    /// "PIE-P w/o waiting" (Appendix J): AllReduce reduced to its
-    /// network-transfer component; the waiting-phase energy is not
+    /// "PIE-P w/o waiting" (Appendix J): communication reduced to its
+    /// network-transfer leaves; the waiting-phase energy is not
     /// represented anywhere in the regression.
     pub fn without_waiting() -> Self {
         PiepOptions {
@@ -103,65 +108,76 @@ impl PiepOptions {
             use_wait: self.use_wait,
         }
     }
+
+    /// Communication-leaf granularity of the tree these options induce.
+    pub fn comm_detail(&self) -> CommDetail {
+        if !self.include_comm {
+            CommDetail::Omit
+        } else if !self.use_wait {
+            CommDetail::TransferOnly
+        } else {
+            CommDetail::SyncAndTransfer
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
 pub struct PieP {
     pub opts: PiepOptions,
-    pub leaf: BTreeMap<ModuleKind, Ridge>,
+    pub leaf: BTreeMap<Leaf, Ridge>,
     pub combiner: Combiner,
 }
 
-/// Leaf training target for a module kind on a run: the measured module
-/// energy, except for the w/o-waiting ablation where the AllReduce target
-/// is the network-transfer component only (Appendix L).
-fn leaf_target(r: &RunRecord, kind: ModuleKind, opts: &PiepOptions) -> Option<f64> {
-    let full = r.module_energy_j.get(&kind).copied()?;
-    if kind == ModuleKind::AllReduce && !opts.use_wait {
-        Some(r.allreduce_split_j.1)
-    } else {
-        Some(full)
+/// Leaf training target on a run: the measured (phase-resolved) energy of
+/// the part the leaf stands for. Shared with the report harness so
+/// leaf-level scoring uses exactly the trained target definition.
+pub(crate) fn leaf_target(r: &RunRecord, leaf: Leaf) -> Option<f64> {
+    match leaf.part {
+        LeafPart::Compute => r.module_energy_j.get(&leaf.kind).copied(),
+        LeafPart::Sync => r.comm_split_j.get(&leaf.kind).map(|(w, _)| *w),
+        LeafPart::Transfer => r.comm_split_j.get(&leaf.kind).map(|(_, x)| *x),
     }
 }
 
-/// The tree leaves (kind, multiplicity) for a run under `opts`.
-fn leaves(r: &RunRecord, opts: &PiepOptions) -> Vec<(ModuleKind, f64)> {
-    tree::build(&r.spec, r.config.parallelism, r.config.gpus, opts.include_comm)
+/// The tree leaves (leaf, multiplicity) for a run under `opts`.
+fn leaves(r: &RunRecord, opts: &PiepOptions) -> Vec<(Leaf, f64)> {
+    tree::build(&r.spec, r.config.parallelism, r.config.gpus, opts.comm_detail())
         .leaf_multiplicities()
 }
 
 impl PieP {
     /// Train on profiled runs. Ground truth is the wall-meter total at the
-    /// model level and the profiler's module attribution at the leaves.
+    /// model level and the profiler's phase-resolved module attribution at
+    /// the leaves.
     pub fn fit(train: &[RunRecord], sync_db: &SyncDb, opts: PiepOptions) -> PieP {
         assert!(!train.is_empty(), "empty training set");
         let fo = opts.feature_opts();
 
-        // ---- leaf samples per module kind ----
-        let mut xs: BTreeMap<ModuleKind, Vec<Vec<f64>>> = BTreeMap::new();
-        let mut ys: BTreeMap<ModuleKind, Vec<f64>> = BTreeMap::new();
+        // ---- leaf samples per tree leaf ----
+        let mut xs: BTreeMap<Leaf, Vec<Vec<f64>>> = BTreeMap::new();
+        let mut ys: BTreeMap<Leaf, Vec<f64>> = BTreeMap::new();
         for r in train {
-            for (kind, mult) in leaves(r, &opts) {
-                if let Some(y) = leaf_target(r, kind, &opts) {
+            for (leaf, mult) in leaves(r, &opts) {
+                if let Some(y) = leaf_target(r, leaf) {
                     if y <= 0.0 {
                         continue;
                     }
-                    let x = module_features(r, kind, mult, Some(sync_db), fo);
-                    xs.entry(kind).or_default().push(x);
-                    ys.entry(kind).or_default().push(y);
+                    let x = module_features(r, leaf, mult, Some(sync_db), fo);
+                    xs.entry(leaf).or_default().push(x);
+                    ys.entry(leaf).or_default().push(y);
                 }
             }
         }
         let mut leaf = BTreeMap::new();
-        for (kind, x) in xs {
-            let y = &ys[&kind];
+        for (l, x) in xs {
+            let y = &ys[&l];
             if x.len() >= 4 {
-                leaf.insert(kind, Ridge::fit(&x, y, opts.lambda, true));
+                leaf.insert(l, Ridge::fit(&x, y, opts.lambda, true));
             }
         }
         assert!(
             !leaf.is_empty(),
-            "training set too small: no module kind has the ≥4 samples a \
+            "training set too small: no tree leaf has the ≥4 samples a \
              leaf regressor needs (got {} runs)",
             train.len()
         );
@@ -177,7 +193,7 @@ impl PieP {
                 CombinerTarget::MeterTotal => r.meter_total_j,
                 CombinerTarget::CoveredModules => leaves(r, &opts)
                     .iter()
-                    .filter_map(|(k, _)| leaf_target(r, *k, &opts))
+                    .filter_map(|(l, _)| leaf_target(r, *l))
                     .sum(),
             };
             examples.push(Example {
@@ -199,16 +215,16 @@ impl PieP {
     }
 
     fn children_for(
-        leaf: &BTreeMap<ModuleKind, Ridge>,
+        leaf: &BTreeMap<Leaf, Ridge>,
         r: &RunRecord,
         sync_db: &SyncDb,
         opts: &PiepOptions,
     ) -> Vec<Child> {
         let fo = opts.feature_opts();
         let mut out = Vec::new();
-        for (kind, mult) in leaves(r, opts) {
-            if let Some(model) = leaf.get(&kind) {
-                let x = module_features(r, kind, mult, Some(sync_db), fo);
+        for (l, mult) in leaves(r, opts) {
+            if let Some(model) = leaf.get(&l) {
+                let x = module_features(r, l, mult, Some(sync_db), fo);
                 let e = model.predict(&x);
                 out.push(Child {
                     feat: x,
@@ -226,19 +242,34 @@ impl PieP {
         self.combiner.predict(&children)
     }
 
-    /// Module-level prediction for one kind (total across its instances).
+    /// Prediction for one tree leaf (total across its instances), when the
+    /// run's tree contains it and a regressor was trained for it.
+    pub fn predict_part(&self, r: &RunRecord, leaf: Leaf, sync_db: &SyncDb) -> Option<f64> {
+        let (l, mult) = leaves(r, &self.opts).into_iter().find(|(l, _)| *l == leaf)?;
+        let model = self.leaf.get(&l)?;
+        let x = module_features(r, l, mult, Some(sync_db), self.opts.feature_opts());
+        Some(model.predict(&x))
+    }
+
+    /// Module-level prediction for one kind: the sum over the module's
+    /// leaves (sync-wait + transfer for communication modules). The tree
+    /// is enumerated once, not per part.
     pub fn predict_module(
         &self,
         r: &RunRecord,
         kind: ModuleKind,
         sync_db: &SyncDb,
     ) -> Option<f64> {
-        let (k, mult) = leaves(r, &self.opts)
+        let fo = self.opts.feature_opts();
+        let parts: Vec<f64> = leaves(r, &self.opts)
             .into_iter()
-            .find(|(k, _)| *k == kind)?;
-        let model = self.leaf.get(&k)?;
-        let x = module_features(r, k, mult, Some(sync_db), self.opts.feature_opts());
-        Some(model.predict(&x))
+            .filter(|(l, _)| l.kind == kind)
+            .filter_map(|(l, mult)| {
+                let model = self.leaf.get(&l)?;
+                Some(model.predict(&module_features(r, l, mult, Some(sync_db), fo)))
+            })
+            .collect();
+        (!parts.is_empty()).then(|| parts.iter().sum())
     }
 }
 
@@ -299,13 +330,17 @@ mod tests {
     }
 
     #[test]
-    fn leaf_regressors_cover_comm_modules() {
+    fn leaf_regressors_cover_split_comm_modules() {
         let ds = quick_dataset();
         let piep = PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
-        assert!(piep.leaf.contains_key(&ModuleKind::AllReduce));
-        assert!(piep.leaf.contains_key(&ModuleKind::SelfAttention));
+        assert!(piep.leaf.contains_key(&Leaf::sync(ModuleKind::AllReduce)));
+        assert!(piep.leaf.contains_key(&Leaf::transfer(ModuleKind::AllReduce)));
+        assert!(piep.leaf.contains_key(&Leaf::compute(ModuleKind::SelfAttention)));
         let irene = PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::irene());
-        assert!(!irene.leaf.contains_key(&ModuleKind::AllReduce));
+        assert!(!irene.leaf.keys().any(|l| l.kind == ModuleKind::AllReduce));
+        let ablated = PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::without_waiting());
+        assert!(!ablated.leaf.keys().any(|l| l.part == LeafPart::Sync));
+        assert!(ablated.leaf.contains_key(&Leaf::transfer(ModuleKind::AllReduce)));
     }
 
     #[test]
@@ -322,6 +357,20 @@ mod tests {
         }
         let m = mape(&preds, &truths);
         assert!(m < 35.0, "in-sample MLP module MAPE {m:.1}%");
+    }
+
+    #[test]
+    fn part_predictions_compose_the_module_prediction() {
+        let ds = quick_dataset();
+        let piep = PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
+        let r = &ds.runs[0];
+        let sync = piep.predict_part(r, Leaf::sync(ModuleKind::AllReduce), &ds.sync_db).unwrap();
+        let xfer = piep
+            .predict_part(r, Leaf::transfer(ModuleKind::AllReduce), &ds.sync_db)
+            .unwrap();
+        let module = piep.predict_module(r, ModuleKind::AllReduce, &ds.sync_db).unwrap();
+        assert!(sync > 0.0 && xfer > 0.0);
+        assert!((sync + xfer - module).abs() < 1e-9 * module.abs().max(1.0));
     }
 
     #[test]

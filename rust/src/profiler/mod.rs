@@ -9,13 +9,16 @@
 //!
 //! Campaigns fan out over the shared `util::par` thread pool (the image
 //! has no tokio/rayon); the simulator is CPU-bound and embarrassingly
-//! parallel across runs.
+//! parallel across runs. Lowered plans are cached across the repeated
+//! passes of each configuration (`plan::PlanCache`) — lowering is
+//! seed-free, so only the stochastic event-engine execution repeats.
 
 pub mod store;
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::features::SyncDb;
-use crate::simulator::{simulate_run, RunRecord};
+use crate::plan::PlanCache;
+use crate::simulator::{simulate_run_planned, RunRecord};
 use crate::util::par;
 
 /// A profiling campaign description.
@@ -50,7 +53,9 @@ pub struct Dataset {
 }
 
 impl Campaign {
-    /// Expand configs × passes and simulate them all.
+    /// Expand configs × passes and simulate them all. Every pass of one
+    /// configuration executes the same cached plan (lowering never sees
+    /// the seed), so the cache trades one lowering for `passes` runs.
     pub fn profile(&self, configs: &[RunConfig]) -> Dataset {
         let mut jobs: Vec<RunConfig> = Vec::with_capacity(configs.len() * self.passes);
         for cfg in configs {
@@ -59,7 +64,11 @@ impl Campaign {
             }
         }
 
-        let runs = par::par_map(&jobs, self.threads, |cfg| simulate_run(cfg, &self.hw, &self.knobs));
+        let cache = PlanCache::new();
+        let runs = par::par_map(&jobs, self.threads, |cfg| {
+            let plan = cache.get_or_lower(cfg, &self.hw, &self.knobs);
+            simulate_run_planned(cfg, &self.hw, &self.knobs, &plan)
+        });
         let sync_db = SyncDb::build(&runs);
         Dataset { runs, sync_db }
     }
@@ -106,6 +115,26 @@ mod tests {
         for (x, y) in a.runs.iter().zip(&b.runs) {
             assert_eq!(x.true_total_j, y.true_total_j);
             assert_eq!(x.meter_total_j, y.meter_total_j);
+        }
+    }
+
+    #[test]
+    fn cached_plans_match_uncached_simulation() {
+        let c = Campaign {
+            passes: 3,
+            knobs: SimKnobs {
+                sim_decode_steps: 4,
+                ..SimKnobs::default()
+            },
+            ..Campaign::default()
+        };
+        let cfgs = vec![RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8)];
+        let ds = c.profile(&cfgs);
+        for (pass, r) in ds.runs.iter().enumerate() {
+            let cfg = cfgs[0].clone().with_seed(c.base_seed ^ (pass as u64 + 1));
+            let direct = crate::simulator::simulate_run(&cfg, &c.hw, &c.knobs);
+            assert_eq!(r.true_total_j, direct.true_total_j);
+            assert_eq!(r.wait_samples, direct.wait_samples);
         }
     }
 

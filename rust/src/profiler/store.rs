@@ -15,6 +15,7 @@ use crate::models;
 use crate::predict::{Combiner, PieP, PiepOptions, Ridge};
 use crate::simulator::timeline::ModuleKind;
 use crate::simulator::RunRecord;
+use crate::tree::{Leaf, LeafPart};
 use crate::util::json::{arr, num, obj, s, Json};
 
 fn vecf(xs: &[f64]) -> Json {
@@ -51,6 +52,23 @@ fn module_from_key(k: &str) -> Option<ModuleKind> {
     ModuleKind::ALL.into_iter().find(|m| module_key(*m) == k)
 }
 
+fn part_key(p: LeafPart) -> &'static str {
+    match p {
+        LeafPart::Compute => "compute",
+        LeafPart::Sync => "sync",
+        LeafPart::Transfer => "transfer",
+    }
+}
+
+fn part_from_key(k: &str) -> Option<LeafPart> {
+    match k {
+        "compute" => Some(LeafPart::Compute),
+        "sync" => Some(LeafPart::Sync),
+        "transfer" => Some(LeafPart::Transfer),
+        _ => None,
+    }
+}
+
 /// Serialize one run record.
 pub fn run_to_json(r: &RunRecord) -> Json {
     let modules: Vec<Json> = r
@@ -83,8 +101,22 @@ pub fn run_to_json(r: &RunRecord) -> Json {
         ("nvml_gpu_j", vecf(&r.nvml_gpu_j)),
         ("nvml_total_j", num(r.nvml_total_j)),
         ("modules", Json::Arr(modules)),
-        ("ar_wait_j", num(r.allreduce_split_j.0)),
-        ("ar_xfer_j", num(r.allreduce_split_j.1)),
+        (
+            "comm_splits",
+            Json::Arr(
+                r.comm_split_j
+                    .iter()
+                    .map(|(k, &(w, x))| {
+                        obj(vec![
+                            ("kind", s(module_key(*k))),
+                            ("wait_j", num(w)),
+                            ("xfer_j", num(x)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("unattributed_j", num(r.unattributed_j)),
         ("gpu_util", vecf(&r.gpu_util)),
         ("gpu_mem_util", vecf(&r.gpu_mem_util)),
         ("gpu_clock", vecf(&r.gpu_clock_ghz)),
@@ -123,6 +155,12 @@ pub fn run_from_json(j: &Json) -> Result<RunRecord, String> {
         module_energy_j.insert(kind, getf(m, "energy_j")?);
         module_time_s.insert(kind, getf(m, "time_s")?);
     }
+    let mut comm_split_j = BTreeMap::new();
+    for cs in j.get("comm_splits").and_then(Json::as_arr).ok_or("comm_splits")? {
+        let kind = module_from_key(cs.get("kind").and_then(Json::as_str).ok_or("kind")?)
+            .ok_or("bad comm kind")?;
+        comm_split_j.insert(kind, (getf(cs, "wait_j")?, getf(cs, "xfer_j")?));
+    }
     let wait_samples = getv(j, "wait_samples")?;
     let (wm, ws, wx) = (
         crate::util::stats::mean(&wait_samples),
@@ -141,7 +179,8 @@ pub fn run_from_json(j: &Json) -> Result<RunRecord, String> {
         host_energy_j: getf(j, "host_energy_j")?,
         module_energy_j,
         module_time_s,
-        allreduce_split_j: (getf(j, "ar_wait_j")?, getf(j, "ar_xfer_j")?),
+        comm_split_j,
+        unattributed_j: getf(j, "unattributed_j")?,
         meter_total_j: getf(j, "meter_total_j")?,
         nvml_gpu_j: getv(j, "nvml_gpu_j")?,
         nvml_total_j: getf(j, "nvml_total_j")?,
@@ -166,7 +205,8 @@ pub fn run_from_json(j: &Json) -> Result<RunRecord, String> {
 /// Save a profiled dataset (runs; the sync DB is rebuilt on load).
 pub fn save_dataset(runs: &[RunRecord], path: &str) -> std::io::Result<()> {
     let j = obj(vec![
-        ("format", s("piep-dataset-v1")),
+        // v2: phase-resolved comm splits + unattributed residual.
+        ("format", s("piep-dataset-v2")),
         ("runs", Json::Arr(runs.iter().map(run_to_json).collect())),
     ]);
     std::fs::write(path, j.render())
@@ -176,8 +216,8 @@ pub fn save_dataset(runs: &[RunRecord], path: &str) -> std::io::Result<()> {
 pub fn load_dataset(path: &str) -> Result<super::Dataset, String> {
     let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
     let j = Json::parse(&text)?;
-    if j.get("format").and_then(Json::as_str) != Some("piep-dataset-v1") {
-        return Err("not a piep dataset file".into());
+    if j.get("format").and_then(Json::as_str) != Some("piep-dataset-v2") {
+        return Err("not a piep dataset file (expected piep-dataset-v2)".into());
     }
     let runs: Result<Vec<RunRecord>, String> = j
         .get("runs")
@@ -218,10 +258,17 @@ pub fn save_model(m: &PieP, path: &str) -> std::io::Result<()> {
     let leaves: Vec<Json> = m
         .leaf
         .iter()
-        .map(|(k, r)| obj(vec![("kind", s(module_key(*k))), ("ridge", ridge_to_json(r))]))
+        .map(|(l, r)| {
+            obj(vec![
+                ("kind", s(module_key(l.kind))),
+                ("part", s(part_key(l.part))),
+                ("ridge", ridge_to_json(r)),
+            ])
+        })
         .collect();
     let j = obj(vec![
-        ("format", s("piep-model-v1")),
+        // v2: leaves keyed by (module kind, execution part).
+        ("format", s("piep-model-v2")),
         ("include_comm", Json::Bool(m.opts.include_comm)),
         ("use_wait", Json::Bool(m.opts.use_wait)),
         ("use_struct", Json::Bool(m.opts.use_struct)),
@@ -244,14 +291,16 @@ pub fn save_model(m: &PieP, path: &str) -> std::io::Result<()> {
 pub fn load_model(path: &str) -> Result<PieP, String> {
     let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
     let j = Json::parse(&text)?;
-    if j.get("format").and_then(Json::as_str) != Some("piep-model-v1") {
-        return Err("not a piep model file".into());
+    if j.get("format").and_then(Json::as_str) != Some("piep-model-v2") {
+        return Err("not a piep model file (expected piep-model-v2)".into());
     }
     let mut leaf = BTreeMap::new();
     for l in j.get("leaves").and_then(Json::as_arr).ok_or("leaves")? {
         let kind = module_from_key(l.get("kind").and_then(Json::as_str).ok_or("kind")?)
             .ok_or("bad kind")?;
-        leaf.insert(kind, ridge_from_json(l.get("ridge").ok_or("ridge")?)?);
+        let part = part_from_key(l.get("part").and_then(Json::as_str).ok_or("part")?)
+            .ok_or("bad part")?;
+        leaf.insert(Leaf { kind, part }, ridge_from_json(l.get("ridge").ok_or("ridge")?)?);
     }
     let cj = j.get("combiner").ok_or("combiner")?;
     let combiner = Combiner {
@@ -316,6 +365,8 @@ mod tests {
             assert!((a.meter_total_j - b.meter_total_j).abs() < 1e-9);
             assert!((a.true_total_j - b.true_total_j).abs() < 1e-9);
             assert_eq!(a.module_energy_j.len(), b.module_energy_j.len());
+            assert_eq!(a.comm_split_j, b.comm_split_j);
+            assert!((a.unattributed_j - b.unattributed_j).abs() < 1e-9);
             assert_eq!(a.wait_samples.len(), b.wait_samples.len());
             assert_eq!(a.gpu_util, b.gpu_util);
         }

@@ -32,6 +32,30 @@ fn module_mape(
     (!pred.is_empty()).then(|| mape(&pred, &truth))
 }
 
+/// Leaf-level MAPE for one phase-resolved comm leaf (sync-wait/transfer),
+/// scored against exactly the energy target the leaf regressor trained on.
+fn part_mape(
+    model: &PieP,
+    sync_db: &crate::features::SyncDb,
+    test: &[&RunRecord],
+    leaf: crate::tree::Leaf,
+) -> Option<f64> {
+    let mut pred = Vec::new();
+    let mut truth = Vec::new();
+    for r in test {
+        if let (Some(p), Some(t)) = (
+            model.predict_part(r, leaf, sync_db),
+            crate::predict::piep::leaf_target(r, leaf),
+        ) {
+            if t > 0.0 {
+                pred.push(p);
+                truth.push(t);
+            }
+        }
+    }
+    (!pred.is_empty()).then(|| mape(&pred, &truth))
+}
+
 /// Table 2: transformer-module-level prediction error per family, with the
 /// FLOPs/block and block-complexity columns.
 pub fn table2(ctx: &mut ReportCtx) -> Table {
@@ -160,6 +184,26 @@ pub fn table5(ctx: &mut ReportCtx) -> Table {
                 .unwrap_or_else(|| "-".into())
         };
         t.row(vec![kind.name().into(), cell(2), cell(4)]);
+    }
+    // Phase-resolved AllReduce decomposition: the sync-wait and transfer
+    // leaves are regressed (and scored) separately against the engine's
+    // isolated phase energies.
+    for leaf in [
+        crate::tree::Leaf::sync(ModuleKind::AllReduce),
+        crate::tree::Leaf::transfer(ModuleKind::AllReduce),
+    ] {
+        let cell = |gpus: usize| -> String {
+            let test: Vec<&RunRecord> = fit
+                .test
+                .iter()
+                .copied()
+                .filter(|r| r.config.gpus == gpus)
+                .collect();
+            part_mape(&fit.piep, &ds.sync_db, &test, leaf)
+                .map(pct)
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(vec![leaf.name(), cell(2), cell(4)]);
     }
     ctx.emit(&t, "table5");
     t

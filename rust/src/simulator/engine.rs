@@ -1,0 +1,435 @@
+//! Per-rank discrete-event engine: executes a lowered `Plan` into a
+//! power-annotated `Timeline` (DESIGN.md §9).
+//!
+//! Execution is two-phase:
+//!
+//! 1. **Resolve** (serial): walk the topologically ordered op list once,
+//!    advancing per-rank clocks. All stochastic draws happen here, in op
+//!    order — per-(rank, op) skew samples for compute, per-rank exponential
+//!    launch-desync jitter at jittered collectives — so a plan plus a seed
+//!    stream fully determines the run. Collectives resolve as *rendezvous
+//!    events*: the straggler (latest arrival) sets the start time; P2P
+//!    edges become ready when the slowest sender finishes. Per-rank waits
+//!    are recorded as synchronization samples — per each collective's
+//!    `WaitRecord`, and positive-only at P2P receives.
+//! 2. **Materialize** (parallel over ranks via `util::par`): each rank
+//!    independently expands its op slice into wait / transfer / compute
+//!    phases using the resolved rendezvous times and sampled durations.
+//!    The per-rank phase lists are merged back into the exact global order
+//!    a serial walk would produce (op index, then wait-before-transfer,
+//!    then rank), so the serial (`threads == 1`) and parallel paths are
+//!    bit-identical — including downstream floating-point reductions.
+//!
+//! The explicit *sync-wait* vs *transfer* phases this engine emits are
+//! what give the run record its phase-resolved communication/
+//! synchronization energy isolation.
+
+use crate::plan::{Op, Plan, WaitRecord};
+use crate::simulator::power::PowerModel;
+use crate::simulator::skew::SkewModel;
+use crate::simulator::timeline::{ModuleKind, Phase, PhaseKind, Timeline};
+use crate::util::par;
+use crate::util::rng::Rng;
+
+/// Output of executing a plan: the timeline plus profiler-visible side
+/// channels (formerly produced by each bespoke planner).
+#[derive(Debug, Clone)]
+pub struct BuiltRun {
+    pub timeline: Timeline,
+    /// Per-sync per-rank wait durations (s) — the raw material of PIE-P's
+    /// synchronization sampling.
+    pub wait_samples: Vec<f64>,
+    /// Time at which prefill finished (phases with step 0 are prefill).
+    pub prefill_end: f64,
+    /// Decode steps actually simulated (before extrapolation).
+    pub sim_steps: usize,
+    /// Total collective/P2P payload bytes moved per simulated decode step.
+    pub comm_bytes_per_step: f64,
+}
+
+/// Resolved stochastic state of one run: everything pass 2 needs to expand
+/// phases without touching the RNG.
+struct Resolved {
+    /// Flat pool of sampled compute durations (per op, per rank in range).
+    durs: Vec<f64>,
+    /// Per-op offset into `durs` (compute ops only).
+    dur_at: Vec<u32>,
+    /// Per-op resolved rendezvous / edge-ready time (sync ops only).
+    sync_t: Vec<f64>,
+    /// Final per-rank clocks.
+    clocks: Vec<f64>,
+    wait_samples: Vec<f64>,
+    prefill_end: f64,
+}
+
+/// Pass 1: resolve clocks, rendezvous times, and all stochastic draws.
+fn resolve(plan: &Plan, skew: &SkewModel, sync_jitter: f64, rng: &mut Rng) -> Resolved {
+    let n_ops = plan.ops.len();
+    let mut clocks = vec![0.0f64; plan.num_ranks];
+    let mut durs: Vec<f64> = Vec::new();
+    let mut dur_at = vec![0u32; n_ops];
+    let mut sync_t = vec![0.0f64; n_ops];
+    let mut edges = vec![0.0f64; plan.num_edges as usize];
+    let mut wait_samples = Vec::new();
+    let mut prefill_end = 0.0f64;
+
+    for (i, op) in plan.ops.iter().enumerate() {
+        match op {
+            Op::Compute {
+                ranks,
+                module,
+                nominal_s,
+                ..
+            } => {
+                dur_at[i] = durs.len() as u32;
+                for rank in ranks.iter() {
+                    let d = skew.sample_module(*nominal_s, rank, *module, rng);
+                    durs.push(d);
+                    clocks[rank] += d;
+                }
+            }
+            Op::Collective {
+                ranks,
+                transfer_s,
+                jitter,
+                record,
+                ..
+            } => {
+                // Rendezvous: the straggler-determined start time. The fold
+                // from 0.0 matches the planners' historical arrival max.
+                let mut arrive = 0.0f64;
+                if *jitter {
+                    for rank in ranks.iter() {
+                        arrive = arrive.max(clocks[rank] + rng.exponential(sync_jitter));
+                    }
+                } else {
+                    for rank in ranks.iter() {
+                        arrive = arrive.max(clocks[rank]);
+                    }
+                }
+                sync_t[i] = arrive;
+                for rank in ranks.iter() {
+                    let waited = (arrive - clocks[rank]).max(0.0);
+                    match record {
+                        WaitRecord::All => wait_samples.push(waited),
+                        WaitRecord::None => {}
+                    }
+                    clocks[rank] = clocks[rank].max(arrive) + transfer_s;
+                }
+            }
+            Op::Send {
+                ranks,
+                transfer_s,
+                edge,
+                ..
+            } => {
+                let mut done = 0.0f64;
+                for rank in ranks.iter() {
+                    clocks[rank] += transfer_s;
+                    done = done.max(clocks[rank]);
+                }
+                edges[*edge as usize] = done;
+            }
+            Op::Recv { ranks, edge, .. } => {
+                let ready = edges[*edge as usize];
+                sync_t[i] = ready;
+                for rank in ranks.iter() {
+                    let waited = (ready - clocks[rank]).max(0.0);
+                    if waited > 0.0 {
+                        wait_samples.push(waited);
+                    }
+                    clocks[rank] = clocks[rank].max(ready);
+                }
+            }
+        }
+        if op.step() == 0 {
+            for rank in op.ranks().iter() {
+                prefill_end = prefill_end.max(clocks[rank]);
+            }
+        }
+    }
+
+    Resolved {
+        durs,
+        dur_at,
+        sync_t,
+        clocks,
+        wait_samples,
+        prefill_end,
+    }
+}
+
+/// Ordering key reproducing the serial emission order inside one op:
+/// all waits (class 0) in rank order, then all transfers (class 1).
+#[inline]
+fn seq_key(op_idx: usize, class: u8, rank: usize) -> u64 {
+    ((op_idx as u64) << 24) | ((class as u64) << 16) | rank as u64
+}
+
+/// Pass 2 (per rank): expand this rank's ops into keyed phases.
+fn rank_phases(
+    plan: &Plan,
+    res: &Resolved,
+    power: &PowerModel,
+    rank: usize,
+) -> Vec<(u64, Phase)> {
+    let wait_w = power.gpu_power(PhaseKind::Wait, 0.0);
+    let comm_w = power.gpu_power(PhaseKind::Transfer, 0.0);
+    let mut clock = 0.0f64;
+    let mut out = Vec::new();
+    let mut push = |key: u64, kind, module, layer, step, t0: f64, t1: f64, power_w| {
+        if t1 > t0 {
+            out.push((
+                key,
+                Phase {
+                    gpu: rank as u16,
+                    kind,
+                    module,
+                    layer,
+                    step,
+                    t0,
+                    t1,
+                    power_w,
+                },
+            ));
+        }
+    };
+    for (i, op) in plan.ops.iter().enumerate() {
+        let ranks = op.ranks();
+        if !ranks.contains(rank) {
+            continue;
+        }
+        match op {
+            Op::Compute {
+                module,
+                layer,
+                step,
+                util,
+                ..
+            } => {
+                let d = res.durs[res.dur_at[i] as usize + (rank - ranks.first as usize)];
+                let p = power.gpu_power(PhaseKind::Compute, *util);
+                push(seq_key(i, 0, rank), PhaseKind::Compute, *module, *layer, *step, clock, clock + d, p);
+                clock += d;
+            }
+            Op::Collective {
+                module,
+                layer,
+                step,
+                transfer_s,
+                ..
+            } => {
+                let t = res.sync_t[i];
+                push(seq_key(i, 0, rank), PhaseKind::Wait, *module, *layer, *step, clock, clock.max(t), wait_w);
+                clock = clock.max(t);
+                let end = clock + transfer_s;
+                push(seq_key(i, 1, rank), PhaseKind::Transfer, *module, *layer, *step, clock, end, comm_w);
+                clock += transfer_s;
+            }
+            Op::Send {
+                layer,
+                step,
+                transfer_s,
+                ..
+            } => {
+                push(
+                    seq_key(i, 0, rank),
+                    PhaseKind::Transfer,
+                    ModuleKind::P2PTransfer,
+                    *layer,
+                    *step,
+                    clock,
+                    clock + transfer_s,
+                    comm_w,
+                );
+                clock += transfer_s;
+            }
+            Op::Recv { layer, step, .. } => {
+                let t = res.sync_t[i];
+                push(
+                    seq_key(i, 0, rank),
+                    PhaseKind::Wait,
+                    ModuleKind::P2PTransfer,
+                    *layer,
+                    *step,
+                    clock,
+                    clock.max(t),
+                    wait_w,
+                );
+                clock = clock.max(t);
+            }
+        }
+    }
+    debug_assert!(
+        (clock - res.clocks[rank]).abs() < 1e-12,
+        "rank {rank} clock drift: {clock} vs {}",
+        res.clocks[rank]
+    );
+    out
+}
+
+/// Execute a plan under the run's stochastic conditions. `threads` bounds
+/// the `util::par` pool materializing per-rank phases (1 ⇒ serial; the
+/// result is bit-identical either way).
+pub fn execute(
+    plan: &Plan,
+    power: &PowerModel,
+    skew: &SkewModel,
+    sync_jitter: f64,
+    rng: &mut Rng,
+    threads: usize,
+) -> BuiltRun {
+    let res = resolve(plan, skew, sync_jitter, rng);
+
+    // `threads` follows the `util::par` convention: 0 ⇒ available cores,
+    // 1 ⇒ serial map (no spawn).
+    let ranks: Vec<usize> = (0..plan.num_ranks).collect();
+    let per_rank = par::par_map(&ranks, threads, |&r| rank_phases(plan, &res, power, r));
+    let mut keyed: Vec<(u64, Phase)> = per_rank.into_iter().flatten().collect();
+    keyed.sort_unstable_by_key(|(k, _)| *k);
+    let phases: Vec<Phase> = keyed.into_iter().map(|(_, p)| p).collect();
+
+    let mut timeline = Timeline::from_parts(
+        plan.num_ranks,
+        power.gpu_power(PhaseKind::Idle, 0.0),
+        phases,
+        res.clocks,
+    );
+    timeline.finalize();
+
+    BuiltRun {
+        timeline,
+        wait_samples: res.wait_samples,
+        prefill_end: res.prefill_end,
+        sim_steps: plan.sim_steps,
+        comm_bytes_per_step: plan.comm_bytes_per_step,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwSpec, SimKnobs};
+    use crate::plan::PlanBuilder;
+    use crate::simulator::perf::ModuleTiming;
+
+    fn setup() -> (PowerModel, SkewModel, Rng) {
+        let hw = HwSpec::default();
+        let mut rng = Rng::new(7);
+        let skew = SkewModel::new(&SimKnobs::default(), 4, &mut rng);
+        (PowerModel::new(&hw), skew, rng)
+    }
+
+    fn t(dur: f64) -> ModuleTiming {
+        ModuleTiming {
+            dur_s: dur,
+            util: 0.7,
+        }
+    }
+
+    #[test]
+    fn rendezvous_waits_align_ranks() {
+        let (power, skew, mut rng) = setup();
+        let mut b = PlanBuilder::new(4);
+        b.compute(0..4, t(1e-3), ModuleKind::Mlp, 0, 0);
+        b.collective(0..4, ModuleKind::AllReduce, 0, 0, 1e-4, false, WaitRecord::All);
+        let plan = b.finish(1, 0.0, false);
+        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1);
+        // All four ranks end at rendezvous + transfer.
+        let end = run.timeline.clock(0);
+        for r in 1..4 {
+            assert!((run.timeline.clock(r) - end).abs() < 1e-15);
+        }
+        // Exactly one rank (the straggler) waited zero.
+        assert_eq!(run.wait_samples.len(), 4);
+        assert_eq!(run.wait_samples.iter().filter(|&&w| w == 0.0).count(), 1);
+    }
+
+    #[test]
+    fn p2p_edge_gates_receiver() {
+        let (power, skew, mut rng) = setup();
+        let mut b = PlanBuilder::new(2);
+        b.compute(0..1, t(2e-3), ModuleKind::Mlp, 0, 0);
+        let e = b.send(0..1, 1, 0, 5e-4);
+        b.recv(1..2, 1, 0, e);
+        b.compute(1..2, t(1e-3), ModuleKind::Mlp, 1, 0);
+        let plan = b.finish(1, 0.0, false);
+        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1);
+        let tl = &run.timeline;
+        // Receiver's first phase is the recorded busy-wait on the edge.
+        let first = tl.phases.iter().find(|p| p.gpu == 1).unwrap();
+        assert_eq!(first.kind, PhaseKind::Wait);
+        assert_eq!(first.module, ModuleKind::P2PTransfer);
+        assert_eq!(run.wait_samples.len(), 1);
+        // Sender transfer ends exactly where the receiver wait ends.
+        let send_end = tl
+            .phases
+            .iter()
+            .find(|p| p.gpu == 0 && p.kind == PhaseKind::Transfer)
+            .unwrap()
+            .t1;
+        assert!((first.t1 - send_end).abs() < 1e-15);
+    }
+
+    #[test]
+    fn barrier_records_no_samples_but_wait_phases() {
+        let (power, skew, mut rng) = setup();
+        let mut b = PlanBuilder::new(2);
+        b.compute(0..2, t(1e-3), ModuleKind::Mlp, 0, 1);
+        b.collective(0..2, ModuleKind::P2PTransfer, 0, 1, 0.0, false, WaitRecord::None);
+        let plan = b.finish(1, 0.0, false);
+        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1);
+        assert!(run.wait_samples.is_empty());
+        assert!(run
+            .timeline
+            .phases
+            .iter()
+            .any(|p| p.kind == PhaseKind::Wait));
+        assert!((run.timeline.clock(0) - run.timeline.clock(1)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn serial_and_parallel_materialization_bit_identical() {
+        let hw = HwSpec::default();
+        let power = PowerModel::new(&hw);
+        let mut b = PlanBuilder::new(4);
+        for step in 0..3u32 {
+            for layer in 0..8u16 {
+                b.compute(0..4, t(1e-3), ModuleKind::SelfAttention, layer, step);
+                b.collective(0..4, ModuleKind::AllReduce, layer, step, 1e-4, true, WaitRecord::All);
+            }
+            let e = b.send(0..2, 0, step, 2e-4);
+            b.recv(2..4, 0, step, e);
+        }
+        let plan = b.finish(2, 1.0, true);
+        let exec = |threads: usize| {
+            let mut rng = Rng::new(11);
+            let skew = SkewModel::new(&SimKnobs::default(), 4, &mut rng);
+            execute(&plan, &power, &skew, 40e-6, &mut rng, threads)
+        };
+        let (a, b) = (exec(1), exec(4));
+        assert_eq!(a.wait_samples, b.wait_samples);
+        assert_eq!(a.prefill_end, b.prefill_end);
+        assert_eq!(a.timeline.phases.len(), b.timeline.phases.len());
+        for (pa, pb) in a.timeline.phases.iter().zip(&b.timeline.phases) {
+            assert_eq!(pa.gpu, pb.gpu);
+            assert_eq!(pa.kind, pb.kind);
+            assert_eq!(pa.t0, pb.t0);
+            assert_eq!(pa.t1, pb.t1);
+            assert_eq!(pa.power_w, pb.power_w);
+        }
+        assert_eq!(a.timeline.gpu_energy_j(), b.timeline.gpu_energy_j());
+    }
+
+    #[test]
+    fn prefill_end_tracks_step_zero_ops_only() {
+        let (power, skew, mut rng) = setup();
+        let mut b = PlanBuilder::new(2);
+        b.compute(0..2, t(1e-3), ModuleKind::Mlp, 0, 0);
+        b.compute(0..2, t(5e-3), ModuleKind::Mlp, 0, 1);
+        let plan = b.finish(1, 0.0, false);
+        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1);
+        assert!(run.prefill_end > 0.0);
+        assert!(run.prefill_end < run.timeline.makespan());
+    }
+}

@@ -1,19 +1,23 @@
 //! Multi-GPU LLM inference substrate: a deterministic, seeded simulator of
-//! the paper's testbed (DESIGN.md §2, §7).
+//! the paper's testbed (DESIGN.md §2, §7, §9).
 //!
-//! The simulator produces, for one inference run, a *timeline* of
-//! power-annotated phases per GPU (compute / synchronization-wait /
+//! The planners lower a run into the shared Plan IR (`crate::plan`); the
+//! per-rank discrete-event engine (`engine`) executes it into a *timeline*
+//! of power-annotated phases per GPU (compute / synchronization-wait /
 //! transfer / idle), from which the telemetry layer derives everything the
 //! paper measures: wall-meter system energy, NVML GPU energy, utilization
 //! counters, and the fine-grained module windows PIE-P's profiler
-//! timestamps.
+//! timestamps — with sync-wait energy isolated from transfer energy per
+//! communication module.
 
 pub mod collective;
+pub mod engine;
 pub mod perf;
 pub mod power;
 pub mod run;
 pub mod skew;
 pub mod timeline;
 
-pub use run::{simulate_run, RunRecord};
+pub use engine::BuiltRun;
+pub use run::{simulate_run, simulate_run_planned, RunRecord};
 pub use timeline::{ModuleKind, Phase, PhaseKind, Timeline};

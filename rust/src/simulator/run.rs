@@ -1,17 +1,20 @@
-//! Run orchestration: RunConfig → planner → timeline → telemetry →
-//! `RunRecord`, the unit record the profiler and feature pipeline consume.
+//! Run orchestration: RunConfig → plan lowering → event engine →
+//! telemetry → `RunRecord`, the unit record the profiler and feature
+//! pipeline consume.
 //!
-//! Decode extrapolation: the planner simulates `SimKnobs::sim_decode_steps`
-//! representative decode steps (KV contexts spread across the output
-//! length); aggregate decode quantities are scaled to the full `seq_out`.
-//! This mirrors the paper's own sampling-based profiling (Appendix L) and
-//! keeps a full profiling campaign tractable.
+//! Decode extrapolation: the lowered plan simulates
+//! `SimKnobs::sim_decode_steps` representative decode steps (KV contexts
+//! spread across the output length); aggregate decode quantities are
+//! scaled to the full `seq_out`. This mirrors the paper's own
+//! sampling-based profiling (Appendix L) and keeps a full profiling
+//! campaign tractable.
 
 use std::collections::BTreeMap;
 
-use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::models::{self, ModelSpec};
 use crate::parallelism::{self, BuiltRun};
+use crate::plan::Plan;
 use crate::simulator::power::PowerModel;
 use crate::simulator::timeline::{ModuleKind, PhaseKind};
 use crate::telemetry;
@@ -40,8 +43,15 @@ pub struct RunRecord {
     /// below), wall-referenced.
     pub module_energy_j: BTreeMap<ModuleKind, f64>,
     pub module_time_s: BTreeMap<ModuleKind, f64>,
-    /// AllReduce energy split: (waiting phase, network transfer), J.
-    pub allreduce_split_j: (f64, f64),
+    /// Phase-resolved split of every communication module's wall energy
+    /// into (synchronization-wait, network-transfer), J — the paper's
+    /// synchronization-sampling decomposition, now carried for AllReduce,
+    /// P2PTransfer, and AllGather alike.
+    pub comm_split_j: BTreeMap<ModuleKind, (f64, f64)>,
+    /// Wall energy outside the module attribution: GPU idle slack and
+    /// background host draw (both PSU-scaled). Together with
+    /// `module_energy_j` this conserves `true_total_j` exactly.
+    pub unattributed_j: f64,
 
     // --- instruments ---
     /// Wall-meter measurement (training ground truth), J.
@@ -93,11 +103,44 @@ impl RunRecord {
             .map(|m| self.module_energy_j.get(m).copied().unwrap_or(0.0))
             .sum()
     }
+
+    /// AllReduce energy split (waiting phase, network transfer), J.
+    pub fn allreduce_split_j(&self) -> (f64, f64) {
+        self.comm_split_j
+            .get(&ModuleKind::AllReduce)
+            .copied()
+            .unwrap_or((0.0, 0.0))
+    }
+
+    /// Total synchronization-wait energy across all comm modules, J.
+    pub fn sync_wait_j(&self) -> f64 {
+        self.comm_split_j.values().map(|(w, _)| w).sum()
+    }
+
+    /// Total network-transfer energy across all comm modules, J.
+    pub fn comm_transfer_j(&self) -> f64 {
+        self.comm_split_j.values().map(|(_, x)| x).sum()
+    }
 }
 
 /// Simulate one run. Panics if the model does not fit the configuration
 /// (callers use `models::ModelSpec::fits_tp` to build valid grids).
 pub fn simulate_run(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord {
+    let spec = models::by_name(&cfg.model)
+        .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
+    let plan = parallelism::lower(&spec, hw, knobs, cfg);
+    simulate_run_planned(cfg, hw, knobs, &plan)
+}
+
+/// Simulate one run from an already lowered plan (the profiling campaigns
+/// cache plans across passes via `plan::PlanCache`; results are identical
+/// to `simulate_run` because lowering is seed-free).
+pub fn simulate_run_planned(
+    cfg: &RunConfig,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    plan: &Plan,
+) -> RunRecord {
     let spec = models::by_name(&cfg.model)
         .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
 
@@ -118,17 +161,9 @@ pub fn simulate_run(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord
         0.0
     };
 
-    // Plan + simulate.
-    let built: BuiltRun = match cfg.parallelism {
-        Parallelism::Tensor => parallelism::tensor::build(&spec, hw, knobs, cfg, &power, &mut rng),
-        Parallelism::Pipeline => {
-            parallelism::pipeline::build(&spec, hw, knobs, cfg, &power, &mut rng)
-        }
-        Parallelism::Data => parallelism::data::build(&spec, hw, knobs, cfg, &power, &mut rng),
-        Parallelism::Hybrid { .. } => {
-            parallelism::hybrid::build(&spec, hw, knobs, cfg, &power, &mut rng)
-        }
-    };
+    // Execute the plan through the per-rank discrete-event engine.
+    let built: BuiltRun =
+        parallelism::execute_plan(plan, &spec, knobs, &power, &mut rng, knobs.engine_threads);
     let tl = &built.timeline;
     let g = cfg.gpus;
 
@@ -141,28 +176,32 @@ pub fn simulate_run(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord
 
     // Per-module and per-GPU energies with decode scaling. Dense arrays
     // indexed by ModuleKind::idx on the per-phase hot loop (EXPERIMENTS.md
-    // §Perf); converted to maps once at the end.
+    // §Perf); converted to maps once at the end. Communication modules get
+    // a parallel wait/transfer decomposition from the engine's explicit
+    // sync-wait phases.
     let mut module_gpu_arr = [0.0f64; 8];
     let mut module_time_arr = [0.0f64; 8];
+    let mut comm_wait_arr = [0.0f64; 8];
+    let mut comm_xfer_arr = [0.0f64; 8];
     let mut gpu_j = vec![0.0f64; g];
-    let mut ar_wait = 0.0f64;
-    let mut ar_xfer = 0.0f64;
+    let mut idle_j = 0.0f64;
     let mut busy_time = 0.0f64;
     for p in &tl.phases {
         let s = if p.step == 0 { 1.0 } else { scale };
         let e = p.energy_j() * s;
         gpu_j[p.gpu as usize] += e;
         if p.kind == PhaseKind::Idle {
+            idle_j += e;
             continue;
         }
         let mi = p.module.idx();
         module_gpu_arr[mi] += e;
         module_time_arr[mi] += p.dur() * s;
         busy_time += p.dur() * s;
-        if p.module == ModuleKind::AllReduce {
+        if p.module.is_comm() {
             match p.kind {
-                PhaseKind::Wait => ar_wait += e,
-                PhaseKind::Transfer => ar_xfer += e,
+                PhaseKind::Wait => comm_wait_arr[mi] += e,
+                PhaseKind::Transfer => comm_xfer_arr[mi] += e,
                 _ => {}
             }
         }
@@ -206,31 +245,37 @@ pub fn simulate_run(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord
         hw.psu_base_w * wall_s + loss * (gpu_energy_j + host_energy_j + background_j);
 
     // Wall-referenced module attribution: GPU part scaled by PSU loss, host
-    // + PSU base spread over modules by busy-time share.
+    // + PSU base spread over modules by busy-time share. GPU idle slack and
+    // background draw stay outside the attribution (`unattributed_j`), so
+    // Σ module_energy_j + unattributed_j == true_total_j exactly.
     let overhead_j = host_energy_j * loss + hw.psu_base_w * wall_s;
     let mut module_energy_j = BTreeMap::new();
     for (m, e) in &module_gpu_j {
         let tshare = module_time.get(m).copied().unwrap_or(0.0) / busy_time.max(1e-12);
         module_energy_j.insert(*m, e * loss + overhead_j * tshare);
     }
-    let ar_total_gpu = ar_wait + ar_xfer;
-    let ar_overhead = if ar_total_gpu > 0.0 {
-        module_energy_j
-            .get(&ModuleKind::AllReduce)
-            .copied()
-            .unwrap_or(0.0)
-            - ar_total_gpu * loss
-    } else {
-        0.0
-    };
-    // Split AllReduce wall energy proportionally between wait and transfer.
-    let allreduce_split_j = if ar_total_gpu > 0.0 {
-        let w = ar_wait * loss + ar_overhead * ar_wait / ar_total_gpu;
-        let x = ar_xfer * loss + ar_overhead * ar_xfer / ar_total_gpu;
-        (w, x)
-    } else {
-        (0.0, 0.0)
-    };
+    let unattributed_j = loss * (idle_j + background_j);
+
+    // Split each comm module's wall energy proportionally between its
+    // sync-wait and transfer phases (overhead follows the GPU-side ratio).
+    let mut comm_split_j = BTreeMap::new();
+    for kind in ModuleKind::ALL.iter().filter(|m| m.is_comm()) {
+        let mi = kind.idx();
+        let (w, x) = (comm_wait_arr[mi], comm_xfer_arr[mi]);
+        let total_gpu = w + x;
+        if total_gpu <= 0.0 {
+            continue;
+        }
+        let wall = module_energy_j.get(kind).copied().unwrap_or(0.0);
+        let overhead = wall - total_gpu * loss;
+        comm_split_j.insert(
+            *kind,
+            (
+                w * loss + overhead * w / total_gpu,
+                x * loss + overhead * x / total_gpu,
+            ),
+        );
+    }
 
     // ---- instruments ----
     let (_pmean, pcv) = tl.power_mean_cv();
@@ -300,7 +345,8 @@ pub fn simulate_run(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord
         host_energy_j,
         module_energy_j,
         module_time_s: module_time,
-        allreduce_split_j,
+        comm_split_j,
+        unattributed_j,
         meter_total_j: meter.energy_j,
         nvml_gpu_j: nvml.gpu_energy_j,
         nvml_total_j: nvml.total_j,
@@ -325,6 +371,7 @@ pub fn simulate_run(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Parallelism;
 
     fn run(model: &str, par: Parallelism, g: usize, batch: usize, seed: u64) -> RunRecord {
         let cfg = RunConfig::new(model, par, g, batch).with_seed(seed);
@@ -339,6 +386,35 @@ mod tests {
         let module_sum: f64 = r.module_energy_j.values().sum();
         assert!(module_sum <= r.true_total_j * 1.001);
         assert!(module_sum > 0.6 * r.true_total_j, "modules cover most energy");
+    }
+
+    #[test]
+    fn attribution_conserves_total_energy() {
+        for (par, g) in [
+            (Parallelism::Tensor, 4),
+            (Parallelism::Pipeline, 4),
+            (Parallelism::Data, 2),
+        ] {
+            let r = run("Vicuna-7B", par, g, 16, 12);
+            let covered: f64 = r.module_energy_j.values().sum::<f64>() + r.unattributed_j;
+            let rel = (covered - r.true_total_j).abs() / r.true_total_j;
+            assert!(rel < 1e-9, "{par:?}: {covered} vs {} (rel {rel})", r.true_total_j);
+        }
+    }
+
+    #[test]
+    fn planned_path_matches_direct_simulation() {
+        let hw = HwSpec::default();
+        let knobs = SimKnobs::default();
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 16).with_seed(77);
+        let spec = crate::models::by_name("Vicuna-7B").unwrap();
+        let plan = crate::parallelism::lower(&spec, &hw, &knobs, &cfg);
+        let a = simulate_run(&cfg, &hw, &knobs);
+        let b = simulate_run_planned(&cfg, &hw, &knobs, &plan);
+        assert_eq!(a.true_total_j, b.true_total_j);
+        assert_eq!(a.meter_total_j, b.meter_total_j);
+        assert_eq!(a.wait_samples, b.wait_samples);
+        assert_eq!(a.module_energy_j, b.module_energy_j);
     }
 
     #[test]
@@ -363,12 +439,22 @@ mod tests {
     }
 
     #[test]
-    fn allreduce_split_sums_to_module_energy() {
+    fn comm_splits_sum_to_module_energy() {
         let r = run("Vicuna-13B", Parallelism::Tensor, 4, 16, 4);
-        let (w, x) = r.allreduce_split_j;
+        let (w, x) = r.allreduce_split_j();
         let total = r.module_energy_j[&ModuleKind::AllReduce];
         assert!((w + x - total).abs() / total < 1e-6, "{w}+{x} vs {total}");
         assert!(w > 0.0 && x > 0.0);
+        // Every comm module present carries a split that reconstructs it.
+        for (kind, (w, x)) in &r.comm_split_j {
+            let tot = r.module_energy_j[kind];
+            assert!((w + x - tot).abs() / tot < 1e-6, "{kind:?}");
+        }
+        // Pipeline runs isolate P2P sync waits from transfer energy too.
+        let pp = run("Vicuna-7B", Parallelism::Pipeline, 4, 16, 4);
+        let (w, x) = pp.comm_split_j[&ModuleKind::P2PTransfer];
+        assert!(w > 0.0, "PP bubbles record sync-wait energy");
+        assert!(x > 0.0, "PP boundary sends record transfer energy");
     }
 
     #[test]

@@ -130,6 +130,25 @@ impl Timeline {
         }
     }
 
+    /// Reassemble a timeline from externally materialized phases (the
+    /// event engine's parallel path). `clocks` must equal each GPU's final
+    /// phase end time; per-GPU phases must be contiguous and time-ordered,
+    /// as `push` would have produced them.
+    pub(crate) fn from_parts(
+        num_gpus: usize,
+        idle_w: f64,
+        phases: Vec<Phase>,
+        clocks: Vec<f64>,
+    ) -> Self {
+        debug_assert_eq!(clocks.len(), num_gpus);
+        Timeline {
+            num_gpus,
+            phases,
+            clocks,
+            idle_w,
+        }
+    }
+
     pub fn clock(&self, gpu: usize) -> f64 {
         self.clocks[gpu]
     }

@@ -10,6 +10,15 @@
 //! * pipeline: `P2PTransfer` nodes at each stage boundary;
 //! * data: a terminal `AllGather` (batch-output module).
 //!
+//! With the event engine's phase-resolved attribution, every communication
+//! node further splits into a **sync-wait leaf** (the straggler-determined
+//! rendezvous waiting phase) and a **transfer leaf** (the network-transfer
+//! phase) — the two have different energy physics (busy-spin power vs
+//! interconnect-drive power) and different predictive features (wait
+//! statistics vs payload/ring geometry), so PIE-P regresses them
+//! separately. `CommDetail` selects the granularity: `Omit` reproduces
+//! IrEne's abstraction, `TransferOnly` the w/o-waiting ablation.
+//!
 //! Because every transformer block is structurally identical, the tree
 //! stores one `Block` child with a *multiplicity* equal to the layer count
 //! (and boundary counts for P2P) — an exactly equivalent collapsed form of
@@ -19,6 +28,80 @@
 use crate::config::Parallelism;
 use crate::models::ModelSpec;
 use crate::simulator::timeline::ModuleKind;
+
+/// Which execution phase of a module a leaf stands for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LeafPart {
+    /// The module's arithmetic (all compute modules).
+    Compute,
+    /// A communication module's synchronization-wait phase.
+    Sync,
+    /// A communication module's network-transfer phase.
+    Transfer,
+}
+
+/// A tree leaf: a module kind plus the execution part it covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Leaf {
+    pub kind: ModuleKind,
+    pub part: LeafPart,
+}
+
+impl Leaf {
+    pub fn compute(kind: ModuleKind) -> Leaf {
+        Leaf {
+            kind,
+            part: LeafPart::Compute,
+        }
+    }
+
+    pub fn sync(kind: ModuleKind) -> Leaf {
+        Leaf {
+            kind,
+            part: LeafPart::Sync,
+        }
+    }
+
+    pub fn transfer(kind: ModuleKind) -> Leaf {
+        Leaf {
+            kind,
+            part: LeafPart::Transfer,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self.part {
+            LeafPart::Compute => self.kind.name().to_string(),
+            LeafPart::Sync => format!("{} (sync-wait)", self.kind.name()),
+            LeafPart::Transfer => format!("{} (transfer)", self.kind.name()),
+        }
+    }
+}
+
+/// Granularity of the communication nodes in the tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommDetail {
+    /// No communication nodes at all (IrEne's original abstraction).
+    Omit,
+    /// Transfer leaves only — the waiting phase is not represented
+    /// anywhere in the regression ("PIE-P w/o waiting", Appendix J).
+    TransferOnly,
+    /// Full phase-resolved decomposition: sync-wait + transfer leaves.
+    SyncAndTransfer,
+}
+
+impl CommDetail {
+    fn leaves(&self, kind: ModuleKind, multiplicity: f64, out: &mut Vec<Node>) {
+        match self {
+            CommDetail::Omit => {}
+            CommDetail::TransferOnly => out.push(Node::leaf(Leaf::transfer(kind), multiplicity)),
+            CommDetail::SyncAndTransfer => {
+                out.push(Node::leaf(Leaf::sync(kind), multiplicity));
+                out.push(Node::leaf(Leaf::transfer(kind), multiplicity));
+            }
+        }
+    }
+}
 
 /// A node of the model tree.
 #[derive(Debug, Clone)]
@@ -33,24 +116,24 @@ pub struct Node {
 pub enum NodeKind {
     Root,
     Block,
-    Leaf(ModuleKind),
+    Leaf(Leaf),
 }
 
 impl Node {
-    fn leaf(kind: ModuleKind, multiplicity: f64) -> Node {
+    fn leaf(leaf: Leaf, multiplicity: f64) -> Node {
         Node {
-            kind: NodeKind::Leaf(kind),
+            kind: NodeKind::Leaf(leaf),
             multiplicity,
             children: Vec::new(),
         }
     }
 
-    /// All leaf (kind, total multiplicity from the root) pairs.
-    pub fn leaf_multiplicities(&self) -> Vec<(ModuleKind, f64)> {
-        fn walk(n: &Node, mult: f64, out: &mut Vec<(ModuleKind, f64)>) {
+    /// All leaf (leaf, total multiplicity from the root) pairs.
+    pub fn leaf_multiplicities(&self) -> Vec<(Leaf, f64)> {
+        fn walk(n: &Node, mult: f64, out: &mut Vec<(Leaf, f64)>) {
             let m = mult * n.multiplicity;
             match n.kind {
-                NodeKind::Leaf(k) => out.push((k, m)),
+                NodeKind::Leaf(leaf) => out.push((leaf, m)),
                 _ => {
                     for c in &n.children {
                         walk(c, m, out);
@@ -69,27 +152,27 @@ impl Node {
 }
 
 /// Build the model tree for a (model, parallelism, degree) configuration.
-/// `include_comm = false` reproduces IrEne's original abstraction (the
-/// baseline that omits inter-GPU collectives).
-pub fn build(spec: &ModelSpec, parallelism: Parallelism, gpus: usize, include_comm: bool) -> Node {
+/// `comm` selects the communication-node granularity (`CommDetail::Omit`
+/// reproduces IrEne's original abstraction).
+pub fn build(spec: &ModelSpec, parallelism: Parallelism, gpus: usize, comm: CommDetail) -> Node {
     let mut block_children = vec![
-        Node::leaf(ModuleKind::Norm, 2.0),
-        Node::leaf(ModuleKind::SelfAttention, 1.0),
-        Node::leaf(ModuleKind::Mlp, 1.0),
+        Node::leaf(Leaf::compute(ModuleKind::Norm), 2.0),
+        Node::leaf(Leaf::compute(ModuleKind::SelfAttention), 1.0),
+        Node::leaf(Leaf::compute(ModuleKind::Mlp), 1.0),
     ];
-    let mut root_children = vec![Node::leaf(ModuleKind::Embedding, 1.0)];
+    let mut root_children = vec![Node::leaf(Leaf::compute(ModuleKind::Embedding), 1.0)];
 
     // Decompose the (possibly hybrid) parallelism into its per-strategy
     // degrees; a hybrid contributes the communication modules of both of
     // its component strategies.
-    let comm = include_comm && gpus > 1;
+    let comm = if gpus > 1 { comm } else { CommDetail::Omit };
     let tp = parallelism.tensor_degree(gpus);
     let pp = parallelism.pipeline_degree(gpus);
     let dp = parallelism.data_degree(gpus);
 
-    if comm && tp > 1 {
+    if tp > 1 {
         // After attention out-projection and after the MLP (Section 4).
-        block_children.push(Node::leaf(ModuleKind::AllReduce, 2.0));
+        comm.leaves(ModuleKind::AllReduce, 2.0, &mut block_children);
     }
 
     root_children.push(Node {
@@ -97,19 +180,17 @@ pub fn build(spec: &ModelSpec, parallelism: Parallelism, gpus: usize, include_co
         multiplicity: spec.layers as f64,
         children: block_children,
     });
-    root_children.push(Node::leaf(ModuleKind::LogitsHead, 1.0));
+    root_children.push(Node::leaf(Leaf::compute(ModuleKind::LogitsHead), 1.0));
 
-    if comm {
-        // Vocab-parallel logits collation (TP) and/or terminal replica
-        // collation (DP, Appendix E) — one AllGather node each.
-        let allgathers = usize::from(tp > 1) + usize::from(dp > 1);
-        if allgathers > 0 {
-            root_children.push(Node::leaf(ModuleKind::AllGather, allgathers as f64));
-        }
-        if pp > 1 {
-            // One transfer node per stage boundary.
-            root_children.push(Node::leaf(ModuleKind::P2PTransfer, (pp - 1) as f64));
-        }
+    // Vocab-parallel logits collation (TP) and/or terminal replica
+    // collation (DP, Appendix E) — one AllGather node each.
+    let allgathers = usize::from(tp > 1) + usize::from(dp > 1);
+    if allgathers > 0 {
+        comm.leaves(ModuleKind::AllGather, allgathers as f64, &mut root_children);
+    }
+    if pp > 1 {
+        // One transfer node per stage boundary.
+        comm.leaves(ModuleKind::P2PTransfer, (pp - 1) as f64, &mut root_children);
     }
 
     Node {
@@ -124,62 +205,66 @@ mod tests {
     use super::*;
     use crate::models::by_name;
 
+    fn mult(leaves: &[(Leaf, f64)], leaf: Leaf) -> Option<f64> {
+        leaves.iter().find(|(l, _)| *l == leaf).map(|(_, m)| *m)
+    }
+
     #[test]
-    fn tensor_tree_has_allreduce_inside_blocks() {
+    fn tensor_tree_has_split_allreduce_inside_blocks() {
         let spec = by_name("Vicuna-7B").unwrap();
-        let tree = build(&spec, Parallelism::Tensor, 2, true);
+        let tree = build(&spec, Parallelism::Tensor, 2, CommDetail::SyncAndTransfer);
         let leaves = tree.leaf_multiplicities();
-        let ar = leaves
-            .iter()
-            .find(|(k, _)| *k == ModuleKind::AllReduce)
-            .unwrap();
-        // 2 AllReduces per block × 32 blocks.
-        assert_eq!(ar.1, 64.0);
-        assert!(leaves.iter().any(|(k, _)| *k == ModuleKind::AllGather));
+        // 2 AllReduces per block × 32 blocks, each as sync + transfer.
+        assert_eq!(mult(&leaves, Leaf::sync(ModuleKind::AllReduce)), Some(64.0));
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::AllReduce)), Some(64.0));
+        assert!(leaves.iter().any(|(l, _)| l.kind == ModuleKind::AllGather));
+    }
+
+    #[test]
+    fn transfer_only_drops_sync_leaves() {
+        let spec = by_name("Vicuna-7B").unwrap();
+        let tree = build(&spec, Parallelism::Tensor, 2, CommDetail::TransferOnly);
+        let leaves = tree.leaf_multiplicities();
+        assert_eq!(mult(&leaves, Leaf::sync(ModuleKind::AllReduce)), None);
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::AllReduce)), Some(64.0));
     }
 
     #[test]
     fn irene_tree_has_no_comm_nodes() {
         let spec = by_name("Vicuna-7B").unwrap();
-        let tree = build(&spec, Parallelism::Tensor, 4, false);
+        let tree = build(&spec, Parallelism::Tensor, 4, CommDetail::Omit);
         assert!(!tree
             .leaf_multiplicities()
             .iter()
-            .any(|(k, _)| k.is_comm()));
+            .any(|(l, _)| l.kind.is_comm()));
     }
 
     #[test]
     fn single_gpu_tree_has_no_comm_nodes() {
         let spec = by_name("Vicuna-7B").unwrap();
-        let tree = build(&spec, Parallelism::Tensor, 1, true);
+        let tree = build(&spec, Parallelism::Tensor, 1, CommDetail::SyncAndTransfer);
         assert!(!tree
             .leaf_multiplicities()
             .iter()
-            .any(|(k, _)| k.is_comm()));
+            .any(|(l, _)| l.kind.is_comm()));
     }
 
     #[test]
     fn pipeline_tree_has_boundary_transfers() {
         let spec = by_name("Llama-70B").unwrap();
-        let tree = build(&spec, Parallelism::Pipeline, 4, true);
-        let p2p = tree
-            .leaf_multiplicities()
-            .into_iter()
-            .find(|(k, _)| *k == ModuleKind::P2PTransfer)
-            .unwrap();
-        assert_eq!(p2p.1, 3.0);
+        let tree = build(&spec, Parallelism::Pipeline, 4, CommDetail::SyncAndTransfer);
+        let leaves = tree.leaf_multiplicities();
+        assert_eq!(mult(&leaves, Leaf::sync(ModuleKind::P2PTransfer)), Some(3.0));
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::P2PTransfer)), Some(3.0));
     }
 
     #[test]
     fn data_tree_has_single_terminal_allgather() {
         let spec = by_name("Vicuna-13B").unwrap();
-        let tree = build(&spec, Parallelism::Data, 4, true);
-        let ag = tree
-            .leaf_multiplicities()
-            .into_iter()
-            .find(|(k, _)| *k == ModuleKind::AllGather)
-            .unwrap();
-        assert_eq!(ag.1, 1.0);
+        let tree = build(&spec, Parallelism::Data, 4, CommDetail::SyncAndTransfer);
+        let leaves = tree.leaf_multiplicities();
+        assert_eq!(mult(&leaves, Leaf::sync(ModuleKind::AllGather)), Some(1.0));
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::AllGather)), Some(1.0));
     }
 
     #[test]
@@ -188,35 +273,33 @@ mod tests {
         let spec = by_name("Vicuna-7B").unwrap();
 
         let tp_pp = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
-        let leaves = build(&spec, tp_pp, 4, true).leaf_multiplicities();
-        let get = |kind: ModuleKind| leaves.iter().find(|(k, _)| *k == kind).map(|(_, m)| *m);
-        assert_eq!(get(ModuleKind::AllReduce), Some(64.0)); // 2 × 32 blocks
-        assert_eq!(get(ModuleKind::P2PTransfer), Some(1.0)); // 2 stages → 1 boundary
-        assert_eq!(get(ModuleKind::AllGather), Some(1.0)); // logits collation
+        let leaves = build(&spec, tp_pp, 4, CommDetail::SyncAndTransfer).leaf_multiplicities();
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::AllReduce)), Some(64.0)); // 2 × 32 blocks
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::P2PTransfer)), Some(1.0)); // 2 stages → 1 boundary
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::AllGather)), Some(1.0)); // logits collation
+        assert_eq!(mult(&leaves, Leaf::sync(ModuleKind::AllReduce)), Some(64.0));
 
         let tp_dp = Parallelism::hybrid(Strategy::Tensor, Strategy::Data, 2).unwrap();
-        let leaves = build(&spec, tp_dp, 4, true).leaf_multiplicities();
-        let get = |kind: ModuleKind| leaves.iter().find(|(k, _)| *k == kind).map(|(_, m)| *m);
-        assert_eq!(get(ModuleKind::AllReduce), Some(64.0));
-        assert_eq!(get(ModuleKind::AllGather), Some(2.0)); // logits + terminal
-        assert_eq!(get(ModuleKind::P2PTransfer), None);
+        let leaves = build(&spec, tp_dp, 4, CommDetail::SyncAndTransfer).leaf_multiplicities();
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::AllReduce)), Some(64.0));
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::AllGather)), Some(2.0)); // logits + terminal
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::P2PTransfer)), None);
 
         let pp_dp = Parallelism::hybrid(Strategy::Pipeline, Strategy::Data, 2).unwrap();
-        let leaves = build(&spec, pp_dp, 4, true).leaf_multiplicities();
-        let get = |kind: ModuleKind| leaves.iter().find(|(k, _)| *k == kind).map(|(_, m)| *m);
-        assert_eq!(get(ModuleKind::AllReduce), None);
-        assert_eq!(get(ModuleKind::P2PTransfer), Some(1.0));
-        assert_eq!(get(ModuleKind::AllGather), Some(1.0)); // terminal collation
+        let leaves = build(&spec, pp_dp, 4, CommDetail::SyncAndTransfer).leaf_multiplicities();
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::AllReduce)), None);
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::P2PTransfer)), Some(1.0));
+        assert_eq!(mult(&leaves, Leaf::transfer(ModuleKind::AllGather)), Some(1.0)); // terminal collation
     }
 
     #[test]
     fn norm_multiplicity_two_per_block() {
         let spec = by_name("Qwen-14B").unwrap();
-        let tree = build(&spec, Parallelism::Tensor, 2, true);
+        let tree = build(&spec, Parallelism::Tensor, 2, CommDetail::SyncAndTransfer);
         let norm = tree
             .leaf_multiplicities()
             .into_iter()
-            .find(|(k, _)| *k == ModuleKind::Norm)
+            .find(|(l, _)| l.kind == ModuleKind::Norm)
             .unwrap();
         assert_eq!(norm.1, 2.0 * spec.layers as f64);
     }
@@ -224,7 +307,18 @@ mod tests {
     #[test]
     fn node_counts_reasonable() {
         let spec = by_name("Vicuna-7B").unwrap();
-        let t = build(&spec, Parallelism::Tensor, 2, true);
+        let t = build(&spec, Parallelism::Tensor, 2, CommDetail::SyncAndTransfer);
         assert!(t.count_nodes() >= 7);
+        assert!(
+            t.count_nodes()
+                > build(&spec, Parallelism::Tensor, 2, CommDetail::TransferOnly).count_nodes()
+        );
+    }
+
+    #[test]
+    fn leaf_names_distinguish_parts() {
+        assert_eq!(Leaf::compute(ModuleKind::Mlp).name(), "MLP");
+        assert_eq!(Leaf::sync(ModuleKind::AllReduce).name(), "AllReduce (sync-wait)");
+        assert_eq!(Leaf::transfer(ModuleKind::AllReduce).name(), "AllReduce (transfer)");
     }
 }

@@ -297,6 +297,46 @@ fn hybrid_sweep_produces_per_config_mape_and_parallel_speedup() {
 }
 
 #[test]
+fn all_strategies_lower_to_the_shared_plan_ir() {
+    // Every parallelism — pure and hybrid — lowers to one IR, executed by
+    // one engine, with the comm ops its axes imply; and the cached-plan
+    // path reproduces direct simulation exactly.
+    use piep::plan::{Op, PlanCache};
+
+    let hw = HwSpec::default();
+    let knobs = SimKnobs {
+        sim_decode_steps: 6,
+        ..SimKnobs::default()
+    };
+    let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+    pars.extend(piep::workload::hybrid_parallelisms(4));
+    let cache = PlanCache::new();
+    for par in pars {
+        let cfg = RunConfig::new("Vicuna-7B", par, 4, 8).with_seed(5);
+        let spec = piep::models::by_name(&cfg.model).unwrap();
+        assert!(piep::workload::runnable(&spec, par, cfg.gpus, &hw));
+        let plan = piep::parallelism::lower(&spec, &hw, &knobs, &cfg);
+        let (compute, coll, send, recv) = plan.op_census();
+        assert!(compute > 0, "{par:?} lowers compute ops");
+        assert_eq!(send, recv, "{par:?} P2P edges balanced");
+        assert_eq!(plan.num_edges as usize, send, "{par:?} edge count");
+        let has_ar = plan.ops.iter().any(|op| {
+            matches!(op, Op::Collective { module, transfer_s, .. }
+                if *module == ModuleKind::AllReduce && *transfer_s > 0.0)
+        });
+        assert_eq!(has_ar, par.tensor_degree(4) > 1, "{par:?} AllReduce ⇔ TP axis");
+        assert_eq!(send > 0, par.pipeline_degree(4) > 1, "{par:?} sends ⇔ PP axis");
+        assert!(coll > 0 || send > 0, "{par:?} has communication");
+
+        let direct = piep::simulator::simulate_run(&cfg, &hw, &knobs);
+        let cached = cache.get_or_lower(&cfg, &hw, &knobs);
+        let via_cache = piep::simulator::simulate_run_planned(&cfg, &hw, &knobs, &cached);
+        assert_eq!(direct.true_total_j, via_cache.true_total_j, "{par:?}");
+        assert_eq!(direct.wait_samples, via_cache.wait_samples, "{par:?}");
+    }
+}
+
+#[test]
 fn unknown_model_panics_cleanly() {
     let result = std::panic::catch_unwind(|| {
         let cfg = RunConfig::new("GPT-5", Parallelism::Tensor, 2, 8);

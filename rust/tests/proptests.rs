@@ -138,12 +138,97 @@ fn prop_hybrid_energy_and_comm_invariants() {
             ensure(has(ModuleKind::P2PTransfer) == (par.pipeline_degree(4) > 1), "P2P ⇔ PP axis")?;
             ensure(has(ModuleKind::AllGather), "hybrids collate output")?;
             // Tree leaves cover everything the profiler attributes.
-            let tree = piep::tree::build(&spec, par, cfg.gpus, true);
+            let tree = piep::tree::build(&spec, par, cfg.gpus, piep::tree::CommDetail::SyncAndTransfer);
             let leaves: Vec<ModuleKind> =
-                tree.leaf_multiplicities().into_iter().map(|(kind, _)| kind).collect();
+                tree.leaf_multiplicities().into_iter().map(|(leaf, _)| leaf.kind).collect();
             for m in r.module_energy_j.keys() {
                 ensure(leaves.contains(m), format!("{par:?}: {m:?} missing from tree"))?;
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_conservation_every_strategy() {
+    // The phase-resolved attribution must conserve energy exactly: module
+    // energies (including the new sync-wait/transfer comm splits) plus the
+    // unattributed residual (GPU idle slack + background draw) reconstruct
+    // `true_total_j`, and each comm module's split reconstructs its module
+    // energy — for every pure strategy and every 4-GPU hybrid mesh.
+    let hw = HwSpec::default();
+    let k = knobs();
+    forall(109, 20, gen_cfg, |t| {
+        let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.extend(hybrids4());
+        for par in pars {
+            let mut cfg = cfg_of(t, par);
+            if par.is_hybrid() {
+                cfg.gpus = 4; // hybrids need a 2-D mesh
+            }
+            let spec = piep::models::by_name(&cfg.model).unwrap();
+            if !piep::workload::runnable(&spec, par, cfg.gpus, &hw) {
+                continue;
+            }
+            let r = simulate_run(&cfg, &hw, &k);
+            let covered: f64 = r.module_energy_j.values().sum::<f64>() + r.unattributed_j;
+            let rel = (covered - r.true_total_j).abs() / r.true_total_j;
+            ensure(
+                rel < 1e-9,
+                format!("{par:?}: covered {covered} vs total {} (rel {rel})", r.true_total_j),
+            )?;
+            for (kind, (w, x)) in &r.comm_split_j {
+                let module = r.module_energy_j.get(kind).copied().unwrap_or(0.0);
+                ensure(
+                    (w + x - module).abs() / module.max(1e-12) < 1e-9,
+                    format!("{par:?}: {kind:?} split {w}+{x} vs {module}"),
+                )?;
+                ensure(*w >= 0.0 && *x >= 0.0, format!("{par:?}: {kind:?} split signs"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_serial_parallel_bit_identity() {
+    // The event engine's parallel rank materialization must be
+    // bit-identical to the serial fallback, for every strategy shape —
+    // totals, instruments, attribution, and the raw wait samples.
+    let hw = HwSpec::default();
+    forall(110, 12, gen_cfg, |t| {
+        let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.extend(hybrids4());
+        for par in pars {
+            let mut cfg = cfg_of(t, par);
+            if par.is_hybrid() {
+                cfg.gpus = 4;
+            }
+            let spec = piep::models::by_name(&cfg.model).unwrap();
+            if !piep::workload::runnable(&spec, par, cfg.gpus, &hw) {
+                continue;
+            }
+            let serial = simulate_run(&cfg, &hw, &knobs());
+            let parallel = simulate_run(
+                &cfg,
+                &hw,
+                &SimKnobs {
+                    engine_threads: 4,
+                    ..knobs()
+                },
+            );
+            ensure(serial.true_total_j == parallel.true_total_j, format!("{par:?}: totals"))?;
+            ensure(serial.meter_total_j == parallel.meter_total_j, format!("{par:?}: meter"))?;
+            ensure(serial.wait_samples == parallel.wait_samples, format!("{par:?}: waits"))?;
+            ensure(
+                serial.module_energy_j == parallel.module_energy_j,
+                format!("{par:?}: attribution"),
+            )?;
+            ensure(
+                serial.comm_split_j == parallel.comm_split_j,
+                format!("{par:?}: comm splits"),
+            )?;
+            ensure(serial.gpu_util == parallel.gpu_util, format!("{par:?}: util"))?;
         }
         Ok(())
     });
@@ -203,9 +288,16 @@ fn prop_features_finite_and_padded() {
         ensure(x.len() == FEATURE_DIM, "run feature width")?;
         ensure(x.iter().all(|v| v.is_finite()), "run features finite")?;
         for kind in ModuleKind::ALL {
-            let m = module_features(&r, kind, 32.0, None, FeatureOpts::default());
-            ensure(m.len() == FEATURE_DIM, "module feature width")?;
-            ensure(m.iter().all(|v| v.is_finite()), "module features finite")?;
+            let leaves = if kind.is_comm() {
+                vec![piep::tree::Leaf::sync(kind), piep::tree::Leaf::transfer(kind)]
+            } else {
+                vec![piep::tree::Leaf::compute(kind)]
+            };
+            for leaf in leaves {
+                let m = module_features(&r, leaf, 32.0, None, FeatureOpts::default());
+                ensure(m.len() == FEATURE_DIM, "module feature width")?;
+                ensure(m.iter().all(|v| v.is_finite()), "module features finite")?;
+            }
         }
         Ok(())
     });
@@ -225,9 +317,10 @@ fn prop_tree_leaves_cover_measured_modules() {
                 continue;
             }
             let r = simulate_run(&cfg, &hw, &k);
-            let tree = piep::tree::build(&spec, par, cfg.gpus, true);
+            let tree =
+                piep::tree::build(&spec, par, cfg.gpus, piep::tree::CommDetail::SyncAndTransfer);
             let leaves: Vec<ModuleKind> =
-                tree.leaf_multiplicities().into_iter().map(|(k, _)| k).collect();
+                tree.leaf_multiplicities().into_iter().map(|(leaf, _)| leaf.kind).collect();
             for m in r.module_energy_j.keys() {
                 ensure(
                     leaves.contains(m),
