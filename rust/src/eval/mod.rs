@@ -1,8 +1,10 @@
 //! Evaluation protocols: train/test splits, k-fold CV, leave-one-out
 //! generalization (variant / batch size / family), MAPE scoring, the
-//! Spearman feature-correlation analysis behind Figure 7, and the
-//! parallel scenario sweep engine (`sweep`).
+//! Spearman feature-correlation analysis behind Figure 7, the parallel
+//! scenario sweep engine (`sweep`), and the serving-scenario evaluation
+//! over the trace-driven simulator (`serving`).
 
+pub mod serving;
 pub mod sweep;
 
 use std::collections::{BTreeMap, BTreeSet};

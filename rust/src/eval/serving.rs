@@ -1,0 +1,182 @@
+//! Serving-scenario evaluation: replay synthetic traces through the
+//! serving simulator across the (trace × policy × strategy) grid and
+//! summarize per-request energy.
+//!
+//! A serving scenario fixes an arrival process, a scheduling policy, and a
+//! parallelism deployment; `run_serving` replays the same seeded trace
+//! family through each scenario over the `util::par` pool and reports the
+//! per-request energy distribution (p50/p99), energy per generated token,
+//! batch occupancy, and the sync-wait share of communication energy — the
+//! serving analogue of the sweep engine's per-scenario MAPE table.
+
+use crate::config::{HwSpec, Parallelism, SimKnobs, Strategy};
+use crate::models;
+use crate::serve::trace::{synthesize, ArrivalKind, SynthSpec};
+use crate::serve::{self, Policy, ServeConfig};
+use crate::util::par;
+use crate::workload;
+
+/// One serving scenario: trace family × policy × deployment.
+#[derive(Debug, Clone)]
+pub struct ServeScenario {
+    pub label: String,
+    pub trace_kind: ArrivalKind,
+    pub policy: Policy,
+    pub model: String,
+    pub parallelism: Parallelism,
+    pub gpus: usize,
+}
+
+/// Sweep-wide serving options.
+#[derive(Debug, Clone)]
+pub struct ServingOptions {
+    pub hw: HwSpec,
+    pub knobs: SimKnobs,
+    /// Requests per synthetic trace.
+    pub requests: usize,
+    pub rate_rps: f64,
+    pub seed: u64,
+    /// Worker threads over the scenario axis (0 ⇒ available cores).
+    pub threads: usize,
+}
+
+impl Default for ServingOptions {
+    fn default() -> Self {
+        ServingOptions {
+            hw: HwSpec::default(),
+            knobs: SimKnobs::default(),
+            requests: 16,
+            rate_rps: 2.0,
+            seed: 0xC0FFEE,
+            threads: 0,
+        }
+    }
+}
+
+/// Per-scenario serving summary.
+#[derive(Debug, Clone)]
+pub struct ServingOutcome {
+    pub label: String,
+    pub requests: usize,
+    pub rejected: usize,
+    pub steps: usize,
+    pub j_per_request_p50: f64,
+    pub j_per_request_p99: f64,
+    pub j_per_token: f64,
+    pub occupancy: f64,
+    pub sync_share: f64,
+    pub makespan_s: f64,
+    pub total_j: f64,
+}
+
+/// The default serving grid: every arrival process × both policies ×
+/// every strategy class realizable on the testbed (pure TP/PP/DP plus the
+/// canonical TP×PP mesh), gated by `workload::runnable`.
+pub fn serving_scenarios(hw: &HwSpec) -> Vec<ServeScenario> {
+    let model = "Vicuna-7B";
+    let spec = models::by_name(model).expect("zoo model");
+    let gpus = hw.num_gpus.min(4);
+    let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+    if let Some(h) = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2) {
+        pars.push(h);
+    }
+    let mut out = Vec::new();
+    for par in pars {
+        if !workload::runnable(&spec, par, gpus, hw) {
+            continue;
+        }
+        for kind in ArrivalKind::ALL {
+            for policy in Policy::ALL {
+                out.push(ServeScenario {
+                    label: format!("{}/{}/{}", kind.name(), policy.name(), par.label()),
+                    trace_kind: kind,
+                    policy,
+                    model: model.to_string(),
+                    parallelism: par,
+                    gpus,
+                });
+            }
+        }
+    }
+    out
+}
+
+fn run_one(s: &ServeScenario, opts: &ServingOptions) -> ServingOutcome {
+    let spec = SynthSpec {
+        kind: s.trace_kind,
+        requests: opts.requests,
+        rate_rps: opts.rate_rps,
+        ..SynthSpec::default()
+    };
+    let trace = synthesize(&spec, opts.seed);
+    let cfg = ServeConfig {
+        policy: s.policy,
+        base_seed: opts.seed,
+        ..ServeConfig::new(&s.model, s.parallelism, s.gpus)
+    };
+    let res = serve::serve(&trace, &cfg, &opts.hw, &opts.knobs);
+    ServingOutcome {
+        label: s.label.clone(),
+        requests: res.requests.len(),
+        rejected: res.requests.iter().filter(|r| r.rejected).count(),
+        steps: res.steps.len(),
+        j_per_request_p50: res.energy_percentile_j(50.0),
+        j_per_request_p99: res.energy_percentile_j(99.0),
+        j_per_token: res.energy_per_token_j(),
+        occupancy: res.occupancy,
+        sync_share: res.sync_share,
+        makespan_s: res.makespan_s,
+        total_j: res.total_energy_j,
+    }
+}
+
+/// Replay every scenario (parallel over the pool; deterministic per
+/// scenario — the pool only reorders wall-clock, not results).
+pub fn run_serving(scenarios: &[ServeScenario], opts: &ServingOptions) -> Vec<ServingOutcome> {
+    par::par_map(scenarios, opts.threads, |s| run_one(s, opts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> ServingOptions {
+        ServingOptions {
+            requests: 5,
+            rate_rps: 4.0,
+            ..ServingOptions::default()
+        }
+    }
+
+    #[test]
+    fn scenario_grid_covers_traces_policies_strategies() {
+        let scenarios = serving_scenarios(&HwSpec::default());
+        // 4 strategies × 3 arrival kinds × 2 policies on the 4-GPU testbed.
+        assert_eq!(scenarios.len(), 4 * 3 * 2);
+        for want in ["poisson/fcfs/tensor", "bursty/spf/pipeline", "diurnal/fcfs/tp2xpp"] {
+            assert!(scenarios.iter().any(|s| s.label == want), "{want} missing");
+        }
+    }
+
+    #[test]
+    fn outcomes_are_finite_and_deterministic() {
+        let scenarios: Vec<ServeScenario> = serving_scenarios(&HwSpec::default())
+            .into_iter()
+            .filter(|s| s.label.starts_with("poisson"))
+            .collect();
+        let opts = tiny_opts();
+        let a = run_serving(&scenarios, &opts);
+        let b = run_serving(&scenarios, &ServingOptions { threads: 1, ..opts.clone() });
+        assert_eq!(a.len(), scenarios.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.total_j, y.total_j, "{}: parallel == serial", x.label);
+            assert_eq!(x.j_per_request_p50, y.j_per_request_p50);
+            assert!(x.total_j > 0.0 && x.total_j.is_finite());
+            assert!(x.j_per_request_p99 >= x.j_per_request_p50);
+            assert!(x.j_per_token > 0.0);
+            assert!(x.occupancy > 0.0 && x.occupancy <= 1.0);
+            assert!(x.rejected == 0 && x.requests == opts.requests);
+        }
+    }
+}

@@ -29,6 +29,7 @@ pub mod predict;
 pub mod profiler;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod telemetry;
 pub mod tree;

@@ -5,8 +5,11 @@
 //!   train       fit PIE-P on a family and report CV error
 //!   predict     per-run prediction demo on a config
 //!   sweep       parallel sweep over the full paper + hybrid scenario grid
+//!   serve       trace-driven serving: continuous batching + per-request energy
 //!   reproduce   regenerate paper tables/figures (`--all` or ids)
 //!   figure2..8, table2..9   individual experiments
+//!   crosshw, sensitivity, ablate-ring, parallelism-matrix, serving
+//!               extension studies beyond the paper's evaluation
 //!   runtime     validate AOT artifacts, exercise the prediction hot path
 //!   bench-sim   quick simulator throughput numbers
 //!
@@ -360,6 +363,126 @@ fn cmd_sweep(args: &Args) {
     }
 }
 
+fn cmd_serve(args: &Args) {
+    use piep::profiler::store;
+    use piep::serve::{serve, synthesize, ArrivalKind, Policy, ServeConfig, SynthSpec, Trace};
+    use piep::util::table::{fnum, pct, Table};
+
+    let smoke = args.has("smoke");
+    let model = args.get_or("model", "Vicuna-7B").to_string();
+    let par = Parallelism::parse(args.get_or("parallelism", "tensor")).expect("parallelism");
+    let gpus = args.get_usize("gpus", 4);
+    let policy = Policy::parse(args.get_or("policy", "fcfs")).expect("policy (fcfs|spf)");
+    let seed = args.get_u64("seed", 0x5EB5E);
+    let campaign = campaign_from(args);
+
+    // Trace source: a JSONL file, or a seeded synthetic generator.
+    let trace = if let Some(path) = args.get("trace") {
+        let t = Trace::load_jsonl(path).expect("load trace");
+        eprintln!("[serve] loaded {} requests from {path}", t.len());
+        t
+    } else {
+        let kind = ArrivalKind::parse(args.get_or("synthetic", "poisson")).expect("synthetic (poisson|bursty|diurnal)");
+        let spec = SynthSpec {
+            kind,
+            requests: args.get_usize("requests", if smoke { 8 } else { 32 }),
+            rate_rps: args.get_f64("rate", 2.0),
+            ..SynthSpec::default()
+        };
+        eprintln!("[serve] synthetic {} trace: {} requests at {} rps", kind.name(), spec.requests, spec.rate_rps);
+        synthesize(&spec, seed)
+    };
+
+    let mut cfg = ServeConfig::new(&model, par, gpus);
+    cfg.policy = policy;
+    cfg.base_seed = seed;
+    cfg.max_batch_requests = args.get_usize("max-batch", cfg.max_batch_requests);
+    cfg.max_batch_tokens = args.get_usize("max-batch-tokens", cfg.max_batch_tokens);
+    let t0 = std::time::Instant::now();
+    let res = serve(&trace, &cfg, &campaign.hw, &campaign.knobs);
+    let wall = t0.elapsed();
+
+    let mut per_req = Table::new(
+        "Serving — per-request energy attribution",
+        &["Req", "Prompt", "Out", "Arrive s", "Queue s", "TTFT s", "Latency s", "J", "J/token", "Sync J"],
+    );
+    for r in &res.requests {
+        if r.rejected {
+            per_req.row(vec![
+                format!("{}*", r.id),
+                r.prompt_tokens.to_string(),
+                r.output_tokens.to_string(),
+                fnum(r.arrival_s, 2),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "rejected".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
+        per_req.row(vec![
+            r.id.to_string(),
+            r.prompt_tokens.to_string(),
+            r.output_tokens.to_string(),
+            fnum(r.arrival_s, 2),
+            fnum(r.queue_delay_s(), 2),
+            fnum(r.first_token_s - r.arrival_s, 2),
+            fnum(r.latency_s(), 2),
+            fnum(r.energy_j, 1),
+            fnum(r.energy_per_token_j(), 1),
+            fnum(r.sync_energy_j, 1),
+        ]);
+    }
+    print!("{}", per_req.render());
+
+    let served: Vec<f64> = res.served().map(|r| r.energy_j).collect();
+    let mut summary = Table::new(
+        "Serving — summary",
+        &["Trace", "Policy", "Strategy", "Reqs", "Steps", "J/req p50", "J/req p99", "J/token", "Occup", "Sync%"],
+    );
+    summary.row(vec![
+        args.get("trace").map(|_| "jsonl".to_string()).unwrap_or_else(|| args.get_or("synthetic", "poisson").into()),
+        policy.name().into(),
+        cfg.parallelism.label(),
+        format!("{}/{}", served.len(), res.requests.len()),
+        res.steps.len().to_string(),
+        fnum(res.energy_percentile_j(50.0), 1),
+        fnum(res.energy_percentile_j(99.0), 1),
+        fnum(res.energy_per_token_j(), 2),
+        pct(100.0 * res.occupancy),
+        pct(100.0 * res.sync_share),
+    ]);
+    print!("{}", summary.render());
+    println!(
+        "[serve] {} steps over {:.1}s of traffic in {wall:?}; Σ energy {:.1} J; peak KV {:.2}/{:.2} GiB",
+        res.steps.len(),
+        res.makespan_s,
+        res.total_energy_j,
+        res.peak_kv_bytes / (1u64 << 30) as f64,
+        res.kv_budget_bytes / (1u64 << 30) as f64,
+    );
+    // Conservation check (the serve invariant; cheap enough to always run).
+    let req_j: f64 = res.requests.iter().map(|r| r.energy_j).sum();
+    assert!(
+        (req_j - res.total_energy_j).abs() / res.total_energy_j.max(1e-12) < 1e-9,
+        "per-request attribution must conserve batch energy"
+    );
+
+    let out = args.get_or("out", "reports");
+    for (t, slug) in [(&per_req, "serving_requests"), (&summary, "serving_summary")] {
+        match t.save_csv(out, slug) {
+            Ok(path) => println!("  -> {path}"),
+            Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
+        }
+    }
+    if let Some(path) = args.get("save") {
+        store::save_serve_records(&res.requests, path).expect("save serving records");
+        println!("saved per-request records (piep-serve-v3) -> {path}");
+    }
+}
+
 fn cmd_bench_sim(args: &Args) {
     use piep::config::HwSpec;
     let knobs = SimKnobs {
@@ -405,16 +528,17 @@ fn run_experiments(ctx: &mut ReportCtx, ids: &[String]) {
             "sensitivity" => drop(report::sensitivity(ctx)),
             "ablate-ring" => drop(report::ablate_ring(ctx)),
             "parallelism-matrix" => drop(report::parallelism_matrix(ctx)),
+            "serving" => drop(report::serving(ctx)),
             other => eprintln!("unknown experiment id: {other}"),
         }
     }
 }
 
-const ALL_EXPERIMENTS: [&str; 19] = [
+const ALL_EXPERIMENTS: [&str; 20] = [
     "figure2", "table2", "table3", "table4", "figure3", "figure4", "figure5", "figure6",
     "table5", "table6", "table7", "table8", "figure7", "figure8", "table9",
     // extension studies (not in the paper's evaluation; see DESIGN.md)
-    "crosshw", "sensitivity", "ablate-ring", "parallelism-matrix",
+    "crosshw", "sensitivity", "ablate-ring", "parallelism-matrix", "serving",
 ];
 
 fn main() {
@@ -425,6 +549,7 @@ fn main() {
         "train" => cmd_train(&args),
         "predict" => cmd_predict(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "runtime" => cmd_runtime(&args),
         "bench-sim" => cmd_bench_sim(&args),
         "reproduce" => {
@@ -441,7 +566,7 @@ fn main() {
         }
         id if id.starts_with("figure")
             || id.starts_with("table")
-            || matches!(id, "crosshw" | "sensitivity" | "ablate-ring" | "parallelism-matrix") => {
+            || matches!(id, "crosshw" | "sensitivity" | "ablate-ring" | "parallelism-matrix" | "serving") => {
             let out = args.get_or("out", "reports").to_string();
             let mut ctx = ReportCtx::new(&out, campaign_from(&args));
             run_experiments(&mut ctx, &[id.to_string()]);
@@ -454,12 +579,19 @@ fn main() {
                  \x20 reproduce [--all | ids…]   regenerate paper tables/figures into --out\n\
                  \x20 figure2..figure8           individual figure harnesses\n\
                  \x20 table2..table9             individual table harnesses\n\
+                 \x20 crosshw | sensitivity | ablate-ring | parallelism-matrix | serving\n\
+                 \x20                            extension studies (see DESIGN.md)\n\
                  \x20 profile                    profile one configuration (passes × seeds)\n\
                  \x20 train                      fit PIE-P on a family, report 3-fold CV MAPE\n\
                  \x20 predict                    leave-variant-out prediction demo\n\
                  \x20 sweep                      parallel sweep: paper grid + hybrid meshes,\n\
                  \x20                            per-config MAPE + sync-wait share (--serial,\n\
                  \x20                            --bench [--baseline FILE], --per-config)\n\
+                 \x20 serve                      trace-driven serving: continuous batching +\n\
+                 \x20                            per-request energy (--trace FILE | --synthetic\n\
+                 \x20                            poisson|bursty|diurnal, --policy fcfs|spf,\n\
+                 \x20                            --requests N --rate RPS --max-batch N --smoke\n\
+                 \x20                            --save FILE)\n\
                  \x20 runtime                    validate AOT artifacts, run the native hot path\n\
                  \x20 bench-sim                  simulator throughput check\n\n\
                  FLAGS\n\

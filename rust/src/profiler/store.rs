@@ -231,6 +231,66 @@ pub fn load_dataset(path: &str) -> Result<super::Dataset, String> {
     Ok(super::Dataset { runs, sync_db })
 }
 
+/// Serialize one served-request record (serving store, schema v3).
+pub fn serve_record_to_json(r: &crate::serve::RequestRecord) -> Json {
+    obj(vec![
+        ("id", num(r.id as f64)),
+        ("prompt_tokens", num(r.prompt_tokens as f64)),
+        ("output_tokens", num(r.output_tokens as f64)),
+        ("arrival_s", num(r.arrival_s)),
+        ("admit_s", num(r.admit_s)),
+        ("first_token_s", num(r.first_token_s)),
+        ("finish_s", num(r.finish_s)),
+        ("energy_j", num(r.energy_j)),
+        ("sync_energy_j", num(r.sync_energy_j)),
+        ("decode_steps", num(r.decode_steps as f64)),
+        ("rejected", Json::Bool(r.rejected)),
+    ])
+}
+
+/// Deserialize one served-request record.
+pub fn serve_record_from_json(j: &Json) -> Result<crate::serve::RequestRecord, String> {
+    Ok(crate::serve::RequestRecord {
+        id: getf(j, "id")? as u32,
+        prompt_tokens: getf(j, "prompt_tokens")? as usize,
+        output_tokens: getf(j, "output_tokens")? as usize,
+        arrival_s: getf(j, "arrival_s")?,
+        admit_s: getf(j, "admit_s")?,
+        first_token_s: getf(j, "first_token_s")?,
+        finish_s: getf(j, "finish_s")?,
+        energy_j: getf(j, "energy_j")?,
+        sync_energy_j: getf(j, "sync_energy_j")?,
+        decode_steps: getf(j, "decode_steps")? as usize,
+        rejected: matches!(j.get("rejected"), Some(Json::Bool(true))),
+    })
+}
+
+/// Save per-request serving records (the serving layer's dataset: v3 of
+/// the store lineage — v1 runs, v2 phase-resolved splits, v3 per-request
+/// serving attribution).
+pub fn save_serve_records(records: &[crate::serve::RequestRecord], path: &str) -> std::io::Result<()> {
+    let j = obj(vec![
+        ("format", s("piep-serve-v3")),
+        ("requests", Json::Arr(records.iter().map(serve_record_to_json).collect())),
+    ]);
+    std::fs::write(path, j.render())
+}
+
+/// Load records saved by `save_serve_records`.
+pub fn load_serve_records(path: &str) -> Result<Vec<crate::serve::RequestRecord>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let j = Json::parse(&text)?;
+    if j.get("format").and_then(Json::as_str) != Some("piep-serve-v3") {
+        return Err("not a piep serving file (expected piep-serve-v3)".into());
+    }
+    j.get("requests")
+        .and_then(Json::as_arr)
+        .ok_or("requests")?
+        .iter()
+        .map(serve_record_from_json)
+        .collect()
+}
+
 fn ridge_to_json(r: &Ridge) -> Json {
     obj(vec![
         ("w", vecf(&r.w)),
@@ -394,6 +454,28 @@ mod tests {
         std::fs::write(path, "{\"format\":\"nope\"}").unwrap();
         assert!(load_dataset(path).is_err());
         assert!(load_model(path).is_err());
+        assert!(load_serve_records(path).is_err());
+    }
+
+    #[test]
+    fn serve_records_roundtrip_exactly() {
+        use crate::serve::{serve, synthesize, ServeConfig, SynthSpec};
+        let trace = synthesize(
+            &SynthSpec {
+                requests: 4,
+                prompt_range: (8, 32),
+                output_range: (2, 4),
+                ..SynthSpec::default()
+            },
+            5,
+        );
+        let cfg = ServeConfig::new("Vicuna-7B", Parallelism::Tensor, 2);
+        let res = serve(&trace, &cfg, &HwSpec::default(), &SimKnobs::default());
+        let path = "target/test-store-serve.json";
+        save_serve_records(&res.requests, path).unwrap();
+        let loaded = load_serve_records(path).unwrap();
+        // Schema v3 roundtrips the per-request records bit-for-bit.
+        assert_eq!(res.requests, loaded);
     }
 
     #[test]

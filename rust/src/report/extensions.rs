@@ -198,6 +198,49 @@ pub fn parallelism_matrix(ctx: &mut ReportCtx) -> Table {
     t
 }
 
+/// Serving table (DESIGN.md §10): policy × strategy × trace family →
+/// per-request energy (p50/p99), energy per generated token, continuous-
+/// batching occupancy, and the sync-wait share of communication energy —
+/// the trace-driven serving analogue of the sweep summary.
+pub fn serving(ctx: &mut ReportCtx) -> Table {
+    use crate::eval::serving::{run_serving, serving_scenarios, ServingOptions};
+
+    let scenarios = serving_scenarios(&ctx.campaign.hw);
+    let opts = ServingOptions {
+        hw: ctx.campaign.hw.clone(),
+        knobs: ctx.campaign.knobs.clone(),
+        requests: (4 * ctx.campaign.passes).max(8),
+        seed: ctx.campaign.base_seed,
+        threads: ctx.campaign.threads,
+        ..ServingOptions::default()
+    };
+    eprintln!(
+        "[serve] {} scenarios × {} requests (trace × policy × strategy)",
+        scenarios.len(),
+        opts.requests
+    );
+    let outcomes = run_serving(&scenarios, &opts);
+    let mut t = Table::new(
+        "Serving — per-request energy by trace × policy × strategy",
+        &["Scenario", "Reqs", "Steps", "J/req p50", "J/req p99", "J/token", "Occup", "Sync%", "Wall s"],
+    );
+    for o in &outcomes {
+        t.row(vec![
+            o.label.clone(),
+            format!("{}{}", o.requests, if o.rejected > 0 { "*" } else { "" }),
+            o.steps.to_string(),
+            fnum(o.j_per_request_p50, 1),
+            fnum(o.j_per_request_p99, 1),
+            fnum(o.j_per_token, 2),
+            pct(100.0 * o.occupancy),
+            pct(100.0 * o.sync_share),
+            fnum(o.makespan_s, 1),
+        ]);
+    }
+    ctx.emit(&t, "ext_serving");
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,6 +278,22 @@ mod tests {
         assert!(t.rows.len() >= 5);
         for strat in ["tensor", "pipeline", "data"] {
             assert!(t.rows.iter().any(|r| r[0] == strat), "{strat}");
+        }
+    }
+
+    #[test]
+    fn serving_table_covers_the_scenario_grid() {
+        let mut ctx = quick_ctx("target/test-reports");
+        let t = serving(&mut ctx);
+        // 4 strategies × 3 trace kinds × 2 policies on the default testbed.
+        assert_eq!(t.rows.len(), 24);
+        for label in ["poisson/fcfs/tensor", "diurnal/spf/tp2xpp"] {
+            assert!(t.rows.iter().any(|r| r[0] == label), "{label}");
+        }
+        for row in &t.rows {
+            let p50: f64 = row[3].parse().unwrap();
+            let p99: f64 = row[4].parse().unwrap();
+            assert!(p50 > 0.0 && p99 >= p50, "{}: p50 {p50} p99 {p99}", row[0]);
         }
     }
 

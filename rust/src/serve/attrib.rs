@@ -1,0 +1,126 @@
+//! Per-request energy attribution.
+//!
+//! Every serving step is simulated as one engine execution whose
+//! `RunRecord` carries the step's exact wall energy (`true_total_j`) and
+//! its phase-resolved sync/transfer split. The attribution rule splits
+//! each step's energy across the requests resident in that step
+//! proportional to their *token work*:
+//!
+//! * prefill step — each admitted request weighs its prompt length (the
+//!   tokens it contributes to the batched prefill);
+//! * decode step — each resident request weighs its current KV context
+//!   (prompt + tokens generated so far, the KV rows its attention touches)
+//!   plus the one token it generates.
+//!
+//! The split is a plain proportional division, so the **conservation
+//! invariant** holds by construction: the per-request energies of a step
+//! sum to the step's wall energy to floating-point rounding, and over a
+//! whole trace Σ per-request J == Σ per-step J within 1e-9 relative
+//! (property-tested across every strategy, hybrids included, and both
+//! scheduling policies).
+
+/// Everything recorded about one served request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: u32,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    /// Trace arrival time, s.
+    pub arrival_s: f64,
+    /// Admission into the resident batch, s.
+    pub admit_s: f64,
+    /// End of the prefill step that produced the first output token, s.
+    pub first_token_s: f64,
+    /// Completion (or rejection) time, s.
+    pub finish_s: f64,
+    /// Attributed wall energy, J.
+    pub energy_j: f64,
+    /// Attributed share of synchronization-wait energy, J.
+    pub sync_energy_j: f64,
+    /// Decode iterations the request participated in.
+    pub decode_steps: usize,
+    /// True when the request could never fit the serving budgets and was
+    /// dropped unserved (zero energy).
+    pub rejected: bool,
+}
+
+impl RequestRecord {
+    /// Attributed energy per generated token, J.
+    pub fn energy_per_token_j(&self) -> f64 {
+        self.energy_j / self.output_tokens.max(1) as f64
+    }
+
+    /// Queueing delay before admission, s.
+    pub fn queue_delay_s(&self) -> f64 {
+        self.admit_s - self.arrival_s
+    }
+
+    /// End-to-end latency, s.
+    pub fn latency_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+}
+
+/// Split `energy_j` across participants proportional to `weights`.
+/// Degenerate all-zero weights fall back to an equal split so a step's
+/// energy is never dropped.
+pub fn split_energy(energy_j: f64, weights: &[f64]) -> Vec<f64> {
+    debug_assert!(!weights.is_empty(), "attribution over an empty step");
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        let n = weights.len().max(1) as f64;
+        return weights.iter().map(|_| energy_j / n).collect();
+    }
+    weights.iter().map(|w| energy_j * (w / total)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_is_proportional_and_conserves() {
+        let parts = split_energy(100.0, &[1.0, 3.0]);
+        assert_eq!(parts.len(), 2);
+        assert!((parts[0] - 25.0).abs() < 1e-12);
+        assert!((parts[1] - 75.0).abs() < 1e-12);
+        let total: f64 = parts.iter().sum();
+        assert!((total - 100.0).abs() / 100.0 < 1e-12);
+    }
+
+    #[test]
+    fn split_conserves_under_many_irrational_weights() {
+        let weights: Vec<f64> = (1..200).map(|i| (i as f64).sqrt() * 0.377).collect();
+        let e = 12345.6789;
+        let total: f64 = split_energy(e, &weights).iter().sum();
+        assert!((total - e).abs() / e < 1e-12, "total {total}");
+    }
+
+    #[test]
+    fn zero_weights_fall_back_to_equal_split() {
+        let parts = split_energy(9.0, &[0.0, 0.0, 0.0]);
+        for p in &parts {
+            assert!((p - 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn record_derived_metrics() {
+        let r = RequestRecord {
+            id: 1,
+            prompt_tokens: 64,
+            output_tokens: 8,
+            arrival_s: 1.0,
+            admit_s: 1.5,
+            first_token_s: 2.0,
+            finish_s: 4.0,
+            energy_j: 80.0,
+            sync_energy_j: 8.0,
+            decode_steps: 7,
+            rejected: false,
+        };
+        assert!((r.energy_per_token_j() - 10.0).abs() < 1e-12);
+        assert!((r.queue_delay_s() - 0.5).abs() < 1e-12);
+        assert!((r.latency_s() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,296 @@
+//! Iteration-level continuous-batching scheduler.
+//!
+//! Requests are admitted only at decode-step boundaries (the vLLM-style
+//! iteration-level scheduling the serving literature assumes): between
+//! steps the batcher pulls queued requests into the resident batch, and
+//! each admission reserves the request's full KV footprint (prompt +
+//! output tokens) for its lifetime — conservative admission, so a request
+//! never has to be preempted for KV space mid-decode. Three budgets gate
+//! admission: the resident-sequence cap, the reserved-token cap, and the
+//! mesh-wide KV-cache VRAM budget derived from `config::HwSpec` and the
+//! shared weight-memory model (`workload::weights_per_gpu_bytes`).
+//!
+//! Two policies: strict FCFS (head-of-line blocks — arrival order is
+//! served exactly) and shortest-prompt-first (pending requests reordered
+//! by prompt length; misfits are skipped, trading fairness for occupancy).
+
+use crate::config::{HwSpec, Parallelism};
+use crate::models::ModelSpec;
+use crate::workload;
+
+use super::trace::Request;
+
+/// Admission-ordering policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// First-come-first-served; the queue head blocks admission.
+    Fcfs,
+    /// Shortest prompt first; misfitting requests are skipped over.
+    ShortestPromptFirst,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 2] = [Policy::Fcfs, Policy::ShortestPromptFirst];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fcfs => "fcfs",
+            Policy::ShortestPromptFirst => "spf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fcfs" => Some(Policy::Fcfs),
+            "spf" | "shortest-prompt-first" => Some(Policy::ShortestPromptFirst),
+            _ => None,
+        }
+    }
+}
+
+// The KV-per-token size is the same formula the simulator's memory model
+// uses — one shared definition in `workload`.
+pub use crate::workload::kv_bytes_per_token;
+
+/// Mesh-wide KV-cache VRAM budget: per-GPU headroom left over the resident
+/// weights (with the same 5% runtime-state margin `workload::runnable`
+/// applies) summed over the mesh. Zero when the model itself does not fit.
+pub fn kv_budget_bytes(spec: &ModelSpec, parallelism: Parallelism, gpus: usize, hw: &HwSpec) -> f64 {
+    let weights = workload::weights_per_gpu_bytes(spec, parallelism, gpus);
+    (hw.vram_bytes - 1.05 * weights).max(0.0) * gpus as f64
+}
+
+/// Batcher limits.
+#[derive(Debug, Clone)]
+pub struct BatcherCfg {
+    pub policy: Policy,
+    /// Max resident sequences per iteration batch.
+    pub max_batch_requests: usize,
+    /// Max reserved tokens (prompt + output) across resident sequences.
+    pub max_batch_tokens: usize,
+    /// Mesh-wide KV-cache byte budget (`kv_budget_bytes`).
+    pub kv_budget_bytes: f64,
+}
+
+/// Continuous batcher state: the pending queue plus the resident batch's
+/// reservation counters.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherCfg,
+    kv_per_token: f64,
+    /// Arrived, not yet admitted (FCFS: arrival order; SPF: resorted on
+    /// every admission pass).
+    pending: Vec<Request>,
+    resident_requests: usize,
+    resident_tokens: usize,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherCfg, kv_per_token: f64) -> Batcher {
+        assert!(cfg.max_batch_requests > 0 && cfg.max_batch_tokens > 0, "degenerate batcher limits");
+        Batcher {
+            cfg,
+            kv_per_token,
+            pending: Vec::new(),
+            resident_requests: 0,
+            resident_tokens: 0,
+        }
+    }
+
+    /// Queue an arrived request (callers enqueue in arrival order).
+    pub fn enqueue(&mut self, r: Request) {
+        self.pending.push(r);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn resident_requests(&self) -> usize {
+        self.resident_requests
+    }
+
+    /// Reserved tokens across the resident batch.
+    pub fn resident_tokens(&self) -> usize {
+        self.resident_tokens
+    }
+
+    /// Reserved KV bytes across the resident batch.
+    pub fn resident_kv_bytes(&self) -> f64 {
+        self.resident_tokens as f64 * self.kv_per_token
+    }
+
+    fn fits(&self, r: &Request) -> bool {
+        let tokens = self.resident_tokens + r.reserved_tokens();
+        self.resident_requests < self.cfg.max_batch_requests
+            && tokens <= self.cfg.max_batch_tokens
+            && tokens as f64 * self.kv_per_token <= self.cfg.kv_budget_bytes
+    }
+
+    /// Admit queued requests under the policy and budgets; called at every
+    /// decode-step boundary. Returns the newly admitted requests (their
+    /// reservations are taken immediately).
+    pub fn admit(&mut self) -> Vec<Request> {
+        if self.cfg.policy == Policy::ShortestPromptFirst {
+            self.pending.sort_by(|a, b| {
+                a.prompt_tokens
+                    .cmp(&b.prompt_tokens)
+                    .then(a.arrival_s.partial_cmp(&b.arrival_s).expect("finite arrivals"))
+                    .then(a.id.cmp(&b.id))
+            });
+        }
+        let mut admitted = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.fits(&self.pending[i]) {
+                let r = self.pending.remove(i);
+                self.resident_requests += 1;
+                self.resident_tokens += r.reserved_tokens();
+                admitted.push(r);
+            } else if self.cfg.policy == Policy::Fcfs {
+                break; // strict FCFS: the head blocks
+            } else {
+                i += 1; // SPF: skip misfits
+            }
+        }
+        admitted
+    }
+
+    /// Release a finished request's reservation.
+    pub fn release(&mut self, r: &Request) {
+        debug_assert!(self.resident_requests > 0 && self.resident_tokens >= r.reserved_tokens());
+        self.resident_requests -= 1;
+        self.resident_tokens -= r.reserved_tokens();
+    }
+
+    /// Drop the policy-first pending request (driver fallback when nothing
+    /// is resident and nothing can ever be admitted). Returns it.
+    pub fn reject_head(&mut self) -> Option<Request> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        Some(self.pending.remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    fn req(id: u32, arrival: f64, prompt: usize, output: usize) -> Request {
+        Request {
+            id,
+            arrival_s: arrival,
+            prompt_tokens: prompt,
+            output_tokens: output,
+        }
+    }
+
+    fn batcher(policy: Policy, max_requests: usize, max_tokens: usize) -> Batcher {
+        Batcher::new(
+            BatcherCfg {
+                policy,
+                max_batch_requests: max_requests,
+                max_batch_tokens: max_tokens,
+                kv_budget_bytes: f64::INFINITY,
+            },
+            1.0,
+        )
+    }
+
+    #[test]
+    fn fcfs_serves_arrival_order() {
+        let mut b = batcher(Policy::Fcfs, 8, 100);
+        b.enqueue(req(0, 0.0, 50, 10)); // reserves 60
+        b.enqueue(req(1, 0.1, 20, 10)); // reserves 30
+        b.enqueue(req(2, 0.2, 20, 10)); // would overflow the 100-token cap
+        let a = b.admit();
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.pending(), 1);
+        // Space released -> the blocked head admits at the next boundary.
+        b.release(&a[0]);
+        let a2 = b.admit();
+        assert_eq!(a2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn fcfs_head_blocks_until_rejected() {
+        let mut b = batcher(Policy::Fcfs, 8, 100);
+        b.enqueue(req(0, 0.0, 120, 5)); // reserves 125: can never fit
+        b.enqueue(req(1, 0.1, 2, 2)); // fits, but sits behind the head
+        assert!(b.admit().is_empty(), "strict FCFS: the oversized head blocks");
+        let dropped = b.reject_head().unwrap();
+        assert_eq!(dropped.id, 0);
+        assert_eq!(b.admit().iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn spf_reorders_by_prompt_and_skips_misfits() {
+        let mut b = batcher(Policy::ShortestPromptFirst, 8, 100);
+        b.enqueue(req(0, 0.0, 80, 10)); // 90 tokens
+        b.enqueue(req(1, 0.1, 10, 5)); // 15 tokens
+        b.enqueue(req(2, 0.2, 30, 5)); // 35 tokens
+        let a = b.admit();
+        // Shortest first: 1 (15) then 2 (35); 0 no longer fits (90 > 50 left).
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(b.resident_tokens(), 50);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn request_cap_limits_admission() {
+        let mut b = batcher(Policy::Fcfs, 2, 1_000_000);
+        for i in 0..5 {
+            b.enqueue(req(i, i as f64, 8, 4));
+        }
+        assert_eq!(b.admit().len(), 2);
+        assert_eq!(b.resident_requests(), 2);
+        assert_eq!(b.pending(), 3);
+    }
+
+    #[test]
+    fn kv_budget_gates_admission() {
+        let mut b = Batcher::new(
+            BatcherCfg {
+                policy: Policy::Fcfs,
+                max_batch_requests: 8,
+                max_batch_tokens: 1_000_000,
+                kv_budget_bytes: 100.0,
+            },
+            2.0, // 2 bytes per token -> 50-token budget
+        );
+        b.enqueue(req(0, 0.0, 30, 10)); // 40 tokens = 80 bytes
+        b.enqueue(req(1, 0.1, 10, 10)); // would exceed 100 bytes
+        assert_eq!(b.admit().len(), 1);
+        assert!(b.resident_kv_bytes() <= 100.0);
+        b.release(&req(0, 0.0, 30, 10));
+        assert_eq!(b.admit().len(), 1);
+    }
+
+    #[test]
+    fn kv_model_matches_testbed_scale() {
+        let spec = models::by_name("Vicuna-7B").unwrap();
+        let hw = crate::config::HwSpec::default();
+        // fp16 7B: 2 * 32 kv heads * 128 head dim * 2 B * 32 layers = 1 MiB/token.
+        let per_tok = kv_bytes_per_token(&spec);
+        assert_eq!(per_tok, (2 * 32 * 128 * 2 * 32) as f64);
+        // TP-4 leaves most of the 4x48 GB mesh to KV.
+        let budget = kv_budget_bytes(&spec, Parallelism::Tensor, 4, &hw);
+        assert!(budget > 100.0e9, "budget {budget}");
+        // DP replicates weights: less KV headroom than TP.
+        assert!(kv_budget_bytes(&spec, Parallelism::Data, 4, &hw) < budget);
+        // A model that does not fit has zero budget.
+        let llama = models::by_name("Llama-70B").unwrap();
+        assert_eq!(kv_budget_bytes(&llama, Parallelism::Data, 2, &hw), 0.0);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("shortest-prompt-first"), Some(Policy::ShortestPromptFirst));
+        assert_eq!(Policy::parse("lifo"), None);
+    }
+}

@@ -1,0 +1,298 @@
+//! Step lowering: scheduled serving steps → Plan IR.
+//!
+//! The batcher emits a sequence of heterogeneous *steps* — a batched
+//! prefill over newly admitted prompts, or one decode iteration for the
+//! resident batch at its current KV context. Each step shape lowers
+//! through the **existing** parallelism lowerers (`parallelism::lower`)
+//! unchanged: a step-shaped `RunConfig` (`seq_out = 1`, one simulated
+//! decode step) produces a full mini-plan whose step-0 ops are exactly the
+//! prefill pass over `tokens` prompt tokens and whose step-1 ops are
+//! exactly one decode iteration at KV context `tokens` — the sub-plan the
+//! step needs is sliced out by the op `step` tag. Sends and receives never
+//! cross a step tag in any lowerer (pipeline boundary edges live inside
+//! one pass), so sliced sub-plans keep every edge matched; edge ids are
+//! left untouched (unconsumed slots are simply never received).
+//!
+//! Both step kinds of one (batch, tokens) shape share a single lowering
+//! via the run-level `plan::PlanCache`; the sliced sub-plans are cached
+//! again per shape, so a long trace replays thousands of steps from a
+//! handful of lowered plans. Contexts are bucketed by the caller
+//! (`ServeConfig::ctx_bucket`) to keep that handful small. The engine's
+//! sync/transfer isolation then applies to every serving step unchanged.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use crate::plan::{Plan, PlanCache};
+
+/// Phase of a scheduled step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StepKind {
+    /// Batched prompt prefill for newly admitted requests.
+    Prefill,
+    /// One decode iteration for the resident batch.
+    Decode,
+}
+
+impl StepKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepKind::Prefill => "prefill",
+            StepKind::Decode => "decode",
+        }
+    }
+}
+
+/// Shape of one serving step: everything lowering depends on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct StepShape {
+    pub kind: StepKind,
+    /// Sequences in the iteration batch.
+    pub batch: usize,
+    /// Prompt length (prefill) or KV context (decode), bucketed tokens.
+    pub tokens: usize,
+}
+
+/// Round a token count up to the bucket grid (minimum one bucket).
+pub fn bucket_tokens(tokens: usize, bucket: usize) -> usize {
+    let b = bucket.max(1);
+    tokens.div_ceil(b) * b
+}
+
+/// Slice the ops of a lowered mini-plan down to one step kind.
+fn slice(plan: &Plan, kind: StepKind) -> Plan {
+    let ops = plan
+        .ops
+        .iter()
+        .filter(|op| match kind {
+            StepKind::Prefill => op.step() == 0,
+            StepKind::Decode => op.step() > 0,
+        })
+        .cloned()
+        .collect();
+    Plan {
+        num_ranks: plan.num_ranks,
+        ops,
+        // Edge ids are global to the mini-plan; keeping the count valid is
+        // all the engine needs (unreferenced edges are never received).
+        num_edges: plan.num_edges,
+        draws_sync_jitter: plan.draws_sync_jitter,
+        sim_steps: 1,
+        comm_bytes_per_step: plan.comm_bytes_per_step,
+    }
+}
+
+/// Shape-keyed step-plan cache over the shared run-level `PlanCache`.
+#[derive(Debug)]
+pub struct StepLowerer {
+    model: String,
+    parallelism: Parallelism,
+    gpus: usize,
+    hw: HwSpec,
+    /// Step knobs: exactly one simulated decode step.
+    knobs: SimKnobs,
+    runs: PlanCache,
+    steps: Mutex<HashMap<StepShape, Arc<Plan>>>,
+}
+
+impl StepLowerer {
+    pub fn new(model: &str, parallelism: Parallelism, gpus: usize, hw: HwSpec, knobs: &SimKnobs) -> StepLowerer {
+        StepLowerer {
+            model: model.to_string(),
+            parallelism,
+            gpus,
+            hw,
+            knobs: SimKnobs {
+                sim_decode_steps: 1,
+                ..knobs.clone()
+            },
+            runs: PlanCache::new(),
+            steps: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The step knobs every step simulation must execute under.
+    pub fn knobs(&self) -> &SimKnobs {
+        &self.knobs
+    }
+
+    /// Step-shaped run configuration: `seq_in` carries the shape's token
+    /// count (prompt length or KV context) and `seq_out = 1` pins the
+    /// mini-plan to a single decode iteration at exactly that context.
+    pub fn step_config(&self, shape: &StepShape, seed: u64) -> RunConfig {
+        RunConfig {
+            model: self.model.clone(),
+            parallelism: self.parallelism,
+            gpus: self.gpus,
+            batch: shape.batch,
+            seq_in: shape.tokens,
+            seq_out: 1,
+            seed,
+        }
+    }
+
+    /// The sliced sub-plan for a step shape (lowering on first use; both
+    /// kinds of one (batch, tokens) shape share a single lowering).
+    pub fn step_plan(&self, shape: &StepShape) -> Arc<Plan> {
+        if let Some(p) = self.steps.lock().unwrap().get(shape) {
+            return Arc::clone(p);
+        }
+        let cfg = self.step_config(shape, 0);
+        let full = self.runs.get_or_lower(&cfg, &self.hw, &self.knobs);
+        let sub = Arc::new(slice(&full, shape.kind));
+        self.steps.lock().unwrap().entry(shape.clone()).or_insert(sub).clone()
+    }
+
+    /// (lowered mini-plans, run-cache hits, sliced step plans).
+    pub fn stats(&self) -> (usize, usize, usize) {
+        let (plans, hits) = self.runs.stats();
+        (plans, hits, self.steps.lock().unwrap().len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Strategy;
+    use crate::plan::Op;
+
+    fn lowerer(par: Parallelism, gpus: usize) -> StepLowerer {
+        StepLowerer::new("Vicuna-7B", par, gpus, HwSpec::default(), &SimKnobs::default())
+    }
+
+    fn shapes() -> [StepShape; 2] {
+        [
+            StepShape {
+                kind: StepKind::Prefill,
+                batch: 4,
+                tokens: 128,
+            },
+            StepShape {
+                kind: StepKind::Decode,
+                batch: 4,
+                tokens: 128,
+            },
+        ]
+    }
+
+    fn all_pars() -> Vec<Parallelism> {
+        vec![
+            Parallelism::Tensor,
+            Parallelism::Pipeline,
+            Parallelism::Data,
+            Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap(),
+            Parallelism::hybrid(Strategy::Tensor, Strategy::Data, 2).unwrap(),
+            Parallelism::hybrid(Strategy::Pipeline, Strategy::Data, 2).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn bucketing_rounds_up_on_the_grid() {
+        assert_eq!(bucket_tokens(1, 64), 64);
+        assert_eq!(bucket_tokens(64, 64), 64);
+        assert_eq!(bucket_tokens(65, 64), 128);
+        assert_eq!(bucket_tokens(7, 0), 7); // degenerate bucket -> identity
+    }
+
+    #[test]
+    fn sliced_subplans_partition_the_mini_plan() {
+        for par in all_pars() {
+            let lw = lowerer(par, 4);
+            let [pre, dec] = shapes();
+            let full = {
+                let cfg = lw.step_config(&pre, 0);
+                crate::parallelism::lower(&crate::models::by_name("Vicuna-7B").unwrap(), &lw.hw, &lw.knobs, &cfg)
+            };
+            let p = lw.step_plan(&pre);
+            let d = lw.step_plan(&dec);
+            assert_eq!(p.ops.len() + d.ops.len(), full.ops.len(), "{par:?} partition");
+            assert!(p.ops.iter().all(|op| op.step() == 0), "{par:?} prefill tags");
+            assert!(d.ops.iter().all(|op| op.step() > 0), "{par:?} decode tags");
+            assert!(!p.ops.is_empty() && !d.ops.is_empty(), "{par:?} non-empty");
+        }
+    }
+
+    #[test]
+    fn sliced_subplans_keep_edges_matched() {
+        for par in all_pars() {
+            let lw = lowerer(par, 4);
+            for shape in shapes() {
+                let plan = lw.step_plan(&shape);
+                let mut sent = vec![false; plan.num_edges as usize];
+                for op in &plan.ops {
+                    match op {
+                        Op::Send { edge, .. } => sent[*edge as usize] = true,
+                        Op::Recv { edge, .. } => {
+                            assert!(sent[*edge as usize], "{par:?} {shape:?}: recv of unsliced edge {edge}");
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_plans_execute_through_the_engine() {
+        use crate::simulator::simulate_run_planned;
+        for par in all_pars() {
+            let lw = lowerer(par, 4);
+            for shape in shapes() {
+                let plan = lw.step_plan(&shape);
+                let cfg = lw.step_config(&shape, 9);
+                let r = simulate_run_planned(&cfg, &lw.hw, lw.knobs(), &plan);
+                assert!(r.true_total_j > 0.0 && r.wall_s > 0.0, "{par:?} {shape:?}");
+                match shape.kind {
+                    // A prefill step is all prefill: no decode tail.
+                    StepKind::Prefill => assert_eq!(r.decode_s, 0.0, "{par:?}"),
+                    // A decode step has no prefill prologue.
+                    StepKind::Decode => assert_eq!(r.prefill_s, 0.0, "{par:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn both_kinds_share_one_lowering() {
+        let lw = lowerer(Parallelism::Tensor, 4);
+        let [pre, dec] = shapes();
+        let _ = lw.step_plan(&pre);
+        let _ = lw.step_plan(&dec);
+        let _ = lw.step_plan(&pre);
+        let (plans, hits, steps) = lw.stats();
+        assert_eq!(plans, 1, "one mini-plan lowering serves both kinds");
+        assert_eq!(hits, 1, "the second kind hits the run cache");
+        assert_eq!(steps, 2);
+    }
+
+    #[test]
+    fn decode_context_is_exact() {
+        // seq_out = 1 makes the lowered decode iteration's representative
+        // KV context exactly seq_in: frac = 0.5, (0.5 * 1) as usize = 0.
+        let lw = lowerer(Parallelism::Tensor, 2);
+        let a = lw.step_plan(&StepShape {
+            kind: StepKind::Decode,
+            batch: 8,
+            tokens: 256,
+        });
+        let b = lw.step_plan(&StepShape {
+            kind: StepKind::Decode,
+            batch: 8,
+            tokens: 512,
+        });
+        // Longer context -> strictly more attention time in the plan.
+        let attn_time = |p: &Plan| -> f64 {
+            let mut t = 0.0;
+            for op in &p.ops {
+                if let Op::Compute { module, nominal_s, .. } = op {
+                    if *module == crate::simulator::timeline::ModuleKind::SelfAttention {
+                        t += *nominal_s;
+                    }
+                }
+            }
+            t
+        };
+        assert!(attn_time(&b) > attn_time(&a));
+    }
+}

@@ -1,0 +1,474 @@
+//! Trace-driven serving simulator: the repo's fourth pillar
+//! (workload → plan → engine → **serve**), DESIGN.md §10.
+//!
+//! `serve` replays a request trace (`trace`) through an iteration-level
+//! continuous batcher (`batcher`): at every decode-step boundary queued
+//! requests are admitted under the resident-sequence, reserved-token, and
+//! KV-cache VRAM budgets, newly admitted prompts run one batched prefill
+//! step, and the resident batch then decodes one token per iteration.
+//! Every scheduled step lowers through the existing parallelism lowerers
+//! into the shared Plan IR (`lower`) and executes on the per-rank
+//! discrete-event engine, so the sync/transfer energy isolation, the
+//! stochastic skew substrate, and the instrument models all apply to
+//! serving steps unchanged. Each step's wall energy is attributed across
+//! its resident requests proportional to token work (`attrib`), with exact
+//! conservation: Σ per-request J == Σ per-step J (rel 1e-9).
+//!
+//! Everything is deterministic under `ServeConfig::base_seed`: the same
+//! trace and seed reproduce bit-identical per-request records.
+
+pub mod attrib;
+pub mod batcher;
+pub mod lower;
+pub mod trace;
+
+pub use attrib::{split_energy, RequestRecord};
+pub use batcher::{kv_budget_bytes, kv_bytes_per_token, Batcher, BatcherCfg, Policy};
+pub use lower::{bucket_tokens, StepKind, StepLowerer, StepShape};
+pub use trace::{synthesize, ArrivalKind, Request, SynthSpec, Trace};
+
+use crate::config::{HwSpec, Parallelism, SimKnobs};
+use crate::models;
+use crate::simulator::simulate_run_planned;
+use crate::util::stats::percentile;
+use crate::workload;
+
+/// Serving deployment + scheduling configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub model: String,
+    pub parallelism: Parallelism,
+    pub gpus: usize,
+    pub policy: Policy,
+    /// Max resident sequences per iteration batch.
+    pub max_batch_requests: usize,
+    /// Max reserved tokens (prompt + output) across resident sequences.
+    pub max_batch_tokens: usize,
+    /// Context bucket for step-plan reuse, tokens.
+    pub ctx_bucket: usize,
+    pub base_seed: u64,
+}
+
+impl ServeConfig {
+    pub fn new(model: &str, parallelism: Parallelism, gpus: usize) -> ServeConfig {
+        ServeConfig {
+            model: model.to_string(),
+            parallelism,
+            gpus,
+            policy: Policy::Fcfs,
+            max_batch_requests: 32,
+            max_batch_tokens: 65536,
+            ctx_bucket: 64,
+            base_seed: 0x5EB5E,
+        }
+    }
+}
+
+/// One executed serving step.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub kind: StepKind,
+    /// Step start on the serving clock, s.
+    pub t0_s: f64,
+    pub dur_s: f64,
+    /// Sequences in the iteration batch.
+    pub batch: usize,
+    /// Bucketed step tokens (prompt length / KV context).
+    pub tokens: usize,
+    /// Step wall energy (PSU-referenced), J.
+    pub energy_j: f64,
+    /// Synchronization-wait share of the step's comm energy, J.
+    pub sync_j: f64,
+    /// Network-transfer share, J.
+    pub transfer_j: f64,
+}
+
+/// Outcome of replaying one trace.
+#[derive(Debug, Clone)]
+pub struct ServeResult {
+    /// Per-request records, sorted by request id.
+    pub requests: Vec<RequestRecord>,
+    pub steps: Vec<StepRecord>,
+    /// Serving-clock makespan, s.
+    pub makespan_s: f64,
+    /// Σ step energy, J (== Σ per-request energy, rel 1e-9).
+    pub total_energy_j: f64,
+    /// Mean resident sequences per decode step / `max_batch_requests`.
+    pub occupancy: f64,
+    /// Sync-wait share of communication energy across all steps.
+    pub sync_share: f64,
+    /// Peak reserved KV bytes observed.
+    pub peak_kv_bytes: f64,
+    /// The budget admission was gated on.
+    pub kv_budget_bytes: f64,
+}
+
+impl ServeResult {
+    /// Served (non-rejected) request records.
+    pub fn served(&self) -> impl Iterator<Item = &RequestRecord> {
+        self.requests.iter().filter(|r| !r.rejected)
+    }
+
+    /// Percentile of attributed per-request energy over served requests.
+    pub fn energy_percentile_j(&self, p: f64) -> f64 {
+        let xs: Vec<f64> = self.served().map(|r| r.energy_j).collect();
+        percentile(&xs, p)
+    }
+
+    /// Mean energy per generated token over served requests, J.
+    pub fn energy_per_token_j(&self) -> f64 {
+        let tokens: usize = self.served().map(|r| r.output_tokens).sum();
+        let energy: f64 = self.served().map(|r| r.energy_j).sum();
+        energy / tokens.max(1) as f64
+    }
+}
+
+/// In-flight request state.
+struct Active {
+    req: Request,
+    admit_s: f64,
+    first_token_s: f64,
+    generated: usize,
+    energy_j: f64,
+    sync_j: f64,
+    decode_steps: usize,
+}
+
+/// Move finished requests out of the resident batch.
+fn retire(active: &mut Vec<Active>, batcher: &mut Batcher, records: &mut Vec<RequestRecord>, clock: f64) {
+    let mut i = 0;
+    while i < active.len() {
+        if active[i].generated >= active[i].req.output_tokens {
+            let a = active.swap_remove(i);
+            batcher.release(&a.req);
+            records.push(RequestRecord {
+                id: a.req.id,
+                prompt_tokens: a.req.prompt_tokens,
+                output_tokens: a.req.output_tokens,
+                arrival_s: a.req.arrival_s,
+                admit_s: a.admit_s,
+                first_token_s: a.first_token_s,
+                finish_s: clock,
+                energy_j: a.energy_j,
+                sync_energy_j: a.sync_j,
+                decode_steps: a.decode_steps,
+                rejected: false,
+            });
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Replay `trace` under the serving configuration. Panics if the model
+/// does not fit the deployment (same gate as the workload grids).
+pub fn serve(trace: &Trace, cfg: &ServeConfig, hw: &HwSpec, knobs: &SimKnobs) -> ServeResult {
+    let spec = models::by_name(&cfg.model).unwrap_or_else(|| panic!("unknown model {}", cfg.model));
+    assert!(
+        workload::runnable(&spec, cfg.parallelism, cfg.gpus, hw),
+        "{} does not fit {} on {} GPUs",
+        cfg.model,
+        cfg.parallelism.label(),
+        cfg.gpus
+    );
+    let kv_per_token = kv_bytes_per_token(&spec);
+    let budget = kv_budget_bytes(&spec, cfg.parallelism, cfg.gpus, hw);
+    let mut batcher = Batcher::new(
+        BatcherCfg {
+            policy: cfg.policy,
+            max_batch_requests: cfg.max_batch_requests,
+            max_batch_tokens: cfg.max_batch_tokens,
+            kv_budget_bytes: budget,
+        },
+        kv_per_token,
+    );
+    let lowerer = StepLowerer::new(&cfg.model, cfg.parallelism, cfg.gpus, hw.clone(), knobs);
+    let sim_step = |shape: &StepShape, idx: u64| {
+        let plan = lowerer.step_plan(shape);
+        let scfg = lowerer.step_config(shape, cfg.base_seed ^ (idx + 1));
+        simulate_run_planned(&scfg, hw, lowerer.knobs(), &plan)
+    };
+
+    let mut active: Vec<Active> = Vec::new();
+    let mut records: Vec<RequestRecord> = Vec::new();
+    let mut steps: Vec<StepRecord> = Vec::new();
+    let mut clock = 0.0f64;
+    let mut arrived = 0usize;
+    let mut step_idx = 0u64;
+    let mut peak_kv = 0.0f64;
+    let mut occupancy_sum = 0.0f64;
+
+    loop {
+        // Pull arrivals up to the serving clock into the queue.
+        while arrived < trace.requests.len() && trace.requests[arrived].arrival_s <= clock {
+            batcher.enqueue(trace.requests[arrived].clone());
+            arrived += 1;
+        }
+        if active.is_empty() && batcher.pending() == 0 {
+            if arrived >= trace.requests.len() {
+                break;
+            }
+            // Idle: jump to the next arrival.
+            clock = trace.requests[arrived].arrival_s;
+            continue;
+        }
+
+        // ---- Admission at the decode boundary. ----
+        let admitted = batcher.admit();
+        if active.is_empty() && admitted.is_empty() {
+            // Nothing resident and nothing admissible: the policy-first
+            // pending request can never fit the budgets — drop it unserved
+            // rather than livelock.
+            if let Some(r) = batcher.reject_head() {
+                records.push(RequestRecord {
+                    id: r.id,
+                    prompt_tokens: r.prompt_tokens,
+                    output_tokens: r.output_tokens,
+                    arrival_s: r.arrival_s,
+                    admit_s: clock,
+                    first_token_s: clock,
+                    finish_s: clock,
+                    energy_j: 0.0,
+                    sync_energy_j: 0.0,
+                    decode_steps: 0,
+                    rejected: true,
+                });
+            }
+            continue;
+        }
+        peak_kv = peak_kv.max(batcher.resident_kv_bytes());
+
+        // ---- Batched prefill over the admitted prompts. Resident decode
+        // stalls for its duration (iteration-level scheduling); the step's
+        // energy is attributed to the admitted requests it prefills. ----
+        if !admitted.is_empty() {
+            let admit_s = clock;
+            let total_prompt: usize = admitted.iter().map(|r| r.prompt_tokens).sum();
+            let mean_prompt = total_prompt.div_ceil(admitted.len());
+            let shape = StepShape {
+                kind: StepKind::Prefill,
+                batch: admitted.len(),
+                tokens: bucket_tokens(mean_prompt, cfg.ctx_bucket),
+            };
+            let r = sim_step(&shape, step_idx);
+            step_idx += 1;
+            let weights: Vec<f64> = admitted.iter().map(|q| q.prompt_tokens as f64).collect();
+            let shares = split_energy(r.true_total_j, &weights);
+            let sync_shares = split_energy(r.sync_wait_j(), &weights);
+            steps.push(StepRecord {
+                kind: StepKind::Prefill,
+                t0_s: clock,
+                dur_s: r.wall_s,
+                batch: admitted.len(),
+                tokens: shape.tokens,
+                energy_j: r.true_total_j,
+                sync_j: r.sync_wait_j(),
+                transfer_j: r.comm_transfer_j(),
+            });
+            clock += r.wall_s;
+            // Prefill yields each admitted request's first output token.
+            for ((q, e), s) in admitted.into_iter().zip(shares).zip(sync_shares) {
+                active.push(Active {
+                    req: q,
+                    admit_s,
+                    first_token_s: clock,
+                    generated: 1,
+                    energy_j: e,
+                    sync_j: s,
+                    decode_steps: 0,
+                });
+            }
+            retire(&mut active, &mut batcher, &mut records, clock);
+            if active.is_empty() {
+                continue; // every admitted request wanted a single token
+            }
+        }
+
+        // ---- One decode iteration for the resident batch. ----
+        let contexts: Vec<f64> = active.iter().map(|a| (a.req.prompt_tokens + a.generated) as f64).collect();
+        let mean_ctx = (contexts.iter().sum::<f64>() / contexts.len() as f64).ceil() as usize;
+        let shape = StepShape {
+            kind: StepKind::Decode,
+            batch: active.len(),
+            tokens: bucket_tokens(mean_ctx.max(1), cfg.ctx_bucket),
+        };
+        let r = sim_step(&shape, step_idx);
+        step_idx += 1;
+        // Token work per request: KV context touched + the generated token.
+        let weights: Vec<f64> = contexts.iter().map(|c| c + 1.0).collect();
+        let shares = split_energy(r.true_total_j, &weights);
+        let sync_shares = split_energy(r.sync_wait_j(), &weights);
+        steps.push(StepRecord {
+            kind: StepKind::Decode,
+            t0_s: clock,
+            dur_s: r.wall_s,
+            batch: active.len(),
+            tokens: shape.tokens,
+            energy_j: r.true_total_j,
+            sync_j: r.sync_wait_j(),
+            transfer_j: r.comm_transfer_j(),
+        });
+        clock += r.wall_s;
+        occupancy_sum += active.len() as f64;
+        for (a, (e, s)) in active.iter_mut().zip(shares.into_iter().zip(sync_shares)) {
+            a.energy_j += e;
+            a.sync_j += s;
+            a.generated += 1;
+            a.decode_steps += 1;
+        }
+        retire(&mut active, &mut batcher, &mut records, clock);
+    }
+
+    records.sort_by_key(|r| r.id);
+    let total_energy_j: f64 = steps.iter().map(|s| s.energy_j).sum();
+    let decode_steps = steps.iter().filter(|s| s.kind == StepKind::Decode).count();
+    let occupancy = if decode_steps > 0 {
+        occupancy_sum / decode_steps as f64 / cfg.max_batch_requests as f64
+    } else {
+        0.0
+    };
+    let sync_j: f64 = steps.iter().map(|s| s.sync_j).sum();
+    let comm_j: f64 = steps.iter().map(|s| s.sync_j + s.transfer_j).sum();
+    ServeResult {
+        requests: records,
+        steps,
+        makespan_s: clock,
+        total_energy_j,
+        occupancy,
+        sync_share: if comm_j > 0.0 { sync_j / comm_j } else { 0.0 },
+        peak_kv_bytes: peak_kv,
+        kv_budget_bytes: budget,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Strategy;
+
+    fn tiny_trace(seed: u64) -> Trace {
+        synthesize(
+            &SynthSpec {
+                requests: 6,
+                rate_rps: 4.0,
+                prompt_mean: 32.0,
+                prompt_range: (8, 64),
+                output_mean: 4.0,
+                output_range: (2, 8),
+                ..SynthSpec::default()
+            },
+            seed,
+        )
+    }
+
+    fn tiny_cfg(par: Parallelism, gpus: usize) -> ServeConfig {
+        ServeConfig {
+            max_batch_requests: 4,
+            ..ServeConfig::new("Vicuna-7B", par, gpus)
+        }
+    }
+
+    #[test]
+    fn per_request_energy_conserves_batch_energy() {
+        let trace = tiny_trace(1);
+        let res = serve(&trace, &tiny_cfg(Parallelism::Tensor, 2), &HwSpec::default(), &SimKnobs::default());
+        assert_eq!(res.requests.len(), trace.len());
+        let req_j: f64 = res.requests.iter().map(|r| r.energy_j).sum();
+        let rel = (req_j - res.total_energy_j).abs() / res.total_energy_j;
+        assert!(rel < 1e-9, "Σreq {req_j} vs Σstep {} (rel {rel})", res.total_energy_j);
+        assert!(res.total_energy_j > 0.0);
+    }
+
+    #[test]
+    fn serving_is_deterministic_under_a_seed() {
+        let trace = tiny_trace(2);
+        let cfg = tiny_cfg(Parallelism::Tensor, 2);
+        let a = serve(&trace, &cfg, &HwSpec::default(), &SimKnobs::default());
+        let b = serve(&trace, &cfg, &HwSpec::default(), &SimKnobs::default());
+        assert_eq!(a.requests, b.requests, "bit-identical per-request records");
+        assert_eq!(a.total_energy_j, b.total_energy_j);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        // A different seed changes the energies (stochastic substrate).
+        let c = serve(&trace, &ServeConfig { base_seed: 99, ..cfg }, &HwSpec::default(), &SimKnobs::default());
+        assert_ne!(a.total_energy_j, c.total_energy_j);
+    }
+
+    #[test]
+    fn request_timestamps_are_ordered_and_budgets_hold() {
+        let trace = tiny_trace(3);
+        let res = serve(&trace, &tiny_cfg(Parallelism::Tensor, 2), &HwSpec::default(), &SimKnobs::default());
+        for r in res.served() {
+            assert!(r.arrival_s <= r.admit_s, "{}", r.id);
+            assert!(r.admit_s < r.first_token_s, "{}", r.id);
+            assert!(r.first_token_s <= r.finish_s, "{}", r.id);
+            assert!(r.energy_j > 0.0);
+            assert_eq!(r.decode_steps, r.output_tokens - 1, "{}", r.id);
+        }
+        assert!(res.peak_kv_bytes <= res.kv_budget_bytes);
+        assert!(res.occupancy > 0.0 && res.occupancy <= 1.0);
+        assert!(res.sync_share > 0.0 && res.sync_share < 1.0);
+        assert!(res.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_not_livelocked() {
+        let mut reqs = tiny_trace(4).requests;
+        reqs.push(Request {
+            id: 99,
+            arrival_s: 0.0,
+            prompt_tokens: 1 << 20, // can never fit max_batch_tokens
+            output_tokens: 4,
+        });
+        let trace = Trace::new(reqs);
+        let res = serve(&trace, &tiny_cfg(Parallelism::Tensor, 2), &HwSpec::default(), &SimKnobs::default());
+        let rejected: Vec<u32> = res.requests.iter().filter(|r| r.rejected).map(|r| r.id).collect();
+        assert_eq!(rejected, vec![99]);
+        assert_eq!(res.served().count(), trace.len() - 1);
+        // Rejection carries no energy; conservation still holds.
+        let req_j: f64 = res.requests.iter().map(|r| r.energy_j).sum();
+        assert!((req_j - res.total_energy_j).abs() / res.total_energy_j < 1e-9);
+    }
+
+    #[test]
+    fn policies_change_admission_order_under_contention() {
+        // Arrivals all at t=0 with contrasting prompt lengths and a
+        // one-request batch: FCFS serves by arrival, SPF by prompt length.
+        let reqs: Vec<Request> = [(0u32, 60usize), (1, 10), (2, 30)]
+            .into_iter()
+            .map(|(id, prompt)| Request {
+                id,
+                arrival_s: 0.0,
+                prompt_tokens: prompt,
+                output_tokens: 2,
+            })
+            .collect();
+        let trace = Trace::new(reqs);
+        let base = ServeConfig {
+            max_batch_requests: 1,
+            ..ServeConfig::new("Vicuna-7B", Parallelism::Tensor, 2)
+        };
+        let order = |policy: Policy| -> Vec<u32> {
+            let cfg = ServeConfig { policy, ..base.clone() };
+            let mut done: Vec<(f64, u32)> = serve(&trace, &cfg, &HwSpec::default(), &SimKnobs::default())
+                .requests
+                .iter()
+                .map(|r| (r.finish_s, r.id))
+                .collect();
+            done.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            done.into_iter().map(|(_, id)| id).collect()
+        };
+        assert_eq!(order(Policy::Fcfs), vec![0, 1, 2]);
+        assert_eq!(order(Policy::ShortestPromptFirst), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn hybrid_mesh_serves_with_comm_isolation() {
+        let par = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
+        let trace = tiny_trace(5);
+        let res = serve(&trace, &tiny_cfg(par, 4), &HwSpec::default(), &SimKnobs::default());
+        let req_j: f64 = res.requests.iter().map(|r| r.energy_j).sum();
+        assert!((req_j - res.total_energy_j).abs() / res.total_energy_j < 1e-9);
+        // The TP axis jitters collectives; sync energy reaches requests.
+        assert!(res.requests.iter().any(|r| r.sync_energy_j > 0.0));
+    }
+}

@@ -1,0 +1,372 @@
+//! Request traces for the serving simulator.
+//!
+//! A trace is an ordered list of inference requests — arrival timestamp,
+//! prompt length, output length — replayed by `serve::serve` through the
+//! continuous batcher. Traces load from a newline-delimited JSON format
+//! (one object per line: `{"id": 0, "arrival_s": 0.41, "prompt_tokens":
+//! 128, "output_tokens": 64}`; `id` is optional, defaults to the
+//! parsed-request index, and must be unique) or come from the seeded
+//! synthetic generators: homogeneous
+//! Poisson arrivals, bursty ON/OFF traffic, and a sinusoidal diurnal ramp
+//! — the request-mix regimes TokenPowerBench identifies as the dominant
+//! drivers of real serving energy. Generation is fully deterministic
+//! under a fixed seed (everything draws from `util::rng`).
+
+use crate::util::json::{num, obj, Json};
+use crate::util::rng::Rng;
+
+/// One inference request of a serving trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u32,
+    /// Arrival time, seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt length, tokens.
+    pub prompt_tokens: usize,
+    /// Requested generation length, tokens.
+    pub output_tokens: usize,
+}
+
+impl Request {
+    /// Tokens of KV cache the request holds at completion (its
+    /// reservation under conservative admission).
+    pub fn reserved_tokens(&self) -> usize {
+        self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// An arrival-ordered request trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Requests sorted by (arrival, id).
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    /// Build a trace, sorting requests into arrival order.
+    pub fn new(mut requests: Vec<Request>) -> Trace {
+        requests.sort_by(|a, b| {
+            a.arrival_s
+                .partial_cmp(&b.arrival_s)
+                .expect("finite arrival times")
+                .then(a.id.cmp(&b.id))
+        });
+        Trace { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Total requested output tokens across the trace.
+    pub fn output_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.output_tokens).sum()
+    }
+
+    /// Parse the JSONL trace format. Blank lines and `#` comments are
+    /// skipped; requests with zero-length prompts or outputs, malformed
+    /// ids, or duplicate ids are rejected (the per-request records and the
+    /// `piep-serve-v3` store join on id).
+    pub fn parse_jsonl(src: &str) -> Result<Trace, String> {
+        let mut out: Vec<Request> = Vec::new();
+        let mut seen_ids = std::collections::BTreeSet::new();
+        for (i, line) in src.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let j = Json::parse(line).map_err(|e| format!("trace line {}: {e}", i + 1))?;
+            let field = |k: &str| {
+                j.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("trace line {}: missing numeric `{k}`", i + 1))
+            };
+            let arrival_s = field("arrival_s")?;
+            let prompt_tokens = field("prompt_tokens")? as usize;
+            let output_tokens = field("output_tokens")? as usize;
+            if !(arrival_s.is_finite() && arrival_s >= 0.0) {
+                return Err(format!("trace line {}: bad arrival_s", i + 1));
+            }
+            if prompt_tokens == 0 || output_tokens == 0 {
+                return Err(format!("trace line {}: zero-length request", i + 1));
+            }
+            let id = match j.get("id").and_then(Json::as_f64) {
+                Some(x) if x >= 0.0 && x <= u32::MAX as f64 && x.fract() == 0.0 => x as u32,
+                Some(_) => return Err(format!("trace line {}: id must be a u32", i + 1)),
+                // Default: the parsed-request index.
+                None => out.len() as u32,
+            };
+            if !seen_ids.insert(id) {
+                return Err(format!("trace line {}: duplicate request id {id}", i + 1));
+            }
+            out.push(Request {
+                id,
+                arrival_s,
+                prompt_tokens,
+                output_tokens,
+            });
+        }
+        if out.is_empty() {
+            return Err("trace has no requests".into());
+        }
+        Ok(Trace::new(out))
+    }
+
+    /// Load a JSONL trace file.
+    pub fn load_jsonl(path: &str) -> Result<Trace, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse_jsonl(&src)
+    }
+
+    /// Render the trace back to its JSONL form.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.requests {
+            let j = obj(vec![
+                ("id", num(r.id as f64)),
+                ("arrival_s", num(r.arrival_s)),
+                ("prompt_tokens", num(r.prompt_tokens as f64)),
+                ("output_tokens", num(r.output_tokens as f64)),
+            ]);
+            out.push_str(&j.render());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Arrival-process family of a synthetic trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson arrivals at `rate_rps`.
+    Poisson,
+    /// ON/OFF bursts: Poisson at `burst_factor × rate_rps` inside ON
+    /// windows, silence in the OFF gaps.
+    Bursty,
+    /// Sinusoidal diurnal ramp of the Poisson rate around `rate_rps`.
+    Diurnal,
+}
+
+impl ArrivalKind {
+    pub const ALL: [ArrivalKind; 3] = [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty => "bursty",
+            ArrivalKind::Diurnal => "diurnal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArrivalKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "poisson" => Some(ArrivalKind::Poisson),
+            "bursty" | "onoff" => Some(ArrivalKind::Bursty),
+            "diurnal" | "ramp" => Some(ArrivalKind::Diurnal),
+            _ => None,
+        }
+    }
+}
+
+/// Synthetic-trace description: arrival process plus lognormal
+/// prompt/output length distributions (clamped to the given ranges).
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub kind: ArrivalKind,
+    pub requests: usize,
+    /// Mean arrival rate, requests/s.
+    pub rate_rps: f64,
+    /// Target mean / cv of the prompt-length distribution, tokens.
+    pub prompt_mean: f64,
+    pub prompt_cv: f64,
+    /// Clamp range for prompt lengths.
+    pub prompt_range: (usize, usize),
+    /// Target mean / cv of the output-length distribution, tokens.
+    pub output_mean: f64,
+    pub output_cv: f64,
+    /// Clamp range for output lengths.
+    pub output_range: (usize, usize),
+    /// Bursty: ON-window rate multiplier and window durations, s.
+    pub burst_factor: f64,
+    pub on_s: f64,
+    pub off_s: f64,
+    /// Diurnal: relative rate amplitude in [0, 1) and period, s.
+    pub diurnal_amplitude: f64,
+    pub period_s: f64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec {
+            kind: ArrivalKind::Poisson,
+            requests: 32,
+            rate_rps: 2.0,
+            prompt_mean: 128.0,
+            prompt_cv: 0.6,
+            prompt_range: (8, 1024),
+            output_mean: 8.0,
+            output_cv: 0.5,
+            output_range: (2, 64),
+            burst_factor: 4.0,
+            on_s: 4.0,
+            off_s: 8.0,
+            diurnal_amplitude: 0.8,
+            period_s: 60.0,
+        }
+    }
+}
+
+/// Generate a synthetic trace. Deterministic: the same (spec, seed) always
+/// produces the same requests.
+pub fn synthesize(spec: &SynthSpec, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x7ACE_5EED);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(spec.requests);
+    for i in 0..spec.requests {
+        t = match spec.kind {
+            ArrivalKind::Poisson => t + rng.exponential(1.0 / spec.rate_rps),
+            ArrivalKind::Bursty => {
+                // Draw the next ON-rate arrival, then skip any OFF window
+                // it lands in (arrivals only happen inside ON windows).
+                let cycle = spec.on_s + spec.off_s;
+                let mut next = t + rng.exponential(1.0 / (spec.rate_rps * spec.burst_factor));
+                if next % cycle >= spec.on_s {
+                    // Jump to the start of the next ON window.
+                    next = ((next / cycle).floor() + 1.0) * cycle;
+                }
+                next
+            }
+            ArrivalKind::Diurnal => {
+                // Rate modulated by the phase at the previous arrival
+                // (piecewise-constant thinning-free approximation).
+                let phase = std::f64::consts::TAU * (t / spec.period_s);
+                let amp = spec.diurnal_amplitude.clamp(0.0, 0.95);
+                let rate = spec.rate_rps * (1.0 + amp * phase.sin()).max(0.05);
+                t + rng.exponential(1.0 / rate)
+            }
+        };
+        let draw_len = |rng: &mut Rng, mean: f64, cv: f64, range: (usize, usize)| -> usize {
+            let x = rng.lognormal_mean_cv(mean, cv).round() as usize;
+            x.clamp(range.0.max(1), range.1.max(1))
+        };
+        out.push(Request {
+            id: i as u32,
+            arrival_s: t,
+            prompt_tokens: draw_len(&mut rng, spec.prompt_mean, spec.prompt_cv, spec.prompt_range),
+            output_tokens: draw_len(&mut rng, spec.output_mean, spec.output_cv, spec.output_range),
+        });
+    }
+    Trace::new(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_roundtrip_preserves_requests() {
+        let spec = SynthSpec {
+            requests: 12,
+            ..SynthSpec::default()
+        };
+        let trace = synthesize(&spec, 7);
+        let text = trace.to_jsonl();
+        let back = Trace::parse_jsonl(&text).unwrap();
+        assert_eq!(trace.requests, back.requests);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_defaults_ids() {
+        let src = "# demo trace\n\n{\"arrival_s\": 0.5, \"prompt_tokens\": 16, \"output_tokens\": 4}\n\
+                   {\"arrival_s\": 0.1, \"prompt_tokens\": 8, \"output_tokens\": 2}\n";
+        let t = Trace::parse_jsonl(src).unwrap();
+        assert_eq!(t.len(), 2);
+        // Sorted into arrival order; ids default to line order.
+        assert_eq!(t.requests[0].arrival_s, 0.1);
+        assert_eq!(t.requests[0].id, 1);
+        assert_eq!(t.requests[1].id, 0);
+    }
+
+    #[test]
+    fn parse_rejects_bad_lines() {
+        assert!(Trace::parse_jsonl("").is_err());
+        assert!(Trace::parse_jsonl("{\"arrival_s\": 1.0}").is_err());
+        assert!(Trace::parse_jsonl("{\"arrival_s\": 1.0, \"prompt_tokens\": 0, \"output_tokens\": 4}").is_err());
+        assert!(Trace::parse_jsonl("{\"arrival_s\": -1.0, \"prompt_tokens\": 4, \"output_tokens\": 4}").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_duplicate_and_malformed_ids() {
+        // An explicit id colliding with a later default (= parsed index).
+        let dup = "{\"id\": 1, \"arrival_s\": 0.1, \"prompt_tokens\": 8, \"output_tokens\": 2}\n\
+                   {\"arrival_s\": 0.2, \"prompt_tokens\": 8, \"output_tokens\": 2}\n";
+        assert!(Trace::parse_jsonl(dup).unwrap_err().contains("duplicate"));
+        for bad in ["-1", "1.5", "5000000000"] {
+            let src = format!("{{\"id\": {bad}, \"arrival_s\": 0.1, \"prompt_tokens\": 8, \"output_tokens\": 2}}");
+            assert!(Trace::parse_jsonl(&src).unwrap_err().contains("u32"), "{bad}");
+        }
+    }
+
+    #[test]
+    fn synthesis_is_deterministic_and_seed_sensitive() {
+        let spec = SynthSpec {
+            requests: 20,
+            ..SynthSpec::default()
+        };
+        let a = synthesize(&spec, 3);
+        let b = synthesize(&spec, 3);
+        let c = synthesize(&spec, 4);
+        assert_eq!(a.requests, b.requests);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn arrivals_are_ordered_and_lengths_in_range() {
+        for kind in ArrivalKind::ALL {
+            let spec = SynthSpec {
+                kind,
+                requests: 40,
+                ..SynthSpec::default()
+            };
+            let t = synthesize(&spec, 11);
+            assert_eq!(t.len(), 40);
+            for w in t.requests.windows(2) {
+                assert!(w[0].arrival_s <= w[1].arrival_s, "{kind:?} ordered");
+            }
+            for r in &t.requests {
+                assert!((spec.prompt_range.0..=spec.prompt_range.1).contains(&r.prompt_tokens));
+                assert!((spec.output_range.0..=spec.output_range.1).contains(&r.output_tokens));
+                assert!(r.arrival_s >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster_in_on_windows() {
+        let spec = SynthSpec {
+            kind: ArrivalKind::Bursty,
+            requests: 60,
+            ..SynthSpec::default()
+        };
+        let t = synthesize(&spec, 5);
+        let cycle = spec.on_s + spec.off_s;
+        for r in &t.requests {
+            // In an ON window, up to fp tolerance at the window boundary.
+            let pos = r.arrival_s % cycle;
+            let in_on = pos < spec.on_s + 1e-6 || cycle - pos < 1e-6;
+            assert!(in_on, "arrival at cycle offset {pos:.6}s falls in an OFF window");
+        }
+    }
+
+    #[test]
+    fn arrival_kind_parse_roundtrip() {
+        for k in ArrivalKind::ALL {
+            assert_eq!(ArrivalKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ArrivalKind::parse("uniform"), None);
+    }
+}

@@ -292,12 +292,7 @@ pub fn simulate_run_planned(
 
     // ---- runtime features ----
     let gpu_util = tl.busy_fraction();
-    let kv_bytes_total = (cfg.batch * (cfg.seq_in + cfg.seq_out)) as f64
-        * 2.0
-        * spec.kv_heads as f64
-        * spec.head_dim() as f64
-        * spec.dtype_bytes as f64
-        * spec.layers as f64;
+    let kv_bytes_total = (cfg.batch * (cfg.seq_in + cfg.seq_out)) as f64 * crate::workload::kv_bytes_per_token(&spec);
     // Every strategy (and hybrid) shards the KV cache across all g ranks
     // (TP by heads, PP by layers, DP by batch); weights follow the shared
     // memory model in `workload::weights_per_gpu_bytes`.

@@ -12,6 +12,14 @@ pub const BATCHES: [usize; 4] = [8, 16, 32, 64];
 pub const SEQ_OUTS: [usize; 2] = [512, 1024];
 pub const GPU_COUNTS: [usize; 2] = [2, 4];
 
+/// KV-cache bytes one resident token costs across the whole mesh (K and V
+/// per layer). The single definition behind the simulator's memory
+/// features (`simulator::run`) and the serving layer's admission budget
+/// (`serve::batcher`); every strategy shards the KV cache over all ranks.
+pub fn kv_bytes_per_token(spec: &ModelSpec) -> f64 {
+    2.0 * spec.kv_heads as f64 * spec.head_dim() as f64 * spec.dtype_bytes as f64 * spec.layers as f64
+}
+
 /// Weight bytes resident per GPU under any (pure or hybrid) parallelism.
 /// This is the single memory model behind both `runnable` VRAM gating and
 /// the simulator's memory-utilization features.

@@ -337,6 +337,55 @@ fn all_strategies_lower_to_the_shared_plan_ir() {
 }
 
 #[test]
+fn serve_replays_jsonl_and_synthetic_traces_end_to_end() {
+    use piep::config::Strategy;
+    use piep::serve::{serve, synthesize, Policy, ServeConfig, SynthSpec, Trace};
+
+    let hw = HwSpec::default();
+    let knobs = SimKnobs::default();
+    let trace = synthesize(
+        &SynthSpec {
+            requests: 8,
+            prompt_mean: 32.0,
+            prompt_range: (8, 64),
+            output_mean: 4.0,
+            output_range: (2, 6),
+            ..SynthSpec::default()
+        },
+        21,
+    );
+    // The JSONL roundtrip must drive the exact same schedule.
+    let path = "target/test-serve-trace.jsonl";
+    std::fs::write(path, trace.to_jsonl()).unwrap();
+    let loaded = Trace::load_jsonl(path).unwrap();
+
+    let tp2pp = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
+    for par in [Parallelism::Tensor, tp2pp] {
+        let cfg = ServeConfig {
+            policy: Policy::Fcfs,
+            max_batch_requests: 4,
+            ..ServeConfig::new("Vicuna-7B", par, 4)
+        };
+        let a = serve(&trace, &cfg, &hw, &knobs);
+        let b = serve(&loaded, &cfg, &hw, &knobs);
+        assert_eq!(a.requests, b.requests, "{}: JSONL replay bit-identical", par.label());
+        // Conservation, budget, and occupancy invariants on a real trace.
+        let req_j: f64 = a.requests.iter().map(|r| r.energy_j).sum();
+        assert!((req_j - a.total_energy_j).abs() / a.total_energy_j < 1e-9, "{}", par.label());
+        assert!(a.peak_kv_bytes <= a.kv_budget_bytes, "{}", par.label());
+        assert!(a.occupancy > 0.0 && a.occupancy <= 1.0, "{}", par.label());
+        assert_eq!(a.requests.iter().filter(|r| r.rejected).count(), 0);
+        // Every request completes inside the serving makespan and the
+        // generated-token ledger matches the trace.
+        for r in &a.requests {
+            assert!(r.finish_s <= a.makespan_s + 1e-9, "{}: req {}", par.label(), r.id);
+        }
+        let served_tokens: usize = a.requests.iter().map(|r| r.output_tokens).sum();
+        assert_eq!(served_tokens, trace.output_tokens());
+    }
+}
+
+#[test]
 fn unknown_model_panics_cleanly() {
     let result = std::panic::catch_unwind(|| {
         let cfg = RunConfig::new("GPT-5", Parallelism::Tensor, 2, 8);

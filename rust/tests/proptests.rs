@@ -333,6 +333,104 @@ fn prop_tree_leaves_cover_measured_modules() {
 }
 
 #[test]
+fn prop_serve_attribution_conserves_and_respects_budgets() {
+    // The serving simulator's per-request attribution must sum exactly
+    // (rel 1e-9) to the per-step batch energy — for every strategy
+    // (hybrids included) and both scheduling policies — and continuous
+    // batching must never exceed the KV-cache VRAM budget.
+    use piep::serve::{serve, synthesize, Policy, ServeConfig, SynthSpec};
+    let hw = HwSpec::default();
+    let k = knobs();
+    forall(111, 4, |r| (r.below(3), r.next_u64() & 0xffff), |&(mi, seed)| {
+        let model = ["Vicuna-7B", "Llama-7B", "Qwen-8B"][mi];
+        let trace = synthesize(
+            &SynthSpec {
+                requests: 5,
+                rate_rps: 4.0,
+                prompt_mean: 32.0,
+                prompt_range: (8, 64),
+                output_mean: 4.0,
+                output_range: (2, 6),
+                ..SynthSpec::default()
+            },
+            seed,
+        );
+        let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.extend(hybrids4());
+        for par in pars {
+            let spec = piep::models::by_name(model).unwrap();
+            if !piep::workload::runnable(&spec, par, 4, &hw) {
+                continue;
+            }
+            for policy in Policy::ALL {
+                let cfg = ServeConfig {
+                    policy,
+                    base_seed: seed,
+                    max_batch_requests: 4,
+                    ..ServeConfig::new(model, par, 4)
+                };
+                let res = serve(&trace, &cfg, &hw, &k);
+                ensure(res.requests.len() == trace.len(), "every request accounted for")?;
+                let req_j: f64 = res.requests.iter().map(|r| r.energy_j).sum();
+                let rel = (req_j - res.total_energy_j).abs() / res.total_energy_j;
+                ensure(
+                    rel < 1e-9,
+                    format!("{par:?}/{policy:?}: Σreq {req_j} vs Σstep {} (rel {rel})", res.total_energy_j),
+                )?;
+                ensure(
+                    res.peak_kv_bytes <= res.kv_budget_bytes,
+                    format!("{par:?}/{policy:?}: peak KV {} over budget {}", res.peak_kv_bytes, res.kv_budget_bytes),
+                )?;
+                ensure(res.requests.iter().all(|r| r.energy_j >= 0.0), "non-negative attribution")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serve_deterministic_per_seed() {
+    // Same trace + same seed -> bit-identical per-request records; a
+    // different serving seed perturbs the energies.
+    use piep::serve::{serve, synthesize, ArrivalKind, ServeConfig, SynthSpec};
+    let hw = HwSpec::default();
+    let k = knobs();
+    forall(112, 6, |r| (r.below(3), r.next_u64() & 0xffff), |&(ki, seed)| {
+        let trace = synthesize(
+            &SynthSpec {
+                kind: ArrivalKind::ALL[ki],
+                requests: 5,
+                prompt_mean: 32.0,
+                prompt_range: (8, 64),
+                output_mean: 4.0,
+                output_range: (2, 6),
+                ..SynthSpec::default()
+            },
+            seed,
+        );
+        let cfg = ServeConfig {
+            base_seed: seed,
+            ..ServeConfig::new("Vicuna-7B", Parallelism::Tensor, 2)
+        };
+        let a = serve(&trace, &cfg, &hw, &k);
+        let b = serve(&trace, &cfg, &hw, &k);
+        ensure(a.requests == b.requests, "per-request records bit-identical")?;
+        ensure(a.total_energy_j == b.total_energy_j, "total deterministic")?;
+        ensure(a.makespan_s == b.makespan_s, "makespan deterministic")?;
+        let c = serve(
+            &trace,
+            &ServeConfig {
+                base_seed: seed ^ 0xDEAD,
+                ..cfg
+            },
+            &hw,
+            &k,
+        );
+        ensure(a.total_energy_j != c.total_energy_j, "seed changes the substrate draws")
+    });
+}
+
+#[test]
 fn prop_ridge_interpolates_noiseless_linear_data() {
     use piep::predict::Ridge;
     forall(
