@@ -1,0 +1,370 @@
+//! Cluster topology model: hierarchical interconnect tiers + heterogeneous
+//! GPU fleets (DESIGN.md §11).
+//!
+//! Everything before this module assumed one flat, homogeneous link between
+//! every pair of ranks — the paper's single 4×A6000 PCIe box. Real serving
+//! deployments span *nodes*: NVLink-class links inside a node, PCIe or
+//! InfiniBand across nodes, and fleets that mix GPU generations. This
+//! module carries the static description:
+//!
+//! * `LinkSpec` — one interconnect tier's α–β constants (bandwidth, per-step
+//!   and per-call latency) plus a wire energy-per-byte term that surfaces as
+//!   extra board power while driving the link.
+//! * `LinkTier` — the three named tiers (NvLink / PCIe / InfiniBand) with
+//!   spec-sheet constants.
+//! * `GpuSpec` — one rank's GPU class: relative compute throughput and
+//!   idle/peak board power (heterogeneous fleets mix these per rank).
+//! * `Topology` — the mapping of the existing contiguous rank mesh onto
+//!   nodes, with an intra-node and an inter-node tier and an optional
+//!   per-rank fleet.
+//!
+//! The lowerers consult the topology when costing collectives and P2P edges
+//! (`simulator::collective::*_hier`): rank ranges that stay inside one node
+//! pay the intra-node tier with *exactly* the legacy flat formula, so a
+//! single-node single-tier topology is bit-identical to the pre-topology
+//! code path (proptest-enforced). Ranges that cross a node boundary pay the
+//! slower tier hierarchically (intra-node reduce, inter-node exchange,
+//! intra-node broadcast).
+
+/// One interconnect tier's cost constants.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Effective bandwidth, bytes/s.
+    pub bw: f64,
+    /// Per-ring-step latency, s (kernel launch + DMA/NIC setup).
+    pub step_latency: f64,
+    /// Fixed per-collective-call latency, s.
+    pub base_latency: f64,
+    /// Wire/PHY energy per byte moved, J/B — zero for the legacy flat link
+    /// (its wire draw is already folded into `HwSpec::gpu_comm_w`).
+    pub energy_per_byte: f64,
+}
+
+impl LinkSpec {
+    /// Extra board power while driving this link at full rate, W.
+    pub fn wire_power_w(&self) -> f64 {
+        self.energy_per_byte * self.bw
+    }
+}
+
+/// Named interconnect tiers with public spec-sheet constants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkTier {
+    /// NVLink bridge / NVSwitch-class intra-node fabric.
+    NvLink,
+    /// PCIe 4.0 x16 host fabric (the paper's testbed link).
+    PciE,
+    /// InfiniBand HDR-class inter-node network.
+    InfiniBand,
+}
+
+impl LinkTier {
+    pub const ALL: [LinkTier; 3] = [LinkTier::NvLink, LinkTier::PciE, LinkTier::InfiniBand];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkTier::NvLink => "nvlink",
+            LinkTier::PciE => "pcie",
+            LinkTier::InfiniBand => "infiniband",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LinkTier> {
+        match s.to_ascii_lowercase().as_str() {
+            "nvlink" | "nvl" => Some(LinkTier::NvLink),
+            "pcie" | "pci" => Some(LinkTier::PciE),
+            "infiniband" | "ib" => Some(LinkTier::InfiniBand),
+            _ => None,
+        }
+    }
+
+    /// Cost constants for this tier. NVLink: wide and near, ~1.3 pJ/bit.
+    /// PCIe: the legacy flat constants plus an explicit wire term.
+    /// InfiniBand: NIC + switch hops — highest latency and wire energy.
+    pub fn spec(&self) -> LinkSpec {
+        match self {
+            LinkTier::NvLink => LinkSpec {
+                bw: 100.0e9,
+                step_latency: 2.0e-6,
+                base_latency: 8.0e-6,
+                energy_per_byte: 1.0e-11,
+            },
+            LinkTier::PciE => LinkSpec {
+                bw: 12.0e9,
+                step_latency: 5.0e-6,
+                base_latency: 14.0e-6,
+                energy_per_byte: 6.0e-11,
+            },
+            LinkTier::InfiniBand => LinkSpec {
+                bw: 18.0e9,
+                step_latency: 10.0e-6,
+                base_latency: 25.0e-6,
+                energy_per_byte: 2.0e-10,
+            },
+        }
+    }
+}
+
+/// One rank's GPU class in a (possibly heterogeneous) fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Relative compute throughput vs the testbed baseline (1.0 = the
+    /// `HwSpec` GPU). Module durations on this rank scale by 1/this.
+    pub compute_scale: f64,
+    /// Board idle power, W.
+    pub idle_w: f64,
+    /// Board power limit, W.
+    pub peak_w: f64,
+}
+
+impl GpuSpec {
+    /// The testbed baseline (RTX A6000): scale 1.0, legacy powers.
+    pub fn a6000() -> GpuSpec {
+        GpuSpec {
+            name: "a6000",
+            compute_scale: 1.0,
+            idle_w: 22.0,
+            peak_w: 300.0,
+        }
+    }
+
+    /// H100-class: much faster, hotter at both ends.
+    pub fn h100() -> GpuSpec {
+        GpuSpec {
+            name: "h100",
+            compute_scale: 2.5,
+            idle_w: 60.0,
+            peak_w: 350.0,
+        }
+    }
+
+    /// L40-class: modest uplift, efficient.
+    pub fn l40() -> GpuSpec {
+        GpuSpec {
+            name: "l40",
+            compute_scale: 1.2,
+            idle_w: 30.0,
+            peak_w: 300.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GpuSpec> {
+        match s.to_ascii_lowercase().as_str() {
+            "a6000" => Some(GpuSpec::a6000()),
+            "h100" => Some(GpuSpec::h100()),
+            "l40" => Some(GpuSpec::l40()),
+            _ => None,
+        }
+    }
+}
+
+/// Mapping of the contiguous rank mesh onto nodes, with an interconnect
+/// tier per level and an optional heterogeneous per-rank fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// Ranks per node (`node_of(rank) = rank / gpus_per_node`). A
+    /// single-node topology uses `usize::MAX` so every rank maps to node 0.
+    pub gpus_per_node: usize,
+    /// Link tier between ranks of the same node.
+    pub intra: LinkSpec,
+    /// Link tier between ranks of different nodes.
+    pub inter: LinkSpec,
+    /// Per-rank GPU classes. Empty ⇒ homogeneous baseline fleet (the
+    /// `HwSpec` GPU on every rank) — the bit-identical legacy case.
+    pub fleet: Vec<GpuSpec>,
+}
+
+impl Topology {
+    /// Single node, one tier, homogeneous fleet.
+    pub fn single_node(link: LinkSpec) -> Topology {
+        Topology {
+            gpus_per_node: usize::MAX,
+            intra: link,
+            inter: link,
+            fleet: Vec::new(),
+        }
+    }
+
+    /// Homogeneous mesh with `gpus_per_node` ranks per node over two named
+    /// tiers (the node count is implied by how many ranks are used).
+    pub fn multi_node(gpus_per_node: usize, intra: LinkTier, inter: LinkTier) -> Topology {
+        Topology {
+            gpus_per_node: gpus_per_node.max(1),
+            intra: intra.spec(),
+            inter: inter.spec(),
+            fleet: Vec::new(),
+        }
+    }
+
+    /// Attach a heterogeneous per-rank fleet.
+    pub fn with_fleet(mut self, fleet: Vec<GpuSpec>) -> Topology {
+        self.fleet = fleet;
+        self
+    }
+
+    /// Node index of a rank.
+    #[inline]
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node.max(1)
+    }
+
+    /// Number of distinct nodes spanned by ranks `[first, first + count)`.
+    pub fn nodes_spanned(&self, first: usize, count: usize) -> usize {
+        if count == 0 {
+            return 0;
+        }
+        self.node_of(first + count - 1) - self.node_of(first) + 1
+    }
+
+    /// Does the range cross a node boundary?
+    #[inline]
+    pub fn spans(&self, first: usize, count: usize) -> bool {
+        self.nodes_spanned(first, count) > 1
+    }
+
+    /// Largest per-node rank population within `[first, first + count)`.
+    pub fn max_local(&self, first: usize, count: usize) -> usize {
+        let mut best = 0usize;
+        let mut cur = 0usize;
+        let mut node = usize::MAX;
+        for r in first..first + count {
+            let n = self.node_of(r);
+            if n != node {
+                node = n;
+                cur = 0;
+            }
+            cur += 1;
+            best = best.max(cur);
+        }
+        best
+    }
+
+    /// The bottleneck link for a rank range: inter-node if the range
+    /// crosses a node boundary, intra-node otherwise.
+    #[inline]
+    pub fn link_for(&self, first: usize, count: usize) -> &LinkSpec {
+        if self.spans(first, count) {
+            &self.inter
+        } else {
+            &self.intra
+        }
+    }
+
+    /// The link a P2P edge between two ranks travels over.
+    #[inline]
+    pub fn link_between(&self, a: usize, b: usize) -> &LinkSpec {
+        if self.node_of(a) == self.node_of(b) {
+            &self.intra
+        } else {
+            &self.inter
+        }
+    }
+
+    /// Relative compute throughput of a rank's GPU (1.0 when homogeneous).
+    #[inline]
+    pub fn compute_scale(&self, rank: usize) -> f64 {
+        self.fleet.get(rank).map(|g| g.compute_scale).unwrap_or(1.0)
+    }
+
+    /// Per-rank GPU class (None ⇒ baseline `HwSpec` GPU).
+    #[inline]
+    pub fn gpu(&self, rank: usize) -> Option<&GpuSpec> {
+        self.fleet.get(rank)
+    }
+
+    /// Homogeneous baseline fleet (no per-rank overrides)?
+    pub fn homogeneous(&self) -> bool {
+        self.fleet.is_empty()
+    }
+
+    /// Intra/inter bandwidth ratio (≥ 1 when the inter tier is slower);
+    /// exactly 1.0 for single-node topologies — a feature-pipeline
+    /// descriptor (`features::module_feat::TIER_BW_RATIO`).
+    pub fn bw_ratio(&self, num_ranks: usize) -> f64 {
+        if self.spans(0, num_ranks) {
+            self.intra.bw / self.inter.bw
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_constants_are_ordered() {
+        let nv = LinkTier::NvLink.spec();
+        let pcie = LinkTier::PciE.spec();
+        let ib = LinkTier::InfiniBand.spec();
+        assert!(nv.bw > pcie.bw, "NVLink wider than PCIe");
+        assert!(nv.step_latency < pcie.step_latency);
+        assert!(ib.base_latency > pcie.base_latency, "network hops cost more");
+        assert!(ib.energy_per_byte > nv.energy_per_byte);
+        assert!(nv.wire_power_w() > 0.0);
+    }
+
+    #[test]
+    fn tier_parse_roundtrip() {
+        for t in LinkTier::ALL {
+            assert_eq!(LinkTier::parse(t.name()), Some(t));
+        }
+        assert_eq!(LinkTier::parse("ib"), Some(LinkTier::InfiniBand));
+        assert_eq!(LinkTier::parse("ethernet"), None);
+    }
+
+    #[test]
+    fn gpu_spec_parse_and_physicality() {
+        for name in ["a6000", "h100", "l40"] {
+            let g = GpuSpec::parse(name).unwrap();
+            assert_eq!(g.name, name);
+            assert!(g.idle_w < g.peak_w);
+            assert!(g.compute_scale > 0.0);
+        }
+        assert!(GpuSpec::parse("tpu").is_none());
+        assert_eq!(GpuSpec::a6000().compute_scale, 1.0);
+    }
+
+    #[test]
+    fn single_node_never_spans() {
+        let t = Topology::single_node(LinkTier::PciE.spec());
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.nodes_spanned(0, 8), 1);
+        assert!(!t.spans(0, 8));
+        assert_eq!(t.bw_ratio(8), 1.0);
+        assert!(t.homogeneous());
+    }
+
+    #[test]
+    fn multi_node_mapping_and_spans() {
+        let t = Topology::multi_node(2, LinkTier::NvLink, LinkTier::InfiniBand);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(1), 0);
+        assert_eq!(t.node_of(2), 1);
+        assert_eq!(t.nodes_spanned(0, 4), 2);
+        assert!(t.spans(0, 4));
+        assert!(!t.spans(0, 2));
+        assert!(!t.spans(2, 2));
+        assert!(t.spans(1, 2), "offset range crosses the boundary");
+        assert_eq!(t.max_local(0, 4), 2);
+        assert_eq!(t.max_local(1, 2), 1);
+        assert!(t.bw_ratio(4) > 1.0, "NVLink over InfiniBand");
+        assert_eq!(t.link_between(0, 1), &LinkTier::NvLink.spec());
+        assert_eq!(t.link_between(1, 2), &LinkTier::InfiniBand.spec());
+    }
+
+    #[test]
+    fn heterogeneous_fleet_scales() {
+        let t = Topology::multi_node(2, LinkTier::NvLink, LinkTier::InfiniBand)
+            .with_fleet(vec![GpuSpec::a6000(), GpuSpec::a6000(), GpuSpec::h100(), GpuSpec::h100()]);
+        assert!(!t.homogeneous());
+        assert_eq!(t.compute_scale(0), 1.0);
+        assert!(t.compute_scale(2) > 1.0);
+        assert_eq!(t.gpu(3).unwrap().name, "h100");
+        // Ranks beyond the fleet fall back to baseline.
+        assert_eq!(t.compute_scale(9), 1.0);
+    }
+}

@@ -6,6 +6,8 @@
 //! usual measured-behavior literature (NCCL busy-wait draw, PCIe effective
 //! bandwidth, PSU conversion losses); DESIGN.md §7 documents the model.
 
+use crate::cluster::{GpuSpec, LinkSpec, LinkTier, Topology};
+
 /// Static hardware description.
 #[derive(Debug, Clone)]
 pub struct HwSpec {
@@ -61,6 +63,11 @@ pub struct HwSpec {
     pub meter_interval_s: f64,
     /// NVML polling interval, s (the paper's profilers poll ~10 Hz).
     pub nvml_interval_s: f64,
+    /// Cluster topology: node boundaries, link tiers, heterogeneous fleet.
+    /// `None` is the legacy flat view — a single node whose only link tier
+    /// is derived from the `link_*`/`coll_*` fields above — and is
+    /// bit-identical to the pre-topology code path.
+    pub topology: Option<Topology>,
 }
 
 impl Default for HwSpec {
@@ -91,6 +98,7 @@ impl Default for HwSpec {
             cpu_mem_clock_ghz: 1.60,
             meter_interval_s: 1.0,
             nvml_interval_s: 0.1,
+            topology: None,
         }
     }
 }
@@ -99,6 +107,49 @@ impl HwSpec {
     /// The paper's testbed: 4x RTX A6000 over PCIe 4.0 + EPYC 7543P.
     pub fn a6000_testbed() -> Self {
         Self::default()
+    }
+
+    /// The legacy flat link as a `LinkSpec` (wire energy stays folded into
+    /// `gpu_comm_w`, so `energy_per_byte` is zero — this is what keeps the
+    /// tiered cost formulas bit-identical to the flat ones).
+    pub fn flat_link(&self) -> LinkSpec {
+        LinkSpec {
+            bw: self.link_bw,
+            step_latency: self.link_step_latency,
+            base_latency: self.coll_base_latency,
+            energy_per_byte: 0.0,
+        }
+    }
+
+    /// Effective topology: the configured cluster topology, or the flat
+    /// single-node single-tier view derived from the legacy link fields.
+    pub fn topo(&self) -> Topology {
+        self.topology.clone().unwrap_or_else(|| Topology::single_node(self.flat_link()))
+    }
+
+    /// A multi-node fleet: `nodes × gpus_per_node` ranks with the given
+    /// intra/inter tiers and an optional heterogeneous per-rank fleet
+    /// (cycled across ranks when shorter than the mesh). Base per-GPU
+    /// constants stay at the A6000 testbed values; per-rank `GpuSpec`s
+    /// override compute throughput and idle/peak power.
+    pub fn cluster_testbed(
+        nodes: usize,
+        gpus_per_node: usize,
+        intra: LinkTier,
+        inter: LinkTier,
+        fleet: &[GpuSpec],
+    ) -> Self {
+        let num = nodes.max(1) * gpus_per_node.max(1);
+        let ranks: Vec<GpuSpec> = if fleet.is_empty() {
+            Vec::new()
+        } else {
+            (0..num).map(|r| fleet[r % fleet.len()]).collect()
+        };
+        HwSpec {
+            num_gpus: num,
+            topology: Some(Topology::multi_node(gpus_per_node.max(1), intra, inter).with_fleet(ranks)),
+            ..HwSpec::default()
+        }
     }
 
     /// An alternative testbed for the cross-hardware extension study
@@ -132,6 +183,7 @@ impl HwSpec {
             cpu_mem_clock_ghz: 2.4,
             meter_interval_s: 1.0,
             nvml_interval_s: 0.1,
+            topology: None,
         }
     }
 }
@@ -245,6 +297,32 @@ mod tests {
         assert!(hw.cpu_idle_w < hw.cpu_max_w);
         assert!(hw.link_bw < hw.gpu_mem_bw);
         assert!(hw.psu_loss_frac > 0.0 && hw.psu_loss_frac < 0.2);
+    }
+
+    #[test]
+    fn flat_topology_mirrors_legacy_link_fields() {
+        let hw = HwSpec::default();
+        let topo = hw.topo();
+        assert_eq!(topo.intra, hw.flat_link());
+        assert_eq!(topo.inter, hw.flat_link());
+        assert!(!topo.spans(0, hw.num_gpus));
+        assert!(topo.homogeneous());
+        assert_eq!(hw.flat_link().energy_per_byte, 0.0);
+    }
+
+    #[test]
+    fn cluster_testbed_builds_the_mesh() {
+        let fleet = [GpuSpec::a6000(), GpuSpec::h100()];
+        let hw = HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &fleet);
+        assert_eq!(hw.num_gpus, 4);
+        let topo = hw.topo();
+        assert!(topo.spans(0, 4));
+        assert_eq!(topo.nodes_spanned(0, 4), 2);
+        // Fleet cycles across ranks.
+        assert_eq!(topo.gpu(0).unwrap().name, "a6000");
+        assert_eq!(topo.gpu(1).unwrap().name, "h100");
+        assert_eq!(topo.gpu(3).unwrap().name, "h100");
+        assert!(!topo.homogeneous());
     }
 
     #[test]

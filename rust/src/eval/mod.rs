@@ -1,11 +1,13 @@
 //! Evaluation protocols: train/test splits, k-fold CV, leave-one-out
 //! generalization (variant / batch size / family), MAPE scoring, the
 //! Spearman feature-correlation analysis behind Figure 7, the parallel
-//! scenario sweep engine (`sweep`), and the serving-scenario evaluation
-//! over the trace-driven simulator (`serving`).
+//! scenario sweep engine (`sweep`), the serving-scenario evaluation over
+//! the trace-driven simulator (`serving`), and the energy-aware strategy
+//! autotuner (`tune`).
 
 pub mod serving;
 pub mod sweep;
+pub mod tune;
 
 use std::collections::{BTreeMap, BTreeSet};
 

@@ -1,0 +1,324 @@
+//! Energy-aware strategy autotuner (`piep tune`, DESIGN.md §11).
+//!
+//! Given a workload (model, prompt/output lengths), a fleet (`HwSpec` with
+//! an optional cluster topology), and an optional latency SLO, the tuner
+//! searches strategy × degree × batch over the `util::par` pool, scores
+//! each candidate's predicted J/token, J/request, and decode latency on
+//! the simulation substrate, and reports:
+//!
+//! * every scored candidate (VRAM-gated by `workload::runnable`),
+//! * the SLO-feasible **Pareto front** over (J/token, ms/token) — the
+//!   deployments no other candidate beats on both energy and latency,
+//! * the **argmin** deployments by J/token and by J/request.
+//!
+//! Candidates lower once through the shared `plan::PlanCache` and replay
+//! the cached plan across the repeated scoring passes (only the stochastic
+//! event-engine execution repeats). Scores are seeded means, so the tuner
+//! is deterministic per seed and bit-identical across thread counts — the
+//! proptests pin its argmin to an exhaustive serial sweep.
+
+use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use crate::models;
+use crate::plan::PlanCache;
+use crate::simulator::simulate_run_planned;
+use crate::util::par;
+use crate::util::stats;
+use crate::workload;
+
+/// Tuner search space + scoring options.
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    pub hw: HwSpec,
+    pub knobs: SimKnobs,
+    pub model: String,
+    /// GPU counts to consider (each further factorized into hybrids).
+    pub gpu_counts: Vec<usize>,
+    /// Batch-size knob of the search.
+    pub batches: Vec<usize>,
+    pub seq_in: usize,
+    pub seq_out: usize,
+    /// Repeated seeded passes averaged per candidate.
+    pub passes: usize,
+    pub base_seed: u64,
+    /// Optional latency SLO: decode ms per generated token (per sequence).
+    pub slo_ms_per_token: Option<f64>,
+    /// Restrict the strategy axis (None ⇒ all pure + hybrid candidates).
+    pub strategies: Option<Vec<Parallelism>>,
+    /// Worker threads over the candidate axis (0 ⇒ available cores).
+    pub threads: usize,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions {
+            hw: HwSpec::default(),
+            knobs: SimKnobs::default(),
+            model: "Vicuna-7B".into(),
+            gpu_counts: vec![2, 4],
+            batches: vec![8, 16, 32],
+            seq_in: 128,
+            seq_out: 512,
+            passes: 3,
+            base_seed: 0x70E5, // "TUNE"
+            slo_ms_per_token: None,
+            strategies: None,
+            threads: 0,
+        }
+    }
+}
+
+/// One scored deployment candidate.
+#[derive(Debug, Clone)]
+pub struct TuneCandidate {
+    pub parallelism: Parallelism,
+    pub gpus: usize,
+    pub batch: usize,
+    /// `RunConfig::key` of the deployment (stable identity).
+    pub key: String,
+    /// Mean energy per generated token, J.
+    pub j_per_token: f64,
+    /// Mean energy per request (batch element), J.
+    pub j_per_request: f64,
+    /// Mean decode latency per generated token (per sequence), ms.
+    pub ms_per_token: f64,
+    /// Mean full-run wall time, s.
+    pub wall_s: f64,
+    /// Sync-wait share of communication energy.
+    pub sync_share: f64,
+    /// Does the candidate meet the latency SLO (always true without one)?
+    pub meets_slo: bool,
+}
+
+/// Tuner outcome: all candidates plus the derived fronts.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    /// Every scored candidate, sorted by J/token ascending (key-stable
+    /// tie-break).
+    pub candidates: Vec<TuneCandidate>,
+    /// SLO-feasible Pareto front over (J/token, ms/token), J/token
+    /// ascending.
+    pub pareto: Vec<TuneCandidate>,
+    /// SLO-feasible argmin by J/token.
+    pub argmin_j_token: Option<TuneCandidate>,
+    /// SLO-feasible argmin by J/request.
+    pub argmin_j_request: Option<TuneCandidate>,
+}
+
+/// Enumerate the search grid: (parallelism, gpus, batch), VRAM-gated.
+pub fn tune_grid(opts: &TuneOptions) -> Vec<RunConfig> {
+    let spec = models::by_name(&opts.model).unwrap_or_else(|| panic!("unknown model {}", opts.model));
+    let mut out = Vec::new();
+    for &g in &opts.gpu_counts {
+        let pars = match &opts.strategies {
+            Some(list) => list.clone(),
+            None => workload::deployment_candidates(g),
+        };
+        for par in pars {
+            if !workload::runnable(&spec, par, g, &opts.hw) {
+                continue;
+            }
+            for &batch in &opts.batches {
+                let mut cfg = RunConfig::new(&opts.model, par, g, batch).with_seq_out(opts.seq_out);
+                cfg.seq_in = opts.seq_in;
+                out.push(cfg);
+            }
+        }
+    }
+    out
+}
+
+/// Score one candidate: seeded repeated passes over the cached plan.
+fn score(cfg: &RunConfig, opts: &TuneOptions, cache: &PlanCache) -> TuneCandidate {
+    let mut jt = Vec::with_capacity(opts.passes);
+    let mut jr = Vec::with_capacity(opts.passes);
+    let mut ms = Vec::with_capacity(opts.passes);
+    let mut wall = Vec::with_capacity(opts.passes);
+    let (mut sync_j, mut comm_j) = (0.0f64, 0.0f64);
+    for pass in 0..opts.passes.max(1) {
+        let seeded = cfg.clone().with_seed(opts.base_seed ^ (pass as u64 + 1));
+        let plan = cache.get_or_lower(&seeded, &opts.hw, &opts.knobs);
+        let r = simulate_run_planned(&seeded, &opts.hw, &opts.knobs, &plan);
+        jt.push(r.energy_per_token_j());
+        jr.push(r.true_total_j / cfg.batch.max(1) as f64);
+        ms.push(r.time_per_token_s() * 1e3);
+        wall.push(r.wall_s);
+        sync_j += r.sync_wait_j();
+        comm_j += r.sync_wait_j() + r.comm_transfer_j();
+    }
+    let ms_per_token = stats::mean(&ms);
+    TuneCandidate {
+        parallelism: cfg.parallelism,
+        gpus: cfg.gpus,
+        batch: cfg.batch,
+        key: cfg.key(),
+        j_per_token: stats::mean(&jt),
+        j_per_request: stats::mean(&jr),
+        ms_per_token,
+        wall_s: stats::mean(&wall),
+        sync_share: if comm_j > 0.0 { sync_j / comm_j } else { 0.0 },
+        meets_slo: opts.slo_ms_per_token.map_or(true, |slo| ms_per_token <= slo),
+    }
+}
+
+/// Non-dominated filter over (J/token, ms/token) on a J-token-sorted list:
+/// a candidate is on the front iff it is strictly faster than everything
+/// cheaper than it.
+fn pareto_front(sorted: &[TuneCandidate]) -> Vec<TuneCandidate> {
+    let mut front: Vec<TuneCandidate> = Vec::new();
+    let mut best_ms = f64::INFINITY;
+    for c in sorted.iter().filter(|c| c.meets_slo) {
+        if c.ms_per_token < best_ms {
+            best_ms = c.ms_per_token;
+            front.push(c.clone());
+        }
+    }
+    front
+}
+
+/// Run the tuner over the full grid (parallel over the `util::par` pool;
+/// deterministic — the pool only reorders wall-clock, not results).
+pub fn run_tune(opts: &TuneOptions) -> TuneResult {
+    let grid = tune_grid(opts);
+    let cache = PlanCache::new();
+    let mut candidates = par::par_map(&grid, opts.threads, |cfg| score(cfg, opts, &cache));
+    candidates.sort_by(|a, b| {
+        a.j_per_token
+            .total_cmp(&b.j_per_token)
+            .then_with(|| a.key.cmp(&b.key))
+    });
+    let pareto = pareto_front(&candidates);
+    let argmin_j_token = candidates.iter().find(|c| c.meets_slo).cloned();
+    let argmin_j_request = candidates
+        .iter()
+        .filter(|c| c.meets_slo)
+        .min_by(|a, b| a.j_per_request.total_cmp(&b.j_per_request).then_with(|| a.key.cmp(&b.key)))
+        .cloned();
+    TuneResult {
+        candidates,
+        pareto,
+        argmin_j_token,
+        argmin_j_request,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LinkTier;
+    use crate::config::Strategy;
+
+    fn tiny_opts() -> TuneOptions {
+        TuneOptions {
+            knobs: SimKnobs {
+                sim_decode_steps: 4,
+                ..SimKnobs::default()
+            },
+            gpu_counts: vec![2, 4],
+            batches: vec![8, 32],
+            passes: 2,
+            ..TuneOptions::default()
+        }
+    }
+
+    #[test]
+    fn grid_covers_pure_and_hybrid_candidates() {
+        let grid = tune_grid(&tiny_opts());
+        assert!(grid.iter().any(|c| c.parallelism == Parallelism::Tensor && c.gpus == 2));
+        assert!(grid.iter().any(|c| c.parallelism.is_hybrid() && c.gpus == 4));
+        // 2 GPUs admit no hybrids.
+        assert!(grid.iter().all(|c| c.gpus != 2 || !c.parallelism.is_hybrid()));
+    }
+
+    #[test]
+    fn tuner_is_deterministic_across_thread_counts() {
+        let opts = tiny_opts();
+        let a = run_tune(&TuneOptions { threads: 1, ..opts.clone() });
+        let b = run_tune(&TuneOptions { threads: 4, ..opts });
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.j_per_token, y.j_per_token);
+            assert_eq!(x.ms_per_token, y.ms_per_token);
+        }
+        assert_eq!(
+            a.argmin_j_token.as_ref().map(|c| c.key.clone()),
+            b.argmin_j_token.as_ref().map(|c| c.key.clone())
+        );
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated_and_contains_argmin() {
+        let res = run_tune(&tiny_opts());
+        assert!(!res.candidates.is_empty());
+        let front = &res.pareto;
+        assert!(!front.is_empty());
+        // Front sorted by J/token ascending, ms strictly descending.
+        for w in front.windows(2) {
+            assert!(w[0].j_per_token <= w[1].j_per_token);
+            assert!(w[0].ms_per_token > w[1].ms_per_token);
+        }
+        // No candidate dominates a front member on both axes.
+        for f in front {
+            for c in &res.candidates {
+                assert!(
+                    !(c.j_per_token < f.j_per_token && c.ms_per_token < f.ms_per_token),
+                    "{} dominates front member {}",
+                    c.key,
+                    f.key
+                );
+            }
+        }
+        let argmin = res.argmin_j_token.unwrap();
+        assert_eq!(front[0].key, argmin.key, "cheapest front member is the argmin");
+    }
+
+    #[test]
+    fn slo_filters_slow_deployments() {
+        let unconstrained = run_tune(&tiny_opts());
+        // Pick an SLO between the fastest and slowest candidates so it
+        // actually filters.
+        let ms: Vec<f64> = unconstrained.candidates.iter().map(|c| c.ms_per_token).collect();
+        let (lo, hi) = (stats::min(&ms), stats::max(&ms));
+        assert!(hi > lo);
+        let slo = 0.5 * (lo + hi);
+        let constrained = run_tune(&TuneOptions {
+            slo_ms_per_token: Some(slo),
+            ..tiny_opts()
+        });
+        let feasible = constrained.candidates.iter().filter(|c| c.meets_slo).count();
+        assert!(feasible > 0 && feasible < constrained.candidates.len());
+        let argmin = constrained.argmin_j_token.unwrap();
+        assert!(argmin.ms_per_token <= slo);
+        // Constraining can only cost energy at the argmin.
+        assert!(argmin.j_per_token >= unconstrained.argmin_j_token.unwrap().j_per_token);
+    }
+
+    #[test]
+    fn two_node_fleet_tunes_end_to_end() {
+        let hw = HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &[]);
+        let opts = TuneOptions {
+            hw,
+            strategies: Some(vec![
+                Parallelism::Tensor,
+                Parallelism::Pipeline,
+                Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap(),
+            ]),
+            gpu_counts: vec![4],
+            batches: vec![8, 16],
+            passes: 2,
+            knobs: SimKnobs {
+                sim_decode_steps: 4,
+                ..SimKnobs::default()
+            },
+            ..TuneOptions::default()
+        };
+        let res = run_tune(&opts);
+        // 3 strategies × 2 batches, all runnable for Vicuna-7B on 4 ranks.
+        assert_eq!(res.candidates.len(), 6);
+        for c in &res.candidates {
+            assert!(c.j_per_token.is_finite() && c.j_per_token > 0.0, "{}", c.key);
+            assert!(c.ms_per_token > 0.0 && c.wall_s > 0.0);
+        }
+        assert!(res.argmin_j_token.is_some() && res.argmin_j_request.is_some());
+    }
+}

@@ -77,6 +77,13 @@ pub mod module_feat {
     pub const MULTIPLICITY: usize = super::RUN_FEATURES + 7;
     /// 1.0 on synchronization-wait leaves, 0.0 elsewhere.
     pub const IS_SYNC: usize = super::RUN_FEATURES + 8;
+    /// `ln(1 + nodes − 1)` on comm leaves: how many nodes the mesh spans
+    /// (0.0 on the flat single-node testbed — tier descriptors from the
+    /// cluster topology, DESIGN.md §11).
+    pub const TIER_NODES: usize = super::RUN_FEATURES + 9;
+    /// `ln(1 + intra_bw/inter_bw − 1)` on comm leaves: how much slower the
+    /// boundary-crossing ring steps run (0.0 when single-tier).
+    pub const TIER_BW_RATIO: usize = super::RUN_FEATURES + 10;
 }
 
 /// Indices of the model-structure features (for the Table-9 ablation).
@@ -218,6 +225,10 @@ pub fn module_features(
             ModuleKind::P2PTransfer => 1.0,
             _ => 0.0,
         };
+        // Cluster-tier descriptors: zero on the flat single-node testbed,
+        // so pre-topology feature vectors are unchanged.
+        x[module_feat::TIER_NODES] = logf(r.nodes as f64 - 1.0);
+        x[module_feat::TIER_BW_RATIO] = logf(r.tier_bw_ratio - 1.0);
         if leaf.part == LeafPart::Transfer {
             // Payload-driven descriptors belong to the transfer phase.
             let payload = match kind {
@@ -362,6 +373,36 @@ mod tests {
     #[test]
     fn feature_names_match_count() {
         assert_eq!(RUN_FEATURE_NAMES.len(), RUN_FEATURES);
+    }
+
+    #[test]
+    fn tier_slots_zero_on_flat_runs_and_set_on_multi_node_runs() {
+        use crate::cluster::LinkTier;
+        let flat = module_features(
+            &record(),
+            Leaf::transfer(ModuleKind::AllReduce),
+            64.0,
+            None,
+            FeatureOpts::default(),
+        );
+        assert_eq!(flat[module_feat::TIER_NODES], 0.0);
+        assert_eq!(flat[module_feat::TIER_BW_RATIO], 0.0);
+
+        let hw = HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &[]);
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8).with_seed(1);
+        let r = simulate_run(&cfg, &hw, &SimKnobs::default());
+        let tiered = module_features(
+            &r,
+            Leaf::transfer(ModuleKind::AllReduce),
+            64.0,
+            None,
+            FeatureOpts::default(),
+        );
+        assert!(tiered[module_feat::TIER_NODES] > 0.0);
+        assert!(tiered[module_feat::TIER_BW_RATIO] > 0.0);
+        // Compute leaves carry no tier descriptors.
+        let mlp = module_features(&r, Leaf::compute(ModuleKind::Mlp), 32.0, None, FeatureOpts::default());
+        assert_eq!(mlp[module_feat::TIER_NODES], 0.0);
     }
 
     #[test]

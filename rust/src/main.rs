@@ -6,9 +6,10 @@
 //!   predict     per-run prediction demo on a config
 //!   sweep       parallel sweep over the full paper + hybrid scenario grid
 //!   serve       trace-driven serving: continuous batching + per-request energy
+//!   tune        energy-aware strategy autotuner over a (multi-node) fleet
 //!   reproduce   regenerate paper tables/figures (`--all` or ids)
 //!   figure2..8, table2..9   individual experiments
-//!   crosshw, sensitivity, ablate-ring, parallelism-matrix, serving
+//!   crosshw, sensitivity, ablate-ring, parallelism-matrix, serving, tune-study
 //!               extension studies beyond the paper's evaluation
 //!   runtime     validate AOT artifacts, exercise the prediction hot path
 //!   bench-sim   quick simulator throughput numbers
@@ -303,7 +304,23 @@ fn cmd_sweep(args: &Args) {
                 Some(_) => println!(
                     "baseline workload differs (passes/steps/configs); regression gate skipped"
                 ),
-                None => println!("baseline has no wall-times yet; regression gate dormant"),
+                // A baseline without measurements disarms the gate. That is
+                // only legitimate for the committed seed on a fresh cache
+                // (CI passes --allow-null-baseline for exactly that case);
+                // a *restored* null baseline means the gate is
+                // misconfigured — fail loudly instead of silently skipping.
+                None if args.has("allow-null-baseline") => {
+                    println!("baseline has no wall-times yet; regression gate dormant (first run)")
+                }
+                None => {
+                    eprintln!(
+                        "sweep --baseline: baseline has null wall-times, so the >2x regression \
+                         gate cannot arm. If this is the first run on a fresh cache (the \
+                         committed seed), pass --allow-null-baseline; otherwise regenerate the \
+                         baseline with `piep sweep --bench --save-bench BENCH_sweep.json`."
+                    );
+                    std::process::exit(2);
+                }
             }
         }
         return;
@@ -356,6 +373,165 @@ fn cmd_sweep(args: &Args) {
     }
     let out = args.get_or("out", "reports");
     for (t, slug) in [(&summary, "sweep_summary"), (&per_config, "sweep_per_config")] {
+        match t.save_csv(out, slug) {
+            Ok(path) => println!("  -> {path}"),
+            Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
+        }
+    }
+}
+
+fn cmd_tune(args: &Args) {
+    use piep::cluster::{GpuSpec, LinkTier};
+    use piep::config::{HwSpec, Strategy};
+    use piep::eval::tune::{run_tune, TuneOptions};
+    use piep::util::table::{fnum, pct, Table};
+
+    let smoke = args.has("smoke");
+
+    // ---- fleet ----
+    // --nodes/--gpus-per-node + --intra/--inter tiers + --fleet GPU classes
+    // describe a cluster; without --nodes the flat single-node testbed is
+    // used. --smoke pins the CI grid: TP/PP/tp2xpp on a 2-node NVLink+IB
+    // fleet.
+    let nodes = args.get_usize("nodes", if smoke { 2 } else { 1 });
+    let default_gpn = if smoke { 2 } else { HwSpec::default().num_gpus };
+    let gpn = args.get_usize("gpus-per-node", default_gpn);
+    // Any explicit fleet-shaping flag (including --nodes 1 / a bare
+    // --gpus-per-node) builds a cluster testbed; only a flagless
+    // non-smoke invocation keeps the default flat box.
+    let cluster_requested = smoke
+        || args.has("nodes")
+        || args.has("gpus-per-node")
+        || args.has("intra")
+        || args.has("inter")
+        || args.has("fleet");
+    let hw = if cluster_requested {
+        let intra = LinkTier::parse(args.get_or("intra", "nvlink")).expect("intra tier (nvlink|pcie|ib)");
+        let inter = LinkTier::parse(args.get_or("inter", "ib")).expect("inter tier (nvlink|pcie|ib)");
+        let fleet: Vec<GpuSpec> = args
+            .get("fleet")
+            .map(|s| {
+                s.split(',')
+                    .map(|name| GpuSpec::parse(name.trim()).unwrap_or_else(|| panic!("unknown GPU class {name}")))
+                    .collect()
+            })
+            .unwrap_or_default();
+        HwSpec::cluster_testbed(nodes, gpn, intra, inter, &fleet)
+    } else {
+        HwSpec::default()
+    };
+
+    // ---- search space ----
+    let model = args.get_or("model", "Vicuna-7B").to_string();
+    let gpu_counts: Vec<usize> = args
+        .get("gpus")
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| {
+            let mut out: Vec<usize> = [2usize, 4, 8].iter().copied().filter(|&g| g <= hw.num_gpus).collect();
+            if out.is_empty() {
+                out.push(hw.num_gpus);
+            }
+            out
+        });
+    let batches: Vec<usize> = args
+        .get("batches")
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| if smoke { vec![8, 16] } else { vec![8, 16, 32] });
+    let strategies = if smoke {
+        Some(vec![
+            piep::config::Parallelism::Tensor,
+            piep::config::Parallelism::Pipeline,
+            piep::config::Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap(),
+        ])
+    } else {
+        args.get("strategies").map(|s| {
+            s.split(',')
+                .map(|l| Parallelism::parse(l.trim()).unwrap_or_else(|| panic!("bad strategy label {l}")))
+                .collect()
+        })
+    };
+
+    let opts = TuneOptions {
+        hw,
+        knobs: SimKnobs {
+            sim_decode_steps: args.get_usize("steps", if smoke { 4 } else { 8 }),
+            ..SimKnobs::default()
+        },
+        model,
+        gpu_counts,
+        batches,
+        seq_in: args.get_usize("seq-in", 128),
+        seq_out: args.get_usize("seq-out", 512),
+        passes: args.get_usize("passes", if smoke { 2 } else { 3 }),
+        base_seed: args.get_u64("seed", 0x70E5),
+        slo_ms_per_token: args.get("slo-ms").and_then(|v| v.parse().ok()),
+        strategies,
+        threads: args.get_usize("threads", 0),
+    };
+
+    eprintln!(
+        "[tune] {} on {} GPUs ({} node(s)): {} batches × gpu counts {:?}{}",
+        opts.model,
+        opts.hw.num_gpus,
+        opts.hw.topo().nodes_spanned(0, opts.hw.num_gpus).max(1),
+        opts.batches.len(),
+        opts.gpu_counts,
+        opts.slo_ms_per_token.map(|s| format!(", SLO {s} ms/token")).unwrap_or_default()
+    );
+    let t0 = std::time::Instant::now();
+    let res = run_tune(&opts);
+    let wall = t0.elapsed();
+
+    let row_of = |c: &piep::eval::tune::TuneCandidate| {
+        vec![
+            c.parallelism.label(),
+            c.gpus.to_string(),
+            c.batch.to_string(),
+            fnum(c.j_per_token, 3),
+            fnum(c.j_per_request, 1),
+            fnum(c.ms_per_token, 2),
+            pct(100.0 * c.sync_share),
+            if c.meets_slo { "yes" } else { "no" }.into(),
+        ]
+    };
+    let headers = ["Strategy", "GPUs", "Batch", "J/token", "J/req", "ms/token", "Sync%", "SLO ok"];
+
+    let mut all = Table::new("Tune — scored deployment candidates (J/token ascending)", &headers);
+    for c in &res.candidates {
+        all.row(row_of(c));
+    }
+    print!("{}", all.render());
+
+    let mut front = Table::new("Tune — Pareto front over (J/token, ms/token), SLO-feasible", &headers);
+    for c in &res.pareto {
+        front.row(row_of(c));
+    }
+    print!("{}", front.render());
+
+    let argmin_headers = ["Objective", "Strategy", "GPUs", "Batch", "J/token", "J/req", "ms/token"];
+    let mut argmin = Table::new("Tune — argmin deployments", &argmin_headers);
+    for (label, c) in [("J/token", &res.argmin_j_token), ("J/request", &res.argmin_j_request)] {
+        if let Some(c) = c {
+            argmin.row(vec![
+                label.into(),
+                c.parallelism.label(),
+                c.gpus.to_string(),
+                c.batch.to_string(),
+                fnum(c.j_per_token, 3),
+                fnum(c.j_per_request, 1),
+                fnum(c.ms_per_token, 2),
+            ]);
+        }
+    }
+    print!("{}", argmin.render());
+    println!(
+        "[tune] {} candidates ({} on the Pareto front) in {wall:?}",
+        res.candidates.len(),
+        res.pareto.len()
+    );
+
+    let out = args.get_or("out", "reports");
+    for (t, slug) in [(&all, "tune_candidates"), (&front, "tune_pareto"), (&argmin, "tune_argmin")] {
         match t.save_csv(out, slug) {
             Ok(path) => println!("  -> {path}"),
             Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
@@ -529,16 +705,17 @@ fn run_experiments(ctx: &mut ReportCtx, ids: &[String]) {
             "ablate-ring" => drop(report::ablate_ring(ctx)),
             "parallelism-matrix" => drop(report::parallelism_matrix(ctx)),
             "serving" => drop(report::serving(ctx)),
+            "tune-study" => drop(report::tune_study(ctx)),
             other => eprintln!("unknown experiment id: {other}"),
         }
     }
 }
 
-const ALL_EXPERIMENTS: [&str; 20] = [
+const ALL_EXPERIMENTS: [&str; 21] = [
     "figure2", "table2", "table3", "table4", "figure3", "figure4", "figure5", "figure6",
     "table5", "table6", "table7", "table8", "figure7", "figure8", "table9",
     // extension studies (not in the paper's evaluation; see DESIGN.md)
-    "crosshw", "sensitivity", "ablate-ring", "parallelism-matrix", "serving",
+    "crosshw", "sensitivity", "ablate-ring", "parallelism-matrix", "serving", "tune-study",
 ];
 
 fn main() {
@@ -550,6 +727,7 @@ fn main() {
         "predict" => cmd_predict(&args),
         "sweep" => cmd_sweep(&args),
         "serve" => cmd_serve(&args),
+        "tune" => cmd_tune(&args),
         "runtime" => cmd_runtime(&args),
         "bench-sim" => cmd_bench_sim(&args),
         "reproduce" => {
@@ -566,7 +744,10 @@ fn main() {
         }
         id if id.starts_with("figure")
             || id.starts_with("table")
-            || matches!(id, "crosshw" | "sensitivity" | "ablate-ring" | "parallelism-matrix" | "serving") => {
+            || matches!(
+                id,
+                "crosshw" | "sensitivity" | "ablate-ring" | "parallelism-matrix" | "serving" | "tune-study"
+            ) => {
             let out = args.get_or("out", "reports").to_string();
             let mut ctx = ReportCtx::new(&out, campaign_from(&args));
             run_experiments(&mut ctx, &[id.to_string()]);
@@ -579,8 +760,8 @@ fn main() {
                  \x20 reproduce [--all | ids…]   regenerate paper tables/figures into --out\n\
                  \x20 figure2..figure8           individual figure harnesses\n\
                  \x20 table2..table9             individual table harnesses\n\
-                 \x20 crosshw | sensitivity | ablate-ring | parallelism-matrix | serving\n\
-                 \x20                            extension studies (see DESIGN.md)\n\
+                 \x20 crosshw | sensitivity | ablate-ring | parallelism-matrix | serving |\n\
+                 \x20 tune-study                 extension studies (see DESIGN.md)\n\
                  \x20 profile                    profile one configuration (passes × seeds)\n\
                  \x20 train                      fit PIE-P on a family, report 3-fold CV MAPE\n\
                  \x20 predict                    leave-variant-out prediction demo\n\
@@ -592,6 +773,12 @@ fn main() {
                  \x20                            poisson|bursty|diurnal, --policy fcfs|spf,\n\
                  \x20                            --requests N --rate RPS --max-batch N --smoke\n\
                  \x20                            --save FILE)\n\
+                 \x20 tune                       energy-aware strategy autotuner: search strategy\n\
+                 \x20                            x degree x batch on a fleet, emit Pareto front +\n\
+                 \x20                            argmin tables (--nodes N --gpus-per-node N\n\
+                 \x20                            --intra nvlink|pcie|ib --inter nvlink|pcie|ib\n\
+                 \x20                            --fleet a6000,h100,l40 --gpus 2,4 --batches 8,16\n\
+                 \x20                            --slo-ms F --strategies tp,pp,tp2xpp --smoke)\n\
                  \x20 runtime                    validate AOT artifacts, run the native hot path\n\
                  \x20 bench-sim                  simulator throughput check\n\n\
                  FLAGS\n\

@@ -50,13 +50,16 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
     }
 
     // Terminal collation: replicas rendezvous once, then AllGather their
-    // final output logits.
+    // final output logits — bottlenecked by the inter-node tier when the
+    // replica ring crosses nodes.
     let mut comm_bytes_per_step = 0.0;
     if g > 1 {
+        let topo = hw.topo();
         let payload = spec.allgather_payload_bytes(shard);
-        let cost = collective::allgather(hw, g, payload);
-        b.collective(0..g, ModuleKind::AllGather, 0, sim_steps as u32, cost.transfer_s, false, WaitRecord::All);
-        comm_bytes_per_step = cost.bytes_moved / sim_steps as f64;
+        let t = collective::allgather_ring(&topo, 0, g, g, payload);
+        let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        b.collective_tiered(0..g, ModuleKind::AllGather, 0, sim_steps as u32, xfer, wire, false, WaitRecord::All);
+        comm_bytes_per_step = t.cost.bytes_moved / sim_steps as f64;
     }
 
     b.finish(sim_steps, comm_bytes_per_step, false)

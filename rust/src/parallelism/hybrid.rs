@@ -37,13 +37,14 @@ use super::pipeline::stage_layers;
 /// Lowering context shared by the mesh emitters.
 struct Mesh<'a> {
     spec: &'a ModelSpec,
-    hw: &'a HwSpec,
     perf: PerfModel,
+    topo: crate::cluster::Topology,
 }
 
 impl Mesh<'_> {
     /// Group-local ring AllReduce rendezvous (jittered launch desync — the
-    /// tensor planner's synchronization point). Returns bytes moved.
+    /// tensor planner's synchronization point); hierarchical when the
+    /// group spans nodes. Returns bytes moved.
     fn allreduce(
         &self,
         b: &mut PlanBuilder,
@@ -56,9 +57,10 @@ impl Mesh<'_> {
         if n <= 1 {
             return 0.0;
         }
-        let cost = collective::allreduce(self.hw, n, payload);
-        b.collective(ranks, ModuleKind::AllReduce, layer, step, cost.transfer_s, true, WaitRecord::All);
-        cost.bytes_moved
+        let t = collective::allreduce_hier(&self.topo, ranks.start, n, payload);
+        let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        b.collective_tiered(ranks, ModuleKind::AllReduce, layer, step, xfer, wire, true, WaitRecord::All);
+        t.cost.bytes_moved
     }
 
     /// Group-local barrier + ring AllGather (the logits / replica collation
@@ -74,13 +76,14 @@ impl Mesh<'_> {
         if n <= 1 {
             return 0.0;
         }
-        let cost = collective::allgather(self.hw, n, payload_per_rank);
-        b.collective(ranks, ModuleKind::AllGather, 0, step, cost.transfer_s, false, WaitRecord::All);
-        cost.bytes_moved
+        let t = collective::allgather_ring(&self.topo, ranks.start, n, n, payload_per_rank);
+        b.collective_tiered(ranks, ModuleKind::AllGather, 0, step, t.cost.transfer_s, t.wire_w, false, WaitRecord::All);
+        t.cost.bytes_moved
     }
 
     /// Terminal cross-replica collation: rendezvous over all ranks, then an
-    /// AllGather whose ring spans the `groups` replica groups.
+    /// AllGather whose ring spans the `groups` replica groups — the
+    /// inter-node tier when those groups live on different nodes.
     fn terminal_collation(
         &self,
         b: &mut PlanBuilder,
@@ -89,9 +92,10 @@ impl Mesh<'_> {
         payload_per_group: f64,
         step: u32,
     ) -> f64 {
-        let cost = collective::allgather(self.hw, groups, payload_per_group);
-        b.collective(0..num_ranks, ModuleKind::AllGather, 0, step, cost.transfer_s, false, WaitRecord::All);
-        cost.bytes_moved
+        let t = collective::allgather_ring(&self.topo, 0, num_ranks, groups, payload_per_group);
+        let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        b.collective_tiered(0..num_ranks, ModuleKind::AllGather, 0, step, xfer, wire, false, WaitRecord::All);
+        t.cost.bytes_moved
     }
 }
 
@@ -113,8 +117,8 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
 
     let mesh = Mesh {
         spec,
-        hw,
         perf: PerfModel::new(hw),
+        topo: hw.topo(),
     };
     let mut b = PlanBuilder::new(g);
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
@@ -211,10 +215,12 @@ fn tp_pp_pass(
                 }
             } else {
                 // Shard-wise boundary edge: rank i of this stage feeds rank
-                // i of the next stage (1/di of the activation tensor each).
-                let cost = collective::p2p(mesh.hw, p2p_payload / di as f64);
-                boundary[mb] = b.send(ranks.clone(), range.end as u16, step, cost.transfer_s);
-                bytes += cost.bytes_moved * di as f64;
+                // i of the next stage (1/di of the activation tensor each);
+                // it pays the inter-node tier when the stage boundary
+                // crosses a node boundary for any shard pair.
+                let t = collective::p2p_range(&mesh.topo, ranks.start, di, ranks.start + di, p2p_payload / di as f64);
+                boundary[mb] = b.send_tiered(ranks.clone(), range.end as u16, step, t.cost.transfer_s, t.wire_w);
+                bytes += t.cost.bytes_moved * di as f64;
             }
         }
     }
@@ -385,8 +391,8 @@ fn pp_group_pass(
             if stage + 1 == stages {
                 b.compute(rank..rank + 1, mesh.perf.logits_decode(spec, micro, 1), ModuleKind::LogitsHead, 0, step);
             } else {
-                let cost = collective::p2p(mesh.hw, payload);
-                boundary[mb] = b.send(rank..rank + 1, range.end as u16, step, cost.transfer_s);
+                let t = collective::p2p_range(&mesh.topo, rank, 1, rank + 1, payload);
+                boundary[mb] = b.send_tiered(rank..rank + 1, range.end as u16, step, t.cost.transfer_s, t.wire_w);
             }
         }
     }

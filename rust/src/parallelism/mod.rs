@@ -49,7 +49,10 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
 
 /// Execute a lowered plan under one run's stochastic conditions: sample
 /// the run-level skew state and (for strategies with jittered collectives)
-/// the launch-desync scale, then drive the event engine.
+/// the launch-desync scale, then drive the event engine. Heterogeneous
+/// fleets (`cluster::GpuSpec` per rank) rescale the sampled rank bias by
+/// each rank's compute throughput — deterministically, after all draws, so
+/// the seed stream matches the homogeneous path exactly.
 pub fn execute_plan(
     plan: &Plan,
     spec: &ModelSpec,
@@ -58,7 +61,10 @@ pub fn execute_plan(
     rng: &mut Rng,
     threads: usize,
 ) -> BuiltRun {
-    let skew = SkewModel::with_complexity(knobs, plan.num_ranks, spec.complexity_factor(), rng);
+    let mut skew = SkewModel::with_complexity(knobs, plan.num_ranks, spec.complexity_factor(), rng);
+    if let Some(scales) = power.fleet_compute_scales(plan.num_ranks) {
+        skew.apply_fleet(&scales);
+    }
     let sync_jitter = if plan.draws_sync_jitter {
         knobs.sync_jitter_s
             * spec.complexity_factor()

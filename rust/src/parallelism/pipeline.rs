@@ -34,6 +34,7 @@ pub fn stage_layers(layers: usize, stages: usize) -> Vec<std::ops::Range<usize>>
 pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
     let g = cfg.gpus;
     let perf = PerfModel::new(hw);
+    let topo = hw.topo();
     let mut b = PlanBuilder::new(g);
 
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
@@ -93,9 +94,10 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
                 if stage + 1 == g {
                     b.compute(stage..stage + 1, perf.logits_decode(spec, micro, 1), ModuleKind::LogitsHead, 0, step);
                 } else {
-                    // Send boundary activations to the next stage.
-                    let cost = collective::p2p(hw, payload);
-                    boundary[mb] = b.send(stage..stage + 1, range.end as u16, step, cost.transfer_s);
+                    // Send boundary activations to the next stage — over
+                    // the inter-node tier when the boundary crosses nodes.
+                    let t = collective::p2p_range(&topo, stage, 1, stage + 1, payload);
+                    boundary[mb] = b.send_tiered(stage..stage + 1, range.end as u16, step, t.cost.transfer_s, t.wire_w);
                 }
             }
         }

@@ -19,19 +19,24 @@ use crate::simulator::timeline::ModuleKind;
 pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
     let g = cfg.gpus;
     let perf = PerfModel::new(hw);
+    let topo = hw.topo();
     let mut b = PlanBuilder::new(g);
     let mut comm_bytes_per_step = 0.0;
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
 
-    // Ring AllReduce rendezvous over all g ranks. Returns bytes moved.
-    let allreduce = |b: &mut PlanBuilder, payload: f64, layer: u16, step: u32| -> f64 {
+    // Ring AllReduce rendezvous over all g ranks — hierarchical when the
+    // mesh spans nodes (intra-node reduce, inter-node exchange, intra-node
+    // broadcast). Returns bytes moved.
+    let topo_ref = &topo;
+    let allreduce = move |b: &mut PlanBuilder, payload: f64, layer: u16, step: u32| -> f64 {
         if g == 1 {
             // No collective is emitted at all on a single GPU.
             return 0.0;
         }
-        let cost = collective::allreduce(hw, g, payload);
-        b.collective(0..g, ModuleKind::AllReduce, layer, step, cost.transfer_s, true, WaitRecord::All);
-        cost.bytes_moved
+        let t = collective::allreduce_hier(topo_ref, 0, g, payload);
+        let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        b.collective_tiered(0..g, ModuleKind::AllReduce, layer, step, xfer, wire, true, WaitRecord::All);
+        t.cost.bytes_moved
     };
 
     // ---- Prefill (step 0): compute-bound pass over the prompt.
@@ -70,10 +75,11 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
         b.compute(0..g, perf.logits_decode(spec, cfg.batch, g), ModuleKind::LogitsHead, 0, step);
         if g > 1 {
             let shard = spec.allgather_payload_bytes(cfg.batch) / g as f64;
-            let cost = collective::allgather(hw, g, shard);
-            b.collective(0..g, ModuleKind::AllGather, 0, step, cost.transfer_s, false, WaitRecord::All);
+            let t = collective::allgather_ring(&topo, 0, g, g, shard);
+            let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+            b.collective_tiered(0..g, ModuleKind::AllGather, 0, step, xfer, wire, false, WaitRecord::All);
             if si == 0 {
-                comm_bytes_per_step += cost.bytes_moved;
+                comm_bytes_per_step += t.cost.bytes_moved;
             }
         }
     }

@@ -105,6 +105,10 @@ pub enum Op {
         layer: u16,
         step: u32,
         transfer_s: f64,
+        /// Extra transfer-phase board power from the link tier's wire
+        /// energy, W (0 on the legacy flat link — see
+        /// `cluster::LinkSpec::energy_per_byte`).
+        wire_w: f64,
         jitter: bool,
         record: WaitRecord,
     },
@@ -116,6 +120,9 @@ pub enum Op {
         layer: u16,
         step: u32,
         transfer_s: f64,
+        /// Extra transfer-phase board power from the link tier's wire
+        /// energy, W (0 on the legacy flat link).
+        wire_w: f64,
         edge: u32,
     },
     /// P2P edge consumer: each rank of `ranks` busy-waits until edge
@@ -227,7 +234,8 @@ impl PlanBuilder {
         });
     }
 
-    /// Rendezvous collective (or, with `transfer_s == 0`, a barrier).
+    /// Rendezvous collective (or, with `transfer_s == 0`, a barrier) over
+    /// the legacy flat link (no wire-power term).
     #[allow(clippy::too_many_arguments)]
     pub fn collective(
         &mut self,
@@ -239,19 +247,43 @@ impl PlanBuilder {
         jitter: bool,
         record: WaitRecord,
     ) {
+        self.collective_tiered(ranks, module, layer, step, transfer_s, 0.0, jitter, record);
+    }
+
+    /// Rendezvous collective with an explicit link-tier wire power (the
+    /// topology-aware lowering path; `wire_w == 0` reproduces `collective`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn collective_tiered(
+        &mut self,
+        ranks: Range<usize>,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        transfer_s: f64,
+        wire_w: f64,
+        jitter: bool,
+        record: WaitRecord,
+    ) {
         self.ops.push(Op::Collective {
             ranks: RankRange::of(ranks),
             module,
             layer,
             step,
             transfer_s,
+            wire_w,
             jitter,
             record,
         });
     }
 
-    /// P2P send from `ranks`; returns the edge id for the matching `recv`.
+    /// P2P send from `ranks` over the legacy flat link; returns the edge id
+    /// for the matching `recv`.
     pub fn send(&mut self, ranks: Range<usize>, layer: u16, step: u32, transfer_s: f64) -> u32 {
+        self.send_tiered(ranks, layer, step, transfer_s, 0.0)
+    }
+
+    /// P2P send with an explicit link-tier wire power.
+    pub fn send_tiered(&mut self, ranks: Range<usize>, layer: u16, step: u32, transfer_s: f64, wire_w: f64) -> u32 {
         let edge = self.num_edges;
         self.num_edges += 1;
         self.ops.push(Op::Send {
@@ -259,6 +291,7 @@ impl PlanBuilder {
             layer,
             step,
             transfer_s,
+            wire_w,
             edge,
         });
         edge

@@ -129,6 +129,8 @@ pub fn run_to_json(r: &RunRecord) -> Json {
         ("wait_samples", vecf(&r.wait_samples)),
         ("comm_bytes_per_step", num(r.comm_bytes_per_step)),
         ("host_activity", num(r.host_activity)),
+        ("nodes", num(r.nodes as f64)),
+        ("tier_bw_ratio", num(r.tier_bw_ratio)),
     ])
 }
 
@@ -199,6 +201,10 @@ pub fn run_from_json(j: &Json) -> Result<RunRecord, String> {
         wait_max_s: wx,
         comm_bytes_per_step: getf(j, "comm_bytes_per_step")?,
         host_activity: getf(j, "host_activity")?,
+        // Topology descriptors: absent in pre-topology datasets, which were
+        // all single-node single-tier.
+        nodes: j.get("nodes").and_then(Json::as_f64).unwrap_or(1.0) as usize,
+        tier_bw_ratio: j.get("tier_bw_ratio").and_then(Json::as_f64).unwrap_or(1.0),
     })
 }
 
@@ -429,6 +435,8 @@ mod tests {
             assert!((a.unattributed_j - b.unattributed_j).abs() < 1e-9);
             assert_eq!(a.wait_samples.len(), b.wait_samples.len());
             assert_eq!(a.gpu_util, b.gpu_util);
+            assert_eq!(a.nodes, b.nodes);
+            assert_eq!(a.tier_bw_ratio, b.tier_bw_ratio);
         }
         // Sync DB rebuilt identically.
         assert_eq!(loaded.sync_db.groups(), ds.sync_db.groups());

@@ -198,6 +198,53 @@ pub fn parallelism_matrix(ctx: &mut ReportCtx) -> Table {
     t
 }
 
+/// Topology/tuner study (DESIGN.md §11): run the energy-aware strategy
+/// autotuner on the flat single-node testbed and on a 2-node NVLink +
+/// InfiniBand fleet, and tabulate each fleet's Pareto front — showing how
+/// the node boundary reshapes the energy-optimal deployment.
+pub fn tune_study(ctx: &mut ReportCtx) -> Table {
+    use crate::cluster::LinkTier;
+    use crate::eval::tune::{run_tune, TuneOptions};
+
+    let mut t = Table::new(
+        "Extension — energy-aware autotuner across fleets (Vicuna-7B)",
+        &["Fleet", "Strategy", "GPUs", "Batch", "J/token", "ms/token", "Pareto", "Argmin"],
+    );
+    let fleets: [(&str, HwSpec); 2] = [
+        ("flat-4gpu", ctx.campaign.hw.clone()),
+        ("2node-nvl-ib", HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &[])),
+    ];
+    for (label, hw) in fleets {
+        let opts = TuneOptions {
+            hw,
+            knobs: ctx.campaign.knobs.clone(),
+            passes: ctx.campaign.passes.clamp(1, 3),
+            base_seed: ctx.campaign.base_seed,
+            threads: ctx.campaign.threads,
+            gpu_counts: vec![2, 4],
+            batches: vec![8, 32],
+            ..TuneOptions::default()
+        };
+        let res = run_tune(&opts);
+        let argmin_key = res.argmin_j_token.as_ref().map(|c| c.key.clone());
+        let front: std::collections::BTreeSet<String> = res.pareto.iter().map(|c| c.key.clone()).collect();
+        for c in &res.candidates {
+            t.row(vec![
+                label.to_string(),
+                c.parallelism.label(),
+                c.gpus.to_string(),
+                c.batch.to_string(),
+                fnum(c.j_per_token, 3),
+                fnum(c.ms_per_token, 2),
+                if front.contains(&c.key) { "*" } else { "" }.into(),
+                if argmin_key.as_deref() == Some(c.key.as_str()) { "<-" } else { "" }.into(),
+            ]);
+        }
+    }
+    ctx.emit(&t, "ext_tune");
+    t
+}
+
 /// Serving table (DESIGN.md §10): policy × strategy × trace family →
 /// per-request energy (p50/p99), energy per generated token, continuous-
 /// batching occupancy, and the sync-wait share of communication energy —
@@ -294,6 +341,19 @@ mod tests {
             let p50: f64 = row[3].parse().unwrap();
             let p99: f64 = row[4].parse().unwrap();
             assert!(p50 > 0.0 && p99 >= p50, "{}: p50 {p50} p99 {p99}", row[0]);
+        }
+    }
+
+    #[test]
+    fn tune_study_scores_both_fleets() {
+        let mut ctx = quick_ctx("target/test-reports");
+        let t = tune_study(&mut ctx);
+        for fleet in ["flat-4gpu", "2node-nvl-ib"] {
+            assert!(t.rows.iter().any(|r| r[0] == fleet), "{fleet} missing");
+            // Each fleet has exactly one argmin marker and ≥1 Pareto member.
+            let argmins = t.rows.iter().filter(|r| r[0] == fleet && r[7] == "<-").count();
+            assert_eq!(argmins, 1, "{fleet}");
+            assert!(t.rows.iter().any(|r| r[0] == fleet && r[6] == "*"), "{fleet}");
         }
     }
 

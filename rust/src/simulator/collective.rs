@@ -3,9 +3,22 @@
 //! Ring AllReduce: 2(n−1) steps (ReduceScatter then AllGather), each moving
 //! payload/n bytes per rank over the slowest link, plus per-step launch/DMA
 //! latency and a per-call base latency. AllGather: (n−1) steps. P2P: single
-//! hop. These are the standard α–β cost models (Xiong et al., 2024), with
-//! the constants in `HwSpec`.
+//! hop. These are the standard α–β cost models (Xiong et al., 2024),
+//! parameterized by a `cluster::LinkSpec` per interconnect tier; the legacy
+//! `HwSpec`-based entry points delegate to the flat link derived from the
+//! `link_*` fields and are bit-identical to the historical formulas.
+//!
+//! The `*_hier` variants consult a `cluster::Topology`: rank ranges inside
+//! one node pay the intra-node tier with the flat formula; ranges crossing
+//! a node boundary decompose hierarchically (intra-node reduce, inter-node
+//! exchange among node leaders, intra-node broadcast) or — for ring
+//! AllGathers, where every step saturates the boundary link simultaneously
+//! — run the whole ring at the slower tier. Each tiered cost also carries
+//! the tier's wire power (`LinkSpec::energy_per_byte × rate`), which the
+//! engine adds to the transfer-phase board power; the legacy flat link has
+//! zero wire energy, preserving bit-identity.
 
+use crate::cluster::{LinkSpec, Topology};
 use crate::config::HwSpec;
 
 /// Decomposition of one collective call on one rank.
@@ -19,21 +32,54 @@ pub struct CollectiveCost {
     pub bytes_moved: f64,
 }
 
-/// Ring AllReduce of `payload` bytes across `n` ranks.
-pub fn allreduce(hw: &HwSpec, n: usize, payload: f64) -> CollectiveCost {
+impl CollectiveCost {
+    const ZERO: CollectiveCost = CollectiveCost {
+        transfer_s: 0.0,
+        steps: 0,
+        bytes_moved: 0.0,
+    };
+}
+
+/// A topology-aware collective cost: the α–β decomposition plus the extra
+/// board power drawn while driving the tier's wire (0 on the legacy flat
+/// link, whose wire draw lives in `HwSpec::gpu_comm_w`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TieredCost {
+    pub cost: CollectiveCost,
+    /// Extra transfer-phase board power, W.
+    pub wire_w: f64,
+}
+
+impl TieredCost {
+    const ZERO: TieredCost = TieredCost {
+        cost: CollectiveCost::ZERO,
+        wire_w: 0.0,
+    };
+
+    fn of(cost: CollectiveCost, link: &LinkSpec) -> TieredCost {
+        TieredCost {
+            cost,
+            // Wire power while the transfer is in flight: energy per byte ×
+            // achieved byte rate over the phase.
+            wire_w: if cost.transfer_s > 0.0 {
+                link.energy_per_byte * cost.bytes_moved / cost.transfer_s
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+/// Ring AllReduce of `payload` bytes across `n` ranks over one link tier.
+pub fn allreduce_link(link: &LinkSpec, n: usize, payload: f64) -> CollectiveCost {
     assert!(n >= 1);
     if n == 1 {
-        return CollectiveCost {
-            transfer_s: 0.0,
-            steps: 0,
-            bytes_moved: 0.0,
-        };
+        return CollectiveCost::ZERO;
     }
     let steps = 2 * (n - 1);
     let chunk = payload / n as f64;
     let bytes_moved = chunk * steps as f64;
-    let transfer_s = hw.coll_base_latency
-        + steps as f64 * (hw.link_step_latency + chunk / hw.link_bw);
+    let transfer_s = link.base_latency + steps as f64 * (link.step_latency + chunk / link.bw);
     CollectiveCost {
         transfer_s,
         steps,
@@ -41,25 +87,110 @@ pub fn allreduce(hw: &HwSpec, n: usize, payload: f64) -> CollectiveCost {
     }
 }
 
-/// Ring AllGather: each rank contributes `payload` bytes; n−1 steps.
-pub fn allgather(hw: &HwSpec, n: usize, payload_per_rank: f64) -> CollectiveCost {
+/// Ring AllReduce over the legacy flat link (`HwSpec` constants).
+pub fn allreduce(hw: &HwSpec, n: usize, payload: f64) -> CollectiveCost {
+    allreduce_link(&hw.flat_link(), n, payload)
+}
+
+/// Ring AllGather over one link tier: each rank contributes `payload`
+/// bytes; n−1 steps.
+pub fn allgather_link(link: &LinkSpec, n: usize, payload_per_rank: f64) -> CollectiveCost {
     assert!(n >= 1);
     if n == 1 {
-        return CollectiveCost {
-            transfer_s: 0.0,
-            steps: 0,
-            bytes_moved: 0.0,
-        };
+        return CollectiveCost::ZERO;
     }
     let steps = n - 1;
     let bytes_moved = payload_per_rank * steps as f64;
-    let transfer_s = hw.coll_base_latency
-        + steps as f64 * (hw.link_step_latency + payload_per_rank / hw.link_bw);
+    let transfer_s = link.base_latency + steps as f64 * (link.step_latency + payload_per_rank / link.bw);
     CollectiveCost {
         transfer_s,
         steps,
         bytes_moved,
     }
+}
+
+/// Ring AllGather over the legacy flat link (`HwSpec` constants).
+pub fn allgather(hw: &HwSpec, n: usize, payload_per_rank: f64) -> CollectiveCost {
+    allgather_link(&hw.flat_link(), n, payload_per_rank)
+}
+
+/// Point-to-point transfer over one link tier.
+pub fn p2p_link(link: &LinkSpec, payload: f64) -> CollectiveCost {
+    CollectiveCost {
+        transfer_s: link.base_latency + link.step_latency + payload / link.bw,
+        steps: 1,
+        bytes_moved: payload,
+    }
+}
+
+/// Hierarchical ring AllReduce over ranks `[first, first + count)` of the
+/// topology. Single-node ranges reduce to `allreduce_link` on the
+/// intra-node tier (bit-identical to the flat path); multi-node ranges
+/// decompose as intra-node reduce → inter-node AllReduce among one leader
+/// per node → intra-node broadcast, each phase priced on its own tier.
+pub fn allreduce_hier(topo: &Topology, first: usize, count: usize, payload: f64) -> TieredCost {
+    if count <= 1 {
+        return TieredCost::ZERO;
+    }
+    let nodes = topo.nodes_spanned(first, count);
+    if nodes <= 1 {
+        return TieredCost::of(allreduce_link(&topo.intra, count, payload), &topo.intra);
+    }
+    let local = topo.max_local(first, count);
+    let intra_reduce = if local > 1 {
+        allreduce_link(&topo.intra, local, payload)
+    } else {
+        CollectiveCost::ZERO
+    };
+    let inter = allreduce_link(&topo.inter, nodes, payload);
+    // Pipelined intra-node broadcast of the reduced result.
+    let bcast = if local > 1 {
+        p2p_link(&topo.intra, payload)
+    } else {
+        CollectiveCost::ZERO
+    };
+    let transfer_s = intra_reduce.transfer_s + inter.transfer_s + bcast.transfer_s;
+    // The engine applies this cost to *every* participating rank, but only
+    // one leader per node drives the inter-node ring (and the broadcast),
+    // so those phases' bytes and wire energy are averaged over the range —
+    // leaders_frac × count ranks reconstructs the leaders' total exactly.
+    let leaders_frac = nodes as f64 / count as f64;
+    let per_rank_inter_bytes = inter.bytes_moved * leaders_frac;
+    let per_rank_bcast_bytes = bcast.bytes_moved * leaders_frac;
+    let wire_j = (intra_reduce.bytes_moved + per_rank_bcast_bytes) * topo.intra.energy_per_byte
+        + per_rank_inter_bytes * topo.inter.energy_per_byte;
+    TieredCost {
+        cost: CollectiveCost {
+            transfer_s,
+            steps: intra_reduce.steps + inter.steps + bcast.steps,
+            bytes_moved: intra_reduce.bytes_moved + per_rank_bcast_bytes + per_rank_inter_bytes,
+        },
+        wire_w: if transfer_s > 0.0 { wire_j / transfer_s } else { 0.0 },
+    }
+}
+
+/// Tiered ring AllGather: a ring of `ring_n` participants hosted on ranks
+/// `[first, first + count)`. Every ring step moves data on all links
+/// simultaneously, so a ring that crosses a node boundary is bottlenecked
+/// by the inter-node tier on every step; single-node rings pay the
+/// intra-node tier with the flat formula.
+pub fn allgather_ring(topo: &Topology, first: usize, count: usize, ring_n: usize, payload_per_rank: f64) -> TieredCost {
+    if ring_n <= 1 {
+        return TieredCost::ZERO;
+    }
+    let link = topo.link_for(first, count);
+    TieredCost::of(allgather_link(link, ring_n, payload_per_rank), link)
+}
+
+/// Tiered P2P edge between two rank ranges (`src` ranks feed `dst` ranks
+/// pairwise): if any pair crosses a node boundary the whole edge pays the
+/// inter-node tier (the lockstep sends are bottlenecked by the slowest
+/// pair).
+pub fn p2p_range(topo: &Topology, src_first: usize, count: usize, dst_first: usize, payload: f64) -> TieredCost {
+    let crosses = (0..count.max(1))
+        .any(|i| topo.node_of(src_first + i) != topo.node_of(dst_first + i));
+    let link = if crosses { &topo.inter } else { &topo.intra };
+    TieredCost::of(p2p_link(link, payload), link)
 }
 
 /// Interleaved bidirectional ring AllReduce (IBing-style, Zong et al. 2025,
@@ -88,13 +219,10 @@ pub fn allreduce_bidirectional(hw: &HwSpec, n: usize, payload: f64) -> Collectiv
     }
 }
 
-/// Point-to-point transfer of `payload` bytes between adjacent stages.
+/// Point-to-point transfer of `payload` bytes between adjacent stages over
+/// the legacy flat link.
 pub fn p2p(hw: &HwSpec, payload: f64) -> CollectiveCost {
-    CollectiveCost {
-        transfer_s: hw.coll_base_latency + hw.link_step_latency + payload / hw.link_bw,
-        steps: 1,
-        bytes_moved: payload,
-    }
+    p2p_link(&hw.flat_link(), payload)
 }
 
 #[cfg(test)]
@@ -183,5 +311,87 @@ mod tests {
         let a = allreduce(&h, 4, 1e6);
         let b = allreduce_bidirectional(&h, 4, 1e6);
         assert!((a.bytes_moved - b.bytes_moved).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_node_hier_is_bit_identical_to_flat() {
+        use crate::cluster::Topology;
+        let h = hw();
+        let topo = Topology::single_node(h.flat_link());
+        for n in 1..=8usize {
+            for payload in [0.0, 64.0 * 1024.0, 1e6, 64e6] {
+                let t = allreduce_hier(&topo, 0, n, payload);
+                assert_eq!(t.cost, allreduce(&h, n, payload), "allreduce n={n}");
+                assert_eq!(t.wire_w, 0.0, "flat link has no wire term");
+                let g = allgather_ring(&topo, 0, n, n, payload);
+                assert_eq!(g.cost, allgather(&h, n, payload), "allgather n={n}");
+                if n >= 2 {
+                    let p = p2p_range(&topo, 0, 1, 1, payload);
+                    assert_eq!(p.cost, p2p(&h, payload), "p2p");
+                    assert_eq!(p.wire_w, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn crossing_a_node_boundary_costs_more() {
+        use crate::cluster::{LinkTier, Topology};
+        let topo = Topology::multi_node(2, LinkTier::NvLink, LinkTier::InfiniBand);
+        let intra_only = Topology::single_node(LinkTier::NvLink.spec());
+        let payload = 4e6;
+        // Hierarchical AllReduce across 2 nodes beats nothing: it pays the
+        // inter tier on top of the intra phases.
+        let flat = allreduce_hier(&intra_only, 0, 4, payload);
+        let hier = allreduce_hier(&topo, 0, 4, payload);
+        assert!(hier.cost.transfer_s > flat.cost.transfer_s, "{} vs {}", hier.cost.transfer_s, flat.cost.transfer_s);
+        assert!(hier.wire_w > 0.0, "named tiers carry wire power");
+        // Ring AllGather bottlenecked by the boundary link on every step.
+        let ag_in = allgather_ring(&topo, 0, 2, 2, payload);
+        let ag_x = allgather_ring(&topo, 0, 4, 4, payload);
+        assert!(ag_x.cost.transfer_s / 3.0 > ag_in.cost.transfer_s / 1.0, "per-step inter > per-step intra");
+        // P2P pays the inter tier iff the pair crosses nodes.
+        let inside = p2p_range(&topo, 0, 1, 1, payload);
+        let across = p2p_range(&topo, 1, 1, 2, payload);
+        assert!(across.cost.transfer_s > inside.cost.transfer_s);
+        // Shard-wise group edge (2 ranks each side): crossing dominates.
+        let group = p2p_range(&topo, 0, 2, 2, payload);
+        assert_eq!(group.cost, across.cost);
+    }
+
+    #[test]
+    fn hier_allreduce_averages_leader_driven_phases_over_the_range() {
+        use crate::cluster::{LinkTier, Topology};
+        let topo = Topology::multi_node(2, LinkTier::NvLink, LinkTier::InfiniBand);
+        let payload = 1e6;
+        let t = allreduce_hier(&topo, 0, 4, payload);
+        let intra = allreduce_link(&topo.intra, 2, payload);
+        let inter = allreduce_link(&topo.inter, 2, payload);
+        let bcast = p2p_link(&topo.intra, payload);
+        // Per-rank bytes: every rank reduces intra-node; only the 2 node
+        // leaders (of 4 ranks) drive the inter ring and the broadcast.
+        let want = intra.bytes_moved + 0.5 * (inter.bytes_moved + bcast.bytes_moved);
+        assert!((t.cost.bytes_moved - want).abs() < 1e-9 * want, "{} vs {want}", t.cost.bytes_moved);
+        // Summed over all 4 ranks, the engine-applied wire energy equals
+        // the physical total drawn by the actual drivers of each phase.
+        let applied_wire_j = t.wire_w * t.cost.transfer_s * 4.0;
+        let physical_wire_j = 4.0 * intra.bytes_moved * topo.intra.energy_per_byte
+            + 2.0 * inter.bytes_moved * topo.inter.energy_per_byte
+            + 2.0 * bcast.bytes_moved * topo.intra.energy_per_byte;
+        assert!(
+            (applied_wire_j - physical_wire_j).abs() < 1e-9 * physical_wire_j,
+            "{applied_wire_j} vs {physical_wire_j}"
+        );
+    }
+
+    #[test]
+    fn hier_allreduce_degenerate_leaders_skip_intra_phases() {
+        use crate::cluster::{LinkTier, Topology};
+        // One GPU per node: purely inter-node ring, no intra reduce/bcast.
+        let topo = Topology::multi_node(1, LinkTier::NvLink, LinkTier::InfiniBand);
+        let t = allreduce_hier(&topo, 0, 4, 1e6);
+        let inter = allreduce_link(&topo.inter, 4, 1e6);
+        assert_eq!(t.cost.transfer_s, inter.transfer_s);
+        assert_eq!(t.cost.steps, inter.steps);
     }
 }

@@ -173,8 +173,8 @@ fn rank_phases(
     power: &PowerModel,
     rank: usize,
 ) -> Vec<(u64, Phase)> {
-    let wait_w = power.gpu_power(PhaseKind::Wait, 0.0);
-    let comm_w = power.gpu_power(PhaseKind::Transfer, 0.0);
+    let wait_w = power.gpu_power_rank(PhaseKind::Wait, 0.0, rank);
+    let comm_w = power.gpu_power_rank(PhaseKind::Transfer, 0.0, rank);
     let mut clock = 0.0f64;
     let mut out = Vec::new();
     let mut push = |key: u64, kind, module, layer, step, t0: f64, t1: f64, power_w| {
@@ -208,7 +208,7 @@ fn rank_phases(
                 ..
             } => {
                 let d = res.durs[res.dur_at[i] as usize + (rank - ranks.first as usize)];
-                let p = power.gpu_power(PhaseKind::Compute, *util);
+                let p = power.gpu_power_rank(PhaseKind::Compute, *util, rank);
                 push(seq_key(i, 0, rank), PhaseKind::Compute, *module, *layer, *step, clock, clock + d, p);
                 clock += d;
             }
@@ -217,19 +217,24 @@ fn rank_phases(
                 layer,
                 step,
                 transfer_s,
+                wire_w,
                 ..
             } => {
                 let t = res.sync_t[i];
                 push(seq_key(i, 0, rank), PhaseKind::Wait, *module, *layer, *step, clock, clock.max(t), wait_w);
                 clock = clock.max(t);
                 let end = clock + transfer_s;
-                push(seq_key(i, 1, rank), PhaseKind::Transfer, *module, *layer, *step, clock, end, comm_w);
+                // Link-tier wire power rides on top of the board's transfer
+                // draw (wire_w is 0 on the legacy flat link).
+                let p = comm_w + wire_w * power.thermal_mult;
+                push(seq_key(i, 1, rank), PhaseKind::Transfer, *module, *layer, *step, clock, end, p);
                 clock += transfer_s;
             }
             Op::Send {
                 layer,
                 step,
                 transfer_s,
+                wire_w,
                 ..
             } => {
                 push(
@@ -240,7 +245,7 @@ fn rank_phases(
                     *step,
                     clock,
                     clock + transfer_s,
-                    comm_w,
+                    comm_w + wire_w * power.thermal_mult,
                 );
                 clock += transfer_s;
             }
@@ -295,7 +300,13 @@ pub fn execute(
         phases,
         res.clocks,
     );
-    timeline.finalize();
+    // Tail padding billed at each rank's own idle draw (heterogeneous
+    // fleets); on the homogeneous baseline every entry equals the global
+    // idle power, so this is exactly the legacy `finalize`.
+    let idle_w: Vec<f64> = (0..plan.num_ranks)
+        .map(|r| power.gpu_power_rank(PhaseKind::Idle, 0.0, r))
+        .collect();
+    timeline.finalize_with(&idle_w);
 
     BuiltRun {
         timeline,
@@ -419,6 +430,30 @@ mod tests {
             assert_eq!(pa.power_w, pb.power_w);
         }
         assert_eq!(a.timeline.gpu_energy_j(), b.timeline.gpu_energy_j());
+    }
+
+    #[test]
+    fn heterogeneous_fleet_bills_idle_tail_per_rank() {
+        use crate::cluster::{GpuSpec, LinkTier};
+        let hw = HwSpec::cluster_testbed(1, 2, LinkTier::PciE, LinkTier::PciE, &[GpuSpec::a6000(), GpuSpec::h100()]);
+        let power = PowerModel::new(&hw);
+        let mut rng = Rng::new(3);
+        let skew = SkewModel::new(&SimKnobs::default(), 2, &mut rng);
+        // Rank 0 computes long, rank 1 short: rank 1 (an H100) idles a tail.
+        let mut b = PlanBuilder::new(2);
+        b.compute(0..1, t(5e-3), ModuleKind::Mlp, 0, 0);
+        b.compute(1..2, t(1e-3), ModuleKind::Mlp, 0, 0);
+        let plan = b.finish(1, 0.0, false);
+        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1);
+        let idle = run
+            .timeline
+            .phases
+            .iter()
+            .find(|p| p.gpu == 1 && p.kind == PhaseKind::Idle)
+            .expect("rank 1 has an idle tail");
+        // Billed at the H100's idle draw (60 W × thermal), not the A6000's.
+        assert_eq!(idle.power_w, power.gpu_power_rank(PhaseKind::Idle, 0.0, 1));
+        assert!(idle.power_w > power.gpu_power(PhaseKind::Idle, 0.0));
     }
 
     #[test]

@@ -3,7 +3,12 @@
 //! Total wall power = PSU(CPU + DRAM + Σ GPU). GPU board power is a state
 //! machine parameterized by the phase kind and the module's arithmetic
 //! utilization; CPU power follows host-side driver/serving activity.
+//! Heterogeneous fleets (`cluster::GpuSpec` per rank) replace the idle/peak
+//! endpoints of the state machine per rank and scale the wait/transfer
+//! draws by the rank's power-limit ratio; a homogeneous fleet takes the
+//! exact legacy expressions.
 
+use crate::cluster::GpuSpec;
 use crate::config::HwSpec;
 use crate::simulator::timeline::PhaseKind;
 
@@ -14,14 +19,19 @@ pub struct PowerModel {
     pub thermal_mult: f64,
     /// Run-level multiplier on busy-wait power (NCCL spin/yield mix).
     pub wait_mult: f64,
+    /// Per-rank GPU classes from the topology (empty ⇒ homogeneous
+    /// baseline — the bit-identical legacy path).
+    fleet: Vec<GpuSpec>,
 }
 
 impl PowerModel {
     pub fn new(hw: &HwSpec) -> Self {
+        let fleet = hw.topology.as_ref().map(|t| t.fleet.clone()).unwrap_or_default();
         PowerModel {
             hw: hw.clone(),
             thermal_mult: 1.0,
             wait_mult: 1.0,
+            fleet,
         }
     }
 
@@ -39,6 +49,39 @@ impl PowerModel {
             PhaseKind::Idle => hw.gpu_idle_w,
         };
         p * self.thermal_mult
+    }
+
+    /// GPU board power for a phase on a specific rank: heterogeneous
+    /// fleets swap in the rank's idle/peak endpoints and scale wait/
+    /// transfer draw by the rank's power-limit ratio; on the homogeneous
+    /// baseline this is exactly `gpu_power`.
+    pub fn gpu_power_rank(&self, kind: PhaseKind, util: f64, rank: usize) -> f64 {
+        let Some(g) = self.fleet.get(rank) else {
+            return self.gpu_power(kind, util);
+        };
+        let hw = &self.hw;
+        let limit_ratio = g.peak_w / hw.gpu_tdp_w;
+        let p = match kind {
+            PhaseKind::Compute => g.idle_w + util.clamp(0.0, 1.0) * (g.peak_w - g.idle_w),
+            PhaseKind::Wait => hw.gpu_wait_w * self.wait_mult * limit_ratio,
+            PhaseKind::Transfer => hw.gpu_comm_w * limit_ratio,
+            PhaseKind::Idle => g.idle_w,
+        };
+        p * self.thermal_mult
+    }
+
+    /// Per-rank compute-throughput scales of the heterogeneous fleet, or
+    /// `None` on the homogeneous baseline (so callers skip the rescale
+    /// entirely and stay bit-identical).
+    pub fn fleet_compute_scales(&self, num_ranks: usize) -> Option<Vec<f64>> {
+        if self.fleet.is_empty() {
+            return None;
+        }
+        Some(
+            (0..num_ranks)
+                .map(|r| self.fleet.get(r).map(|g| g.compute_scale).unwrap_or(1.0))
+                .collect(),
+        )
     }
 
     /// CPU package power given a host activity fraction in [0,1].
@@ -115,6 +158,35 @@ mod tests {
         p.thermal_mult = 1.1;
         assert!((p.gpu_power(PhaseKind::Compute, 0.5) - base * 1.1).abs() < 1e-9);
         assert_eq!(p.cpu_power(0.5), cpu);
+    }
+
+    #[test]
+    fn rank_power_matches_global_on_homogeneous_fleet() {
+        let p = pm();
+        for kind in [PhaseKind::Compute, PhaseKind::Wait, PhaseKind::Transfer, PhaseKind::Idle] {
+            for rank in 0..4 {
+                assert_eq!(p.gpu_power_rank(kind, 0.6, rank), p.gpu_power(kind, 0.6));
+            }
+        }
+        assert!(p.fleet_compute_scales(4).is_none());
+    }
+
+    #[test]
+    fn heterogeneous_fleet_changes_rank_power() {
+        use crate::cluster::{GpuSpec, LinkTier};
+        let fleet = [GpuSpec::a6000(), GpuSpec::h100()];
+        let hw = HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &fleet);
+        let p = PowerModel::new(&hw);
+        // Rank 0 is the baseline A6000: identical to the global model.
+        assert_eq!(p.gpu_power_rank(PhaseKind::Compute, 0.5, 0), p.gpu_power(PhaseKind::Compute, 0.5));
+        // Rank 1 is an H100: hotter at idle and at the limit.
+        assert!(p.gpu_power_rank(PhaseKind::Idle, 0.0, 1) > p.gpu_power(PhaseKind::Idle, 0.0));
+        assert!(p.gpu_power_rank(PhaseKind::Compute, 1.0, 1) > p.gpu_power(PhaseKind::Compute, 1.0));
+        assert!(p.gpu_power_rank(PhaseKind::Wait, 0.0, 1) > p.gpu_power(PhaseKind::Wait, 0.0));
+        let scales = p.fleet_compute_scales(4).unwrap();
+        assert_eq!(scales.len(), 4);
+        assert_eq!(scales[0], 1.0);
+        assert!(scales[1] > 1.0);
     }
 
     #[test]

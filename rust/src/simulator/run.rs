@@ -82,6 +82,13 @@ pub struct RunRecord {
     // --- comm descriptors ---
     pub comm_bytes_per_step: f64,
     pub host_activity: f64,
+
+    // --- topology descriptors (cluster tier model, DESIGN.md §11) ---
+    /// Nodes the rank mesh spans (1 on the flat single-node testbed).
+    pub nodes: usize,
+    /// Intra/inter link bandwidth ratio (1.0 when single-tier) — how much
+    /// slower the boundary-crossing ring steps run.
+    pub tier_bw_ratio: f64,
 }
 
 impl RunRecord {
@@ -291,6 +298,7 @@ pub fn simulate_run_planned(
     let nvml = telemetry::nvml::measure(hw, knobs, &gpu_j, wall_s, pcv, comm_frac, &mut rng);
 
     // ---- runtime features ----
+    let topo = hw.topo();
     let gpu_util = tl.busy_fraction();
     let kv_bytes_total = (cfg.batch * (cfg.seq_in + cfg.seq_out)) as f64 * crate::workload::kv_bytes_per_token(&spec);
     // Every strategy (and hybrid) shards the KV cache across all g ranks
@@ -304,9 +312,15 @@ pub fn simulate_run_planned(
                 .clamp(0.0, 1.0)
         })
         .collect();
+    // Heterogeneous fleets surface their GPU classes through the clock
+    // feature channel (a faster class clocks proportionally higher); the
+    // homogeneous scale of 1.0 is the exact legacy expression.
     let gpu_clock_ghz: Vec<f64> = gpu_util
         .iter()
-        .map(|u| hw.gpu_clock_ghz * (1.03 - 0.08 * u) * rng.lognormal_mean_cv(1.0, 0.008))
+        .enumerate()
+        .map(|(r, u)| {
+            hw.gpu_clock_ghz * topo.compute_scale(r) * (1.03 - 0.08 * u) * rng.lognormal_mean_cv(1.0, 0.008)
+        })
         .collect();
     let gpu_mem_clock_ghz: Vec<f64> = (0..g)
         .map(|_| hw.gpu_mem_clock_ghz * rng.lognormal_mean_cv(1.0, 0.002))
@@ -360,6 +374,8 @@ pub fn simulate_run_planned(
         wait_max_s,
         comm_bytes_per_step: built.comm_bytes_per_step,
         host_activity,
+        nodes: topo.nodes_spanned(0, g).max(1),
+        tier_bw_ratio: topo.bw_ratio(g),
     }
 }
 
@@ -470,6 +486,47 @@ mod tests {
             assert!(r.true_total_j > 0.0 && r.wall_s > 0.0);
             assert!(!r.wait_samples.is_empty(), "{inner:?}x{outer:?} waits sampled");
         }
+    }
+
+    #[test]
+    fn flat_runs_carry_single_node_descriptors() {
+        let r = run("Vicuna-7B", Parallelism::Tensor, 4, 8, 1);
+        assert_eq!(r.nodes, 1);
+        assert_eq!(r.tier_bw_ratio, 1.0);
+    }
+
+    #[test]
+    fn multi_node_runs_pay_the_inter_tier() {
+        use crate::cluster::LinkTier;
+        // Same NVLink islands; the only difference is the node boundary.
+        let one_node = HwSpec::cluster_testbed(1, 4, LinkTier::NvLink, LinkTier::NvLink, &[]);
+        let two_node = HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &[]);
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 16).with_seed(3);
+        let knobs = SimKnobs::default();
+        let a = simulate_run(&cfg, &one_node, &knobs);
+        let b = simulate_run(&cfg, &two_node, &knobs);
+        assert_eq!(a.nodes, 1);
+        assert_eq!(b.nodes, 2);
+        assert!(b.tier_bw_ratio > 1.0, "NVLink over InfiniBand: {}", b.tier_bw_ratio);
+        // Crossing InfiniBand on every AllReduce costs more interconnect
+        // time than staying inside the NVLink island.
+        let ar = |r: &RunRecord| r.module_time_s.get(&ModuleKind::AllReduce).copied().unwrap_or(0.0);
+        assert!(ar(&b) > ar(&a), "hier AllReduce time {} > flat {}", ar(&b), ar(&a));
+    }
+
+    #[test]
+    fn heterogeneous_fleet_shifts_skew_and_power() {
+        use crate::cluster::{GpuSpec, LinkTier};
+        let homo = HwSpec::cluster_testbed(2, 2, LinkTier::PciE, LinkTier::PciE, &[]);
+        let mixed = HwSpec::cluster_testbed(2, 2, LinkTier::PciE, LinkTier::PciE, &[GpuSpec::a6000(), GpuSpec::h100()]);
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 16).with_seed(5);
+        let knobs = SimKnobs::default();
+        let a = simulate_run(&cfg, &homo, &knobs);
+        let b = simulate_run(&cfg, &mixed, &knobs);
+        // Faster ranks finish sooner, so the straggler-determined waits grow.
+        assert!(b.wait_mean_s > a.wait_mean_s, "mixed fleet skews harder: {} vs {}", b.wait_mean_s, a.wait_mean_s);
+        // The fleet's H100 ranks clock higher in the feature channel.
+        assert!(b.gpu_clock_ghz[1] > 1.5 * b.gpu_clock_ghz[0]);
     }
 
     #[test]

@@ -62,6 +62,19 @@ impl SkewModel {
         }
     }
 
+    /// Fold a heterogeneous fleet's per-rank compute throughput into the
+    /// persistent rank bias: a rank with `scale` > 1 (a faster GPU class)
+    /// finishes the same nominal work in 1/scale of the time, *on top of*
+    /// its sampled silicon-lottery bias. Draws nothing from the RNG, so
+    /// the seed stream is untouched; scales of exactly 1.0 are the
+    /// identity (bit-identical homogeneous path — callers skip the call
+    /// entirely in that case anyway).
+    pub fn apply_fleet(&mut self, scales: &[f64]) {
+        for (bias, &scale) in self.rank_bias.iter_mut().zip(scales) {
+            *bias /= scale.max(1e-9);
+        }
+    }
+
     /// Run-level duration multiplier for a module kind.
     pub fn module_mult(&self, module: ModuleKind) -> f64 {
         match module {
@@ -146,6 +159,18 @@ mod tests {
             assert!((0.7..1.4).contains(&b));
             assert_eq!(b, m.rank_bias(r));
         }
+    }
+
+    #[test]
+    fn apply_fleet_rescales_bias_without_touching_the_stream() {
+        let (mut a, mut ra) = model(9);
+        let (b, mut rb) = model(9);
+        let before = a.rank_bias(2);
+        a.apply_fleet(&[1.0, 1.0, 2.0, 1.0]);
+        assert_eq!(a.rank_bias(2), before / 2.0, "faster GPU halves duration bias");
+        assert_eq!(a.rank_bias(0), b.rank_bias(0), "scale 1.0 is the identity");
+        // Subsequent draws are unchanged (apply_fleet consumed no RNG).
+        assert_eq!(ra.next_u64(), rb.next_u64());
     }
 
     #[test]

@@ -223,6 +223,21 @@ impl Timeline {
         }
     }
 
+    /// `finalize` with an explicit per-GPU idle power — heterogeneous
+    /// fleets bill each rank's tail padding at its own board's idle draw.
+    /// With every entry equal to the timeline's own idle power this is
+    /// exactly `finalize`.
+    pub fn finalize_with(&mut self, idle_w_per_gpu: &[f64]) {
+        let end = self.makespan();
+        for g in 0..self.num_gpus {
+            let now = self.clocks[g];
+            if end > now {
+                let w = idle_w_per_gpu.get(g).copied().unwrap_or(self.idle_w);
+                self.push(g, PhaseKind::Idle, ModuleKind::Embedding, 0, u32::MAX, end - now, w);
+            }
+        }
+    }
+
     /// Exact GPU-side energy (J), all phases.
     pub fn gpu_energy_j(&self) -> f64 {
         self.phases.iter().map(|p| p.energy_j()).sum()

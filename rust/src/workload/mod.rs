@@ -117,6 +117,15 @@ pub fn hybrid_inner_degrees(gpus: usize) -> Vec<usize> {
     (2..=gpus / 2).filter(|d| gpus % d == 0).collect()
 }
 
+/// Every deployment strategy realizable on a `gpus`-rank mesh: the three
+/// pure strategies plus every canonical hybrid factorization — the search
+/// axis of the energy-aware autotuner (`eval::tune`).
+pub fn deployment_candidates(gpus: usize) -> Vec<Parallelism> {
+    let mut out = Parallelism::ALL.to_vec();
+    out.extend(hybrid_parallelisms(gpus));
+    out
+}
+
 /// Every canonical hybrid parallelism realizable on a `gpus`-rank mesh.
 pub fn hybrid_parallelisms(gpus: usize) -> Vec<Parallelism> {
     let mut out = Vec::new();
@@ -237,6 +246,15 @@ mod tests {
         // 4 GPUs admit exactly the three canonical combos at degree 2.
         assert_eq!(hybrid_parallelisms(4).len(), 3);
         assert!(hybrid_parallelisms(2).is_empty());
+    }
+
+    #[test]
+    fn deployment_candidates_cover_pure_and_hybrid() {
+        assert_eq!(deployment_candidates(2), Parallelism::ALL.to_vec());
+        let c4 = deployment_candidates(4);
+        assert_eq!(c4.len(), 3 + 3);
+        assert!(c4.contains(&Parallelism::Tensor));
+        assert!(c4.iter().any(|p| p.is_hybrid()));
     }
 
     #[test]

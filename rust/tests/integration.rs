@@ -393,3 +393,74 @@ fn unknown_model_panics_cleanly() {
     });
     assert!(result.is_err());
 }
+
+#[test]
+fn topology_and_tuner_end_to_end() {
+    // The hierarchical-fleet pipeline end to end: a 2-node NVLink +
+    // InfiniBand fleet with a mixed A6000/H100 population, profiled through
+    // the full campaign machinery and searched by the energy-aware
+    // autotuner. Orderings that must hold:
+    //   1. the 2-node mesh pays more interconnect time than one NVLink
+    //      island for the same seeded workload;
+    //   2. the tuner's Pareto front is non-dominated and its argmin is the
+    //      cheapest feasible candidate;
+    //   3. tightening the SLO never finds cheaper deployments.
+    use piep::cluster::{GpuSpec, LinkTier};
+    use piep::eval::tune::{run_tune, TuneOptions};
+    use piep::simulator::timeline::ModuleKind;
+
+    let island = HwSpec::cluster_testbed(1, 4, LinkTier::NvLink, LinkTier::NvLink, &[]);
+    let fleet = HwSpec::cluster_testbed(
+        2,
+        2,
+        LinkTier::NvLink,
+        LinkTier::InfiniBand,
+        &[GpuSpec::a6000(), GpuSpec::h100()],
+    );
+    let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 16).with_seed(21);
+    let k = SimKnobs {
+        sim_decode_steps: 4,
+        ..SimKnobs::default()
+    };
+    let a = piep::simulator::simulate_run(&cfg, &island, &k);
+    let b = piep::simulator::simulate_run(&cfg, &fleet, &k);
+    let comm_time = |r: &piep::simulator::RunRecord| {
+        r.module_time_s.get(&ModuleKind::AllReduce).copied().unwrap_or(0.0)
+    };
+    assert!(comm_time(&b) > comm_time(&a), "node boundary costs interconnect time");
+    assert_eq!((b.nodes, a.nodes), (2, 1));
+    assert!(b.tier_bw_ratio > 1.0);
+
+    let opts = TuneOptions {
+        hw: fleet,
+        knobs: k,
+        gpu_counts: vec![2, 4],
+        batches: vec![8, 32],
+        passes: 2,
+        ..TuneOptions::default()
+    };
+    let res = run_tune(&opts);
+    assert!(!res.candidates.is_empty() && !res.pareto.is_empty());
+    let argmin = res.argmin_j_token.clone().expect("argmin");
+    for c in &res.candidates {
+        assert!(c.j_per_token >= argmin.j_per_token, "{}", c.key);
+        for f in &res.pareto {
+            assert!(
+                !(c.j_per_token < f.j_per_token && c.ms_per_token < f.ms_per_token),
+                "{} dominates front member {}",
+                c.key,
+                f.key
+            );
+        }
+    }
+    // SLO at the argmin's latency: the unconstrained argmin must survive;
+    // any tighter feasible argmin can only cost more energy.
+    let slo = argmin.ms_per_token;
+    let constrained = run_tune(&TuneOptions {
+        slo_ms_per_token: Some(slo),
+        ..opts
+    });
+    let c_argmin = constrained.argmin_j_token.expect("feasible under own SLO");
+    assert!(c_argmin.ms_per_token <= slo);
+    assert!(c_argmin.j_per_token >= argmin.j_per_token);
+}

@@ -457,3 +457,127 @@ fn prop_ridge_interpolates_noiseless_linear_data() {
         },
     );
 }
+
+#[test]
+fn prop_flat_topology_is_bit_identical_to_legacy_path() {
+    // The tentpole's compatibility contract: an *explicit* single-node
+    // single-tier homogeneous topology (the legacy link constants, zero
+    // wire energy, empty fleet) must produce bit-identical runs to the
+    // topology-free `HwSpec` — totals, instruments, waits, attribution —
+    // for every strategy including the 4-GPU hybrids. This pins the
+    // hierarchical lowering path to the flat one.
+    use piep::cluster::Topology;
+    let hw = HwSpec::default();
+    let hw_topo = HwSpec {
+        topology: Some(Topology::single_node(hw.flat_link())),
+        ..hw.clone()
+    };
+    forall(111, 12, gen_cfg, |t| {
+        let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.extend(hybrids4());
+        for par in pars {
+            let mut cfg = cfg_of(t, par);
+            if par.is_hybrid() {
+                cfg.gpus = 4;
+            }
+            let spec = piep::models::by_name(&cfg.model).unwrap();
+            if !piep::workload::runnable(&spec, par, cfg.gpus, &hw) {
+                continue;
+            }
+            let flat = simulate_run(&cfg, &hw, &knobs());
+            let topo = simulate_run(&cfg, &hw_topo, &knobs());
+            ensure(flat.true_total_j == topo.true_total_j, format!("{par:?}: totals"))?;
+            ensure(flat.meter_total_j == topo.meter_total_j, format!("{par:?}: meter"))?;
+            ensure(flat.nvml_total_j == topo.nvml_total_j, format!("{par:?}: nvml"))?;
+            ensure(flat.wait_samples == topo.wait_samples, format!("{par:?}: waits"))?;
+            ensure(flat.module_energy_j == topo.module_energy_j, format!("{par:?}: attribution"))?;
+            ensure(flat.comm_split_j == topo.comm_split_j, format!("{par:?}: comm splits"))?;
+            ensure(flat.wall_s == topo.wall_s, format!("{par:?}: wall"))?;
+            ensure(flat.gpu_clock_ghz == topo.gpu_clock_ghz, format!("{par:?}: clocks"))?;
+            ensure(topo.nodes == 1 && topo.tier_bw_ratio == 1.0, "flat descriptors")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiered_collective_costs_reduce_to_flat() {
+    // Cost-model half of the same contract: the hierarchical collective
+    // formulas on a single-node topology are bit-identical to the legacy
+    // flat ones for every (ranks, payload), and carry no wire power.
+    use piep::cluster::Topology;
+    use piep::simulator::collective;
+    let hw = HwSpec::default();
+    let topo = Topology::single_node(hw.flat_link());
+    forall(
+        112,
+        60,
+        |r| (1 + r.below(8), r.range(0.0, 64e6)),
+        |&(n, payload)| {
+            if n == 0 {
+                return Ok(()); // shrink can propose 0 ranks; nothing to check
+            }
+            let ar = collective::allreduce_hier(&topo, 0, n, payload);
+            ensure(ar.cost == collective::allreduce(&hw, n, payload), format!("allreduce n={n}"))?;
+            ensure(ar.wire_w == 0.0, "allreduce wire")?;
+            let ag = collective::allgather_ring(&topo, 0, n, n, payload);
+            ensure(ag.cost == collective::allgather(&hw, n, payload), format!("allgather n={n}"))?;
+            let p = collective::p2p_range(&topo, 0, 1, n.saturating_sub(1), payload);
+            ensure(p.cost == collective::p2p(&hw, payload), "p2p")?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tune_argmin_matches_exhaustive_sweep() {
+    // The autotuner (plan-cached, parallel over the pool) must pick exactly
+    // the argmin an exhaustive serial sweep of the same seeded grid picks —
+    // same key, bit-equal score — deterministically per seed.
+    use piep::eval::tune::{run_tune, tune_grid, TuneOptions};
+    forall(113, 4, |r| r.next_u64() & 0xffff, |&seed| {
+        let opts = TuneOptions {
+            knobs: knobs(),
+            gpu_counts: vec![2, 4],
+            batches: vec![8, 32],
+            passes: 2,
+            base_seed: seed,
+            ..TuneOptions::default()
+        };
+        let res = run_tune(&opts);
+        // Exhaustive reference: same grid, serial, no plan cache.
+        let mut best: Option<(String, f64)> = None;
+        for cfg in tune_grid(&opts) {
+            let mut jt = Vec::new();
+            for pass in 0..opts.passes {
+                let seeded = cfg.clone().with_seed(opts.base_seed ^ (pass as u64 + 1));
+                let r = simulate_run(&seeded, &opts.hw, &opts.knobs);
+                jt.push(r.energy_per_token_j());
+            }
+            let score = piep::util::stats::mean(&jt);
+            let better = match &best {
+                None => true,
+                Some((bk, bs)) => score < *bs || (score == *bs && cfg.key() < *bk),
+            };
+            if better {
+                best = Some((cfg.key(), score));
+            }
+        }
+        let (want_key, want_score) = best.expect("non-empty grid");
+        let got = res.argmin_j_token.expect("tuner argmin");
+        ensure(
+            got.key == want_key,
+            format!("argmin key {} != exhaustive {}", got.key, want_key),
+        )?;
+        ensure(
+            got.j_per_token == want_score,
+            format!("argmin score {} != exhaustive {}", got.j_per_token, want_score),
+        )?;
+        // Determinism: the same options reproduce the same front.
+        let again = run_tune(&opts);
+        ensure(
+            again.pareto.iter().map(|c| &c.key).eq(res.pareto.iter().map(|c| &c.key)),
+            "pareto deterministic per seed",
+        )
+    });
+}
