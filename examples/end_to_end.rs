@@ -65,15 +65,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     {
         let cfg = RunConfig::new("Vicuna-13B", tp2pp, 4, 32).with_seed(99);
         let spec = piep::models::by_name(&cfg.model).unwrap();
-        let plan = piep::parallelism::lower(&spec, &campaign.hw, &campaign.knobs, &cfg);
+        let plan = piep::parallelism::compile(&spec, &campaign.hw, &campaign.knobs, &cfg);
         let (compute, coll, send, recv) = plan.op_census();
         println!(
-            "\n[plan] {} lowers to {} ops over {} ranks: {compute} compute, \
+            "\n[plan] {} compiles to {} ops over {} ranks: {compute} compute, \
              {coll} collectives, {send} sends / {recv} recvs on {} P2P edges",
             cfg.key(),
-            plan.ops.len(),
-            plan.num_ranks,
-            plan.num_edges,
+            plan.len(),
+            plan.num_ranks(),
+            plan.structure.num_edges,
         );
         // One stochastic execution per engine mode — bit-identical.
         let exec = |threads: usize| {
@@ -131,6 +131,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         ds.runs.len(),
         t1.elapsed(),
         ds.runs.len() as f64 / t1.elapsed().as_secs_f64()
+    );
+    println!(
+        "[l3] plan cache: {} structure lowerings, {} scalar rebinds, {} shape hits ({:.0}% reuse)",
+        ds.cache.structure_lowerings,
+        ds.cache.rebinds,
+        ds.cache.shape_hits,
+        100.0 * ds.cache.reuse_rate()
     );
 
     let (tr, te) = eval::split_train_test(&ds.runs, 0.7, 3);

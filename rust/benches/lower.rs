@@ -1,0 +1,107 @@
+//! Lowering-path benchmark (criterion-style output, harness = false).
+//!
+//! Times the three lowering paths of the compiled execution layer
+//! (DESIGN.md §12) for representative strategies:
+//!
+//!   lower/*/reference   interpreted `Vec<Op>` plan build (the reference)
+//!   lower/*/compile     direct structure-of-arrays `ExecPlan` lowering
+//!   lower/*/rebind      scalar-table rebind against a cached structure,
+//!                       amortized over a prompt-length shape grid
+//!
+//! plus the two-level `PlanCache` replaying a sweep-shaped grid. CI runs
+//! this target and uploads its output (`BENCH_lower.txt`) next to the
+//! `BENCH_sweep.json` lower/rebind columns.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use piep::config::{HwSpec, Parallelism, RunConfig, SimKnobs, Strategy};
+use piep::plan::PlanCache;
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut(usize)) -> f64 {
+    // Warmup.
+    f(0);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        f(i);
+    }
+    let dt = t0.elapsed();
+    let per = dt / iters as u32;
+    println!("bench:lower/{name:<30} time: {per:>12.2?}   ({iters} iters, total {dt:?})");
+    dt.as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let hw = HwSpec::default();
+    let knobs = SimKnobs {
+        sim_decode_steps: 8,
+        ..SimKnobs::default()
+    };
+    let tp2pp = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
+    let cases: Vec<(&str, RunConfig)> = vec![
+        ("vicuna7b_tp4", RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8)),
+        ("vicuna13b_pp4", RunConfig::new("Vicuna-13B", Parallelism::Pipeline, 4, 32)),
+        ("vicuna7b_dp4", RunConfig::new("Vicuna-7B", Parallelism::Data, 4, 32)),
+        ("vicuna13b_tp2xpp", RunConfig::new("Vicuna-13B", tp2pp, 4, 32)),
+    ];
+
+    for (label, cfg) in &cases {
+        let spec = piep::models::by_name(&cfg.model).unwrap();
+        let per_ref = bench(&format!("{label}/reference"), 50, |_| {
+            black_box(piep::parallelism::lower(&spec, &hw, &knobs, cfg));
+        });
+        let per_compile = bench(&format!("{label}/compile"), 50, |_| {
+            black_box(piep::parallelism::compile(&spec, &hw, &knobs, cfg));
+        });
+        // Rebind: same mesh, shapes varying only in prompt length (never a
+        // structural parameter).
+        let base = piep::parallelism::compile(&spec, &hw, &knobs, cfg);
+        let shapes: Vec<RunConfig> = [64usize, 128, 256, 512]
+            .iter()
+            .map(|&seq_in| {
+                let mut c = cfg.clone();
+                c.seq_in = seq_in;
+                c
+            })
+            .collect();
+        let per_rebind = bench(&format!("{label}/rebind"), 200, |i| {
+            let c = &shapes[i % shapes.len()];
+            black_box(piep::parallelism::rebind(&base.structure, &spec, &hw, &knobs, c));
+        });
+        println!(
+            "bench:lower/{label}/speedup           compile {:.2}x, rebind {:.2}x vs reference ({} ops)",
+            per_ref / per_compile.max(1e-12),
+            per_ref / per_rebind.max(1e-12),
+            base.len()
+        );
+    }
+
+    // Two-level cache on a sweep-shaped grid: strategies × batches ×
+    // prompt lengths, every access through `get_or_lower`.
+    let cache = PlanCache::new();
+    let mut grid: Vec<RunConfig> = Vec::new();
+    for (_, cfg) in &cases {
+        for b in [8usize, 16, 32] {
+            for seq_in in [64usize, 128, 256] {
+                let mut c = cfg.clone();
+                c.batch = b;
+                c.seq_in = seq_in;
+                grid.push(c);
+            }
+        }
+    }
+    let t0 = Instant::now();
+    for c in &grid {
+        black_box(cache.get_or_lower(c, &hw, &knobs));
+    }
+    let dt = t0.elapsed();
+    let st = cache.stats();
+    println!(
+        "bench:lower/cache/grid                 {} shapes in {dt:?} -> {} lowerings, {} rebinds, {} hits ({:.0}% reuse)",
+        grid.len(),
+        st.structure_lowerings,
+        st.rebinds,
+        st.shape_hits,
+        100.0 * st.reuse_rate()
+    );
+}

@@ -1,0 +1,110 @@
+//! `piep plan` — compiled-plan introspection: per-strategy op counts and
+//! collective bytes, and (with `--stats`) the structure-vs-scalar hit
+//! rates of the two-level plan cache over a shape grid, so rebinding wins
+//! are observable from the CLI.
+
+use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use crate::plan::PlanCache;
+use crate::util::cli::Args;
+use crate::util::table::{fnum, pct, Table};
+use crate::workload;
+
+/// Pure strategies plus every hybrid realizable on `gpus`, VRAM-gated.
+fn strategies_for(model: &str, gpus: usize, hw: &HwSpec) -> Vec<Parallelism> {
+    let spec = crate::models::by_name(model).unwrap_or_else(|| panic!("unknown model {model}"));
+    let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+    pars.extend(workload::hybrid_parallelisms(gpus));
+    pars.into_iter()
+        .filter(|&par| workload::runnable(&spec, par, gpus, hw))
+        .collect()
+}
+
+pub(crate) fn cmd_plan(args: &Args) {
+    let model = args.get_or("model", "Vicuna-7B").to_string();
+    let gpus = args.get_usize("gpus", 4);
+    let batch = args.get_usize("batch", 8);
+    let seq_out = args.get_usize("seq-out", 512);
+    let knobs = SimKnobs {
+        sim_decode_steps: args.get_usize("steps", 8),
+        ..SimKnobs::default()
+    };
+    let hw = HwSpec::default();
+    let spec = crate::models::by_name(&model).expect("model");
+    let pars = strategies_for(&model, gpus, &hw);
+
+    let mut shapes = Table::new(
+        "Plan — per-strategy compiled structure (ops, edges, collective bytes)",
+        &["Strategy", "Ops", "Compute", "Collective", "Send", "Recv", "Edges", "Comm KB/step", "Structure key"],
+    );
+    for &par in &pars {
+        let cfg = RunConfig::new(&model, par, gpus, batch).with_seq_out(seq_out);
+        let ep = crate::parallelism::compile(&spec, &hw, &knobs, &cfg);
+        let (compute, coll, send, recv) = ep.op_census();
+        shapes.row(vec![
+            par.label(),
+            ep.len().to_string(),
+            compute.to_string(),
+            coll.to_string(),
+            send.to_string(),
+            recv.to_string(),
+            ep.structure.num_edges.to_string(),
+            fnum(ep.scalars.comm_bytes_per_step / 1024.0, 1),
+            crate::parallelism::structure_key(&knobs, &cfg),
+        ]);
+    }
+    print!("{}", shapes.render());
+
+    if !args.has("stats") {
+        println!("(pass --stats for the two-level plan-cache hit rates over a shape grid)");
+        return;
+    }
+
+    // ---- cache stats: a batch × prompt-length shape grid per strategy ----
+    // Batches and prompt lengths vary the *shape*; the mesh structure only
+    // changes where a pipeline axis changes its microbatch count — so the
+    // grid shows how few full lowerings a sweep actually pays.
+    let batches = [4usize, 8, 16, 32];
+    let seq_ins = [64usize, 128, 256, 512];
+    let cache = PlanCache::new();
+    let mut per_strategy = Table::new(
+        "Plan — two-level cache over the shape grid (per strategy)",
+        &["Strategy", "Shapes", "Structure lowerings", "Scalar rebinds", "Reuse"],
+    );
+    for &par in &pars {
+        let before = cache.stats();
+        let mut shapes_n = 0usize;
+        for &b in &batches {
+            for &seq_in in &seq_ins {
+                let mut cfg = RunConfig::new(&model, par, gpus, b).with_seq_out(seq_out);
+                cfg.seq_in = seq_in;
+                cache.get_or_lower(&cfg, &hw, &knobs);
+                shapes_n += 1;
+            }
+        }
+        let after = cache.stats();
+        let lowered = after.structure_lowerings - before.structure_lowerings;
+        let rebound = after.rebinds - before.rebinds;
+        per_strategy.row(vec![
+            par.label(),
+            shapes_n.to_string(),
+            lowered.to_string(),
+            rebound.to_string(),
+            pct(100.0 * (shapes_n - lowered) as f64 / shapes_n as f64),
+        ]);
+    }
+    print!("{}", per_strategy.render());
+
+    let st = cache.stats();
+    let (structures, shapes_cached) = cache.sizes();
+    println!(
+        "[plan] {} shape accesses -> {} structure lowerings, {} scalar rebinds, {} shape hits \
+         ({} structures / {} shapes cached; {:.0}% of accesses avoided a full lowering)",
+        st.accesses(),
+        st.structure_lowerings,
+        st.rebinds,
+        st.shape_hits,
+        structures,
+        shapes_cached,
+        100.0 * st.reuse_rate()
+    );
+}

@@ -1,0 +1,49 @@
+//! `piep profile` — one profiling campaign, run summaries + attribution.
+
+use crate::config::{Parallelism, RunConfig};
+use crate::util::cli::Args;
+
+use super::campaign_from;
+
+pub(crate) fn cmd_profile(args: &Args) {
+    let model = args.get_or("model", "Vicuna-7B").to_string();
+    let par = Parallelism::parse(args.get_or("parallelism", "tensor")).expect("parallelism");
+    let gpus = args.get_usize("gpus", 2);
+    let batch = args.get_usize("batch", 8);
+    let seq = args.get_usize("seq-out", 512);
+    let campaign = campaign_from(args);
+    let cfg = RunConfig::new(&model, par, gpus, batch).with_seq_out(seq);
+    let ds = campaign.profile(&[cfg]);
+    println!("profiled {} passes of {}", ds.runs.len(), ds.runs[0].config.key());
+    for r in &ds.runs {
+        println!(
+            "  pass: wall {:.2}s  meter {:.1} J ({:.2} Wh)  nvml {:.1} J  comm {:.1} J  wait_mean {:.1} µs",
+            r.wall_s,
+            r.meter_total_j,
+            r.meter_total_j / 3600.0,
+            r.nvml_total_j,
+            r.comm_energy_j(),
+            r.wait_mean_s * 1e6,
+        );
+    }
+    println!("module attribution (pass 0, J):");
+    for (k, v) in &ds.runs[0].module_energy_j {
+        println!("  {:<20} {:>10.1}", k.name(), v);
+    }
+    if !ds.runs[0].comm_split_j.is_empty() {
+        println!("comm phase split (pass 0, J):");
+        for (k, (wait, xfer)) in &ds.runs[0].comm_split_j {
+            println!(
+                "  {:<20} sync-wait {:>9.1}   transfer {:>9.1}   ({:.0}% waiting)",
+                k.name(),
+                wait,
+                xfer,
+                100.0 * wait / (wait + xfer).max(1e-12)
+            );
+        }
+    }
+    if let Some(path) = args.get("save") {
+        crate::profiler::store::save_dataset(&ds.runs, path).expect("save dataset");
+        println!("saved dataset -> {path}");
+    }
+}

@@ -1,0 +1,72 @@
+//! `piep reproduce` and the individual experiment harness ids.
+
+use crate::report::{self, ReportCtx};
+use crate::util::cli::Args;
+
+use super::campaign_from;
+
+fn run_experiments(ctx: &mut ReportCtx, ids: &[String]) {
+    for id in ids {
+        match id.as_str() {
+            "figure2" => drop(report::figure2(ctx)),
+            "figure3" => drop(report::figure3(ctx)),
+            "figure4" => drop(report::figure4(ctx)),
+            "figure5" => drop(report::figure5(ctx)),
+            "figure6" => drop(report::figure6(ctx)),
+            "figure7" => drop(report::figure7(ctx)),
+            "figure8" => drop(report::figure8(ctx)),
+            "table2" => drop(report::table2(ctx)),
+            "table3" => drop(report::table3(ctx)),
+            "table4" => drop(report::table4(ctx)),
+            "table5" => drop(report::table5(ctx)),
+            "table6" => drop(report::table6(ctx)),
+            "table7" => drop(report::table7(ctx)),
+            "table8" => drop(report::table8(ctx)),
+            "table9" => drop(report::table9(ctx)),
+            "crosshw" => drop(report::crosshw(ctx)),
+            "sensitivity" => drop(report::sensitivity(ctx)),
+            "ablate-ring" => drop(report::ablate_ring(ctx)),
+            "parallelism-matrix" => drop(report::parallelism_matrix(ctx)),
+            "serving" => drop(report::serving(ctx)),
+            "tune-study" => drop(report::tune_study(ctx)),
+            other => eprintln!("unknown experiment id: {other}"),
+        }
+    }
+}
+
+const ALL_EXPERIMENTS: [&str; 21] = [
+    "figure2", "table2", "table3", "table4", "figure3", "figure4", "figure5", "figure6",
+    "table5", "table6", "table7", "table8", "figure7", "figure8", "table9",
+    // extension studies (not in the paper's evaluation; see DESIGN.md)
+    "crosshw", "sensitivity", "ablate-ring", "parallelism-matrix", "serving", "tune-study",
+];
+
+/// Does `id` name an individual experiment harness (dispatched without the
+/// `reproduce` prefix)?
+pub(crate) fn is_experiment_id(id: &str) -> bool {
+    id.starts_with("figure")
+        || id.starts_with("table")
+        || matches!(
+            id,
+            "crosshw" | "sensitivity" | "ablate-ring" | "parallelism-matrix" | "serving" | "tune-study"
+        )
+}
+
+pub(crate) fn cmd_reproduce(args: &Args) {
+    let out = args.get_or("out", "reports").to_string();
+    let mut ctx = ReportCtx::new(&out, campaign_from(args));
+    let ids: Vec<String> = if args.has("all") || args.positional.is_empty() {
+        ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect()
+    } else {
+        args.positional.clone()
+    };
+    let t0 = std::time::Instant::now();
+    run_experiments(&mut ctx, &ids);
+    eprintln!("[reproduce] {} experiments in {:?}", ids.len(), t0.elapsed());
+}
+
+pub(crate) fn cmd_single(args: &Args, id: &str) {
+    let out = args.get_or("out", "reports").to_string();
+    let mut ctx = ReportCtx::new(&out, campaign_from(args));
+    run_experiments(&mut ctx, &[id.to_string()]);
+}

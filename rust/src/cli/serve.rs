@@ -1,0 +1,126 @@
+//! `piep serve` — trace-driven serving driver.
+
+use crate::config::Parallelism;
+use crate::util::cli::Args;
+
+use super::campaign_from;
+
+pub(crate) fn cmd_serve(args: &Args) {
+    use crate::profiler::store;
+    use crate::serve::{serve, synthesize, ArrivalKind, Policy, ServeConfig, SynthSpec, Trace};
+    use crate::util::table::{fnum, pct, Table};
+
+    let smoke = args.has("smoke");
+    let model = args.get_or("model", "Vicuna-7B").to_string();
+    let par = Parallelism::parse(args.get_or("parallelism", "tensor")).expect("parallelism");
+    let gpus = args.get_usize("gpus", 4);
+    let policy = Policy::parse(args.get_or("policy", "fcfs")).expect("policy (fcfs|spf)");
+    let seed = args.get_u64("seed", 0x5EB5E);
+    let campaign = campaign_from(args);
+
+    // Trace source: a JSONL file, or a seeded synthetic generator.
+    let trace = if let Some(path) = args.get("trace") {
+        let t = Trace::load_jsonl(path).expect("load trace");
+        eprintln!("[serve] loaded {} requests from {path}", t.len());
+        t
+    } else {
+        let kind = ArrivalKind::parse(args.get_or("synthetic", "poisson")).expect("synthetic (poisson|bursty|diurnal)");
+        let spec = SynthSpec {
+            kind,
+            requests: args.get_usize("requests", if smoke { 8 } else { 32 }),
+            rate_rps: args.get_f64("rate", 2.0),
+            ..SynthSpec::default()
+        };
+        eprintln!("[serve] synthetic {} trace: {} requests at {} rps", kind.name(), spec.requests, spec.rate_rps);
+        synthesize(&spec, seed)
+    };
+
+    let mut cfg = ServeConfig::new(&model, par, gpus);
+    cfg.policy = policy;
+    cfg.base_seed = seed;
+    cfg.max_batch_requests = args.get_usize("max-batch", cfg.max_batch_requests);
+    cfg.max_batch_tokens = args.get_usize("max-batch-tokens", cfg.max_batch_tokens);
+    let t0 = std::time::Instant::now();
+    let res = serve(&trace, &cfg, &campaign.hw, &campaign.knobs);
+    let wall = t0.elapsed();
+
+    let mut per_req = Table::new(
+        "Serving — per-request energy attribution",
+        &["Req", "Prompt", "Out", "Arrive s", "Queue s", "TTFT s", "Latency s", "J", "J/token", "Sync J"],
+    );
+    for r in &res.requests {
+        if r.rejected {
+            per_req.row(vec![
+                format!("{}*", r.id),
+                r.prompt_tokens.to_string(),
+                r.output_tokens.to_string(),
+                fnum(r.arrival_s, 2),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "rejected".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
+        per_req.row(vec![
+            r.id.to_string(),
+            r.prompt_tokens.to_string(),
+            r.output_tokens.to_string(),
+            fnum(r.arrival_s, 2),
+            fnum(r.queue_delay_s(), 2),
+            fnum(r.first_token_s - r.arrival_s, 2),
+            fnum(r.latency_s(), 2),
+            fnum(r.energy_j, 1),
+            fnum(r.energy_per_token_j(), 1),
+            fnum(r.sync_energy_j, 1),
+        ]);
+    }
+    print!("{}", per_req.render());
+
+    let served: Vec<f64> = res.served().map(|r| r.energy_j).collect();
+    let mut summary = Table::new(
+        "Serving — summary",
+        &["Trace", "Policy", "Strategy", "Reqs", "Steps", "J/req p50", "J/req p99", "J/token", "Occup", "Sync%"],
+    );
+    summary.row(vec![
+        args.get("trace").map(|_| "jsonl".to_string()).unwrap_or_else(|| args.get_or("synthetic", "poisson").into()),
+        policy.name().into(),
+        cfg.parallelism.label(),
+        format!("{}/{}", served.len(), res.requests.len()),
+        res.steps.len().to_string(),
+        fnum(res.energy_percentile_j(50.0), 1),
+        fnum(res.energy_percentile_j(99.0), 1),
+        fnum(res.energy_per_token_j(), 2),
+        pct(100.0 * res.occupancy),
+        pct(100.0 * res.sync_share),
+    ]);
+    print!("{}", summary.render());
+    println!(
+        "[serve] {} steps over {:.1}s of traffic in {wall:?}; Σ energy {:.1} J; peak KV {:.2}/{:.2} GiB",
+        res.steps.len(),
+        res.makespan_s,
+        res.total_energy_j,
+        res.peak_kv_bytes / (1u64 << 30) as f64,
+        res.kv_budget_bytes / (1u64 << 30) as f64,
+    );
+    // Conservation check (the serve invariant; cheap enough to always run).
+    let req_j: f64 = res.requests.iter().map(|r| r.energy_j).sum();
+    assert!(
+        (req_j - res.total_energy_j).abs() / res.total_energy_j.max(1e-12) < 1e-9,
+        "per-request attribution must conserve batch energy"
+    );
+
+    let out = args.get_or("out", "reports");
+    for (t, slug) in [(&per_req, "serving_requests"), (&summary, "serving_summary")] {
+        match t.save_csv(out, slug) {
+            Ok(path) => println!("  -> {path}"),
+            Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
+        }
+    }
+    if let Some(path) = args.get("save") {
+        store::save_serve_records(&res.requests, path).expect("save serving records");
+        println!("saved per-request records (piep-serve-v3) -> {path}");
+    }
+}

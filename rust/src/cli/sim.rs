@@ -1,0 +1,67 @@
+//! `piep runtime` / `piep bench-sim` — AOT artifact validation and quick
+//! simulator throughput numbers.
+
+use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use crate::util::cli::Args;
+
+pub(crate) fn cmd_runtime(args: &Args) {
+    let dir = args.get_or("artifacts", "artifacts");
+    let rt = match crate::runtime::Runtime::load(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime: {e}");
+            eprintln!("hint: run `make artifacts` to generate the AOT manifest + HLO files");
+            return;
+        }
+    };
+    println!("{} — {} AOT modules validated", rt.platform_name(), rt.modules.len());
+    for c in rt.modules.values() {
+        println!(
+            "  {:<16} inputs {:?} -> output {:?}",
+            c.info.name, c.info.inputs, c.info.output
+        );
+    }
+    // Exercise the prediction hot path (native ridge evaluation).
+    let mut rng = crate::util::rng::Rng::new(7);
+    let rows: Vec<Vec<f64>> = (0..rt.predict_batch)
+        .map(|_| (0..rt.feature_dim).map(|_| rng.range(-1.0, 1.0)).collect())
+        .collect();
+    let w: Vec<f64> = (0..rt.feature_dim).map(|_| rng.range(-0.5, 0.5)).collect();
+    let t0 = std::time::Instant::now();
+    let y = rt.predict_batch(&rows, &w, 0.25).expect("predict_batch");
+    println!(
+        "ridge_predict hot path: {} rows in {:?} (first: {:+.4})",
+        y.len(),
+        t0.elapsed(),
+        y.first().copied().unwrap_or(0.0)
+    );
+    let functional = rt
+        .random_inputs("block", 1, 0.05)
+        .and_then(|inputs| rt.execute("block", &inputs));
+    match functional {
+        Err(e) => println!("functional forwards: {e}"),
+        Ok(_) => println!("functional forwards: PJRT backend active"),
+    }
+}
+
+pub(crate) fn cmd_bench_sim(args: &Args) {
+    let knobs = SimKnobs {
+        sim_decode_steps: args.get_usize("steps", 16),
+        ..SimKnobs::default()
+    };
+    let hw = HwSpec::default();
+    let cfg = RunConfig::new("Llama-70B", Parallelism::Tensor, 4, 32);
+    let t0 = std::time::Instant::now();
+    let n = args.get_usize("runs", 20);
+    let mut samples = 0usize;
+    for seed in 0..n as u64 {
+        let r = crate::simulator::simulate_run(&cfg.clone().with_seed(seed), &hw, &knobs);
+        samples += r.wait_samples.len();
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{n} Llama-70B g=4 runs in {dt:?} ({:.1} runs/s, {} wait samples)",
+        n as f64 / dt.as_secs_f64(),
+        samples
+    );
+}

@@ -1,0 +1,283 @@
+//! `piep sweep` — scenario sweep driver, the `--bench` perf-trajectory
+//! recorder (`BENCH_sweep.json`), and the CI regression gate.
+
+use crate::config::RunConfig;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::campaign_from;
+
+/// `BENCH_sweep.json` columns that legitimately carry `null` in the
+/// committed seed (the authoring container has no toolchain to measure
+/// wall-times). A null anywhere else means a corrupt or hand-edited
+/// baseline — the gate fails loudly instead of silently disarming.
+const NULLABLE_COLUMNS: [&str; 11] = [
+    "threads",
+    "configs",
+    "runs",
+    "serial_wall_s",
+    "parallel_wall_s",
+    "speedup",
+    "lower_wall_s",
+    "rebind_wall_s",
+    "rebind_speedup",
+    "structure_lowerings",
+    "shape_rebinds",
+];
+
+/// Schema-tolerant baseline validation: v1 baselines simply lack the
+/// lower/rebind columns added in v2 (absence is fine — the gate only
+/// compares `parallel_wall_s` on a matching workload), and unknown *extra*
+/// columns are ignored. Only two things are fatal: a schema outside the
+/// `piep-sweep-bench-*` family, and a null in a column not known to be
+/// nullable.
+fn validate_baseline(path: &str, base: &Json) {
+    match base.get("schema").and_then(Json::as_str) {
+        Some(schema) if schema.starts_with("piep-sweep-bench-") => {}
+        other => {
+            eprintln!("sweep --baseline {path}: unrecognized schema {other:?} (expected piep-sweep-bench-*)");
+            std::process::exit(2);
+        }
+    }
+    if let Some(obj) = base.as_obj() {
+        for (key, value) in obj {
+            if *value == Json::Null && !NULLABLE_COLUMNS.contains(&key.as_str()) {
+                eprintln!(
+                    "sweep --baseline {path}: unexpected null in column {key:?} — the baseline is \
+                     corrupt; regenerate it with `piep sweep --bench --save-bench {path}`"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+pub(crate) fn cmd_sweep(args: &Args) {
+    use crate::eval::sweep::{paper_scenarios, run_sweep, SweepOptions};
+    use crate::util::json::{arr, num, obj, s};
+    use crate::util::table::{fnum, pct, Table};
+
+    let campaign = {
+        let mut c = campaign_from(args);
+        // The sweep covers a much larger grid than one experiment; default
+        // to a lighter per-run sampling unless overridden.
+        c.passes = args.get_usize("passes", 3);
+        c.knobs.sim_decode_steps = args.get_usize("steps", 8);
+        c
+    };
+    let scenarios = paper_scenarios(&campaign.hw);
+    let total_cfgs: usize = scenarios.iter().map(|s| s.configs.len()).sum();
+    eprintln!(
+        "[sweep] {} scenarios, {} configs × {} passes",
+        scenarios.len(),
+        total_cfgs,
+        campaign.passes
+    );
+    let opts = SweepOptions {
+        campaign,
+        folds: args.get_usize("folds", 3),
+        parallel: !args.has("serial"),
+        threads: args.get_usize("threads", 0),
+        ..SweepOptions::default()
+    };
+
+    // --bench: time the serial baseline against the parallel engine on the
+    // same grid, time one full lowering per config against the two-level
+    // cache's structure-sharing rebind path, and record the
+    // perf-trajectory file. With --baseline FILE, compare against a
+    // previously committed baseline and fail (exit 2) on a >2× parallel
+    // wall-time regression — the CI perf gate.
+    if args.has("bench") {
+        // Read the committed baseline before anything overwrites it. A
+        // missing or corrupt baseline is a misconfigured gate, not a
+        // dormant one — fail loudly rather than silently disarming.
+        let baseline = args.get("baseline").map(|p| {
+            let src = std::fs::read_to_string(p).unwrap_or_else(|e| {
+                eprintln!("sweep --baseline {p}: unreadable ({e})");
+                std::process::exit(2);
+            });
+            let parsed = Json::parse(&src).unwrap_or_else(|e| {
+                eprintln!("sweep --baseline {p}: invalid JSON ({e})");
+                std::process::exit(2);
+            });
+            validate_baseline(p, &parsed);
+            parsed
+        });
+        let t0 = std::time::Instant::now();
+        let serial = run_sweep(&scenarios, &SweepOptions { parallel: false, ..opts.clone() });
+        let serial_s = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let parallel = run_sweep(&scenarios, &SweepOptions { parallel: true, ..opts.clone() });
+        let parallel_s = t1.elapsed().as_secs_f64();
+        let threads = crate::util::par::effective_threads(opts.threads);
+        println!(
+            "sweep bench: serial {serial_s:.2}s vs parallel {parallel_s:.2}s on {threads} threads ({:.2}x)",
+            serial_s / parallel_s.max(1e-9)
+        );
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.mape, b.mape, "{}: serial/parallel MAPE must agree", a.label);
+        }
+
+        // Lower-vs-rebind microtiming on the same grid: every config
+        // compiled from scratch (one full structure lowering each) vs the
+        // grid replayed through the two-level cache (one lowering per mesh
+        // topology, scalar rebinds for the rest).
+        let all_cfgs: Vec<&RunConfig> = scenarios.iter().flat_map(|s| s.configs.iter()).collect();
+        let bench_knobs = &opts.campaign.knobs;
+        let bench_hw = &opts.campaign.hw;
+        let t2 = std::time::Instant::now();
+        for cfg in &all_cfgs {
+            let spec = crate::models::by_name(&cfg.model).expect("model");
+            std::hint::black_box(crate::parallelism::compile(&spec, bench_hw, bench_knobs, cfg));
+        }
+        let lower_s = t2.elapsed().as_secs_f64();
+        let cache = crate::plan::PlanCache::new();
+        let t3 = std::time::Instant::now();
+        for cfg in &all_cfgs {
+            std::hint::black_box(cache.get_or_lower(cfg, bench_hw, bench_knobs));
+        }
+        let rebind_s = t3.elapsed().as_secs_f64();
+        let cstats = cache.stats();
+        println!(
+            "sweep bench: lower {:.1}ms vs cached rebind {:.1}ms over {} configs ({:.2}x; {} structures, {} rebinds)",
+            lower_s * 1e3,
+            rebind_s * 1e3,
+            all_cfgs.len(),
+            lower_s / rebind_s.max(1e-9),
+            cstats.structure_lowerings,
+            cstats.rebinds
+        );
+
+        let path = args.get_or("save-bench", "BENCH_sweep.json");
+        let j = obj(vec![
+            ("schema", s("piep-sweep-bench-v2")),
+            ("threads", num(threads as f64)),
+            ("passes", num(opts.campaign.passes as f64)),
+            ("sim_decode_steps", num(opts.campaign.knobs.sim_decode_steps as f64)),
+            ("configs", num(total_cfgs as f64)),
+            ("runs", num(parallel.iter().map(|r| r.runs).sum::<usize>() as f64)),
+            ("serial_wall_s", num(serial_s)),
+            ("parallel_wall_s", num(parallel_s)),
+            ("speedup", num(serial_s / parallel_s.max(1e-9))),
+            ("lower_wall_s", num(lower_s)),
+            ("rebind_wall_s", num(rebind_s)),
+            ("rebind_speedup", num(lower_s / rebind_s.max(1e-9))),
+            ("structure_lowerings", num(cstats.structure_lowerings as f64)),
+            ("shape_rebinds", num(cstats.rebinds as f64)),
+            (
+                "scenarios",
+                arr(parallel
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("label", s(&r.label)),
+                            ("configs", num(r.configs as f64)),
+                            ("runs", num(r.runs as f64)),
+                            ("mape", num(r.mape)),
+                            ("sync_share", num(r.sync_share)),
+                            ("wall_s", num(r.wall_s)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ]);
+        std::fs::write(path, j.render()).expect("write bench file");
+        println!("saved sweep baseline -> {path}");
+        // Regression gate: only armed once a baseline with real wall-times
+        // has been committed (the seed file carries nulls), and only when
+        // the baseline was measured on the same workload — comparing
+        // wall-times across different grids/passes/steps is meaningless.
+        if let Some(base) = baseline.as_ref() {
+            let basef = |k: &str| base.get(k).and_then(|v| v.as_f64());
+            let comparable = basef("passes") == Some(opts.campaign.passes as f64)
+                && basef("sim_decode_steps") == Some(opts.campaign.knobs.sim_decode_steps as f64)
+                && basef("configs") == Some(total_cfgs as f64);
+            match basef("parallel_wall_s") {
+                Some(base_wall) if comparable => {
+                    let ratio = parallel_s / base_wall.max(1e-9);
+                    println!("baseline parallel wall: {base_wall:.2}s -> ratio {ratio:.2}x (gate: 2.0x)");
+                    if ratio > 2.0 {
+                        eprintln!(
+                            "sweep regression: parallel wall {parallel_s:.2}s exceeds 2x baseline {base_wall:.2}s"
+                        );
+                        std::process::exit(2);
+                    }
+                }
+                Some(_) => println!(
+                    "baseline workload differs (passes/steps/configs); regression gate skipped"
+                ),
+                // A baseline without measurements disarms the gate. That is
+                // only legitimate for the committed seed on a fresh cache
+                // (CI passes --allow-null-baseline for exactly that case);
+                // a *restored* null baseline means the gate is
+                // misconfigured — fail loudly instead of silently skipping.
+                None if args.has("allow-null-baseline") => {
+                    println!("baseline has no wall-times yet; regression gate dormant (first run)")
+                }
+                None => {
+                    eprintln!(
+                        "sweep --baseline: baseline has null wall-times, so the >2x regression \
+                         gate cannot arm. If this is the first run on a fresh cache (the \
+                         committed seed), pass --allow-null-baseline; otherwise regenerate the \
+                         baseline with `piep sweep --bench --save-bench BENCH_sweep.json`."
+                    );
+                    std::process::exit(2);
+                }
+            }
+        }
+        return;
+    }
+
+    let t0 = std::time::Instant::now();
+    let results = run_sweep(&scenarios, &opts);
+    let wall = t0.elapsed();
+
+    let mut summary = Table::new(
+        "Sweep — PIE-P cross-validated MAPE per scenario (pure + hybrid)",
+        &["Scenario", "Configs", "Runs", "MAPE", "±se", "Sync%", "Wall s"],
+    );
+    for r in &results {
+        summary.row(vec![
+            r.label.clone(),
+            r.configs.to_string(),
+            r.runs.to_string(),
+            pct(r.mape),
+            fnum(r.std_err, 2),
+            pct(100.0 * r.sync_share),
+            fnum(r.wall_s, 1),
+        ]);
+    }
+    print!("{}", summary.render());
+    println!(
+        "[sweep] total {:?} ({}, {} threads)\n",
+        wall,
+        if opts.parallel { "parallel" } else { "serial" },
+        crate::util::par::effective_threads(opts.threads)
+    );
+
+    let mut per_config = Table::new(
+        "Sweep — per-config MAPE",
+        &["Scenario", "Config", "MAPE", "±se", "n"],
+    );
+    for r in &results {
+        for c in &r.per_config {
+            per_config.row(vec![
+                r.label.clone(),
+                c.key.clone(),
+                pct(c.mape),
+                fnum(c.std_err, 2),
+                c.n.to_string(),
+            ]);
+        }
+    }
+    if args.has("per-config") {
+        print!("{}", per_config.render());
+    }
+    let out = args.get_or("out", "reports");
+    for (t, slug) in [(&summary, "sweep_summary"), (&per_config, "sweep_per_config")] {
+        match t.save_csv(out, slug) {
+            Ok(path) => println!("  -> {path}"),
+            Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! `piep train` / `piep predict` — fitting PIE-P and the per-run
+//! prediction demo.
+
+use crate::config::{Parallelism, RunConfig};
+use crate::util::cli::Args;
+
+use super::campaign_from;
+
+pub(crate) fn cmd_train(args: &Args) {
+    use crate::eval;
+    use crate::models::Family;
+    use crate::predict::PiepOptions;
+    use crate::workload;
+
+    let family = Family::parse(args.get_or("family", "vicuna")).expect("family");
+    let campaign = campaign_from(args);
+    // Reuse a saved dataset when provided (offline-profiling workflow).
+    let ds = if let Some(path) = args.get("dataset") {
+        crate::profiler::store::load_dataset(path).expect("load dataset")
+    } else {
+        let grid = workload::family_grid_tp(family, &campaign.hw);
+        eprintln!("[profile] {} configs × {} passes", grid.len(), campaign.passes);
+        let ds = campaign.profile(&grid);
+        if let Some(path) = args.get("save") {
+            crate::profiler::store::save_dataset(&ds.runs, path).expect("save dataset");
+            eprintln!("saved dataset -> {path}");
+        }
+        ds
+    };
+    let (m, se) = eval::cv_mape(&ds.runs, &ds.sync_db, PiepOptions::default(), 3, 7);
+    println!("{}: 3-fold CV MAPE {:.2}% (±{:.2})", family.name(), m, se);
+    if let Some(path) = args.get("save-model") {
+        let model = crate::predict::PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
+        crate::profiler::store::save_model(&model, path).expect("save model");
+        println!("saved fitted PIE-P -> {path}");
+    }
+}
+
+pub(crate) fn cmd_predict(args: &Args) {
+    use crate::predict::{PieP, PiepOptions};
+    use crate::workload;
+
+    let model = args.get_or("model", "Vicuna-7B").to_string();
+    let spec = crate::models::by_name(&model).expect("model");
+    let par = Parallelism::parse(args.get_or("parallelism", "tensor")).expect("parallelism");
+    let gpus = args.get_usize("gpus", 2);
+    let batch = args.get_usize("batch", 8);
+    let campaign = campaign_from(args);
+
+    // Train on the rest of the family (leave-this-variant-out).
+    let train_grid: Vec<RunConfig> = workload::family_grid_tp(spec.family, &campaign.hw)
+        .into_iter()
+        .filter(|c| c.model != model)
+        .collect();
+    eprintln!("[profile] training on {} configs", train_grid.len());
+    let ds = campaign.profile(&train_grid);
+    let piep = PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
+
+    let cfg = RunConfig::new(&model, par, gpus, batch).with_seed(424242);
+    let target = crate::simulator::simulate_run(&cfg, &campaign.hw, &campaign.knobs);
+    let pred = piep.predict_total(&target, &ds.sync_db);
+    println!("config: {}", cfg.key());
+    println!("predicted energy : {:>10.1} J  ({:.3} Wh)", pred, pred / 3600.0);
+    println!(
+        "measured (meter) : {:>10.1} J  ({:.3} Wh)",
+        target.meter_total_j,
+        target.meter_total_j / 3600.0
+    );
+    println!(
+        "error            : {:>9.1}%",
+        100.0 * (pred - target.meter_total_j).abs() / target.meter_total_j
+    );
+    println!("\nmodule-level predictions (J):");
+    for kind in crate::simulator::timeline::ModuleKind::ALL {
+        if let Some(p) = piep.predict_module(&target, kind, &ds.sync_db) {
+            let truth = target.module_energy_j.get(&kind).copied().unwrap_or(0.0);
+            println!("  {:<20} pred {:>9.1}   measured {:>9.1}", kind.name(), p, truth);
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! `piep tune` — the energy-aware strategy autotuner driver.
+
+use crate::config::{Parallelism, SimKnobs};
+use crate::util::cli::Args;
+
+pub(crate) fn cmd_tune(args: &Args) {
+    use crate::cluster::{GpuSpec, LinkTier};
+    use crate::config::{HwSpec, Strategy};
+    use crate::eval::tune::{run_tune, TuneOptions};
+    use crate::util::table::{fnum, pct, Table};
+
+    let smoke = args.has("smoke");
+
+    // ---- fleet ----
+    // --nodes/--gpus-per-node + --intra/--inter tiers + --fleet GPU classes
+    // describe a cluster; without --nodes the flat single-node testbed is
+    // used. --smoke pins the CI grid: TP/PP/tp2xpp on a 2-node NVLink+IB
+    // fleet.
+    let nodes = args.get_usize("nodes", if smoke { 2 } else { 1 });
+    let default_gpn = if smoke { 2 } else { HwSpec::default().num_gpus };
+    let gpn = args.get_usize("gpus-per-node", default_gpn);
+    // Any explicit fleet-shaping flag (including --nodes 1 / a bare
+    // --gpus-per-node) builds a cluster testbed; only a flagless
+    // non-smoke invocation keeps the default flat box.
+    let cluster_requested = smoke
+        || args.has("nodes")
+        || args.has("gpus-per-node")
+        || args.has("intra")
+        || args.has("inter")
+        || args.has("fleet");
+    let hw = if cluster_requested {
+        let intra = LinkTier::parse(args.get_or("intra", "nvlink")).expect("intra tier (nvlink|pcie|ib)");
+        let inter = LinkTier::parse(args.get_or("inter", "ib")).expect("inter tier (nvlink|pcie|ib)");
+        let fleet: Vec<GpuSpec> = args
+            .get("fleet")
+            .map(|s| {
+                s.split(',')
+                    .map(|name| GpuSpec::parse(name.trim()).unwrap_or_else(|| panic!("unknown GPU class {name}")))
+                    .collect()
+            })
+            .unwrap_or_default();
+        HwSpec::cluster_testbed(nodes, gpn, intra, inter, &fleet)
+    } else {
+        HwSpec::default()
+    };
+
+    // ---- search space ----
+    let model = args.get_or("model", "Vicuna-7B").to_string();
+    let gpu_counts: Vec<usize> = args
+        .get("gpus")
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| {
+            let mut out: Vec<usize> = [2usize, 4, 8].iter().copied().filter(|&g| g <= hw.num_gpus).collect();
+            if out.is_empty() {
+                out.push(hw.num_gpus);
+            }
+            out
+        });
+    let batches: Vec<usize> = args
+        .get("batches")
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| if smoke { vec![8, 16] } else { vec![8, 16, 32] });
+    let strategies = if smoke {
+        Some(vec![
+            crate::config::Parallelism::Tensor,
+            crate::config::Parallelism::Pipeline,
+            crate::config::Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap(),
+        ])
+    } else {
+        args.get("strategies").map(|s| {
+            s.split(',')
+                .map(|l| Parallelism::parse(l.trim()).unwrap_or_else(|| panic!("bad strategy label {l}")))
+                .collect()
+        })
+    };
+
+    let opts = TuneOptions {
+        hw,
+        knobs: SimKnobs {
+            sim_decode_steps: args.get_usize("steps", if smoke { 4 } else { 8 }),
+            ..SimKnobs::default()
+        },
+        model,
+        gpu_counts,
+        batches,
+        seq_in: args.get_usize("seq-in", 128),
+        seq_out: args.get_usize("seq-out", 512),
+        passes: args.get_usize("passes", if smoke { 2 } else { 3 }),
+        base_seed: args.get_u64("seed", 0x70E5),
+        slo_ms_per_token: args.get("slo-ms").and_then(|v| v.parse().ok()),
+        strategies,
+        threads: args.get_usize("threads", 0),
+    };
+
+    eprintln!(
+        "[tune] {} on {} GPUs ({} node(s)): {} batches × gpu counts {:?}{}",
+        opts.model,
+        opts.hw.num_gpus,
+        opts.hw.topo().nodes_spanned(0, opts.hw.num_gpus).max(1),
+        opts.batches.len(),
+        opts.gpu_counts,
+        opts.slo_ms_per_token.map(|s| format!(", SLO {s} ms/token")).unwrap_or_default()
+    );
+    let t0 = std::time::Instant::now();
+    let res = run_tune(&opts);
+    let wall = t0.elapsed();
+
+    let row_of = |c: &crate::eval::tune::TuneCandidate| {
+        vec![
+            c.parallelism.label(),
+            c.gpus.to_string(),
+            c.batch.to_string(),
+            fnum(c.j_per_token, 3),
+            fnum(c.j_per_request, 1),
+            fnum(c.ms_per_token, 2),
+            pct(100.0 * c.sync_share),
+            if c.meets_slo { "yes" } else { "no" }.into(),
+        ]
+    };
+    let headers = ["Strategy", "GPUs", "Batch", "J/token", "J/req", "ms/token", "Sync%", "SLO ok"];
+
+    let mut all = Table::new("Tune — scored deployment candidates (J/token ascending)", &headers);
+    for c in &res.candidates {
+        all.row(row_of(c));
+    }
+    print!("{}", all.render());
+
+    let mut front = Table::new("Tune — Pareto front over (J/token, ms/token), SLO-feasible", &headers);
+    for c in &res.pareto {
+        front.row(row_of(c));
+    }
+    print!("{}", front.render());
+
+    let argmin_headers = ["Objective", "Strategy", "GPUs", "Batch", "J/token", "J/req", "ms/token"];
+    let mut argmin = Table::new("Tune — argmin deployments", &argmin_headers);
+    for (label, c) in [("J/token", &res.argmin_j_token), ("J/request", &res.argmin_j_request)] {
+        if let Some(c) = c {
+            argmin.row(vec![
+                label.into(),
+                c.parallelism.label(),
+                c.gpus.to_string(),
+                c.batch.to_string(),
+                fnum(c.j_per_token, 3),
+                fnum(c.j_per_request, 1),
+                fnum(c.ms_per_token, 2),
+            ]);
+        }
+    }
+    print!("{}", argmin.render());
+    println!(
+        "[tune] {} candidates ({} on the Pareto front) in {wall:?}; \
+         plan cache: {} lowerings, {} rebinds, {} shape hits",
+        res.candidates.len(),
+        res.pareto.len(),
+        res.cache.structure_lowerings,
+        res.cache.rebinds,
+        res.cache.shape_hits
+    );
+
+    let out = args.get_or("out", "reports");
+    for (t, slug) in [(&all, "tune_candidates"), (&front, "tune_pareto"), (&argmin, "tune_argmin")] {
+        match t.save_csv(out, slug) {
+            Ok(path) => println!("  -> {path}"),
+            Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
+        }
+    }
+}

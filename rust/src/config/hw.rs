@@ -256,6 +256,12 @@ pub struct SimKnobs {
     /// campaigns already parallelize across runs), 0 ⇒ available cores.
     /// Serial and parallel execution are bit-identical.
     pub engine_threads: usize,
+    /// Run the interpreted reference path (`Vec<Op>` plan + op-enum
+    /// engine walk) instead of the compiled structure-of-arrays
+    /// `plan::ExecPlan` (DESIGN.md §12). The two are bit-identical
+    /// (property-tested); the reference mode exists to pin that contract
+    /// and for debugging the compiled layer.
+    pub reference_engine: bool,
 }
 
 impl Default for SimKnobs {
@@ -280,6 +286,7 @@ impl Default for SimKnobs {
             background_mean_w: 155.0,
             sim_decode_steps: 24,
             engine_threads: 1,
+            reference_engine: false,
         }
     }
 }

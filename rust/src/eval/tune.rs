@@ -19,8 +19,8 @@
 
 use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
 use crate::models;
-use crate::plan::PlanCache;
-use crate::simulator::simulate_run_planned;
+use crate::plan::{CacheStats, PlanCache};
+use crate::simulator::{simulate_run_planned, simulate_run_reference};
 use crate::util::par;
 use crate::util::stats;
 use crate::workload;
@@ -102,6 +102,10 @@ pub struct TuneResult {
     pub argmin_j_token: Option<TuneCandidate>,
     /// SLO-feasible argmin by J/request.
     pub argmin_j_request: Option<TuneCandidate>,
+    /// Two-level plan-cache counters of the search: at most one full
+    /// structure lowering per mesh topology; the batch axis and repeated
+    /// passes rebind/hit (asserted by the integration tests).
+    pub cache: CacheStats,
 }
 
 /// Enumerate the search grid: (parallelism, gpus, batch), VRAM-gated.
@@ -136,8 +140,12 @@ fn score(cfg: &RunConfig, opts: &TuneOptions, cache: &PlanCache) -> TuneCandidat
     let (mut sync_j, mut comm_j) = (0.0f64, 0.0f64);
     for pass in 0..opts.passes.max(1) {
         let seeded = cfg.clone().with_seed(opts.base_seed ^ (pass as u64 + 1));
-        let plan = cache.get_or_lower(&seeded, &opts.hw, &opts.knobs);
-        let r = simulate_run_planned(&seeded, &opts.hw, &opts.knobs, &plan);
+        let r = if opts.knobs.reference_engine {
+            simulate_run_reference(&seeded, &opts.hw, &opts.knobs)
+        } else {
+            let plan = cache.get_or_lower(&seeded, &opts.hw, &opts.knobs);
+            simulate_run_planned(&seeded, &opts.hw, &opts.knobs, &plan)
+        };
         jt.push(r.energy_per_token_j());
         jr.push(r.true_total_j / cfg.batch.max(1) as f64);
         ms.push(r.time_per_token_s() * 1e3);
@@ -198,6 +206,7 @@ pub fn run_tune(opts: &TuneOptions) -> TuneResult {
         pareto,
         argmin_j_token,
         argmin_j_request,
+        cache: cache.stats(),
     }
 }
 

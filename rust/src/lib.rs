@@ -19,6 +19,7 @@
 //! binary executes real module forwards — Python never runs at inference
 //! time. See DESIGN.md for the system inventory and experiment index.
 
+pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod eval;

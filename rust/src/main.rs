@@ -1,792 +1,7 @@
-//! `piep` — CLI for the PIE-P reproduction.
-//!
-//! Subcommands:
-//!   profile     run a profiling campaign and print run summaries
-//!   train       fit PIE-P on a family and report CV error
-//!   predict     per-run prediction demo on a config
-//!   sweep       parallel sweep over the full paper + hybrid scenario grid
-//!   serve       trace-driven serving: continuous batching + per-request energy
-//!   tune        energy-aware strategy autotuner over a (multi-node) fleet
-//!   reproduce   regenerate paper tables/figures (`--all` or ids)
-//!   figure2..8, table2..9   individual experiments
-//!   crosshw, sensitivity, ablate-ring, parallelism-matrix, serving, tune-study
-//!               extension studies beyond the paper's evaluation
-//!   runtime     validate AOT artifacts, exercise the prediction hot path
-//!   bench-sim   quick simulator throughput numbers
-//!
-//! Common flags: --passes N --steps N --seed N --out DIR --threads N
-
-use piep::config::{Parallelism, RunConfig, SimKnobs};
-use piep::profiler::Campaign;
-use piep::report::{self, ReportCtx};
-use piep::util::cli::Args;
-
-fn campaign_from(args: &Args) -> Campaign {
-    let mut c = Campaign::default();
-    c.passes = args.get_usize("passes", 5);
-    c.knobs = SimKnobs {
-        sim_decode_steps: args.get_usize("steps", 16),
-        engine_threads: args.get_usize("engine-threads", 1),
-        ..SimKnobs::default()
-    };
-    c.base_seed = args.get_u64("seed", c.base_seed);
-    c.threads = args.get_usize("threads", 0);
-    c
-}
-
-fn cmd_profile(args: &Args) {
-    let model = args.get_or("model", "Vicuna-7B").to_string();
-    let par = Parallelism::parse(args.get_or("parallelism", "tensor")).expect("parallelism");
-    let gpus = args.get_usize("gpus", 2);
-    let batch = args.get_usize("batch", 8);
-    let seq = args.get_usize("seq-out", 512);
-    let campaign = campaign_from(args);
-    let cfg = RunConfig::new(&model, par, gpus, batch).with_seq_out(seq);
-    let ds = campaign.profile(&[cfg]);
-    println!("profiled {} passes of {}", ds.runs.len(), ds.runs[0].config.key());
-    for r in &ds.runs {
-        println!(
-            "  pass: wall {:.2}s  meter {:.1} J ({:.2} Wh)  nvml {:.1} J  comm {:.1} J  wait_mean {:.1} µs",
-            r.wall_s,
-            r.meter_total_j,
-            r.meter_total_j / 3600.0,
-            r.nvml_total_j,
-            r.comm_energy_j(),
-            r.wait_mean_s * 1e6,
-        );
-    }
-    println!("module attribution (pass 0, J):");
-    for (k, v) in &ds.runs[0].module_energy_j {
-        println!("  {:<20} {:>10.1}", k.name(), v);
-    }
-    if !ds.runs[0].comm_split_j.is_empty() {
-        println!("comm phase split (pass 0, J):");
-        for (k, (wait, xfer)) in &ds.runs[0].comm_split_j {
-            println!(
-                "  {:<20} sync-wait {:>9.1}   transfer {:>9.1}   ({:.0}% waiting)",
-                k.name(),
-                wait,
-                xfer,
-                100.0 * wait / (wait + xfer).max(1e-12)
-            );
-        }
-    }
-    if let Some(path) = args.get("save") {
-        piep::profiler::store::save_dataset(&ds.runs, path).expect("save dataset");
-        println!("saved dataset -> {path}");
-    }
-}
-
-fn cmd_train(args: &Args) {
-    use piep::eval;
-    use piep::models::Family;
-    use piep::predict::PiepOptions;
-    use piep::workload;
-
-    let family = Family::parse(args.get_or("family", "vicuna")).expect("family");
-    let campaign = campaign_from(args);
-    // Reuse a saved dataset when provided (offline-profiling workflow).
-    let ds = if let Some(path) = args.get("dataset") {
-        piep::profiler::store::load_dataset(path).expect("load dataset")
-    } else {
-        let grid = workload::family_grid_tp(family, &campaign.hw);
-        eprintln!("[profile] {} configs × {} passes", grid.len(), campaign.passes);
-        let ds = campaign.profile(&grid);
-        if let Some(path) = args.get("save") {
-            piep::profiler::store::save_dataset(&ds.runs, path).expect("save dataset");
-            eprintln!("saved dataset -> {path}");
-        }
-        ds
-    };
-    let (m, se) = eval::cv_mape(&ds.runs, &ds.sync_db, PiepOptions::default(), 3, 7);
-    println!("{}: 3-fold CV MAPE {:.2}% (±{:.2})", family.name(), m, se);
-    if let Some(path) = args.get("save-model") {
-        let model = piep::predict::PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
-        piep::profiler::store::save_model(&model, path).expect("save model");
-        println!("saved fitted PIE-P -> {path}");
-    }
-}
-
-fn cmd_predict(args: &Args) {
-    use piep::predict::{PieP, PiepOptions};
-    use piep::workload;
-
-    let model = args.get_or("model", "Vicuna-7B").to_string();
-    let spec = piep::models::by_name(&model).expect("model");
-    let par = Parallelism::parse(args.get_or("parallelism", "tensor")).expect("parallelism");
-    let gpus = args.get_usize("gpus", 2);
-    let batch = args.get_usize("batch", 8);
-    let campaign = campaign_from(args);
-
-    // Train on the rest of the family (leave-this-variant-out).
-    let train_grid: Vec<RunConfig> = workload::family_grid_tp(spec.family, &campaign.hw)
-        .into_iter()
-        .filter(|c| c.model != model)
-        .collect();
-    eprintln!("[profile] training on {} configs", train_grid.len());
-    let ds = campaign.profile(&train_grid);
-    let piep = PieP::fit(&ds.runs, &ds.sync_db, PiepOptions::default());
-
-    let cfg = RunConfig::new(&model, par, gpus, batch).with_seed(424242);
-    let target = piep::simulator::simulate_run(&cfg, &campaign.hw, &campaign.knobs);
-    let pred = piep.predict_total(&target, &ds.sync_db);
-    println!("config: {}", cfg.key());
-    println!("predicted energy : {:>10.1} J  ({:.3} Wh)", pred, pred / 3600.0);
-    println!(
-        "measured (meter) : {:>10.1} J  ({:.3} Wh)",
-        target.meter_total_j,
-        target.meter_total_j / 3600.0
-    );
-    println!(
-        "error            : {:>9.1}%",
-        100.0 * (pred - target.meter_total_j).abs() / target.meter_total_j
-    );
-    println!("\nmodule-level predictions (J):");
-    for kind in piep::simulator::timeline::ModuleKind::ALL {
-        if let Some(p) = piep.predict_module(&target, kind, &ds.sync_db) {
-            let truth = target.module_energy_j.get(&kind).copied().unwrap_or(0.0);
-            println!("  {:<20} pred {:>9.1}   measured {:>9.1}", kind.name(), p, truth);
-        }
-    }
-}
-
-fn cmd_runtime(args: &Args) {
-    let dir = args.get_or("artifacts", "artifacts");
-    let rt = match piep::runtime::Runtime::load(dir) {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("runtime: {e}");
-            eprintln!("hint: run `make artifacts` to generate the AOT manifest + HLO files");
-            return;
-        }
-    };
-    println!("{} — {} AOT modules validated", rt.platform_name(), rt.modules.len());
-    for c in rt.modules.values() {
-        println!(
-            "  {:<16} inputs {:?} -> output {:?}",
-            c.info.name, c.info.inputs, c.info.output
-        );
-    }
-    // Exercise the prediction hot path (native ridge evaluation).
-    let mut rng = piep::util::rng::Rng::new(7);
-    let rows: Vec<Vec<f64>> = (0..rt.predict_batch)
-        .map(|_| (0..rt.feature_dim).map(|_| rng.range(-1.0, 1.0)).collect())
-        .collect();
-    let w: Vec<f64> = (0..rt.feature_dim).map(|_| rng.range(-0.5, 0.5)).collect();
-    let t0 = std::time::Instant::now();
-    let y = rt.predict_batch(&rows, &w, 0.25).expect("predict_batch");
-    println!(
-        "ridge_predict hot path: {} rows in {:?} (first: {:+.4})",
-        y.len(),
-        t0.elapsed(),
-        y.first().copied().unwrap_or(0.0)
-    );
-    let functional = rt
-        .random_inputs("block", 1, 0.05)
-        .and_then(|inputs| rt.execute("block", &inputs));
-    match functional {
-        Err(e) => println!("functional forwards: {e}"),
-        Ok(_) => println!("functional forwards: PJRT backend active"),
-    }
-}
-
-fn cmd_sweep(args: &Args) {
-    use piep::eval::sweep::{paper_scenarios, run_sweep, SweepOptions};
-    use piep::util::json::{arr, num, obj, s};
-    use piep::util::table::{fnum, pct, Table};
-
-    let campaign = {
-        let mut c = campaign_from(args);
-        // The sweep covers a much larger grid than one experiment; default
-        // to a lighter per-run sampling unless overridden.
-        c.passes = args.get_usize("passes", 3);
-        c.knobs.sim_decode_steps = args.get_usize("steps", 8);
-        c
-    };
-    let scenarios = paper_scenarios(&campaign.hw);
-    let total_cfgs: usize = scenarios.iter().map(|s| s.configs.len()).sum();
-    eprintln!(
-        "[sweep] {} scenarios, {} configs × {} passes",
-        scenarios.len(),
-        total_cfgs,
-        campaign.passes
-    );
-    let opts = SweepOptions {
-        campaign,
-        folds: args.get_usize("folds", 3),
-        parallel: !args.has("serial"),
-        threads: args.get_usize("threads", 0),
-        ..SweepOptions::default()
-    };
-
-    // --bench: time the serial baseline against the parallel engine on the
-    // same grid and record the perf-trajectory file. With --baseline FILE,
-    // compare against a previously committed baseline and fail (exit 2) on
-    // a >2× parallel-wall-time regression — the CI perf gate.
-    if args.has("bench") {
-        // Read the committed baseline before anything overwrites it. A
-        // missing or corrupt baseline is a misconfigured gate, not a
-        // dormant one — fail loudly rather than silently disarming.
-        let baseline = args.get("baseline").map(|p| {
-            let src = std::fs::read_to_string(p).unwrap_or_else(|e| {
-                eprintln!("sweep --baseline {p}: unreadable ({e})");
-                std::process::exit(2);
-            });
-            piep::util::json::Json::parse(&src).unwrap_or_else(|e| {
-                eprintln!("sweep --baseline {p}: invalid JSON ({e})");
-                std::process::exit(2);
-            })
-        });
-        let t0 = std::time::Instant::now();
-        let serial = run_sweep(&scenarios, &SweepOptions { parallel: false, ..opts.clone() });
-        let serial_s = t0.elapsed().as_secs_f64();
-        let t1 = std::time::Instant::now();
-        let parallel = run_sweep(&scenarios, &SweepOptions { parallel: true, ..opts.clone() });
-        let parallel_s = t1.elapsed().as_secs_f64();
-        let threads = piep::util::par::effective_threads(opts.threads);
-        println!(
-            "sweep bench: serial {serial_s:.2}s vs parallel {parallel_s:.2}s on {threads} threads ({:.2}x)",
-            serial_s / parallel_s.max(1e-9)
-        );
-        for (a, b) in serial.iter().zip(&parallel) {
-            assert_eq!(a.mape, b.mape, "{}: serial/parallel MAPE must agree", a.label);
-        }
-        let path = args.get_or("save-bench", "BENCH_sweep.json");
-        let j = obj(vec![
-            ("schema", s("piep-sweep-bench-v1")),
-            ("threads", num(threads as f64)),
-            ("passes", num(opts.campaign.passes as f64)),
-            ("sim_decode_steps", num(opts.campaign.knobs.sim_decode_steps as f64)),
-            ("configs", num(total_cfgs as f64)),
-            ("runs", num(parallel.iter().map(|r| r.runs).sum::<usize>() as f64)),
-            ("serial_wall_s", num(serial_s)),
-            ("parallel_wall_s", num(parallel_s)),
-            ("speedup", num(serial_s / parallel_s.max(1e-9))),
-            (
-                "scenarios",
-                arr(parallel
-                    .iter()
-                    .map(|r| {
-                        obj(vec![
-                            ("label", s(&r.label)),
-                            ("configs", num(r.configs as f64)),
-                            ("runs", num(r.runs as f64)),
-                            ("mape", num(r.mape)),
-                            ("sync_share", num(r.sync_share)),
-                            ("wall_s", num(r.wall_s)),
-                        ])
-                    })
-                    .collect()),
-            ),
-        ]);
-        std::fs::write(path, j.render()).expect("write bench file");
-        println!("saved sweep baseline -> {path}");
-        // Regression gate: only armed once a baseline with real wall-times
-        // has been committed (the seed file carries nulls), and only when
-        // the baseline was measured on the same workload — comparing
-        // wall-times across different grids/passes/steps is meaningless.
-        if let Some(base) = baseline.as_ref() {
-            let basef = |k: &str| base.get(k).and_then(|v| v.as_f64());
-            let comparable = basef("passes") == Some(opts.campaign.passes as f64)
-                && basef("sim_decode_steps") == Some(opts.campaign.knobs.sim_decode_steps as f64)
-                && basef("configs") == Some(total_cfgs as f64);
-            match basef("parallel_wall_s") {
-                Some(base_wall) if comparable => {
-                    let ratio = parallel_s / base_wall.max(1e-9);
-                    println!("baseline parallel wall: {base_wall:.2}s -> ratio {ratio:.2}x (gate: 2.0x)");
-                    if ratio > 2.0 {
-                        eprintln!(
-                            "sweep regression: parallel wall {parallel_s:.2}s exceeds 2x baseline {base_wall:.2}s"
-                        );
-                        std::process::exit(2);
-                    }
-                }
-                Some(_) => println!(
-                    "baseline workload differs (passes/steps/configs); regression gate skipped"
-                ),
-                // A baseline without measurements disarms the gate. That is
-                // only legitimate for the committed seed on a fresh cache
-                // (CI passes --allow-null-baseline for exactly that case);
-                // a *restored* null baseline means the gate is
-                // misconfigured — fail loudly instead of silently skipping.
-                None if args.has("allow-null-baseline") => {
-                    println!("baseline has no wall-times yet; regression gate dormant (first run)")
-                }
-                None => {
-                    eprintln!(
-                        "sweep --baseline: baseline has null wall-times, so the >2x regression \
-                         gate cannot arm. If this is the first run on a fresh cache (the \
-                         committed seed), pass --allow-null-baseline; otherwise regenerate the \
-                         baseline with `piep sweep --bench --save-bench BENCH_sweep.json`."
-                    );
-                    std::process::exit(2);
-                }
-            }
-        }
-        return;
-    }
-
-    let t0 = std::time::Instant::now();
-    let results = run_sweep(&scenarios, &opts);
-    let wall = t0.elapsed();
-
-    let mut summary = Table::new(
-        "Sweep — PIE-P cross-validated MAPE per scenario (pure + hybrid)",
-        &["Scenario", "Configs", "Runs", "MAPE", "±se", "Sync%", "Wall s"],
-    );
-    for r in &results {
-        summary.row(vec![
-            r.label.clone(),
-            r.configs.to_string(),
-            r.runs.to_string(),
-            pct(r.mape),
-            fnum(r.std_err, 2),
-            pct(100.0 * r.sync_share),
-            fnum(r.wall_s, 1),
-        ]);
-    }
-    print!("{}", summary.render());
-    println!(
-        "[sweep] total {:?} ({}, {} threads)\n",
-        wall,
-        if opts.parallel { "parallel" } else { "serial" },
-        piep::util::par::effective_threads(opts.threads)
-    );
-
-    let mut per_config = Table::new(
-        "Sweep — per-config MAPE",
-        &["Scenario", "Config", "MAPE", "±se", "n"],
-    );
-    for r in &results {
-        for c in &r.per_config {
-            per_config.row(vec![
-                r.label.clone(),
-                c.key.clone(),
-                pct(c.mape),
-                fnum(c.std_err, 2),
-                c.n.to_string(),
-            ]);
-        }
-    }
-    if args.has("per-config") {
-        print!("{}", per_config.render());
-    }
-    let out = args.get_or("out", "reports");
-    for (t, slug) in [(&summary, "sweep_summary"), (&per_config, "sweep_per_config")] {
-        match t.save_csv(out, slug) {
-            Ok(path) => println!("  -> {path}"),
-            Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
-        }
-    }
-}
-
-fn cmd_tune(args: &Args) {
-    use piep::cluster::{GpuSpec, LinkTier};
-    use piep::config::{HwSpec, Strategy};
-    use piep::eval::tune::{run_tune, TuneOptions};
-    use piep::util::table::{fnum, pct, Table};
-
-    let smoke = args.has("smoke");
-
-    // ---- fleet ----
-    // --nodes/--gpus-per-node + --intra/--inter tiers + --fleet GPU classes
-    // describe a cluster; without --nodes the flat single-node testbed is
-    // used. --smoke pins the CI grid: TP/PP/tp2xpp on a 2-node NVLink+IB
-    // fleet.
-    let nodes = args.get_usize("nodes", if smoke { 2 } else { 1 });
-    let default_gpn = if smoke { 2 } else { HwSpec::default().num_gpus };
-    let gpn = args.get_usize("gpus-per-node", default_gpn);
-    // Any explicit fleet-shaping flag (including --nodes 1 / a bare
-    // --gpus-per-node) builds a cluster testbed; only a flagless
-    // non-smoke invocation keeps the default flat box.
-    let cluster_requested = smoke
-        || args.has("nodes")
-        || args.has("gpus-per-node")
-        || args.has("intra")
-        || args.has("inter")
-        || args.has("fleet");
-    let hw = if cluster_requested {
-        let intra = LinkTier::parse(args.get_or("intra", "nvlink")).expect("intra tier (nvlink|pcie|ib)");
-        let inter = LinkTier::parse(args.get_or("inter", "ib")).expect("inter tier (nvlink|pcie|ib)");
-        let fleet: Vec<GpuSpec> = args
-            .get("fleet")
-            .map(|s| {
-                s.split(',')
-                    .map(|name| GpuSpec::parse(name.trim()).unwrap_or_else(|| panic!("unknown GPU class {name}")))
-                    .collect()
-            })
-            .unwrap_or_default();
-        HwSpec::cluster_testbed(nodes, gpn, intra, inter, &fleet)
-    } else {
-        HwSpec::default()
-    };
-
-    // ---- search space ----
-    let model = args.get_or("model", "Vicuna-7B").to_string();
-    let gpu_counts: Vec<usize> = args
-        .get("gpus")
-        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
-        .unwrap_or_else(|| {
-            let mut out: Vec<usize> = [2usize, 4, 8].iter().copied().filter(|&g| g <= hw.num_gpus).collect();
-            if out.is_empty() {
-                out.push(hw.num_gpus);
-            }
-            out
-        });
-    let batches: Vec<usize> = args
-        .get("batches")
-        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
-        .unwrap_or_else(|| if smoke { vec![8, 16] } else { vec![8, 16, 32] });
-    let strategies = if smoke {
-        Some(vec![
-            piep::config::Parallelism::Tensor,
-            piep::config::Parallelism::Pipeline,
-            piep::config::Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap(),
-        ])
-    } else {
-        args.get("strategies").map(|s| {
-            s.split(',')
-                .map(|l| Parallelism::parse(l.trim()).unwrap_or_else(|| panic!("bad strategy label {l}")))
-                .collect()
-        })
-    };
-
-    let opts = TuneOptions {
-        hw,
-        knobs: SimKnobs {
-            sim_decode_steps: args.get_usize("steps", if smoke { 4 } else { 8 }),
-            ..SimKnobs::default()
-        },
-        model,
-        gpu_counts,
-        batches,
-        seq_in: args.get_usize("seq-in", 128),
-        seq_out: args.get_usize("seq-out", 512),
-        passes: args.get_usize("passes", if smoke { 2 } else { 3 }),
-        base_seed: args.get_u64("seed", 0x70E5),
-        slo_ms_per_token: args.get("slo-ms").and_then(|v| v.parse().ok()),
-        strategies,
-        threads: args.get_usize("threads", 0),
-    };
-
-    eprintln!(
-        "[tune] {} on {} GPUs ({} node(s)): {} batches × gpu counts {:?}{}",
-        opts.model,
-        opts.hw.num_gpus,
-        opts.hw.topo().nodes_spanned(0, opts.hw.num_gpus).max(1),
-        opts.batches.len(),
-        opts.gpu_counts,
-        opts.slo_ms_per_token.map(|s| format!(", SLO {s} ms/token")).unwrap_or_default()
-    );
-    let t0 = std::time::Instant::now();
-    let res = run_tune(&opts);
-    let wall = t0.elapsed();
-
-    let row_of = |c: &piep::eval::tune::TuneCandidate| {
-        vec![
-            c.parallelism.label(),
-            c.gpus.to_string(),
-            c.batch.to_string(),
-            fnum(c.j_per_token, 3),
-            fnum(c.j_per_request, 1),
-            fnum(c.ms_per_token, 2),
-            pct(100.0 * c.sync_share),
-            if c.meets_slo { "yes" } else { "no" }.into(),
-        ]
-    };
-    let headers = ["Strategy", "GPUs", "Batch", "J/token", "J/req", "ms/token", "Sync%", "SLO ok"];
-
-    let mut all = Table::new("Tune — scored deployment candidates (J/token ascending)", &headers);
-    for c in &res.candidates {
-        all.row(row_of(c));
-    }
-    print!("{}", all.render());
-
-    let mut front = Table::new("Tune — Pareto front over (J/token, ms/token), SLO-feasible", &headers);
-    for c in &res.pareto {
-        front.row(row_of(c));
-    }
-    print!("{}", front.render());
-
-    let argmin_headers = ["Objective", "Strategy", "GPUs", "Batch", "J/token", "J/req", "ms/token"];
-    let mut argmin = Table::new("Tune — argmin deployments", &argmin_headers);
-    for (label, c) in [("J/token", &res.argmin_j_token), ("J/request", &res.argmin_j_request)] {
-        if let Some(c) = c {
-            argmin.row(vec![
-                label.into(),
-                c.parallelism.label(),
-                c.gpus.to_string(),
-                c.batch.to_string(),
-                fnum(c.j_per_token, 3),
-                fnum(c.j_per_request, 1),
-                fnum(c.ms_per_token, 2),
-            ]);
-        }
-    }
-    print!("{}", argmin.render());
-    println!(
-        "[tune] {} candidates ({} on the Pareto front) in {wall:?}",
-        res.candidates.len(),
-        res.pareto.len()
-    );
-
-    let out = args.get_or("out", "reports");
-    for (t, slug) in [(&all, "tune_candidates"), (&front, "tune_pareto"), (&argmin, "tune_argmin")] {
-        match t.save_csv(out, slug) {
-            Ok(path) => println!("  -> {path}"),
-            Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
-        }
-    }
-}
-
-fn cmd_serve(args: &Args) {
-    use piep::profiler::store;
-    use piep::serve::{serve, synthesize, ArrivalKind, Policy, ServeConfig, SynthSpec, Trace};
-    use piep::util::table::{fnum, pct, Table};
-
-    let smoke = args.has("smoke");
-    let model = args.get_or("model", "Vicuna-7B").to_string();
-    let par = Parallelism::parse(args.get_or("parallelism", "tensor")).expect("parallelism");
-    let gpus = args.get_usize("gpus", 4);
-    let policy = Policy::parse(args.get_or("policy", "fcfs")).expect("policy (fcfs|spf)");
-    let seed = args.get_u64("seed", 0x5EB5E);
-    let campaign = campaign_from(args);
-
-    // Trace source: a JSONL file, or a seeded synthetic generator.
-    let trace = if let Some(path) = args.get("trace") {
-        let t = Trace::load_jsonl(path).expect("load trace");
-        eprintln!("[serve] loaded {} requests from {path}", t.len());
-        t
-    } else {
-        let kind = ArrivalKind::parse(args.get_or("synthetic", "poisson")).expect("synthetic (poisson|bursty|diurnal)");
-        let spec = SynthSpec {
-            kind,
-            requests: args.get_usize("requests", if smoke { 8 } else { 32 }),
-            rate_rps: args.get_f64("rate", 2.0),
-            ..SynthSpec::default()
-        };
-        eprintln!("[serve] synthetic {} trace: {} requests at {} rps", kind.name(), spec.requests, spec.rate_rps);
-        synthesize(&spec, seed)
-    };
-
-    let mut cfg = ServeConfig::new(&model, par, gpus);
-    cfg.policy = policy;
-    cfg.base_seed = seed;
-    cfg.max_batch_requests = args.get_usize("max-batch", cfg.max_batch_requests);
-    cfg.max_batch_tokens = args.get_usize("max-batch-tokens", cfg.max_batch_tokens);
-    let t0 = std::time::Instant::now();
-    let res = serve(&trace, &cfg, &campaign.hw, &campaign.knobs);
-    let wall = t0.elapsed();
-
-    let mut per_req = Table::new(
-        "Serving — per-request energy attribution",
-        &["Req", "Prompt", "Out", "Arrive s", "Queue s", "TTFT s", "Latency s", "J", "J/token", "Sync J"],
-    );
-    for r in &res.requests {
-        if r.rejected {
-            per_req.row(vec![
-                format!("{}*", r.id),
-                r.prompt_tokens.to_string(),
-                r.output_tokens.to_string(),
-                fnum(r.arrival_s, 2),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-                "rejected".into(),
-                "-".into(),
-                "-".into(),
-            ]);
-            continue;
-        }
-        per_req.row(vec![
-            r.id.to_string(),
-            r.prompt_tokens.to_string(),
-            r.output_tokens.to_string(),
-            fnum(r.arrival_s, 2),
-            fnum(r.queue_delay_s(), 2),
-            fnum(r.first_token_s - r.arrival_s, 2),
-            fnum(r.latency_s(), 2),
-            fnum(r.energy_j, 1),
-            fnum(r.energy_per_token_j(), 1),
-            fnum(r.sync_energy_j, 1),
-        ]);
-    }
-    print!("{}", per_req.render());
-
-    let served: Vec<f64> = res.served().map(|r| r.energy_j).collect();
-    let mut summary = Table::new(
-        "Serving — summary",
-        &["Trace", "Policy", "Strategy", "Reqs", "Steps", "J/req p50", "J/req p99", "J/token", "Occup", "Sync%"],
-    );
-    summary.row(vec![
-        args.get("trace").map(|_| "jsonl".to_string()).unwrap_or_else(|| args.get_or("synthetic", "poisson").into()),
-        policy.name().into(),
-        cfg.parallelism.label(),
-        format!("{}/{}", served.len(), res.requests.len()),
-        res.steps.len().to_string(),
-        fnum(res.energy_percentile_j(50.0), 1),
-        fnum(res.energy_percentile_j(99.0), 1),
-        fnum(res.energy_per_token_j(), 2),
-        pct(100.0 * res.occupancy),
-        pct(100.0 * res.sync_share),
-    ]);
-    print!("{}", summary.render());
-    println!(
-        "[serve] {} steps over {:.1}s of traffic in {wall:?}; Σ energy {:.1} J; peak KV {:.2}/{:.2} GiB",
-        res.steps.len(),
-        res.makespan_s,
-        res.total_energy_j,
-        res.peak_kv_bytes / (1u64 << 30) as f64,
-        res.kv_budget_bytes / (1u64 << 30) as f64,
-    );
-    // Conservation check (the serve invariant; cheap enough to always run).
-    let req_j: f64 = res.requests.iter().map(|r| r.energy_j).sum();
-    assert!(
-        (req_j - res.total_energy_j).abs() / res.total_energy_j.max(1e-12) < 1e-9,
-        "per-request attribution must conserve batch energy"
-    );
-
-    let out = args.get_or("out", "reports");
-    for (t, slug) in [(&per_req, "serving_requests"), (&summary, "serving_summary")] {
-        match t.save_csv(out, slug) {
-            Ok(path) => println!("  -> {path}"),
-            Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
-        }
-    }
-    if let Some(path) = args.get("save") {
-        store::save_serve_records(&res.requests, path).expect("save serving records");
-        println!("saved per-request records (piep-serve-v3) -> {path}");
-    }
-}
-
-fn cmd_bench_sim(args: &Args) {
-    use piep::config::HwSpec;
-    let knobs = SimKnobs {
-        sim_decode_steps: args.get_usize("steps", 16),
-        ..SimKnobs::default()
-    };
-    let hw = HwSpec::default();
-    let cfg = RunConfig::new("Llama-70B", Parallelism::Tensor, 4, 32);
-    let t0 = std::time::Instant::now();
-    let n = args.get_usize("runs", 20);
-    let mut samples = 0usize;
-    for seed in 0..n as u64 {
-        let r = piep::simulator::simulate_run(&cfg.clone().with_seed(seed), &hw, &knobs);
-        samples += r.wait_samples.len();
-    }
-    let dt = t0.elapsed();
-    println!(
-        "{n} Llama-70B g=4 runs in {dt:?} ({:.1} runs/s, {} wait samples)",
-        n as f64 / dt.as_secs_f64(),
-        samples
-    );
-}
-
-fn run_experiments(ctx: &mut ReportCtx, ids: &[String]) {
-    for id in ids {
-        match id.as_str() {
-            "figure2" => drop(report::figure2(ctx)),
-            "figure3" => drop(report::figure3(ctx)),
-            "figure4" => drop(report::figure4(ctx)),
-            "figure5" => drop(report::figure5(ctx)),
-            "figure6" => drop(report::figure6(ctx)),
-            "figure7" => drop(report::figure7(ctx)),
-            "figure8" => drop(report::figure8(ctx)),
-            "table2" => drop(report::table2(ctx)),
-            "table3" => drop(report::table3(ctx)),
-            "table4" => drop(report::table4(ctx)),
-            "table5" => drop(report::table5(ctx)),
-            "table6" => drop(report::table6(ctx)),
-            "table7" => drop(report::table7(ctx)),
-            "table8" => drop(report::table8(ctx)),
-            "table9" => drop(report::table9(ctx)),
-            "crosshw" => drop(report::crosshw(ctx)),
-            "sensitivity" => drop(report::sensitivity(ctx)),
-            "ablate-ring" => drop(report::ablate_ring(ctx)),
-            "parallelism-matrix" => drop(report::parallelism_matrix(ctx)),
-            "serving" => drop(report::serving(ctx)),
-            "tune-study" => drop(report::tune_study(ctx)),
-            other => eprintln!("unknown experiment id: {other}"),
-        }
-    }
-}
-
-const ALL_EXPERIMENTS: [&str; 21] = [
-    "figure2", "table2", "table3", "table4", "figure3", "figure4", "figure5", "figure6",
-    "table5", "table6", "table7", "table8", "figure7", "figure8", "table9",
-    // extension studies (not in the paper's evaluation; see DESIGN.md)
-    "crosshw", "sensitivity", "ablate-ring", "parallelism-matrix", "serving", "tune-study",
-];
+//! `piep` binary entry point. The CLI lives in `piep::cli` — argument
+//! parsing in `util::cli::Args`, one driver module per subcommand family
+//! (the former monolithic `main.rs`, split without behavior change).
 
 fn main() {
-    let args = Args::from_env();
-    let cmd = args.command.clone().unwrap_or_else(|| "help".into());
-    match cmd.as_str() {
-        "profile" => cmd_profile(&args),
-        "train" => cmd_train(&args),
-        "predict" => cmd_predict(&args),
-        "sweep" => cmd_sweep(&args),
-        "serve" => cmd_serve(&args),
-        "tune" => cmd_tune(&args),
-        "runtime" => cmd_runtime(&args),
-        "bench-sim" => cmd_bench_sim(&args),
-        "reproduce" => {
-            let out = args.get_or("out", "reports").to_string();
-            let mut ctx = ReportCtx::new(&out, campaign_from(&args));
-            let ids: Vec<String> = if args.has("all") || args.positional.is_empty() {
-                ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect()
-            } else {
-                args.positional.clone()
-            };
-            let t0 = std::time::Instant::now();
-            run_experiments(&mut ctx, &ids);
-            eprintln!("[reproduce] {} experiments in {:?}", ids.len(), t0.elapsed());
-        }
-        id if id.starts_with("figure")
-            || id.starts_with("table")
-            || matches!(
-                id,
-                "crosshw" | "sensitivity" | "ablate-ring" | "parallelism-matrix" | "serving" | "tune-study"
-            ) => {
-            let out = args.get_or("out", "reports").to_string();
-            let mut ctx = ReportCtx::new(&out, campaign_from(&args));
-            run_experiments(&mut ctx, &[id.to_string()]);
-        }
-        _ => {
-            println!(
-                "piep — Parallelized Inference Energy Predictor (reproduction)\n\n\
-                 USAGE: piep <command> [flags]\n\n\
-                 COMMANDS\n\
-                 \x20 reproduce [--all | ids…]   regenerate paper tables/figures into --out\n\
-                 \x20 figure2..figure8           individual figure harnesses\n\
-                 \x20 table2..table9             individual table harnesses\n\
-                 \x20 crosshw | sensitivity | ablate-ring | parallelism-matrix | serving |\n\
-                 \x20 tune-study                 extension studies (see DESIGN.md)\n\
-                 \x20 profile                    profile one configuration (passes × seeds)\n\
-                 \x20 train                      fit PIE-P on a family, report 3-fold CV MAPE\n\
-                 \x20 predict                    leave-variant-out prediction demo\n\
-                 \x20 sweep                      parallel sweep: paper grid + hybrid meshes,\n\
-                 \x20                            per-config MAPE + sync-wait share (--serial,\n\
-                 \x20                            --bench [--baseline FILE], --per-config)\n\
-                 \x20 serve                      trace-driven serving: continuous batching +\n\
-                 \x20                            per-request energy (--trace FILE | --synthetic\n\
-                 \x20                            poisson|bursty|diurnal, --policy fcfs|spf,\n\
-                 \x20                            --requests N --rate RPS --max-batch N --smoke\n\
-                 \x20                            --save FILE)\n\
-                 \x20 tune                       energy-aware strategy autotuner: search strategy\n\
-                 \x20                            x degree x batch on a fleet, emit Pareto front +\n\
-                 \x20                            argmin tables (--nodes N --gpus-per-node N\n\
-                 \x20                            --intra nvlink|pcie|ib --inter nvlink|pcie|ib\n\
-                 \x20                            --fleet a6000,h100,l40 --gpus 2,4 --batches 8,16\n\
-                 \x20                            --slo-ms F --strategies tp,pp,tp2xpp --smoke)\n\
-                 \x20 runtime                    validate AOT artifacts, run the native hot path\n\
-                 \x20 bench-sim                  simulator throughput check\n\n\
-                 FLAGS\n\
-                 \x20 --model NAME --family NAME --gpus N --batch N\n\
-                 \x20 --parallelism tp|pp|dp|<hybrid label, e.g. tp2xpp>\n\
-                 \x20 --seq-out N --passes N --steps N --seed N --threads N\n\
-                 \x20 --engine-threads N (per-rank event-engine pool; 1 = serial) --out DIR\n"
-            );
-        }
-    }
+    piep::cli::run();
 }

@@ -8,15 +8,31 @@
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::models::ModelSpec;
-use crate::plan::{Plan, PlanBuilder, WaitRecord};
+use crate::plan::{Plan, PlanBuilder, PlanSink, WaitRecord};
 use crate::simulator::collective;
 use crate::simulator::perf::PerfModel;
 use crate::simulator::timeline::ModuleKind;
 
+use super::LowerMeta;
+
+/// Reference lowering into the interpreted `Plan` representation.
 pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
+    let mut b = PlanBuilder::new(cfg.gpus);
+    let m = lower_into(spec, hw, knobs, cfg, &mut b);
+    b.finish(m.sim_steps, m.comm_bytes_per_step, m.draws_sync_jitter)
+}
+
+/// Lowering pass, generic over the sink (reference build, SoA compile, or
+/// shape rebind — see `plan::PlanSink`).
+pub fn lower_into<S: PlanSink>(
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+    b: &mut S,
+) -> LowerMeta {
     let g = cfg.gpus;
     let perf = PerfModel::new(hw);
-    let mut b = PlanBuilder::new(g);
 
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
     let shard = (cfg.batch + g - 1) / g; // per-replica batch
@@ -62,7 +78,11 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
         comm_bytes_per_step = t.cost.bytes_moved / sim_steps as f64;
     }
 
-    b.finish(sim_steps, comm_bytes_per_step, false)
+    LowerMeta {
+        sim_steps,
+        comm_bytes_per_step,
+        draws_sync_jitter: false,
+    }
 }
 
 #[cfg(test)]

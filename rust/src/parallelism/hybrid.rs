@@ -27,12 +27,13 @@ use std::ops::Range;
 
 use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs, Strategy};
 use crate::models::ModelSpec;
-use crate::plan::{Plan, PlanBuilder, WaitRecord};
+use crate::plan::{Plan, PlanBuilder, PlanSink, WaitRecord};
 use crate::simulator::collective;
 use crate::simulator::perf::PerfModel;
 use crate::simulator::timeline::ModuleKind;
 
-use super::pipeline::stage_layers;
+use super::pipeline::{microbatches, stage_layers};
+use super::LowerMeta;
 
 /// Lowering context shared by the mesh emitters.
 struct Mesh<'a> {
@@ -45,9 +46,9 @@ impl Mesh<'_> {
     /// Group-local ring AllReduce rendezvous (jittered launch desync — the
     /// tensor planner's synchronization point); hierarchical when the
     /// group spans nodes. Returns bytes moved.
-    fn allreduce(
+    fn allreduce<S: PlanSink>(
         &self,
-        b: &mut PlanBuilder,
+        b: &mut S,
         ranks: Range<usize>,
         payload: f64,
         layer: u16,
@@ -65,9 +66,9 @@ impl Mesh<'_> {
 
     /// Group-local barrier + ring AllGather (the logits / replica collation
     /// point of the tensor and data planners). Returns bytes moved.
-    fn allgather(
+    fn allgather<S: PlanSink>(
         &self,
-        b: &mut PlanBuilder,
+        b: &mut S,
         ranks: Range<usize>,
         payload_per_rank: f64,
         step: u32,
@@ -84,9 +85,9 @@ impl Mesh<'_> {
     /// Terminal cross-replica collation: rendezvous over all ranks, then an
     /// AllGather whose ring spans the `groups` replica groups — the
     /// inter-node tier when those groups live on different nodes.
-    fn terminal_collation(
+    fn terminal_collation<S: PlanSink>(
         &self,
-        b: &mut PlanBuilder,
+        b: &mut S,
         num_ranks: usize,
         groups: usize,
         payload_per_group: f64,
@@ -99,7 +100,22 @@ impl Mesh<'_> {
     }
 }
 
+/// Reference lowering into the interpreted `Plan` representation.
 pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
+    let mut b = PlanBuilder::new(cfg.gpus);
+    let m = lower_into(spec, hw, knobs, cfg, &mut b);
+    b.finish(m.sim_steps, m.comm_bytes_per_step, m.draws_sync_jitter)
+}
+
+/// Lowering pass, generic over the sink (reference build, SoA compile, or
+/// shape rebind — see `plan::PlanSink`).
+pub fn lower_into<S: PlanSink>(
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+    b: &mut S,
+) -> LowerMeta {
     let g = cfg.gpus;
     let (inner, outer, di) = match cfg.parallelism {
         Parallelism::Hybrid {
@@ -120,31 +136,32 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
         perf: PerfModel::new(hw),
         topo: hw.topo(),
     };
-    let mut b = PlanBuilder::new(g);
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
 
     let comm_bytes_per_step = match (inner, outer) {
-        (Strategy::Tensor, Strategy::Pipeline) => {
-            tp_pp(&mesh, cfg, &mut b, di, do_, sim_steps)
-        }
-        (Strategy::Tensor, Strategy::Data) => tp_dp(&mesh, cfg, &mut b, di, do_, sim_steps),
-        (Strategy::Pipeline, Strategy::Data) => pp_dp(&mesh, cfg, &mut b, di, do_, sim_steps),
+        (Strategy::Tensor, Strategy::Pipeline) => tp_pp(&mesh, cfg, b, di, do_, sim_steps),
+        (Strategy::Tensor, Strategy::Data) => tp_dp(&mesh, cfg, b, di, do_, sim_steps),
+        (Strategy::Pipeline, Strategy::Data) => pp_dp(&mesh, cfg, b, di, do_, sim_steps),
         other => panic!("unsupported hybrid combination {other:?}"),
     };
 
     // Every hybrid run draws the launch-desync scale once (the Mesh of the
     // legacy builder sampled it at construction, PP×DP included).
-    b.finish(sim_steps, comm_bytes_per_step, true)
+    LowerMeta {
+        sim_steps,
+        comm_bytes_per_step,
+        draws_sync_jitter: true,
+    }
 }
 
 /// TP within each of `do_` pipeline stages: one pipelined pass (prefill or
 /// a decode step) over all microbatches. Returns total collective/P2P bytes
 /// moved during the pass.
 #[allow(clippy::too_many_arguments)]
-fn tp_pp_pass(
+fn tp_pp_pass<S: PlanSink>(
     mesh: &Mesh,
     cfg: &RunConfig,
-    b: &mut PlanBuilder,
+    b: &mut S,
     di: usize,
     do_: usize,
     ranges: &[Range<usize>],
@@ -227,18 +244,17 @@ fn tp_pp_pass(
     bytes
 }
 
-fn tp_pp(
+fn tp_pp<S: PlanSink>(
     mesh: &Mesh,
     cfg: &RunConfig,
-    b: &mut PlanBuilder,
+    b: &mut S,
     di: usize,
     do_: usize,
     sim_steps: usize,
 ) -> f64 {
     let spec = mesh.spec;
     let ranges = stage_layers(spec.layers, do_);
-    let micro = (cfg.batch + do_ - 1) / do_;
-    let num_micro = (cfg.batch + micro - 1) / micro;
+    let (micro, num_micro) = microbatches(cfg.batch, do_);
     let g = di * do_;
 
     tp_pp_pass(mesh, cfg, b, di, do_, &ranges, micro, num_micro, 0, cfg.seq_in, true);
@@ -262,10 +278,10 @@ fn tp_pp(
 }
 
 /// TP within each of `do_` independent replicas; terminal collation across.
-fn tp_dp(
+fn tp_dp<S: PlanSink>(
     mesh: &Mesh,
     cfg: &RunConfig,
-    b: &mut PlanBuilder,
+    b: &mut S,
     di: usize,
     do_: usize,
     sim_steps: usize,
@@ -331,10 +347,10 @@ fn tp_dp(
 /// One pipelined pass within a replica group occupying ranks
 /// `base..base+stages`. Returns P2P bytes moved during the pass.
 #[allow(clippy::too_many_arguments)]
-fn pp_group_pass(
+fn pp_group_pass<S: PlanSink>(
     mesh: &Mesh,
     cfg: &RunConfig,
-    b: &mut PlanBuilder,
+    b: &mut S,
     base: usize,
     stages: usize,
     ranges: &[Range<usize>],
@@ -400,10 +416,10 @@ fn pp_group_pass(
 }
 
 /// A GPipe-style pipeline within each of `do_` independent replicas.
-fn pp_dp(
+fn pp_dp<S: PlanSink>(
     mesh: &Mesh,
     cfg: &RunConfig,
-    b: &mut PlanBuilder,
+    b: &mut S,
     di: usize,
     do_: usize,
     sim_steps: usize,
@@ -411,8 +427,7 @@ fn pp_dp(
     let spec = mesh.spec;
     let shard = (cfg.batch + do_ - 1) / do_;
     let ranges = stage_layers(spec.layers, di);
-    let micro = (shard + di - 1) / di;
-    let num_micro = (shard + micro - 1) / micro;
+    let (micro, num_micro) = microbatches(shard, di);
     let mut decode_bytes_group = 0.0;
 
     for rep in 0..do_ {

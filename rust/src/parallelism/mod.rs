@@ -27,9 +27,12 @@ pub mod hybrid;
 pub mod pipeline;
 pub mod tensor;
 
-use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use std::sync::Arc;
+
+use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs, Strategy};
 use crate::models::ModelSpec;
-use crate::plan::Plan;
+use crate::plan::exec::{ExecPlan, PlanStructure, ShapeBinding, StructureBuilder};
+use crate::plan::{Plan, PlanSink};
 use crate::simulator::engine;
 use crate::simulator::power::PowerModel;
 use crate::simulator::skew::SkewModel;
@@ -37,7 +40,20 @@ use crate::util::rng::Rng;
 
 pub use crate::simulator::engine::BuiltRun;
 
-/// Lower a run configuration into the shared Plan IR.
+/// Shape-level metadata every lowering pass produces alongside its op
+/// stream (the arguments of its sink's `finish`).
+#[derive(Debug, Clone, Copy)]
+pub struct LowerMeta {
+    /// Decode steps simulated explicitly (before extrapolation).
+    pub sim_steps: usize,
+    /// Collective/P2P payload bytes moved per simulated decode step.
+    pub comm_bytes_per_step: f64,
+    /// Whether this strategy draws the per-run launch-desync scale.
+    pub draws_sync_jitter: bool,
+}
+
+/// Lower a run configuration into the shared Plan IR (the interpreted
+/// reference representation — hot paths use `compile`/`rebind`).
 pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
     match cfg.parallelism {
         Parallelism::Tensor => tensor::lower(spec, hw, knobs, cfg),
@@ -45,6 +61,121 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
         Parallelism::Data => data::lower(spec, hw, knobs, cfg),
         Parallelism::Hybrid { .. } => hybrid::lower(spec, hw, knobs, cfg),
     }
+}
+
+/// Run the strategy's lowering pass into an arbitrary sink (see
+/// `plan::PlanSink` for the contract the lowerers uphold).
+pub fn lower_into<S: PlanSink>(
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+    sink: &mut S,
+) -> LowerMeta {
+    match cfg.parallelism {
+        Parallelism::Tensor => tensor::lower_into(spec, hw, knobs, cfg, sink),
+        Parallelism::Pipeline => pipeline::lower_into(spec, hw, knobs, cfg, sink),
+        Parallelism::Data => data::lower_into(spec, hw, knobs, cfg, sink),
+        Parallelism::Hybrid { .. } => hybrid::lower_into(spec, hw, knobs, cfg, sink),
+    }
+}
+
+/// Lower a run configuration straight into a compiled structure-of-arrays
+/// `ExecPlan` (the full lowering of a mesh the cache has not seen).
+pub fn compile(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> ExecPlan {
+    let mut b = StructureBuilder::new(cfg.gpus);
+    let m = lower_into(spec, hw, knobs, cfg, &mut b);
+    b.finish(m.sim_steps, m.comm_bytes_per_step, m.draws_sync_jitter)
+}
+
+/// Rebind a cached mesh structure to a new shape: replay the lowering pass
+/// writing only the scalar table (array-fill cost; the structure `Arc` is
+/// shared, not copied). The caller guarantees `structure` was compiled for
+/// the same `structure_key` as `cfg` — `ShapeBinding` asserts the replay
+/// matches.
+pub fn rebind(
+    structure: &Arc<PlanStructure>,
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+) -> ExecPlan {
+    let mut b = ShapeBinding::new(Arc::clone(structure));
+    let m = lower_into(spec, hw, knobs, cfg, &mut b);
+    b.finish(m.sim_steps, m.comm_bytes_per_step, m.draws_sync_jitter)
+}
+
+/// Mesh-topology identity of a configuration: everything that determines
+/// the *structure* of its lowered plan (op sequence, rank ranges, tags,
+/// edges) as opposed to the per-op scalars. Two configurations with equal
+/// keys share one `PlanStructure`; their shapes differ only in the scalar
+/// table (`parallelism::rebind`).
+///
+/// The key captures: model (layer count and module set), strategy label
+/// (including hybrid inner degree), GPU count, the simulated decode-step
+/// count (`min(knob, seq_out)` — each step emits its own tagged ops), and
+/// the microbatch count of any pipeline axis (batch-dependent: GPipe
+/// passes emit one op group per microbatch). Payload sizes, sequence
+/// lengths, and link constants never enter the structure.
+pub fn structure_key(knobs: &SimKnobs, cfg: &RunConfig) -> String {
+    let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
+    let num_micro = match cfg.parallelism {
+        Parallelism::Tensor | Parallelism::Data => 0,
+        Parallelism::Pipeline => pipeline::microbatches(cfg.batch, cfg.gpus).1,
+        Parallelism::Hybrid {
+            inner,
+            outer,
+            inner_degree,
+        } => {
+            let do_ = cfg.gpus / inner_degree.max(1);
+            match (inner, outer) {
+                // TP×PP pipelines the full batch over the `do_` stages.
+                (Strategy::Tensor, Strategy::Pipeline) => pipeline::microbatches(cfg.batch, do_.max(1)).1,
+                // PP×DP pipelines each replica's batch shard over `di` stages.
+                (Strategy::Pipeline, Strategy::Data) => {
+                    let shard = (cfg.batch + do_ - 1) / do_.max(1);
+                    pipeline::microbatches(shard, inner_degree).1
+                }
+                // TP×DP has no pipeline axis.
+                _ => 0,
+            }
+        }
+    };
+    format!(
+        "{}/{}/g{}/steps{}/mb{}",
+        cfg.model,
+        cfg.parallelism.label(),
+        cfg.gpus,
+        sim_steps,
+        num_micro
+    )
+}
+
+/// Run-level stochastic sampling shared by both execution paths: the skew
+/// state (fleet-rescaled after all draws) and, for strategies with
+/// jittered collectives, the launch-desync scale. The compiled and
+/// reference paths must observe this sequence draw-for-draw — keeping it
+/// in one place is what makes their bit-identity contract robust to edits.
+fn run_stochastics(
+    num_ranks: usize,
+    draws_sync_jitter: bool,
+    spec: &ModelSpec,
+    knobs: &SimKnobs,
+    power: &PowerModel,
+    rng: &mut Rng,
+) -> (SkewModel, f64) {
+    let mut skew = SkewModel::with_complexity(knobs, num_ranks, spec.complexity_factor(), rng);
+    if let Some(scales) = power.fleet_compute_scales(num_ranks) {
+        skew.apply_fleet(&scales);
+    }
+    let sync_jitter = if draws_sync_jitter {
+        knobs.sync_jitter_s
+            * spec.complexity_factor()
+            * rng.lognormal_mean_cv(1.0, knobs.sync_jitter_cv)
+    } else {
+        0.0
+    };
+    (skew, sync_jitter)
 }
 
 /// Execute a lowered plan under one run's stochastic conditions: sample
@@ -61,22 +192,38 @@ pub fn execute_plan(
     rng: &mut Rng,
     threads: usize,
 ) -> BuiltRun {
-    let mut skew = SkewModel::with_complexity(knobs, plan.num_ranks, spec.complexity_factor(), rng);
-    if let Some(scales) = power.fleet_compute_scales(plan.num_ranks) {
-        skew.apply_fleet(&scales);
-    }
-    let sync_jitter = if plan.draws_sync_jitter {
-        knobs.sync_jitter_s
-            * spec.complexity_factor()
-            * rng.lognormal_mean_cv(1.0, knobs.sync_jitter_cv)
-    } else {
-        0.0
-    };
+    let (skew, sync_jitter) =
+        run_stochastics(plan.num_ranks, plan.draws_sync_jitter, spec, knobs, power, rng);
     engine::execute(plan, power, &skew, sync_jitter, rng, threads)
 }
 
+/// Execute a compiled `ExecPlan` under one run's stochastic conditions —
+/// same run-level sampling as `execute_plan`, driving the engine's
+/// array-walking path. Bit-identical to the interpreted path for the same
+/// seed stream (property-tested).
+pub fn execute_compiled(
+    plan: &ExecPlan,
+    spec: &ModelSpec,
+    knobs: &SimKnobs,
+    power: &PowerModel,
+    rng: &mut Rng,
+    threads: usize,
+) -> BuiltRun {
+    let (skew, sync_jitter) = run_stochastics(
+        plan.num_ranks(),
+        plan.structure.draws_sync_jitter,
+        spec,
+        knobs,
+        power,
+        rng,
+    );
+    engine::execute_compiled(plan, power, &skew, sync_jitter, rng, threads)
+}
+
 /// Lower + execute in one call (single-run paths and planner tests; the
-/// profiling campaigns cache the lowering via `plan::PlanCache`).
+/// profiling campaigns cache the lowering via `plan::PlanCache`). Uses the
+/// compiled path unless `SimKnobs::reference_engine` selects the
+/// interpreted reference — the two are bit-identical.
 pub fn build(
     spec: &ModelSpec,
     hw: &HwSpec,
@@ -85,6 +232,11 @@ pub fn build(
     power: &PowerModel,
     rng: &mut Rng,
 ) -> BuiltRun {
-    let plan = lower(spec, hw, knobs, cfg);
-    execute_plan(&plan, spec, knobs, power, rng, knobs.engine_threads)
+    if knobs.reference_engine {
+        let plan = lower(spec, hw, knobs, cfg);
+        execute_plan(&plan, spec, knobs, power, rng, knobs.engine_threads)
+    } else {
+        let plan = compile(spec, hw, knobs, cfg);
+        execute_compiled(&plan, spec, knobs, power, rng, knobs.engine_threads)
+    }
 }

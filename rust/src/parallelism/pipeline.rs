@@ -12,10 +12,12 @@
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::models::ModelSpec;
-use crate::plan::{Plan, PlanBuilder, WaitRecord};
+use crate::plan::{Plan, PlanBuilder, PlanSink, WaitRecord};
 use crate::simulator::collective;
 use crate::simulator::perf::PerfModel;
 use crate::simulator::timeline::ModuleKind;
+
+use super::LowerMeta;
 
 /// Contiguous layer ranges per stage (remainder to the earliest stages).
 pub fn stage_layers(layers: usize, stages: usize) -> Vec<std::ops::Range<usize>> {
@@ -31,20 +33,42 @@ pub fn stage_layers(layers: usize, stages: usize) -> Vec<std::ops::Range<usize>>
     out
 }
 
+/// GPipe microbatching of `batch` over `stages`: (microbatch size, count).
+/// Shared with `parallelism::structure_key` — the microbatch count is part
+/// of a pipeline mesh's structural identity.
+pub fn microbatches(batch: usize, stages: usize) -> (usize, usize) {
+    let micro = (batch + stages - 1) / stages;
+    let num_micro = (batch + micro - 1) / micro;
+    (micro, num_micro)
+}
+
+/// Reference lowering into the interpreted `Plan` representation.
 pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
+    let mut b = PlanBuilder::new(cfg.gpus);
+    let m = lower_into(spec, hw, knobs, cfg, &mut b);
+    b.finish(m.sim_steps, m.comm_bytes_per_step, m.draws_sync_jitter)
+}
+
+/// Lowering pass, generic over the sink (reference build, SoA compile, or
+/// shape rebind — see `plan::PlanSink`).
+pub fn lower_into<S: PlanSink>(
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+    b: &mut S,
+) -> LowerMeta {
     let g = cfg.gpus;
     let perf = PerfModel::new(hw);
     let topo = hw.topo();
-    let mut b = PlanBuilder::new(g);
 
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
     let ranges = stage_layers(spec.layers, g);
-    let micro = (cfg.batch + g - 1) / g; // microbatch size
-    let num_micro = (cfg.batch + micro - 1) / micro;
+    let (micro, num_micro) = microbatches(cfg.batch, g);
 
     // One full pass (prefill with seq tokens, or a decode step) pipelined
     // over microbatches. Returns payload bytes transferred per pass.
-    let run_pass = |b: &mut PlanBuilder, step: u32, context: usize, prefill: bool| -> f64 {
+    let run_pass = |b: &mut S, step: u32, context: usize, prefill: bool| -> f64 {
         // Boundary edge per microbatch (overwritten stage by stage).
         let mut boundary: Vec<u32> = vec![u32::MAX; num_micro];
         let payload = if prefill {
@@ -105,7 +129,7 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
     };
 
     // Prefill.
-    run_pass(&mut b, 0, cfg.seq_in, true);
+    run_pass(&mut *b, 0, cfg.seq_in, true);
 
     // Decode steps. Autoregressive serialization: the next step's stage-0
     // embedding needs the token sampled from the last stage's logits, so
@@ -115,14 +139,18 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
     for si in 0..sim_steps {
         let frac = (si as f64 + 0.5) / sim_steps as f64;
         let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
-        let bytes = run_pass(&mut b, (si + 1) as u32, context, false);
+        let bytes = run_pass(&mut *b, (si + 1) as u32, context, false);
         if si == 0 {
             decode_bytes = bytes;
         }
         b.collective(0..g, ModuleKind::P2PTransfer, 0, (si + 1) as u32, 0.0, false, WaitRecord::None);
     }
 
-    b.finish(sim_steps, decode_bytes, false)
+    LowerMeta {
+        sim_steps,
+        comm_bytes_per_step: decode_bytes,
+        draws_sync_jitter: false,
+    }
 }
 
 #[cfg(test)]

@@ -11,16 +11,32 @@
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::models::ModelSpec;
-use crate::plan::{Plan, PlanBuilder, WaitRecord};
+use crate::plan::{Plan, PlanBuilder, PlanSink, WaitRecord};
 use crate::simulator::collective;
 use crate::simulator::perf::PerfModel;
 use crate::simulator::timeline::ModuleKind;
 
+use super::LowerMeta;
+
+/// Reference lowering into the interpreted `Plan` representation.
 pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
+    let mut b = PlanBuilder::new(cfg.gpus);
+    let m = lower_into(spec, hw, knobs, cfg, &mut b);
+    b.finish(m.sim_steps, m.comm_bytes_per_step, m.draws_sync_jitter)
+}
+
+/// Lowering pass, generic over the sink (reference build, SoA compile, or
+/// shape rebind — see `plan::PlanSink`).
+pub fn lower_into<S: PlanSink>(
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+    b: &mut S,
+) -> LowerMeta {
     let g = cfg.gpus;
     let perf = PerfModel::new(hw);
     let topo = hw.topo();
-    let mut b = PlanBuilder::new(g);
     let mut comm_bytes_per_step = 0.0;
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
 
@@ -28,7 +44,7 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
     // mesh spans nodes (intra-node reduce, inter-node exchange, intra-node
     // broadcast). Returns bytes moved.
     let topo_ref = &topo;
-    let allreduce = move |b: &mut PlanBuilder, payload: f64, layer: u16, step: u32| -> f64 {
+    let allreduce = move |b: &mut S, payload: f64, layer: u16, step: u32| -> f64 {
         if g == 1 {
             // No collective is emitted at all on a single GPU.
             return 0.0;
@@ -45,10 +61,10 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
     for layer in 0..spec.layers as u16 {
         b.compute(0..g, perf.norm_prefill(spec, cfg.batch, cfg.seq_in), ModuleKind::Norm, layer, 0);
         b.compute(0..g, perf.attn_prefill(spec, cfg.batch, cfg.seq_in, g), ModuleKind::SelfAttention, layer, 0);
-        allreduce(&mut b, prefill_payload, layer, 0);
+        allreduce(&mut *b, prefill_payload, layer, 0);
         b.compute(0..g, perf.norm_prefill(spec, cfg.batch, cfg.seq_in), ModuleKind::Norm, layer, 0);
         b.compute(0..g, perf.mlp_prefill(spec, cfg.batch, cfg.seq_in, g), ModuleKind::Mlp, layer, 0);
-        allreduce(&mut b, prefill_payload, layer, 0);
+        allreduce(&mut *b, prefill_payload, layer, 0);
     }
 
     // ---- Decode: `sim_steps` representative steps spread over seq_out.
@@ -63,10 +79,10 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
         for layer in 0..spec.layers as u16 {
             b.compute(0..g, perf.norm_decode(spec, cfg.batch), ModuleKind::Norm, layer, step);
             b.compute(0..g, perf.attn_decode(spec, cfg.batch, context, g), ModuleKind::SelfAttention, layer, step);
-            let b1 = allreduce(&mut b, decode_payload, layer, step);
+            let b1 = allreduce(&mut *b, decode_payload, layer, step);
             b.compute(0..g, perf.norm_decode(spec, cfg.batch), ModuleKind::Norm, layer, step);
             b.compute(0..g, perf.mlp_decode(spec, cfg.batch, g), ModuleKind::Mlp, layer, step);
-            let b2 = allreduce(&mut b, decode_payload, layer, step);
+            let b2 = allreduce(&mut *b, decode_payload, layer, step);
             if si == 0 {
                 comm_bytes_per_step += b1 + b2;
             }
@@ -86,7 +102,11 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
 
     // The tensor planner draws the per-run launch-desync scale even on a
     // single GPU (the seed stream predates the g == 1 early return).
-    b.finish(sim_steps, comm_bytes_per_step, true)
+    LowerMeta {
+        sim_steps,
+        comm_bytes_per_step,
+        draws_sync_jitter: true,
+    }
 }
 
 #[cfg(test)]

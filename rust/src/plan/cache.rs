@@ -1,33 +1,81 @@
-//! Lowered-plan cache.
+//! Two-level compiled-plan cache: **structures by mesh identity, scalars
+//! by shape** (DESIGN.md §12).
 //!
 //! Plans are deterministic functions of (model, parallelism, gpus, batch,
 //! sequence lengths, decode-step knob, hardware) — the seed never enters
-//! lowering — so the repeated passes of a profiling campaign and the sweep
-//! configs that share a (model, strategy) grid cell can all execute one
-//! lowered plan. The cache is shared across the `util::par` workers of a
-//! campaign; on a miss the worker lowers outside the lock (a racing
-//! duplicate lowering is harmless: plans are deterministic, last insert
-//! wins).
+//! lowering — and they factor further: configurations sharing a mesh
+//! topology (`parallelism::structure_key`) share their entire op
+//! *structure* and differ only in the per-op scalar table. The cache
+//! exploits both levels:
+//!
+//! 1. **Shape level** — the full run identity (`RunConfig::key` + seq_in +
+//!    decode-step knob) maps to a ready `ExecPlan`. Repeated passes of one
+//!    configuration (differing only by seed) hit here.
+//! 2. **Structure level** — the mesh identity maps to an
+//!    `Arc<PlanStructure>`. A shape miss whose mesh is cached costs one
+//!    scalar rebind (`parallelism::rebind`, an array fill) instead of a
+//!    full lowering; only a genuinely new mesh pays `parallelism::compile`.
+//!
+//! A tune grid or serving trace therefore lowers each mesh topology once
+//! and rebinds hundreds of shapes — the hit-rate contract asserted by the
+//! integration tests. The cache is shared across `util::par` workers; on a
+//! miss the worker lowers outside the lock (a racing duplicate lowering is
+//! harmless — plans are deterministic, last insert wins — though it can
+//! overcount `CacheStats` by the duplicate; the stats are exact under
+//! serial access). One cache instance assumes one `HwSpec` (campaigns hold
+//! hardware fixed).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::parallelism;
-use crate::plan::Plan;
+use crate::plan::exec::{ExecPlan, PlanStructure};
 
-/// Thread-safe map from configuration identity to its lowered plan. One
-/// cache instance assumes one `HwSpec` (campaigns hold hardware fixed).
-#[derive(Debug, Default)]
-pub struct PlanCache {
-    plans: Mutex<HashMap<String, Arc<Plan>>>,
-    hits: Mutex<usize>,
+/// Hit/miss counters of the two cache levels.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Full structure lowerings (`parallelism::compile`) — one per mesh
+    /// topology the cache has seen.
+    pub structure_lowerings: usize,
+    /// Structure-level hits served by a scalar rebind
+    /// (`parallelism::rebind`) — new shape on a cached mesh.
+    pub rebinds: usize,
+    /// Shape-level hits — the ready `ExecPlan` was reused as-is (repeated
+    /// passes of one configuration).
+    pub shape_hits: usize,
 }
 
-/// Everything lowering depends on besides the hardware: `RunConfig::key`
-/// covers model/parallelism/gpus/batch/seq_out; seq_in and the decode-step
-/// knob complete the identity.
-fn cache_key(cfg: &RunConfig, knobs: &SimKnobs) -> String {
+impl CacheStats {
+    /// Total cache accesses observed.
+    pub fn accesses(&self) -> usize {
+        self.structure_lowerings + self.rebinds + self.shape_hits
+    }
+
+    /// Fraction of accesses that avoided a full lowering (rebinds and
+    /// shape hits over all accesses; 0 when untouched).
+    pub fn reuse_rate(&self) -> f64 {
+        let total = self.accesses();
+        if total == 0 {
+            return 0.0;
+        }
+        (self.rebinds + self.shape_hits) as f64 / total as f64
+    }
+}
+
+/// Thread-safe two-level map from configuration identity to its compiled
+/// plan.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    structures: Mutex<HashMap<String, Arc<PlanStructure>>>,
+    shapes: Mutex<HashMap<String, ExecPlan>>,
+    stats: Mutex<CacheStats>,
+}
+
+/// Shape identity: everything lowering depends on besides the hardware.
+/// `RunConfig::key` covers model/parallelism/gpus/batch/seq_out; seq_in and
+/// the decode-step knob complete it.
+fn shape_key(cfg: &RunConfig, knobs: &SimKnobs) -> String {
     format!("{}/in{}/steps{}", cfg.key(), cfg.seq_in, knobs.sim_decode_steps)
 }
 
@@ -36,31 +84,49 @@ impl PlanCache {
         PlanCache::default()
     }
 
-    /// The lowered plan for `cfg`, reusing a cached one when the identity
-    /// matches (passes of one config differ only by seed, which lowering
-    /// never sees).
-    pub fn get_or_lower(&self, cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> Arc<Plan> {
-        let key = cache_key(cfg, knobs);
-        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
-            *self.hits.lock().unwrap() += 1;
-            return Arc::clone(plan);
+    /// The compiled plan for `cfg`: a shape hit returns the cached
+    /// `ExecPlan` (two `Arc` bumps); a shape miss on a cached mesh rebinds
+    /// only the scalar table; a new mesh pays one full lowering.
+    pub fn get_or_lower(&self, cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> ExecPlan {
+        let skey = shape_key(cfg, knobs);
+        if let Some(ep) = self.shapes.lock().unwrap().get(&skey) {
+            self.stats.lock().unwrap().shape_hits += 1;
+            return ep.clone();
         }
         let spec = crate::models::by_name(&cfg.model)
             .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
-        let plan = Arc::new(parallelism::lower(&spec, hw, knobs, cfg));
-        self.plans
-            .lock()
-            .unwrap()
-            .entry(key)
-            .or_insert(plan)
-            .clone()
+        let mesh_key = parallelism::structure_key(knobs, cfg);
+        let cached_structure = self.structures.lock().unwrap().get(&mesh_key).cloned();
+        let ep = match cached_structure {
+            Some(structure) => {
+                self.stats.lock().unwrap().rebinds += 1;
+                parallelism::rebind(&structure, &spec, hw, knobs, cfg)
+            }
+            None => {
+                let ep = parallelism::compile(&spec, hw, knobs, cfg);
+                self.stats.lock().unwrap().structure_lowerings += 1;
+                self.structures
+                    .lock()
+                    .unwrap()
+                    .entry(mesh_key)
+                    .or_insert_with(|| Arc::clone(&ep.structure));
+                ep
+            }
+        };
+        self.shapes.lock().unwrap().entry(skey).or_insert(ep).clone()
     }
 
-    /// (cached plans, cache hits) — exposed for tests and diagnostics.
-    pub fn stats(&self) -> (usize, usize) {
+    /// Two-level hit/miss counters (exact under serial access; see the
+    /// module docs for the racing caveat).
+    pub fn stats(&self) -> CacheStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// (cached mesh structures, cached shape plans).
+    pub fn sizes(&self) -> (usize, usize) {
         (
-            self.plans.lock().unwrap().len(),
-            *self.hits.lock().unwrap(),
+            self.structures.lock().unwrap().len(),
+            self.shapes.lock().unwrap().len(),
         )
     }
 }
@@ -70,29 +136,34 @@ mod tests {
     use super::*;
     use crate::config::Parallelism;
 
+    fn knobs() -> SimKnobs {
+        SimKnobs {
+            sim_decode_steps: 4,
+            ..SimKnobs::default()
+        }
+    }
+
     #[test]
     fn passes_share_one_plan() {
         let cache = PlanCache::new();
         let hw = HwSpec::default();
-        let knobs = SimKnobs {
-            sim_decode_steps: 4,
-            ..SimKnobs::default()
-        };
+        let knobs = knobs();
         let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8);
         let a = cache.get_or_lower(&cfg.clone().with_seed(1), &hw, &knobs);
         let b = cache.get_or_lower(&cfg.clone().with_seed(2), &hw, &knobs);
-        assert!(Arc::ptr_eq(&a, &b), "seed must not fork the plan");
-        assert_eq!(cache.stats(), (1, 1));
+        assert!(
+            Arc::ptr_eq(&a.scalars, &b.scalars),
+            "seed must not fork the plan"
+        );
+        let st = cache.stats();
+        assert_eq!((st.structure_lowerings, st.rebinds, st.shape_hits), (1, 0, 1));
     }
 
     #[test]
-    fn distinct_configs_get_distinct_plans() {
+    fn distinct_meshes_get_distinct_structures() {
         let cache = PlanCache::new();
         let hw = HwSpec::default();
-        let knobs = SimKnobs {
-            sim_decode_steps: 4,
-            ..SimKnobs::default()
-        };
+        let knobs = knobs();
         let a = cache.get_or_lower(
             &RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8),
             &hw,
@@ -103,8 +174,46 @@ mod tests {
             &hw,
             &knobs,
         );
-        assert!(!Arc::ptr_eq(&a, &b));
-        assert_eq!(a.num_ranks, 2);
-        assert_eq!(b.num_ranks, 4);
+        assert!(!Arc::ptr_eq(&a.structure, &b.structure));
+        assert_eq!(a.num_ranks(), 2);
+        assert_eq!(b.num_ranks(), 4);
+        assert_eq!(cache.stats().structure_lowerings, 2);
+    }
+
+    #[test]
+    fn same_mesh_new_shape_rebinds_instead_of_relowering() {
+        let cache = PlanCache::new();
+        let hw = HwSpec::default();
+        let knobs = knobs();
+        // TP structure is batch- and prompt-length-invariant: only the
+        // scalar table differs between these three shapes.
+        let a = cache.get_or_lower(&RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8), &hw, &knobs);
+        let b = cache.get_or_lower(&RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 32), &hw, &knobs);
+        let mut long_prompt = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8);
+        long_prompt.seq_in = 512;
+        let c = cache.get_or_lower(&long_prompt, &hw, &knobs);
+        assert!(Arc::ptr_eq(&a.structure, &b.structure), "one structure serves all shapes");
+        assert!(Arc::ptr_eq(&a.structure, &c.structure));
+        assert!(!Arc::ptr_eq(&a.scalars, &b.scalars), "scalars are per shape");
+        let st = cache.stats();
+        assert_eq!((st.structure_lowerings, st.rebinds, st.shape_hits), (1, 2, 0));
+        assert_eq!(cache.sizes(), (1, 3));
+        assert!(st.reuse_rate() > 0.6);
+    }
+
+    #[test]
+    fn pipeline_microbatch_count_is_structural() {
+        // batch 2 on 4 stages -> 2 microbatches; batch 8 -> 4. Different op
+        // sequences, so distinct structures; batches 8 and 32 share the
+        // 4-microbatch structure.
+        let cache = PlanCache::new();
+        let hw = HwSpec::default();
+        let knobs = knobs();
+        let tiny = cache.get_or_lower(&RunConfig::new("Vicuna-7B", Parallelism::Pipeline, 4, 2), &hw, &knobs);
+        let a = cache.get_or_lower(&RunConfig::new("Vicuna-7B", Parallelism::Pipeline, 4, 8), &hw, &knobs);
+        let b = cache.get_or_lower(&RunConfig::new("Vicuna-7B", Parallelism::Pipeline, 4, 32), &hw, &knobs);
+        assert!(!Arc::ptr_eq(&tiny.structure, &a.structure));
+        assert!(Arc::ptr_eq(&a.structure, &b.structure));
+        assert_eq!(cache.stats().structure_lowerings, 2);
     }
 }

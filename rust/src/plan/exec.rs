@@ -1,0 +1,613 @@
+//! Compiled execution layer: the structure-of-arrays `ExecPlan` and its
+//! shape rebinding (DESIGN.md §12).
+//!
+//! A lowered run factors into two halves with very different lifetimes:
+//!
+//! * **Structure** ([`PlanStructure`]) — the op sequence over the rank
+//!   mesh: kinds, rank ranges, module/layer/step tags, P2P edge ids,
+//!   jitter and wait-record flags. It depends only on the configuration's
+//!   *mesh topology* (model, strategy, GPU count, microbatch count,
+//!   simulated step count) — never on payload sizes, sequence lengths, or
+//!   link constants.
+//! * **Shape scalars** ([`ShapeScalars`]) — the per-op scalar table:
+//!   nominal roofline durations and utilizations for compute ops, transfer
+//!   durations and wire powers for communication ops. This is the only
+//!   part that differs between sweep/tune candidates or serving steps that
+//!   share a mesh.
+//!
+//! The two lowering sinks here implement that split: [`StructureBuilder`]
+//! lowers a configuration into both halves at once (the full lowering of a
+//! new mesh), while [`ShapeBinding`] replays the same lowering pass against
+//! a cached structure and re-derives *only* the scalar table — an
+//! array-fill instead of an op-graph build. `plan::PlanCache` keys
+//! structures by `parallelism::structure_key` and shapes by run identity,
+//! so a tune grid or serving trace lowers each mesh once.
+//!
+//! The engine executes the arrays directly
+//! (`simulator::engine::execute_compiled`) in the same op order as the
+//! interpreted `Plan` walk, so seeded results are bit-identical to the
+//! reference path (kept behind `SimKnobs::reference_engine` and
+//! property-tested).
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::plan::{Op, Plan, PlanSink, RankRange, WaitRecord};
+use crate::simulator::perf::ModuleTiming;
+use crate::simulator::timeline::ModuleKind;
+
+/// Discriminant of one op slot in the structure arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Compute,
+    Collective,
+    Send,
+    Recv,
+}
+
+/// Mesh-topology half of a compiled plan: parallel arrays over the op
+/// sequence (one slot per op, in the same topological order as the
+/// reference `Plan::ops`). Shared via `Arc` between every shape bound on
+/// the same mesh.
+#[derive(Debug)]
+pub struct PlanStructure {
+    pub num_ranks: usize,
+    pub kind: Vec<OpKind>,
+    pub ranks: Vec<RankRange>,
+    pub module: Vec<ModuleKind>,
+    pub layer: Vec<u16>,
+    pub step: Vec<u32>,
+    /// P2P edge id (`Send`/`Recv` slots; `u32::MAX` elsewhere).
+    pub edge: Vec<u32>,
+    /// Launch-desync jitter flag (`Collective` slots).
+    pub jitter: Vec<bool>,
+    /// Wait-sample recording policy (`Collective` slots).
+    pub record: Vec<WaitRecord>,
+    pub num_edges: u32,
+    /// Whether this strategy draws the per-run launch-desync scale.
+    pub draws_sync_jitter: bool,
+}
+
+impl PlanStructure {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.kind.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.kind.is_empty()
+    }
+
+    /// Number of ops per kind: (compute, collective, send, recv).
+    pub fn op_census(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for k in &self.kind {
+            match k {
+                OpKind::Compute => c.0 += 1,
+                OpKind::Collective => c.1 += 1,
+                OpKind::Send => c.2 += 1,
+                OpKind::Recv => c.3 += 1,
+            }
+        }
+        c
+    }
+}
+
+/// Shape half of a compiled plan: the per-op scalar table re-derived by a
+/// `ShapeBinding` for every new (batch, sequence, step) shape on an
+/// unchanged mesh.
+#[derive(Debug)]
+pub struct ShapeScalars {
+    /// Per-op duration: nominal compute seconds (`Compute`), transfer
+    /// seconds (`Collective`/`Send`), 0 for `Recv`.
+    pub dur_s: Vec<f64>,
+    /// Per-op auxiliary scalar: arithmetic utilization (`Compute`), extra
+    /// transfer-phase wire power in W (`Collective`/`Send`), 0 for `Recv`.
+    pub aux: Vec<f64>,
+    /// Decode steps simulated explicitly (before extrapolation).
+    pub sim_steps: usize,
+    /// Collective/P2P payload bytes moved per simulated decode step.
+    pub comm_bytes_per_step: f64,
+}
+
+/// A compiled, executable plan: shared mesh structure + bound shape
+/// scalars. Cloning is two `Arc` bumps.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    pub structure: Arc<PlanStructure>,
+    pub scalars: Arc<ShapeScalars>,
+}
+
+impl ExecPlan {
+    #[inline]
+    pub fn num_ranks(&self) -> usize {
+        self.structure.num_ranks
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.structure.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.structure.is_empty()
+    }
+
+    /// Number of ops per kind: (compute, collective, send, recv).
+    pub fn op_census(&self) -> (usize, usize, usize, usize) {
+        self.structure.op_census()
+    }
+
+    /// Sub-plan containing exactly the ops whose decode-step tag satisfies
+    /// `keep`, in the original order (the serving step slicer). Edge ids
+    /// are left untouched — sends and receives never cross a step tag in
+    /// any lowerer, so sliced plans keep every consumed edge matched and
+    /// unreferenced edge slots are simply never received. The slice is a
+    /// one-step plan (`sim_steps = 1`).
+    pub fn slice_steps(&self, keep: impl Fn(u32) -> bool) -> ExecPlan {
+        let s = &*self.structure;
+        let sc = &*self.scalars;
+        let idx: Vec<usize> = (0..s.len()).filter(|&i| keep(s.step[i])).collect();
+        let structure = PlanStructure {
+            num_ranks: s.num_ranks,
+            kind: idx.iter().map(|&i| s.kind[i]).collect(),
+            ranks: idx.iter().map(|&i| s.ranks[i]).collect(),
+            module: idx.iter().map(|&i| s.module[i]).collect(),
+            layer: idx.iter().map(|&i| s.layer[i]).collect(),
+            step: idx.iter().map(|&i| s.step[i]).collect(),
+            edge: idx.iter().map(|&i| s.edge[i]).collect(),
+            jitter: idx.iter().map(|&i| s.jitter[i]).collect(),
+            record: idx.iter().map(|&i| s.record[i]).collect(),
+            num_edges: s.num_edges,
+            draws_sync_jitter: s.draws_sync_jitter,
+        };
+        let scalars = ShapeScalars {
+            dur_s: idx.iter().map(|&i| sc.dur_s[i]).collect(),
+            aux: idx.iter().map(|&i| sc.aux[i]).collect(),
+            sim_steps: 1,
+            comm_bytes_per_step: sc.comm_bytes_per_step,
+        };
+        ExecPlan {
+            structure: Arc::new(structure),
+            scalars: Arc::new(scalars),
+        }
+    }
+}
+
+/// Compile an interpreted reference `Plan` into SoA form. Hot paths lower
+/// straight into the arrays via `parallelism::compile`; this conversion
+/// serves tests and diagnostics that already hold a `Plan`.
+pub fn compile(plan: &Plan) -> ExecPlan {
+    let n = plan.ops.len();
+    let mut b = StructureBuilder::new(plan.num_ranks);
+    b.reserve(n);
+    for op in &plan.ops {
+        match *op {
+            Op::Compute {
+                ranks,
+                module,
+                layer,
+                step,
+                nominal_s,
+                util,
+            } => {
+                b.push(OpKind::Compute, ranks, module, layer, step, u32::MAX, false, WaitRecord::None, nominal_s, util)
+            }
+            Op::Collective {
+                ranks,
+                module,
+                layer,
+                step,
+                transfer_s,
+                wire_w,
+                jitter,
+                record,
+            } => b.push(OpKind::Collective, ranks, module, layer, step, u32::MAX, jitter, record, transfer_s, wire_w),
+            Op::Send {
+                ranks,
+                layer,
+                step,
+                transfer_s,
+                wire_w,
+                edge,
+            } => {
+                let module = ModuleKind::P2PTransfer;
+                b.push(OpKind::Send, ranks, module, layer, step, edge, false, WaitRecord::None, transfer_s, wire_w);
+                b.num_edges = b.num_edges.max(edge + 1);
+            }
+            Op::Recv { ranks, layer, step, edge } => {
+                let module = ModuleKind::P2PTransfer;
+                b.push(OpKind::Recv, ranks, module, layer, step, edge, false, WaitRecord::None, 0.0, 0.0)
+            }
+        }
+    }
+    b.num_edges = b.num_edges.max(plan.num_edges);
+    b.finish(plan.sim_steps, plan.comm_bytes_per_step, plan.draws_sync_jitter)
+}
+
+/// Lowering sink that builds a compiled plan directly — the full lowering
+/// of a mesh the cache has not seen (structure + scalars in one pass,
+/// no `Vec<Op>` intermediary).
+#[derive(Debug)]
+pub struct StructureBuilder {
+    num_ranks: usize,
+    kind: Vec<OpKind>,
+    ranks: Vec<RankRange>,
+    module: Vec<ModuleKind>,
+    layer: Vec<u16>,
+    step: Vec<u32>,
+    edge: Vec<u32>,
+    jitter: Vec<bool>,
+    record: Vec<WaitRecord>,
+    num_edges: u32,
+    dur_s: Vec<f64>,
+    aux: Vec<f64>,
+}
+
+impl StructureBuilder {
+    pub fn new(num_ranks: usize) -> StructureBuilder {
+        StructureBuilder {
+            num_ranks,
+            kind: Vec::new(),
+            ranks: Vec::new(),
+            module: Vec::new(),
+            layer: Vec::new(),
+            step: Vec::new(),
+            edge: Vec::new(),
+            jitter: Vec::new(),
+            record: Vec::new(),
+            num_edges: 0,
+            dur_s: Vec::new(),
+            aux: Vec::new(),
+        }
+    }
+
+    fn reserve(&mut self, n: usize) {
+        self.kind.reserve(n);
+        self.ranks.reserve(n);
+        self.module.reserve(n);
+        self.layer.reserve(n);
+        self.step.reserve(n);
+        self.edge.reserve(n);
+        self.jitter.reserve(n);
+        self.record.reserve(n);
+        self.dur_s.reserve(n);
+        self.aux.reserve(n);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn push(
+        &mut self,
+        kind: OpKind,
+        ranks: RankRange,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        edge: u32,
+        jitter: bool,
+        record: WaitRecord,
+        dur_s: f64,
+        aux: f64,
+    ) {
+        self.kind.push(kind);
+        self.ranks.push(ranks);
+        self.module.push(module);
+        self.layer.push(layer);
+        self.step.push(step);
+        self.edge.push(edge);
+        self.jitter.push(jitter);
+        self.record.push(record);
+        self.dur_s.push(dur_s);
+        self.aux.push(aux);
+    }
+
+    pub fn finish(self, sim_steps: usize, comm_bytes_per_step: f64, draws_sync_jitter: bool) -> ExecPlan {
+        ExecPlan {
+            structure: Arc::new(PlanStructure {
+                num_ranks: self.num_ranks,
+                kind: self.kind,
+                ranks: self.ranks,
+                module: self.module,
+                layer: self.layer,
+                step: self.step,
+                edge: self.edge,
+                jitter: self.jitter,
+                record: self.record,
+                num_edges: self.num_edges,
+                draws_sync_jitter,
+            }),
+            scalars: Arc::new(ShapeScalars {
+                dur_s: self.dur_s,
+                aux: self.aux,
+                sim_steps,
+                comm_bytes_per_step,
+            }),
+        }
+    }
+}
+
+impl PlanSink for StructureBuilder {
+    fn compute(&mut self, ranks: Range<usize>, timing: ModuleTiming, module: ModuleKind, layer: u16, step: u32) {
+        self.push(
+            OpKind::Compute,
+            RankRange::of(ranks),
+            module,
+            layer,
+            step,
+            u32::MAX,
+            false,
+            WaitRecord::None,
+            timing.dur_s,
+            timing.util,
+        );
+    }
+
+    fn collective_tiered(
+        &mut self,
+        ranks: Range<usize>,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        transfer_s: f64,
+        wire_w: f64,
+        jitter: bool,
+        record: WaitRecord,
+    ) {
+        let ranks = RankRange::of(ranks);
+        self.push(OpKind::Collective, ranks, module, layer, step, u32::MAX, jitter, record, transfer_s, wire_w);
+    }
+
+    fn send_tiered(&mut self, ranks: Range<usize>, layer: u16, step: u32, transfer_s: f64, wire_w: f64) -> u32 {
+        let edge = self.num_edges;
+        self.num_edges += 1;
+        self.push(
+            OpKind::Send,
+            RankRange::of(ranks),
+            ModuleKind::P2PTransfer,
+            layer,
+            step,
+            edge,
+            false,
+            WaitRecord::None,
+            transfer_s,
+            wire_w,
+        );
+        edge
+    }
+
+    fn recv(&mut self, ranks: Range<usize>, layer: u16, step: u32, edge: u32) {
+        debug_assert!(edge < self.num_edges, "recv of unsent edge {edge}");
+        let (ranks, module) = (RankRange::of(ranks), ModuleKind::P2PTransfer);
+        self.push(OpKind::Recv, ranks, module, layer, step, edge, false, WaitRecord::None, 0.0, 0.0);
+    }
+}
+
+/// Lowering sink that *rebinds* a cached structure to a new shape: the
+/// lowering pass is replayed, but only the scalar table is written — an
+/// array fill at cursor positions, no op-graph allocation. Debug builds
+/// assert the replay matches the cached structure op-for-op (the
+/// `PlanSink` contract); release builds verify the op and edge counts.
+#[derive(Debug)]
+pub struct ShapeBinding {
+    structure: Arc<PlanStructure>,
+    at: usize,
+    edges: u32,
+    dur_s: Vec<f64>,
+    aux: Vec<f64>,
+}
+
+impl ShapeBinding {
+    pub fn new(structure: Arc<PlanStructure>) -> ShapeBinding {
+        let n = structure.len();
+        ShapeBinding {
+            structure,
+            at: 0,
+            edges: 0,
+            dur_s: Vec::with_capacity(n),
+            aux: Vec::with_capacity(n),
+        }
+    }
+
+    /// Record one op's scalars, debug-asserting the full structural tuple
+    /// against the cached slot (the `PlanSink` contract: only scalars may
+    /// vary between shapes of one mesh).
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn slot(
+        &mut self,
+        kind: OpKind,
+        ranks: Range<usize>,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        dur_s: f64,
+        aux: f64,
+    ) {
+        let i = self.at;
+        debug_assert!(i < self.structure.len(), "shape rebind overruns the cached structure at op {i}");
+        debug_assert_eq!(self.structure.kind[i], kind, "op {i}: kind drifted from the cached structure");
+        debug_assert_eq!(
+            self.structure.ranks[i],
+            RankRange::of(ranks),
+            "op {i}: rank range drifted from the cached structure"
+        );
+        debug_assert_eq!(self.structure.module[i], module, "op {i}: module drifted from the cached structure");
+        debug_assert_eq!(self.structure.layer[i], layer, "op {i}: layer drifted from the cached structure");
+        debug_assert_eq!(self.structure.step[i], step, "op {i}: step drifted from the cached structure");
+        self.dur_s.push(dur_s);
+        self.aux.push(aux);
+        self.at += 1;
+    }
+
+    pub fn finish(self, sim_steps: usize, comm_bytes_per_step: f64, draws_sync_jitter: bool) -> ExecPlan {
+        assert_eq!(
+            self.at,
+            self.structure.len(),
+            "shape rebind emitted a different op count than the cached structure"
+        );
+        assert_eq!(
+            self.edges, self.structure.num_edges,
+            "shape rebind emitted a different edge count than the cached structure"
+        );
+        debug_assert_eq!(draws_sync_jitter, self.structure.draws_sync_jitter);
+        ExecPlan {
+            structure: self.structure,
+            scalars: Arc::new(ShapeScalars {
+                dur_s: self.dur_s,
+                aux: self.aux,
+                sim_steps,
+                comm_bytes_per_step,
+            }),
+        }
+    }
+}
+
+impl PlanSink for ShapeBinding {
+    fn compute(&mut self, ranks: Range<usize>, timing: ModuleTiming, module: ModuleKind, layer: u16, step: u32) {
+        self.slot(OpKind::Compute, ranks, module, layer, step, timing.dur_s, timing.util);
+    }
+
+    fn collective_tiered(
+        &mut self,
+        ranks: Range<usize>,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        transfer_s: f64,
+        wire_w: f64,
+        jitter: bool,
+        record: WaitRecord,
+    ) {
+        let i = self.at;
+        debug_assert!(
+            i >= self.structure.len() || self.structure.jitter[i] == jitter,
+            "op {i}: jitter flag drifted from the cached structure"
+        );
+        debug_assert!(
+            i >= self.structure.len() || self.structure.record[i] == record,
+            "op {i}: wait-record policy drifted from the cached structure"
+        );
+        self.slot(OpKind::Collective, ranks, module, layer, step, transfer_s, wire_w);
+    }
+
+    fn send_tiered(&mut self, ranks: Range<usize>, layer: u16, step: u32, transfer_s: f64, wire_w: f64) -> u32 {
+        let edge = self.edges;
+        self.edges += 1;
+        let i = self.at;
+        debug_assert!(
+            i >= self.structure.len() || self.structure.edge[i] == edge,
+            "op {i}: edge id drifted from the cached structure"
+        );
+        self.slot(OpKind::Send, ranks, ModuleKind::P2PTransfer, layer, step, transfer_s, wire_w);
+        edge
+    }
+
+    fn recv(&mut self, ranks: Range<usize>, layer: u16, step: u32, edge: u32) {
+        let i = self.at;
+        debug_assert!(
+            i >= self.structure.len() || self.structure.edge[i] == edge,
+            "op {i}: edge id drifted from the cached structure"
+        );
+        self.slot(OpKind::Recv, ranks, ModuleKind::P2PTransfer, layer, step, 0.0, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::PlanBuilder;
+
+    fn timing(dur: f64) -> ModuleTiming {
+        ModuleTiming { dur_s: dur, util: 0.7 }
+    }
+
+    fn sample_plan() -> Plan {
+        let mut b = PlanBuilder::new(4);
+        b.compute(0..4, timing(1e-3), ModuleKind::Mlp, 0, 0);
+        b.collective(0..4, ModuleKind::AllReduce, 0, 0, 1e-4, true, WaitRecord::All);
+        let e = b.send(0..2, 1, 1, 2e-4);
+        b.recv(2..4, 1, 1, e);
+        b.compute(2..4, timing(3e-3), ModuleKind::LogitsHead, 2, 1);
+        b.finish(2, 64.0, true)
+    }
+
+    #[test]
+    fn compile_preserves_census_and_scalars() {
+        let plan = sample_plan();
+        let ep = compile(&plan);
+        assert_eq!(ep.op_census(), plan.op_census());
+        assert_eq!(ep.len(), plan.ops.len());
+        assert_eq!(ep.num_ranks(), plan.num_ranks);
+        assert_eq!(ep.structure.num_edges, plan.num_edges);
+        assert!(ep.structure.draws_sync_jitter);
+        assert_eq!(ep.scalars.sim_steps, 2);
+        assert_eq!(ep.scalars.comm_bytes_per_step, 64.0);
+        assert_eq!(ep.scalars.dur_s, vec![1e-3, 1e-4, 2e-4, 0.0, 3e-3]);
+        assert_eq!(ep.scalars.aux, vec![0.7, 0.0, 0.0, 0.0, 0.7]);
+        assert_eq!(ep.structure.kind[1], OpKind::Collective);
+        assert!(ep.structure.jitter[1]);
+        assert_eq!(ep.structure.edge[2], 0);
+        assert_eq!(ep.structure.edge[3], 0);
+    }
+
+    #[test]
+    fn structure_builder_matches_compiled_plan() {
+        // Emitting the same sequence through the SoA sink reproduces the
+        // compile() conversion exactly.
+        let via_plan = compile(&sample_plan());
+        let mut b = StructureBuilder::new(4);
+        b.compute(0..4, timing(1e-3), ModuleKind::Mlp, 0, 0);
+        b.collective(0..4, ModuleKind::AllReduce, 0, 0, 1e-4, true, WaitRecord::All);
+        let e = b.send(0..2, 1, 1, 2e-4);
+        b.recv(2..4, 1, 1, e);
+        b.compute(2..4, timing(3e-3), ModuleKind::LogitsHead, 2, 1);
+        let direct = b.finish(2, 64.0, true);
+        assert_eq!(direct.structure.kind, via_plan.structure.kind);
+        assert_eq!(direct.structure.ranks, via_plan.structure.ranks);
+        assert_eq!(direct.structure.step, via_plan.structure.step);
+        assert_eq!(direct.structure.edge, via_plan.structure.edge);
+        assert_eq!(direct.scalars.dur_s, via_plan.scalars.dur_s);
+        assert_eq!(direct.scalars.aux, via_plan.scalars.aux);
+    }
+
+    #[test]
+    fn shape_binding_rebinds_only_scalars() {
+        let base = compile(&sample_plan());
+        let mut r = ShapeBinding::new(Arc::clone(&base.structure));
+        r.compute(0..4, timing(2e-3), ModuleKind::Mlp, 0, 0);
+        r.collective(0..4, ModuleKind::AllReduce, 0, 0, 5e-4, true, WaitRecord::All);
+        let e = r.send(0..2, 1, 1, 9e-4);
+        r.recv(2..4, 1, 1, e);
+        r.compute(2..4, timing(4e-3), ModuleKind::LogitsHead, 2, 1);
+        let rebound = r.finish(2, 128.0, true);
+        assert!(Arc::ptr_eq(&rebound.structure, &base.structure), "structure is shared, not copied");
+        assert_eq!(rebound.scalars.dur_s, vec![2e-3, 5e-4, 9e-4, 0.0, 4e-3]);
+        assert_eq!(rebound.scalars.comm_bytes_per_step, 128.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different op count")]
+    fn shape_binding_rejects_short_replay() {
+        let base = compile(&sample_plan());
+        let mut r = ShapeBinding::new(Arc::clone(&base.structure));
+        r.compute(0..4, timing(2e-3), ModuleKind::Mlp, 0, 0);
+        let _ = r.finish(2, 0.0, true);
+    }
+
+    #[test]
+    fn slice_steps_partitions_and_keeps_edges() {
+        let ep = compile(&sample_plan());
+        let prefill = ep.slice_steps(|s| s == 0);
+        let decode = ep.slice_steps(|s| s > 0);
+        assert_eq!(prefill.len() + decode.len(), ep.len());
+        assert!(prefill.structure.step.iter().all(|&s| s == 0));
+        assert!(decode.structure.step.iter().all(|&s| s > 0));
+        // Edge ids survive slicing; the decode slice holds both endpoints.
+        assert_eq!(decode.structure.num_edges, ep.structure.num_edges);
+        assert_eq!(decode.op_census().2, 1);
+        assert_eq!(decode.op_census().3, 1);
+        assert_eq!(decode.scalars.sim_steps, 1);
+    }
+}

@@ -22,15 +22,23 @@
 //! desynchronization) is injected by the event engine at execution time
 //! (`simulator::engine`), which is what makes plans cacheable across the
 //! repeated passes of a profiling campaign (`plan::cache::PlanCache`).
+//!
+//! The pointer-heavy `Vec<Op>` form below is the **reference
+//! representation** (executed by the interpreted engine path behind
+//! `SimKnobs::reference_engine`). The hot paths compile into the
+//! structure-of-arrays `exec::ExecPlan` instead — same op sequence, split
+//! into a mesh-keyed structure and a shape-scalar table (DESIGN.md §12).
 
 pub mod cache;
+pub mod exec;
 
 use std::ops::Range;
 
 use crate::simulator::perf::ModuleTiming;
 use crate::simulator::timeline::ModuleKind;
 
-pub use cache::PlanCache;
+pub use cache::{CacheStats, PlanCache};
+pub use exec::{ExecPlan, PlanStructure, ShapeBinding, ShapeScalars, StructureBuilder};
 
 /// How a collective rendezvous records per-rank waiting durations into
 /// the run's synchronization samples (the raw material of the paper's
@@ -198,7 +206,84 @@ impl Plan {
     }
 }
 
-/// Incremental builder used by the strategy lowerers.
+/// Lowering sink: the strategy lowerers are generic over this trait, so
+/// one lowering pass can feed either the interpreted op list
+/// (`PlanBuilder`, the reference representation), a compiled
+/// structure-of-arrays plan (`exec::StructureBuilder`), or a scalar-table
+/// rebind against a cached structure (`exec::ShapeBinding`).
+///
+/// Contract: for a fixed structure identity (`parallelism::structure_key`)
+/// the lowerers issue the *same call sequence* with the same structural
+/// arguments (rank ranges, modules, layers, steps, edge pairing, jitter
+/// and record flags); only the scalar arguments — timings, transfer
+/// durations, wire powers — may differ between shapes. `ShapeBinding`
+/// enforces this with debug assertions.
+pub trait PlanSink {
+    /// Skewed compute of `timing` on every rank of `ranks`.
+    fn compute(
+        &mut self,
+        ranks: Range<usize>,
+        timing: ModuleTiming,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+    );
+
+    /// Rendezvous collective with an explicit link-tier wire power (the
+    /// topology-aware lowering path; `wire_w == 0` reproduces `collective`,
+    /// `transfer_s == 0` is a pure barrier).
+    #[allow(clippy::too_many_arguments)]
+    fn collective_tiered(
+        &mut self,
+        ranks: Range<usize>,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        transfer_s: f64,
+        wire_w: f64,
+        jitter: bool,
+        record: WaitRecord,
+    );
+
+    /// P2P send with an explicit link-tier wire power; returns the edge id
+    /// for the matching `recv`.
+    fn send_tiered(
+        &mut self,
+        ranks: Range<usize>,
+        layer: u16,
+        step: u32,
+        transfer_s: f64,
+        wire_w: f64,
+    ) -> u32;
+
+    /// P2P receive on `ranks` of a previously emitted edge.
+    fn recv(&mut self, ranks: Range<usize>, layer: u16, step: u32, edge: u32);
+
+    /// Rendezvous collective (or, with `transfer_s == 0`, a barrier) over
+    /// the legacy flat link (no wire-power term).
+    #[allow(clippy::too_many_arguments)]
+    fn collective(
+        &mut self,
+        ranks: Range<usize>,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        transfer_s: f64,
+        jitter: bool,
+        record: WaitRecord,
+    ) {
+        self.collective_tiered(ranks, module, layer, step, transfer_s, 0.0, jitter, record);
+    }
+
+    /// P2P send from `ranks` over the legacy flat link; returns the edge id
+    /// for the matching `recv`.
+    fn send(&mut self, ranks: Range<usize>, layer: u16, step: u32, transfer_s: f64) -> u32 {
+        self.send_tiered(ranks, layer, step, transfer_s, 0.0)
+    }
+}
+
+/// Incremental builder used by the strategy lowerers (the reference
+/// `Vec<Op>` representation; hot paths build `exec::ExecPlan` instead).
 #[derive(Debug)]
 pub struct PlanBuilder {
     num_ranks: usize,
@@ -215,8 +300,25 @@ impl PlanBuilder {
         }
     }
 
-    /// Skewed compute of `timing` on every rank of `ranks`.
-    pub fn compute(
+    pub fn finish(
+        self,
+        sim_steps: usize,
+        comm_bytes_per_step: f64,
+        draws_sync_jitter: bool,
+    ) -> Plan {
+        Plan {
+            num_ranks: self.num_ranks,
+            ops: self.ops,
+            num_edges: self.num_edges,
+            draws_sync_jitter,
+            sim_steps,
+            comm_bytes_per_step,
+        }
+    }
+}
+
+impl PlanSink for PlanBuilder {
+    fn compute(
         &mut self,
         ranks: Range<usize>,
         timing: ModuleTiming,
@@ -234,26 +336,7 @@ impl PlanBuilder {
         });
     }
 
-    /// Rendezvous collective (or, with `transfer_s == 0`, a barrier) over
-    /// the legacy flat link (no wire-power term).
-    #[allow(clippy::too_many_arguments)]
-    pub fn collective(
-        &mut self,
-        ranks: Range<usize>,
-        module: ModuleKind,
-        layer: u16,
-        step: u32,
-        transfer_s: f64,
-        jitter: bool,
-        record: WaitRecord,
-    ) {
-        self.collective_tiered(ranks, module, layer, step, transfer_s, 0.0, jitter, record);
-    }
-
-    /// Rendezvous collective with an explicit link-tier wire power (the
-    /// topology-aware lowering path; `wire_w == 0` reproduces `collective`).
-    #[allow(clippy::too_many_arguments)]
-    pub fn collective_tiered(
+    fn collective_tiered(
         &mut self,
         ranks: Range<usize>,
         module: ModuleKind,
@@ -276,14 +359,7 @@ impl PlanBuilder {
         });
     }
 
-    /// P2P send from `ranks` over the legacy flat link; returns the edge id
-    /// for the matching `recv`.
-    pub fn send(&mut self, ranks: Range<usize>, layer: u16, step: u32, transfer_s: f64) -> u32 {
-        self.send_tiered(ranks, layer, step, transfer_s, 0.0)
-    }
-
-    /// P2P send with an explicit link-tier wire power.
-    pub fn send_tiered(&mut self, ranks: Range<usize>, layer: u16, step: u32, transfer_s: f64, wire_w: f64) -> u32 {
+    fn send_tiered(&mut self, ranks: Range<usize>, layer: u16, step: u32, transfer_s: f64, wire_w: f64) -> u32 {
         let edge = self.num_edges;
         self.num_edges += 1;
         self.ops.push(Op::Send {
@@ -297,8 +373,7 @@ impl PlanBuilder {
         edge
     }
 
-    /// P2P receive on `ranks` of a previously emitted edge.
-    pub fn recv(&mut self, ranks: Range<usize>, layer: u16, step: u32, edge: u32) {
+    fn recv(&mut self, ranks: Range<usize>, layer: u16, step: u32, edge: u32) {
         debug_assert!(edge < self.num_edges, "recv of unsent edge {edge}");
         self.ops.push(Op::Recv {
             ranks: RankRange::of(ranks),
@@ -306,22 +381,6 @@ impl PlanBuilder {
             step,
             edge,
         });
-    }
-
-    pub fn finish(
-        self,
-        sim_steps: usize,
-        comm_bytes_per_step: f64,
-        draws_sync_jitter: bool,
-    ) -> Plan {
-        Plan {
-            num_ranks: self.num_ranks,
-            ops: self.ops,
-            num_edges: self.num_edges,
-            draws_sync_jitter,
-            sim_steps,
-            comm_bytes_per_step,
-        }
     }
 }
 

@@ -17,8 +17,8 @@ pub mod store;
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::features::SyncDb;
-use crate::plan::PlanCache;
-use crate::simulator::{simulate_run_planned, RunRecord};
+use crate::plan::{CacheStats, PlanCache};
+use crate::simulator::{simulate_run_planned, simulate_run_reference, RunRecord};
 use crate::util::par;
 
 /// A profiling campaign description.
@@ -45,17 +45,24 @@ impl Default for Campaign {
     }
 }
 
-/// Profiled dataset: records plus the offline sync-sampling database.
+/// Profiled dataset: records plus the offline sync-sampling database and
+/// the plan-cache counters of the campaign that produced it.
 #[derive(Debug)]
 pub struct Dataset {
     pub runs: Vec<RunRecord>,
     pub sync_db: SyncDb,
+    /// Two-level plan-cache counters: configs sharing a mesh topology
+    /// lower once and rebind shapes; repeated passes hit the shape level.
+    pub cache: CacheStats,
 }
 
 impl Campaign {
     /// Expand configs × passes and simulate them all. Every pass of one
-    /// configuration executes the same cached plan (lowering never sees
-    /// the seed), so the cache trades one lowering for `passes` runs.
+    /// configuration executes the same cached compiled plan (lowering
+    /// never sees the seed), and configurations sharing a mesh topology
+    /// share one structure lowering (`plan::PlanCache`). With
+    /// `SimKnobs::reference_engine` set, every run instead lowers and
+    /// executes on the interpreted reference path (bit-identical).
     pub fn profile(&self, configs: &[RunConfig]) -> Dataset {
         let mut jobs: Vec<RunConfig> = Vec::with_capacity(configs.len() * self.passes);
         for cfg in configs {
@@ -66,11 +73,19 @@ impl Campaign {
 
         let cache = PlanCache::new();
         let runs = par::par_map(&jobs, self.threads, |cfg| {
-            let plan = cache.get_or_lower(cfg, &self.hw, &self.knobs);
-            simulate_run_planned(cfg, &self.hw, &self.knobs, &plan)
+            if self.knobs.reference_engine {
+                simulate_run_reference(cfg, &self.hw, &self.knobs)
+            } else {
+                let plan = cache.get_or_lower(cfg, &self.hw, &self.knobs);
+                simulate_run_planned(cfg, &self.hw, &self.knobs, &plan)
+            }
         });
         let sync_db = SyncDb::build(&runs);
-        Dataset { runs, sync_db }
+        Dataset {
+            runs,
+            sync_db,
+            cache: cache.stats(),
+        }
     }
 }
 

@@ -234,7 +234,11 @@ pub fn load_dataset(path: &str) -> Result<super::Dataset, String> {
         .collect();
     let runs = runs?;
     let sync_db = SyncDb::build(&runs);
-    Ok(super::Dataset { runs, sync_db })
+    Ok(super::Dataset {
+        runs,
+        sync_db,
+        cache: Default::default(),
+    })
 }
 
 /// Serialize one served-request record (serving store, schema v3).

@@ -1,30 +1,34 @@
-//! Step lowering: scheduled serving steps → Plan IR.
+//! Step lowering: scheduled serving steps → compiled sub-plans.
 //!
 //! The batcher emits a sequence of heterogeneous *steps* — a batched
 //! prefill over newly admitted prompts, or one decode iteration for the
 //! resident batch at its current KV context. Each step shape lowers
-//! through the **existing** parallelism lowerers (`parallelism::lower`)
-//! unchanged: a step-shaped `RunConfig` (`seq_out = 1`, one simulated
-//! decode step) produces a full mini-plan whose step-0 ops are exactly the
-//! prefill pass over `tokens` prompt tokens and whose step-1 ops are
-//! exactly one decode iteration at KV context `tokens` — the sub-plan the
-//! step needs is sliced out by the op `step` tag. Sends and receives never
-//! cross a step tag in any lowerer (pipeline boundary edges live inside
-//! one pass), so sliced sub-plans keep every edge matched; edge ids are
-//! left untouched (unconsumed slots are simply never received).
+//! through the **existing** parallelism lowerers unchanged: a step-shaped
+//! `RunConfig` (`seq_out = 1`, one simulated decode step) produces a full
+//! compiled mini-plan whose step-0 ops are exactly the prefill pass over
+//! `tokens` prompt tokens and whose step-1 ops are exactly one decode
+//! iteration at KV context `tokens` — the sub-plan the step needs is
+//! sliced out of the structure arrays by op `step` tag
+//! (`ExecPlan::slice_steps`). Sends and receives never cross a step tag
+//! in any lowerer (pipeline boundary edges live inside one pass), so
+//! sliced sub-plans keep every edge matched; edge ids are left untouched
+//! (unconsumed slots are simply never received).
 //!
-//! Both step kinds of one (batch, tokens) shape share a single lowering
-//! via the run-level `plan::PlanCache`; the sliced sub-plans are cached
-//! again per shape, so a long trace replays thousands of steps from a
-//! handful of lowered plans. Contexts are bucketed by the caller
-//! (`ServeConfig::ctx_bucket`) to keep that handful small. The engine's
-//! sync/transfer isolation then applies to every serving step unchanged.
+//! Lowering rides the shared two-level `plan::PlanCache`: both step kinds
+//! of one (batch, tokens) shape share a single lowering via the shape
+//! level, and — the serving win of the compiled layer — decode steps at
+//! *different* bucketed contexts share one mesh **structure** and rebind
+//! only the scalar table, so a long trace replays thousands of steps from
+//! a handful of structure lowerings plus cheap array fills. Contexts are
+//! bucketed by the caller (`ServeConfig::ctx_bucket`) to bound even the
+//! rebind count. The engine's sync/transfer isolation then applies to
+//! every serving step unchanged.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
 
 use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
-use crate::plan::{Plan, PlanCache};
+use crate::plan::{CacheStats, ExecPlan, PlanCache};
 
 /// Phase of a scheduled step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -60,30 +64,15 @@ pub fn bucket_tokens(tokens: usize, bucket: usize) -> usize {
     tokens.div_ceil(b) * b
 }
 
-/// Slice the ops of a lowered mini-plan down to one step kind.
-fn slice(plan: &Plan, kind: StepKind) -> Plan {
-    let ops = plan
-        .ops
-        .iter()
-        .filter(|op| match kind {
-            StepKind::Prefill => op.step() == 0,
-            StepKind::Decode => op.step() > 0,
-        })
-        .cloned()
-        .collect();
-    Plan {
-        num_ranks: plan.num_ranks,
-        ops,
-        // Edge ids are global to the mini-plan; keeping the count valid is
-        // all the engine needs (unreferenced edges are never received).
-        num_edges: plan.num_edges,
-        draws_sync_jitter: plan.draws_sync_jitter,
-        sim_steps: 1,
-        comm_bytes_per_step: plan.comm_bytes_per_step,
+/// Slice a compiled mini-plan down to one step kind by op `step` tag.
+fn slice(plan: &ExecPlan, kind: StepKind) -> ExecPlan {
+    match kind {
+        StepKind::Prefill => plan.slice_steps(|s| s == 0),
+        StepKind::Decode => plan.slice_steps(|s| s > 0),
     }
 }
 
-/// Shape-keyed step-plan cache over the shared run-level `PlanCache`.
+/// Shape-keyed step-plan cache over the shared two-level run `PlanCache`.
 #[derive(Debug)]
 pub struct StepLowerer {
     model: String,
@@ -93,7 +82,7 @@ pub struct StepLowerer {
     /// Step knobs: exactly one simulated decode step.
     knobs: SimKnobs,
     runs: PlanCache,
-    steps: Mutex<HashMap<StepShape, Arc<Plan>>>,
+    steps: Mutex<HashMap<StepShape, ExecPlan>>,
 }
 
 impl StepLowerer {
@@ -132,22 +121,23 @@ impl StepLowerer {
         }
     }
 
-    /// The sliced sub-plan for a step shape (lowering on first use; both
-    /// kinds of one (batch, tokens) shape share a single lowering).
-    pub fn step_plan(&self, shape: &StepShape) -> Arc<Plan> {
+    /// The sliced sub-plan for a step shape. First use of a shape lowers
+    /// (or rebinds — shapes differing only in bucketed context share one
+    /// structure) through the run cache, then slices; both kinds of one
+    /// (batch, tokens) shape share a single lowering.
+    pub fn step_plan(&self, shape: &StepShape) -> ExecPlan {
         if let Some(p) = self.steps.lock().unwrap().get(shape) {
-            return Arc::clone(p);
+            return p.clone();
         }
         let cfg = self.step_config(shape, 0);
         let full = self.runs.get_or_lower(&cfg, &self.hw, &self.knobs);
-        let sub = Arc::new(slice(&full, shape.kind));
+        let sub = slice(&full, shape.kind);
         self.steps.lock().unwrap().entry(shape.clone()).or_insert(sub).clone()
     }
 
-    /// (lowered mini-plans, run-cache hits, sliced step plans).
-    pub fn stats(&self) -> (usize, usize, usize) {
-        let (plans, hits) = self.runs.stats();
-        (plans, hits, self.steps.lock().unwrap().len())
+    /// (run-cache counters, sliced step plans).
+    pub fn stats(&self) -> (CacheStats, usize) {
+        (self.runs.stats(), self.steps.lock().unwrap().len())
     }
 }
 
@@ -155,7 +145,8 @@ impl StepLowerer {
 mod tests {
     use super::*;
     use crate::config::Strategy;
-    use crate::plan::Op;
+    use crate::plan::exec::OpKind;
+    use crate::simulator::timeline::ModuleKind;
 
     fn lowerer(par: Parallelism, gpus: usize) -> StepLowerer {
         StepLowerer::new("Vicuna-7B", par, gpus, HwSpec::default(), &SimKnobs::default())
@@ -202,14 +193,15 @@ mod tests {
             let [pre, dec] = shapes();
             let full = {
                 let cfg = lw.step_config(&pre, 0);
-                crate::parallelism::lower(&crate::models::by_name("Vicuna-7B").unwrap(), &lw.hw, &lw.knobs, &cfg)
+                let spec = crate::models::by_name("Vicuna-7B").unwrap();
+                crate::parallelism::compile(&spec, &lw.hw, &lw.knobs, &cfg)
             };
             let p = lw.step_plan(&pre);
             let d = lw.step_plan(&dec);
-            assert_eq!(p.ops.len() + d.ops.len(), full.ops.len(), "{par:?} partition");
-            assert!(p.ops.iter().all(|op| op.step() == 0), "{par:?} prefill tags");
-            assert!(d.ops.iter().all(|op| op.step() > 0), "{par:?} decode tags");
-            assert!(!p.ops.is_empty() && !d.ops.is_empty(), "{par:?} non-empty");
+            assert_eq!(p.len() + d.len(), full.len(), "{par:?} partition");
+            assert!(p.structure.step.iter().all(|&s| s == 0), "{par:?} prefill tags");
+            assert!(d.structure.step.iter().all(|&s| s > 0), "{par:?} decode tags");
+            assert!(!p.is_empty() && !d.is_empty(), "{par:?} non-empty");
         }
     }
 
@@ -219,12 +211,17 @@ mod tests {
             let lw = lowerer(par, 4);
             for shape in shapes() {
                 let plan = lw.step_plan(&shape);
-                let mut sent = vec![false; plan.num_edges as usize];
-                for op in &plan.ops {
-                    match op {
-                        Op::Send { edge, .. } => sent[*edge as usize] = true,
-                        Op::Recv { edge, .. } => {
-                            assert!(sent[*edge as usize], "{par:?} {shape:?}: recv of unsliced edge {edge}");
+                let s = &plan.structure;
+                let mut sent = vec![false; s.num_edges as usize];
+                for i in 0..s.len() {
+                    match s.kind[i] {
+                        OpKind::Send => sent[s.edge[i] as usize] = true,
+                        OpKind::Recv => {
+                            assert!(
+                                sent[s.edge[i] as usize],
+                                "{par:?} {shape:?}: recv of unsliced edge {}",
+                                s.edge[i]
+                            );
                         }
                         _ => {}
                     }
@@ -260,39 +257,42 @@ mod tests {
         let _ = lw.step_plan(&pre);
         let _ = lw.step_plan(&dec);
         let _ = lw.step_plan(&pre);
-        let (plans, hits, steps) = lw.stats();
-        assert_eq!(plans, 1, "one mini-plan lowering serves both kinds");
-        assert_eq!(hits, 1, "the second kind hits the run cache");
+        let (cache, steps) = lw.stats();
+        assert_eq!(cache.structure_lowerings, 1, "one mini-plan lowering serves both kinds");
+        assert_eq!(cache.shape_hits, 1, "the second kind hits the shape level");
         assert_eq!(steps, 2);
     }
 
     #[test]
-    fn decode_context_is_exact() {
-        // seq_out = 1 makes the lowered decode iteration's representative
-        // KV context exactly seq_in: frac = 0.5, (0.5 * 1) as usize = 0.
-        let lw = lowerer(Parallelism::Tensor, 2);
-        let a = lw.step_plan(&StepShape {
-            kind: StepKind::Decode,
-            batch: 8,
-            tokens: 256,
-        });
-        let b = lw.step_plan(&StepShape {
-            kind: StepKind::Decode,
-            batch: 8,
-            tokens: 512,
-        });
-        // Longer context -> strictly more attention time in the plan.
-        let attn_time = |p: &Plan| -> f64 {
-            let mut t = 0.0;
-            for op in &p.ops {
-                if let Op::Compute { module, nominal_s, .. } = op {
-                    if *module == crate::simulator::timeline::ModuleKind::SelfAttention {
-                        t += *nominal_s;
-                    }
-                }
-            }
-            t
+    fn contexts_share_one_structure_via_rebinding() {
+        // Decode steps at different bucketed KV contexts are different
+        // shapes of the *same* mesh: the run cache serves them with one
+        // structure lowering plus scalar rebinds.
+        let lw = lowerer(Parallelism::Tensor, 4);
+        let plans: Vec<ExecPlan> = [128usize, 256, 384, 512]
+            .iter()
+            .map(|&tokens| {
+                lw.step_plan(&StepShape {
+                    kind: StepKind::Decode,
+                    batch: 8,
+                    tokens,
+                })
+            })
+            .collect();
+        let (cache, steps) = lw.stats();
+        assert_eq!(cache.structure_lowerings, 1, "one structure for every context");
+        assert_eq!(cache.rebinds, 3, "further contexts are scalar rebinds");
+        assert_eq!(steps, 4);
+        // Longer context -> strictly more attention time in the slice.
+        let attn = |p: &ExecPlan| -> f64 {
+            let s = &p.structure;
+            (0..s.len())
+                .filter(|&i| s.kind[i] == OpKind::Compute && s.module[i] == ModuleKind::SelfAttention)
+                .map(|i| p.scalars.dur_s[i])
+                .sum()
         };
-        assert!(attn_time(&b) > attn_time(&a));
+        for w in plans.windows(2) {
+            assert!(attn(&w[1]) > attn(&w[0]));
+        }
     }
 }

@@ -24,6 +24,7 @@
 //! what give the run record its phase-resolved communication/
 //! synchronization energy isolation.
 
+use crate::plan::exec::{ExecPlan, OpKind};
 use crate::plan::{Op, Plan, WaitRecord};
 use crate::simulator::power::PowerModel;
 use crate::simulator::skew::SkewModel;
@@ -273,6 +274,226 @@ fn rank_phases(
     out
 }
 
+/// Pass 1 over the compiled SoA arrays: identical walk, clock advance, and
+/// RNG draw order to `resolve` — the two paths are bit-identical for the
+/// same seed stream (property-tested).
+fn resolve_compiled(ep: &ExecPlan, skew: &SkewModel, sync_jitter: f64, rng: &mut Rng) -> Resolved {
+    let s = &*ep.structure;
+    let sc = &*ep.scalars;
+    let n_ops = s.len();
+    let mut clocks = vec![0.0f64; s.num_ranks];
+    let mut durs: Vec<f64> = Vec::new();
+    let mut dur_at = vec![0u32; n_ops];
+    let mut sync_t = vec![0.0f64; n_ops];
+    let mut edges = vec![0.0f64; s.num_edges as usize];
+    let mut wait_samples = Vec::new();
+    let mut prefill_end = 0.0f64;
+
+    for i in 0..n_ops {
+        let ranks = s.ranks[i];
+        match s.kind[i] {
+            OpKind::Compute => {
+                dur_at[i] = durs.len() as u32;
+                let nominal_s = sc.dur_s[i];
+                let module = s.module[i];
+                for rank in ranks.iter() {
+                    let d = skew.sample_module(nominal_s, rank, module, rng);
+                    durs.push(d);
+                    clocks[rank] += d;
+                }
+            }
+            OpKind::Collective => {
+                let mut arrive = 0.0f64;
+                if s.jitter[i] {
+                    for rank in ranks.iter() {
+                        arrive = arrive.max(clocks[rank] + rng.exponential(sync_jitter));
+                    }
+                } else {
+                    for rank in ranks.iter() {
+                        arrive = arrive.max(clocks[rank]);
+                    }
+                }
+                sync_t[i] = arrive;
+                let transfer_s = sc.dur_s[i];
+                for rank in ranks.iter() {
+                    let waited = (arrive - clocks[rank]).max(0.0);
+                    match s.record[i] {
+                        WaitRecord::All => wait_samples.push(waited),
+                        WaitRecord::None => {}
+                    }
+                    clocks[rank] = clocks[rank].max(arrive) + transfer_s;
+                }
+            }
+            OpKind::Send => {
+                let transfer_s = sc.dur_s[i];
+                let mut done = 0.0f64;
+                for rank in ranks.iter() {
+                    clocks[rank] += transfer_s;
+                    done = done.max(clocks[rank]);
+                }
+                edges[s.edge[i] as usize] = done;
+            }
+            OpKind::Recv => {
+                let ready = edges[s.edge[i] as usize];
+                sync_t[i] = ready;
+                for rank in ranks.iter() {
+                    let waited = (ready - clocks[rank]).max(0.0);
+                    if waited > 0.0 {
+                        wait_samples.push(waited);
+                    }
+                    clocks[rank] = clocks[rank].max(ready);
+                }
+            }
+        }
+        if s.step[i] == 0 {
+            for rank in ranks.iter() {
+                prefill_end = prefill_end.max(clocks[rank]);
+            }
+        }
+    }
+
+    Resolved {
+        durs,
+        dur_at,
+        sync_t,
+        clocks,
+        wait_samples,
+        prefill_end,
+    }
+}
+
+/// Pass 2 over the compiled arrays (per rank): identical phase emission
+/// and key order to `rank_phases`.
+fn rank_phases_compiled(ep: &ExecPlan, res: &Resolved, power: &PowerModel, rank: usize) -> Vec<(u64, Phase)> {
+    let s = &*ep.structure;
+    let sc = &*ep.scalars;
+    let wait_w = power.gpu_power_rank(PhaseKind::Wait, 0.0, rank);
+    let comm_w = power.gpu_power_rank(PhaseKind::Transfer, 0.0, rank);
+    let mut clock = 0.0f64;
+    let mut out = Vec::new();
+    let mut push = |key: u64, kind, module, layer, step, t0: f64, t1: f64, power_w| {
+        if t1 > t0 {
+            out.push((
+                key,
+                Phase {
+                    gpu: rank as u16,
+                    kind,
+                    module,
+                    layer,
+                    step,
+                    t0,
+                    t1,
+                    power_w,
+                },
+            ));
+        }
+    };
+    for i in 0..s.len() {
+        let ranks = s.ranks[i];
+        if !ranks.contains(rank) {
+            continue;
+        }
+        let (module, layer, step) = (s.module[i], s.layer[i], s.step[i]);
+        match s.kind[i] {
+            OpKind::Compute => {
+                let d = res.durs[res.dur_at[i] as usize + (rank - ranks.first as usize)];
+                let p = power.gpu_power_rank(PhaseKind::Compute, sc.aux[i], rank);
+                push(seq_key(i, 0, rank), PhaseKind::Compute, module, layer, step, clock, clock + d, p);
+                clock += d;
+            }
+            OpKind::Collective => {
+                let t = res.sync_t[i];
+                push(seq_key(i, 0, rank), PhaseKind::Wait, module, layer, step, clock, clock.max(t), wait_w);
+                clock = clock.max(t);
+                let transfer_s = sc.dur_s[i];
+                let end = clock + transfer_s;
+                // Link-tier wire power rides on top of the board's transfer
+                // draw (aux is 0 on the legacy flat link).
+                let p = comm_w + sc.aux[i] * power.thermal_mult;
+                push(seq_key(i, 1, rank), PhaseKind::Transfer, module, layer, step, clock, end, p);
+                clock += transfer_s;
+            }
+            OpKind::Send => {
+                let transfer_s = sc.dur_s[i];
+                push(
+                    seq_key(i, 0, rank),
+                    PhaseKind::Transfer,
+                    ModuleKind::P2PTransfer,
+                    layer,
+                    step,
+                    clock,
+                    clock + transfer_s,
+                    comm_w + sc.aux[i] * power.thermal_mult,
+                );
+                clock += transfer_s;
+            }
+            OpKind::Recv => {
+                let t = res.sync_t[i];
+                push(
+                    seq_key(i, 0, rank),
+                    PhaseKind::Wait,
+                    ModuleKind::P2PTransfer,
+                    layer,
+                    step,
+                    clock,
+                    clock.max(t),
+                    wait_w,
+                );
+                clock = clock.max(t);
+            }
+        }
+    }
+    debug_assert!(
+        (clock - res.clocks[rank]).abs() < 1e-12,
+        "rank {rank} clock drift: {clock} vs {}",
+        res.clocks[rank]
+    );
+    out
+}
+
+/// Execute a compiled `ExecPlan` under the run's stochastic conditions —
+/// the hot execution path. Walks the structure-of-arrays form directly
+/// (no `Op` enum dispatch or pointer chasing); the serial resolve pass
+/// order is unchanged, so seeded results are bit-identical to the
+/// interpreted `execute` (which remains as the reference mode behind
+/// `SimKnobs::reference_engine`).
+pub fn execute_compiled(
+    ep: &ExecPlan,
+    power: &PowerModel,
+    skew: &SkewModel,
+    sync_jitter: f64,
+    rng: &mut Rng,
+    threads: usize,
+) -> BuiltRun {
+    let res = resolve_compiled(ep, skew, sync_jitter, rng);
+
+    let num_ranks = ep.num_ranks();
+    let ranks: Vec<usize> = (0..num_ranks).collect();
+    let per_rank = par::par_map(&ranks, threads, |&r| rank_phases_compiled(ep, &res, power, r));
+    let mut keyed: Vec<(u64, Phase)> = per_rank.into_iter().flatten().collect();
+    keyed.sort_unstable_by_key(|(k, _)| *k);
+    let phases: Vec<Phase> = keyed.into_iter().map(|(_, p)| p).collect();
+
+    let mut timeline = Timeline::from_parts(
+        num_ranks,
+        power.gpu_power(PhaseKind::Idle, 0.0),
+        phases,
+        res.clocks,
+    );
+    let idle_w: Vec<f64> = (0..num_ranks)
+        .map(|r| power.gpu_power_rank(PhaseKind::Idle, 0.0, r))
+        .collect();
+    timeline.finalize_with(&idle_w);
+
+    BuiltRun {
+        timeline,
+        wait_samples: res.wait_samples,
+        prefill_end: res.prefill_end,
+        sim_steps: ep.scalars.sim_steps,
+        comm_bytes_per_step: ep.scalars.comm_bytes_per_step,
+    }
+}
+
 /// Execute a plan under the run's stochastic conditions. `threads` bounds
 /// the `util::par` pool materializing per-rank phases (1 ⇒ serial; the
 /// result is bit-identical either way).
@@ -321,7 +542,7 @@ pub fn execute(
 mod tests {
     use super::*;
     use crate::config::{HwSpec, SimKnobs};
-    use crate::plan::PlanBuilder;
+    use crate::plan::{PlanBuilder, PlanSink};
     use crate::simulator::perf::ModuleTiming;
 
     fn setup() -> (PowerModel, SkewModel, Rng) {
@@ -425,6 +646,46 @@ mod tests {
         for (pa, pb) in a.timeline.phases.iter().zip(&b.timeline.phases) {
             assert_eq!(pa.gpu, pb.gpu);
             assert_eq!(pa.kind, pb.kind);
+            assert_eq!(pa.t0, pb.t0);
+            assert_eq!(pa.t1, pb.t1);
+            assert_eq!(pa.power_w, pb.power_w);
+        }
+        assert_eq!(a.timeline.gpu_energy_j(), b.timeline.gpu_energy_j());
+    }
+
+    #[test]
+    fn compiled_execution_is_bit_identical_to_interpreted() {
+        // Same seed stream through the SoA walk and the Op-enum walk.
+        let hw = HwSpec::default();
+        let power = PowerModel::new(&hw);
+        let mut b = PlanBuilder::new(4);
+        for step in 0..3u32 {
+            for layer in 0..6u16 {
+                b.compute(0..4, t(1e-3), ModuleKind::SelfAttention, layer, step);
+                b.collective(0..4, ModuleKind::AllReduce, layer, step, 1e-4, true, WaitRecord::All);
+            }
+            let e = b.send(0..2, 0, step, 2e-4);
+            b.recv(2..4, 0, step, e);
+            b.collective(0..4, ModuleKind::P2PTransfer, 0, step, 0.0, false, WaitRecord::None);
+        }
+        let plan = b.finish(2, 1.0, true);
+        let ep = crate::plan::exec::compile(&plan);
+        let run = |compiled: bool| {
+            let mut rng = Rng::new(23);
+            let skew = SkewModel::new(&SimKnobs::default(), 4, &mut rng);
+            if compiled {
+                execute_compiled(&ep, &power, &skew, 40e-6, &mut rng, 1)
+            } else {
+                execute(&plan, &power, &skew, 40e-6, &mut rng, 1)
+            }
+        };
+        let (a, b) = (run(false), run(true));
+        assert_eq!(a.wait_samples, b.wait_samples);
+        assert_eq!(a.prefill_end, b.prefill_end);
+        assert_eq!(a.sim_steps, b.sim_steps);
+        assert_eq!(a.timeline.phases.len(), b.timeline.phases.len());
+        for (pa, pb) in a.timeline.phases.iter().zip(&b.timeline.phases) {
+            assert_eq!((pa.gpu, pa.kind, pa.module), (pb.gpu, pb.kind, pb.module));
             assert_eq!(pa.t0, pb.t0);
             assert_eq!(pa.t1, pb.t1);
             assert_eq!(pa.power_w, pb.power_w);

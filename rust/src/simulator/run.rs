@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::models::{self, ModelSpec};
 use crate::parallelism::{self, BuiltRun};
-use crate::plan::Plan;
+use crate::plan::ExecPlan;
 use crate::simulator::power::PowerModel;
 use crate::simulator::timeline::{ModuleKind, PhaseKind};
 use crate::telemetry;
@@ -130,27 +130,16 @@ impl RunRecord {
     }
 }
 
-/// Simulate one run. Panics if the model does not fit the configuration
-/// (callers use `models::ModelSpec::fits_tp` to build valid grids).
-pub fn simulate_run(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord {
-    let spec = models::by_name(&cfg.model)
-        .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
-    let plan = parallelism::lower(&spec, hw, knobs, cfg);
-    simulate_run_planned(cfg, hw, knobs, &plan)
+/// Run-level stochastic conditions drawn before the engine executes: the
+/// seeded RNG stream plus the power-model draws, in the fixed order every
+/// execution path (compiled or reference) must observe.
+struct RunConditions {
+    power: PowerModel,
+    interference: f64,
+    rng: Rng,
 }
 
-/// Simulate one run from an already lowered plan (the profiling campaigns
-/// cache plans across passes via `plan::PlanCache`; results are identical
-/// to `simulate_run` because lowering is seed-free).
-pub fn simulate_run_planned(
-    cfg: &RunConfig,
-    hw: &HwSpec,
-    knobs: &SimKnobs,
-    plan: &Plan,
-) -> RunRecord {
-    let spec = models::by_name(&cfg.model)
-        .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
-
+fn run_conditions(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunConditions {
     // Seed stream: decorrelate across configs and passes.
     let mut key_hash = 0xcbf29ce484222325u64;
     for b in cfg.key().bytes() {
@@ -158,7 +147,6 @@ pub fn simulate_run_planned(
     }
     let mut rng = Rng::new(cfg.seed ^ key_hash);
 
-    // Run-level stochastic conditions.
     let mut power = PowerModel::new(hw);
     power.thermal_mult = rng.lognormal_mean_cv(1.0, knobs.thermal_cv);
     power.wait_mult = rng.lognormal_mean_cv(1.0, knobs.wait_power_cv);
@@ -167,10 +155,72 @@ pub fn simulate_run_planned(
     } else {
         0.0
     };
+    RunConditions {
+        power,
+        interference,
+        rng,
+    }
+}
 
-    // Execute the plan through the per-rank discrete-event engine.
-    let built: BuiltRun =
-        parallelism::execute_plan(plan, &spec, knobs, &power, &mut rng, knobs.engine_threads);
+/// Simulate one run. Panics if the model does not fit the configuration
+/// (callers use `models::ModelSpec::fits_tp` to build valid grids).
+/// Compiles and executes the structure-of-arrays plan, unless
+/// `SimKnobs::reference_engine` selects the interpreted reference path —
+/// the two are bit-identical (property-tested).
+pub fn simulate_run(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord {
+    if knobs.reference_engine {
+        return simulate_run_reference(cfg, hw, knobs);
+    }
+    let spec = models::by_name(&cfg.model)
+        .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
+    let plan = parallelism::compile(&spec, hw, knobs, cfg);
+    simulate_run_planned(cfg, hw, knobs, &plan)
+}
+
+/// Simulate one run on the interpreted reference path: `Vec<Op>` lowering
+/// plus the op-enum engine walk. Pins the compiled layer's bit-identity
+/// contract (DESIGN.md §12).
+pub fn simulate_run_reference(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> RunRecord {
+    let spec = models::by_name(&cfg.model)
+        .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
+    let plan = parallelism::lower(&spec, hw, knobs, cfg);
+    let mut c = run_conditions(cfg, hw, knobs);
+    let built = parallelism::execute_plan(&plan, &spec, knobs, &c.power, &mut c.rng, knobs.engine_threads);
+    finish_record(cfg, hw, knobs, spec, built, c.power, c.interference, c.rng)
+}
+
+/// Simulate one run from an already compiled plan (the profiling
+/// campaigns, the tuner, and the serving step driver cache structures and
+/// rebind shapes via `plan::PlanCache`; results are identical to
+/// `simulate_run` because lowering is seed-free).
+pub fn simulate_run_planned(
+    cfg: &RunConfig,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    plan: &ExecPlan,
+) -> RunRecord {
+    let spec = models::by_name(&cfg.model)
+        .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
+    let mut c = run_conditions(cfg, hw, knobs);
+    let built =
+        parallelism::execute_compiled(plan, &spec, knobs, &c.power, &mut c.rng, knobs.engine_threads);
+    finish_record(cfg, hw, knobs, spec, built, c.power, c.interference, c.rng)
+}
+
+/// Everything after engine execution: decode extrapolation, attribution,
+/// instruments, features, sync stats — shared verbatim by the compiled and
+/// reference paths (same RNG continuation order).
+#[allow(clippy::too_many_arguments)]
+fn finish_record(
+    cfg: &RunConfig,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    spec: ModelSpec,
+    built: BuiltRun,
+    power: PowerModel,
+    interference: f64,
+    mut rng: Rng,
+) -> RunRecord {
     let tl = &built.timeline;
     let g = cfg.gpus;
 
@@ -419,13 +469,36 @@ mod tests {
         let knobs = SimKnobs::default();
         let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 16).with_seed(77);
         let spec = crate::models::by_name("Vicuna-7B").unwrap();
-        let plan = crate::parallelism::lower(&spec, &hw, &knobs, &cfg);
+        let plan = crate::parallelism::compile(&spec, &hw, &knobs, &cfg);
         let a = simulate_run(&cfg, &hw, &knobs);
         let b = simulate_run_planned(&cfg, &hw, &knobs, &plan);
         assert_eq!(a.true_total_j, b.true_total_j);
         assert_eq!(a.meter_total_j, b.meter_total_j);
         assert_eq!(a.wait_samples, b.wait_samples);
         assert_eq!(a.module_energy_j, b.module_energy_j);
+    }
+
+    #[test]
+    fn reference_engine_knob_is_bit_identical_to_compiled() {
+        let hw = HwSpec::default();
+        let knobs = SimKnobs {
+            sim_decode_steps: 6,
+            ..SimKnobs::default()
+        };
+        let reference = SimKnobs {
+            reference_engine: true,
+            ..knobs.clone()
+        };
+        for par in [Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data] {
+            let cfg = RunConfig::new("Vicuna-7B", par, 4, 16).with_seed(31);
+            let a = simulate_run(&cfg, &hw, &knobs);
+            let b = simulate_run(&cfg, &hw, &reference);
+            assert_eq!(a.true_total_j, b.true_total_j, "{par:?}");
+            assert_eq!(a.meter_total_j, b.meter_total_j, "{par:?}");
+            assert_eq!(a.wait_samples, b.wait_samples, "{par:?}");
+            assert_eq!(a.module_energy_j, b.module_energy_j, "{par:?}");
+            assert_eq!(a.comm_split_j, b.comm_split_j, "{par:?}");
+        }
     }
 
     #[test]

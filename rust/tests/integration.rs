@@ -299,14 +299,19 @@ fn hybrid_sweep_produces_per_config_mape_and_parallel_speedup() {
 #[test]
 fn all_strategies_lower_to_the_shared_plan_ir() {
     // Every parallelism — pure and hybrid — lowers to one IR, executed by
-    // one engine, with the comm ops its axes imply; and the cached-plan
-    // path reproduces direct simulation exactly.
+    // one engine, with the comm ops its axes imply; the compiled SoA form
+    // mirrors the reference op list; and the cached-plan path reproduces
+    // direct simulation (and the interpreted reference) exactly.
     use piep::plan::{Op, PlanCache};
 
     let hw = HwSpec::default();
     let knobs = SimKnobs {
         sim_decode_steps: 6,
         ..SimKnobs::default()
+    };
+    let reference_knobs = SimKnobs {
+        reference_engine: true,
+        ..knobs.clone()
     };
     let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
     pars.extend(piep::workload::hybrid_parallelisms(4));
@@ -328,12 +333,158 @@ fn all_strategies_lower_to_the_shared_plan_ir() {
         assert_eq!(send > 0, par.pipeline_degree(4) > 1, "{par:?} sends ⇔ PP axis");
         assert!(coll > 0 || send > 0, "{par:?} has communication");
 
+        // The direct SoA compile mirrors the reference op list exactly.
+        let compiled = piep::parallelism::compile(&spec, &hw, &knobs, &cfg);
+        assert_eq!(compiled.op_census(), plan.op_census(), "{par:?} compiled census");
+        assert_eq!(compiled.len(), plan.ops.len(), "{par:?} compiled op count");
+        assert_eq!(compiled.structure.num_edges, plan.num_edges, "{par:?} compiled edges");
+
         let direct = piep::simulator::simulate_run(&cfg, &hw, &knobs);
         let cached = cache.get_or_lower(&cfg, &hw, &knobs);
         let via_cache = piep::simulator::simulate_run_planned(&cfg, &hw, &knobs, &cached);
+        let reference = piep::simulator::simulate_run(&cfg, &hw, &reference_knobs);
         assert_eq!(direct.true_total_j, via_cache.true_total_j, "{par:?}");
         assert_eq!(direct.wait_samples, via_cache.wait_samples, "{par:?}");
+        assert_eq!(direct.true_total_j, reference.true_total_j, "{par:?} vs reference");
+        assert_eq!(direct.wait_samples, reference.wait_samples, "{par:?} vs reference");
+        assert_eq!(direct.module_energy_j, reference.module_energy_j, "{par:?} vs reference");
     }
+}
+
+#[test]
+fn hot_paths_rebind_instead_of_relowering_and_match_reference_tables() {
+    // The compiled layer's acceptance contract: `piep sweep` and
+    // `piep tune` produce tables identical to the interpreted reference
+    // path while performing at most one full structure lowering per mesh
+    // topology (everything else is a scalar rebind or shape hit).
+    use std::collections::HashSet;
+
+    use piep::eval::sweep::{run_sweep, Scenario, SweepOptions};
+    use piep::eval::tune::{run_tune, tune_grid, TuneOptions};
+
+    let steps4 = SimKnobs {
+        sim_decode_steps: 4,
+        ..SimKnobs::default()
+    };
+
+    // ---- campaign hit-rate: batches share each (strategy, gpus) mesh ----
+    let hw = HwSpec::default();
+    let campaign = Campaign {
+        passes: 3,
+        threads: 1, // serial ⇒ exact cache counters
+        knobs: steps4.clone(),
+        ..Campaign::default()
+    };
+    let mut grid = Vec::new();
+    for g in [2usize, 4] {
+        for batch in [8usize, 16, 32] {
+            grid.push(RunConfig::new("Vicuna-7B", Parallelism::Tensor, g, batch));
+        }
+    }
+    let ds = campaign.profile(&grid);
+    // TP structure is batch-invariant: exactly one lowering per GPU count.
+    assert_eq!(ds.cache.structure_lowerings, 2, "one lowering per mesh");
+    assert_eq!(ds.cache.rebinds, grid.len() - 2, "other shapes rebind");
+    assert_eq!(ds.cache.shape_hits, grid.len() * (campaign.passes - 1), "passes hit the shape level");
+
+    // ---- sweep: compiled vs reference tables are bit-identical ----
+    let scenarios = vec![
+        Scenario {
+            label: "tp".into(),
+            configs: grid.clone(),
+        },
+        Scenario {
+            label: "tp2xpp".into(),
+            configs: {
+                let tp2pp = Parallelism::hybrid(piep::config::Strategy::Tensor, piep::config::Strategy::Pipeline, 2).unwrap();
+                vec![
+                    RunConfig::new("Vicuna-7B", tp2pp, 4, 8),
+                    RunConfig::new("Vicuna-7B", tp2pp, 4, 32),
+                ]
+            },
+        },
+    ];
+    let sweep_opts = |reference: bool| SweepOptions {
+        campaign: Campaign {
+            passes: 2,
+            threads: 1,
+            knobs: SimKnobs {
+                reference_engine: reference,
+                ..steps4.clone()
+            },
+            ..Campaign::default()
+        },
+        parallel: false,
+        ..SweepOptions::default()
+    };
+    let compiled = run_sweep(&scenarios, &sweep_opts(false));
+    let reference = run_sweep(&scenarios, &sweep_opts(true));
+    assert_eq!(compiled.len(), reference.len());
+    for (a, b) in compiled.iter().zip(&reference) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.mape, b.mape, "{}: compiled vs reference MAPE", a.label);
+        assert_eq!(a.sync_share, b.sync_share, "{}", a.label);
+        assert_eq!(a.per_config.len(), b.per_config.len());
+        for (ca, cb) in a.per_config.iter().zip(&b.per_config) {
+            assert_eq!(ca.key, cb.key);
+            assert_eq!(ca.mape, cb.mape, "{}", ca.key);
+        }
+    }
+
+    // ---- tune: one lowering per mesh topology, reference-identical ----
+    let topts = TuneOptions {
+        knobs: steps4.clone(),
+        gpu_counts: vec![2, 4],
+        batches: vec![8, 16, 32],
+        passes: 2,
+        threads: 1,
+        ..TuneOptions::default()
+    };
+    let res = run_tune(&topts);
+    let grid = tune_grid(&topts);
+    let unique_meshes: HashSet<String> = grid
+        .iter()
+        .map(|c| piep::parallelism::structure_key(&topts.knobs, c))
+        .collect();
+    assert!(
+        unique_meshes.len() < grid.len(),
+        "the batch axis must share mesh structures ({} meshes / {} configs)",
+        unique_meshes.len(),
+        grid.len()
+    );
+    assert_eq!(
+        res.cache.structure_lowerings,
+        unique_meshes.len(),
+        "at most one full lowering per mesh topology"
+    );
+    assert_eq!(
+        res.cache.structure_lowerings + res.cache.rebinds,
+        grid.len(),
+        "every distinct shape lowers or rebinds exactly once"
+    );
+    assert_eq!(
+        res.cache.shape_hits,
+        grid.len() * (topts.passes - 1),
+        "repeated passes hit the shape level"
+    );
+    let refres = run_tune(&TuneOptions {
+        knobs: SimKnobs {
+            reference_engine: true,
+            ..steps4
+        },
+        ..topts
+    });
+    assert_eq!(res.candidates.len(), refres.candidates.len());
+    for (a, b) in res.candidates.iter().zip(&refres.candidates) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.j_per_token, b.j_per_token, "{}", a.key);
+        assert_eq!(a.j_per_request, b.j_per_request, "{}", a.key);
+        assert_eq!(a.ms_per_token, b.ms_per_token, "{}", a.key);
+    }
+    assert_eq!(
+        res.argmin_j_token.map(|c| c.key),
+        refres.argmin_j_token.map(|c| c.key)
+    );
 }
 
 #[test]

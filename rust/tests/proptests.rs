@@ -235,6 +235,106 @@ fn prop_engine_serial_parallel_bit_identity() {
 }
 
 #[test]
+fn prop_compiled_engine_matches_reference_engine() {
+    // The tentpole's bit-identity contract: the compiled SoA execution
+    // path (`ExecPlan` + array-walking engine) must reproduce the
+    // interpreted reference path (`Vec<Op>` plan + op-enum walk, behind
+    // `SimKnobs::reference_engine`) exactly — totals, instruments, waits,
+    // attribution — for every strategy including the 4-GPU hybrids, on the
+    // flat testbed, a tiered 2-node topology, and a heterogeneous fleet.
+    use piep::cluster::{GpuSpec, LinkTier};
+    let testbeds = [
+        HwSpec::default(),
+        HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &[]),
+        HwSpec::cluster_testbed(2, 2, LinkTier::PciE, LinkTier::PciE, &[GpuSpec::a6000(), GpuSpec::h100()]),
+    ];
+    let k = knobs();
+    let kref = SimKnobs {
+        reference_engine: true,
+        ..knobs()
+    };
+    forall(116, 8, gen_cfg, |t| {
+        let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.extend(hybrids4());
+        for hw in &testbeds {
+            for &par in &pars {
+                let mut cfg = cfg_of(t, par);
+                if par.is_hybrid() {
+                    cfg.gpus = 4;
+                }
+                cfg.gpus = cfg.gpus.min(hw.num_gpus);
+                if par.is_hybrid() && cfg.gpus != 4 {
+                    continue;
+                }
+                let spec = piep::models::by_name(&cfg.model).unwrap();
+                if !piep::workload::runnable(&spec, par, cfg.gpus, hw) {
+                    continue;
+                }
+                let a = simulate_run(&cfg, hw, &k);
+                let b = simulate_run(&cfg, hw, &kref);
+                ensure(a.true_total_j == b.true_total_j, format!("{par:?}: totals"))?;
+                ensure(a.meter_total_j == b.meter_total_j, format!("{par:?}: meter"))?;
+                ensure(a.nvml_total_j == b.nvml_total_j, format!("{par:?}: nvml"))?;
+                ensure(a.wait_samples == b.wait_samples, format!("{par:?}: waits"))?;
+                ensure(a.module_energy_j == b.module_energy_j, format!("{par:?}: attribution"))?;
+                ensure(a.comm_split_j == b.comm_split_j, format!("{par:?}: comm splits"))?;
+                ensure(a.wall_s == b.wall_s, format!("{par:?}: wall"))?;
+                ensure(a.gpu_util == b.gpu_util, format!("{par:?}: util"))?;
+                ensure(a.gpu_clock_ghz == b.gpu_clock_ghz, format!("{par:?}: clocks"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rebind_after_cache_hit_matches_fresh_lower() {
+    // A shape served by a structure-cache hit (scalar rebind) must execute
+    // bit-identically to a fresh full lowering of the same shape — for
+    // every strategy including hybrids.
+    use piep::plan::PlanCache;
+    use piep::simulator::simulate_run_planned;
+    let hw = HwSpec::default();
+    let k = knobs();
+    forall(117, 10, gen_cfg, |t| {
+        let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.extend(hybrids4());
+        for par in pars {
+            let mut warm = cfg_of(t, par);
+            if par.is_hybrid() {
+                warm.gpus = 4;
+            }
+            let spec = piep::models::by_name(&warm.model).unwrap();
+            if !piep::workload::runnable(&spec, par, warm.gpus, &hw) {
+                continue;
+            }
+            let cache = PlanCache::new();
+            let _ = cache.get_or_lower(&warm, &hw, &k); // structure miss
+            // Same mesh, new shape: the prompt length never enters the
+            // structure, so this access must be a scalar rebind.
+            let mut probe = warm.clone();
+            probe.seq_in = warm.seq_in + 64;
+            probe.seed ^= 0x5A5A;
+            let rebound = cache.get_or_lower(&probe, &hw, &k);
+            let st = cache.stats();
+            ensure(
+                st.structure_lowerings == 1 && st.rebinds == 1,
+                format!("{par:?}: cache stats {st:?}"),
+            )?;
+            let fresh = piep::parallelism::compile(&spec, &hw, &k, &probe);
+            let a = simulate_run_planned(&probe, &hw, &k, &rebound);
+            let b = simulate_run_planned(&probe, &hw, &k, &fresh);
+            ensure(a.true_total_j == b.true_total_j, format!("{par:?}: totals"))?;
+            ensure(a.meter_total_j == b.meter_total_j, format!("{par:?}: meter"))?;
+            ensure(a.wait_samples == b.wait_samples, format!("{par:?}: waits"))?;
+            ensure(a.module_energy_j == b.module_energy_j, format!("{par:?}: attribution"))?;
+            ensure(a.comm_split_j == b.comm_split_j, format!("{par:?}: comm splits"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_determinism_same_seed_same_record() {
     let hw = HwSpec::default();
     let k = knobs();
