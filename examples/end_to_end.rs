@@ -52,18 +52,18 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     };
 
     // ---------- Plan IR: lower once, execute through the event engine ----
-    let campaign = Campaign {
-        passes: 5,
-        knobs: SimKnobs {
-            sim_decode_steps: 12,
-            ..SimKnobs::default()
-        },
-        ..Campaign::default()
-    };
+    let campaign = Campaign::new()
+        .with_passes(5)
+        .with_knobs(SimKnobs::default().with_decode_steps(12));
     let tp2pp = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2)
         .expect("canonical hybrid");
     {
-        let cfg = RunConfig::new("Vicuna-13B", tp2pp, 4, 32).with_seed(99);
+        let cfg = RunConfig::builder("Vicuna-13B")
+            .parallelism(tp2pp)
+            .gpus(4)
+            .batch(32)
+            .seed(99)
+            .build();
         let spec = piep::models::by_name(&cfg.model).unwrap();
         let plan = piep::parallelism::compile(&spec, &campaign.hw, &campaign.knobs, &cfg);
         let (compute, coll, send, recv) = plan.op_census();
@@ -77,10 +77,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         );
         // One stochastic execution per engine mode — bit-identical.
         let exec = |threads: usize| {
-            let knobs = SimKnobs {
-                engine_threads: threads,
-                ..campaign.knobs.clone()
-            };
+            let knobs = campaign.knobs.clone().with_engine_threads(threads);
             piep::simulator::simulate_run_planned(&cfg, &campaign.hw, &knobs, &plan)
         };
         let serial = exec(1);
@@ -178,11 +175,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             )
         })
         .collect();
-    let rt = rt.unwrap_or(Runtime {
-        modules: Default::default(),
-        feature_dim: piep::features::FEATURE_DIM,
-        predict_batch: 256,
-    });
+    let rt = rt.unwrap_or_else(|| Runtime::offline(piep::features::FEATURE_DIM, 256));
     let t2 = Instant::now();
     let raw = rt.predict_batch(&rows, &w, b)?;
     let dt2 = t2.elapsed();

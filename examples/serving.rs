@@ -35,9 +35,9 @@ fn main() {
     let knobs = SimKnobs::default();
 
     for policy in [Policy::Fcfs, Policy::ShortestPromptFirst] {
-        let mut cfg = ServeConfig::new("Vicuna-7B", Parallelism::Tensor, 4);
-        cfg.policy = policy;
-        cfg.max_batch_requests = 4;
+        let cfg = ServeConfig::new("Vicuna-7B", Parallelism::Tensor, 4)
+            .with_policy(policy)
+            .with_max_batch_requests(4);
         let res = serve(&trace, &cfg, &hw, &knobs);
 
         println!(

@@ -1,0 +1,155 @@
+//! `piep fleet` — fleet-scale multi-replica serving driver.
+
+use crate::util::cli::Args;
+
+use super::topo;
+
+pub(crate) fn cmd_fleet(args: &Args) {
+    use crate::config::{Parallelism, SimKnobs};
+    use crate::eval::fleet::{cell_config, fleet_trace, run_fleet_eval, FleetOptions};
+    use crate::fleet::{simulate_fleet, AutoscaleConfig, RouterPolicy};
+    use crate::profiler::store;
+    use crate::serve::{ArrivalKind, Policy};
+    use crate::util::table::{fnum, Table};
+
+    let smoke = args.has("smoke");
+    // --smoke pins the CI fleet: replicas 1,2 × {jsq, energy} on the
+    // shared 2-node NVLink+IB cluster testbed.
+    let testbed = topo::parse_testbed(args, true);
+
+    let replica_counts: Vec<usize> = args
+        .get("replicas")
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![1, 2]);
+    let policies: Vec<RouterPolicy> = args
+        .get("policies")
+        .map(|s| {
+            s.split(',')
+                .map(|p| RouterPolicy::parse(p.trim()).unwrap_or_else(|| panic!("unknown router policy {p}")))
+                .collect()
+        })
+        .unwrap_or_else(|| {
+            if smoke {
+                vec![RouterPolicy::JoinShortestQueue, RouterPolicy::EnergyAware]
+            } else {
+                RouterPolicy::ALL.to_vec()
+            }
+        });
+    let autoscale = if args.has("autoscale") {
+        Some(AutoscaleConfig {
+            interval_s: args.get_f64("scale-interval", 2.0),
+            target_inflight: args.get_usize("target-inflight", 4),
+            min_replicas: args.get_usize("min-replicas", 1),
+            cold_start_s: args.get_f64("cold-start-s", 1.0),
+            cold_start_j: args.get_f64("cold-start-j", 150.0),
+        })
+    } else {
+        None
+    };
+
+    let opts = FleetOptions {
+        model: args.get_or("model", "Vicuna-7B").to_string(),
+        parallelism: Parallelism::parse(args.get_or("parallelism", "tensor")).expect("parallelism"),
+        testbed,
+        replica_counts,
+        policies,
+        admission: Policy::parse(args.get_or("policy", "fcfs")).expect("policy (fcfs|spf)"),
+        max_batch_requests: args.get_usize("max-batch", 8),
+        requests: args.get_usize("requests", if smoke { 10 } else { 32 }),
+        rate_rps: args.get_f64("rate", 2.0),
+        arrival: ArrivalKind::parse(args.get_or("arrival", "diurnal")).expect("arrival (poisson|bursty|diurnal)"),
+        sessions: args.get_usize("sessions", 4),
+        autoscale,
+        knobs: SimKnobs::default(),
+        seed: args.get_u64("seed", 0xF1EE7),
+        threads: args.get_usize("threads", 0),
+    };
+
+    eprintln!(
+        "[fleet] {} ({}) on {} per replica: {} requests ({}), replicas {:?} × policies {:?}{}",
+        opts.model,
+        opts.parallelism.label(),
+        opts.testbed.label(),
+        opts.requests,
+        opts.arrival.name(),
+        opts.replica_counts,
+        opts.policies.iter().map(|p| p.name()).collect::<Vec<_>>(),
+        if opts.autoscale.is_some() { ", autoscaled" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    let res = run_fleet_eval(&opts);
+    let wall = t0.elapsed();
+
+    let mut grid = Table::new(
+        "Fleet — cluster J/token and latency vs replica count × router",
+        &["Replicas", "Router", "J/token", "p50 s", "p99 s", "Cluster J", "Cold J", "Served", "Makespan s", "Scale ev"],
+    );
+    for c in &res.cells {
+        grid.row(vec![
+            c.replicas.to_string(),
+            c.policy.name().into(),
+            fnum(c.j_per_token, 3),
+            fnum(c.p50_latency_s, 2),
+            fnum(c.p99_latency_s, 2),
+            fnum(c.cluster_energy_j, 1),
+            fnum(c.cold_start_j, 1),
+            format!("{}/{}", c.served, c.served + c.rejected),
+            fnum(c.makespan_s, 2),
+            c.scale_events.to_string(),
+        ]);
+    }
+    print!("{}", grid.render());
+
+    let mut argmin_t = Table::new(
+        "Fleet — argmin deployment by cluster J/token",
+        &["Replicas", "Router", "J/token", "p99 s", "Cluster J"],
+    );
+    if let Some(c) = &res.argmin {
+        argmin_t.row(vec![
+            c.replicas.to_string(),
+            c.policy.name().into(),
+            fnum(c.j_per_token, 3),
+            fnum(c.p99_latency_s, 2),
+            fnum(c.cluster_energy_j, 1),
+        ]);
+    }
+    print!("{}", argmin_t.render());
+
+    // Re-run the winning cell for the conservation invariant and the
+    // optional per-request record dump (cheap: one cell).
+    if let Some(best) = &res.argmin {
+        let full = simulate_fleet(&res.trace, &cell_config(&opts, best.replicas, best.policy));
+        let attributed = full.attributed_energy_j();
+        assert!(
+            (attributed - full.cluster_energy_j).abs() / full.cluster_energy_j.max(1e-12) < 1e-9,
+            "fleet attribution must conserve cluster energy"
+        );
+        println!(
+            "[fleet] best {}: Σ replica J + cold-start J == cluster J ({:.1} J over {} replicas, \
+             {} shared lowerer(s), {} structure lowering(s))",
+            best.label,
+            full.cluster_energy_j,
+            best.replicas,
+            full.shared_lowerers,
+            full.cache.structure_lowerings,
+        );
+        if let Some(path) = args.get("save") {
+            store::save_fleet_records(&full.requests, path).expect("save fleet records");
+            println!("saved per-request fleet records (piep-fleet-v4) -> {path}");
+        }
+    }
+    println!("[fleet] {} cells on one shared {}-request trace in {wall:?}", res.cells.len(), res.trace.len());
+
+    let out = args.get_or("out", "reports");
+    for (t, slug) in [(&grid, "fleet_grid"), (&argmin_t, "fleet_argmin")] {
+        match t.save_csv(out, slug) {
+            Ok(path) => println!("  -> {path}"),
+            Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),
+        }
+    }
+    // Trace round-trip dump mirrors `serve --save-trace`-style workflows.
+    if let Some(path) = args.get("save-trace") {
+        res.trace.save_jsonl(path).expect("save trace");
+        println!("saved shared trace -> {path}");
+    }
+}

@@ -1,33 +1,24 @@
 //! `piep` — CLI for the PIE-P reproduction.
 //!
-//! Subcommands:
-//!   profile     run a profiling campaign and print run summaries
-//!   train       fit PIE-P on a family and report CV error
-//!   predict     per-run prediction demo on a config
-//!   plan        per-strategy compiled-plan shapes; --stats adds the
-//!               structure-vs-scalar cache hit rates of a shape grid
-//!   sweep       parallel sweep over the full paper + hybrid scenario grid
-//!   serve       trace-driven serving: continuous batching + per-request energy
-//!   tune        energy-aware strategy autotuner over a (multi-node) fleet
-//!   reproduce   regenerate paper tables/figures (`--all` or ids)
-//!   figure2..8, table2..9   individual experiments
-//!   crosshw, sensitivity, ablate-ring, parallelism-matrix, serving, tune-study
-//!               extension studies beyond the paper's evaluation
-//!   runtime     validate AOT artifacts, exercise the prediction hot path
-//!   bench-sim   quick simulator throughput numbers
-//!
-//! Common flags: --passes N --steps N --seed N --out DIR --threads N
+//! Every subcommand lives in one row of [`COMMANDS`]: the table generates
+//! the dispatch match and the help text, so a new driver means one row
+//! plus its module. Individual experiment harnesses (`figure2..figure8`,
+//! `table2..table9`, the extension studies) dispatch through the
+//! experiment tables in `reproduce`, and the shared testbed flags
+//! (`--gpus`, `--nodes/--gpus-per-node/--intra/--inter/--fleet`) parse
+//! through `topo` so they mean the same thing in every subcommand.
 //!
 //! Argument parsing lives in `util::cli::Args`; each subcommand family has
-//! its own driver module below (split out of the former ~790-line
-//! `main.rs` with no change to flags or help text).
+//! its own driver module below.
 
+mod fleet;
 mod plan;
 mod profile;
 mod reproduce;
 mod serve;
 mod sim;
 mod sweep;
+pub(crate) mod topo;
 mod train;
 mod tune;
 
@@ -35,10 +26,54 @@ use crate::config::SimKnobs;
 use crate::profiler::Campaign;
 use crate::util::cli::Args;
 
+type Driver = fn(&Args);
+
+/// One row per subcommand: (name, driver, help). The help column may hold
+/// embedded newlines; continuation lines are indented under the name.
+const COMMANDS: [(&str, Driver, &str); 12] = [
+    (
+        "reproduce",
+        reproduce::cmd_reproduce,
+        "regenerate paper tables/figures into --out (--all | ids…)",
+    ),
+    ("profile", profile::cmd_profile, "profile one configuration (passes × seeds)"),
+    ("train", train::cmd_train, "fit PIE-P on a family, report 3-fold CV MAPE"),
+    ("predict", train::cmd_predict, "leave-variant-out prediction demo"),
+    (
+        "plan",
+        plan::cmd_plan,
+        "per-strategy compiled-plan shapes (op counts,\ncollective bytes); --stats adds the structure-\nvs-scalar cache hit rates of a shape grid",
+    ),
+    (
+        "sweep",
+        sweep::cmd_sweep,
+        "parallel sweep: paper grid + hybrid meshes,\nper-config MAPE + sync-wait share (--serial,\n--bench [--baseline FILE], --per-config)",
+    ),
+    (
+        "serve",
+        serve::cmd_serve,
+        "trace-driven serving: continuous batching +\nper-request energy (--trace FILE | --synthetic\npoisson|bursty|diurnal, --policy fcfs|spf,\n--requests N --rate RPS --max-batch N --smoke\n--save FILE)",
+    ),
+    (
+        "tune",
+        tune::cmd_tune,
+        "energy-aware strategy autotuner: search strategy\nx degree x batch on a testbed, emit Pareto front\n+ argmin tables (--gpus 2,4 --batches 8,16\n--slo-ms F --strategies tp,pp,tp2xpp --smoke)",
+    ),
+    (
+        "fleet",
+        fleet::cmd_fleet,
+        "fleet-scale serving: replicas × router policies\nover one trace, cluster J/token + p50/p99 tables\n(--replicas 1,2 --policies rr,jsq,energy,session\n--arrival diurnal --sessions N --autoscale\n--requests N --rate RPS --save FILE --smoke)",
+    ),
+    ("runtime", sim::cmd_runtime, "validate AOT artifacts, run the native hot path"),
+    ("bench-sim", sim::cmd_bench_sim, "simulator throughput check"),
+    ("help", |_| help(), "this text"),
+];
+
 /// Campaign shared by every profiling-driven subcommand, shaped by the
-/// common flags.
+/// common flags (including the shared testbed flags).
 pub(crate) fn campaign_from(args: &Args) -> Campaign {
     let mut c = Campaign::default();
+    c.hw = topo::parse_testbed(args, false).hw();
     c.passes = args.get_usize("passes", 5);
     c.knobs = SimKnobs {
         sim_decode_steps: args.get_usize("steps", 16),
@@ -54,59 +89,58 @@ pub(crate) fn campaign_from(args: &Args) -> Campaign {
 pub fn run() {
     let args = Args::from_env();
     let cmd = args.command.clone().unwrap_or_else(|| "help".into());
-    match cmd.as_str() {
-        "profile" => profile::cmd_profile(&args),
-        "train" => train::cmd_train(&args),
-        "predict" => train::cmd_predict(&args),
-        "plan" => plan::cmd_plan(&args),
-        "sweep" => sweep::cmd_sweep(&args),
-        "serve" => serve::cmd_serve(&args),
-        "tune" => tune::cmd_tune(&args),
-        "runtime" => sim::cmd_runtime(&args),
-        "bench-sim" => sim::cmd_bench_sim(&args),
-        "reproduce" => reproduce::cmd_reproduce(&args),
-        id if reproduce::is_experiment_id(id) => reproduce::cmd_single(&args, id),
-        _ => help(),
+    if let Some(&(_, driver, _)) = COMMANDS.iter().find(|(name, _, _)| *name == cmd.as_str()) {
+        driver(&args);
+    } else if reproduce::is_experiment_id(&cmd) {
+        reproduce::cmd_single(&args, &cmd);
+    } else {
+        help();
     }
 }
 
 fn help() {
+    println!("piep — Parallelized Inference Energy Predictor (reproduction)\n");
+    println!("USAGE: piep <command> [flags]\n");
+    println!("COMMANDS");
+    for (name, _, desc) in COMMANDS {
+        let mut lines = desc.lines();
+        println!("  {name:<12} {}", lines.next().unwrap_or(""));
+        for l in lines {
+            println!("  {:<12} {l}", "");
+        }
+    }
+    println!("  {:<12} paper experiment harnesses:", "<experiment>");
+    println!("  {:<12} {}", "", reproduce::id_list(&reproduce::PAPER_EXPERIMENTS));
+    println!("  {:<12} extension studies (see DESIGN.md):", "");
+    println!("  {:<12} {}", "", reproduce::id_list(&reproduce::EXTENSION_EXPERIMENTS));
     println!(
-        "piep — Parallelized Inference Energy Predictor (reproduction)\n\n\
-         USAGE: piep <command> [flags]\n\n\
-         COMMANDS\n\
-         \x20 reproduce [--all | ids…]   regenerate paper tables/figures into --out\n\
-         \x20 figure2..figure8           individual figure harnesses\n\
-         \x20 table2..table9             individual table harnesses\n\
-         \x20 crosshw | sensitivity | ablate-ring | parallelism-matrix | serving |\n\
-         \x20 tune-study                 extension studies (see DESIGN.md)\n\
-         \x20 profile                    profile one configuration (passes × seeds)\n\
-         \x20 train                      fit PIE-P on a family, report 3-fold CV MAPE\n\
-         \x20 predict                    leave-variant-out prediction demo\n\
-         \x20 plan [--stats]             per-strategy compiled-plan shapes (op counts,\n\
-         \x20                            collective bytes); --stats adds the\n\
-         \x20                            structure-vs-scalar cache hit rates of a\n\
-         \x20                            batch x prompt-length shape grid\n\
-         \x20 sweep                      parallel sweep: paper grid + hybrid meshes,\n\
-         \x20                            per-config MAPE + sync-wait share (--serial,\n\
-         \x20                            --bench [--baseline FILE], --per-config)\n\
-         \x20 serve                      trace-driven serving: continuous batching +\n\
-         \x20                            per-request energy (--trace FILE | --synthetic\n\
-         \x20                            poisson|bursty|diurnal, --policy fcfs|spf,\n\
-         \x20                            --requests N --rate RPS --max-batch N --smoke\n\
-         \x20                            --save FILE)\n\
-         \x20 tune                       energy-aware strategy autotuner: search strategy\n\
-         \x20                            x degree x batch on a fleet, emit Pareto front +\n\
-         \x20                            argmin tables (--nodes N --gpus-per-node N\n\
-         \x20                            --intra nvlink|pcie|ib --inter nvlink|pcie|ib\n\
-         \x20                            --fleet a6000,h100,l40 --gpus 2,4 --batches 8,16\n\
-         \x20                            --slo-ms F --strategies tp,pp,tp2xpp --smoke)\n\
-         \x20 runtime                    validate AOT artifacts, run the native hot path\n\
-         \x20 bench-sim                  simulator throughput check\n\n\
-         FLAGS\n\
-         \x20 --model NAME --family NAME --gpus N --batch N\n\
+        "\nTESTBED FLAGS (shared by plan, sweep, serve, bench-sim, tune, fleet)\n{}",
+        topo::TOPO_HELP
+    );
+    println!(
+        "\nFLAGS\n\
+         \x20 --model NAME --family NAME --batch N\n\
          \x20 --parallelism tp|pp|dp|<hybrid label, e.g. tp2xpp>\n\
          \x20 --seq-out N --passes N --steps N --seed N --threads N\n\
-         \x20 --engine-threads N (per-rank event-engine pool; 1 = serial) --out DIR\n"
+         \x20 --engine-threads N (per-rank event-engine pool; 1 = serial) --out DIR"
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn command_table_is_unique_and_complete() {
+        let mut names: Vec<&str> = COMMANDS.iter().map(|(name, _, _)| *name).collect();
+        for expected in ["reproduce", "plan", "sweep", "serve", "tune", "fleet", "bench-sim"] {
+            assert!(names.contains(&expected), "{expected} missing from COMMANDS");
+        }
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), COMMANDS.len(), "duplicate subcommand name");
+        // The `fleet` subcommand wins over the `fleet` report experiment;
+        // the experiment stays reachable as `piep reproduce fleet`.
+        assert!(reproduce::is_experiment_id("fleet"));
+    }
 }

@@ -28,7 +28,7 @@ pub(crate) fn cmd_plan(args: &Args) {
         sim_decode_steps: args.get_usize("steps", 8),
         ..SimKnobs::default()
     };
-    let hw = HwSpec::default();
+    let hw = super::topo::parse_testbed(args, false).hw();
     let spec = crate::models::by_name(&model).expect("model");
     let pars = strategies_for(&model, gpus, &hw);
 

@@ -1,62 +1,86 @@
 //! `piep reproduce` and the individual experiment harness ids.
+//!
+//! Every experiment lives in exactly one table below: the tables generate
+//! the `reproduce --all` order, the bare-id dispatch (`piep table3`), and
+//! the id lists in `piep help` — adding a harness means adding one row.
 
 use crate::report::{self, ReportCtx};
 use crate::util::cli::Args;
+use crate::util::table::Table;
 
 use super::campaign_from;
 
-fn run_experiments(ctx: &mut ReportCtx, ids: &[String]) {
-    for id in ids {
-        match id.as_str() {
-            "figure2" => drop(report::figure2(ctx)),
-            "figure3" => drop(report::figure3(ctx)),
-            "figure4" => drop(report::figure4(ctx)),
-            "figure5" => drop(report::figure5(ctx)),
-            "figure6" => drop(report::figure6(ctx)),
-            "figure7" => drop(report::figure7(ctx)),
-            "figure8" => drop(report::figure8(ctx)),
-            "table2" => drop(report::table2(ctx)),
-            "table3" => drop(report::table3(ctx)),
-            "table4" => drop(report::table4(ctx)),
-            "table5" => drop(report::table5(ctx)),
-            "table6" => drop(report::table6(ctx)),
-            "table7" => drop(report::table7(ctx)),
-            "table8" => drop(report::table8(ctx)),
-            "table9" => drop(report::table9(ctx)),
-            "crosshw" => drop(report::crosshw(ctx)),
-            "sensitivity" => drop(report::sensitivity(ctx)),
-            "ablate-ring" => drop(report::ablate_ring(ctx)),
-            "parallelism-matrix" => drop(report::parallelism_matrix(ctx)),
-            "serving" => drop(report::serving(ctx)),
-            "tune-study" => drop(report::tune_study(ctx)),
-            other => eprintln!("unknown experiment id: {other}"),
-        }
-    }
-}
+pub(crate) type Harness = fn(&mut ReportCtx) -> Table;
 
-const ALL_EXPERIMENTS: [&str; 21] = [
-    "figure2", "table2", "table3", "table4", "figure3", "figure4", "figure5", "figure6",
-    "table5", "table6", "table7", "table8", "figure7", "figure8", "table9",
-    // extension studies (not in the paper's evaluation; see DESIGN.md)
-    "crosshw", "sensitivity", "ablate-ring", "parallelism-matrix", "serving", "tune-study",
+/// The paper's tables and figures, in presentation order.
+pub(crate) const PAPER_EXPERIMENTS: [(&str, Harness); 15] = [
+    ("figure2", report::figure2),
+    ("table2", report::table2),
+    ("table3", report::table3),
+    ("table4", report::table4),
+    ("figure3", report::figure3),
+    ("figure4", report::figure4),
+    ("figure5", report::figure5),
+    ("figure6", report::figure6),
+    ("table5", report::table5),
+    ("table6", report::table6),
+    ("table7", report::table7),
+    ("table8", report::table8),
+    ("figure7", report::figure7),
+    ("figure8", report::figure8),
+    ("table9", report::table9),
 ];
+
+/// Extension studies beyond the paper's evaluation (see DESIGN.md).
+pub(crate) const EXTENSION_EXPERIMENTS: [(&str, Harness); 7] = [
+    ("crosshw", report::crosshw),
+    ("sensitivity", report::sensitivity),
+    ("ablate-ring", report::ablate_ring),
+    ("parallelism-matrix", report::parallelism_matrix),
+    ("serving", report::serving),
+    ("tune-study", report::tune_study),
+    // Shadowed by the `fleet` subcommand at the top level; run it as
+    // `piep reproduce fleet`.
+    ("fleet", report::fleet),
+];
+
+fn harness(id: &str) -> Option<Harness> {
+    PAPER_EXPERIMENTS
+        .iter()
+        .chain(EXTENSION_EXPERIMENTS.iter())
+        .find(|(name, _)| *name == id)
+        .map(|&(_, f)| f)
+}
 
 /// Does `id` name an individual experiment harness (dispatched without the
 /// `reproduce` prefix)?
 pub(crate) fn is_experiment_id(id: &str) -> bool {
-    id.starts_with("figure")
-        || id.starts_with("table")
-        || matches!(
-            id,
-            "crosshw" | "sensitivity" | "ablate-ring" | "parallelism-matrix" | "serving" | "tune-study"
-        )
+    harness(id).is_some()
+}
+
+/// Comma-ish id list for the help text.
+pub(crate) fn id_list(experiments: &[(&'static str, Harness)]) -> String {
+    experiments.iter().map(|(name, _)| *name).collect::<Vec<_>>().join(" | ")
+}
+
+fn run_experiments(ctx: &mut ReportCtx, ids: &[String]) {
+    for id in ids {
+        match harness(id) {
+            Some(f) => drop(f(ctx)),
+            None => eprintln!("unknown experiment id: {id}"),
+        }
+    }
 }
 
 pub(crate) fn cmd_reproduce(args: &Args) {
     let out = args.get_or("out", "reports").to_string();
     let mut ctx = ReportCtx::new(&out, campaign_from(args));
     let ids: Vec<String> = if args.has("all") || args.positional.is_empty() {
-        ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect()
+        PAPER_EXPERIMENTS
+            .iter()
+            .chain(EXTENSION_EXPERIMENTS.iter())
+            .map(|(name, _)| name.to_string())
+            .collect()
     } else {
         args.positional.clone()
     };
@@ -69,4 +93,29 @@ pub(crate) fn cmd_single(args: &Args, id: &str) {
     let out = args.get_or("out", "reports").to_string();
     let mut ctx = ReportCtx::new(&out, campaign_from(args));
     run_experiments(&mut ctx, &[id.to_string()]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn experiment_tables_are_disjoint_and_dispatchable() {
+        let ids: Vec<&str> = PAPER_EXPERIMENTS
+            .iter()
+            .chain(EXTENSION_EXPERIMENTS.iter())
+            .map(|(name, _)| *name)
+            .collect();
+        assert_eq!(ids.len(), 22);
+        for id in &ids {
+            assert!(is_experiment_id(id), "{id} must dispatch");
+        }
+        let mut dedup = ids.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "duplicate experiment id");
+        assert!(!is_experiment_id("figure9"), "membership, not prefix match");
+        assert!(is_experiment_id("fleet"));
+        assert!(id_list(&EXTENSION_EXPERIMENTS).contains("tune-study | fleet"));
+    }
 }

@@ -1,7 +1,7 @@
 //! `piep runtime` / `piep bench-sim` — AOT artifact validation and quick
 //! simulator throughput numbers.
 
-use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use crate::config::{Parallelism, RunConfig, SimKnobs};
 use crate::util::cli::Args;
 
 pub(crate) fn cmd_runtime(args: &Args) {
@@ -49,8 +49,8 @@ pub(crate) fn cmd_bench_sim(args: &Args) {
         sim_decode_steps: args.get_usize("steps", 16),
         ..SimKnobs::default()
     };
-    let hw = HwSpec::default();
-    let cfg = RunConfig::new("Llama-70B", Parallelism::Tensor, 4, 32);
+    let hw = super::topo::parse_testbed(args, false).hw();
+    let cfg = RunConfig::new("Llama-70B", Parallelism::Tensor, args.get_usize("gpus", 4), 32);
     let t0 = std::time::Instant::now();
     let n = args.get_usize("runs", 20);
     let mut samples = 0usize;

@@ -1,0 +1,128 @@
+//! Shared testbed flags: one vocabulary for every subcommand.
+//!
+//! `--gpus` (flat box) and `--nodes/--gpus-per-node/--intra/--inter/--fleet`
+//! (cluster) describe *where* a subcommand runs. `plan`, `sweep`, `serve`,
+//! `bench-sim`, `tune`, and `fleet` all parse them through this module, so
+//! the flags mean exactly the same thing everywhere and the help text has
+//! one block to document them. Parsing produces a [`TestbedSpec`] — the
+//! config-layer value that resolves to an `HwSpec` — rather than raw
+//! hardware, so drivers can also label and forward the testbed.
+
+use crate::cluster::{GpuSpec, LinkTier};
+use crate::config::{HwSpec, TestbedSpec};
+use crate::util::cli::Args;
+
+/// Help block for the shared testbed flags (printed once in `piep help`).
+pub(crate) const TOPO_HELP: &str = "\
+\x20 --gpus N                   flat single-node testbed with N GPUs\n\
+\x20 --nodes N                  cluster testbed: node count (any cluster flag\n\
+\x20                            below selects the cluster form)\n\
+\x20 --gpus-per-node N          cluster testbed: GPUs per node\n\
+\x20 --intra nvlink|pcie|ib     intra-node link tier (default nvlink)\n\
+\x20 --inter nvlink|pcie|ib     inter-node link tier (default ib)\n\
+\x20 --fleet a6000,h100,l40     heterogeneous per-node GPU classes";
+
+/// Parse the shared testbed flags into a [`TestbedSpec`].
+///
+/// Any explicit cluster-shaping flag (including `--nodes 1` or a bare
+/// `--gpus-per-node`) builds the cluster form; a flagless invocation keeps
+/// the flat default box. When `smoke_implies_cluster` is set (tune, fleet),
+/// `--smoke` also pins the CI cluster: 2 nodes × 2 GPUs over NVLink + IB —
+/// subcommands whose `--smoke` only shrinks the workload pass `false` so
+/// their testbed is unchanged.
+pub(crate) fn parse_testbed(args: &Args, smoke_implies_cluster: bool) -> TestbedSpec {
+    let smoke = smoke_implies_cluster && args.has("smoke");
+    let nodes = args.get_usize("nodes", if smoke { 2 } else { 1 });
+    let default_gpn = if smoke { 2 } else { HwSpec::default().num_gpus };
+    let gpus_per_node = args.get_usize("gpus-per-node", default_gpn);
+    let cluster_requested = smoke
+        || args.has("nodes")
+        || args.has("gpus-per-node")
+        || args.has("intra")
+        || args.has("inter")
+        || args.has("fleet");
+    if cluster_requested {
+        let intra = LinkTier::parse(args.get_or("intra", "nvlink")).expect("intra tier (nvlink|pcie|ib)");
+        let inter = LinkTier::parse(args.get_or("inter", "ib")).expect("inter tier (nvlink|pcie|ib)");
+        let fleet: Vec<GpuSpec> = args
+            .get("fleet")
+            .map(|s| {
+                s.split(',')
+                    .map(|name| GpuSpec::parse(name.trim()).unwrap_or_else(|| panic!("unknown GPU class {name}")))
+                    .collect()
+            })
+            .unwrap_or_default();
+        TestbedSpec::Cluster {
+            nodes,
+            gpus_per_node,
+            intra,
+            inter,
+            fleet,
+        }
+    } else {
+        TestbedSpec::Flat {
+            gpus: args.get_usize("gpus", HwSpec::default().num_gpus),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn flagless_invocation_keeps_the_flat_default() {
+        let t = parse_testbed(&parse("sweep"), false);
+        assert_eq!(t, TestbedSpec::Flat { gpus: HwSpec::default().num_gpus });
+        let t = parse_testbed(&parse("serve --gpus 8"), false);
+        assert_eq!(t, TestbedSpec::Flat { gpus: 8 });
+    }
+
+    #[test]
+    fn any_cluster_flag_selects_the_cluster_form() {
+        for argv in ["tune --nodes 1", "plan --gpus-per-node 4", "sim --inter pcie", "sweep --fleet h100"] {
+            let t = parse_testbed(&parse(argv), false);
+            assert!(matches!(t, TestbedSpec::Cluster { .. }), "{argv}");
+        }
+        let t = parse_testbed(&parse("tune --nodes 3 --gpus-per-node 2 --intra pcie --inter ib --fleet a6000,h100"), false);
+        match t {
+            TestbedSpec::Cluster { nodes, gpus_per_node, intra, inter, fleet } => {
+                assert_eq!((nodes, gpus_per_node), (3, 2));
+                assert_eq!((intra, inter), (LinkTier::PciE, LinkTier::InfiniBand));
+                assert_eq!(fleet.len(), 2);
+            }
+            other => panic!("expected cluster, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn smoke_pins_the_ci_cluster_only_where_asked() {
+        let args = parse("tune --smoke");
+        let t = parse_testbed(&args, true);
+        assert_eq!(
+            t,
+            TestbedSpec::Cluster {
+                nodes: 2,
+                gpus_per_node: 2,
+                intra: LinkTier::NvLink,
+                inter: LinkTier::InfiniBand,
+                fleet: Vec::new(),
+            }
+        );
+        // serve/sweep/sim/plan --smoke only shrinks the workload.
+        assert_eq!(parse_testbed(&args, false), TestbedSpec::Flat { gpus: HwSpec::default().num_gpus });
+    }
+
+    #[test]
+    fn resolved_hardware_matches_the_direct_constructors() {
+        let flat = parse_testbed(&parse("plan --gpus 2"), false).hw();
+        assert_eq!(flat.num_gpus, 2);
+        let cluster = parse_testbed(&parse("tune --nodes 2 --gpus-per-node 2"), false).hw();
+        let direct = HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &[]);
+        assert_eq!(cluster.num_gpus, direct.num_gpus);
+    }
+}

@@ -4,45 +4,16 @@ use crate::config::{Parallelism, SimKnobs};
 use crate::util::cli::Args;
 
 pub(crate) fn cmd_tune(args: &Args) {
-    use crate::cluster::{GpuSpec, LinkTier};
-    use crate::config::{HwSpec, Strategy};
+    use crate::config::Strategy;
     use crate::eval::tune::{run_tune, TuneOptions};
     use crate::util::table::{fnum, pct, Table};
 
     let smoke = args.has("smoke");
 
-    // ---- fleet ----
-    // --nodes/--gpus-per-node + --intra/--inter tiers + --fleet GPU classes
-    // describe a cluster; without --nodes the flat single-node testbed is
-    // used. --smoke pins the CI grid: TP/PP/tp2xpp on a 2-node NVLink+IB
-    // fleet.
-    let nodes = args.get_usize("nodes", if smoke { 2 } else { 1 });
-    let default_gpn = if smoke { 2 } else { HwSpec::default().num_gpus };
-    let gpn = args.get_usize("gpus-per-node", default_gpn);
-    // Any explicit fleet-shaping flag (including --nodes 1 / a bare
-    // --gpus-per-node) builds a cluster testbed; only a flagless
-    // non-smoke invocation keeps the default flat box.
-    let cluster_requested = smoke
-        || args.has("nodes")
-        || args.has("gpus-per-node")
-        || args.has("intra")
-        || args.has("inter")
-        || args.has("fleet");
-    let hw = if cluster_requested {
-        let intra = LinkTier::parse(args.get_or("intra", "nvlink")).expect("intra tier (nvlink|pcie|ib)");
-        let inter = LinkTier::parse(args.get_or("inter", "ib")).expect("inter tier (nvlink|pcie|ib)");
-        let fleet: Vec<GpuSpec> = args
-            .get("fleet")
-            .map(|s| {
-                s.split(',')
-                    .map(|name| GpuSpec::parse(name.trim()).unwrap_or_else(|| panic!("unknown GPU class {name}")))
-                    .collect()
-            })
-            .unwrap_or_default();
-        HwSpec::cluster_testbed(nodes, gpn, intra, inter, &fleet)
-    } else {
-        HwSpec::default()
-    };
+    // ---- testbed ----
+    // The shared testbed flags (`cli::topo`) describe the fleet; --smoke
+    // pins the CI grid: TP/PP/tp2xpp on a 2-node NVLink+IB cluster.
+    let hw = super::topo::parse_testbed(args, true).hw();
 
     // ---- search space ----
     let model = args.get_or("model", "Vicuna-7B").to_string();

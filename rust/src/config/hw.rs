@@ -109,6 +109,20 @@ impl HwSpec {
         Self::default()
     }
 
+    /// Chainable: set the installed GPU count.
+    pub fn with_gpus(mut self, num_gpus: usize) -> Self {
+        self.num_gpus = num_gpus;
+        self
+    }
+
+    /// Chainable: install a cluster topology (node boundaries, link
+    /// tiers, optional heterogeneous fleet) over this testbed's per-GPU
+    /// constants.
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = Some(topology);
+        self
+    }
+
     /// The legacy flat link as a `LinkSpec` (wire energy stays folded into
     /// `gpu_comm_w`, so `energy_per_byte` is zero — this is what keeps the
     /// tiered cost formulas bit-identical to the flat ones).
@@ -184,6 +198,84 @@ impl HwSpec {
             meter_interval_s: 1.0,
             nvml_interval_s: 0.1,
             topology: None,
+        }
+    }
+}
+
+/// Declarative testbed description — the one vocabulary every CLI
+/// subcommand (`cli::topo`) and builder-API caller uses to say *where* a
+/// simulation runs. `hw()` resolves it to a concrete [`HwSpec`]: the flat
+/// form is bit-identical to the legacy pre-topology path, the cluster form
+/// is exactly [`HwSpec::cluster_testbed`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TestbedSpec {
+    /// The paper's flat single-node box with `gpus` installed GPUs.
+    Flat { gpus: usize },
+    /// A multi-node fleet: `nodes × gpus_per_node` ranks, intra/inter
+    /// link tiers, optional heterogeneous per-rank fleet (cycled).
+    Cluster {
+        nodes: usize,
+        gpus_per_node: usize,
+        intra: LinkTier,
+        inter: LinkTier,
+        fleet: Vec<GpuSpec>,
+    },
+}
+
+impl Default for TestbedSpec {
+    fn default() -> Self {
+        TestbedSpec::Flat {
+            gpus: HwSpec::default().num_gpus,
+        }
+    }
+}
+
+impl TestbedSpec {
+    /// Total ranks in the mesh.
+    pub fn gpus(&self) -> usize {
+        match self {
+            TestbedSpec::Flat { gpus } => (*gpus).max(1),
+            TestbedSpec::Cluster {
+                nodes, gpus_per_node, ..
+            } => nodes.max(1) * gpus_per_node.max(1),
+        }
+    }
+
+    /// Resolve to a concrete hardware description.
+    pub fn hw(&self) -> HwSpec {
+        match self {
+            TestbedSpec::Flat { gpus } => HwSpec {
+                num_gpus: (*gpus).max(1),
+                ..HwSpec::default()
+            },
+            TestbedSpec::Cluster {
+                nodes,
+                gpus_per_node,
+                intra,
+                inter,
+                fleet,
+            } => HwSpec::cluster_testbed(*nodes, *gpus_per_node, *intra, *inter, fleet),
+        }
+    }
+
+    /// Stable human-readable key (mesh-cache keys, table rows).
+    pub fn label(&self) -> String {
+        match self {
+            TestbedSpec::Flat { gpus } => format!("flat{}", gpus.max(1)),
+            TestbedSpec::Cluster {
+                nodes,
+                gpus_per_node,
+                intra,
+                inter,
+                fleet,
+            } => {
+                let mut s = format!("{}x{}:{}/{}", nodes.max(1), gpus_per_node.max(1), intra.name(), inter.name());
+                if !fleet.is_empty() {
+                    s.push(':');
+                    s.push_str(&fleet.iter().map(|g| g.name).collect::<Vec<_>>().join(","));
+                }
+                s
+            }
         }
     }
 }
@@ -291,6 +383,21 @@ impl Default for SimKnobs {
     }
 }
 
+impl SimKnobs {
+    /// Set the explicitly simulated decode steps (the cost knob every
+    /// driver tunes; the rest of the stochastic substrate rarely moves).
+    pub fn with_decode_steps(mut self, steps: usize) -> SimKnobs {
+        self.sim_decode_steps = steps;
+        self
+    }
+
+    /// Set the per-rank event-engine worker threads (1 = serial).
+    pub fn with_engine_threads(mut self, threads: usize) -> SimKnobs {
+        self.engine_threads = threads;
+        self
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -330,6 +437,32 @@ mod tests {
         assert_eq!(topo.gpu(1).unwrap().name, "h100");
         assert_eq!(topo.gpu(3).unwrap().name, "h100");
         assert!(!topo.homogeneous());
+    }
+
+    #[test]
+    fn testbed_spec_resolves_and_labels() {
+        let flat = TestbedSpec::default();
+        assert_eq!(flat.gpus(), 4);
+        assert_eq!(flat.label(), "flat4");
+        assert!(flat.hw().topology.is_none());
+        let cluster = TestbedSpec::Cluster {
+            nodes: 2,
+            gpus_per_node: 2,
+            intra: LinkTier::NvLink,
+            inter: LinkTier::InfiniBand,
+            fleet: vec![GpuSpec::a6000(), GpuSpec::h100()],
+        };
+        assert_eq!(cluster.gpus(), 4);
+        assert_eq!(cluster.label(), "2x2:nvlink/infiniband:a6000,h100");
+        let hw = cluster.hw();
+        assert_eq!(hw.num_gpus, 4);
+        assert!(hw.topo().spans(0, 4));
+        // Chainable testbed builders.
+        let hw2 = HwSpec::a6000_testbed()
+            .with_gpus(8)
+            .with_topology(Topology::multi_node(4, LinkTier::NvLink, LinkTier::InfiniBand));
+        assert_eq!(hw2.num_gpus, 8);
+        assert!(hw2.topology.is_some());
     }
 
     #[test]

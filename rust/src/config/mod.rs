@@ -9,7 +9,7 @@
 
 pub mod hw;
 
-pub use hw::{HwSpec, SimKnobs};
+pub use hw::{HwSpec, SimKnobs, TestbedSpec};
 
 /// One of the three base parallelization strategies (Section 3 of the
 /// paper). `Parallelism` composes these into pure or hybrid deployments.
@@ -215,6 +215,14 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
+    /// Builder over the same defaults as [`RunConfig::new`]
+    /// (`seq_in 128`, `seq_out 512`, `seed 0`).
+    pub fn builder(model: &str) -> RunConfigBuilder {
+        RunConfigBuilder {
+            cfg: RunConfig::new(model, Parallelism::Tensor, HwSpec::default().num_gpus, 1),
+        }
+    }
+
     pub fn new(model: &str, parallelism: Parallelism, gpus: usize, batch: usize) -> Self {
         RunConfig {
             model: model.to_string(),
@@ -251,9 +259,74 @@ impl RunConfig {
     }
 }
 
+/// Chainable construction of a [`RunConfig`] (`RunConfig::builder`):
+/// every field has the documented default, so callers state only what
+/// their run varies.
+#[derive(Debug, Clone)]
+pub struct RunConfigBuilder {
+    cfg: RunConfig,
+}
+
+impl RunConfigBuilder {
+    pub fn parallelism(mut self, parallelism: Parallelism) -> Self {
+        self.cfg.parallelism = parallelism;
+        self
+    }
+
+    pub fn gpus(mut self, gpus: usize) -> Self {
+        self.cfg.gpus = gpus;
+        self
+    }
+
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.cfg.batch = batch;
+        self
+    }
+
+    pub fn seq_in(mut self, seq_in: usize) -> Self {
+        self.cfg.seq_in = seq_in;
+        self
+    }
+
+    pub fn seq_out(mut self, seq_out: usize) -> Self {
+        self.cfg.seq_out = seq_out;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn build(self) -> RunConfig {
+        self.cfg
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn builder_matches_literal_construction() {
+        let built = RunConfig::builder("Vicuna-7B")
+            .parallelism(Parallelism::Pipeline)
+            .gpus(2)
+            .batch(8)
+            .seq_out(64)
+            .seed(9)
+            .build();
+        let literal = RunConfig::new("Vicuna-7B", Parallelism::Pipeline, 2, 8)
+            .with_seq_out(64)
+            .with_seed(9);
+        assert_eq!(built.key(), literal.key());
+        assert_eq!(built.seq_in, literal.seq_in);
+        assert_eq!(built.seed, literal.seed);
+        // Defaults mirror `new`.
+        let d = RunConfig::builder("Vicuna-7B").build();
+        assert_eq!(d.gpus, HwSpec::default().num_gpus);
+        assert_eq!((d.seq_in, d.seq_out, d.seed), (128, 512, 0));
+    }
 
     #[test]
     fn parallelism_parse() {

@@ -1,0 +1,247 @@
+//! Cluster-level fleet evaluation grid (`piep fleet`, DESIGN.md §13).
+//!
+//! Replays **one** trace (same synthesis seed for every cell, so routing
+//! and scaling are the only variables) through replica-count × router-
+//! policy cells of `fleet::simulate_fleet`, and reports the headline
+//! cluster metrics — J/token and p50/p99 latency vs replica count — plus
+//! the best-policy argmin by cluster J/token. Cells score over the
+//! `util::par` pool; results are deterministic per seed and bit-identical
+//! across thread counts, and the argmin is property-pinned to an
+//! exhaustive serial evaluation exactly like `eval::tune`.
+
+use crate::config::{Parallelism, SimKnobs, TestbedSpec};
+use crate::fleet::{simulate_fleet, AutoscaleConfig, FleetConfig, FleetResult, ReplicaSpec, RouterPolicy};
+use crate::serve::{synthesize, ArrivalKind, Policy, ServeConfig, SynthSpec, Trace};
+use crate::util::par;
+
+/// Fleet evaluation grid + workload options.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    pub model: String,
+    /// Strategy every replica runs (the `piep fleet` CLI keeps replicas
+    /// homogeneous; heterogeneous fleets go through `fleet::FleetConfig`
+    /// directly).
+    pub parallelism: Parallelism,
+    /// Testbed of each replica's mesh.
+    pub testbed: TestbedSpec,
+    /// Replica-count axis of the grid.
+    pub replica_counts: Vec<usize>,
+    /// Router-policy axis of the grid.
+    pub policies: Vec<RouterPolicy>,
+    /// Per-replica admission policy.
+    pub admission: Policy,
+    pub max_batch_requests: usize,
+    /// Synthetic trace shared by every cell.
+    pub requests: usize,
+    pub rate_rps: f64,
+    pub arrival: ArrivalKind,
+    /// Conversation sessions in the trace (session-affinity routing).
+    pub sessions: usize,
+    /// Autoscaler applied in every cell (`None` ⇒ all replicas always Up).
+    pub autoscale: Option<AutoscaleConfig>,
+    pub knobs: SimKnobs,
+    pub seed: u64,
+    /// Worker threads over the cell axis (0 ⇒ available cores).
+    pub threads: usize,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            model: "Vicuna-7B".into(),
+            parallelism: Parallelism::Tensor,
+            testbed: TestbedSpec::default(),
+            replica_counts: vec![1, 2],
+            policies: RouterPolicy::ALL.to_vec(),
+            admission: Policy::Fcfs,
+            max_batch_requests: 8,
+            requests: 16,
+            rate_rps: 2.0,
+            arrival: ArrivalKind::Diurnal,
+            sessions: 4,
+            autoscale: None,
+            knobs: SimKnobs::default(),
+            seed: 0xF1EE7,
+            threads: 0,
+        }
+    }
+}
+
+/// One evaluated (replica count, router policy) cell.
+#[derive(Debug, Clone)]
+pub struct FleetCell {
+    pub replicas: usize,
+    pub policy: RouterPolicy,
+    /// Stable identity: `"{replicas}x/{policy}"`.
+    pub label: String,
+    /// Cluster energy per generated token, J (cold starts included).
+    pub j_per_token: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub cluster_energy_j: f64,
+    pub cold_start_j: f64,
+    pub served: usize,
+    pub rejected: usize,
+    pub makespan_s: f64,
+    pub scale_events: usize,
+}
+
+/// Fleet evaluation outcome.
+#[derive(Debug, Clone)]
+pub struct FleetEvalResult {
+    /// Every cell, sorted by (replicas, policy name).
+    pub cells: Vec<FleetCell>,
+    /// Best cell by cluster J/token (label-stable tie-break).
+    pub argmin: Option<FleetCell>,
+    /// The shared trace every cell replayed.
+    pub trace: Trace,
+}
+
+/// The synthetic trace every cell replays (same seed ⇒ same requests).
+pub fn fleet_trace(opts: &FleetOptions) -> Trace {
+    synthesize(
+        &SynthSpec {
+            kind: opts.arrival,
+            requests: opts.requests,
+            rate_rps: opts.rate_rps,
+            sessions: opts.sessions,
+            ..SynthSpec::default()
+        },
+        opts.seed,
+    )
+}
+
+/// Enumerate the (replica count, policy) grid.
+pub fn fleet_grid(opts: &FleetOptions) -> Vec<(usize, RouterPolicy)> {
+    let mut out = Vec::new();
+    for &n in &opts.replica_counts {
+        for &p in &opts.policies {
+            out.push((n.max(1), p));
+        }
+    }
+    out
+}
+
+/// The fleet configuration of one cell.
+pub fn cell_config(opts: &FleetOptions, replicas: usize, policy: RouterPolicy) -> FleetConfig {
+    let serve = ServeConfig::new(&opts.model, opts.parallelism, opts.testbed.gpus())
+        .with_policy(opts.admission)
+        .with_max_batch_requests(opts.max_batch_requests);
+    let spec = ReplicaSpec::new(serve, opts.testbed.clone());
+    let mut cfg = FleetConfig::new(vec![spec; replicas.max(1)])
+        .with_router(policy)
+        .with_knobs(opts.knobs.clone())
+        .with_base_seed(opts.seed);
+    if let Some(a) = &opts.autoscale {
+        cfg = cfg.with_autoscale(a.clone());
+    }
+    cfg
+}
+
+/// Evaluate one cell on a shared trace.
+pub fn score_cell(opts: &FleetOptions, trace: &Trace, replicas: usize, policy: RouterPolicy) -> FleetCell {
+    let res: FleetResult = simulate_fleet(trace, &cell_config(opts, replicas, policy));
+    FleetCell {
+        replicas,
+        policy,
+        label: format!("{replicas}x/{}", policy.name()),
+        j_per_token: res.j_per_token(),
+        p50_latency_s: res.latency_percentile_s(50.0),
+        p99_latency_s: res.latency_percentile_s(99.0),
+        cluster_energy_j: res.cluster_energy_j,
+        cold_start_j: res.cold_start_j,
+        served: res.served().count(),
+        rejected: res.requests.len() - res.served().count(),
+        makespan_s: res.makespan_s,
+        scale_events: res.scale_events.len(),
+    }
+}
+
+/// Run the full grid (parallel over the `util::par` pool; deterministic —
+/// the pool only reorders wall-clock, not results).
+pub fn run_fleet_eval(opts: &FleetOptions) -> FleetEvalResult {
+    let trace = fleet_trace(opts);
+    let grid = fleet_grid(opts);
+    let mut cells = par::par_map(&grid, opts.threads, |&(n, p)| score_cell(opts, &trace, n, p));
+    cells.sort_by(|a, b| a.replicas.cmp(&b.replicas).then_with(|| a.policy.name().cmp(b.policy.name())));
+    let argmin = cells
+        .iter()
+        .min_by(|a, b| a.j_per_token.total_cmp(&b.j_per_token).then_with(|| a.label.cmp(&b.label)))
+        .cloned();
+    FleetEvalResult { cells, argmin, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> FleetOptions {
+        FleetOptions {
+            replica_counts: vec![1, 2],
+            policies: vec![RouterPolicy::JoinShortestQueue, RouterPolicy::EnergyAware],
+            requests: 6,
+            rate_rps: 4.0,
+            max_batch_requests: 4,
+            ..FleetOptions::default()
+        }
+    }
+
+    #[test]
+    fn grid_covers_the_axes() {
+        let g = fleet_grid(&tiny_opts());
+        assert_eq!(g.len(), 4);
+        assert!(g.contains(&(1, RouterPolicy::JoinShortestQueue)));
+        assert!(g.contains(&(2, RouterPolicy::EnergyAware)));
+    }
+
+    #[test]
+    fn eval_is_deterministic_across_thread_counts() {
+        let opts = tiny_opts();
+        let a = run_fleet_eval(&FleetOptions { threads: 1, ..opts.clone() });
+        let b = run_fleet_eval(&FleetOptions { threads: 4, ..opts });
+        assert_eq!(a.cells.len(), b.cells.len());
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.j_per_token, y.j_per_token);
+            assert_eq!(x.p99_latency_s, y.p99_latency_s);
+        }
+        assert_eq!(
+            a.argmin.as_ref().map(|c| c.label.clone()),
+            b.argmin.as_ref().map(|c| c.label.clone())
+        );
+    }
+
+    #[test]
+    fn argmin_matches_serial_re_evaluation() {
+        let opts = tiny_opts();
+        let res = run_fleet_eval(&opts);
+        let argmin = res.argmin.expect("non-empty grid");
+        // Exhaustive serial pass over the same shared trace.
+        let trace = fleet_trace(&opts);
+        let mut best: Option<FleetCell> = None;
+        for (n, p) in fleet_grid(&opts) {
+            let c = score_cell(&opts, &trace, n, p);
+            let better = match &best {
+                None => true,
+                Some(b) => c.j_per_token.total_cmp(&b.j_per_token).then_with(|| c.label.cmp(&b.label)).is_lt(),
+            };
+            if better {
+                best = Some(c);
+            }
+        }
+        let serial = best.unwrap();
+        assert_eq!(argmin.label, serial.label);
+        assert_eq!(argmin.j_per_token, serial.j_per_token);
+    }
+
+    #[test]
+    fn cells_carry_finite_headline_metrics() {
+        let res = run_fleet_eval(&tiny_opts());
+        for c in &res.cells {
+            assert!(c.j_per_token.is_finite() && c.j_per_token > 0.0, "{}", c.label);
+            assert!(c.p50_latency_s > 0.0 && c.p99_latency_s >= c.p50_latency_s, "{}", c.label);
+            assert_eq!(c.served + c.rejected, res.trace.len(), "{}", c.label);
+            assert!(c.makespan_s > 0.0);
+        }
+    }
+}

@@ -2,9 +2,11 @@
 //! generalization (variant / batch size / family), MAPE scoring, the
 //! Spearman feature-correlation analysis behind Figure 7, the parallel
 //! scenario sweep engine (`sweep`), the serving-scenario evaluation over
-//! the trace-driven simulator (`serving`), and the energy-aware strategy
-//! autotuner (`tune`).
+//! the trace-driven simulator (`serving`), the energy-aware strategy
+//! autotuner (`tune`), and the fleet-scale replica/router/autoscaler
+//! grid (`fleet`).
 
+pub mod fleet;
 pub mod serving;
 pub mod sweep;
 pub mod tune;

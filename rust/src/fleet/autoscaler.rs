@@ -1,0 +1,282 @@
+//! Replica autoscaler: a fixed-interval control loop over the fleet.
+//!
+//! Every `interval_s` the controller compares total in-flight load against
+//! a per-replica target and moves replicas through the lifecycle
+//!
+//! ```text
+//! Down --Start(cold_start_s, cold_start_j)--> Starting --ready--> Up
+//! Up --Drain--> Draining --queue empty--> Down (Stop)
+//! ```
+//!
+//! Scale-up prefers reviving a Draining replica (still warm: no cold-start
+//! cost) before cold-starting the lowest-index Down replica, which accrues
+//! `cold_start_j` into the cluster energy and delays readiness by
+//! `cold_start_s`. Scale-down drains the highest-index Up replica:
+//! draining replicas take no new requests but finish everything already
+//! routed to them (drain-before-shutdown), and only transition Down once
+//! empty. `min_replicas` keeps a routable floor so the router always has a
+//! target. Everything is a pure function of (tick time, in-flight counts),
+//! so scaling decisions are bit-deterministic.
+
+/// One replica's lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReplicaState {
+    /// Serving and routable.
+    Up,
+    /// Cold-starting; routable (requests queue), but the replica's clock
+    /// cannot schedule before `ready_at_s`.
+    Starting { ready_at_s: f64 },
+    /// Not routable; finishing its already-routed requests.
+    Draining,
+    /// Off. Costs nothing, serves nothing.
+    Down,
+}
+
+impl ReplicaState {
+    /// May the router send new requests here?
+    pub fn routable(&self) -> bool {
+        matches!(self, ReplicaState::Up | ReplicaState::Starting { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicaState::Up => "up",
+            ReplicaState::Starting { .. } => "starting",
+            ReplicaState::Draining => "draining",
+            ReplicaState::Down => "down",
+        }
+    }
+}
+
+/// What a scale event did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Down/Draining → Starting/Up.
+    Start,
+    /// Up → Draining.
+    Drain,
+    /// Draining → Down (queue drained).
+    Stop,
+}
+
+/// One logged autoscaler decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleEvent {
+    /// Control-tick time, s.
+    pub t_s: f64,
+    pub replica: usize,
+    pub action: ScaleAction,
+}
+
+/// Autoscaler control parameters.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Control-loop tick interval, s.
+    pub interval_s: f64,
+    /// Target in-flight requests per routable replica; the desired
+    /// replica count is `ceil(total_in_flight / target)`.
+    pub target_inflight: usize,
+    /// Routable floor (clamped to the fleet size).
+    pub min_replicas: usize,
+    /// Wall-clock from a Start decision to readiness, s.
+    pub cold_start_s: f64,
+    /// Energy cost of one cold start (weight load, CUDA context, fans), J.
+    pub cold_start_j: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            interval_s: 2.0,
+            target_inflight: 4,
+            min_replicas: 1,
+            cold_start_s: 1.0,
+            cold_start_j: 150.0,
+        }
+    }
+}
+
+/// The control loop's mutable state: tick cursor, event log, accrued
+/// cold-start energy.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    /// Every decision taken, in tick order.
+    pub events: Vec<ScaleEvent>,
+    /// Σ cold-start energy accrued, J (part of the cluster total).
+    pub cold_start_j: f64,
+    next_tick_s: f64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
+        assert!(cfg.interval_s > 0.0, "degenerate autoscale interval");
+        let first = cfg.interval_s;
+        Autoscaler {
+            cfg,
+            events: Vec::new(),
+            cold_start_j: 0.0,
+            next_tick_s: first,
+        }
+    }
+
+    /// Initial fleet states: the routable floor Up, the rest Down.
+    pub fn initial_states(&self, n: usize) -> Vec<ReplicaState> {
+        let floor = self.cfg.min_replicas.clamp(1, n.max(1));
+        (0..n)
+            .map(|i| if i < floor { ReplicaState::Up } else { ReplicaState::Down })
+            .collect()
+    }
+
+    /// Time of the next control tick, s.
+    pub fn next_tick_s(&self) -> f64 {
+        self.next_tick_s
+    }
+
+    /// Run the control tick at `self.next_tick_s()`. `in_flight[i]` is
+    /// replica i's queued + resident count at the tick. Mutates `states`
+    /// and returns the indices cold-started this tick with their
+    /// `ready_at_s` (so the fleet can hold their serving clocks).
+    pub fn tick(&mut self, in_flight: &[usize], states: &mut [ReplicaState]) -> Vec<(usize, f64)> {
+        assert_eq!(in_flight.len(), states.len());
+        let t = self.next_tick_s;
+        self.next_tick_s += self.cfg.interval_s;
+        let n = states.len();
+
+        // Promotions first: warm-ups that became ready, drains that emptied.
+        for i in 0..n {
+            match states[i] {
+                ReplicaState::Starting { ready_at_s } if ready_at_s <= t => states[i] = ReplicaState::Up,
+                ReplicaState::Draining if in_flight[i] == 0 => {
+                    states[i] = ReplicaState::Down;
+                    self.events.push(ScaleEvent {
+                        t_s: t,
+                        replica: i,
+                        action: ScaleAction::Stop,
+                    });
+                }
+                _ => {}
+            }
+        }
+
+        let total: usize = (0..n).filter(|&i| states[i].routable()).map(|i| in_flight[i]).sum();
+        let floor = self.cfg.min_replicas.clamp(1, n);
+        let desired = total.div_ceil(self.cfg.target_inflight.max(1)).clamp(floor, n);
+        let mut routable = (0..n).filter(|&i| states[i].routable()).count();
+
+        let mut started = Vec::new();
+        while routable < desired {
+            // Revive a warm draining replica first (free), else cold-start
+            // the lowest-index Down replica.
+            if let Some(i) = (0..n).find(|&i| states[i] == ReplicaState::Draining) {
+                states[i] = ReplicaState::Up;
+                self.events.push(ScaleEvent {
+                    t_s: t,
+                    replica: i,
+                    action: ScaleAction::Start,
+                });
+            } else if let Some(i) = (0..n).find(|&i| states[i] == ReplicaState::Down) {
+                let ready_at_s = t + self.cfg.cold_start_s;
+                states[i] = ReplicaState::Starting { ready_at_s };
+                self.cold_start_j += self.cfg.cold_start_j;
+                self.events.push(ScaleEvent {
+                    t_s: t,
+                    replica: i,
+                    action: ScaleAction::Start,
+                });
+                started.push((i, ready_at_s));
+            } else {
+                break; // everything already routable
+            }
+            routable += 1;
+        }
+        while routable > desired {
+            // Drain the highest-index Up replica; Starting replicas keep
+            // warming (their cold-start cost is already sunk).
+            match (0..n).rev().find(|&i| states[i] == ReplicaState::Up) {
+                Some(i) => {
+                    states[i] = ReplicaState::Draining;
+                    self.events.push(ScaleEvent {
+                        t_s: t,
+                        replica: i,
+                        action: ScaleAction::Drain,
+                    });
+                    routable -= 1;
+                }
+                None => break,
+            }
+        }
+        started
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler(target: usize, min: usize) -> Autoscaler {
+        Autoscaler::new(AutoscaleConfig {
+            target_inflight: target,
+            min_replicas: min,
+            ..AutoscaleConfig::default()
+        })
+    }
+
+    #[test]
+    fn initial_states_respect_the_floor() {
+        let s = scaler(4, 2);
+        let states = s.initial_states(4);
+        assert_eq!(states[..2], [ReplicaState::Up, ReplicaState::Up]);
+        assert_eq!(states[2..], [ReplicaState::Down, ReplicaState::Down]);
+        assert!(states[0].routable() && !states[2].routable());
+    }
+
+    #[test]
+    fn load_scales_up_with_cold_start_cost_and_down_with_drain() {
+        let mut s = scaler(2, 1);
+        let mut states = s.initial_states(3);
+        // 6 in-flight on one replica at target 2 -> desired 3: two cold starts.
+        let started = s.tick(&[6, 0, 0], &mut states);
+        assert_eq!(started.len(), 2);
+        assert_eq!(started[0].0, 1);
+        assert!(started[0].1 > s.cfg.interval_s);
+        assert_eq!(s.cold_start_j, 2.0 * s.cfg.cold_start_j);
+        assert!(states.iter().all(|st| st.routable()));
+        // Next tick: the starters are ready; load collapsed -> drain back
+        // to the floor, highest index first.
+        let started = s.tick(&[1, 0, 0], &mut states);
+        assert!(started.is_empty());
+        assert_eq!(states[0], ReplicaState::Up);
+        assert_eq!(states[1], ReplicaState::Draining);
+        assert_eq!(states[2], ReplicaState::Draining);
+        // Drained queues empty -> Stop events, replicas Down.
+        s.tick(&[1, 0, 0], &mut states);
+        assert_eq!(states[1], ReplicaState::Down);
+        assert_eq!(states[2], ReplicaState::Down);
+        let stops = s.events.iter().filter(|e| e.action == ScaleAction::Stop).count();
+        assert_eq!(stops, 2);
+    }
+
+    #[test]
+    fn draining_replica_is_revived_for_free() {
+        let mut s = scaler(2, 1);
+        let mut states = vec![ReplicaState::Up, ReplicaState::Draining];
+        let j_before = s.cold_start_j;
+        // Desired 2 -> revive the draining replica rather than cold-start.
+        let started = s.tick(&[4, 3], &mut states);
+        assert!(started.is_empty(), "revival is not a cold start");
+        assert_eq!(states[1], ReplicaState::Up);
+        assert_eq!(s.cold_start_j, j_before);
+    }
+
+    #[test]
+    fn busy_draining_replica_keeps_draining() {
+        let mut s = scaler(100, 1);
+        let mut states = vec![ReplicaState::Up, ReplicaState::Draining];
+        // Low load: desired stays 1; the draining replica still has work.
+        s.tick(&[0, 2], &mut states);
+        assert_eq!(states[1], ReplicaState::Draining, "drain-before-shutdown");
+        s.tick(&[0, 0], &mut states);
+        assert_eq!(states[1], ReplicaState::Down);
+    }
+}

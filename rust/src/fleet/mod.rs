@@ -1,0 +1,451 @@
+//! Fleet-scale multi-replica serving: the cluster layer over the serving
+//! simulator (DESIGN.md §13).
+//!
+//! A [`Fleet` configuration](FleetConfig) describes N independent
+//! replicas — each a full ExecPlan-backed serving mesh
+//! ([`serve::Session`](crate::serve::Session)), possibly heterogeneous via
+//! its own [`TestbedSpec`] and possibly running a different tuned strategy
+//! — behind a front-door [`router`] and an optional [`autoscaler`].
+//! `simulate_fleet` replays one trace through the cluster: arrivals route
+//! to a replica, every replica advances its own serving clock between
+//! routing instants, and the autoscaler's control loop spins replicas
+//! up/down against the load with cold-start energy cost and
+//! drain-before-shutdown semantics.
+//!
+//! Replicas with the same mesh (model / parallelism / GPU count /
+//! testbed) share one `Arc<StepLowerer>`, so plan structures lower once
+//! per mesh topology across the whole fleet — the serving win of the
+//! compiled plan cache, at cluster scale.
+//!
+//! Two invariants carry up from the serving layer unchanged and are
+//! property-tested across every router policy:
+//!
+//! * **conservation** — Σ per-request attributed J + cold-start J ==
+//!   Σ replica step J + cold-start J == cluster J (rel 1e-9);
+//! * **bit-determinism** — the same (trace, config, seed) reproduces
+//!   identical routing decisions, per-request records, and cluster energy.
+
+pub mod autoscaler;
+pub mod router;
+
+pub use autoscaler::{AutoscaleConfig, Autoscaler, ReplicaState, ScaleAction, ScaleEvent};
+pub use router::{route, ReplicaView, RouterPolicy};
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::{SimKnobs, TestbedSpec};
+use crate::plan::CacheStats;
+use crate::serve::{RequestRecord, ServeConfig, ServeResult, Session, StepLowerer, Trace};
+use crate::util::stats::percentile;
+
+/// One replica of the fleet: its serving configuration and the testbed
+/// its mesh runs on.
+#[derive(Debug, Clone)]
+pub struct ReplicaSpec {
+    /// Per-replica serving configuration. `base_seed` is a *fleet-relative*
+    /// base: `simulate_fleet` folds the replica index into it so replicas
+    /// draw independent substrate streams.
+    pub serve: ServeConfig,
+    /// Where the replica's mesh runs.
+    pub testbed: TestbedSpec,
+}
+
+impl ReplicaSpec {
+    /// Pair a serving configuration with a testbed; the mesh size follows
+    /// the testbed (`serve.gpus` is overwritten with `testbed.gpus()`).
+    pub fn new(mut serve: ServeConfig, testbed: TestbedSpec) -> ReplicaSpec {
+        serve.gpus = testbed.gpus();
+        ReplicaSpec { serve, testbed }
+    }
+
+    /// Mesh identity: replicas with equal keys share one step lowerer
+    /// (and therefore one set of plan structures).
+    pub fn mesh_key(&self) -> String {
+        format!(
+            "{}/{}/g{}/{}",
+            self.serve.model,
+            self.serve.parallelism.label(),
+            self.serve.gpus,
+            self.testbed.label()
+        )
+    }
+}
+
+/// The whole cluster: replicas, front-door policy, optional autoscaler.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub replicas: Vec<ReplicaSpec>,
+    pub router: RouterPolicy,
+    /// `None` ⇒ every replica is Up for the whole trace (no cold starts).
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Substrate knobs shared by every replica's step simulations.
+    pub knobs: SimKnobs,
+    /// Cluster seed; replica substrate seeds derive from it.
+    pub base_seed: u64,
+}
+
+impl FleetConfig {
+    pub fn new(replicas: Vec<ReplicaSpec>) -> FleetConfig {
+        FleetConfig {
+            replicas,
+            router: RouterPolicy::JoinShortestQueue,
+            autoscale: None,
+            knobs: SimKnobs::default(),
+            base_seed: 0xF1EE7, // "FLEET"
+        }
+    }
+
+    /// Chainable: set the router policy.
+    pub fn with_router(mut self, router: RouterPolicy) -> FleetConfig {
+        self.router = router;
+        self
+    }
+
+    /// Chainable: enable the autoscaler.
+    pub fn with_autoscale(mut self, autoscale: AutoscaleConfig) -> FleetConfig {
+        self.autoscale = Some(autoscale);
+        self
+    }
+
+    /// Chainable: set the substrate knobs.
+    pub fn with_knobs(mut self, knobs: SimKnobs) -> FleetConfig {
+        self.knobs = knobs;
+        self
+    }
+
+    /// Chainable: set the cluster seed.
+    pub fn with_base_seed(mut self, seed: u64) -> FleetConfig {
+        self.base_seed = seed;
+        self
+    }
+}
+
+/// One request's record plus the replica that served (or rejected) it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetRequest {
+    pub replica: usize,
+    pub record: RequestRecord,
+}
+
+/// One replica's outcome.
+#[derive(Debug, Clone)]
+pub struct ReplicaSummary {
+    pub id: usize,
+    pub mesh_key: String,
+    /// Requests the router sent here.
+    pub routed: usize,
+    pub result: ServeResult,
+}
+
+/// Outcome of replaying one trace through the cluster.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    /// Per-request records tagged with their replica, sorted by id.
+    pub requests: Vec<FleetRequest>,
+    pub replicas: Vec<ReplicaSummary>,
+    /// Autoscaler decision log (empty without an autoscaler).
+    pub scale_events: Vec<ScaleEvent>,
+    /// Σ cold-start energy, J.
+    pub cold_start_j: f64,
+    /// Cluster energy: Σ replica step energy + cold-start energy, J.
+    pub cluster_energy_j: f64,
+    /// Cluster makespan: the slowest replica's serving clock, s.
+    pub makespan_s: f64,
+    /// Plan-cache counters aggregated over the fleet's shared lowerers.
+    pub cache: CacheStats,
+    /// Distinct mesh topologies across the fleet (shared lowerers).
+    pub shared_lowerers: usize,
+}
+
+impl FleetResult {
+    /// Served (non-rejected) request records with their replica.
+    pub fn served(&self) -> impl Iterator<Item = &FleetRequest> {
+        self.requests.iter().filter(|f| !f.record.rejected)
+    }
+
+    /// Generated tokens across served requests.
+    pub fn generated_tokens(&self) -> usize {
+        self.served().map(|f| f.record.output_tokens).sum()
+    }
+
+    /// Σ attributed per-request energy + cold-start energy, J. Equals
+    /// `cluster_energy_j` within 1e-9 relative (the conservation
+    /// invariant, property-tested).
+    pub fn attributed_energy_j(&self) -> f64 {
+        self.requests.iter().map(|f| f.record.energy_j).sum::<f64>() + self.cold_start_j
+    }
+
+    /// Cluster energy per generated token, J — the headline metric.
+    pub fn j_per_token(&self) -> f64 {
+        self.cluster_energy_j / self.generated_tokens().max(1) as f64
+    }
+
+    /// Percentile of end-to-end latency over served requests, s.
+    pub fn latency_percentile_s(&self, p: f64) -> f64 {
+        let xs: Vec<f64> = self.served().map(|f| f.record.latency_s()).collect();
+        percentile(&xs, p)
+    }
+}
+
+/// Replay `trace` through the cluster. Bit-deterministic per
+/// (`trace`, `cfg`); panics if the fleet is empty or a replica's model
+/// does not fit its testbed.
+pub fn simulate_fleet(trace: &Trace, cfg: &FleetConfig) -> FleetResult {
+    assert!(!cfg.replicas.is_empty(), "fleet needs at least one replica");
+    // One shared lowerer per distinct mesh: plan structures lower once
+    // per topology, not once per replica.
+    let mut lowerers: BTreeMap<String, Arc<StepLowerer>> = BTreeMap::new();
+    let mut sessions: Vec<Session> = Vec::with_capacity(cfg.replicas.len());
+    let mut mesh_keys: Vec<String> = Vec::with_capacity(cfg.replicas.len());
+    for (i, spec) in cfg.replicas.iter().enumerate() {
+        let hw = spec.testbed.hw();
+        let key = spec.mesh_key();
+        let lowerer = lowerers
+            .entry(key.clone())
+            .or_insert_with(|| {
+                Arc::new(StepLowerer::new(
+                    &spec.serve.model,
+                    spec.serve.parallelism,
+                    spec.serve.gpus,
+                    hw.clone(),
+                    &cfg.knobs,
+                ))
+            })
+            .clone();
+        let scfg = ServeConfig {
+            base_seed: cfg.base_seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ..spec.serve.clone()
+        };
+        sessions.push(Session::with_lowerer(&scfg, &hw, lowerer));
+        mesh_keys.push(key);
+    }
+
+    let mut scaler = cfg.autoscale.clone().map(Autoscaler::new);
+    let mut states: Vec<ReplicaState> = match &scaler {
+        Some(s) => s.initial_states(sessions.len()),
+        None => vec![ReplicaState::Up; sessions.len()],
+    };
+    let mut routed_counts = vec![0usize; sessions.len()];
+    let mut rr_next = 0usize;
+
+    for req in &trace.requests {
+        let t = req.arrival_s;
+        // Control ticks due before this arrival.
+        if let Some(sc) = scaler.as_mut() {
+            while sc.next_tick_s() <= t {
+                let tick = sc.next_tick_s();
+                for s in sessions.iter_mut() {
+                    s.advance_to(tick);
+                }
+                let in_flight: Vec<usize> = sessions.iter().map(Session::in_flight).collect();
+                for (i, ready_at_s) in sc.tick(&in_flight, &mut states) {
+                    // A cold-started replica cannot schedule before it is
+                    // ready; its queue waits.
+                    sessions[i].skip_to(ready_at_s);
+                }
+            }
+        }
+        // Bring every replica's clock to the routing instant (steps in
+        // progress finish; queues admit at their decode boundaries).
+        for s in sessions.iter_mut() {
+            s.advance_to(t);
+        }
+        let views: Vec<ReplicaView> = sessions
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ReplicaView {
+                id: i,
+                routable: states[i].routable(),
+                in_flight: s.in_flight(),
+                j_per_token: s.j_per_token_so_far(),
+            })
+            .collect();
+        let target = route(cfg.router, req, &views, &mut rr_next);
+        sessions[target].enqueue(req.clone());
+        routed_counts[target] += 1;
+    }
+    for s in sessions.iter_mut() {
+        s.drain();
+    }
+
+    let mut cache = CacheStats::default();
+    for lw in lowerers.values() {
+        let (c, _) = lw.stats();
+        cache.structure_lowerings += c.structure_lowerings;
+        cache.rebinds += c.rebinds;
+        cache.shape_hits += c.shape_hits;
+    }
+    let shared_lowerers = lowerers.len();
+
+    let results: Vec<ServeResult> = sessions.into_iter().map(Session::finish).collect();
+    let mut requests: Vec<FleetRequest> = Vec::with_capacity(trace.len());
+    for (i, res) in results.iter().enumerate() {
+        for rec in &res.requests {
+            requests.push(FleetRequest {
+                replica: i,
+                record: rec.clone(),
+            });
+        }
+    }
+    requests.sort_by_key(|f| f.record.id);
+
+    let replica_energy_j: f64 = results.iter().map(|r| r.total_energy_j).sum();
+    let (scale_events, cold_start_j) = match scaler {
+        Some(s) => (s.events, s.cold_start_j),
+        None => (Vec::new(), 0.0),
+    };
+    let makespan_s = results.iter().map(|r| r.makespan_s).fold(0.0, f64::max);
+    let replicas = results
+        .into_iter()
+        .enumerate()
+        .map(|(id, result)| ReplicaSummary {
+            id,
+            mesh_key: mesh_keys[id].clone(),
+            routed: routed_counts[id],
+            result,
+        })
+        .collect();
+    FleetResult {
+        requests,
+        replicas,
+        scale_events,
+        cold_start_j,
+        cluster_energy_j: replica_energy_j + cold_start_j,
+        makespan_s,
+        cache,
+        shared_lowerers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Parallelism;
+    use crate::serve::{synthesize, ArrivalKind, SynthSpec};
+
+    fn tiny_trace(requests: usize, seed: u64) -> Trace {
+        synthesize(
+            &SynthSpec {
+                requests,
+                rate_rps: 4.0,
+                prompt_mean: 32.0,
+                prompt_range: (8, 64),
+                output_mean: 4.0,
+                output_range: (2, 8),
+                sessions: 3,
+                ..SynthSpec::default()
+            },
+            seed,
+        )
+    }
+
+    fn tiny_replica() -> ReplicaSpec {
+        ReplicaSpec::new(
+            ServeConfig::new("Vicuna-7B", Parallelism::Tensor, 2).with_max_batch_requests(4),
+            TestbedSpec::Flat { gpus: 2 },
+        )
+    }
+
+    fn tiny_fleet(n: usize) -> FleetConfig {
+        FleetConfig::new(vec![tiny_replica(); n])
+    }
+
+    #[test]
+    fn fleet_serves_every_request_and_conserves_energy() {
+        let trace = tiny_trace(8, 1);
+        for policy in RouterPolicy::ALL {
+            let res = simulate_fleet(&trace, &tiny_fleet(2).with_router(policy));
+            assert_eq!(res.requests.len(), trace.len(), "{policy:?}");
+            let routed: usize = res.replicas.iter().map(|r| r.routed).sum();
+            assert_eq!(routed, trace.len());
+            let rel = (res.attributed_energy_j() - res.cluster_energy_j).abs() / res.cluster_energy_j;
+            assert!(rel < 1e-9, "{policy:?}: rel {rel}");
+            assert!(res.cluster_energy_j > 0.0 && res.makespan_s > 0.0);
+            assert!(res.j_per_token() > 0.0);
+        }
+    }
+
+    #[test]
+    fn fleet_is_bit_deterministic_per_seed() {
+        let trace = tiny_trace(8, 2);
+        let cfg = tiny_fleet(2).with_router(RouterPolicy::EnergyAware);
+        let a = simulate_fleet(&trace, &cfg);
+        let b = simulate_fleet(&trace, &cfg);
+        assert_eq!(a.requests, b.requests, "identical routing + records");
+        assert_eq!(a.cluster_energy_j, b.cluster_energy_j);
+        let c = simulate_fleet(&trace, &cfg.clone().with_base_seed(99));
+        assert_ne!(a.cluster_energy_j, c.cluster_energy_j);
+    }
+
+    #[test]
+    fn same_mesh_replicas_share_one_lowerer() {
+        let trace = tiny_trace(6, 3);
+        let res = simulate_fleet(&trace, &tiny_fleet(3));
+        assert_eq!(res.shared_lowerers, 1, "one mesh topology across the fleet");
+        assert_eq!(res.cache.structure_lowerings, 1, "structures lower once per mesh");
+        // A heterogeneous fleet (different strategy on replica 1) needs two.
+        let mut cfg = tiny_fleet(2);
+        cfg.replicas[1] = ReplicaSpec::new(
+            ServeConfig::new("Vicuna-7B", Parallelism::Pipeline, 2).with_max_batch_requests(4),
+            TestbedSpec::Flat { gpus: 2 },
+        );
+        let het = simulate_fleet(&trace, &cfg);
+        assert_eq!(het.shared_lowerers, 2);
+        let rel = (het.attributed_energy_j() - het.cluster_energy_j).abs() / het.cluster_energy_j;
+        assert!(rel < 1e-9, "heterogeneous conservation: rel {rel}");
+    }
+
+    #[test]
+    fn session_affinity_pins_conversations_to_one_replica() {
+        let trace = tiny_trace(10, 4);
+        let res = simulate_fleet(&trace, &tiny_fleet(3).with_router(RouterPolicy::SessionAffinity));
+        // All replicas Up and routability never changes, so each session
+        // maps to exactly one replica.
+        let mut home: std::collections::BTreeMap<u32, usize> = std::collections::BTreeMap::new();
+        for (req, f) in trace.requests.iter().zip(res.requests.iter()) {
+            assert_eq!(req.id, f.record.id);
+            let s = req.session.expect("synth trace has sessions");
+            let prev = home.insert(s, f.replica);
+            if let Some(p) = prev {
+                assert_eq!(p, f.replica, "session {s} moved replicas");
+            }
+        }
+    }
+
+    #[test]
+    fn autoscaler_scales_and_cold_starts_cost_energy() {
+        let trace = synthesize(
+            &SynthSpec {
+                kind: ArrivalKind::Bursty,
+                requests: 12,
+                rate_rps: 6.0,
+                prompt_mean: 32.0,
+                prompt_range: (8, 64),
+                output_mean: 4.0,
+                output_range: (2, 8),
+                ..SynthSpec::default()
+            },
+            5,
+        );
+        let cfg = tiny_fleet(3).with_autoscale(AutoscaleConfig {
+            interval_s: 0.25,
+            target_inflight: 1,
+            ..AutoscaleConfig::default()
+        });
+        let res = simulate_fleet(&trace, &cfg);
+        assert!(!res.scale_events.is_empty(), "bursty load must trigger scaling");
+        let cold_starts = res
+            .scale_events
+            .iter()
+            .filter(|e| e.action == ScaleAction::Start)
+            .count();
+        assert!(cold_starts > 0);
+        assert!(res.cold_start_j > 0.0);
+        // Conservation includes the cold-start term on both sides.
+        let rel = (res.attributed_energy_j() - res.cluster_energy_j).abs() / res.cluster_energy_j;
+        assert!(rel < 1e-9, "rel {rel}");
+        // Every request still gets served or explicitly rejected.
+        assert_eq!(res.requests.len(), trace.len());
+    }
+}

@@ -1,0 +1,190 @@
+//! Front-door request router.
+//!
+//! The router picks one routable replica per arriving request from the
+//! replicas' load signals (`ReplicaView`). Every policy is a pure
+//! deterministic function of its inputs with id-ordered tie-breaks, so
+//! routing decisions — and therefore the whole fleet simulation — are
+//! bit-reproducible per seed (proptest-pinned).
+
+use crate::serve::Request;
+
+/// Routing policy of the fleet front door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Cyclic scan over routable replicas.
+    RoundRobin,
+    /// Fewest in-flight requests (queued + resident), lowest id on ties.
+    JoinShortestQueue,
+    /// Lowest observed J/token so far; replicas with no history yet score
+    /// zero, so a cold fleet degenerates to JSQ-like spreading via the
+    /// in-flight tie-break.
+    EnergyAware,
+    /// Hash the request's session id (request id when absent) onto the
+    /// replica ring, then cyclic-scan to the first routable replica —
+    /// requests of one conversation stick to one warm KV home.
+    SessionAffinity,
+}
+
+impl RouterPolicy {
+    pub const ALL: [RouterPolicy; 4] = [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::JoinShortestQueue,
+        RouterPolicy::EnergyAware,
+        RouterPolicy::SessionAffinity,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "rr",
+            RouterPolicy::JoinShortestQueue => "jsq",
+            RouterPolicy::EnergyAware => "energy",
+            RouterPolicy::SessionAffinity => "session",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" => Some(RouterPolicy::RoundRobin),
+            "jsq" | "join-shortest-queue" => Some(RouterPolicy::JoinShortestQueue),
+            "energy" | "energy-aware" => Some(RouterPolicy::EnergyAware),
+            "session" | "session-affinity" => Some(RouterPolicy::SessionAffinity),
+            _ => None,
+        }
+    }
+}
+
+/// One replica's router-visible load signals at a routing instant.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    pub id: usize,
+    /// Up or warming up — the autoscaler's drained/stopped replicas are
+    /// not routable.
+    pub routable: bool,
+    /// Requests routed here and not yet finished.
+    pub in_flight: usize,
+    /// Observed energy per generated token so far, J (0 before the first
+    /// step).
+    pub j_per_token: f64,
+}
+
+/// Pick the serving replica for `req`. `rr_next` carries the round-robin
+/// cursor between calls (ignored by the other policies). Panics if no
+/// replica is routable — the autoscaler's `min_replicas` floor guarantees
+/// one.
+pub fn route(policy: RouterPolicy, req: &Request, views: &[ReplicaView], rr_next: &mut usize) -> usize {
+    assert!(views.iter().any(|v| v.routable), "no routable replica");
+    let scan_from = |start: usize| -> usize {
+        (0..views.len())
+            .map(|k| (start + k) % views.len())
+            .find(|&i| views[i].routable)
+            .expect("checked a routable replica exists")
+    };
+    match policy {
+        RouterPolicy::RoundRobin => {
+            let i = scan_from(*rr_next % views.len());
+            *rr_next = (i + 1) % views.len();
+            i
+        }
+        RouterPolicy::JoinShortestQueue => {
+            views
+                .iter()
+                .filter(|v| v.routable)
+                .min_by_key(|v| (v.in_flight, v.id))
+                .expect("checked a routable replica exists")
+                .id
+        }
+        RouterPolicy::EnergyAware => {
+            views
+                .iter()
+                .filter(|v| v.routable)
+                .min_by(|a, b| {
+                    a.j_per_token
+                        .total_cmp(&b.j_per_token)
+                        .then_with(|| a.in_flight.cmp(&b.in_flight))
+                        .then_with(|| a.id.cmp(&b.id))
+                })
+                .expect("checked a routable replica exists")
+                .id
+        }
+        RouterPolicy::SessionAffinity => {
+            let key = req.session.unwrap_or(req.id) as usize;
+            scan_from(key % views.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u32, session: Option<u32>) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            prompt_tokens: 8,
+            output_tokens: 2,
+            session,
+        }
+    }
+
+    fn views(loads: &[(bool, usize, f64)]) -> Vec<ReplicaView> {
+        loads
+            .iter()
+            .enumerate()
+            .map(|(id, &(routable, in_flight, j_per_token))| ReplicaView {
+                id,
+                routable,
+                in_flight,
+                j_per_token,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles_over_routable_replicas() {
+        let v = views(&[(true, 0, 0.0), (false, 0, 0.0), (true, 0, 0.0)]);
+        let mut cursor = 0;
+        let picks: Vec<usize> = (0..4).map(|i| route(RouterPolicy::RoundRobin, &req(i, None), &v, &mut cursor)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "skips the non-routable replica");
+    }
+
+    #[test]
+    fn jsq_picks_least_loaded_lowest_id() {
+        let v = views(&[(true, 3, 0.0), (true, 1, 0.0), (true, 1, 0.0)]);
+        let mut cursor = 0;
+        assert_eq!(route(RouterPolicy::JoinShortestQueue, &req(0, None), &v, &mut cursor), 1);
+    }
+
+    #[test]
+    fn energy_aware_prefers_cheap_history_then_load() {
+        let v = views(&[(true, 0, 2.0), (true, 5, 1.0), (false, 0, 0.5)]);
+        let mut cursor = 0;
+        assert_eq!(route(RouterPolicy::EnergyAware, &req(0, None), &v, &mut cursor), 1);
+        // A cold fleet (no history) falls back to load, then id.
+        let cold = views(&[(true, 2, 0.0), (true, 1, 0.0)]);
+        assert_eq!(route(RouterPolicy::EnergyAware, &req(0, None), &cold, &mut cursor), 1);
+    }
+
+    #[test]
+    fn session_affinity_sticks_and_falls_back_to_id_hash() {
+        let v = views(&[(true, 0, 0.0), (true, 0, 0.0), (true, 0, 0.0)]);
+        let mut cursor = 0;
+        for id in 0..9 {
+            assert_eq!(route(RouterPolicy::SessionAffinity, &req(id, Some(4)), &v, &mut cursor), 1);
+        }
+        // Without a session id, the request id seeds the hash.
+        assert_eq!(route(RouterPolicy::SessionAffinity, &req(5, None), &v, &mut cursor), 2);
+        // A non-routable home shifts to the next replica on the ring.
+        let v2 = views(&[(true, 0, 0.0), (false, 0, 0.0), (true, 0, 0.0)]);
+        assert_eq!(route(RouterPolicy::SessionAffinity, &req(0, Some(4)), &v2, &mut cursor), 2);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in RouterPolicy::ALL {
+            assert_eq!(RouterPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RouterPolicy::parse("energy-aware"), Some(RouterPolicy::EnergyAware));
+        assert_eq!(RouterPolicy::parse("random"), None);
+    }
+}

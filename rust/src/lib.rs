@@ -24,6 +24,7 @@ pub mod cluster;
 pub mod config;
 pub mod eval;
 pub mod features;
+pub mod fleet;
 pub mod models;
 pub mod parallelism;
 pub mod plan;
@@ -37,3 +38,21 @@ pub mod telemetry;
 pub mod tree;
 pub mod util;
 pub mod workload;
+
+// ---------------------------------------------------------------------
+// Supported public surface. These re-exports are the API the examples
+// document; everything else is reachable through its module path.
+// ---------------------------------------------------------------------
+
+/// Run configuration: what executes (model, strategy, shape, seed).
+pub use config::{Parallelism, RunConfig, RunConfigBuilder, Strategy};
+/// Testbed description: where it executes (hardware + cluster topology).
+pub use config::{HwSpec, SimKnobs, TestbedSpec};
+/// Cluster building blocks for heterogeneous multi-node testbeds.
+pub use cluster::{GpuSpec, LinkTier, Topology};
+/// Fleet-scale serving: replicas, router policies, autoscaling.
+pub use fleet::{simulate_fleet, AutoscaleConfig, FleetConfig, FleetResult, ReplicaSpec, RouterPolicy};
+/// Measurement campaigns over the simulated testbed.
+pub use profiler::Campaign;
+/// Trace-driven serving: configs, sessions, traces.
+pub use serve::{ServeConfig, ServeResult, Session, SynthSpec, Trace};

@@ -57,6 +57,42 @@ pub struct Dataset {
 }
 
 impl Campaign {
+    /// Builder-style constructor: `Campaign::new()` is the default
+    /// campaign; chain `with_*` to shape it.
+    pub fn new() -> Campaign {
+        Campaign::default()
+    }
+
+    /// Replace the testbed hardware.
+    pub fn with_hw(mut self, hw: HwSpec) -> Campaign {
+        self.hw = hw;
+        self
+    }
+
+    /// Replace the simulator knobs.
+    pub fn with_knobs(mut self, knobs: SimKnobs) -> Campaign {
+        self.knobs = knobs;
+        self
+    }
+
+    /// Set the repeated passes per configuration.
+    pub fn with_passes(mut self, passes: usize) -> Campaign {
+        self.passes = passes;
+        self
+    }
+
+    /// Set the campaign base seed.
+    pub fn with_base_seed(mut self, base_seed: u64) -> Campaign {
+        self.base_seed = base_seed;
+        self
+    }
+
+    /// Set the worker-thread count (0 ⇒ available parallelism).
+    pub fn with_threads(mut self, threads: usize) -> Campaign {
+        self.threads = threads;
+        self
+    }
+
     /// Expand configs × passes and simulate them all. Every pass of one
     /// configuration executes the same cached compiled plan (lowering
     /// never sees the seed), and configurations sharing a mesh topology

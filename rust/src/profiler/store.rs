@@ -301,6 +301,47 @@ pub fn load_serve_records(path: &str) -> Result<Vec<crate::serve::RequestRecord>
         .collect()
 }
 
+/// Save routed per-request fleet records (v4 of the store lineage: the
+/// serving record plus the replica that served each request).
+pub fn save_fleet_records(records: &[crate::fleet::FleetRequest], path: &str) -> std::io::Result<()> {
+    let reqs: Vec<Json> = records
+        .iter()
+        .map(|fr| {
+            let mut fields = match serve_record_to_json(&fr.record) {
+                Json::Obj(fields) => fields,
+                _ => unreachable!("serve records serialize to objects"),
+            };
+            fields.insert("replica".into(), num(fr.replica as f64));
+            Json::Obj(fields)
+        })
+        .collect();
+    let j = obj(vec![
+        ("format", s("piep-fleet-v4")),
+        ("requests", Json::Arr(reqs)),
+    ]);
+    std::fs::write(path, j.render())
+}
+
+/// Load records saved by `save_fleet_records`.
+pub fn load_fleet_records(path: &str) -> Result<Vec<crate::fleet::FleetRequest>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let j = Json::parse(&text)?;
+    if j.get("format").and_then(Json::as_str) != Some("piep-fleet-v4") {
+        return Err("not a piep fleet file (expected piep-fleet-v4)".into());
+    }
+    j.get("requests")
+        .and_then(Json::as_arr)
+        .ok_or("requests")?
+        .iter()
+        .map(|r| {
+            Ok(crate::fleet::FleetRequest {
+                replica: getf(r, "replica")? as usize,
+                record: serve_record_from_json(r)?,
+            })
+        })
+        .collect()
+}
+
 fn ridge_to_json(r: &Ridge) -> Json {
     obj(vec![
         ("w", vecf(&r.w)),
@@ -488,6 +529,33 @@ mod tests {
         let loaded = load_serve_records(path).unwrap();
         // Schema v3 roundtrips the per-request records bit-for-bit.
         assert_eq!(res.requests, loaded);
+    }
+
+    #[test]
+    fn fleet_records_roundtrip_with_replica_attribution() {
+        use crate::config::TestbedSpec;
+        use crate::fleet::{simulate_fleet, FleetConfig, ReplicaSpec};
+        use crate::serve::{synthesize, ServeConfig, SynthSpec};
+        let trace = synthesize(
+            &SynthSpec {
+                requests: 4,
+                prompt_range: (8, 32),
+                output_range: (2, 4),
+                ..SynthSpec::default()
+            },
+            5,
+        );
+        let spec = ReplicaSpec::new(
+            ServeConfig::new("Vicuna-7B", Parallelism::Tensor, 2),
+            TestbedSpec::Flat { gpus: 2 },
+        );
+        let res = simulate_fleet(&trace, &FleetConfig::new(vec![spec; 2]));
+        let path = "target/test-store-fleet.json";
+        save_fleet_records(&res.requests, path).unwrap();
+        let loaded = load_fleet_records(path).unwrap();
+        // Schema v4 roundtrips the routed records bit-for-bit.
+        assert_eq!(res.requests, loaded);
+        assert!(load_serve_records(path).is_err(), "v4 is not a v3 file");
     }
 
     #[test]

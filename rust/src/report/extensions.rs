@@ -288,6 +288,57 @@ pub fn serving(ctx: &mut ReportCtx) -> Table {
     t
 }
 
+/// Fleet table (DESIGN.md §13): cluster J/token and tail latency as the
+/// replica count and router policy vary over one shared diurnal trace —
+/// the multi-replica analogue of the serving table, with every replica a
+/// full 2-node NVLink+IB mesh.
+pub fn fleet(ctx: &mut ReportCtx) -> Table {
+    use crate::cluster::LinkTier;
+    use crate::config::TestbedSpec;
+    use crate::eval::fleet::{run_fleet_eval, FleetOptions};
+
+    let opts = FleetOptions {
+        testbed: TestbedSpec::Cluster {
+            nodes: 2,
+            gpus_per_node: 2,
+            intra: LinkTier::NvLink,
+            inter: LinkTier::InfiniBand,
+            fleet: Vec::new(),
+        },
+        requests: (4 * ctx.campaign.passes).max(8),
+        knobs: ctx.campaign.knobs.clone(),
+        seed: ctx.campaign.base_seed,
+        threads: ctx.campaign.threads,
+        ..FleetOptions::default()
+    };
+    eprintln!(
+        "[fleet] replicas {:?} × {} policies over one {}-request trace",
+        opts.replica_counts,
+        opts.policies.len(),
+        opts.requests
+    );
+    let res = run_fleet_eval(&opts);
+    let argmin_label = res.argmin.as_ref().map(|c| c.label.clone());
+    let mut t = Table::new(
+        "Fleet — cluster J/token and latency vs replicas × router",
+        &["Replicas", "Router", "J/token", "p50 s", "p99 s", "Cluster J", "Served", "Argmin"],
+    );
+    for c in &res.cells {
+        t.row(vec![
+            c.replicas.to_string(),
+            c.policy.name().into(),
+            fnum(c.j_per_token, 3),
+            fnum(c.p50_latency_s, 2),
+            fnum(c.p99_latency_s, 2),
+            fnum(c.cluster_energy_j, 1),
+            format!("{}/{}", c.served, c.served + c.rejected),
+            if argmin_label.as_deref() == Some(c.label.as_str()) { "<-" } else { "" }.into(),
+        ]);
+    }
+    ctx.emit(&t, "ext_fleet");
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -354,6 +405,23 @@ mod tests {
             let argmins = t.rows.iter().filter(|r| r[0] == fleet && r[7] == "<-").count();
             assert_eq!(argmins, 1, "{fleet}");
             assert!(t.rows.iter().any(|r| r[0] == fleet && r[6] == "*"), "{fleet}");
+        }
+    }
+
+    #[test]
+    fn fleet_table_covers_the_replica_router_grid() {
+        let mut ctx = quick_ctx("target/test-reports");
+        let t = fleet(&mut ctx);
+        // 2 replica counts × 4 router policies, exactly one argmin marker.
+        assert_eq!(t.rows.len(), 8);
+        assert_eq!(t.rows.iter().filter(|r| r[7] == "<-").count(), 1);
+        for policy in ["rr", "jsq", "energy", "session"] {
+            assert!(t.rows.iter().any(|r| r[1] == policy), "{policy}");
+        }
+        for row in &t.rows {
+            let p50: f64 = row[3].parse().unwrap();
+            let p99: f64 = row[4].parse().unwrap();
+            assert!(p50 > 0.0 && p99 >= p50, "{}: p50 {p50} p99 {p99}", row[1]);
         }
     }
 

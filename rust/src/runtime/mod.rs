@@ -144,6 +144,18 @@ impl Runtime {
         })
     }
 
+    /// An artifact-free runtime: no AOT modules, just the native prediction
+    /// hot path with the given ABI constants. This is the constructor for
+    /// environments without `make artifacts` (CI, examples) — `execute`
+    /// reports the missing module, `predict_batch` works.
+    pub fn offline(feature_dim: usize, predict_batch: usize) -> Runtime {
+        Runtime {
+            modules: BTreeMap::new(),
+            feature_dim,
+            predict_batch,
+        }
+    }
+
     /// Backend description (mirrors the PJRT client's platform name).
     pub fn platform_name(&self) -> &'static str {
         "cpu-native (PJRT backend unavailable in this build)"

@@ -184,6 +184,7 @@ mod tests {
             arrival_s: arrival,
             prompt_tokens: prompt,
             output_tokens: output,
+            session: None,
         }
     }
 

@@ -27,9 +27,12 @@ pub use batcher::{kv_budget_bytes, kv_bytes_per_token, Batcher, BatcherCfg, Poli
 pub use lower::{bucket_tokens, StepKind, StepLowerer, StepShape};
 pub use trace::{synthesize, ArrivalKind, Request, SynthSpec, Trace};
 
+use std::collections::VecDeque;
+use std::sync::Arc;
+
 use crate::config::{HwSpec, Parallelism, SimKnobs};
 use crate::models;
-use crate::simulator::simulate_run_planned;
+use crate::simulator::{simulate_run_planned, RunRecord};
 use crate::util::stats::percentile;
 use crate::workload;
 
@@ -61,6 +64,36 @@ impl ServeConfig {
             ctx_bucket: 64,
             base_seed: 0x5EB5E,
         }
+    }
+
+    /// Chainable: set the admission policy.
+    pub fn with_policy(mut self, policy: Policy) -> ServeConfig {
+        self.policy = policy;
+        self
+    }
+
+    /// Chainable: cap resident sequences per iteration batch.
+    pub fn with_max_batch_requests(mut self, n: usize) -> ServeConfig {
+        self.max_batch_requests = n;
+        self
+    }
+
+    /// Chainable: cap reserved tokens across resident sequences.
+    pub fn with_max_batch_tokens(mut self, n: usize) -> ServeConfig {
+        self.max_batch_tokens = n;
+        self
+    }
+
+    /// Chainable: set the context bucket for step-plan reuse.
+    pub fn with_ctx_bucket(mut self, tokens: usize) -> ServeConfig {
+        self.ctx_bucket = tokens;
+        self
+    }
+
+    /// Chainable: set the deployment's base seed.
+    pub fn with_base_seed(mut self, seed: u64) -> ServeConfig {
+        self.base_seed = seed;
+        self
     }
 }
 
@@ -124,6 +157,7 @@ impl ServeResult {
 }
 
 /// In-flight request state.
+#[derive(Debug)]
 struct Active {
     req: Request,
     admit_s: f64,
@@ -134,130 +168,231 @@ struct Active {
     decode_steps: usize,
 }
 
-/// Move finished requests out of the resident batch.
-fn retire(active: &mut Vec<Active>, batcher: &mut Batcher, records: &mut Vec<RequestRecord>, clock: f64) {
-    let mut i = 0;
-    while i < active.len() {
-        if active[i].generated >= active[i].req.output_tokens {
-            let a = active.swap_remove(i);
-            batcher.release(&a.req);
-            records.push(RequestRecord {
-                id: a.req.id,
-                prompt_tokens: a.req.prompt_tokens,
-                output_tokens: a.req.output_tokens,
-                arrival_s: a.req.arrival_s,
-                admit_s: a.admit_s,
-                first_token_s: a.first_token_s,
-                finish_s: clock,
-                energy_j: a.energy_j,
-                sync_energy_j: a.sync_j,
-                decode_steps: a.decode_steps,
-                rejected: false,
-            });
-        } else {
-            i += 1;
-        }
-    }
+/// One replica's serving loop, exposed one scheduling round at a time.
+///
+/// `serve` is now a thin wrapper — enqueue the whole trace, [`Session::drain`],
+/// [`Session::finish`] — and stays bit-identical to the original closed
+/// loop. The incremental surface exists for callers that interleave many
+/// replicas (the fleet simulator): each replica advances its own serving
+/// clock independently via [`Session::advance_to`] while new requests are
+/// routed in between rounds, and same-mesh replicas can share one
+/// `Arc<StepLowerer>` so plan structures lower once per mesh topology.
+#[derive(Debug)]
+pub struct Session {
+    cfg: ServeConfig,
+    hw: HwSpec,
+    lowerer: Arc<StepLowerer>,
+    batcher: Batcher,
+    /// Routed, not yet pulled into the batcher (nondecreasing arrival).
+    arrivals: VecDeque<Request>,
+    active: Vec<Active>,
+    records: Vec<RequestRecord>,
+    steps: Vec<StepRecord>,
+    clock: f64,
+    step_idx: u64,
+    peak_kv: f64,
+    occupancy_sum: f64,
+    kv_budget: f64,
+    total_step_j: f64,
+    generated_tokens: usize,
 }
 
-/// Replay `trace` under the serving configuration. Panics if the model
-/// does not fit the deployment (same gate as the workload grids).
-pub fn serve(trace: &Trace, cfg: &ServeConfig, hw: &HwSpec, knobs: &SimKnobs) -> ServeResult {
-    let spec = models::by_name(&cfg.model).unwrap_or_else(|| panic!("unknown model {}", cfg.model));
-    assert!(
-        workload::runnable(&spec, cfg.parallelism, cfg.gpus, hw),
-        "{} does not fit {} on {} GPUs",
-        cfg.model,
-        cfg.parallelism.label(),
-        cfg.gpus
-    );
-    let kv_per_token = kv_bytes_per_token(&spec);
-    let budget = kv_budget_bytes(&spec, cfg.parallelism, cfg.gpus, hw);
-    let mut batcher = Batcher::new(
-        BatcherCfg {
-            policy: cfg.policy,
-            max_batch_requests: cfg.max_batch_requests,
-            max_batch_tokens: cfg.max_batch_tokens,
-            kv_budget_bytes: budget,
-        },
-        kv_per_token,
-    );
-    let lowerer = StepLowerer::new(&cfg.model, cfg.parallelism, cfg.gpus, hw.clone(), knobs);
-    let sim_step = |shape: &StepShape, idx: u64| {
-        let plan = lowerer.step_plan(shape);
-        let scfg = lowerer.step_config(shape, cfg.base_seed ^ (idx + 1));
-        simulate_run_planned(&scfg, hw, lowerer.knobs(), &plan)
-    };
+impl Session {
+    /// Open a session with its own step lowerer. Panics if the model does
+    /// not fit the deployment (same gate as the workload grids).
+    pub fn new(cfg: &ServeConfig, hw: &HwSpec, knobs: &SimKnobs) -> Session {
+        let lowerer = Arc::new(StepLowerer::new(&cfg.model, cfg.parallelism, cfg.gpus, hw.clone(), knobs));
+        Session::with_lowerer(cfg, hw, lowerer)
+    }
 
-    let mut active: Vec<Active> = Vec::new();
-    let mut records: Vec<RequestRecord> = Vec::new();
-    let mut steps: Vec<StepRecord> = Vec::new();
-    let mut clock = 0.0f64;
-    let mut arrived = 0usize;
-    let mut step_idx = 0u64;
-    let mut peak_kv = 0.0f64;
-    let mut occupancy_sum = 0.0f64;
-
-    loop {
-        // Pull arrivals up to the serving clock into the queue.
-        while arrived < trace.requests.len() && trace.requests[arrived].arrival_s <= clock {
-            batcher.enqueue(trace.requests[arrived].clone());
-            arrived += 1;
+    /// Open a session over a shared, pre-built step lowerer. The lowerer
+    /// must have been built for the same model / parallelism / GPU count
+    /// as `cfg` on the same `hw` (the fleet keys its lowerer map on
+    /// exactly that tuple).
+    pub fn with_lowerer(cfg: &ServeConfig, hw: &HwSpec, lowerer: Arc<StepLowerer>) -> Session {
+        let spec = models::by_name(&cfg.model).unwrap_or_else(|| panic!("unknown model {}", cfg.model));
+        assert!(
+            workload::runnable(&spec, cfg.parallelism, cfg.gpus, hw),
+            "{} does not fit {} on {} GPUs",
+            cfg.model,
+            cfg.parallelism.label(),
+            cfg.gpus
+        );
+        let kv_per_token = kv_bytes_per_token(&spec);
+        let budget = kv_budget_bytes(&spec, cfg.parallelism, cfg.gpus, hw);
+        let batcher = Batcher::new(
+            BatcherCfg {
+                policy: cfg.policy,
+                max_batch_requests: cfg.max_batch_requests,
+                max_batch_tokens: cfg.max_batch_tokens,
+                kv_budget_bytes: budget,
+            },
+            kv_per_token,
+        );
+        Session {
+            cfg: cfg.clone(),
+            hw: hw.clone(),
+            lowerer,
+            batcher,
+            arrivals: VecDeque::new(),
+            active: Vec::new(),
+            records: Vec::new(),
+            steps: Vec::new(),
+            clock: 0.0,
+            step_idx: 0,
+            peak_kv: 0.0,
+            occupancy_sum: 0.0,
+            kv_budget: budget,
+            total_step_j: 0.0,
+            generated_tokens: 0,
         }
-        if active.is_empty() && batcher.pending() == 0 {
-            if arrived >= trace.requests.len() {
-                break;
+    }
+
+    /// Hand the session a routed request. Requests must arrive in
+    /// nondecreasing `arrival_s` order (traces and routers both do).
+    pub fn enqueue(&mut self, req: Request) {
+        debug_assert!(
+            self.arrivals.back().map(|b| b.arrival_s <= req.arrival_s).unwrap_or(true),
+            "requests must be enqueued in arrival order"
+        );
+        self.arrivals.push_back(req);
+    }
+
+    /// Serving-clock time, s.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Requests routed here and not yet finished (queued + resident).
+    pub fn in_flight(&self) -> usize {
+        self.arrivals.len() + self.batcher.pending() + self.active.len()
+    }
+
+    /// Nothing queued, pending, or resident.
+    pub fn is_idle(&self) -> bool {
+        self.arrivals.is_empty() && self.batcher.pending() == 0 && self.active.is_empty()
+    }
+
+    /// Σ step energy so far, J (wall energy of every executed step).
+    pub fn energy_so_far_j(&self) -> f64 {
+        self.total_step_j
+    }
+
+    /// Observed energy per generated token so far, J — the signal the
+    /// fleet's energy-aware router balances on. Zero until the first step.
+    pub fn j_per_token_so_far(&self) -> f64 {
+        self.total_step_j / self.generated_tokens.max(1) as f64
+    }
+
+    /// The shared step lowerer (for cache-stats aggregation).
+    pub fn lowerer(&self) -> &Arc<StepLowerer> {
+        &self.lowerer
+    }
+
+    /// Jump an idle session's clock forward (cold-start readiness: a
+    /// freshly started replica cannot schedule before `t`).
+    pub fn skip_to(&mut self, t: f64) {
+        debug_assert!(self.active.is_empty() && self.batcher.pending() == 0, "skip_to on a busy session");
+        self.clock = self.clock.max(t);
+    }
+
+    fn sim_step(&self, shape: &StepShape, idx: u64) -> RunRecord {
+        let plan = self.lowerer.step_plan(shape);
+        let scfg = self.lowerer.step_config(shape, self.cfg.base_seed ^ (idx + 1));
+        simulate_run_planned(&scfg, &self.hw, self.lowerer.knobs(), &plan)
+    }
+
+    /// Move finished requests out of the resident batch.
+    fn retire(&mut self) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].generated >= self.active[i].req.output_tokens {
+                let a = self.active.swap_remove(i);
+                self.batcher.release(&a.req);
+                self.records.push(RequestRecord {
+                    id: a.req.id,
+                    prompt_tokens: a.req.prompt_tokens,
+                    output_tokens: a.req.output_tokens,
+                    arrival_s: a.req.arrival_s,
+                    admit_s: a.admit_s,
+                    first_token_s: a.first_token_s,
+                    finish_s: self.clock,
+                    energy_j: a.energy_j,
+                    sync_energy_j: a.sync_j,
+                    decode_steps: a.decode_steps,
+                    rejected: false,
+                });
+            } else {
+                i += 1;
             }
-            // Idle: jump to the next arrival.
-            clock = trace.requests[arrived].arrival_s;
-            continue;
+        }
+    }
+
+    /// One scheduling round: pull due arrivals, then either jump an idle
+    /// clock to the next arrival or run one admission + prefill + decode
+    /// boundary. Returns `false` once the session is fully drained.
+    pub fn round(&mut self) -> bool {
+        // Pull arrivals up to the serving clock into the queue.
+        while self.arrivals.front().map(|r| r.arrival_s <= self.clock).unwrap_or(false) {
+            let r = self.arrivals.pop_front().expect("checked front");
+            self.batcher.enqueue(r);
+        }
+        if self.active.is_empty() && self.batcher.pending() == 0 {
+            match self.arrivals.front() {
+                // Idle: jump to the next arrival.
+                Some(r) => {
+                    self.clock = r.arrival_s;
+                    return true;
+                }
+                None => return false,
+            }
         }
 
         // ---- Admission at the decode boundary. ----
-        let admitted = batcher.admit();
-        if active.is_empty() && admitted.is_empty() {
+        let admitted = self.batcher.admit();
+        if self.active.is_empty() && admitted.is_empty() {
             // Nothing resident and nothing admissible: the policy-first
             // pending request can never fit the budgets — drop it unserved
             // rather than livelock.
-            if let Some(r) = batcher.reject_head() {
-                records.push(RequestRecord {
+            if let Some(r) = self.batcher.reject_head() {
+                self.records.push(RequestRecord {
                     id: r.id,
                     prompt_tokens: r.prompt_tokens,
                     output_tokens: r.output_tokens,
                     arrival_s: r.arrival_s,
-                    admit_s: clock,
-                    first_token_s: clock,
-                    finish_s: clock,
+                    admit_s: self.clock,
+                    first_token_s: self.clock,
+                    finish_s: self.clock,
                     energy_j: 0.0,
                     sync_energy_j: 0.0,
                     decode_steps: 0,
                     rejected: true,
                 });
             }
-            continue;
+            return true;
         }
-        peak_kv = peak_kv.max(batcher.resident_kv_bytes());
+        self.peak_kv = self.peak_kv.max(self.batcher.resident_kv_bytes());
 
         // ---- Batched prefill over the admitted prompts. Resident decode
         // stalls for its duration (iteration-level scheduling); the step's
         // energy is attributed to the admitted requests it prefills. ----
         if !admitted.is_empty() {
-            let admit_s = clock;
+            let admit_s = self.clock;
             let total_prompt: usize = admitted.iter().map(|r| r.prompt_tokens).sum();
             let mean_prompt = total_prompt.div_ceil(admitted.len());
             let shape = StepShape {
                 kind: StepKind::Prefill,
                 batch: admitted.len(),
-                tokens: bucket_tokens(mean_prompt, cfg.ctx_bucket),
+                tokens: bucket_tokens(mean_prompt, self.cfg.ctx_bucket),
             };
-            let r = sim_step(&shape, step_idx);
-            step_idx += 1;
+            let r = self.sim_step(&shape, self.step_idx);
+            self.step_idx += 1;
             let weights: Vec<f64> = admitted.iter().map(|q| q.prompt_tokens as f64).collect();
             let shares = split_energy(r.true_total_j, &weights);
             let sync_shares = split_energy(r.sync_wait_j(), &weights);
-            steps.push(StepRecord {
+            self.steps.push(StepRecord {
                 kind: StepKind::Prefill,
-                t0_s: clock,
+                t0_s: self.clock,
                 dur_s: r.wall_s,
                 batch: admitted.len(),
                 tokens: shape.tokens,
@@ -265,80 +400,111 @@ pub fn serve(trace: &Trace, cfg: &ServeConfig, hw: &HwSpec, knobs: &SimKnobs) ->
                 sync_j: r.sync_wait_j(),
                 transfer_j: r.comm_transfer_j(),
             });
-            clock += r.wall_s;
+            self.clock += r.wall_s;
+            self.total_step_j += r.true_total_j;
+            self.generated_tokens += admitted.len();
             // Prefill yields each admitted request's first output token.
             for ((q, e), s) in admitted.into_iter().zip(shares).zip(sync_shares) {
-                active.push(Active {
+                self.active.push(Active {
                     req: q,
                     admit_s,
-                    first_token_s: clock,
+                    first_token_s: self.clock,
                     generated: 1,
                     energy_j: e,
                     sync_j: s,
                     decode_steps: 0,
                 });
             }
-            retire(&mut active, &mut batcher, &mut records, clock);
-            if active.is_empty() {
-                continue; // every admitted request wanted a single token
+            self.retire();
+            if self.active.is_empty() {
+                return true; // every admitted request wanted a single token
             }
         }
 
         // ---- One decode iteration for the resident batch. ----
-        let contexts: Vec<f64> = active.iter().map(|a| (a.req.prompt_tokens + a.generated) as f64).collect();
+        let contexts: Vec<f64> = self.active.iter().map(|a| (a.req.prompt_tokens + a.generated) as f64).collect();
         let mean_ctx = (contexts.iter().sum::<f64>() / contexts.len() as f64).ceil() as usize;
         let shape = StepShape {
             kind: StepKind::Decode,
-            batch: active.len(),
-            tokens: bucket_tokens(mean_ctx.max(1), cfg.ctx_bucket),
+            batch: self.active.len(),
+            tokens: bucket_tokens(mean_ctx.max(1), self.cfg.ctx_bucket),
         };
-        let r = sim_step(&shape, step_idx);
-        step_idx += 1;
+        let r = self.sim_step(&shape, self.step_idx);
+        self.step_idx += 1;
         // Token work per request: KV context touched + the generated token.
         let weights: Vec<f64> = contexts.iter().map(|c| c + 1.0).collect();
         let shares = split_energy(r.true_total_j, &weights);
         let sync_shares = split_energy(r.sync_wait_j(), &weights);
-        steps.push(StepRecord {
+        self.steps.push(StepRecord {
             kind: StepKind::Decode,
-            t0_s: clock,
+            t0_s: self.clock,
             dur_s: r.wall_s,
-            batch: active.len(),
+            batch: self.active.len(),
             tokens: shape.tokens,
             energy_j: r.true_total_j,
             sync_j: r.sync_wait_j(),
             transfer_j: r.comm_transfer_j(),
         });
-        clock += r.wall_s;
-        occupancy_sum += active.len() as f64;
-        for (a, (e, s)) in active.iter_mut().zip(shares.into_iter().zip(sync_shares)) {
+        self.clock += r.wall_s;
+        self.total_step_j += r.true_total_j;
+        self.generated_tokens += self.active.len();
+        self.occupancy_sum += self.active.len() as f64;
+        for (a, (e, s)) in self.active.iter_mut().zip(shares.into_iter().zip(sync_shares)) {
             a.energy_j += e;
             a.sync_j += s;
             a.generated += 1;
             a.decode_steps += 1;
         }
-        retire(&mut active, &mut batcher, &mut records, clock);
+        self.retire();
+        true
     }
 
-    records.sort_by_key(|r| r.id);
-    let total_energy_j: f64 = steps.iter().map(|s| s.energy_j).sum();
-    let decode_steps = steps.iter().filter(|s| s.kind == StepKind::Decode).count();
-    let occupancy = if decode_steps > 0 {
-        occupancy_sum / decode_steps as f64 / cfg.max_batch_requests as f64
-    } else {
-        0.0
-    };
-    let sync_j: f64 = steps.iter().map(|s| s.sync_j).sum();
-    let comm_j: f64 = steps.iter().map(|s| s.sync_j + s.transfer_j).sum();
-    ServeResult {
-        requests: records,
-        steps,
-        makespan_s: clock,
-        total_energy_j,
-        occupancy,
-        sync_share: if comm_j > 0.0 { sync_j / comm_j } else { 0.0 },
-        peak_kv_bytes: peak_kv,
-        kv_budget_bytes: budget,
+    /// Run rounds until the next step would start at or after `t` (a step
+    /// in progress finishes — the serving clock only stops at decode
+    /// boundaries) or the session drains.
+    pub fn advance_to(&mut self, t: f64) {
+        while self.clock < t && self.round() {}
     }
+
+    /// Run every remaining round.
+    pub fn drain(&mut self) {
+        while self.round() {}
+    }
+
+    /// Close the session and assemble the replica's `ServeResult`.
+    pub fn finish(mut self) -> ServeResult {
+        self.records.sort_by_key(|r| r.id);
+        let total_energy_j: f64 = self.steps.iter().map(|s| s.energy_j).sum();
+        let decode_steps = self.steps.iter().filter(|s| s.kind == StepKind::Decode).count();
+        let occupancy = if decode_steps > 0 {
+            self.occupancy_sum / decode_steps as f64 / self.cfg.max_batch_requests as f64
+        } else {
+            0.0
+        };
+        let sync_j: f64 = self.steps.iter().map(|s| s.sync_j).sum();
+        let comm_j: f64 = self.steps.iter().map(|s| s.sync_j + s.transfer_j).sum();
+        ServeResult {
+            requests: self.records,
+            steps: self.steps,
+            makespan_s: self.clock,
+            total_energy_j,
+            occupancy,
+            sync_share: if comm_j > 0.0 { sync_j / comm_j } else { 0.0 },
+            peak_kv_bytes: self.peak_kv,
+            kv_budget_bytes: self.kv_budget,
+        }
+    }
+}
+
+/// Replay `trace` under the serving configuration. Panics if the model
+/// does not fit the deployment (same gate as the workload grids).
+pub fn serve(trace: &Trace, cfg: &ServeConfig, hw: &HwSpec, knobs: &SimKnobs) -> ServeResult {
+    let mut session = Session::new(cfg, hw, knobs);
+    for r in &trace.requests {
+        session.enqueue(r.clone());
+    }
+    session.drain();
+    session.finish()
 }
 
 #[cfg(test)]
@@ -418,6 +584,7 @@ mod tests {
             arrival_s: 0.0,
             prompt_tokens: 1 << 20, // can never fit max_batch_tokens
             output_tokens: 4,
+            session: None,
         });
         let trace = Trace::new(reqs);
         let res = serve(&trace, &tiny_cfg(Parallelism::Tensor, 2), &HwSpec::default(), &SimKnobs::default());
@@ -440,6 +607,7 @@ mod tests {
                 arrival_s: 0.0,
                 prompt_tokens: prompt,
                 output_tokens: 2,
+                session: None,
             })
             .collect();
         let trace = Trace::new(reqs);

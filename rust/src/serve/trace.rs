@@ -25,6 +25,10 @@ pub struct Request {
     pub prompt_tokens: usize,
     /// Requested generation length, tokens.
     pub output_tokens: usize,
+    /// Conversation/session id, if the trace carries one. The fleet
+    /// router's session-affinity policy keys on this; `None` requests
+    /// fall back to hashing the request id.
+    pub session: Option<u32>,
 }
 
 impl Request {
@@ -103,11 +107,17 @@ impl Trace {
             if !seen_ids.insert(id) {
                 return Err(format!("trace line {}: duplicate request id {id}", i + 1));
             }
+            let session = match j.get("session").and_then(Json::as_f64) {
+                Some(x) if x >= 0.0 && x <= u32::MAX as f64 && x.fract() == 0.0 => Some(x as u32),
+                Some(_) => return Err(format!("trace line {}: session must be a u32", i + 1)),
+                None => None,
+            };
             out.push(Request {
                 id,
                 arrival_s,
                 prompt_tokens,
                 output_tokens,
+                session,
             });
         }
         if out.is_empty() {
@@ -126,16 +136,25 @@ impl Trace {
     pub fn to_jsonl(&self) -> String {
         let mut out = String::new();
         for r in &self.requests {
-            let j = obj(vec![
+            let mut fields = vec![
                 ("id", num(r.id as f64)),
                 ("arrival_s", num(r.arrival_s)),
                 ("prompt_tokens", num(r.prompt_tokens as f64)),
                 ("output_tokens", num(r.output_tokens as f64)),
-            ]);
+            ];
+            if let Some(s) = r.session {
+                fields.push(("session", num(s as f64)));
+            }
+            let j = obj(fields);
             out.push_str(&j.render());
             out.push('\n');
         }
         out
+    }
+
+    /// Write the trace as a JSONL file (`load_jsonl`'s inverse).
+    pub fn save_jsonl(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_jsonl()).map_err(|e| format!("{path}: {e}"))
     }
 }
 
@@ -197,6 +216,10 @@ pub struct SynthSpec {
     /// Diurnal: relative rate amplitude in [0, 1) and period, s.
     pub diurnal_amplitude: f64,
     pub period_s: f64,
+    /// Number of conversation sessions to spread requests over; 0 (the
+    /// default) leaves `Request::session` unset and keeps the RNG stream
+    /// bit-identical to pre-session traces.
+    pub sessions: usize,
 }
 
 impl Default for SynthSpec {
@@ -216,6 +239,7 @@ impl Default for SynthSpec {
             off_s: 8.0,
             diurnal_amplitude: 0.8,
             period_s: 60.0,
+            sessions: 0,
         }
     }
 }
@@ -253,11 +277,21 @@ pub fn synthesize(spec: &SynthSpec, seed: u64) -> Trace {
             let x = rng.lognormal_mean_cv(mean, cv).round() as usize;
             x.clamp(range.0.max(1), range.1.max(1))
         };
+        let prompt_tokens = draw_len(&mut rng, spec.prompt_mean, spec.prompt_cv, spec.prompt_range);
+        let output_tokens = draw_len(&mut rng, spec.output_mean, spec.output_cv, spec.output_range);
+        // Session draw comes last, and only when requested: traces with
+        // `sessions == 0` consume exactly the pre-session RNG stream.
+        let session = if spec.sessions > 0 {
+            Some(rng.below(spec.sessions) as u32)
+        } else {
+            None
+        };
         out.push(Request {
             id: i as u32,
             arrival_s: t,
-            prompt_tokens: draw_len(&mut rng, spec.prompt_mean, spec.prompt_cv, spec.prompt_range),
-            output_tokens: draw_len(&mut rng, spec.output_mean, spec.output_cv, spec.output_range),
+            prompt_tokens,
+            output_tokens,
+            session,
         });
     }
     Trace::new(out)
@@ -360,6 +394,37 @@ mod tests {
             let in_on = pos < spec.on_s + 1e-6 || cycle - pos < 1e-6;
             assert!(in_on, "arrival at cycle offset {pos:.6}s falls in an OFF window");
         }
+    }
+
+    #[test]
+    fn sessions_are_optional_and_rng_stream_compatible() {
+        let base = SynthSpec {
+            requests: 16,
+            ..SynthSpec::default()
+        };
+        let plain = synthesize(&base, 9);
+        assert!(plain.requests.iter().all(|r| r.session.is_none()));
+        let with = synthesize(
+            &SynthSpec {
+                sessions: 3,
+                ..base.clone()
+            },
+            9,
+        );
+        // Session draws happen after the length draws, so arrival times
+        // and lengths match the session-free trace bit-for-bit.
+        for (a, b) in plain.requests.iter().zip(&with.requests) {
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.output_tokens, b.output_tokens);
+            assert!(matches!(b.session, Some(s) if (s as usize) < 3));
+        }
+        // Session ids survive the JSONL roundtrip.
+        let back = Trace::parse_jsonl(&with.to_jsonl()).unwrap();
+        assert_eq!(with.requests, back.requests);
+        // Malformed session ids are rejected.
+        let bad = "{\"arrival_s\": 0.1, \"prompt_tokens\": 8, \"output_tokens\": 2, \"session\": 1.5}";
+        assert!(Trace::parse_jsonl(bad).unwrap_err().contains("session"));
     }
 
     #[test]

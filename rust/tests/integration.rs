@@ -615,3 +615,64 @@ fn topology_and_tuner_end_to_end() {
     assert!(c_argmin.ms_per_token <= slo);
     assert!(c_argmin.j_per_token >= argmin.j_per_token);
 }
+
+#[test]
+fn fleet_replicas_share_plan_structures_per_mesh() {
+    // The fleet's cluster-scale plan-cache win (DESIGN.md §13): replicas
+    // with equal mesh keys share one `StepLowerer`, so the whole fleet pays
+    // at most one full structure lowering per *distinct* mesh topology —
+    // never one per replica. Invariants:
+    //   1. a homogeneous 3-replica fleet lowers exactly one structure, and
+    //      every further step is a scalar rebind or shape hit;
+    //   2. adding a second mesh (same model, different testbed) adds
+    //      exactly one more lowering, however many replicas run on it;
+    //   3. per-request attribution still conserves cluster energy over the
+    //      mixed fleet.
+    use piep::cluster::{GpuSpec, LinkTier};
+    use piep::config::TestbedSpec;
+    use piep::fleet::{simulate_fleet, FleetConfig, ReplicaSpec, RouterPolicy};
+    use piep::serve::{synthesize, ServeConfig, SynthSpec};
+
+    let trace = synthesize(
+        &SynthSpec {
+            requests: 10,
+            rate_rps: 4.0,
+            prompt_mean: 48.0,
+            prompt_range: (8, 128),
+            output_mean: 4.0,
+            output_range: (2, 8),
+            sessions: 3,
+            ..SynthSpec::default()
+        },
+        31,
+    );
+    let flat = ReplicaSpec::new(
+        ServeConfig::new("Vicuna-7B", Parallelism::Tensor, 2).with_max_batch_requests(4),
+        TestbedSpec::Flat { gpus: 2 },
+    );
+    let homo = simulate_fleet(&trace, &FleetConfig::new(vec![flat.clone(); 3]));
+    assert_eq!(homo.shared_lowerers, 1, "one mesh across three replicas");
+    assert_eq!(homo.cache.structure_lowerings, 1, "structures lower once per mesh, not per replica");
+    assert!(homo.cache.rebinds + homo.cache.shape_hits > 0, "further step shapes reuse the structure");
+
+    // An H100 island is a different mesh key: exactly one extra lowering,
+    // shared by both of its replicas.
+    let island = ReplicaSpec::new(
+        ServeConfig::new("Vicuna-7B", Parallelism::Tensor, 2).with_max_batch_requests(4),
+        TestbedSpec::Cluster {
+            nodes: 1,
+            gpus_per_node: 2,
+            intra: LinkTier::NvLink,
+            inter: LinkTier::NvLink,
+            fleet: vec![GpuSpec::h100()],
+        },
+    );
+    let cfg = FleetConfig::new(vec![flat.clone(), flat, island.clone(), island])
+        .with_router(RouterPolicy::RoundRobin);
+    let mixed = simulate_fleet(&trace, &cfg);
+    assert_eq!(mixed.shared_lowerers, 2, "two distinct meshes over four replicas");
+    assert_eq!(mixed.cache.structure_lowerings, 2, "at most one full lowering per mesh topology");
+    assert_eq!(mixed.requests.len(), trace.len());
+    let rel = (mixed.attributed_energy_j() - mixed.cluster_energy_j).abs() / mixed.cluster_energy_j;
+    assert!(rel < 1e-9, "mixed-fleet conservation: rel {rel}");
+}

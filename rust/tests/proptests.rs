@@ -681,3 +681,155 @@ fn prop_tune_argmin_matches_exhaustive_sweep() {
         )
     });
 }
+
+/// Small fleet workload shared by the fleet properties below.
+fn fleet_trace_for(seed: u64) -> piep::serve::Trace {
+    use piep::serve::{synthesize, SynthSpec};
+    synthesize(
+        &SynthSpec {
+            requests: 5,
+            rate_rps: 4.0,
+            prompt_mean: 32.0,
+            prompt_range: (8, 64),
+            output_mean: 4.0,
+            output_range: (2, 8),
+            sessions: 3,
+            ..SynthSpec::default()
+        },
+        seed,
+    )
+}
+
+fn tp2_replica() -> piep::fleet::ReplicaSpec {
+    use piep::config::TestbedSpec;
+    use piep::serve::ServeConfig;
+    piep::fleet::ReplicaSpec::new(
+        ServeConfig::new("Vicuna-7B", Parallelism::Tensor, 2).with_max_batch_requests(4),
+        TestbedSpec::Flat { gpus: 2 },
+    )
+}
+
+/// A replica on a different mesh: pipeline strategy over a 1-node H100
+/// cluster testbed — forces a second structure lowering next to
+/// `tp2_replica`.
+fn h100_pp_replica() -> piep::fleet::ReplicaSpec {
+    use piep::cluster::{GpuSpec, LinkTier};
+    use piep::config::TestbedSpec;
+    use piep::serve::ServeConfig;
+    piep::fleet::ReplicaSpec::new(
+        ServeConfig::new("Vicuna-7B", Parallelism::Pipeline, 2).with_max_batch_requests(4),
+        TestbedSpec::Cluster {
+            nodes: 1,
+            gpus_per_node: 2,
+            intra: LinkTier::NvLink,
+            inter: LinkTier::InfiniBand,
+            fleet: vec![GpuSpec::h100()],
+        },
+    )
+}
+
+#[test]
+fn prop_fleet_conserves_energy_for_every_policy_and_fleet_mix() {
+    // The tentpole invariant: Σ attributed request energy + cold-start
+    // energy equals the cluster total to rel 1e-9, for every router policy
+    // on homogeneous and heterogeneous fleets, and every trace request is
+    // routed somewhere.
+    use piep::fleet::{simulate_fleet, FleetConfig, RouterPolicy};
+    forall(114, 3, |r| r.next_u64() & 0xffff, |&seed| {
+        let trace = fleet_trace_for(seed);
+        let homo = vec![tp2_replica(), tp2_replica()];
+        let hetero = vec![tp2_replica(), h100_pp_replica()];
+        for (mix, replicas) in [("homo", homo), ("hetero", hetero)] {
+            for policy in RouterPolicy::ALL {
+                let cfg = FleetConfig::new(replicas.clone())
+                    .with_router(policy)
+                    .with_base_seed(seed);
+                let res = simulate_fleet(&trace, &cfg);
+                ensure(
+                    res.requests.len() == trace.len(),
+                    format!("{mix}/{}: every request routed", policy.name()),
+                )?;
+                let attributed = res.attributed_energy_j();
+                let rel = (attributed - res.cluster_energy_j).abs() / res.cluster_energy_j.max(1e-12);
+                ensure(
+                    rel < 1e-9,
+                    format!("{mix}/{}: conservation rel {rel:e}", policy.name()),
+                )?;
+                ensure(res.makespan_s > 0.0, "fleet makespan positive")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fleet_routing_is_bit_deterministic_per_seed() {
+    // Same trace + same FleetConfig ⇒ bit-identical routed records, scale
+    // events, and cluster energy — including under the autoscaler, whose
+    // decisions are a pure function of tick time and in-flight counts.
+    use piep::fleet::{simulate_fleet, AutoscaleConfig, FleetConfig, RouterPolicy};
+    forall(115, 3, |r| r.next_u64() & 0xffff, |&seed| {
+        for policy in [RouterPolicy::JoinShortestQueue, RouterPolicy::SessionAffinity] {
+            let cfg = FleetConfig::new(vec![tp2_replica(), tp2_replica()])
+                .with_router(policy)
+                .with_autoscale(AutoscaleConfig {
+                    interval_s: 0.25,
+                    target_inflight: 1,
+                    ..AutoscaleConfig::default()
+                })
+                .with_base_seed(seed);
+            let trace = fleet_trace_for(seed);
+            let a = simulate_fleet(&trace, &cfg);
+            let b = simulate_fleet(&trace, &cfg);
+            ensure(a.requests == b.requests, "routed records bit-identical")?;
+            ensure(a.scale_events == b.scale_events, "scale events bit-identical")?;
+            ensure(a.cluster_energy_j == b.cluster_energy_j, "cluster energy bit-identical")?;
+            ensure(a.cold_start_j == b.cold_start_j, "cold-start energy bit-identical")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fleet_argmin_matches_exhaustive_eval() {
+    // The `piep fleet` grid (parallel over the pool, shared lowerers) must
+    // pick exactly the argmin a serial exhaustive evaluation of the same
+    // cells picks — same label, bit-equal J/token — per seed.
+    use piep::config::TestbedSpec;
+    use piep::eval::fleet::{fleet_grid, fleet_trace, run_fleet_eval, score_cell, FleetOptions};
+    use piep::fleet::RouterPolicy;
+    forall(118, 3, |r| r.next_u64() & 0xffff, |&seed| {
+        let opts = FleetOptions {
+            testbed: TestbedSpec::Flat { gpus: 2 },
+            replica_counts: vec![1, 2],
+            policies: vec![RouterPolicy::RoundRobin, RouterPolicy::EnergyAware],
+            requests: 5,
+            max_batch_requests: 4,
+            seed,
+            ..FleetOptions::default()
+        };
+        let res = run_fleet_eval(&opts);
+        let got = res.argmin.expect("non-empty grid");
+        let trace = fleet_trace(&opts);
+        let mut best: Option<(String, f64)> = None;
+        for (n, p) in fleet_grid(&opts) {
+            let c = score_cell(&opts, &trace, n, p);
+            let better = match &best {
+                None => true,
+                Some((bl, bj)) => c.j_per_token < *bj || (c.j_per_token == *bj && c.label < *bl),
+            };
+            if better {
+                best = Some((c.label, c.j_per_token));
+            }
+        }
+        let (want_label, want_j) = best.expect("non-empty grid");
+        ensure(
+            got.label == want_label,
+            format!("argmin {} != exhaustive {}", got.label, want_label),
+        )?;
+        ensure(
+            got.j_per_token == want_j,
+            format!("argmin score {} != exhaustive {}", got.j_per_token, want_j),
+        )
+    });
+}
