@@ -1,0 +1,99 @@
+//! Batched multi-candidate execution benchmark (criterion-style output,
+//! harness = false).
+//!
+//! Times the batched engine walk (DESIGN.md §14) against the pinned serial
+//! path at two levels:
+//!
+//!   batch/mesh/k*/{serial,batched}   one mesh, K shape-binding lanes:
+//!                                    serial = K × `simulate_run_planned`,
+//!                                    batched = one `simulate_run_batch`
+//!                                    walk resolving all K lanes
+//!   batch/tune/{serial,batched}      the full autotuner grid through
+//!                                    `run_tune` with batching off vs on
+//!                                    (threads pinned to 1 so the ratio
+//!                                    isolates the walk, not the pool)
+//!
+//! CI runs this target and uploads its output (`BENCH_batch.txt`) next to
+//! the `BENCH_sweep.json` batch_wall_s/batch_speedup columns.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use piep::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use piep::eval::tune::{run_tune, tune_grid, TuneOptions};
+use piep::plan::{ExecPlan, PlanCache};
+use piep::simulator::{simulate_run_batch, simulate_run_planned};
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut(usize)) -> f64 {
+    // Warmup.
+    f(0);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        f(i);
+    }
+    let dt = t0.elapsed();
+    let per = dt / iters as u32;
+    println!("bench:batch/{name:<30} time: {per:>12.2?}   ({iters} iters, total {dt:?})");
+    dt.as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let hw = HwSpec::default();
+    let knobs = SimKnobs {
+        sim_decode_steps: 8,
+        ..SimKnobs::default()
+    };
+
+    // One mesh, K lanes: prompt lengths and seeds vary per lane, every
+    // lane bound to the one cached Tensor-4 structure.
+    for k in [2usize, 4, 8, 16] {
+        let cache = PlanCache::new();
+        let lanes: Vec<RunConfig> = (0..k)
+            .map(|i| {
+                let mut c = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8)
+                    .with_seed(0xBA7C4 ^ (i as u64 + 1));
+                c.seq_in = 64 * (1 + i % 4);
+                c
+            })
+            .collect();
+        let plans: Vec<ExecPlan> =
+            lanes.iter().map(|c| cache.get_or_lower(c, &hw, &knobs)).collect();
+        let per_serial = bench(&format!("mesh/k{k}/serial"), 20, |_| {
+            for (c, p) in lanes.iter().zip(&plans) {
+                black_box(simulate_run_planned(c, &hw, &knobs, p));
+            }
+        });
+        let per_batched = bench(&format!("mesh/k{k}/batched"), 20, |_| {
+            black_box(simulate_run_batch(&lanes, &hw, &knobs, &plans));
+        });
+        println!(
+            "bench:batch/mesh/k{k}/speedup           {:.2}x (one walk resolving {k} lanes)",
+            per_serial / per_batched.max(1e-12)
+        );
+    }
+
+    // The full autotuner grid, scored end to end: every mesh's candidates
+    // × passes in one batched walk vs one walk per lane.
+    let opts = TuneOptions {
+        knobs: knobs.clone(),
+        passes: 2,
+        threads: 1,
+        ..TuneOptions::default()
+    };
+    let grid = tune_grid(&opts);
+    let per_serial = bench("tune/serial", 5, |_| {
+        black_box(run_tune(&TuneOptions {
+            knobs: opts.knobs.clone().with_batch_execution(false),
+            ..opts.clone()
+        }));
+    });
+    let per_batched = bench("tune/batched", 5, |_| {
+        black_box(run_tune(&opts));
+    });
+    println!(
+        "bench:batch/tune/speedup               {:.2}x over {} candidates x {} passes",
+        per_serial / per_batched.max(1e-12),
+        grid.len(),
+        opts.passes
+    );
+}

@@ -60,7 +60,7 @@ pub(crate) fn cmd_fleet(args: &Args) {
         arrival: ArrivalKind::parse(args.get_or("arrival", "diurnal")).expect("arrival (poisson|bursty|diurnal)"),
         sessions: args.get_usize("sessions", 4),
         autoscale,
-        knobs: SimKnobs::default(),
+        knobs: SimKnobs::default().with_batch_execution(!args.has("no-batch")),
         seed: args.get_u64("seed", 0xF1EE7),
         threads: args.get_usize("threads", 0),
     };
@@ -126,12 +126,14 @@ pub(crate) fn cmd_fleet(args: &Args) {
         );
         println!(
             "[fleet] best {}: Σ replica J + cold-start J == cluster J ({:.1} J over {} replicas, \
-             {} shared lowerer(s), {} structure lowering(s))",
+             {} shared lowerer(s), {} structure lowering(s), {} batched step walk(s) × {:.1} lanes)",
             best.label,
             full.cluster_energy_j,
             best.replicas,
             full.shared_lowerers,
             full.cache.structure_lowerings,
+            full.cache.batches,
+            full.cache.mean_batch_width(),
         );
         if let Some(path) = args.get("save") {
             store::save_fleet_records(&full.requests, path).expect("save fleet records");

@@ -47,7 +47,7 @@ const COMMANDS: [(&str, Driver, &str); 12] = [
     (
         "sweep",
         sweep::cmd_sweep,
-        "parallel sweep: paper grid + hybrid meshes,\nper-config MAPE + sync-wait share (--serial,\n--bench [--baseline FILE], --per-config)",
+        "parallel sweep: paper grid + hybrid meshes,\nper-config MAPE + sync-wait share (--serial,\n--bench [--baseline FILE], --per-config,\n--no-batch)",
     ),
     (
         "serve",
@@ -57,12 +57,12 @@ const COMMANDS: [(&str, Driver, &str); 12] = [
     (
         "tune",
         tune::cmd_tune,
-        "energy-aware strategy autotuner: search strategy\nx degree x batch on a testbed, emit Pareto front\n+ argmin tables (--gpus 2,4 --batches 8,16\n--slo-ms F --strategies tp,pp,tp2xpp --smoke)",
+        "energy-aware strategy autotuner: search strategy\nx degree x batch on a testbed, emit Pareto front\n+ argmin tables (--gpus 2,4 --batches 8,16\n--slo-ms F --strategies tp,pp,tp2xpp --smoke\n--no-batch)",
     ),
     (
         "fleet",
         fleet::cmd_fleet,
-        "fleet-scale serving: replicas × router policies\nover one trace, cluster J/token + p50/p99 tables\n(--replicas 1,2 --policies rr,jsq,energy,session\n--arrival diurnal --sessions N --autoscale\n--requests N --rate RPS --save FILE --smoke)",
+        "fleet-scale serving: replicas × router policies\nover one trace, cluster J/token + p50/p99 tables\n(--replicas 1,2 --policies rr,jsq,energy,session\n--arrival diurnal --sessions N --autoscale\n--requests N --rate RPS --save FILE --smoke\n--no-batch)",
     ),
     ("runtime", sim::cmd_runtime, "validate AOT artifacts, run the native hot path"),
     ("bench-sim", sim::cmd_bench_sim, "simulator throughput check"),
@@ -78,6 +78,7 @@ pub(crate) fn campaign_from(args: &Args) -> Campaign {
     c.knobs = SimKnobs {
         sim_decode_steps: args.get_usize("steps", 16),
         engine_threads: args.get_usize("engine-threads", 1),
+        batch_execution: !args.has("no-batch"),
         ..SimKnobs::default()
     };
     c.base_seed = args.get_u64("seed", c.base_seed);
@@ -122,7 +123,10 @@ fn help() {
          \x20 --model NAME --family NAME --batch N\n\
          \x20 --parallelism tp|pp|dp|<hybrid label, e.g. tp2xpp>\n\
          \x20 --seq-out N --passes N --steps N --seed N --threads N\n\
-         \x20 --engine-threads N (per-rank event-engine pool; 1 = serial) --out DIR"
+         \x20 --engine-threads N (per-rank event-engine pool; 1 = serial) --out DIR\n\
+         \x20 --no-batch (sweep, tune, fleet: disable batched multi-candidate\n\
+         \x20            execution; one engine walk per candidate, the pinned\n\
+         \x20            serial reference)"
     );
 }
 

@@ -26,6 +26,7 @@ pub(crate) fn cmd_plan(args: &Args) {
     let seq_out = args.get_usize("seq-out", 512);
     let knobs = SimKnobs {
         sim_decode_steps: args.get_usize("steps", 8),
+        batch_execution: !args.has("no-batch"),
         ..SimKnobs::default()
     };
     let hw = super::topo::parse_testbed(args, false).hw();
@@ -66,6 +67,7 @@ pub(crate) fn cmd_plan(args: &Args) {
     let batches = [4usize, 8, 16, 32];
     let seq_ins = [64usize, 128, 256, 512];
     let cache = PlanCache::new();
+    let mut grid_cfgs: Vec<RunConfig> = Vec::new();
     let mut per_strategy = Table::new(
         "Plan — two-level cache over the shape grid (per strategy)",
         &["Strategy", "Shapes", "Structure lowerings", "Scalar rebinds", "Reuse"],
@@ -78,6 +80,7 @@ pub(crate) fn cmd_plan(args: &Args) {
                 let mut cfg = RunConfig::new(&model, par, gpus, b).with_seq_out(seq_out);
                 cfg.seq_in = seq_in;
                 cache.get_or_lower(&cfg, &hw, &knobs);
+                grid_cfgs.push(cfg);
                 shapes_n += 1;
             }
         }
@@ -106,5 +109,23 @@ pub(crate) fn cmd_plan(args: &Args) {
         structures,
         shapes_cached,
         100.0 * st.reuse_rate()
+    );
+
+    // ---- batched execution over the same grid: one engine walk per mesh
+    // (DESIGN.md §14; --no-batch falls back to one walk per shape). ----
+    let t0 = std::time::Instant::now();
+    let ds = crate::profiler::Campaign::new()
+        .with_hw(hw.clone())
+        .with_knobs(knobs.clone())
+        .with_passes(1)
+        .profile(&grid_cfgs);
+    println!(
+        "[plan] batched execution of the grid in {:?}: {} batched walk(s) × {:.1} lanes mean \
+         ({} lanes total), {} serial fallbacks",
+        t0.elapsed(),
+        ds.cache.batches,
+        ds.cache.mean_batch_width(),
+        ds.cache.batched_lanes,
+        ds.cache.serial_fallbacks
     );
 }

@@ -11,7 +11,7 @@ use super::campaign_from;
 /// committed seed (the authoring container has no toolchain to measure
 /// wall-times). A null anywhere else means a corrupt or hand-edited
 /// baseline — the gate fails loudly instead of silently disarming.
-const NULLABLE_COLUMNS: [&str; 11] = [
+const NULLABLE_COLUMNS: [&str; 14] = [
     "threads",
     "configs",
     "runs",
@@ -23,14 +23,17 @@ const NULLABLE_COLUMNS: [&str; 11] = [
     "rebind_speedup",
     "structure_lowerings",
     "shape_rebinds",
+    "batch_wall_s",
+    "batch_speedup",
+    "batched_candidates",
 ];
 
 /// Schema-tolerant baseline validation: v1 baselines simply lack the
-/// lower/rebind columns added in v2 (absence is fine — the gate only
-/// compares `parallel_wall_s` on a matching workload), and unknown *extra*
-/// columns are ignored. Only two things are fatal: a schema outside the
-/// `piep-sweep-bench-*` family, and a null in a column not known to be
-/// nullable.
+/// lower/rebind columns added in v2, v1/v2 baselines lack the batched
+/// execution columns added in v3 (absence is fine — the gate skips the
+/// missing column and says so), and unknown *extra* columns are ignored.
+/// Only two things are fatal: a schema outside the `piep-sweep-bench-*`
+/// family, and a null in a column not known to be nullable.
 fn validate_baseline(path: &str, base: &Json) {
     match base.get("schema").and_then(Json::as_str) {
         Some(schema) if schema.starts_with("piep-sweep-bench-") => {}
@@ -83,10 +86,11 @@ pub(crate) fn cmd_sweep(args: &Args) {
 
     // --bench: time the serial baseline against the parallel engine on the
     // same grid, time one full lowering per config against the two-level
-    // cache's structure-sharing rebind path, and record the
+    // cache's structure-sharing rebind path, time batched-vs-serial
+    // candidate execution on the autotuner grid, and record the
     // perf-trajectory file. With --baseline FILE, compare against a
-    // previously committed baseline and fail (exit 2) on a >2× parallel
-    // wall-time regression — the CI perf gate.
+    // previously committed baseline and fail (exit 2) on a >2× wall-time
+    // regression in any armed column — the CI perf gate.
     if args.has("bench") {
         // Read the committed baseline before anything overwrites it. A
         // missing or corrupt baseline is a misconfigured gate, not a
@@ -148,9 +152,52 @@ pub(crate) fn cmd_sweep(args: &Args) {
             cstats.rebinds
         );
 
+        // Batched-vs-serial candidate execution on the autotuner grid
+        // (DESIGN.md §14): the same candidates × passes scored once on the
+        // pinned serial path (one engine walk per lane) and once with each
+        // mesh's lanes resolved in a single batched walk. Both sides run
+        // with threads: 1 so the ratio isolates the batched walk itself,
+        // not the worker pool.
+        let tune_opts = crate::eval::tune::TuneOptions {
+            hw: opts.campaign.hw.clone(),
+            knobs: opts.campaign.knobs.clone(),
+            passes: opts.campaign.passes,
+            threads: 1,
+            ..crate::eval::tune::TuneOptions::default()
+        };
+        let t4 = std::time::Instant::now();
+        let tune_serial = crate::eval::tune::run_tune(&crate::eval::tune::TuneOptions {
+            knobs: tune_opts.knobs.clone().with_batch_execution(false),
+            ..tune_opts.clone()
+        });
+        let batch_off_s = t4.elapsed().as_secs_f64();
+        let t5 = std::time::Instant::now();
+        let tune_batched = crate::eval::tune::run_tune(&crate::eval::tune::TuneOptions {
+            knobs: tune_opts.knobs.clone().with_batch_execution(true),
+            ..tune_opts.clone()
+        });
+        let batch_on_s = t5.elapsed().as_secs_f64();
+        let batch_speedup = batch_off_s / batch_on_s.max(1e-9);
+        assert_eq!(tune_serial.candidates.len(), tune_batched.candidates.len());
+        for (a, b) in tune_serial.candidates.iter().zip(&tune_batched.candidates) {
+            assert_eq!(
+                (a.key.as_str(), a.j_per_token, a.ms_per_token),
+                (b.key.as_str(), b.j_per_token, b.ms_per_token),
+                "batched/serial tuner scores must agree bit-for-bit"
+            );
+        }
+        let batched_candidates = tune_batched.cache.batched_lanes;
+        println!(
+            "sweep bench: tune grid serial {:.1}ms vs batched {:.1}ms ({batch_speedup:.2}x; \
+             {batched_candidates} lanes over {} batched walks)",
+            batch_off_s * 1e3,
+            batch_on_s * 1e3,
+            tune_batched.cache.batches
+        );
+
         let path = args.get_or("save-bench", "BENCH_sweep.json");
         let j = obj(vec![
-            ("schema", s("piep-sweep-bench-v2")),
+            ("schema", s("piep-sweep-bench-v3")),
             ("threads", num(threads as f64)),
             ("passes", num(opts.campaign.passes as f64)),
             ("sim_decode_steps", num(opts.campaign.knobs.sim_decode_steps as f64)),
@@ -164,6 +211,9 @@ pub(crate) fn cmd_sweep(args: &Args) {
             ("rebind_speedup", num(lower_s / rebind_s.max(1e-9))),
             ("structure_lowerings", num(cstats.structure_lowerings as f64)),
             ("shape_rebinds", num(cstats.rebinds as f64)),
+            ("batch_wall_s", num(batch_on_s)),
+            ("batch_speedup", num(batch_speedup)),
+            ("batched_candidates", num(batched_candidates as f64)),
             (
                 "scenarios",
                 arr(parallel
@@ -189,39 +239,57 @@ pub(crate) fn cmd_sweep(args: &Args) {
         // wall-times across different grids/passes/steps is meaningless.
         if let Some(base) = baseline.as_ref() {
             let basef = |k: &str| base.get(k).and_then(|v| v.as_f64());
-            let comparable = basef("passes") == Some(opts.campaign.passes as f64)
+            let workload_matches = basef("passes") == Some(opts.campaign.passes as f64)
                 && basef("sim_decode_steps") == Some(opts.campaign.knobs.sim_decode_steps as f64)
                 && basef("configs") == Some(total_cfgs as f64);
-            match basef("parallel_wall_s") {
-                Some(base_wall) if comparable => {
-                    let ratio = parallel_s / base_wall.max(1e-9);
-                    println!("baseline parallel wall: {base_wall:.2}s -> ratio {ratio:.2}x (gate: 2.0x)");
-                    if ratio > 2.0 {
+            // Gate columns with their per-column comparability: wall-times
+            // only compare when the baseline measured the same work. The
+            // batch column additionally requires the same tune-grid lane
+            // count (grid or pass changes would skew the ratio).
+            let gate_cols: [(&str, f64, bool); 2] = [
+                ("parallel_wall_s", parallel_s, workload_matches),
+                (
+                    "batch_wall_s",
+                    batch_on_s,
+                    workload_matches && basef("batched_candidates") == Some(batched_candidates as f64),
+                ),
+            ];
+            for (col, measured, comparable) in gate_cols {
+                match base.get(col).map(|v| v.as_f64()) {
+                    // v1/v2 baselines predate the column: skip only it, and
+                    // say so — one fresh column must not disarm the others.
+                    None => println!("baseline lacks column {col:?} (pre-v3 schema); its gate skipped"),
+                    Some(Some(base_wall)) if comparable => {
+                        let ratio = measured / base_wall.max(1e-9);
+                        println!("baseline {col}: {base_wall:.2}s -> ratio {ratio:.2}x (gate: 2.0x)");
+                        if ratio > 2.0 {
+                            eprintln!(
+                                "sweep regression in {col}: {measured:.2}s exceeds 2x baseline {base_wall:.2}s"
+                            );
+                            std::process::exit(2);
+                        }
+                    }
+                    Some(Some(_)) => println!(
+                        "baseline workload differs (passes/steps/configs/lanes); {col} gate skipped"
+                    ),
+                    // A baseline without a measurement disarms that column's
+                    // gate. That is only legitimate for the committed seed
+                    // on a fresh cache (CI passes --allow-null-baseline for
+                    // exactly that case); a *restored* null baseline means
+                    // the gate is misconfigured — fail loudly, naming the
+                    // column, instead of silently skipping.
+                    Some(None) if args.has("allow-null-baseline") => {
+                        println!("baseline {col} has no wall-time yet; its gate dormant (first run)")
+                    }
+                    Some(None) => {
                         eprintln!(
-                            "sweep regression: parallel wall {parallel_s:.2}s exceeds 2x baseline {base_wall:.2}s"
+                            "sweep --baseline: column {col:?} is null, so its >2x regression \
+                             gate cannot arm. If this is the first run on a fresh cache (the \
+                             committed seed), pass --allow-null-baseline; otherwise regenerate \
+                             the baseline with `piep sweep --bench --save-bench BENCH_sweep.json`."
                         );
                         std::process::exit(2);
                     }
-                }
-                Some(_) => println!(
-                    "baseline workload differs (passes/steps/configs); regression gate skipped"
-                ),
-                // A baseline without measurements disarms the gate. That is
-                // only legitimate for the committed seed on a fresh cache
-                // (CI passes --allow-null-baseline for exactly that case);
-                // a *restored* null baseline means the gate is
-                // misconfigured — fail loudly instead of silently skipping.
-                None if args.has("allow-null-baseline") => {
-                    println!("baseline has no wall-times yet; regression gate dormant (first run)")
-                }
-                None => {
-                    eprintln!(
-                        "sweep --baseline: baseline has null wall-times, so the >2x regression \
-                         gate cannot arm. If this is the first run on a fresh cache (the \
-                         committed seed), pass --allow-null-baseline; otherwise regenerate the \
-                         baseline with `piep sweep --bench --save-bench BENCH_sweep.json`."
-                    );
-                    std::process::exit(2);
                 }
             }
         }

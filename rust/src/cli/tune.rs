@@ -49,6 +49,7 @@ pub(crate) fn cmd_tune(args: &Args) {
         hw,
         knobs: SimKnobs {
             sim_decode_steps: args.get_usize("steps", if smoke { 4 } else { 8 }),
+            batch_execution: !args.has("no-batch"),
             ..SimKnobs::default()
         },
         model,
@@ -120,12 +121,16 @@ pub(crate) fn cmd_tune(args: &Args) {
     print!("{}", argmin.render());
     println!(
         "[tune] {} candidates ({} on the Pareto front) in {wall:?}; \
-         plan cache: {} lowerings, {} rebinds, {} shape hits",
+         plan cache: {} lowerings, {} rebinds, {} shape hits; \
+         batched execution: {} batches × {:.1} lanes mean, {} serial fallbacks",
         res.candidates.len(),
         res.pareto.len(),
         res.cache.structure_lowerings,
         res.cache.rebinds,
-        res.cache.shape_hits
+        res.cache.shape_hits,
+        res.cache.batches,
+        res.cache.mean_batch_width(),
+        res.cache.serial_fallbacks
     );
 
     let out = args.get_or("out", "reports");

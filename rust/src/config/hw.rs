@@ -354,6 +354,14 @@ pub struct SimKnobs {
     /// (property-tested); the reference mode exists to pin that contract
     /// and for debugging the compiled layer.
     pub reference_engine: bool,
+    /// Resolve all shape candidates of one mesh structure in a single
+    /// engine walk (`simulator::engine::execute_batch`, DESIGN.md §14)
+    /// wherever a caller holds several at once (sweep campaigns, tune
+    /// grids, fleet replica steps). Pure wall-time optimization — every
+    /// candidate's draws stay bit-identical to the serial path
+    /// (property-tested); off ⇒ each candidate runs its own walk (the
+    /// pinned reference, also the `--no-batch` escape hatch).
+    pub batch_execution: bool,
 }
 
 impl Default for SimKnobs {
@@ -379,6 +387,7 @@ impl Default for SimKnobs {
             sim_decode_steps: 24,
             engine_threads: 1,
             reference_engine: false,
+            batch_execution: true,
         }
     }
 }
@@ -394,6 +403,12 @@ impl SimKnobs {
     /// Set the per-rank event-engine worker threads (1 = serial).
     pub fn with_engine_threads(mut self, threads: usize) -> SimKnobs {
         self.engine_threads = threads;
+        self
+    }
+
+    /// Enable/disable batched multi-candidate execution (`--no-batch`).
+    pub fn with_batch_execution(mut self, on: bool) -> SimKnobs {
+        self.batch_execution = on;
         self
     }
 }

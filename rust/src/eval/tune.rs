@@ -17,10 +17,15 @@
 //! is deterministic per seed and bit-identical across thread counts — the
 //! proptests pin its argmin to an exhaustive serial sweep.
 
+use std::collections::BTreeMap;
+
 use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
 use crate::models;
-use crate::plan::{CacheStats, PlanCache};
-use crate::simulator::{simulate_run_planned, simulate_run_reference};
+use crate::parallelism;
+use crate::plan::{CacheStats, ExecPlan, PlanCache};
+use crate::simulator::{
+    simulate_run_batch, simulate_run_planned, simulate_run_reference, RunRecord,
+};
 use crate::util::par;
 use crate::util::stats;
 use crate::workload;
@@ -133,19 +138,54 @@ pub fn tune_grid(opts: &TuneOptions) -> Vec<RunConfig> {
 
 /// Score one candidate: seeded repeated passes over the cached plan.
 fn score(cfg: &RunConfig, opts: &TuneOptions, cache: &PlanCache) -> TuneCandidate {
-    let mut jt = Vec::with_capacity(opts.passes);
-    let mut jr = Vec::with_capacity(opts.passes);
-    let mut ms = Vec::with_capacity(opts.passes);
-    let mut wall = Vec::with_capacity(opts.passes);
+    let records: Vec<RunRecord> = (0..opts.passes.max(1))
+        .map(|pass| {
+            let seeded = cfg.clone().with_seed(opts.base_seed ^ (pass as u64 + 1));
+            cache.note_serial_fallback();
+            if opts.knobs.reference_engine {
+                simulate_run_reference(&seeded, &opts.hw, &opts.knobs)
+            } else {
+                let plan = cache.get_or_lower(&seeded, &opts.hw, &opts.knobs);
+                simulate_run_planned(&seeded, &opts.hw, &opts.knobs, &plan)
+            }
+        })
+        .collect();
+    candidate_from_records(cfg, opts, &records)
+}
+
+/// Score every candidate of one mesh topology in a single batched engine
+/// walk (DESIGN.md §14): lanes = candidates × seeded passes, all bound to
+/// the one cached `PlanStructure`. Each lane's records are bit-identical
+/// to `score`'s serial passes, so the per-candidate aggregation matches
+/// exactly.
+fn score_mesh_batch(cfgs: &[&RunConfig], opts: &TuneOptions, cache: &PlanCache) -> Vec<TuneCandidate> {
+    let passes = opts.passes.max(1);
+    let mut lanes = Vec::with_capacity(cfgs.len() * passes);
+    for cfg in cfgs {
+        for pass in 0..passes {
+            lanes.push((*cfg).clone().with_seed(opts.base_seed ^ (pass as u64 + 1)));
+        }
+    }
+    let plans: Vec<ExecPlan> = lanes
+        .iter()
+        .map(|cfg| cache.get_or_lower(cfg, &opts.hw, &opts.knobs))
+        .collect();
+    cache.note_batch(lanes.len());
+    let records = simulate_run_batch(&lanes, &opts.hw, &opts.knobs, &plans);
+    cfgs.iter()
+        .zip(records.chunks(passes))
+        .map(|(cfg, recs)| candidate_from_records(cfg, opts, recs))
+        .collect()
+}
+
+/// Aggregate one candidate's seeded pass records into its score row.
+fn candidate_from_records(cfg: &RunConfig, opts: &TuneOptions, records: &[RunRecord]) -> TuneCandidate {
+    let mut jt = Vec::with_capacity(records.len());
+    let mut jr = Vec::with_capacity(records.len());
+    let mut ms = Vec::with_capacity(records.len());
+    let mut wall = Vec::with_capacity(records.len());
     let (mut sync_j, mut comm_j) = (0.0f64, 0.0f64);
-    for pass in 0..opts.passes.max(1) {
-        let seeded = cfg.clone().with_seed(opts.base_seed ^ (pass as u64 + 1));
-        let r = if opts.knobs.reference_engine {
-            simulate_run_reference(&seeded, &opts.hw, &opts.knobs)
-        } else {
-            let plan = cache.get_or_lower(&seeded, &opts.hw, &opts.knobs);
-            simulate_run_planned(&seeded, &opts.hw, &opts.knobs, &plan)
-        };
+    for r in records {
         jt.push(r.energy_per_token_j());
         jr.push(r.true_total_j / cfg.batch.max(1) as f64);
         ms.push(r.time_per_token_s() * 1e3);
@@ -184,11 +224,32 @@ fn pareto_front(sorted: &[TuneCandidate]) -> Vec<TuneCandidate> {
 }
 
 /// Run the tuner over the full grid (parallel over the `util::par` pool;
-/// deterministic — the pool only reorders wall-clock, not results).
+/// deterministic — the pool only reorders wall-clock, not results). With
+/// `SimKnobs::batch_execution` (the default) the grid groups by mesh
+/// topology and each mesh's candidates × passes resolve in one batched
+/// engine walk, parallel across meshes; scores are bit-identical either
+/// way.
 pub fn run_tune(opts: &TuneOptions) -> TuneResult {
     let grid = tune_grid(opts);
     let cache = PlanCache::new();
-    let mut candidates = par::par_map(&grid, opts.threads, |cfg| score(cfg, opts, &cache));
+    let batched = opts.knobs.batch_execution && !opts.knobs.reference_engine;
+    let mut candidates = if batched {
+        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (i, cfg) in grid.iter().enumerate() {
+            groups
+                .entry(parallelism::structure_key(&opts.knobs, cfg))
+                .or_default()
+                .push(i);
+        }
+        let groups: Vec<Vec<usize>> = groups.into_values().collect();
+        let per_group = par::par_map(&groups, opts.threads, |idxs| {
+            let cfgs: Vec<&RunConfig> = idxs.iter().map(|&i| &grid[i]).collect();
+            score_mesh_batch(&cfgs, opts, &cache)
+        });
+        per_group.into_iter().flatten().collect()
+    } else {
+        par::par_map(&grid, opts.threads, |cfg| score(cfg, opts, &cache))
+    };
     candidates.sort_by(|a, b| {
         a.j_per_token
             .total_cmp(&b.j_per_token)
@@ -300,6 +361,35 @@ mod tests {
         assert!(argmin.ms_per_token <= slo);
         // Constraining can only cost energy at the argmin.
         assert!(argmin.j_per_token >= unconstrained.argmin_j_token.unwrap().j_per_token);
+    }
+
+    #[test]
+    fn batched_tuner_matches_serial_tuner_and_batches_once_per_mesh() {
+        let opts = tiny_opts();
+        let on = run_tune(&opts);
+        let off = run_tune(&TuneOptions {
+            knobs: opts.knobs.clone().with_batch_execution(false),
+            ..opts.clone()
+        });
+        assert_eq!(on.candidates.len(), off.candidates.len());
+        for (a, b) in on.candidates.iter().zip(&off.candidates) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.j_per_token, b.j_per_token);
+            assert_eq!(a.j_per_request, b.j_per_request);
+            assert_eq!(a.ms_per_token, b.ms_per_token);
+            assert_eq!(a.wall_s, b.wall_s);
+            assert_eq!(a.sync_share, b.sync_share);
+        }
+        let grid = tune_grid(&opts);
+        let meshes: std::collections::BTreeSet<String> = grid
+            .iter()
+            .map(|c| parallelism::structure_key(&opts.knobs, c))
+            .collect();
+        assert_eq!(on.cache.batches, meshes.len(), "exactly one batch per mesh");
+        assert_eq!(on.cache.batched_lanes, grid.len() * opts.passes);
+        assert_eq!(on.cache.serial_fallbacks, 0);
+        assert_eq!(off.cache.batches, 0);
+        assert_eq!(off.cache.serial_fallbacks, grid.len() * opts.passes);
     }
 
     #[test]

@@ -36,7 +36,9 @@ use std::sync::Arc;
 
 use crate::config::{SimKnobs, TestbedSpec};
 use crate::plan::CacheStats;
-use crate::serve::{RequestRecord, ServeConfig, ServeResult, Session, StepLowerer, Trace};
+use crate::serve::{
+    prefetch_shared_steps, RequestRecord, ServeConfig, ServeResult, Session, StepLowerer, Trace,
+};
 use crate::util::stats::percentile;
 
 /// One replica of the fleet: its serving configuration and the testbed
@@ -188,6 +190,33 @@ impl FleetResult {
     }
 }
 
+/// Advance every replica to `t`. With `batch_execution` on, each round of
+/// the lockstep loop first speculatively executes the replicas' predicted
+/// next steps, batching the ones that coincide on (mesh, shape) into one
+/// engine walk (`serve::prefetch_shared_steps`, DESIGN.md §14) — replicas
+/// evolve independently between routing instants, so the interleaving is
+/// record-for-record identical to advancing them one by one.
+fn advance_replicas(sessions: &mut [Session], t: f64, batched: bool) {
+    if !batched {
+        for s in sessions.iter_mut() {
+            s.advance_to(t);
+        }
+        return;
+    }
+    loop {
+        prefetch_shared_steps(sessions, t);
+        let mut progressed = false;
+        for s in sessions.iter_mut() {
+            if s.clock() < t && s.round() {
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+}
+
 /// Replay `trace` through the cluster. Bit-deterministic per
 /// (`trace`, `cfg`); panics if the fleet is empty or a replica's model
 /// does not fit its testbed.
@@ -228,6 +257,7 @@ pub fn simulate_fleet(trace: &Trace, cfg: &FleetConfig) -> FleetResult {
     };
     let mut routed_counts = vec![0usize; sessions.len()];
     let mut rr_next = 0usize;
+    let batched = cfg.knobs.batch_execution;
 
     for req in &trace.requests {
         let t = req.arrival_s;
@@ -235,9 +265,7 @@ pub fn simulate_fleet(trace: &Trace, cfg: &FleetConfig) -> FleetResult {
         if let Some(sc) = scaler.as_mut() {
             while sc.next_tick_s() <= t {
                 let tick = sc.next_tick_s();
-                for s in sessions.iter_mut() {
-                    s.advance_to(tick);
-                }
+                advance_replicas(&mut sessions, tick, batched);
                 let in_flight: Vec<usize> = sessions.iter().map(Session::in_flight).collect();
                 for (i, ready_at_s) in sc.tick(&in_flight, &mut states) {
                     // A cold-started replica cannot schedule before it is
@@ -248,9 +276,7 @@ pub fn simulate_fleet(trace: &Trace, cfg: &FleetConfig) -> FleetResult {
         }
         // Bring every replica's clock to the routing instant (steps in
         // progress finish; queues admit at their decode boundaries).
-        for s in sessions.iter_mut() {
-            s.advance_to(t);
-        }
+        advance_replicas(&mut sessions, t, batched);
         let views: Vec<ReplicaView> = sessions
             .iter()
             .enumerate()
@@ -265,9 +291,7 @@ pub fn simulate_fleet(trace: &Trace, cfg: &FleetConfig) -> FleetResult {
         sessions[target].enqueue(req.clone());
         routed_counts[target] += 1;
     }
-    for s in sessions.iter_mut() {
-        s.drain();
-    }
+    advance_replicas(&mut sessions, f64::INFINITY, batched);
 
     let mut cache = CacheStats::default();
     for lw in lowerers.values() {
@@ -275,6 +299,9 @@ pub fn simulate_fleet(trace: &Trace, cfg: &FleetConfig) -> FleetResult {
         cache.structure_lowerings += c.structure_lowerings;
         cache.rebinds += c.rebinds;
         cache.shape_hits += c.shape_hits;
+        cache.batches += c.batches;
+        cache.batched_lanes += c.batched_lanes;
+        cache.serial_fallbacks += c.serial_fallbacks;
     }
     let shared_lowerers = lowerers.len();
 
@@ -394,6 +421,40 @@ mod tests {
         assert_eq!(het.shared_lowerers, 2);
         let rel = (het.attributed_energy_j() - het.cluster_energy_j).abs() / het.cluster_energy_j;
         assert!(rel < 1e-9, "heterogeneous conservation: rel {rel}");
+    }
+
+    #[test]
+    fn batched_fleet_matches_serial_fleet_and_batches_coinciding_steps() {
+        use crate::serve::Request;
+        // Two identical requests routed to two identical replicas decode
+        // in lockstep: every decode round coincides on (mesh, shape) and
+        // resolves as one two-lane batched walk.
+        let reqs: Vec<Request> = (0..2)
+            .map(|id| Request {
+                id,
+                arrival_s: 0.0,
+                prompt_tokens: 32,
+                output_tokens: 4,
+                session: None,
+            })
+            .collect();
+        let trace = Trace::new(reqs);
+        let cfg = tiny_fleet(2).with_router(RouterPolicy::RoundRobin);
+        let on = simulate_fleet(&trace, &cfg);
+        let off = simulate_fleet(
+            &trace,
+            &cfg.clone().with_knobs(SimKnobs::default().with_batch_execution(false)),
+        );
+        assert_eq!(on.requests, off.requests, "bit-identical with batching off");
+        assert_eq!(on.cluster_energy_j, off.cluster_energy_j);
+        assert_eq!(on.makespan_s, off.makespan_s);
+        // output_tokens = 4 ⇒ 3 decode iterations per replica; the first
+        // rides the admission round (unpredictable), the remaining two
+        // coincide and batch.
+        assert_eq!(on.cache.batches, 2, "one batched walk per coinciding decode round");
+        assert_eq!(on.cache.batched_lanes, 4);
+        assert_eq!(off.cache.batches, 0);
+        assert!(off.cache.serial_fallbacks > on.cache.serial_fallbacks);
     }
 
     #[test]

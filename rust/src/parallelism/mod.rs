@@ -31,7 +31,7 @@ use std::sync::Arc;
 
 use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs, Strategy};
 use crate::models::ModelSpec;
-use crate::plan::exec::{ExecPlan, PlanStructure, ShapeBinding, StructureBuilder};
+use crate::plan::exec::{ExecBatch, ExecPlan, PlanStructure, ShapeBinding, StructureBuilder};
 use crate::plan::{Plan, PlanSink};
 use crate::simulator::engine;
 use crate::simulator::power::PowerModel;
@@ -218,6 +218,49 @@ pub fn execute_compiled(
         rng,
     );
     engine::execute_compiled(plan, power, &skew, sync_jitter, rng, threads)
+}
+
+/// Execute K shape-bindings of one mesh structure in a single engine walk
+/// (`engine::execute_batch`, DESIGN.md §14). `conditions` carries each
+/// lane's already-drawn run-level state — the power model and the seeded
+/// RNG positioned exactly where the serial path's would be when execution
+/// starts. The run-level stochastics (skew state, launch-desync scale) are
+/// sampled here per lane from that lane's own stream, so every lane's
+/// draw sequence — and therefore its `BuiltRun` — is bit-identical to a
+/// serial `execute_compiled` of that lane alone (property-tested). The
+/// per-lane `(PowerModel, Rng)` are handed back for the record-finishing
+/// continuation draws.
+pub fn execute_batch(
+    batch: &ExecBatch,
+    spec: &ModelSpec,
+    knobs: &SimKnobs,
+    conditions: Vec<(PowerModel, Rng)>,
+    threads: usize,
+) -> Vec<(BuiltRun, PowerModel, Rng)> {
+    let mut lanes: Vec<engine::BatchLane> = conditions
+        .into_iter()
+        .map(|(power, mut rng)| {
+            let (skew, sync_jitter) = run_stochastics(
+                batch.structure.num_ranks,
+                batch.structure.draws_sync_jitter,
+                spec,
+                knobs,
+                &power,
+                &mut rng,
+            );
+            engine::BatchLane {
+                power,
+                skew,
+                sync_jitter,
+                rng,
+            }
+        })
+        .collect();
+    let runs = engine::execute_batch(batch, &mut lanes, threads);
+    runs.into_iter()
+        .zip(lanes)
+        .map(|(run, lane)| (run, lane.power, lane.rng))
+        .collect()
 }
 
 /// Lower + execute in one call (single-run paths and planner tests; the

@@ -44,6 +44,16 @@ pub struct CacheStats {
     /// Shape-level hits — the ready `ExecPlan` was reused as-is (repeated
     /// passes of one configuration).
     pub shape_hits: usize,
+    /// Batched engine walks executed (`engine::execute_batch` calls that
+    /// resolved ≥1 candidate lane in one pass, DESIGN.md §14).
+    pub batches: usize,
+    /// Candidate lanes resolved across all batched walks — `batched_lanes
+    /// / batches` is the mean batch width.
+    pub batched_lanes: usize,
+    /// Plan executions performed one-at-a-time on a batch-capable path
+    /// (batching disabled via `SimKnobs::batch_execution`, or the
+    /// reference engine selected).
+    pub serial_fallbacks: usize,
 }
 
 impl CacheStats {
@@ -60,6 +70,14 @@ impl CacheStats {
             return 0.0;
         }
         (self.rebinds + self.shape_hits) as f64 / total as f64
+    }
+
+    /// Mean candidate lanes per batched walk (0 when nothing batched).
+    pub fn mean_batch_width(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batched_lanes as f64 / self.batches as f64
     }
 }
 
@@ -120,6 +138,18 @@ impl PlanCache {
     /// module docs for the racing caveat).
     pub fn stats(&self) -> CacheStats {
         *self.stats.lock().unwrap()
+    }
+
+    /// Record one batched engine walk resolving `lanes` candidates.
+    pub fn note_batch(&self, lanes: usize) {
+        let mut st = self.stats.lock().unwrap();
+        st.batches += 1;
+        st.batched_lanes += lanes;
+    }
+
+    /// Record one plan executed serially where a batch was possible.
+    pub fn note_serial_fallback(&self) {
+        self.stats.lock().unwrap().serial_fallbacks += 1;
     }
 
     /// (cached mesh structures, cached shape plans).

@@ -176,6 +176,60 @@ impl ExecPlan {
     }
 }
 
+/// K shape-bindings of one mesh structure, laid out for a single engine
+/// walk (DESIGN.md §14). The member plans' scalar columns are interleaved
+/// op-major, lane-minor — `dur_s[i * width + k]` is op `i` of lane `k` —
+/// so the batched resolve touches one contiguous stripe per op instead of
+/// K scattered scalar tables. The lanes keep their original `ExecPlan`s
+/// (Arc bumps) for per-lane phase materialization and metadata.
+#[derive(Debug, Clone)]
+pub struct ExecBatch {
+    pub structure: Arc<PlanStructure>,
+    /// Interleaved per-op durations, `len = ops × width`.
+    pub dur_s: Vec<f64>,
+    /// Interleaved per-op auxiliary scalars, `len = ops × width`.
+    pub aux: Vec<f64>,
+    /// Member plans in lane order; every lane shares `structure`.
+    pub lanes: Vec<ExecPlan>,
+}
+
+impl ExecBatch {
+    /// Assemble a batch from plans bound to one shared structure. Panics
+    /// on an empty batch or a lane whose structure is not the same `Arc`
+    /// as the first lane's (the `PlanCache` guarantees sharing for equal
+    /// `parallelism::structure_key`s).
+    pub fn new(lanes: Vec<ExecPlan>) -> ExecBatch {
+        assert!(!lanes.is_empty(), "empty execution batch");
+        let structure = Arc::clone(&lanes[0].structure);
+        let n = structure.len();
+        let k = lanes.len();
+        let mut dur_s = vec![0.0f64; n * k];
+        let mut aux = vec![0.0f64; n * k];
+        for (lane, ep) in lanes.iter().enumerate() {
+            assert!(
+                Arc::ptr_eq(&ep.structure, &structure),
+                "lane {lane} is bound to a different mesh structure"
+            );
+            for i in 0..n {
+                dur_s[i * k + lane] = ep.scalars.dur_s[i];
+                aux[i * k + lane] = ep.scalars.aux[i];
+            }
+        }
+        ExecBatch {
+            structure,
+            dur_s,
+            aux,
+            lanes,
+        }
+    }
+
+    /// Number of candidate lanes resolved per walk.
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.lanes.len()
+    }
+}
+
 /// Compile an interpreted reference `Plan` into SoA form. Hot paths lower
 /// straight into the arrays via `parallelism::compile`; this conversion
 /// serves tests and diagnostics that already hold a `Plan`.
@@ -594,6 +648,40 @@ mod tests {
         let mut r = ShapeBinding::new(Arc::clone(&base.structure));
         r.compute(0..4, timing(2e-3), ModuleKind::Mlp, 0, 0);
         let _ = r.finish(2, 0.0, true);
+    }
+
+    #[test]
+    fn exec_batch_interleaves_lane_columns() {
+        let base = compile(&sample_plan());
+        let mut r = ShapeBinding::new(Arc::clone(&base.structure));
+        r.compute(0..4, timing(2e-3), ModuleKind::Mlp, 0, 0);
+        r.collective(0..4, ModuleKind::AllReduce, 0, 0, 5e-4, true, WaitRecord::All);
+        let e = r.send(0..2, 1, 1, 9e-4);
+        r.recv(2..4, 1, 1, e);
+        r.compute(2..4, timing(4e-3), ModuleKind::LogitsHead, 2, 1);
+        let rebound = r.finish(2, 128.0, true);
+        let batch = ExecBatch::new(vec![base.clone(), rebound]);
+        assert_eq!(batch.width(), 2);
+        assert!(Arc::ptr_eq(&batch.structure, &base.structure));
+        // Op-major, lane-minor: op 0 carries both lanes' durations first.
+        assert_eq!(batch.dur_s[0], 1e-3);
+        assert_eq!(batch.dur_s[1], 2e-3);
+        assert_eq!(batch.dur_s[2], 1e-4);
+        assert_eq!(batch.dur_s[3], 5e-4);
+        assert_eq!(batch.dur_s.len(), base.len() * 2);
+        assert_eq!(batch.aux.len(), base.len() * 2);
+        // A width-1 batch is just the plan's own columns.
+        let solo = ExecBatch::new(vec![base.clone()]);
+        assert_eq!(solo.dur_s, base.scalars.dur_s);
+        assert_eq!(solo.aux, base.scalars.aux);
+    }
+
+    #[test]
+    #[should_panic(expected = "different mesh structure")]
+    fn exec_batch_rejects_foreign_structures() {
+        let a = compile(&sample_plan());
+        let b = compile(&sample_plan()); // equal layout, different Arc
+        let _ = ExecBatch::new(vec![a, b]);
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::simulator::perf::ModuleTiming;
 use crate::simulator::timeline::ModuleKind;
 
 pub use cache::{CacheStats, PlanCache};
-pub use exec::{ExecPlan, PlanStructure, ShapeBinding, ShapeScalars, StructureBuilder};
+pub use exec::{ExecBatch, ExecPlan, PlanStructure, ShapeBinding, ShapeScalars, StructureBuilder};
 
 /// How a collective rendezvous records per-rank waiting durations into
 /// the run's synchronization samples (the raw material of the paper's

@@ -15,10 +15,15 @@
 
 pub mod store;
 
+use std::collections::BTreeMap;
+
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::features::SyncDb;
-use crate::plan::{CacheStats, PlanCache};
-use crate::simulator::{simulate_run_planned, simulate_run_reference, RunRecord};
+use crate::parallelism;
+use crate::plan::{CacheStats, ExecPlan, PlanCache};
+use crate::simulator::{
+    simulate_run_batch, simulate_run_planned, simulate_run_reference, RunRecord,
+};
 use crate::util::par;
 
 /// A profiling campaign description.
@@ -97,6 +102,9 @@ impl Campaign {
     /// configuration executes the same cached compiled plan (lowering
     /// never sees the seed), and configurations sharing a mesh topology
     /// share one structure lowering (`plan::PlanCache`). With
+    /// `SimKnobs::batch_execution` (the default) all candidates of one
+    /// mesh resolve in a single batched engine walk (DESIGN.md §14);
+    /// records are bit-identical either way. With
     /// `SimKnobs::reference_engine` set, every run instead lowers and
     /// executes on the interpreted reference path (bit-identical).
     pub fn profile(&self, configs: &[RunConfig]) -> Dataset {
@@ -108,14 +116,50 @@ impl Campaign {
         }
 
         let cache = PlanCache::new();
-        let runs = par::par_map(&jobs, self.threads, |cfg| {
-            if self.knobs.reference_engine {
-                simulate_run_reference(cfg, &self.hw, &self.knobs)
-            } else {
-                let plan = cache.get_or_lower(cfg, &self.hw, &self.knobs);
-                simulate_run_planned(cfg, &self.hw, &self.knobs, &plan)
+        let runs = if self.knobs.batch_execution && !self.knobs.reference_engine {
+            // Group jobs by mesh identity and resolve each group — all
+            // shape candidates × passes of one structure — in a single
+            // batched engine walk; fan the groups out over the pool. Each
+            // lane's seed stream is its own, so the scatter-back below
+            // reproduces the serial per-job records bit for bit.
+            let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+            for (i, cfg) in jobs.iter().enumerate() {
+                groups
+                    .entry(parallelism::structure_key(&self.knobs, cfg))
+                    .or_default()
+                    .push(i);
             }
-        });
+            let groups: Vec<Vec<usize>> = groups.into_values().collect();
+            let per_group = par::par_map(&groups, self.threads, |idxs| {
+                let cfgs: Vec<RunConfig> = idxs.iter().map(|&i| jobs[i].clone()).collect();
+                let plans: Vec<ExecPlan> = cfgs
+                    .iter()
+                    .map(|cfg| cache.get_or_lower(cfg, &self.hw, &self.knobs))
+                    .collect();
+                cache.note_batch(cfgs.len());
+                simulate_run_batch(&cfgs, &self.hw, &self.knobs, &plans)
+            });
+            let mut slots: Vec<Option<RunRecord>> = jobs.iter().map(|_| None).collect();
+            for (idxs, recs) in groups.iter().zip(per_group) {
+                for (&i, rec) in idxs.iter().zip(recs) {
+                    slots[i] = Some(rec);
+                }
+            }
+            slots
+                .into_iter()
+                .map(|s| s.expect("every job scatters back into its slot"))
+                .collect()
+        } else {
+            par::par_map(&jobs, self.threads, |cfg| {
+                cache.note_serial_fallback();
+                if self.knobs.reference_engine {
+                    simulate_run_reference(cfg, &self.hw, &self.knobs)
+                } else {
+                    let plan = cache.get_or_lower(cfg, &self.hw, &self.knobs);
+                    simulate_run_planned(cfg, &self.hw, &self.knobs, &plan)
+                }
+            })
+        };
         let sync_db = SyncDb::build(&runs);
         Dataset {
             runs,
@@ -187,6 +231,46 @@ mod tests {
             assert_eq!(r.true_total_j, direct.true_total_j);
             assert_eq!(r.wait_samples, direct.wait_samples);
         }
+    }
+
+    #[test]
+    fn batched_campaign_matches_serial_campaign_bit_for_bit() {
+        let knobs = SimKnobs {
+            sim_decode_steps: 4,
+            ..SimKnobs::default()
+        };
+        // Two shapes of one tensor mesh plus a pipeline mesh: two batch
+        // groups, one of width 4 (2 shapes × 2 passes) and one of width 2.
+        let cfgs = vec![
+            RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8),
+            RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 32),
+            RunConfig::new("Vicuna-7B", Parallelism::Pipeline, 4, 8),
+        ];
+        let on = Campaign {
+            passes: 2,
+            knobs: knobs.clone(),
+            ..Campaign::default()
+        }
+        .profile(&cfgs);
+        let off = Campaign {
+            passes: 2,
+            knobs: knobs.with_batch_execution(false),
+            ..Campaign::default()
+        }
+        .profile(&cfgs);
+        assert_eq!(on.runs.len(), off.runs.len());
+        for (a, b) in on.runs.iter().zip(&off.runs) {
+            assert_eq!(a.true_total_j, b.true_total_j);
+            assert_eq!(a.meter_total_j, b.meter_total_j);
+            assert_eq!(a.nvml_total_j, b.nvml_total_j);
+            assert_eq!(a.wait_samples, b.wait_samples);
+            assert_eq!(a.wall_s, b.wall_s);
+        }
+        assert_eq!(on.cache.batches, 2, "one batched walk per mesh");
+        assert_eq!(on.cache.batched_lanes, 6);
+        assert_eq!(on.cache.serial_fallbacks, 0);
+        assert_eq!(off.cache.batches, 0);
+        assert_eq!(off.cache.serial_fallbacks, 6);
     }
 
     #[test]

@@ -139,6 +139,17 @@ impl StepLowerer {
     pub fn stats(&self) -> (CacheStats, usize) {
         (self.runs.stats(), self.steps.lock().unwrap().len())
     }
+
+    /// Record one batched step walk resolving `lanes` sessions' steps
+    /// (fleet speculative batching; surfaces in `stats`).
+    pub fn note_batch(&self, lanes: usize) {
+        self.runs.note_batch(lanes);
+    }
+
+    /// Record one step executed outside a batch.
+    pub fn note_serial_fallback(&self) {
+        self.runs.note_serial_fallback();
+    }
 }
 
 #[cfg(test)]

@@ -27,12 +27,12 @@ pub use batcher::{kv_budget_bytes, kv_bytes_per_token, Batcher, BatcherCfg, Poli
 pub use lower::{bucket_tokens, StepKind, StepLowerer, StepShape};
 pub use trace::{synthesize, ArrivalKind, Request, SynthSpec, Trace};
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use crate::config::{HwSpec, Parallelism, SimKnobs};
 use crate::models;
-use crate::simulator::{simulate_run_planned, RunRecord};
+use crate::simulator::{simulate_run_batch, simulate_run_planned, RunRecord};
 use crate::util::stats::percentile;
 use crate::workload;
 
@@ -195,6 +195,10 @@ pub struct Session {
     kv_budget: f64,
     total_step_j: f64,
     generated_tokens: usize,
+    /// Speculatively executed record for the predicted next step
+    /// (`predict_step` / `prefetch_shared_steps`); consumed by `sim_step`
+    /// when the (shape, index) still match.
+    prepared: Option<(StepShape, u64, RunRecord)>,
 }
 
 impl Session {
@@ -245,6 +249,7 @@ impl Session {
             kv_budget: budget,
             total_step_j: 0.0,
             generated_tokens: 0,
+            prepared: None,
         }
     }
 
@@ -296,7 +301,49 @@ impl Session {
         self.clock = self.clock.max(t);
     }
 
-    fn sim_step(&self, shape: &StepShape, idx: u64) -> RunRecord {
+    /// Shape of the decode iteration the resident batch would run next.
+    fn decode_shape(&self) -> StepShape {
+        let contexts: Vec<f64> = self
+            .active
+            .iter()
+            .map(|a| (a.req.prompt_tokens + a.generated) as f64)
+            .collect();
+        let mean_ctx = (contexts.iter().sum::<f64>() / contexts.len() as f64).ceil() as usize;
+        StepShape {
+            kind: StepKind::Decode,
+            batch: self.active.len(),
+            tokens: bucket_tokens(mean_ctx.max(1), self.cfg.ctx_bucket),
+        }
+    }
+
+    /// The exact (shape, step index) of the next engine step this session
+    /// would execute, when that is predictable without running the
+    /// scheduler: a resident decode iteration with nothing pending and no
+    /// arrival due at the current clock. The fleet layer uses this to
+    /// co-schedule coinciding replica steps as one batched engine walk
+    /// (`prefetch_shared_steps`).
+    pub fn predict_step(&self) -> Option<(StepShape, u64)> {
+        let arrival_due = self
+            .arrivals
+            .front()
+            .map(|r| r.arrival_s <= self.clock)
+            .unwrap_or(false);
+        if self.active.is_empty() || self.batcher.pending() != 0 || arrival_due {
+            return None;
+        }
+        Some((self.decode_shape(), self.step_idx))
+    }
+
+    fn sim_step(&mut self, shape: &StepShape, idx: u64) -> RunRecord {
+        // A stashed speculative record is bit-identical to the serial
+        // simulation below (batched lanes keep their own seed streams), so
+        // consuming it changes nothing but wall time.
+        if let Some((s, i, rec)) = self.prepared.take() {
+            if s == *shape && i == idx {
+                return rec;
+            }
+        }
+        self.lowerer.note_serial_fallback();
         let plan = self.lowerer.step_plan(shape);
         let scfg = self.lowerer.step_config(shape, self.cfg.base_seed ^ (idx + 1));
         simulate_run_planned(&scfg, &self.hw, self.lowerer.knobs(), &plan)
@@ -423,12 +470,7 @@ impl Session {
 
         // ---- One decode iteration for the resident batch. ----
         let contexts: Vec<f64> = self.active.iter().map(|a| (a.req.prompt_tokens + a.generated) as f64).collect();
-        let mean_ctx = (contexts.iter().sum::<f64>() / contexts.len() as f64).ceil() as usize;
-        let shape = StepShape {
-            kind: StepKind::Decode,
-            batch: self.active.len(),
-            tokens: bucket_tokens(mean_ctx.max(1), self.cfg.ctx_bucket),
-        };
+        let shape = self.decode_shape();
         let r = self.sim_step(&shape, self.step_idx);
         self.step_idx += 1;
         // Token work per request: KV context touched + the generated token.
@@ -492,6 +534,47 @@ impl Session {
             sync_share: if comm_j > 0.0 { sync_j / comm_j } else { 0.0 },
             peak_kv_bytes: self.peak_kv,
             kv_budget_bytes: self.kv_budget,
+        }
+    }
+}
+
+/// Speculatively execute the predicted next steps of every session still
+/// behind `horizon_s`, batching the ones that coincide — same lowerer
+/// (mesh) and same step shape — into one engine walk per group
+/// (DESIGN.md §14). Each lane keeps its own session's seed stream, so the
+/// stashed records the sessions later consume are bit-identical to the
+/// serial path; groups of one are left for `sim_step`. Batches are
+/// counted on the group's shared lowerer (`StepLowerer::stats`).
+pub fn prefetch_shared_steps(sessions: &mut [Session], horizon_s: f64) {
+    let mut groups: HashMap<(usize, StepShape), Vec<(usize, u64)>> = HashMap::new();
+    for (i, s) in sessions.iter().enumerate() {
+        if s.clock < horizon_s && s.prepared.is_none() {
+            if let Some((shape, idx)) = s.predict_step() {
+                groups
+                    .entry((Arc::as_ptr(&s.lowerer) as usize, shape))
+                    .or_default()
+                    .push((i, idx));
+            }
+        }
+    }
+    for ((_, shape), members) in groups {
+        if members.len() < 2 {
+            continue;
+        }
+        let mut cfgs = Vec::with_capacity(members.len());
+        let mut plans = Vec::with_capacity(members.len());
+        for &(i, idx) in &members {
+            let s = &sessions[i];
+            cfgs.push(s.lowerer.step_config(&shape, s.cfg.base_seed ^ (idx + 1)));
+            plans.push(s.lowerer.step_plan(&shape));
+        }
+        let leader = &sessions[members[0].0];
+        let hw = leader.hw.clone();
+        let knobs = leader.lowerer.knobs().clone();
+        leader.lowerer.note_batch(members.len());
+        let records = simulate_run_batch(&cfgs, &hw, &knobs, &plans);
+        for ((i, idx), rec) in members.into_iter().zip(records) {
+            sessions[i].prepared = Some((shape.clone(), idx, rec));
         }
     }
 }

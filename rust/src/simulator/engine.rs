@@ -24,7 +24,7 @@
 //! what give the run record its phase-resolved communication/
 //! synchronization energy isolation.
 
-use crate::plan::exec::{ExecPlan, OpKind};
+use crate::plan::exec::{ExecBatch, ExecPlan, OpKind};
 use crate::plan::{Op, Plan, WaitRecord};
 use crate::simulator::power::PowerModel;
 use crate::simulator::skew::SkewModel;
@@ -451,6 +451,41 @@ fn rank_phases_compiled(ep: &ExecPlan, res: &Resolved, power: &PowerModel, rank:
     out
 }
 
+/// Shared tail of pass 2: merge the keyed per-rank phase lists back into
+/// the exact serial emission order, bill the idle tail per rank, and wrap
+/// the run's side channels. Used verbatim by the single-plan and batched
+/// execution paths so their timelines cannot drift.
+fn materialize(
+    num_ranks: usize,
+    power: &PowerModel,
+    mut keyed: Vec<(u64, Phase)>,
+    res: Resolved,
+    sim_steps: usize,
+    comm_bytes_per_step: f64,
+) -> BuiltRun {
+    keyed.sort_unstable_by_key(|(k, _)| *k);
+    let phases: Vec<Phase> = keyed.into_iter().map(|(_, p)| p).collect();
+
+    let mut timeline = Timeline::from_parts(
+        num_ranks,
+        power.gpu_power(PhaseKind::Idle, 0.0),
+        phases,
+        res.clocks,
+    );
+    let idle_w: Vec<f64> = (0..num_ranks)
+        .map(|r| power.gpu_power_rank(PhaseKind::Idle, 0.0, r))
+        .collect();
+    timeline.finalize_with(&idle_w);
+
+    BuiltRun {
+        timeline,
+        wait_samples: res.wait_samples,
+        prefill_end: res.prefill_end,
+        sim_steps,
+        comm_bytes_per_step,
+    }
+}
+
 /// Execute a compiled `ExecPlan` under the run's stochastic conditions —
 /// the hot execution path. Walks the structure-of-arrays form directly
 /// (no `Op` enum dispatch or pointer chasing); the serial resolve pass
@@ -470,28 +505,168 @@ pub fn execute_compiled(
     let num_ranks = ep.num_ranks();
     let ranks: Vec<usize> = (0..num_ranks).collect();
     let per_rank = par::par_map(&ranks, threads, |&r| rank_phases_compiled(ep, &res, power, r));
-    let mut keyed: Vec<(u64, Phase)> = per_rank.into_iter().flatten().collect();
-    keyed.sort_unstable_by_key(|(k, _)| *k);
-    let phases: Vec<Phase> = keyed.into_iter().map(|(_, p)| p).collect();
+    let keyed: Vec<(u64, Phase)> = per_rank.into_iter().flatten().collect();
+    materialize(num_ranks, power, keyed, res, ep.scalars.sim_steps, ep.scalars.comm_bytes_per_step)
+}
 
-    let mut timeline = Timeline::from_parts(
-        num_ranks,
-        power.gpu_power(PhaseKind::Idle, 0.0),
-        phases,
-        res.clocks,
-    );
-    let idle_w: Vec<f64> = (0..num_ranks)
-        .map(|r| power.gpu_power_rank(PhaseKind::Idle, 0.0, r))
-        .collect();
-    timeline.finalize_with(&idle_w);
+/// Per-lane stochastic state of a batched execution. Each candidate owns
+/// its complete run-conditions chain — power model, sampled skew state,
+/// launch-desync scale, and seeded RNG — so interleaving the lanes through
+/// one op walk preserves every lane's intra-stream draw order, which is
+/// what makes the batched path bit-identical per lane to a serial
+/// `execute_compiled` of that lane alone (DESIGN.md §14).
+pub struct BatchLane {
+    pub power: PowerModel,
+    pub skew: SkewModel,
+    pub sync_jitter: f64,
+    pub rng: Rng,
+}
 
-    BuiltRun {
-        timeline,
-        wait_samples: res.wait_samples,
-        prefill_end: res.prefill_end,
-        sim_steps: ep.scalars.sim_steps,
-        comm_bytes_per_step: ep.scalars.comm_bytes_per_step,
+/// Batched pass 1: ONE walk over the shared op/edge arrays resolving all
+/// K lanes simultaneously. Per op, the inner loop visits the lanes in
+/// order, each drawing from its own RNG against its own clocks/edges —
+/// the per-lane draw sequence across ops is exactly the sequence
+/// `resolve_compiled` would produce for that lane, so results are
+/// bit-identical per lane (property-tested).
+fn resolve_batch(batch: &ExecBatch, lanes: &mut [BatchLane]) -> Vec<Resolved> {
+    let s = &*batch.structure;
+    let k = lanes.len();
+    let n_ops = s.len();
+    // The dur offsets are a pure function of the structure walk, identical
+    // across lanes: computed once, cloned into each lane's `Resolved`.
+    let mut dur_at = vec![0u32; n_ops];
+    let mut clocks = vec![vec![0.0f64; s.num_ranks]; k];
+    let mut durs: Vec<Vec<f64>> = vec![Vec::new(); k];
+    let mut sync_t = vec![vec![0.0f64; n_ops]; k];
+    let mut edges = vec![vec![0.0f64; s.num_edges as usize]; k];
+    let mut waits: Vec<Vec<f64>> = vec![Vec::new(); k];
+    let mut prefill_end = vec![0.0f64; k];
+
+    for i in 0..n_ops {
+        let ranks = s.ranks[i];
+        match s.kind[i] {
+            OpKind::Compute => {
+                dur_at[i] = durs[0].len() as u32;
+                let module = s.module[i];
+                for (l, lane) in lanes.iter_mut().enumerate() {
+                    let nominal_s = batch.dur_s[i * k + l];
+                    for rank in ranks.iter() {
+                        let d = lane.skew.sample_module(nominal_s, rank, module, &mut lane.rng);
+                        durs[l].push(d);
+                        clocks[l][rank] += d;
+                    }
+                }
+            }
+            OpKind::Collective => {
+                for (l, lane) in lanes.iter_mut().enumerate() {
+                    let mut arrive = 0.0f64;
+                    if s.jitter[i] {
+                        for rank in ranks.iter() {
+                            arrive = arrive.max(clocks[l][rank] + lane.rng.exponential(lane.sync_jitter));
+                        }
+                    } else {
+                        for rank in ranks.iter() {
+                            arrive = arrive.max(clocks[l][rank]);
+                        }
+                    }
+                    sync_t[l][i] = arrive;
+                    let transfer_s = batch.dur_s[i * k + l];
+                    for rank in ranks.iter() {
+                        let waited = (arrive - clocks[l][rank]).max(0.0);
+                        match s.record[i] {
+                            WaitRecord::All => waits[l].push(waited),
+                            WaitRecord::None => {}
+                        }
+                        clocks[l][rank] = clocks[l][rank].max(arrive) + transfer_s;
+                    }
+                }
+            }
+            OpKind::Send => {
+                for l in 0..k {
+                    let transfer_s = batch.dur_s[i * k + l];
+                    let mut done = 0.0f64;
+                    for rank in ranks.iter() {
+                        clocks[l][rank] += transfer_s;
+                        done = done.max(clocks[l][rank]);
+                    }
+                    edges[l][s.edge[i] as usize] = done;
+                }
+            }
+            OpKind::Recv => {
+                for l in 0..k {
+                    let ready = edges[l][s.edge[i] as usize];
+                    sync_t[l][i] = ready;
+                    for rank in ranks.iter() {
+                        let waited = (ready - clocks[l][rank]).max(0.0);
+                        if waited > 0.0 {
+                            waits[l].push(waited);
+                        }
+                        clocks[l][rank] = clocks[l][rank].max(ready);
+                    }
+                }
+            }
+        }
+        if s.step[i] == 0 {
+            for l in 0..k {
+                for rank in ranks.iter() {
+                    prefill_end[l] = prefill_end[l].max(clocks[l][rank]);
+                }
+            }
+        }
     }
+
+    durs.into_iter()
+        .zip(sync_t)
+        .zip(clocks)
+        .zip(waits)
+        .zip(prefill_end)
+        .map(|((((durs, sync_t), clocks), wait_samples), prefill_end)| Resolved {
+            durs,
+            dur_at: dur_at.clone(),
+            sync_t,
+            clocks,
+            wait_samples,
+            prefill_end,
+        })
+        .collect()
+}
+
+/// Execute K shape-bindings of one mesh structure in a single engine
+/// pass: one batched resolve walk, then phase materialization over all
+/// (lane, rank) pairs through the `util::par` pool. Returns one
+/// `BuiltRun` per lane, each bit-identical to what `execute_compiled`
+/// would produce for that lane's plan and stochastic state alone.
+pub fn execute_batch(batch: &ExecBatch, lanes: &mut [BatchLane], threads: usize) -> Vec<BuiltRun> {
+    assert_eq!(lanes.len(), batch.width(), "one stochastic lane per candidate");
+    let reses = resolve_batch(batch, lanes);
+    let lanes: &[BatchLane] = lanes;
+
+    let num_ranks = batch.structure.num_ranks;
+    let jobs: Vec<(usize, usize)> = (0..batch.width())
+        .flat_map(|l| (0..num_ranks).map(move |r| (l, r)))
+        .collect();
+    let per_job = par::par_map(&jobs, threads, |&(l, r)| {
+        rank_phases_compiled(&batch.lanes[l], &reses[l], &lanes[l].power, r)
+    });
+
+    let mut per_job = per_job.into_iter();
+    let mut runs = Vec::with_capacity(batch.width());
+    for (l, res) in reses.into_iter().enumerate() {
+        let mut keyed: Vec<(u64, Phase)> = Vec::new();
+        for _ in 0..num_ranks {
+            keyed.extend(per_job.next().expect("one materialization job per (lane, rank)"));
+        }
+        let sc = &batch.lanes[l].scalars;
+        runs.push(materialize(
+            num_ranks,
+            &lanes[l].power,
+            keyed,
+            res,
+            sc.sim_steps,
+            sc.comm_bytes_per_step,
+        ));
+    }
+    runs
 }
 
 /// Execute a plan under the run's stochastic conditions. `threads` bounds
@@ -508,34 +683,14 @@ pub fn execute(
     let res = resolve(plan, skew, sync_jitter, rng);
 
     // `threads` follows the `util::par` convention: 0 ⇒ available cores,
-    // 1 ⇒ serial map (no spawn).
+    // 1 ⇒ serial map (no spawn). Tail padding is billed at each rank's own
+    // idle draw inside `materialize` (heterogeneous fleets); on the
+    // homogeneous baseline every entry equals the global idle power, so
+    // this is exactly the legacy `finalize`.
     let ranks: Vec<usize> = (0..plan.num_ranks).collect();
     let per_rank = par::par_map(&ranks, threads, |&r| rank_phases(plan, &res, power, r));
-    let mut keyed: Vec<(u64, Phase)> = per_rank.into_iter().flatten().collect();
-    keyed.sort_unstable_by_key(|(k, _)| *k);
-    let phases: Vec<Phase> = keyed.into_iter().map(|(_, p)| p).collect();
-
-    let mut timeline = Timeline::from_parts(
-        plan.num_ranks,
-        power.gpu_power(PhaseKind::Idle, 0.0),
-        phases,
-        res.clocks,
-    );
-    // Tail padding billed at each rank's own idle draw (heterogeneous
-    // fleets); on the homogeneous baseline every entry equals the global
-    // idle power, so this is exactly the legacy `finalize`.
-    let idle_w: Vec<f64> = (0..plan.num_ranks)
-        .map(|r| power.gpu_power_rank(PhaseKind::Idle, 0.0, r))
-        .collect();
-    timeline.finalize_with(&idle_w);
-
-    BuiltRun {
-        timeline,
-        wait_samples: res.wait_samples,
-        prefill_end: res.prefill_end,
-        sim_steps: plan.sim_steps,
-        comm_bytes_per_step: plan.comm_bytes_per_step,
-    }
+    let keyed: Vec<(u64, Phase)> = per_rank.into_iter().flatten().collect();
+    materialize(plan.num_ranks, power, keyed, res, plan.sim_steps, plan.comm_bytes_per_step)
 }
 
 #[cfg(test)]
@@ -691,6 +846,84 @@ mod tests {
             assert_eq!(pa.power_w, pb.power_w);
         }
         assert_eq!(a.timeline.gpu_energy_j(), b.timeline.gpu_energy_j());
+    }
+
+    #[test]
+    fn batched_execution_is_bit_identical_per_lane() {
+        // K shape-bindings of one structure through ONE resolve walk must
+        // reproduce K serial `execute_compiled` runs exactly — phases,
+        // waits, clocks — for the same per-lane seed streams.
+        use crate::plan::exec::{ExecBatch, ShapeBinding};
+        use std::sync::Arc;
+
+        let mut b = PlanBuilder::new(4);
+        for step in 0..3u32 {
+            for layer in 0..6u16 {
+                b.compute(0..4, t(1e-3), ModuleKind::SelfAttention, layer, step);
+                b.collective(0..4, ModuleKind::AllReduce, layer, step, 1e-4, true, WaitRecord::All);
+            }
+            let e = b.send(0..2, 0, step, 2e-4);
+            b.recv(2..4, 0, step, e);
+        }
+        let plan = b.finish(2, 1.0, true);
+        let base = crate::plan::exec::compile(&plan);
+        // Lane plans: the base shape plus two scalar rebinds of it.
+        let mut plans = vec![base.clone()];
+        for scale in [1.5f64, 0.25] {
+            let mut r = ShapeBinding::new(Arc::clone(&base.structure));
+            for step in 0..3u32 {
+                for layer in 0..6u16 {
+                    r.compute(0..4, t(1e-3 * scale), ModuleKind::SelfAttention, layer, step);
+                    r.collective(0..4, ModuleKind::AllReduce, layer, step, 1e-4 * scale, true, WaitRecord::All);
+                }
+                let e = r.send(0..2, 0, step, 2e-4 * scale);
+                r.recv(2..4, 0, step, e);
+            }
+            plans.push(r.finish(2, 1.0, true));
+        }
+
+        let lane_state = |seed: u64| {
+            let hw = HwSpec::default();
+            let mut rng = Rng::new(seed);
+            let skew = SkewModel::new(&SimKnobs::default(), 4, &mut rng);
+            (PowerModel::new(&hw), skew, rng)
+        };
+        let serial: Vec<BuiltRun> = plans
+            .iter()
+            .enumerate()
+            .map(|(l, ep)| {
+                let (power, skew, mut rng) = lane_state(100 + l as u64);
+                execute_compiled(ep, &power, &skew, 40e-6, &mut rng, 1)
+            })
+            .collect();
+        for threads in [1usize, 4] {
+            let mut lanes: Vec<BatchLane> = (0..plans.len())
+                .map(|l| {
+                    let (power, skew, rng) = lane_state(100 + l as u64);
+                    BatchLane {
+                        power,
+                        skew,
+                        sync_jitter: 40e-6,
+                        rng,
+                    }
+                })
+                .collect();
+            let batch = ExecBatch::new(plans.clone());
+            let batched = execute_batch(&batch, &mut lanes, threads);
+            assert_eq!(batched.len(), serial.len());
+            for (a, b) in serial.iter().zip(&batched) {
+                assert_eq!(a.wait_samples, b.wait_samples);
+                assert_eq!(a.prefill_end, b.prefill_end);
+                assert_eq!(a.timeline.phases.len(), b.timeline.phases.len());
+                for (pa, pb) in a.timeline.phases.iter().zip(&b.timeline.phases) {
+                    assert_eq!((pa.gpu, pa.kind, pa.module), (pb.gpu, pb.kind, pb.module));
+                    assert_eq!(pa.t0, pb.t0);
+                    assert_eq!(pa.t1, pb.t1);
+                    assert_eq!(pa.power_w, pb.power_w);
+                }
+                assert_eq!(a.timeline.gpu_energy_j(), b.timeline.gpu_energy_j());
+            }
+        }
     }
 
     #[test]

@@ -19,5 +19,5 @@ pub mod skew;
 pub mod timeline;
 
 pub use engine::BuiltRun;
-pub use run::{simulate_run, simulate_run_planned, simulate_run_reference, RunRecord};
+pub use run::{simulate_run, simulate_run_batch, simulate_run_planned, simulate_run_reference, RunRecord};
 pub use timeline::{ModuleKind, Phase, PhaseKind, Timeline};

@@ -207,6 +207,58 @@ pub fn simulate_run_planned(
     finish_record(cfg, hw, knobs, spec, built, c.power, c.interference, c.rng)
 }
 
+/// Simulate K candidate runs of one mesh structure in a single batched
+/// engine walk (DESIGN.md §14). The plans must all share the first plan's
+/// `PlanStructure` (`Arc`-shared — the `plan::PlanCache` guarantees this
+/// for configurations with equal `parallelism::structure_key`s, which
+/// also pins them to one model). Each candidate keeps its own seed stream
+/// (`RunConfig::seed` ⊕ FNV-1a of the config key, exactly as
+/// `simulate_run_planned` derives it), so every returned record is
+/// bit-identical to what the serial path would produce for that candidate
+/// alone — batching is a pure wall-time optimization.
+pub fn simulate_run_batch(
+    cfgs: &[RunConfig],
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    plans: &[ExecPlan],
+) -> Vec<RunRecord> {
+    assert_eq!(cfgs.len(), plans.len(), "one plan per candidate");
+    if cfgs.is_empty() {
+        return Vec::new();
+    }
+    let spec = models::by_name(&cfgs[0].model)
+        .unwrap_or_else(|| panic!("unknown model {}", cfgs[0].model));
+    debug_assert!(
+        cfgs.iter().all(|c| c.model == cfgs[0].model),
+        "a batch spans one mesh structure, hence one model"
+    );
+    let batch = crate::plan::ExecBatch::new(plans.to_vec());
+
+    // Per-lane run conditions, drawn in lane order — each lane's stream is
+    // keyed to its own config, so the order lanes are set up in is
+    // immaterial to their draws.
+    let mut interference = Vec::with_capacity(cfgs.len());
+    let conditions: Vec<(PowerModel, Rng)> = cfgs
+        .iter()
+        .map(|cfg| {
+            let c = run_conditions(cfg, hw, knobs);
+            interference.push(c.interference);
+            (c.power, c.rng)
+        })
+        .collect();
+
+    let executed =
+        parallelism::execute_batch(&batch, &spec, knobs, conditions, knobs.engine_threads);
+    executed
+        .into_iter()
+        .zip(cfgs)
+        .zip(interference)
+        .map(|(((built, power, rng), cfg), interf)| {
+            finish_record(cfg, hw, knobs, spec.clone(), built, power, interf, rng)
+        })
+        .collect()
+}
+
 /// Everything after engine execution: decode extrapolation, attribution,
 /// instruments, features, sync stats — shared verbatim by the compiled and
 /// reference paths (same RNG continuation order).

@@ -488,6 +488,118 @@ fn hot_paths_rebind_instead_of_relowering_and_match_reference_tables() {
 }
 
 #[test]
+fn batched_execution_leaves_sweep_and_tune_tables_byte_identical() {
+    // The batched-execution acceptance contract (DESIGN.md §14): every row
+    // of the `piep sweep` and `piep tune` tables must be byte-identical
+    // with `SimKnobs::batch_execution` on (the default) vs off (the pinned
+    // serial reference), and the batched tuner must execute at most one
+    // batched walk per mesh topology. Wall-clock columns are excluded —
+    // they measure the host, not the simulation.
+    use std::collections::HashSet;
+
+    use piep::eval::sweep::{run_sweep, Scenario, SweepOptions};
+    use piep::eval::tune::{run_tune, tune_grid, TuneOptions};
+
+    let steps4 = SimKnobs {
+        sim_decode_steps: 4,
+        ..SimKnobs::default()
+    };
+    assert!(steps4.batch_execution, "batched execution is the default");
+
+    // ---- sweep: same scenarios, batch on vs off ----
+    let tp2pp = Parallelism::hybrid(piep::config::Strategy::Tensor, piep::config::Strategy::Pipeline, 2).unwrap();
+    let scenarios = vec![
+        Scenario {
+            label: "tp".into(),
+            configs: vec![
+                RunConfig::new("Vicuna-7B", Parallelism::Tensor, 2, 8),
+                RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8),
+                RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 32),
+            ],
+        },
+        Scenario {
+            label: "tp2xpp".into(),
+            configs: vec![
+                RunConfig::new("Vicuna-7B", tp2pp, 4, 8),
+                RunConfig::new("Vicuna-7B", tp2pp, 4, 32),
+            ],
+        },
+    ];
+    let sweep_opts = |batch: bool| SweepOptions {
+        campaign: Campaign {
+            passes: 2,
+            threads: 1,
+            knobs: steps4.clone().with_batch_execution(batch),
+            ..Campaign::default()
+        },
+        parallel: false,
+        ..SweepOptions::default()
+    };
+    let on = run_sweep(&scenarios, &sweep_opts(true));
+    let off = run_sweep(&scenarios, &sweep_opts(false));
+    let sweep_rows = |results: &[piep::eval::sweep::ScenarioResult]| -> Vec<String> {
+        let mut rows = Vec::new();
+        for r in results {
+            rows.push(format!(
+                "{}|{}|{}|{:?}|{:?}|{:?}",
+                r.label, r.configs, r.runs, r.mape, r.std_err, r.sync_share
+            ));
+            for c in &r.per_config {
+                rows.push(format!("{}|{}|{:?}|{:?}|{}", r.label, c.key, c.mape, c.std_err, c.n));
+            }
+        }
+        rows
+    };
+    assert_eq!(sweep_rows(&on), sweep_rows(&off), "sweep tables byte-identical");
+
+    // ---- tune: same grid, batch on vs off ----
+    let topts = TuneOptions {
+        knobs: steps4.clone(),
+        gpu_counts: vec![2, 4],
+        batches: vec![8, 16, 32],
+        passes: 2,
+        threads: 1,
+        ..TuneOptions::default()
+    };
+    let ton = run_tune(&topts);
+    let toff = run_tune(&TuneOptions {
+        knobs: steps4.clone().with_batch_execution(false),
+        ..topts.clone()
+    });
+    let tune_rows = |res: &piep::eval::tune::TuneResult| -> Vec<String> {
+        res.candidates
+            .iter()
+            .map(|c| {
+                format!(
+                    "{}|{:?}|{:?}|{:?}|{:?}|{:?}|{}",
+                    c.key, c.j_per_token, c.j_per_request, c.ms_per_token, c.wall_s, c.sync_share, c.meets_slo
+                )
+            })
+            .collect()
+    };
+    assert_eq!(tune_rows(&ton), tune_rows(&toff), "tune tables byte-identical");
+    assert_eq!(
+        ton.pareto.iter().map(|c| &c.key).collect::<Vec<_>>(),
+        toff.pareto.iter().map(|c| &c.key).collect::<Vec<_>>(),
+        "pareto front byte-identical"
+    );
+
+    // ≤ 1 batched walk per mesh topology, covering every lane; the serial
+    // side never batches.
+    let grid = tune_grid(&topts);
+    let meshes: HashSet<String> = grid
+        .iter()
+        .map(|c| piep::parallelism::structure_key(&topts.knobs, c))
+        .collect();
+    assert!(ton.cache.batches <= meshes.len(), "at most one batch per mesh");
+    assert_eq!(ton.cache.batches, meshes.len(), "every mesh batches exactly once");
+    assert_eq!(ton.cache.batched_lanes, grid.len() * topts.passes);
+    assert_eq!(ton.cache.serial_fallbacks, 0);
+    assert_eq!(toff.cache.batches, 0);
+    assert_eq!(toff.cache.serial_fallbacks, grid.len() * topts.passes);
+}
+
+#[test]
 fn serve_replays_jsonl_and_synthetic_traces_end_to_end() {
     use piep::config::Strategy;
     use piep::serve::{serve, synthesize, Policy, ServeConfig, SynthSpec, Trace};

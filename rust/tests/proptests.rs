@@ -288,6 +288,80 @@ fn prop_compiled_engine_matches_reference_engine() {
 }
 
 #[test]
+fn prop_batched_execution_is_bit_identical_to_serial() {
+    // The tentpole's bit-identity contract (DESIGN.md §14): resolving K
+    // shape-bindings of one mesh structure in a single batched engine walk
+    // must reproduce each lane's serial `simulate_run_planned` execution
+    // exactly — totals, instruments, waits, attribution — for every
+    // strategy including the 4-GPU hybrids, on the flat testbed, a tiered
+    // 2-node topology, and a heterogeneous fleet, for K ∈ {1, 2, 7}.
+    use piep::cluster::{GpuSpec, LinkTier};
+    use piep::plan::PlanCache;
+    use piep::simulator::{simulate_run_batch, simulate_run_planned};
+    let testbeds = [
+        HwSpec::default(),
+        HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &[]),
+        HwSpec::cluster_testbed(2, 2, LinkTier::PciE, LinkTier::PciE, &[GpuSpec::a6000(), GpuSpec::h100()]),
+    ];
+    let k = knobs();
+    forall(119, 3, gen_cfg, |t| {
+        let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.extend(hybrids4());
+        for hw in &testbeds {
+            for &par in &pars {
+                let mut cfg = cfg_of(t, par);
+                if par.is_hybrid() {
+                    cfg.gpus = 4;
+                }
+                cfg.gpus = cfg.gpus.min(hw.num_gpus);
+                if par.is_hybrid() && cfg.gpus != 4 {
+                    continue;
+                }
+                let spec = piep::models::by_name(&cfg.model).unwrap();
+                if !piep::workload::runnable(&spec, par, cfg.gpus, hw) {
+                    continue;
+                }
+                for width in [1usize, 2, 7] {
+                    // K lanes of the one mesh: prompt length and seed vary
+                    // per lane (shape-level knobs, never structural).
+                    let cache = PlanCache::new();
+                    let lanes: Vec<RunConfig> = (0..width)
+                        .map(|i| {
+                            let mut c = cfg.clone().with_seed(cfg.seed ^ (i as u64 + 1));
+                            c.seq_in = cfg.seq_in + 64 * (i % 3);
+                            c
+                        })
+                        .collect();
+                    let plans: Vec<_> =
+                        lanes.iter().map(|c| cache.get_or_lower(c, hw, &k)).collect();
+                    let batched = simulate_run_batch(&lanes, hw, &k, &plans);
+                    ensure(batched.len() == width, "one record per lane")?;
+                    for ((lane, plan), b) in lanes.iter().zip(&plans).zip(&batched) {
+                        let a = simulate_run_planned(lane, hw, &k, plan);
+                        ensure(a.true_total_j == b.true_total_j, format!("{par:?}/k{width}: totals"))?;
+                        ensure(a.meter_total_j == b.meter_total_j, format!("{par:?}/k{width}: meter"))?;
+                        ensure(a.nvml_total_j == b.nvml_total_j, format!("{par:?}/k{width}: nvml"))?;
+                        ensure(a.wait_samples == b.wait_samples, format!("{par:?}/k{width}: waits"))?;
+                        ensure(
+                            a.module_energy_j == b.module_energy_j,
+                            format!("{par:?}/k{width}: attribution"),
+                        )?;
+                        ensure(
+                            a.comm_split_j == b.comm_split_j,
+                            format!("{par:?}/k{width}: comm splits"),
+                        )?;
+                        ensure(a.wall_s == b.wall_s, format!("{par:?}/k{width}: wall"))?;
+                        ensure(a.gpu_util == b.gpu_util, format!("{par:?}/k{width}: util"))?;
+                        ensure(a.gpu_clock_ghz == b.gpu_clock_ghz, format!("{par:?}/k{width}: clocks"))?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_rebind_after_cache_hit_matches_fresh_lower() {
     // A shape served by a structure-cache hit (scalar rebind) must execute
     // bit-identically to a fresh full lowering of the same shape — for
