@@ -1,0 +1,152 @@
+//! `piep critpath` — critical-path energy attribution per strategy
+//! (DESIGN.md §15).
+//!
+//! Runs each strategy once with the execution trace captured, extracts the
+//! makespan-defining chain (`trace::critpath`), and reports on-path vs.
+//! off-path (slack) vs. idle energy, the binding resource, and the
+//! per-module on-path split. `--export FILE` writes the first strategy's
+//! Perfetto/Chrome trace-event JSON; `--out DIR` saves the summary CSV
+//! plus one trace JSON per strategy (the CI smoke artifacts).
+
+use crate::config::{Parallelism, RunConfig, SimKnobs, Strategy};
+use crate::simulator::run::execute_traced;
+use crate::trace::critpath::critical_path_with;
+use crate::trace::export::perfetto_json;
+use crate::util::cli::Args;
+use crate::util::table::{fnum, pct, Table};
+
+pub(crate) fn cmd_critpath(args: &Args) {
+    let smoke = args.has("smoke");
+    // --smoke pins the CI scenario set: TP/PP/tp2xpp on the shared 2-node
+    // NVLink+IB cluster testbed.
+    let testbed = super::topo::parse_testbed(args, true);
+    let hw = testbed.hw();
+
+    let model = args.get_or("model", "Vicuna-7B").to_string();
+    let gpus = args.get_usize("gpus", hw.num_gpus);
+    let batch = args.get_usize("batch", 8);
+    let seq_out = args.get_usize("seq-out", 512);
+    let seed = args.get_u64("seed", 0xC817);
+    let knobs = SimKnobs {
+        sim_decode_steps: args.get_usize("steps", if smoke { 4 } else { 8 }),
+        ..SimKnobs::default()
+    };
+
+    let strategies: Vec<Parallelism> = args
+        .get("strategies")
+        .map(|list| {
+            list.split(',')
+                .map(|l| Parallelism::parse(l.trim()).unwrap_or_else(|| panic!("bad strategy label {l}")))
+                .collect()
+        })
+        .unwrap_or_else(|| {
+            let mut out = vec![Parallelism::Tensor, Parallelism::Pipeline];
+            if gpus >= 4 {
+                out.push(Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap());
+            }
+            out
+        });
+
+    eprintln!(
+        "[critpath] {model} on {} ({} GPUs): {} strategies, batch {batch}, seed {seed:#x}",
+        testbed.label(),
+        gpus,
+        strategies.len()
+    );
+
+    let topo = hw.topo();
+    let mut summary = Table::new(
+        "Critpath — makespan-defining chain and energy attribution per strategy",
+        &["Strategy", "Makespan s", "CritLen s", "OnPath J", "OffPath J", "Idle J", "CritPct", "BoundBy"],
+    );
+    let mut modules = Table::new(
+        "Critpath — on-path energy by module",
+        &["Strategy", "Module", "OnPath J", "Share"],
+    );
+    let mut steps_t = Table::new(
+        "Critpath — per-step on-path slices",
+        &["Strategy", "Step", "OnPath s", "OnPath J", "BoundBy"],
+    );
+    let mut exported = false;
+    let mut traces: Vec<(String, String)> = Vec::new();
+    let need_json = args.get("export").is_some() || args.get("out").is_some();
+
+    for &par in &strategies {
+        let cfg = RunConfig::new(&model, par, gpus, batch)
+            .with_seq_out(seq_out)
+            .with_seed(seed);
+        let (plan, built) = execute_traced(&cfg, &hw, &knobs);
+        let trace = built.trace.as_ref().expect("execute_traced captures the trace");
+        let tl = &built.timeline;
+        let cp = critical_path_with(tl, Some((trace, &plan, &topo)));
+
+        // The three buckets partition the timeline: conservation is exact.
+        let total = tl.gpu_energy_j();
+        let attributed = cp.on_path_j + cp.off_path_j + cp.idle_j;
+        assert!(
+            (attributed - total).abs() <= 1e-9 * total.max(1e-12),
+            "critpath attribution must conserve timeline energy ({attributed} vs {total})"
+        );
+
+        summary.row(vec![
+            par.label(),
+            fnum(cp.makespan_s, 4),
+            fnum(cp.len_s, 4),
+            fnum(cp.on_path_j, 1),
+            fnum(cp.off_path_j, 1),
+            fnum(cp.idle_j, 1),
+            pct(100.0 * cp.on_path_share()),
+            cp.bound_by().name().into(),
+        ]);
+        for (m, j) in &cp.energy_by_module {
+            modules.row(vec![
+                par.label(),
+                m.name().into(),
+                fnum(*j, 1),
+                pct(100.0 * j / cp.on_path_j.max(1e-12)),
+            ]);
+        }
+        if args.has("per-step") {
+            for s in &cp.steps {
+                steps_t.row(vec![
+                    par.label(),
+                    s.step.to_string(),
+                    fnum(s.on_s, 5),
+                    fnum(s.on_j, 2),
+                    s.bound_by.name().into(),
+                ]);
+            }
+        }
+
+        if need_json {
+            let json = perfetto_json(tl, trace, Some(&plan), Some(&topo));
+            if !exported {
+                if let Some(path) = args.get("export") {
+                    std::fs::write(path, &json).expect("write trace export");
+                    println!("exported Perfetto trace (first strategy) -> {path}");
+                }
+                exported = true;
+            }
+            traces.push((par.label(), json));
+        }
+    }
+
+    print!("{}", summary.render());
+    print!("{}", modules.render());
+    if args.has("per-step") {
+        print!("{}", steps_t.render());
+    }
+
+    if let Some(out) = args.get("out") {
+        std::fs::create_dir_all(out).expect("create --out dir");
+        match summary.save_csv(out, "critpath") {
+            Ok(path) => println!("  -> {path}"),
+            Err(e) => eprintln!("  !! could not save critpath.csv: {e}"),
+        }
+        for (label, json) in &traces {
+            let path = format!("{out}/trace_{label}.json");
+            std::fs::write(&path, json).expect("write trace json");
+            println!("  -> {path}");
+        }
+    }
+}

@@ -82,7 +82,7 @@ pub(crate) fn cmd_fleet(args: &Args) {
 
     let mut grid = Table::new(
         "Fleet — cluster J/token and latency vs replica count × router",
-        &["Replicas", "Router", "J/token", "p50 s", "p99 s", "Cluster J", "Cold J", "Served", "Makespan s", "Scale ev"],
+        &["Replicas", "Router", "J/token", "p50 s", "p99 s", "Cluster J", "Cold J", "Served", "Makespan s", "Scale ev", "BoundBy"],
     );
     for c in &res.cells {
         grid.row(vec![
@@ -96,6 +96,7 @@ pub(crate) fn cmd_fleet(args: &Args) {
             format!("{}/{}", c.served, c.served + c.rejected),
             fnum(c.makespan_s, 2),
             c.scale_events.to_string(),
+            c.bound_by(),
         ]);
     }
     print!("{}", grid.render());
@@ -126,14 +127,14 @@ pub(crate) fn cmd_fleet(args: &Args) {
         );
         println!(
             "[fleet] best {}: Σ replica J + cold-start J == cluster J ({:.1} J over {} replicas, \
-             {} shared lowerer(s), {} structure lowering(s), {} batched step walk(s) × {:.1} lanes)",
+             {} shared lowerer(s), {} structure lowering(s), {} batched step walk(s) × {} lanes)",
             best.label,
             full.cluster_energy_j,
             best.replicas,
             full.shared_lowerers,
             full.cache.structure_lowerings,
             full.cache.batches,
-            full.cache.mean_batch_width(),
+            full.cache.mean_batch_width_label(),
         );
         if let Some(path) = args.get("save") {
             store::save_fleet_records(&full.requests, path).expect("save fleet records");

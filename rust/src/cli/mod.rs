@@ -11,6 +11,7 @@
 //! Argument parsing lives in `util::cli::Args`; each subcommand family has
 //! its own driver module below.
 
+mod critpath;
 mod fleet;
 mod plan;
 mod profile;
@@ -30,7 +31,7 @@ type Driver = fn(&Args);
 
 /// One row per subcommand: (name, driver, help). The help column may hold
 /// embedded newlines; continuation lines are indented under the name.
-const COMMANDS: [(&str, Driver, &str); 12] = [
+const COMMANDS: [(&str, Driver, &str); 13] = [
     (
         "reproduce",
         reproduce::cmd_reproduce,
@@ -63,6 +64,11 @@ const COMMANDS: [(&str, Driver, &str); 12] = [
         "fleet",
         fleet::cmd_fleet,
         "fleet-scale serving: replicas × router policies\nover one trace, cluster J/token + p50/p99 tables\n(--replicas 1,2 --policies rr,jsq,energy,session\n--arrival diurnal --sessions N --autoscale\n--requests N --rate RPS --save FILE --smoke\n--no-batch)",
+    ),
+    (
+        "critpath",
+        critpath::cmd_critpath,
+        "critical-path energy attribution per strategy:\non/off-path J, binding resource, Perfetto trace\n(--per-step, --export FILE, --out DIR, --smoke,\n--strategies tp,pp,tp2xpp)",
     ),
     ("runtime", sim::cmd_runtime, "validate AOT artifacts, run the native hot path"),
     ("bench-sim", sim::cmd_bench_sim, "simulator throughput check"),
@@ -115,7 +121,7 @@ fn help() {
     println!("  {:<12} extension studies (see DESIGN.md):", "");
     println!("  {:<12} {}", "", reproduce::id_list(&reproduce::EXTENSION_EXPERIMENTS));
     println!(
-        "\nTESTBED FLAGS (shared by plan, sweep, serve, bench-sim, tune, fleet)\n{}",
+        "\nTESTBED FLAGS (shared by plan, sweep, serve, bench-sim, tune, fleet, critpath)\n{}",
         topo::TOPO_HELP
     );
     println!(
@@ -126,7 +132,10 @@ fn help() {
          \x20 --engine-threads N (per-rank event-engine pool; 1 = serial) --out DIR\n\
          \x20 --no-batch (sweep, tune, fleet: disable batched multi-candidate\n\
          \x20            execution; one engine walk per candidate, the pinned\n\
-         \x20            serial reference)"
+         \x20            serial reference)\n\
+         \x20 --no-prune (tune: keep the exhaustive search; by default\n\
+         \x20            candidates whose critical-path energy lower bound\n\
+         \x20            exceeds the incumbent J/token are skipped unsimulated)"
     );
 }
 
@@ -137,7 +146,7 @@ mod tests {
     #[test]
     fn command_table_is_unique_and_complete() {
         let mut names: Vec<&str> = COMMANDS.iter().map(|(name, _, _)| *name).collect();
-        for expected in ["reproduce", "plan", "sweep", "serve", "tune", "fleet", "bench-sim"] {
+        for expected in ["reproduce", "plan", "sweep", "serve", "tune", "fleet", "critpath", "bench-sim"] {
             assert!(names.contains(&expected), "{expected} missing from COMMANDS");
         }
         names.sort_unstable();

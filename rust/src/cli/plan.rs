@@ -120,11 +120,11 @@ pub(crate) fn cmd_plan(args: &Args) {
         .with_passes(1)
         .profile(&grid_cfgs);
     println!(
-        "[plan] batched execution of the grid in {:?}: {} batched walk(s) × {:.1} lanes mean \
+        "[plan] batched execution of the grid in {:?}: {} batched walk(s) × {} lanes mean \
          ({} lanes total), {} serial fallbacks",
         t0.elapsed(),
         ds.cache.batches,
-        ds.cache.mean_batch_width(),
+        ds.cache.mean_batch_width_label(),
         ds.cache.batched_lanes,
         ds.cache.serial_fallbacks
     );

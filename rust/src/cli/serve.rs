@@ -82,7 +82,7 @@ pub(crate) fn cmd_serve(args: &Args) {
     let served: Vec<f64> = res.served().map(|r| r.energy_j).collect();
     let mut summary = Table::new(
         "Serving — summary",
-        &["Trace", "Policy", "Strategy", "Reqs", "Steps", "J/req p50", "J/req p99", "J/token", "Occup", "Sync%"],
+        &["Trace", "Policy", "Strategy", "Reqs", "Steps", "J/req p50", "J/req p99", "J/token", "Occup", "Busy%", "Wait%", "Sync%"],
     );
     summary.row(vec![
         args.get("trace").map(|_| "jsonl".to_string()).unwrap_or_else(|| args.get_or("synthetic", "poisson").into()),
@@ -94,9 +94,25 @@ pub(crate) fn cmd_serve(args: &Args) {
         fnum(res.energy_percentile_j(99.0), 1),
         fnum(res.energy_per_token_j(), 2),
         pct(100.0 * res.occupancy),
+        pct(100.0 * res.busy_frac),
+        pct(100.0 * res.wait_frac),
         pct(100.0 * res.sync_share),
     ]);
     print!("{}", summary.render());
+
+    // Per-step binding-resource histogram from the critical-path pass.
+    let mut bound_t = Table::new(
+        "Serving — steps per critical-path binding resource",
+        &["BoundBy", "Steps", "Share"],
+    );
+    for (b, n) in &res.bound_hist {
+        bound_t.row(vec![
+            b.clone(),
+            n.to_string(),
+            pct(100.0 * *n as f64 / res.steps.len().max(1) as f64),
+        ]);
+    }
+    print!("{}", bound_t.render());
     println!(
         "[serve] {} steps over {:.1}s of traffic in {wall:?}; Σ energy {:.1} J; peak KV {:.2}/{:.2} GiB",
         res.steps.len(),
@@ -113,7 +129,7 @@ pub(crate) fn cmd_serve(args: &Args) {
     );
 
     let out = args.get_or("out", "reports");
-    for (t, slug) in [(&per_req, "serving_requests"), (&summary, "serving_summary")] {
+    for (t, slug) in [(&per_req, "serving_requests"), (&summary, "serving_summary"), (&bound_t, "serving_bound")] {
         match t.save_csv(out, slug) {
             Ok(path) => println!("  -> {path}"),
             Err(e) => eprintln!("  !! could not save {slug}.csv: {e}"),

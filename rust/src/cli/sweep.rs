@@ -11,7 +11,7 @@ use super::campaign_from;
 /// committed seed (the authoring container has no toolchain to measure
 /// wall-times). A null anywhere else means a corrupt or hand-edited
 /// baseline — the gate fails loudly instead of silently disarming.
-const NULLABLE_COLUMNS: [&str; 14] = [
+const NULLABLE_COLUMNS: [&str; 17] = [
     "threads",
     "configs",
     "runs",
@@ -26,12 +26,16 @@ const NULLABLE_COLUMNS: [&str; 14] = [
     "batch_wall_s",
     "batch_speedup",
     "batched_candidates",
+    "prune_wall_s",
+    "prune_speedup",
+    "pruned_candidates",
 ];
 
 /// Schema-tolerant baseline validation: v1 baselines simply lack the
 /// lower/rebind columns added in v2, v1/v2 baselines lack the batched
-/// execution columns added in v3 (absence is fine — the gate skips the
-/// missing column and says so), and unknown *extra* columns are ignored.
+/// execution columns added in v3, v1..v3 baselines lack the pruning
+/// columns added in v4 (absence is fine — the gate skips the missing
+/// column and says so), and unknown *extra* columns are ignored.
 /// Only two things are fatal: a schema outside the `piep-sweep-bench-*`
 /// family, and a null in a column not known to be nullable.
 fn validate_baseline(path: &str, base: &Json) {
@@ -195,9 +199,35 @@ pub(crate) fn cmd_sweep(args: &Args) {
             tune_batched.cache.batches
         );
 
+        // Critical-path bound pruning on the same tune grid: the exhaustive
+        // batched search above vs the branch-and-bound search that skips
+        // candidates whose energy floor exceeds the incumbent. The argmin
+        // must survive pruning bit-for-bit (also property-pinned).
+        let t6 = std::time::Instant::now();
+        let tune_pruned = crate::eval::tune::run_tune(&crate::eval::tune::TuneOptions {
+            knobs: tune_opts.knobs.clone().with_batch_execution(true),
+            prune: true,
+            ..tune_opts.clone()
+        });
+        let prune_s = t6.elapsed().as_secs_f64();
+        let prune_speedup = batch_on_s / prune_s.max(1e-9);
+        assert_eq!(
+            tune_batched.argmin_j_token.as_ref().map(|c| (c.key.as_str(), c.j_per_token)),
+            tune_pruned.argmin_j_token.as_ref().map(|c| (c.key.as_str(), c.j_per_token)),
+            "pruned tuner must keep the exhaustive argmin"
+        );
+        println!(
+            "sweep bench: tune grid exhaustive {:.1}ms vs pruned {:.1}ms ({prune_speedup:.2}x; \
+             {} of {} candidates skipped unsimulated)",
+            batch_on_s * 1e3,
+            prune_s * 1e3,
+            tune_pruned.pruned,
+            tune_pruned.candidates.len() + tune_pruned.pruned
+        );
+
         let path = args.get_or("save-bench", "BENCH_sweep.json");
         let j = obj(vec![
-            ("schema", s("piep-sweep-bench-v3")),
+            ("schema", s("piep-sweep-bench-v4")),
             ("threads", num(threads as f64)),
             ("passes", num(opts.campaign.passes as f64)),
             ("sim_decode_steps", num(opts.campaign.knobs.sim_decode_steps as f64)),
@@ -214,6 +244,9 @@ pub(crate) fn cmd_sweep(args: &Args) {
             ("batch_wall_s", num(batch_on_s)),
             ("batch_speedup", num(batch_speedup)),
             ("batched_candidates", num(batched_candidates as f64)),
+            ("prune_wall_s", num(prune_s)),
+            ("prune_speedup", num(prune_speedup)),
+            ("pruned_candidates", num(tune_pruned.pruned as f64)),
             (
                 "scenarios",
                 arr(parallel
@@ -246,19 +279,24 @@ pub(crate) fn cmd_sweep(args: &Args) {
             // only compare when the baseline measured the same work. The
             // batch column additionally requires the same tune-grid lane
             // count (grid or pass changes would skew the ratio).
-            let gate_cols: [(&str, f64, bool); 2] = [
+            let gate_cols: [(&str, f64, bool); 3] = [
                 ("parallel_wall_s", parallel_s, workload_matches),
                 (
                     "batch_wall_s",
                     batch_on_s,
                     workload_matches && basef("batched_candidates") == Some(batched_candidates as f64),
                 ),
+                (
+                    "prune_wall_s",
+                    prune_s,
+                    workload_matches && basef("pruned_candidates") == Some(tune_pruned.pruned as f64),
+                ),
             ];
             for (col, measured, comparable) in gate_cols {
                 match base.get(col).map(|v| v.as_f64()) {
-                    // v1/v2 baselines predate the column: skip only it, and
+                    // Older baselines predate the column: skip only it, and
                     // say so — one fresh column must not disarm the others.
-                    None => println!("baseline lacks column {col:?} (pre-v3 schema); its gate skipped"),
+                    None => println!("baseline lacks column {col:?} (older schema); its gate skipped"),
                     Some(Some(base_wall)) if comparable => {
                         let ratio = measured / base_wall.max(1e-9);
                         println!("baseline {col}: {base_wall:.2}s -> ratio {ratio:.2}x (gate: 2.0x)");
@@ -302,7 +340,7 @@ pub(crate) fn cmd_sweep(args: &Args) {
 
     let mut summary = Table::new(
         "Sweep — PIE-P cross-validated MAPE per scenario (pure + hybrid)",
-        &["Scenario", "Configs", "Runs", "MAPE", "±se", "Sync%", "Wall s"],
+        &["Scenario", "Configs", "Runs", "MAPE", "±se", "Sync%", "CritPct", "BoundBy", "Wall s"],
     );
     for r in &results {
         summary.row(vec![
@@ -312,6 +350,8 @@ pub(crate) fn cmd_sweep(args: &Args) {
             pct(r.mape),
             fnum(r.std_err, 2),
             pct(100.0 * r.sync_share),
+            pct(100.0 * r.crit_share),
+            r.bound_by.clone(),
             fnum(r.wall_s, 1),
         ]);
     }

@@ -62,6 +62,9 @@ pub(crate) fn cmd_tune(args: &Args) {
         slo_ms_per_token: args.get("slo-ms").and_then(|v| v.parse().ok()),
         strategies,
         threads: args.get_usize("threads", 0),
+        // Critical-path bound pruning is on by default; --no-prune keeps
+        // the exhaustive path (and an SLO disables pruning internally).
+        prune: !args.has("no-prune"),
     };
 
     eprintln!(
@@ -120,16 +123,18 @@ pub(crate) fn cmd_tune(args: &Args) {
     }
     print!("{}", argmin.render());
     println!(
-        "[tune] {} candidates ({} on the Pareto front) in {wall:?}; \
+        "[tune] {} candidates scored, {} pruned by the critical-path bound \
+         ({} on the Pareto front) in {wall:?}; \
          plan cache: {} lowerings, {} rebinds, {} shape hits; \
-         batched execution: {} batches × {:.1} lanes mean, {} serial fallbacks",
+         batched execution: {} batches × {} lanes mean, {} serial fallbacks",
         res.candidates.len(),
+        res.pruned,
         res.pareto.len(),
         res.cache.structure_lowerings,
         res.cache.rebinds,
         res.cache.shape_hits,
         res.cache.batches,
-        res.cache.mean_batch_width(),
+        res.cache.mean_batch_width_label(),
         res.cache.serial_fallbacks
     );
 

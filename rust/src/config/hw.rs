@@ -362,6 +362,15 @@ pub struct SimKnobs {
     /// (property-tested); off ⇒ each candidate runs its own walk (the
     /// pinned reference, also the `--no-batch` escape hatch).
     pub batch_execution: bool,
+    /// Capture an execution trace alongside every materialized timeline:
+    /// the engine records, per phase, the index of the plan op that
+    /// produced it (`trace::Trace`), which the observability layer
+    /// (`piep critpath`, the Perfetto exporter) joins back against the
+    /// `ExecPlan` for op-level span events. Off by default — when off the
+    /// engine allocates and records nothing, and every table is
+    /// byte-identical to the untraced path (the trace is derived data;
+    /// no simulation draw depends on it).
+    pub trace: bool,
 }
 
 impl Default for SimKnobs {
@@ -388,6 +397,7 @@ impl Default for SimKnobs {
             engine_threads: 1,
             reference_engine: false,
             batch_execution: true,
+            trace: false,
         }
     }
 }
@@ -409,6 +419,12 @@ impl SimKnobs {
     /// Enable/disable batched multi-candidate execution (`--no-batch`).
     pub fn with_batch_execution(mut self, on: bool) -> SimKnobs {
         self.batch_execution = on;
+        self
+    }
+
+    /// Enable/disable execution-trace capture (`trace::Trace` per run).
+    pub fn with_trace(mut self, on: bool) -> SimKnobs {
+        self.trace = on;
         self
     }
 }

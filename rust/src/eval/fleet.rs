@@ -84,6 +84,20 @@ pub struct FleetCell {
     pub rejected: usize,
     pub makespan_s: f64,
     pub scale_events: usize,
+    /// Steps per critical-path binding resource, aggregated over every
+    /// replica in the cell (`FleetResult::bound_hist`).
+    pub bound_hist: std::collections::BTreeMap<String, usize>,
+}
+
+impl FleetCell {
+    /// Modal binding resource across the cell's steps.
+    pub fn bound_by(&self) -> String {
+        self.bound_hist
+            .iter()
+            .max_by_key(|(_, &n)| n)
+            .map(|(b, _)| b.clone())
+            .unwrap_or_else(|| "compute".into())
+    }
 }
 
 /// Fleet evaluation outcome.
@@ -154,6 +168,7 @@ pub fn score_cell(opts: &FleetOptions, trace: &Trace, replicas: usize, policy: R
         rejected: res.requests.len() - res.served().count(),
         makespan_s: res.makespan_s,
         scale_events: res.scale_events.len(),
+        bound_hist: res.bound_hist(),
     }
 }
 
@@ -242,6 +257,13 @@ mod tests {
             assert!(c.p50_latency_s > 0.0 && c.p99_latency_s >= c.p50_latency_s, "{}", c.label);
             assert_eq!(c.served + c.rejected, res.trace.len(), "{}", c.label);
             assert!(c.makespan_s > 0.0);
+            // Binding histogram is populated and names parse.
+            assert!(!c.bound_hist.is_empty(), "{}", c.label);
+            assert!(
+                crate::trace::critpath::BoundBy::parse(&c.bound_by()).is_some(),
+                "{}",
+                c.label
+            );
         }
     }
 }

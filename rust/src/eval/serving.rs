@@ -64,6 +64,13 @@ pub struct ServingOutcome {
     pub j_per_request_p99: f64,
     pub j_per_token: f64,
     pub occupancy: f64,
+    /// Step-duration-weighted busy fraction (kernels only).
+    pub busy_frac: f64,
+    /// Step-duration-weighted sync-wait fraction; the remainder
+    /// (1 − busy − wait) is idle.
+    pub wait_frac: f64,
+    /// Modal critical-path binding resource over the scenario's steps.
+    pub bound_by: String,
     pub sync_share: f64,
     pub makespan_s: f64,
     pub total_j: f64,
@@ -115,6 +122,12 @@ fn run_one(s: &ServeScenario, opts: &ServingOptions) -> ServingOutcome {
         ..ServeConfig::new(&s.model, s.parallelism, s.gpus)
     };
     let res = serve::serve(&trace, &cfg, &opts.hw, &opts.knobs);
+    let bound_by = res
+        .bound_hist
+        .iter()
+        .max_by_key(|(_, &n)| n)
+        .map(|(b, _)| b.clone())
+        .unwrap_or_else(|| "compute".into());
     ServingOutcome {
         label: s.label.clone(),
         requests: res.requests.len(),
@@ -124,6 +137,9 @@ fn run_one(s: &ServeScenario, opts: &ServingOptions) -> ServingOutcome {
         j_per_request_p99: res.energy_percentile_j(99.0),
         j_per_token: res.energy_per_token_j(),
         occupancy: res.occupancy,
+        busy_frac: res.busy_frac,
+        wait_frac: res.wait_frac,
+        bound_by,
         sync_share: res.sync_share,
         makespan_s: res.makespan_s,
         total_j: res.total_energy_j,
@@ -177,6 +193,15 @@ mod tests {
             assert!(x.j_per_token > 0.0);
             assert!(x.occupancy > 0.0 && x.occupancy <= 1.0);
             assert!(x.rejected == 0 && x.requests == opts.requests);
+            // Occupancy split: busy + wait + idle partition the steps.
+            assert!(x.busy_frac > 0.0 && x.busy_frac + x.wait_frac <= 1.0 + 1e-9);
+            assert!(x.wait_frac >= 0.0);
+            assert!(
+                crate::trace::critpath::BoundBy::parse(&x.bound_by).is_some(),
+                "{}: {}",
+                x.label,
+                x.bound_by
+            );
         }
     }
 }

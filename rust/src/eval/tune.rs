@@ -51,6 +51,14 @@ pub struct TuneOptions {
     pub strategies: Option<Vec<Parallelism>>,
     /// Worker threads over the candidate axis (0 ⇒ available cores).
     pub threads: usize,
+    /// Critical-path bound pruning: skip simulating candidates whose
+    /// deterministic energy lower bound (`trace::critpath::floor_resolve`)
+    /// already exceeds the incumbent J/token. The J/token argmin is
+    /// provably unchanged (proptest-pinned against the exhaustive path);
+    /// the candidate table and Pareto front shrink to the survivors.
+    /// Ignored under a latency SLO (the SLO-feasible argmin needs latency
+    /// scores the bound does not provide) and under the reference engine.
+    pub prune: bool,
 }
 
 impl Default for TuneOptions {
@@ -68,6 +76,7 @@ impl Default for TuneOptions {
             slo_ms_per_token: None,
             strategies: None,
             threads: 0,
+            prune: false,
         }
     }
 }
@@ -111,6 +120,9 @@ pub struct TuneResult {
     /// structure lowering per mesh topology; the batch axis and repeated
     /// passes rebind/hit (asserted by the integration tests).
     pub cache: CacheStats,
+    /// Candidates skipped without simulation by the critical-path energy
+    /// lower bound (0 unless `TuneOptions::prune` was in effect).
+    pub pruned: usize,
 }
 
 /// Enumerate the search grid: (parallelism, gpus, batch), VRAM-gated.
@@ -208,6 +220,78 @@ fn candidate_from_records(cfg: &RunConfig, opts: &TuneOptions, records: &[RunRec
     }
 }
 
+/// Per-candidate critical-path energy lower bound: the mean over the same
+/// seeded passes `score` runs of the deterministic floor resolve
+/// (`simulator::run::floor_energy_per_token`). Because each pass's floor
+/// is ≤ that pass's realized J/token, the mean floor is ≤ the mean score —
+/// a candidate whose bound exceeds an *achieved* incumbent J/token is
+/// strictly worse than the incumbent and cannot be the argmin.
+fn candidate_bound(cfg: &RunConfig, opts: &TuneOptions, cache: &PlanCache) -> f64 {
+    let spec =
+        models::by_name(&cfg.model).unwrap_or_else(|| panic!("unknown model {}", cfg.model));
+    let passes = opts.passes.max(1);
+    let mut acc = 0.0;
+    for pass in 0..passes {
+        let seeded = cfg.clone().with_seed(opts.base_seed ^ (pass as u64 + 1));
+        let plan = cache.get_or_lower(&seeded, &opts.hw, &opts.knobs);
+        acc += crate::simulator::run::floor_energy_per_token(
+            &seeded, &opts.hw, &opts.knobs, &spec, &plan,
+        );
+    }
+    acc / passes as f64
+}
+
+/// Scoring wave width of the pruned search. A fixed constant (not the
+/// thread count) so the set of evaluated candidates — and therefore the
+/// result — is identical across thread counts.
+const PRUNE_WAVE: usize = 8;
+
+/// Branch-and-bound candidate scoring: bound every candidate with the
+/// cheap deterministic floor, walk the grid in bound-ascending order, and
+/// stop simulating once the bound alone proves the remaining candidates
+/// cannot beat the incumbent J/token. Returns the scored survivors and
+/// the pruned count.
+fn prune_and_score(
+    grid: &[RunConfig],
+    opts: &TuneOptions,
+    cache: &PlanCache,
+) -> (Vec<TuneCandidate>, usize) {
+    let idx: Vec<usize> = (0..grid.len()).collect();
+    let bounds = par::par_map(&idx, opts.threads, |&i| candidate_bound(&grid[i], opts, cache));
+    let mut order = idx;
+    order.sort_by(|&a, &b| {
+        bounds[a]
+            .total_cmp(&bounds[b])
+            .then_with(|| grid[a].key().cmp(&grid[b].key()))
+    });
+    let mut scored: Vec<TuneCandidate> = Vec::new();
+    let mut incumbent = f64::INFINITY;
+    let mut at = 0;
+    while at < order.len() {
+        // Bounds are ascending, so once the next bound clears the
+        // incumbent every remaining candidate is pruned.
+        let wave: Vec<usize> = order[at..]
+            .iter()
+            .copied()
+            .take(PRUNE_WAVE)
+            .take_while(|&k| bounds[k] <= incumbent)
+            .collect();
+        if wave.is_empty() {
+            break;
+        }
+        at += wave.len();
+        let batch = par::par_map(&wave, opts.threads, |&k| score(&grid[k], opts, cache));
+        for c in &batch {
+            if c.j_per_token < incumbent {
+                incumbent = c.j_per_token;
+            }
+        }
+        scored.extend(batch);
+    }
+    let pruned = grid.len() - scored.len();
+    (scored, pruned)
+}
+
 /// Non-dominated filter over (J/token, ms/token) on a J-token-sorted list:
 /// a candidate is on the front iff it is strictly faster than everything
 /// cheaper than it.
@@ -232,8 +316,13 @@ fn pareto_front(sorted: &[TuneCandidate]) -> Vec<TuneCandidate> {
 pub fn run_tune(opts: &TuneOptions) -> TuneResult {
     let grid = tune_grid(opts);
     let cache = PlanCache::new();
+    let prune = opts.prune && opts.slo_ms_per_token.is_none() && !opts.knobs.reference_engine;
+    if prune {
+        let (candidates, pruned) = prune_and_score(&grid, opts, &cache);
+        return finish_tune(candidates, pruned, &cache);
+    }
     let batched = opts.knobs.batch_execution && !opts.knobs.reference_engine;
-    let mut candidates = if batched {
+    let candidates = if batched {
         let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
         for (i, cfg) in grid.iter().enumerate() {
             groups
@@ -250,6 +339,11 @@ pub fn run_tune(opts: &TuneOptions) -> TuneResult {
     } else {
         par::par_map(&grid, opts.threads, |cfg| score(cfg, opts, &cache))
     };
+    finish_tune(candidates, 0, &cache)
+}
+
+/// Sort the scored candidates and derive the fronts and argmins.
+fn finish_tune(mut candidates: Vec<TuneCandidate>, pruned: usize, cache: &PlanCache) -> TuneResult {
     candidates.sort_by(|a, b| {
         a.j_per_token
             .total_cmp(&b.j_per_token)
@@ -268,6 +362,7 @@ pub fn run_tune(opts: &TuneOptions) -> TuneResult {
         argmin_j_token,
         argmin_j_request,
         cache: cache.stats(),
+        pruned,
     }
 }
 
@@ -419,5 +514,67 @@ mod tests {
             assert!(c.ms_per_token > 0.0 && c.wall_s > 0.0);
         }
         assert!(res.argmin_j_token.is_some() && res.argmin_j_request.is_some());
+    }
+
+    #[test]
+    fn pruned_tuner_keeps_the_exhaustive_argmin() {
+        let full = run_tune(&tiny_opts());
+        let pruned = run_tune(&TuneOptions {
+            prune: true,
+            ..tiny_opts()
+        });
+        // Bit-identical argmin: same deployment, same score.
+        let (a, b) = (full.argmin_j_token.unwrap(), pruned.argmin_j_token.unwrap());
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.j_per_token, b.j_per_token);
+        // Every survivor scores exactly as in the exhaustive search.
+        assert_eq!(pruned.candidates.len() + pruned.pruned, full.candidates.len());
+        for c in &pruned.candidates {
+            let f = full.candidates.iter().find(|f| f.key == c.key).unwrap();
+            assert_eq!(c.j_per_token, f.j_per_token, "{}", c.key);
+            assert_eq!(c.ms_per_token, f.ms_per_token, "{}", c.key);
+        }
+    }
+
+    #[test]
+    fn pruned_tuner_is_deterministic_across_thread_counts() {
+        let opts = TuneOptions {
+            prune: true,
+            ..tiny_opts()
+        };
+        let a = run_tune(&TuneOptions { threads: 1, ..opts.clone() });
+        let b = run_tune(&TuneOptions { threads: 4, ..opts });
+        assert_eq!(a.pruned, b.pruned);
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.j_per_token, y.j_per_token);
+        }
+    }
+
+    #[test]
+    fn default_grid_prunes_at_least_one_candidate() {
+        // The CLI's default search grid (same candidates, shortened decode
+        // for test speed): the spread between the best and worst
+        // deployments is wide enough that the floor bound must retire at
+        // least one candidate without simulation.
+        let opts = TuneOptions {
+            prune: true,
+            knobs: SimKnobs {
+                sim_decode_steps: 4,
+                ..SimKnobs::default()
+            },
+            ..TuneOptions::default()
+        };
+        let res = run_tune(&opts);
+        assert!(res.pruned >= 1, "no candidate pruned on the default grid");
+        assert!(res.argmin_j_token.is_some());
+        // An SLO disables pruning: latency scores are required for every
+        // candidate.
+        let slo = run_tune(&TuneOptions {
+            slo_ms_per_token: Some(1e9),
+            ..opts
+        });
+        assert_eq!(slo.pruned, 0);
     }
 }

@@ -89,6 +89,12 @@ pub mod module_feat {
 /// Indices of the model-structure features (for the Table-9 ablation).
 pub const STRUCT_FEATURE_IDX: [usize; 5] = [27, 28, 29, 30, 31];
 
+/// Index of the critical-path energy-share feature (`RunRecord::crit_frac`,
+/// DESIGN.md §15). Default-off (`FeatureOpts::use_crit`) so the trained
+/// models and their padding contract are byte-stable; lives in the padding
+/// tail, past the last module-descriptor slot.
+pub const CRIT_SHARE_IDX: usize = 43;
+
 /// Options controlling which feature groups are populated (ablations).
 #[derive(Debug, Clone, Copy)]
 pub struct FeatureOpts {
@@ -97,6 +103,10 @@ pub struct FeatureOpts {
     /// Include synchronization-sampling wait features (Appendix J ablation
     /// — "PIE-P w/o waiting" — toggles off).
     pub use_wait: bool,
+    /// Include the critical-path energy-share feature
+    /// (`CRIT_SHARE_IDX`). Off by default: the padding tail of the
+    /// feature vector is part of the trained-model contract.
+    pub use_crit: bool,
 }
 
 impl Default for FeatureOpts {
@@ -104,6 +114,7 @@ impl Default for FeatureOpts {
         FeatureOpts {
             use_struct: true,
             use_wait: true,
+            use_crit: false,
         }
     }
 }
@@ -158,6 +169,9 @@ pub fn run_features(r: &RunRecord, opts: FeatureOpts) -> Vec<f64> {
         x[29] = logf(r.spec.hidden as f64 / 1e3);
         x[30] = logf(r.spec.heads as f64);
         x[31] = logf(r.spec.kv_heads as f64);
+    }
+    if opts.use_crit {
+        x[CRIT_SHARE_IDX] = r.crit_frac();
     }
     x
 }
@@ -373,6 +387,27 @@ mod tests {
     #[test]
     fn feature_names_match_count() {
         assert_eq!(RUN_FEATURE_NAMES.len(), RUN_FEATURES);
+    }
+
+    #[test]
+    fn crit_feature_is_opt_in_and_stays_in_the_padding_tail() {
+        let r = record();
+        let off = run_features(&r, FeatureOpts::default());
+        assert_eq!(off[CRIT_SHARE_IDX], 0.0, "default-off keeps padding zero");
+        let on = run_features(
+            &r,
+            FeatureOpts {
+                use_crit: true,
+                ..FeatureOpts::default()
+            },
+        );
+        assert!(on[CRIT_SHARE_IDX] > 0.0 && on[CRIT_SHARE_IDX] <= 1.0);
+        // Only the crit slot differs.
+        for i in 0..FEATURE_DIM {
+            if i != CRIT_SHARE_IDX {
+                assert_eq!(off[i], on[i], "slot {i}");
+            }
+        }
     }
 
     #[test]

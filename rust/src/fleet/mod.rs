@@ -188,6 +188,18 @@ impl FleetResult {
         let xs: Vec<f64> = self.served().map(|f| f.record.latency_s()).collect();
         percentile(&xs, p)
     }
+
+    /// Steps per critical-path binding resource, aggregated across every
+    /// replica (`ServeResult::bound_hist` summed cluster-wide).
+    pub fn bound_hist(&self) -> BTreeMap<String, usize> {
+        let mut out: BTreeMap<String, usize> = BTreeMap::new();
+        for r in &self.replicas {
+            for (b, n) in &r.result.bound_hist {
+                *out.entry(b.clone()).or_insert(0) += n;
+            }
+        }
+        out
+    }
 }
 
 /// Advance every replica to `t`. With `batch_execution` on, each round of
@@ -390,6 +402,10 @@ mod tests {
             assert!(rel < 1e-9, "{policy:?}: rel {rel}");
             assert!(res.cluster_energy_j > 0.0 && res.makespan_s > 0.0);
             assert!(res.j_per_token() > 0.0);
+            // Binding-resource histogram covers every executed step.
+            let total_steps: usize = res.replicas.iter().map(|r| r.result.steps.len()).sum();
+            let counted: usize = res.bound_hist().values().sum();
+            assert_eq!(counted, total_steps, "{policy:?}");
         }
     }
 

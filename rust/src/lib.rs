@@ -35,6 +35,7 @@ pub mod runtime;
 pub mod serve;
 pub mod simulator;
 pub mod telemetry;
+pub mod trace;
 pub mod tree;
 pub mod util;
 pub mod workload;

@@ -156,7 +156,7 @@ pub fn structure_key(knobs: &SimKnobs, cfg: &RunConfig) -> String {
 /// jittered collectives, the launch-desync scale. The compiled and
 /// reference paths must observe this sequence draw-for-draw — keeping it
 /// in one place is what makes their bit-identity contract robust to edits.
-fn run_stochastics(
+pub(crate) fn run_stochastics(
     num_ranks: usize,
     draws_sync_jitter: bool,
     spec: &ModelSpec,
@@ -194,7 +194,7 @@ pub fn execute_plan(
 ) -> BuiltRun {
     let (skew, sync_jitter) =
         run_stochastics(plan.num_ranks, plan.draws_sync_jitter, spec, knobs, power, rng);
-    engine::execute(plan, power, &skew, sync_jitter, rng, threads)
+    engine::execute(plan, power, &skew, sync_jitter, rng, threads, knobs.trace)
 }
 
 /// Execute a compiled `ExecPlan` under one run's stochastic conditions —
@@ -217,7 +217,7 @@ pub fn execute_compiled(
         power,
         rng,
     );
-    engine::execute_compiled(plan, power, &skew, sync_jitter, rng, threads)
+    engine::execute_compiled(plan, power, &skew, sync_jitter, rng, threads, knobs.trace)
 }
 
 /// Execute K shape-bindings of one mesh structure in a single engine walk
@@ -256,7 +256,7 @@ pub fn execute_batch(
             }
         })
         .collect();
-    let runs = engine::execute_batch(batch, &mut lanes, threads);
+    let runs = engine::execute_batch(batch, &mut lanes, threads, knobs.trace);
     runs.into_iter()
         .zip(lanes)
         .map(|(run, lane)| (run, lane.power, lane.rng))

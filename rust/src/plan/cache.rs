@@ -79,6 +79,16 @@ impl CacheStats {
         }
         self.batched_lanes as f64 / self.batches as f64
     }
+
+    /// Mean batch width formatted for summary lines: `"-"` when no
+    /// batched walk ran (printing `0.0` would read as a measured width).
+    pub fn mean_batch_width_label(&self) -> String {
+        if self.batches == 0 {
+            "-".into()
+        } else {
+            format!("{:.1}", self.mean_batch_width())
+        }
+    }
 }
 
 /// Thread-safe two-level map from configuration identity to its compiled
@@ -171,6 +181,17 @@ mod tests {
             sim_decode_steps: 4,
             ..SimKnobs::default()
         }
+    }
+
+    #[test]
+    fn mean_batch_width_guards_the_zero_batch_case() {
+        let mut st = CacheStats::default();
+        assert_eq!(st.mean_batch_width(), 0.0);
+        assert_eq!(st.mean_batch_width_label(), "-", "no batches ⇒ no width");
+        st.batches = 2;
+        st.batched_lanes = 7;
+        assert_eq!(st.mean_batch_width(), 3.5);
+        assert_eq!(st.mean_batch_width_label(), "3.5");
     }
 
     #[test]

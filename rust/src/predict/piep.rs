@@ -106,6 +106,7 @@ impl PiepOptions {
         FeatureOpts {
             use_struct: self.use_struct,
             use_wait: self.use_wait,
+            ..FeatureOpts::default()
         }
     }
 

@@ -118,6 +118,7 @@ pub fn run_to_json(r: &RunRecord) -> Json {
         ),
         ("unattributed_j", num(r.unattributed_j)),
         ("gpu_util", vecf(&r.gpu_util)),
+        ("wait_frac", num(r.wait_frac)),
         ("gpu_mem_util", vecf(&r.gpu_mem_util)),
         ("gpu_clock", vecf(&r.gpu_clock_ghz)),
         ("gpu_mem_clock", vecf(&r.gpu_mem_clock_ghz)),
@@ -131,6 +132,8 @@ pub fn run_to_json(r: &RunRecord) -> Json {
         ("host_activity", num(r.host_activity)),
         ("nodes", num(r.nodes as f64)),
         ("tier_bw_ratio", num(r.tier_bw_ratio)),
+        ("crit_share_j", num(r.crit_share_j)),
+        ("bound_by", s(&r.bound_by)),
     ])
 }
 
@@ -187,6 +190,8 @@ pub fn run_from_json(j: &Json) -> Result<RunRecord, String> {
         nvml_gpu_j: getv(j, "nvml_gpu_j")?,
         nvml_total_j: getf(j, "nvml_total_j")?,
         gpu_util: getv(j, "gpu_util")?,
+        // v3: occupancy wait share (pre-v3 records folded wait into idle).
+        wait_frac: j.get("wait_frac").and_then(Json::as_f64).unwrap_or(0.0),
         gpu_mem_util: getv(j, "gpu_mem_util")?,
         gpu_clock_ghz: getv(j, "gpu_clock")?,
         gpu_mem_clock_ghz: getv(j, "gpu_mem_clock")?,
@@ -205,14 +210,23 @@ pub fn run_from_json(j: &Json) -> Result<RunRecord, String> {
         // all single-node single-tier.
         nodes: j.get("nodes").and_then(Json::as_f64).unwrap_or(1.0) as usize,
         tier_bw_ratio: j.get("tier_bw_ratio").and_then(Json::as_f64).unwrap_or(1.0),
+        // Critical-path attribution: absent in pre-v3 datasets (no
+        // critpath pass had run); zero share marks "unknown".
+        crit_share_j: j.get("crit_share_j").and_then(Json::as_f64).unwrap_or(0.0),
+        bound_by: j
+            .get("bound_by")
+            .and_then(Json::as_str)
+            .unwrap_or("compute")
+            .to_string(),
     })
 }
 
 /// Save a profiled dataset (runs; the sync DB is rebuilt on load).
 pub fn save_dataset(runs: &[RunRecord], path: &str) -> std::io::Result<()> {
     let j = obj(vec![
-        // v2: phase-resolved comm splits + unattributed residual.
-        ("format", s("piep-dataset-v2")),
+        // v3: critical-path attribution (v2 added phase-resolved comm
+        // splits + unattributed residual).
+        ("format", s("piep-dataset-v3")),
         ("runs", Json::Arr(runs.iter().map(run_to_json).collect())),
     ]);
     std::fs::write(path, j.render())
@@ -222,8 +236,13 @@ pub fn save_dataset(runs: &[RunRecord], path: &str) -> std::io::Result<()> {
 pub fn load_dataset(path: &str) -> Result<super::Dataset, String> {
     let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
     let j = Json::parse(&text)?;
-    if j.get("format").and_then(Json::as_str) != Some("piep-dataset-v2") {
-        return Err("not a piep dataset file (expected piep-dataset-v2)".into());
+    // v2 files load with critical-path fields defaulted — the attribution
+    // did not exist when they were profiled.
+    if !matches!(
+        j.get("format").and_then(Json::as_str),
+        Some("piep-dataset-v2") | Some("piep-dataset-v3")
+    ) {
+        return Err("not a piep dataset file (expected piep-dataset-v2/v3)".into());
     }
     let runs: Result<Vec<RunRecord>, String> = j
         .get("runs")
@@ -482,6 +501,9 @@ mod tests {
             assert_eq!(a.gpu_util, b.gpu_util);
             assert_eq!(a.nodes, b.nodes);
             assert_eq!(a.tier_bw_ratio, b.tier_bw_ratio);
+            assert!((a.crit_share_j - b.crit_share_j).abs() < 1e-9);
+            assert_eq!(a.bound_by, b.bound_by);
+            assert!((a.wait_frac - b.wait_frac).abs() < 1e-12);
         }
         // Sync DB rebuilt identically.
         assert_eq!(loaded.sync_db.groups(), ds.sync_db.groups());
@@ -556,6 +578,35 @@ mod tests {
         // Schema v4 roundtrips the routed records bit-for-bit.
         assert_eq!(res.requests, loaded);
         assert!(load_serve_records(path).is_err(), "v4 is not a v3 file");
+    }
+
+    #[test]
+    fn v2_datasets_load_with_defaulted_crit_fields() {
+        let ds = tiny_dataset();
+        let path = "target/test-store-dataset-v2.json";
+        save_dataset(&ds.runs, path).unwrap();
+        // Rewrite to the v2 lineage: old header, no crit fields.
+        let mut j = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        if let Json::Obj(fields) = &mut j {
+            fields.insert("format".into(), s("piep-dataset-v2"));
+            if let Some(Json::Arr(runs)) = fields.get_mut("runs") {
+                for r in runs {
+                    if let Json::Obj(rf) = r {
+                        rf.remove("crit_share_j");
+                        rf.remove("bound_by");
+                        rf.remove("wait_frac");
+                    }
+                }
+            }
+        }
+        std::fs::write(path, j.render()).unwrap();
+        let loaded = load_dataset(path).unwrap();
+        assert_eq!(loaded.runs.len(), ds.runs.len());
+        for r in &loaded.runs {
+            assert_eq!(r.crit_share_j, 0.0, "absent ⇒ unknown");
+            assert_eq!(r.bound_by, "compute");
+            assert_eq!(r.wait_frac, 0.0);
+        }
     }
 
     #[test]

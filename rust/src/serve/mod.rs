@@ -114,6 +114,15 @@ pub struct StepRecord {
     pub sync_j: f64,
     /// Network-transfer share, J.
     pub transfer_j: f64,
+    /// Mean fraction of the step the ranks spent running kernels
+    /// (`Timeline::occupancy_split` busy component).
+    pub busy_frac: f64,
+    /// Mean fraction spent blocked at synchronization points. The
+    /// remainder (1 − busy − wait) is idle.
+    pub wait_frac: f64,
+    /// Binding resource of the step's critical path
+    /// (`trace::critpath::BoundBy` name).
+    pub bound_by: String,
 }
 
 /// Outcome of replaying one trace.
@@ -128,6 +137,16 @@ pub struct ServeResult {
     pub total_energy_j: f64,
     /// Mean resident sequences per decode step / `max_batch_requests`.
     pub occupancy: f64,
+    /// Step-duration-weighted mean GPU busy fraction (kernels only —
+    /// sync-wait time is reported separately in `wait_frac`, not folded
+    /// into busy).
+    pub busy_frac: f64,
+    /// Step-duration-weighted mean sync-wait fraction; the remainder
+    /// (1 − busy − wait) is idle.
+    pub wait_frac: f64,
+    /// Steps per critical-path binding resource
+    /// (`trace::critpath::BoundBy` name → step count).
+    pub bound_hist: std::collections::BTreeMap<String, usize>,
     /// Sync-wait share of communication energy across all steps.
     pub sync_share: f64,
     /// Peak reserved KV bytes observed.
@@ -446,6 +465,9 @@ impl Session {
                 energy_j: r.true_total_j,
                 sync_j: r.sync_wait_j(),
                 transfer_j: r.comm_transfer_j(),
+                busy_frac: crate::util::stats::mean(&r.gpu_util),
+                wait_frac: r.wait_frac,
+                bound_by: r.bound_by.clone(),
             });
             self.clock += r.wall_s;
             self.total_step_j += r.true_total_j;
@@ -486,6 +508,9 @@ impl Session {
             energy_j: r.true_total_j,
             sync_j: r.sync_wait_j(),
             transfer_j: r.comm_transfer_j(),
+            busy_frac: crate::util::stats::mean(&r.gpu_util),
+            wait_frac: r.wait_frac,
+            bound_by: r.bound_by.clone(),
         });
         self.clock += r.wall_s;
         self.total_step_j += r.true_total_j;
@@ -525,12 +550,28 @@ impl Session {
         };
         let sync_j: f64 = self.steps.iter().map(|s| s.sync_j).sum();
         let comm_j: f64 = self.steps.iter().map(|s| s.sync_j + s.transfer_j).sum();
+        // Step-duration-weighted occupancy split + binding-resource counts.
+        let step_time: f64 = self.steps.iter().map(|s| s.dur_s).sum();
+        let (mut busy_frac, mut wait_frac) = (0.0f64, 0.0f64);
+        let mut bound_hist: std::collections::BTreeMap<String, usize> = Default::default();
+        for st in &self.steps {
+            busy_frac += st.busy_frac * st.dur_s;
+            wait_frac += st.wait_frac * st.dur_s;
+            *bound_hist.entry(st.bound_by.clone()).or_insert(0) += 1;
+        }
+        if step_time > 0.0 {
+            busy_frac /= step_time;
+            wait_frac /= step_time;
+        }
         ServeResult {
             requests: self.records,
             steps: self.steps,
             makespan_s: self.clock,
             total_energy_j,
             occupancy,
+            busy_frac,
+            wait_frac,
+            bound_hist,
             sync_share: if comm_j > 0.0 { sync_j / comm_j } else { 0.0 },
             peak_kv_bytes: self.peak_kv,
             kv_budget_bytes: self.kv_budget,
@@ -657,6 +698,17 @@ mod tests {
         assert!(res.occupancy > 0.0 && res.occupancy <= 1.0);
         assert!(res.sync_share > 0.0 && res.sync_share < 1.0);
         assert!(res.makespan_s > 0.0);
+        // Occupancy split: busy and wait are both real on a TP deployment
+        // and leave room for idle (they never exceed the step).
+        assert!(res.busy_frac > 0.0 && res.busy_frac <= 1.0);
+        assert!(res.wait_frac > 0.0, "TP collectives must show wait time");
+        assert!(res.busy_frac + res.wait_frac <= 1.0 + 1e-9);
+        // Every step lands in the binding-resource histogram.
+        let counted: usize = res.bound_hist.values().sum();
+        assert_eq!(counted, res.steps.len());
+        for b in res.bound_hist.keys() {
+            assert!(crate::trace::critpath::BoundBy::parse(b).is_some(), "{b}");
+        }
     }
 
     #[test]

@@ -46,6 +46,10 @@ pub struct BuiltRun {
     pub sim_steps: usize,
     /// Total collective/P2P payload bytes moved per simulated decode step.
     pub comm_bytes_per_step: f64,
+    /// Execution trace (plan-op index per materialized phase), captured
+    /// when `SimKnobs::trace` is on; `None` otherwise — the capture is the
+    /// knob's only cost, the resolved run is identical either way.
+    pub trace: Option<crate::trace::Trace>,
 }
 
 /// Resolved stochastic state of one run: everything pass 2 needs to expand
@@ -462,8 +466,15 @@ fn materialize(
     res: Resolved,
     sim_steps: usize,
     comm_bytes_per_step: f64,
+    trace: bool,
 ) -> BuiltRun {
     keyed.sort_unstable_by_key(|(k, _)| *k);
+    // The op index is the high bits of the emission key (`seq_key`), so
+    // the trace capture is a projection of the sort — no extra bookkeeping
+    // in the walk, and strictly zero work when the knob is off.
+    let trace = trace.then(|| crate::trace::Trace {
+        ops: keyed.iter().map(|(k, _)| (k >> 24) as u32).collect(),
+    });
     let phases: Vec<Phase> = keyed.into_iter().map(|(_, p)| p).collect();
 
     let mut timeline = Timeline::from_parts(
@@ -483,6 +494,7 @@ fn materialize(
         prefill_end: res.prefill_end,
         sim_steps,
         comm_bytes_per_step,
+        trace,
     }
 }
 
@@ -499,6 +511,7 @@ pub fn execute_compiled(
     sync_jitter: f64,
     rng: &mut Rng,
     threads: usize,
+    trace: bool,
 ) -> BuiltRun {
     let res = resolve_compiled(ep, skew, sync_jitter, rng);
 
@@ -506,7 +519,7 @@ pub fn execute_compiled(
     let ranks: Vec<usize> = (0..num_ranks).collect();
     let per_rank = par::par_map(&ranks, threads, |&r| rank_phases_compiled(ep, &res, power, r));
     let keyed: Vec<(u64, Phase)> = per_rank.into_iter().flatten().collect();
-    materialize(num_ranks, power, keyed, res, ep.scalars.sim_steps, ep.scalars.comm_bytes_per_step)
+    materialize(num_ranks, power, keyed, res, ep.scalars.sim_steps, ep.scalars.comm_bytes_per_step, trace)
 }
 
 /// Per-lane stochastic state of a batched execution. Each candidate owns
@@ -636,7 +649,7 @@ fn resolve_batch(batch: &ExecBatch, lanes: &mut [BatchLane]) -> Vec<Resolved> {
 /// (lane, rank) pairs through the `util::par` pool. Returns one
 /// `BuiltRun` per lane, each bit-identical to what `execute_compiled`
 /// would produce for that lane's plan and stochastic state alone.
-pub fn execute_batch(batch: &ExecBatch, lanes: &mut [BatchLane], threads: usize) -> Vec<BuiltRun> {
+pub fn execute_batch(batch: &ExecBatch, lanes: &mut [BatchLane], threads: usize, trace: bool) -> Vec<BuiltRun> {
     assert_eq!(lanes.len(), batch.width(), "one stochastic lane per candidate");
     let reses = resolve_batch(batch, lanes);
     let lanes: &[BatchLane] = lanes;
@@ -664,6 +677,7 @@ pub fn execute_batch(batch: &ExecBatch, lanes: &mut [BatchLane], threads: usize)
             res,
             sc.sim_steps,
             sc.comm_bytes_per_step,
+            trace,
         ));
     }
     runs
@@ -679,6 +693,7 @@ pub fn execute(
     sync_jitter: f64,
     rng: &mut Rng,
     threads: usize,
+    trace: bool,
 ) -> BuiltRun {
     let res = resolve(plan, skew, sync_jitter, rng);
 
@@ -690,7 +705,7 @@ pub fn execute(
     let ranks: Vec<usize> = (0..plan.num_ranks).collect();
     let per_rank = par::par_map(&ranks, threads, |&r| rank_phases(plan, &res, power, r));
     let keyed: Vec<(u64, Phase)> = per_rank.into_iter().flatten().collect();
-    materialize(plan.num_ranks, power, keyed, res, plan.sim_steps, plan.comm_bytes_per_step)
+    materialize(plan.num_ranks, power, keyed, res, plan.sim_steps, plan.comm_bytes_per_step, trace)
 }
 
 #[cfg(test)]
@@ -721,7 +736,7 @@ mod tests {
         b.compute(0..4, t(1e-3), ModuleKind::Mlp, 0, 0);
         b.collective(0..4, ModuleKind::AllReduce, 0, 0, 1e-4, false, WaitRecord::All);
         let plan = b.finish(1, 0.0, false);
-        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1);
+        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1, false);
         // All four ranks end at rendezvous + transfer.
         let end = run.timeline.clock(0);
         for r in 1..4 {
@@ -741,7 +756,7 @@ mod tests {
         b.recv(1..2, 1, 0, e);
         b.compute(1..2, t(1e-3), ModuleKind::Mlp, 1, 0);
         let plan = b.finish(1, 0.0, false);
-        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1);
+        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1, false);
         let tl = &run.timeline;
         // Receiver's first phase is the recorded busy-wait on the edge.
         let first = tl.phases.iter().find(|p| p.gpu == 1).unwrap();
@@ -765,7 +780,7 @@ mod tests {
         b.compute(0..2, t(1e-3), ModuleKind::Mlp, 0, 1);
         b.collective(0..2, ModuleKind::P2PTransfer, 0, 1, 0.0, false, WaitRecord::None);
         let plan = b.finish(1, 0.0, false);
-        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1);
+        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1, false);
         assert!(run.wait_samples.is_empty());
         assert!(run
             .timeline
@@ -792,7 +807,7 @@ mod tests {
         let exec = |threads: usize| {
             let mut rng = Rng::new(11);
             let skew = SkewModel::new(&SimKnobs::default(), 4, &mut rng);
-            execute(&plan, &power, &skew, 40e-6, &mut rng, threads)
+            execute(&plan, &power, &skew, 40e-6, &mut rng, threads, false)
         };
         let (a, b) = (exec(1), exec(4));
         assert_eq!(a.wait_samples, b.wait_samples);
@@ -829,9 +844,9 @@ mod tests {
             let mut rng = Rng::new(23);
             let skew = SkewModel::new(&SimKnobs::default(), 4, &mut rng);
             if compiled {
-                execute_compiled(&ep, &power, &skew, 40e-6, &mut rng, 1)
+                execute_compiled(&ep, &power, &skew, 40e-6, &mut rng, 1, false)
             } else {
-                execute(&plan, &power, &skew, 40e-6, &mut rng, 1)
+                execute(&plan, &power, &skew, 40e-6, &mut rng, 1, false)
             }
         };
         let (a, b) = (run(false), run(true));
@@ -893,7 +908,7 @@ mod tests {
             .enumerate()
             .map(|(l, ep)| {
                 let (power, skew, mut rng) = lane_state(100 + l as u64);
-                execute_compiled(ep, &power, &skew, 40e-6, &mut rng, 1)
+                execute_compiled(ep, &power, &skew, 40e-6, &mut rng, 1, false)
             })
             .collect();
         for threads in [1usize, 4] {
@@ -909,7 +924,7 @@ mod tests {
                 })
                 .collect();
             let batch = ExecBatch::new(plans.clone());
-            let batched = execute_batch(&batch, &mut lanes, threads);
+            let batched = execute_batch(&batch, &mut lanes, threads, false);
             assert_eq!(batched.len(), serial.len());
             for (a, b) in serial.iter().zip(&batched) {
                 assert_eq!(a.wait_samples, b.wait_samples);
@@ -938,7 +953,7 @@ mod tests {
         b.compute(0..1, t(5e-3), ModuleKind::Mlp, 0, 0);
         b.compute(1..2, t(1e-3), ModuleKind::Mlp, 0, 0);
         let plan = b.finish(1, 0.0, false);
-        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1);
+        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1, false);
         let idle = run
             .timeline
             .phases
@@ -951,13 +966,48 @@ mod tests {
     }
 
     #[test]
+    fn trace_capture_aligns_ops_with_phases() {
+        let (power, skew, mut rng) = setup();
+        let mut b = PlanBuilder::new(4);
+        b.compute(0..4, t(1e-3), ModuleKind::SelfAttention, 0, 0);
+        b.collective(0..4, ModuleKind::AllReduce, 0, 0, 1e-4, false, WaitRecord::All);
+        let e = b.send(0..2, 0, 0, 2e-4);
+        b.recv(2..4, 0, 0, e);
+        let plan = b.finish(1, 0.0, false);
+        let ep = crate::plan::exec::compile(&plan);
+        let run = execute_compiled(&ep, &power, &skew, 0.0, &mut rng, 1, true);
+        let trace = run.trace.as_ref().expect("trace captured when on");
+        // One entry per materialized phase, none for the idle tails.
+        assert!(trace.ops.len() <= run.timeline.phases.len());
+        for (i, p) in run.timeline.phases.iter().enumerate() {
+            match trace.op_of(i) {
+                Some(op) => {
+                    // The op the phase maps to really covers its rank.
+                    let r = ep.structure.ranks[op as usize];
+                    assert!(r.contains(p.gpu as usize), "phase {i} op {op}");
+                    assert_eq!(p.step, ep.structure.step[op as usize]);
+                }
+                None => assert_eq!(p.kind, PhaseKind::Idle, "only idle tails lack an op"),
+            }
+        }
+        // Op indices are nondecreasing — the emission-key projection.
+        assert!(trace.ops.windows(2).all(|w| w[0] <= w[1]));
+        // Knob off: identical run, no capture.
+        let mut rng2 = Rng::new(7);
+        let skew2 = SkewModel::new(&SimKnobs::default(), 4, &mut rng2);
+        let off = execute_compiled(&ep, &power, &skew2, 0.0, &mut rng2, 1, false);
+        assert!(off.trace.is_none());
+        assert_eq!(off.timeline.gpu_energy_j(), run.timeline.gpu_energy_j());
+    }
+
+    #[test]
     fn prefill_end_tracks_step_zero_ops_only() {
         let (power, skew, mut rng) = setup();
         let mut b = PlanBuilder::new(2);
         b.compute(0..2, t(1e-3), ModuleKind::Mlp, 0, 0);
         b.compute(0..2, t(5e-3), ModuleKind::Mlp, 0, 1);
         let plan = b.finish(1, 0.0, false);
-        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1);
+        let run = execute(&plan, &power, &skew, 0.0, &mut rng, 1, false);
         assert!(run.prefill_end > 0.0);
         assert!(run.prefill_end < run.timeline.makespan());
     }

@@ -18,6 +18,7 @@ use crate::plan::ExecPlan;
 use crate::simulator::power::PowerModel;
 use crate::simulator::timeline::{ModuleKind, PhaseKind};
 use crate::telemetry;
+use crate::trace::critpath;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -62,6 +63,13 @@ pub struct RunRecord {
 
     // --- runtime features (Table 1) ---
     pub gpu_util: Vec<f64>,
+    /// Mean fraction of the run the ranks spent blocked at synchronization
+    /// points (`Timeline::occupancy_split` wait component, averaged over
+    /// GPUs). `gpu_util` is the busy component — nvidia-smi counts neither
+    /// sync busy-waits nor idle as utilization, so serving occupancy
+    /// tables report busy/wait/idle separately instead of folding wait
+    /// into busy.
+    pub wait_frac: f64,
     pub gpu_mem_util: Vec<f64>,
     pub gpu_clock_ghz: Vec<f64>,
     pub gpu_mem_clock_ghz: Vec<f64>,
@@ -89,6 +97,17 @@ pub struct RunRecord {
     /// Intra/inter link bandwidth ratio (1.0 when single-tier) — how much
     /// slower the boundary-crossing ring steps run.
     pub tier_bw_ratio: f64,
+
+    // --- critical-path attribution (trace::critpath, DESIGN.md §15) ---
+    /// GPU-side energy on the makespan-defining critical path
+    /// (decode-scaled like `gpu_energy_j`), J. The remainder of
+    /// `gpu_energy_j` is slack (off-path compute/transfer, sync waits) and
+    /// idle.
+    pub crit_share_j: f64,
+    /// Binding resource of the critical path (`trace::critpath::BoundBy`
+    /// name: `"compute"`, `"collective"`, or `"p2p"` — inter-link
+    /// refinement needs the op-level trace, see `piep critpath`).
+    pub bound_by: String,
 }
 
 impl RunRecord {
@@ -127,6 +146,11 @@ impl RunRecord {
     /// Total network-transfer energy across all comm modules, J.
     pub fn comm_transfer_j(&self) -> f64 {
         self.comm_split_j.values().map(|(_, x)| x).sum()
+    }
+
+    /// Share of GPU-side energy on the critical path, in [0, 1].
+    pub fn crit_frac(&self) -> f64 {
+        self.crit_share_j / self.gpu_energy_j.max(1e-12)
     }
 }
 
@@ -205,6 +229,23 @@ pub fn simulate_run_planned(
     let built =
         parallelism::execute_compiled(plan, &spec, knobs, &c.power, &mut c.rng, knobs.engine_threads);
     finish_record(cfg, hw, knobs, spec, built, c.power, c.interference, c.rng)
+}
+
+/// Compile and execute one run with the trace capture forced on, returning
+/// the compiled plan and the raw engine output (timeline + execution
+/// trace) for the observability drivers (`piep critpath`, the Perfetto
+/// exporter). Conditions are drawn exactly as `simulate_run` draws them,
+/// so the timeline matches what the scoring paths resolve for the same
+/// seed.
+pub fn execute_traced(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> (ExecPlan, BuiltRun) {
+    let spec = models::by_name(&cfg.model)
+        .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
+    let knobs = knobs.clone().with_trace(true);
+    let plan = parallelism::compile(&spec, hw, &knobs, cfg);
+    let mut c = run_conditions(cfg, hw, &knobs);
+    let built =
+        parallelism::execute_compiled(&plan, &spec, &knobs, &c.power, &mut c.rng, knobs.engine_threads);
+    (plan, built)
 }
 
 /// Simulate K candidate runs of one mesh structure in a single batched
@@ -295,10 +336,18 @@ fn finish_record(
     let mut gpu_j = vec![0.0f64; g];
     let mut idle_j = 0.0f64;
     let mut busy_time = 0.0f64;
-    for p in &tl.phases {
+    // Critical-path pass over the materialized phases: pure arithmetic on
+    // resolved timestamps (no RNG), so it cannot perturb the seed stream —
+    // records are bit-identical with the trace knob on or off.
+    let cp = critpath::critical_path(tl);
+    let mut crit_share_j = 0.0f64;
+    for (pi, p) in tl.phases.iter().enumerate() {
         let s = if p.step == 0 { 1.0 } else { scale };
         let e = p.energy_j() * s;
         gpu_j[p.gpu as usize] += e;
+        if cp.on_path[pi] {
+            crit_share_j += e;
+        }
         if p.kind == PhaseKind::Idle {
             idle_j += e;
             continue;
@@ -402,6 +451,10 @@ fn finish_record(
     // ---- runtime features ----
     let topo = hw.topo();
     let gpu_util = tl.busy_fraction();
+    let wait_frac = {
+        let (_, wait, _) = tl.occupancy_split();
+        stats::mean(&wait)
+    };
     let kv_bytes_total = (cfg.batch * (cfg.seq_in + cfg.seq_out)) as f64 * crate::workload::kv_bytes_per_token(&spec);
     // Every strategy (and hybrid) shards the KV cache across all g ranks
     // (TP by heads, PP by layers, DP by batch); weights follow the shared
@@ -462,6 +515,7 @@ fn finish_record(
         nvml_gpu_j: nvml.gpu_energy_j,
         nvml_total_j: nvml.total_j,
         gpu_util,
+        wait_frac,
         gpu_mem_util,
         gpu_clock_ghz,
         gpu_mem_clock_ghz,
@@ -478,7 +532,45 @@ fn finish_record(
         host_activity,
         nodes: topo.nodes_spanned(0, g).max(1),
         tier_bw_ratio: topo.bw_ratio(g),
+        crit_share_j,
+        bound_by: cp.bound_by().name().to_string(),
     }
+}
+
+/// Sound lower bound on one candidate's energy per generated token, J —
+/// the tune-search pruning bound (DESIGN.md §15). Resolves the compiled
+/// plan deterministically under the candidate's *actual* drawn run
+/// conditions (same seed-stream derivation as `simulate_run_planned`) with
+/// every remaining stochastic term replaced by its floor
+/// (`trace::critpath::floor_resolve`), then assembles the wall-referenced
+/// total dropping every nonnegative term it cannot floor: sync waits, idle
+/// slack, launch jitter, interference, background draw, host activity
+/// above zero, and decode time beyond the simulated-window makespan
+/// (`wall ≥ makespan` because the decode extrapolation scale is ≥ 1).
+/// A candidate whose bound already exceeds the incumbent J/token cannot be
+/// the argmin.
+pub(crate) fn floor_energy_per_token(
+    cfg: &RunConfig,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    spec: &ModelSpec,
+    plan: &ExecPlan,
+) -> f64 {
+    let mut c = run_conditions(cfg, hw, knobs);
+    let (skew, _) = parallelism::run_stochastics(
+        plan.num_ranks(),
+        plan.structure.draws_sync_jitter,
+        spec,
+        knobs,
+        &c.power,
+        &mut c.rng,
+    );
+    let scale = cfg.seq_out as f64 / plan.scalars.sim_steps.max(1) as f64;
+    let fb = critpath::floor_resolve(plan, &c.power, &skew, scale);
+    let wall_lb = fb.makespan_s;
+    let loss = 1.0 + hw.psu_loss_frac;
+    let e_lb = hw.psu_base_w * wall_lb + loss * (fb.gpu_j + c.power.host_power(0.0) * wall_lb);
+    e_lb / (cfg.batch * cfg.seq_out).max(1) as f64
 }
 
 #[cfg(test)]
@@ -684,6 +776,52 @@ mod tests {
         assert!(!r.wait_samples.is_empty());
         assert!(r.wait_mean_s > 0.0);
         assert!(r.wait_max_s >= r.wait_mean_s);
+    }
+
+    #[test]
+    fn crit_share_is_positive_and_within_gpu_energy() {
+        for (par, g) in [
+            (Parallelism::Tensor, 4),
+            (Parallelism::Pipeline, 4),
+            (Parallelism::Data, 2),
+        ] {
+            let r = run("Vicuna-7B", par, g, 16, 9);
+            assert!(r.crit_share_j > 0.0, "{par:?}");
+            assert!(r.crit_share_j <= r.gpu_energy_j * (1.0 + 1e-9), "{par:?}");
+            assert!(r.crit_frac() > 0.0 && r.crit_frac() <= 1.0, "{par:?}");
+            assert!(
+                crate::trace::critpath::BoundBy::parse(&r.bound_by).is_some(),
+                "{par:?}: {}",
+                r.bound_by
+            );
+        }
+    }
+
+    #[test]
+    fn floor_bound_never_exceeds_actual_energy_per_token() {
+        use crate::config::Strategy;
+        let hw = HwSpec::default();
+        let knobs = SimKnobs::default();
+        let pars = [
+            Parallelism::Tensor,
+            Parallelism::Pipeline,
+            Parallelism::Data,
+            Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap(),
+        ];
+        for par in pars {
+            for seed in [1u64, 42, 1000] {
+                let cfg = RunConfig::new("Vicuna-7B", par, 4, 16).with_seed(seed);
+                let spec = crate::models::by_name("Vicuna-7B").unwrap();
+                let plan = crate::parallelism::compile(&spec, &hw, &knobs, &cfg);
+                let lb = floor_energy_per_token(&cfg, &hw, &knobs, &spec, &plan);
+                let actual = simulate_run_planned(&cfg, &hw, &knobs, &plan).energy_per_token_j();
+                assert!(
+                    lb <= actual,
+                    "{par:?} seed {seed}: floor {lb} above actual {actual}"
+                );
+                assert!(lb > 0.0, "{par:?}: floor is a meaningful positive bound");
+            }
+        }
     }
 
     #[test]

@@ -307,6 +307,32 @@ impl Timeline {
         busy.iter().map(|b| (b / span).min(1.0)).collect()
     }
 
+    /// Per-GPU occupancy split: fraction of the run spent (busy, waiting
+    /// at synchronization points, idle). The three sum to 1 per GPU —
+    /// uncovered head/tail time counts as idle. `busy_fraction` equals the
+    /// first component; serving occupancy tables use this split so that
+    /// sync-wait time is reported as wait, not busy.
+    pub fn occupancy_split(&self) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let span = self.makespan().max(1e-12);
+        let mut busy = vec![0.0; self.num_gpus];
+        let mut wait = vec![0.0; self.num_gpus];
+        for p in &self.phases {
+            match p.kind {
+                PhaseKind::Compute | PhaseKind::Transfer => busy[p.gpu as usize] += p.dur(),
+                PhaseKind::Wait => wait[p.gpu as usize] += p.dur(),
+                PhaseKind::Idle => {}
+            }
+        }
+        let busy: Vec<f64> = busy.iter().map(|b| (b / span).min(1.0)).collect();
+        let wait: Vec<f64> = wait.iter().map(|w| (w / span).min(1.0)).collect();
+        let idle = busy
+            .iter()
+            .zip(&wait)
+            .map(|(b, w)| (1.0 - b - w).max(0.0))
+            .collect();
+        (busy, wait, idle)
+    }
+
     /// Time-weighted mean and coefficient of variation of the *total* GPU
     /// power signal over the run — used by the sampling telemetry to model
     /// aliasing error without replaying every sample. Sweep over phase
@@ -503,6 +529,27 @@ mod tests {
         let (m_ref, cv_ref) = reference(&tl);
         assert!((m_fast - m_ref).abs() / m_ref < 1e-9, "{m_fast} vs {m_ref}");
         assert!((cv_fast - cv_ref).abs() < 1e-9, "{cv_fast} vs {cv_ref}");
+    }
+
+    #[test]
+    fn occupancy_split_partitions_the_run() {
+        let mut tl = mk();
+        tl.push(0, PhaseKind::Compute, ModuleKind::SelfAttention, 0, 0, 2.0, 150.0);
+        tl.push(1, PhaseKind::Compute, ModuleKind::SelfAttention, 0, 0, 1.0, 150.0);
+        tl.wait_until(1, 2.0, ModuleKind::AllReduce, 0, 0, 95.0);
+        tl.push(0, PhaseKind::Transfer, ModuleKind::AllReduce, 0, 0, 1.0, 120.0);
+        tl.finalize();
+        let (busy, wait, idle) = tl.occupancy_split();
+        assert!((busy[0] - 1.0).abs() < 1e-9);
+        assert!((busy[1] - 1.0 / 3.0).abs() < 1e-9);
+        assert!((wait[1] - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(wait[0], 0.0);
+        for g in 0..2 {
+            assert!((busy[g] + wait[g] + idle[g] - 1.0).abs() < 1e-9);
+        }
+        // The busy component is exactly `busy_fraction` (the nvidia-smi
+        // style utilization signal the feature extractor reads).
+        assert_eq!(busy, tl.busy_fraction());
     }
 
     #[test]

@@ -1,0 +1,440 @@
+//! Critical-path extraction over materialized phase timelines, and the
+//! energy lower bound the tune search uses to prune candidates
+//! (DESIGN.md §15).
+//!
+//! The engine's timeline is a program-activity graph in disguise: per-rank
+//! phases are chained by clock continuity, and cross-rank edges exist
+//! exactly where a synchronization wait ends — a collective's rendezvous
+//! is set by its straggler's arrival, a P2P receive by its sender's
+//! completion. The backward walk here recovers the makespan-defining chain
+//! from those timestamps alone, with no replay of the plan:
+//!
+//! 1. Start at the makespan on the latest-ending *productive* phase
+//!    (compute or transfer — waits and idles never bound a run).
+//! 2. From the current phase's start time `t`, find the productive phase
+//!    that *ends* at `t` (bitwise — resolved clocks are copied, not
+//!    recomputed, so the producer's end time is exactly the consumer's
+//!    start). Prefer the same rank (clock continuity), else the lowest
+//!    rank; if no phase ends exactly at `t` (a jittered rendezvous
+//!    arrives after every rank), fall back to the latest-ending phase
+//!    before `t` — the jitter gap rides on the chain.
+//! 3. Repeat until `t` reaches 0.
+//!
+//! Every phase lands in exactly one of three buckets — on-path, off-path
+//! (slack), idle — so energy conservation against the timeline total is
+//! exact, and the chain covers `[0, makespan]` by construction.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::Topology;
+use crate::plan::exec::{ExecPlan, OpKind};
+use crate::simulator::power::PowerModel;
+use crate::simulator::skew::SkewModel;
+use crate::simulator::timeline::{ModuleKind, PhaseKind, Timeline};
+use crate::trace::Trace;
+
+/// The resource class that binds a scenario (dominates its critical path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BoundBy {
+    /// Compute phases on some rank dominate the path.
+    Compute,
+    /// Intra-node (or flat-link) collective transfers dominate.
+    Collective,
+    /// Transfers whose rank range crosses a node boundary dominate —
+    /// the inter-node link is the binding resource.
+    InterLink,
+    /// Intra-node point-to-point stage transfers dominate.
+    P2P,
+}
+
+impl BoundBy {
+    pub const ALL: [BoundBy; 4] = [BoundBy::Compute, BoundBy::Collective, BoundBy::InterLink, BoundBy::P2P];
+
+    #[inline]
+    pub fn idx(&self) -> usize {
+        match self {
+            BoundBy::Compute => 0,
+            BoundBy::Collective => 1,
+            BoundBy::InterLink => 2,
+            BoundBy::P2P => 3,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BoundBy::Compute => "compute",
+            BoundBy::Collective => "collective",
+            BoundBy::InterLink => "inter-link",
+            BoundBy::P2P => "p2p",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BoundBy> {
+        BoundBy::ALL.into_iter().find(|b| b.name() == s)
+    }
+}
+
+/// Per-decode-step slice of the critical path.
+#[derive(Debug, Clone)]
+pub struct StepCrit {
+    pub step: u32,
+    /// On-path time contributed by this step's phases, s.
+    pub on_s: f64,
+    /// On-path energy contributed by this step's phases, J.
+    pub on_j: f64,
+    /// Binding resource of this step's on-path time.
+    pub bound_by: BoundBy,
+}
+
+/// Result of the critical-path pass over one timeline.
+#[derive(Debug, Clone)]
+pub struct CritPath {
+    pub makespan_s: f64,
+    /// Time covered by the backward walk — equal to the makespan whenever
+    /// the walk reaches t = 0 (always, for engine-produced timelines).
+    pub len_s: f64,
+    /// Phase membership flags, aligned with `Timeline::phases`.
+    pub on_path: Vec<bool>,
+    /// Energy of on-path phases, J.
+    pub on_path_j: f64,
+    /// Energy of off-path productive phases and all sync waits (slack), J.
+    pub off_path_j: f64,
+    /// Energy of idle phases, J.
+    pub idle_j: f64,
+    /// On-path time per binding class, indexed by `BoundBy::idx`, s.
+    pub time_by: [f64; 4],
+    /// On-path energy per module, J.
+    pub energy_by_module: BTreeMap<ModuleKind, f64>,
+    /// On-path time per rank, s.
+    pub rank_time: Vec<f64>,
+    /// Per-step slices, ascending step order.
+    pub steps: Vec<StepCrit>,
+}
+
+impl CritPath {
+    /// The dominant binding resource (largest on-path time; ties resolve
+    /// to the earlier `BoundBy::ALL` entry).
+    pub fn bound_by(&self) -> BoundBy {
+        let mut best = BoundBy::Compute;
+        for b in BoundBy::ALL {
+            if self.time_by[b.idx()] > self.time_by[best.idx()] {
+                best = b;
+            }
+        }
+        best
+    }
+
+    /// On-path share of non-idle energy, in [0, 1].
+    pub fn on_path_share(&self) -> f64 {
+        let active = self.on_path_j + self.off_path_j;
+        if active <= 0.0 {
+            0.0
+        } else {
+            self.on_path_j / active
+        }
+    }
+}
+
+/// Extract the critical path of a timeline (no op-level refinement: all
+/// transfers classify by module kind alone).
+pub fn critical_path(tl: &Timeline) -> CritPath {
+    critical_path_with(tl, None)
+}
+
+/// Extract the critical path, refining transfer classification through the
+/// execution trace: a transfer whose originating op's rank range crosses a
+/// node boundary is bound by the inter-node link, not the collective.
+pub fn critical_path_with(tl: &Timeline, ctx: Option<(&Trace, &ExecPlan, &Topology)>) -> CritPath {
+    let phases = &tl.phases;
+    let classify = |i: usize| -> BoundBy {
+        let p = &phases[i];
+        if p.kind == PhaseKind::Compute {
+            return BoundBy::Compute;
+        }
+        if let Some((trace, ep, topo)) = ctx {
+            if let Some(op) = trace.op_of(i) {
+                let o = op as usize;
+                if matches!(ep.structure.kind[o], OpKind::Collective | OpKind::Send) {
+                    let r = ep.structure.ranks[o];
+                    if topo.spans(r.first as usize, r.count as usize) {
+                        return BoundBy::InterLink;
+                    }
+                }
+            }
+        }
+        if p.module == ModuleKind::P2PTransfer {
+            BoundBy::P2P
+        } else {
+            BoundBy::Collective
+        }
+    };
+
+    // Productive phases sorted by (end time, rank, index): the walk's
+    // exact-match and latest-before queries are binary searches over this.
+    let mut prod: Vec<u32> = (0..phases.len() as u32)
+        .filter(|&i| matches!(phases[i as usize].kind, PhaseKind::Compute | PhaseKind::Transfer))
+        .collect();
+    prod.sort_unstable_by(|&a, &b| {
+        let (pa, pb) = (&phases[a as usize], &phases[b as usize]);
+        pa.t1.total_cmp(&pb.t1).then(pa.gpu.cmp(&pb.gpu)).then(a.cmp(&b))
+    });
+
+    let makespan = tl.makespan();
+    let mut on = vec![false; phases.len()];
+    let mut t = makespan;
+    let mut cur_rank = u16::MAX;
+    while t > 0.0 {
+        // Candidates ending exactly at t: [lo, hi).
+        let lo = prod.partition_point(|&i| phases[i as usize].t1 < t);
+        let hi = prod.partition_point(|&i| phases[i as usize].t1 <= t);
+        let pick = if lo < hi {
+            prod[lo..hi]
+                .iter()
+                .copied()
+                .find(|&i| phases[i as usize].gpu == cur_rank)
+                .unwrap_or(prod[lo])
+        } else if lo > 0 {
+            // Jittered rendezvous: nothing ends bitwise at t — chain to
+            // the latest producer before t (same tie-break as above).
+            let t1 = phases[prod[lo - 1] as usize].t1;
+            let lo2 = prod[..lo].partition_point(|&i| phases[i as usize].t1 < t1);
+            prod[lo2..lo]
+                .iter()
+                .copied()
+                .find(|&i| phases[i as usize].gpu == cur_rank)
+                .unwrap_or(prod[lo2])
+        } else {
+            break; // nothing productive before t: the head is idle/wait
+        };
+        let p = &phases[pick as usize];
+        on[pick as usize] = true;
+        cur_rank = p.gpu;
+        t = p.t0;
+    }
+    let len_s = makespan - t.max(0.0);
+
+    let (mut on_j, mut off_j, mut idle_j) = (0.0f64, 0.0f64, 0.0f64);
+    let mut time_by = [0.0f64; 4];
+    let mut energy_by_module: BTreeMap<ModuleKind, f64> = BTreeMap::new();
+    let mut rank_time = vec![0.0f64; tl.num_gpus];
+    let mut per_step: BTreeMap<u32, (f64, f64, [f64; 4])> = BTreeMap::new();
+    for (i, p) in phases.iter().enumerate() {
+        if p.kind == PhaseKind::Idle {
+            idle_j += p.energy_j();
+        } else if on[i] {
+            let e = p.energy_j();
+            on_j += e;
+            let class = classify(i);
+            time_by[class.idx()] += p.dur();
+            *energy_by_module.entry(p.module).or_insert(0.0) += e;
+            rank_time[p.gpu as usize] += p.dur();
+            let s = per_step.entry(p.step).or_insert((0.0, 0.0, [0.0; 4]));
+            s.0 += p.dur();
+            s.1 += e;
+            s.2[class.idx()] += p.dur();
+        } else {
+            off_j += p.energy_j();
+        }
+    }
+    let steps = per_step
+        .into_iter()
+        .map(|(step, (on_s, on_j, by))| {
+            let mut bound_by = BoundBy::Compute;
+            for b in BoundBy::ALL {
+                if by[b.idx()] > by[bound_by.idx()] {
+                    bound_by = b;
+                }
+            }
+            StepCrit {
+                step,
+                on_s,
+                on_j,
+                bound_by,
+            }
+        })
+        .collect();
+
+    CritPath {
+        makespan_s: makespan,
+        len_s,
+        on_path: on,
+        on_path_j: on_j,
+        off_path_j: off_j,
+        idle_j,
+        time_by,
+        energy_by_module,
+        rank_time,
+        steps,
+    }
+}
+
+/// Deterministic lower bound on one run's wall time and GPU-side energy,
+/// resolved from the compiled plan under the run's *actual* drawn
+/// conditions (skew state, power model) with every remaining stochastic
+/// term replaced by its floor:
+///
+/// * per-op transient compute factor — the unit-mean lognormal's
+///   9σ lower quantile `exp(−σ²/2 − 9σ)` (a per-draw violation
+///   probability of ~1e-19; stragglers only slow ranks further);
+/// * launch-desync jitter, rendezvous waits, interference, background
+///   draw — all ≥ 0, dropped;
+/// * transfer durations — exact (deterministic scalars).
+///
+/// The clock recursion is monotone in op durations (max/+ structure), so
+/// the resolved makespan, prefill end, and per-phase energies are sound
+/// floors of the engine's. `decode_scale` extrapolates decode-step
+/// (step > 0) op energies exactly as `finish_record` does.
+#[derive(Debug, Clone, Copy)]
+pub struct FloorBound {
+    /// Lower bound on the simulated-window makespan, s.
+    pub makespan_s: f64,
+    /// Lower bound on the prefill-end clock, s.
+    pub prefill_end_s: f64,
+    /// Lower bound on GPU-side compute + transfer energy with decode
+    /// extrapolation applied, J.
+    pub gpu_j: f64,
+}
+
+/// Resolve the floor bound of a compiled plan (see [`FloorBound`]).
+pub fn floor_resolve(ep: &ExecPlan, power: &PowerModel, skew: &SkewModel, decode_scale: f64) -> FloorBound {
+    let s = &*ep.structure;
+    let sc = &*ep.scalars;
+    let sigma = (1.0 + skew.compute_cv * skew.compute_cv).ln().sqrt();
+    let gamma = (-sigma * sigma / 2.0 - 9.0 * sigma).exp();
+    let mut clocks = vec![0.0f64; s.num_ranks];
+    let mut edges = vec![0.0f64; s.num_edges as usize];
+    let mut gpu_j = 0.0f64;
+    let mut prefill_end = 0.0f64;
+    for i in 0..s.len() {
+        let ranks = s.ranks[i];
+        let scale = if s.step[i] == 0 { 1.0 } else { decode_scale };
+        match s.kind[i] {
+            OpKind::Compute => {
+                let floor_mult = skew.module_mult(s.module[i]) * gamma;
+                for rank in ranks.iter() {
+                    let d = sc.dur_s[i] * floor_mult * skew.rank_bias(rank);
+                    clocks[rank] += d;
+                    gpu_j += d * power.gpu_power_rank(PhaseKind::Compute, sc.aux[i], rank) * scale;
+                }
+            }
+            OpKind::Collective => {
+                let mut arrive = 0.0f64;
+                for rank in ranks.iter() {
+                    arrive = arrive.max(clocks[rank]);
+                }
+                let transfer_s = sc.dur_s[i];
+                for rank in ranks.iter() {
+                    clocks[rank] = arrive + transfer_s;
+                    gpu_j += transfer_s * power.gpu_power_rank(PhaseKind::Transfer, 0.0, rank) * scale;
+                }
+            }
+            OpKind::Send => {
+                let transfer_s = sc.dur_s[i];
+                let mut done = 0.0f64;
+                for rank in ranks.iter() {
+                    clocks[rank] += transfer_s;
+                    done = done.max(clocks[rank]);
+                    gpu_j += transfer_s * power.gpu_power_rank(PhaseKind::Transfer, 0.0, rank) * scale;
+                }
+                edges[s.edge[i] as usize] = done;
+            }
+            OpKind::Recv => {
+                let ready = edges[s.edge[i] as usize];
+                for rank in ranks.iter() {
+                    clocks[rank] = clocks[rank].max(ready);
+                }
+            }
+        }
+        if s.step[i] == 0 {
+            for rank in ranks.iter() {
+                prefill_end = prefill_end.max(clocks[rank]);
+            }
+        }
+    }
+    let makespan_s = clocks.iter().copied().fold(0.0, f64::max);
+    FloorBound {
+        makespan_s,
+        prefill_end_s: prefill_end.min(makespan_s),
+        gpu_j,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::timeline::{ModuleKind, PhaseKind, Timeline};
+
+    /// A hand-built two-rank run: rank 0 computes 2s, rank 1 computes 1s
+    /// then waits 1s, both transfer 0.5s, then rank 1 computes 1s while
+    /// rank 0 idles.
+    fn two_rank_timeline() -> Timeline {
+        let mut tl = Timeline::new(2, 20.0);
+        tl.push(0, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 2.0, 200.0);
+        tl.push(1, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 1.0, 200.0);
+        tl.wait_until(1, 2.0, ModuleKind::AllReduce, 0, 0, 95.0);
+        tl.push(0, PhaseKind::Transfer, ModuleKind::AllReduce, 0, 0, 0.5, 120.0);
+        tl.push(1, PhaseKind::Transfer, ModuleKind::AllReduce, 0, 0, 0.5, 120.0);
+        tl.push(1, PhaseKind::Compute, ModuleKind::LogitsHead, 0, 1, 1.0, 250.0);
+        tl.finalize();
+        tl
+    }
+
+    #[test]
+    fn walk_recovers_the_straggler_chain() {
+        let tl = two_rank_timeline();
+        let cp = critical_path(&tl);
+        assert!((cp.makespan_s - 3.5).abs() < 1e-12);
+        assert!((cp.len_s - cp.makespan_s).abs() < 1e-12, "walk reaches t = 0");
+        // Path: rank1 logits [2.5,3.5] <- a transfer ending at 2.5 (same
+        // rank preferred) <- rank0 compute [0,2] (the straggler).
+        // Rank 1's 1s compute and wait are slack.
+        let marked: Vec<usize> = cp.on_path.iter().enumerate().filter(|(_, &m)| m).map(|(i, _)| i).collect();
+        assert_eq!(marked.len(), 3);
+        let kinds: Vec<PhaseKind> = marked.iter().map(|&i| tl.phases[i].kind).collect();
+        assert_eq!(kinds, vec![PhaseKind::Compute, PhaseKind::Transfer, PhaseKind::Compute]);
+        // On-path: 200*2 + 120*0.5 + 250*1 = 710. Slack: rank1 compute 200
+        // + wait 95 + rank1 transfer 60. Idle: rank0 tail 1.0s * 20.
+        assert!((cp.on_path_j - 710.0).abs() < 1e-9);
+        assert!((cp.off_path_j - 355.0).abs() < 1e-9);
+        assert!((cp.idle_j - 20.0).abs() < 1e-9);
+        let total = tl.gpu_energy_j();
+        assert!((cp.on_path_j + cp.off_path_j + cp.idle_j - total).abs() < 1e-9 * total);
+        assert_eq!(cp.bound_by(), BoundBy::Compute);
+        assert!(cp.on_path_share() > 0.5);
+        // Per-step slices: step 0 carries 2.5s, step 1 carries 1.0s.
+        assert_eq!(cp.steps.len(), 2);
+        assert!((cp.steps[0].on_s - 2.5).abs() < 1e-12);
+        assert!((cp.steps[1].on_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_dominated_path_binds_on_the_collective() {
+        let mut tl = Timeline::new(2, 20.0);
+        tl.push(0, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 0.2, 200.0);
+        tl.push(1, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 0.2, 200.0);
+        tl.push(0, PhaseKind::Transfer, ModuleKind::AllReduce, 0, 0, 3.0, 120.0);
+        tl.push(1, PhaseKind::Transfer, ModuleKind::AllReduce, 0, 0, 3.0, 120.0);
+        tl.finalize();
+        let cp = critical_path(&tl);
+        assert_eq!(cp.bound_by(), BoundBy::Collective);
+        assert!((cp.len_s - 3.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bound_by_round_trips_names() {
+        for b in BoundBy::ALL {
+            assert_eq!(BoundBy::parse(b.name()), Some(b));
+        }
+        assert_eq!(BoundBy::parse("tpu"), None);
+    }
+
+    #[test]
+    fn empty_timeline_is_degenerate_but_finite() {
+        let tl = Timeline::new(2, 20.0);
+        let cp = critical_path(&tl);
+        assert_eq!(cp.makespan_s, 0.0);
+        assert_eq!(cp.len_s, 0.0);
+        assert_eq!(cp.on_path_j, 0.0);
+        assert_eq!(cp.on_path_share(), 0.0);
+    }
+}

@@ -1,0 +1,249 @@
+//! Chrome trace-event / Perfetto JSON export of a traced run
+//! (DESIGN.md §15).
+//!
+//! The output is the JSON-object flavor of the trace-event format that
+//! `ui.perfetto.dev` and `chrome://tracing` both load: a `traceEvents`
+//! array of complete (`"X"`) duration events — one per materialized phase,
+//! one process (`pid`) per rank — plus metadata (`"M"`) events naming each
+//! process and a counter (`"C"`) track on a dedicated pid carrying the
+//! cluster's instantaneous total board power from `Timeline::power_at`.
+//!
+//! Rendering is deterministic: events are emitted in ascending-timestamp
+//! order, objects render with sorted keys (`util::json`), and no
+//! wall-clock or RNG state is consulted — the same run renders the same
+//! bytes.
+
+use crate::cluster::Topology;
+use crate::plan::exec::ExecPlan;
+use crate::simulator::timeline::{PhaseKind, Timeline};
+use crate::trace::{emit_spans, SpanEvent, Trace, TraceSink, VecSink};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Microseconds per second — trace-event timestamps are in µs.
+const US: f64 = 1e6;
+
+fn phase_cat(kind: PhaseKind) -> &'static str {
+    match kind {
+        PhaseKind::Compute => "compute",
+        PhaseKind::Transfer => "transfer",
+        PhaseKind::Wait => "wait",
+        PhaseKind::Idle => "idle",
+    }
+}
+
+fn span_event(ev: &SpanEvent) -> Json {
+    let mut args = vec![
+        ("energy_j", num(ev.energy_j)),
+        ("power_w", num(ev.power_w)),
+        ("step", num(ev.step as f64)),
+        ("layer", num(ev.layer as f64)),
+    ];
+    if let Some(op) = ev.op {
+        args.push(("op", num(op as f64)));
+    }
+    if ev.bytes > 0.0 {
+        args.push(("bytes", num(ev.bytes)));
+        args.push(("link", s(ev.link_tier)));
+    }
+    obj(vec![
+        ("ph", s("X")),
+        ("name", s(ev.module.name())),
+        ("cat", s(phase_cat(ev.kind))),
+        ("pid", num(ev.rank as f64)),
+        ("tid", num(0.0)),
+        ("ts", num(ev.t0 * US)),
+        ("dur", num((ev.t1 - ev.t0) * US)),
+        ("args", obj(args)),
+    ])
+}
+
+/// Render a traced run as trace-event JSON (the object form with a
+/// `traceEvents` array), loadable in `ui.perfetto.dev`. One pid per rank;
+/// pid `num_gpus` carries the total-power counter track.
+pub fn perfetto_json(tl: &Timeline, trace: &Trace, plan: Option<&ExecPlan>, topo: Option<&Topology>) -> String {
+    let mut sink = VecSink::default();
+    emit_spans(tl, trace, plan, topo, &mut sink);
+
+    let mut events: Vec<(f64, Json)> = Vec::with_capacity(sink.events.len() + 2 * tl.num_gpus + 8);
+    for rank in 0..tl.num_gpus {
+        events.push((
+            -1.0,
+            obj(vec![
+                ("ph", s("M")),
+                ("name", s("process_name")),
+                ("pid", num(rank as f64)),
+                ("tid", num(0.0)),
+                ("args", obj(vec![("name", s(&format!("rank {rank}")))])),
+            ]),
+        ));
+        events.push((
+            -1.0,
+            obj(vec![
+                ("ph", s("M")),
+                ("name", s("process_sort_index")),
+                ("pid", num(rank as f64)),
+                ("tid", num(0.0)),
+                ("args", obj(vec![("sort_index", num(rank as f64))])),
+            ]),
+        ));
+    }
+    let power_pid = tl.num_gpus;
+    events.push((
+        -1.0,
+        obj(vec![
+            ("ph", s("M")),
+            ("name", s("process_name")),
+            ("pid", num(power_pid as f64)),
+            ("tid", num(0.0)),
+            ("args", obj(vec![("name", s("cluster power"))])),
+        ]),
+    ));
+
+    for ev in &sink.events {
+        events.push((ev.t0 * US, span_event(ev)));
+    }
+
+    // Counter track: total board power sampled just after every phase
+    // boundary (phase powers are piecewise-constant, so boundaries are the
+    // only change points; the epsilon keeps the sample inside the new
+    // segment). Boundaries are deduplicated on their rendered µs value so
+    // the track is strictly monotone.
+    let mut cuts: Vec<f64> = tl.phases.iter().flat_map(|p| [p.t0, p.t1]).collect();
+    cuts.push(0.0);
+    cuts.sort_by(f64::total_cmp);
+    cuts.dedup();
+    let eps = tl.makespan().max(1e-9) * 1e-12;
+    let mut last_us = f64::NEG_INFINITY;
+    for &t in &cuts {
+        if t >= tl.makespan() {
+            continue;
+        }
+        let ts = t * US;
+        if ts <= last_us {
+            continue;
+        }
+        last_us = ts;
+        events.push((
+            ts,
+            obj(vec![
+                ("ph", s("C")),
+                ("name", s("total_power_w")),
+                ("pid", num(power_pid as f64)),
+                ("tid", num(0.0)),
+                ("ts", num(ts)),
+                ("args", obj(vec![("power_w", num(tl.power_at(t + eps)))])),
+            ]),
+        ));
+    }
+
+    // Stable order: metadata first (ts -1 sorts ahead), then ascending ts;
+    // ties keep insertion order (rank spans before counter samples).
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let list = events.into_iter().map(|(_, e)| e).collect();
+    obj(vec![("traceEvents", arr(list)), ("displayTimeUnit", s("ms"))]).render()
+}
+
+/// Compact per-phase CSV of a traced run: one row per span, in timeline
+/// order, with an `on_path` flag from a critical-path pass.
+pub fn spans_csv(tl: &Timeline, trace: &Trace, plan: Option<&ExecPlan>, topo: Option<&Topology>, on_path: &[bool]) -> String {
+    struct Csv<'a> {
+        out: String,
+        on_path: &'a [bool],
+        i: usize,
+    }
+    impl TraceSink for Csv<'_> {
+        fn span(&mut self, ev: &SpanEvent) {
+            let on = self.on_path.get(self.i).copied().unwrap_or(false);
+            self.i += 1;
+            self.out.push_str(&format!(
+                "{},{},{},{},{},{:.9},{:.9},{:.3},{:.6},{:.0},{},{}\n",
+                ev.rank,
+                ev.step,
+                ev.layer,
+                ev.module.name(),
+                phase_cat(ev.kind),
+                ev.t0,
+                ev.t1,
+                ev.power_w,
+                ev.energy_j,
+                ev.bytes,
+                ev.link_tier,
+                u8::from(on),
+            ));
+        }
+    }
+    let mut sink = Csv {
+        out: String::from("rank,step,layer,module,kind,t0_s,t1_s,power_w,energy_j,bytes,link,on_path\n"),
+        on_path,
+        i: 0,
+    };
+    emit_spans(tl, trace, plan, topo, &mut sink);
+    sink.out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::timeline::{ModuleKind, Timeline};
+    use crate::util::json::Json;
+
+    fn traced_timeline() -> (Timeline, Trace) {
+        let mut tl = Timeline::new(2, 20.0);
+        tl.push(0, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 1.0, 200.0);
+        tl.push(1, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 0.5, 200.0);
+        tl.wait_until(1, 1.0, ModuleKind::AllReduce, 0, 0, 95.0);
+        tl.push(0, PhaseKind::Transfer, ModuleKind::AllReduce, 0, 0, 0.25, 120.0);
+        tl.push(1, PhaseKind::Transfer, ModuleKind::AllReduce, 0, 0, 0.25, 120.0);
+        tl.finalize();
+        let n = tl.phases.len();
+        let trace = Trace { ops: (0..n as u32).collect() };
+        (tl, trace)
+    }
+
+    #[test]
+    fn perfetto_events_are_schema_shaped_and_monotone() {
+        let (tl, trace) = traced_timeline();
+        let rendered = perfetto_json(&tl, &trace, None, None);
+        let doc = Json::parse(&rendered).expect("render is valid json");
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+        assert!(!events.is_empty());
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut pids = std::collections::BTreeSet::new();
+        for ev in events {
+            let ph = ev.get("ph").and_then(|p| p.as_str()).expect("ph");
+            assert!(matches!(ph, "X" | "M" | "C"), "unexpected ph {ph}");
+            pids.insert(ev.get("pid").and_then(|p| p.as_usize()).expect("pid"));
+            if ph == "M" {
+                continue;
+            }
+            let ts = ev.get("ts").and_then(|t| t.as_f64()).expect("ts");
+            assert!(ts >= last_ts, "timestamps must be monotone");
+            last_ts = ts;
+            if ph == "X" {
+                assert!(ev.get("dur").and_then(|d| d.as_f64()).expect("dur") > 0.0);
+                assert!(ev.get("name").is_some() && ev.get("cat").is_some());
+            }
+        }
+        // One pid per rank plus the power-counter pid.
+        assert!(pids.contains(&0) && pids.contains(&1) && pids.contains(&2));
+    }
+
+    #[test]
+    fn perfetto_render_is_deterministic() {
+        let (tl, trace) = traced_timeline();
+        let a = perfetto_json(&tl, &trace, None, None);
+        let b = perfetto_json(&tl, &trace, None, None);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn csv_rows_align_with_phases() {
+        let (tl, trace) = traced_timeline();
+        let on_path = vec![true; tl.phases.len()];
+        let csv = spans_csv(&tl, &trace, None, None, &on_path);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), tl.phases.len() + 1, "header + one row per phase");
+        assert!(lines[0].starts_with("rank,step,"));
+        assert!(lines[1].ends_with(",1"), "on_path flag rendered");
+    }
+}

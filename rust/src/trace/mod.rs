@@ -1,0 +1,207 @@
+//! Execution tracing + observability layer (DESIGN.md §15).
+//!
+//! The event engine materializes per-rank, power-annotated phase timelines
+//! (`simulator::timeline::Timeline`) and then collapses them into run
+//! records and tables. This module keeps the structure observable:
+//!
+//! * [`Trace`] — the engine-side capture: per materialized phase, the index
+//!   of the plan op that produced it. Recorded by
+//!   `simulator::engine` when `SimKnobs::trace` is on (zero allocation
+//!   when off); joined back against the `ExecPlan` arrays to recover
+//!   op-level metadata (rank range, link tier, payload) the timeline
+//!   itself does not carry.
+//! * [`SpanEvent`] / [`TraceSink`] — the structured event stream derived
+//!   from a traced run: one span per phase with rank, step, module, phase
+//!   kind, times, energy, and (for communication phases) the estimated
+//!   bytes moved and the link tier driven.
+//! * [`critpath`] — the critical-path pass over the materialized phases:
+//!   which chain of compute/transfer phases determines the makespan, how
+//!   much energy is on-path vs. off-path (slack), and which resource
+//!   (compute rank, collective, inter-node link) binds the scenario.
+//! * [`export`] — Chrome trace-event / Perfetto JSON rendering (one pid
+//!   per rank plus an instantaneous total-power counter track) for
+//!   `ui.perfetto.dev`.
+
+pub mod critpath;
+pub mod export;
+
+use crate::cluster::{LinkSpec, LinkTier, Topology};
+use crate::plan::exec::{ExecPlan, OpKind};
+use crate::simulator::timeline::{ModuleKind, PhaseKind, Timeline};
+
+/// Engine-side execution trace: for each phase the engine materialized (in
+/// `Timeline::phases` order, *excluding* the idle tail padding appended by
+/// `finalize_with`), the index of the plan op that produced it.
+///
+/// `u32::MAX` marks a phase with no originating op (never produced by the
+/// current engine, reserved for synthetic phases).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Op index per materialized phase (aligned with the first
+    /// `ops.len()` entries of `Timeline::phases`).
+    pub ops: Vec<u32>,
+}
+
+impl Trace {
+    /// Op index of phase `i`, or `None` for idle-tail padding phases
+    /// (which have no originating op).
+    #[inline]
+    pub fn op_of(&self, phase_idx: usize) -> Option<u32> {
+        match self.ops.get(phase_idx) {
+            Some(&op) if op != u32::MAX => Some(op),
+            _ => None,
+        }
+    }
+}
+
+/// One structured trace event: a phase joined with its op-level metadata.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub rank: u16,
+    pub step: u32,
+    pub layer: u16,
+    pub module: ModuleKind,
+    pub kind: PhaseKind,
+    pub t0: f64,
+    pub t1: f64,
+    /// Board power during the span, W.
+    pub power_w: f64,
+    /// Exact phase energy, J.
+    pub energy_j: f64,
+    /// Estimated payload bytes moved during a communication transfer span
+    /// (transfer seconds × link bandwidth); 0 for compute/wait/idle.
+    pub bytes: f64,
+    /// Link tier driven by a communication span (`"nvlink"`, `"pcie"`,
+    /// `"infiniband"`, or `"flat"` for the legacy single-tier link);
+    /// `"-"` for non-communication spans.
+    pub link_tier: &'static str,
+    /// Plan op index that produced the span (`None` for idle padding).
+    pub op: Option<u32>,
+}
+
+/// Consumer of a structured span stream. The exporters and the critpath
+/// CSV writer are sinks; tests use [`VecSink`] to capture events.
+pub trait TraceSink {
+    fn span(&mut self, ev: &SpanEvent);
+}
+
+/// A sink that collects every span into a `Vec`.
+#[derive(Debug, Default)]
+pub struct VecSink {
+    pub events: Vec<SpanEvent>,
+}
+
+impl TraceSink for VecSink {
+    fn span(&mut self, ev: &SpanEvent) {
+        self.events.push(ev.clone());
+    }
+}
+
+/// Name a link spec by matching it against the named tiers' constants
+/// (`"flat"` for the legacy single-tier link derived from `HwSpec`).
+pub fn tier_name(spec: &LinkSpec) -> &'static str {
+    for t in LinkTier::ALL {
+        if t.spec() == *spec {
+            return t.name();
+        }
+    }
+    "flat"
+}
+
+/// The link tier a communication op drives: the inter-node tier when the
+/// op's rank range crosses a node boundary, the intra-node tier otherwise.
+fn op_tier(topo: &Topology, first: usize, count: usize) -> &'static str {
+    tier_name(if topo.spans(first, count) {
+        &topo.inter
+    } else {
+        &topo.intra
+    })
+}
+
+/// Derive the structured span stream of a traced run and feed it to
+/// `sink`, in `Timeline::phases` order. With a plan and topology the
+/// communication spans carry estimated payload bytes and the link tier;
+/// without them those fields are zero / `"-"`.
+pub fn emit_spans(
+    tl: &Timeline,
+    trace: &Trace,
+    plan: Option<&ExecPlan>,
+    topo: Option<&Topology>,
+    sink: &mut dyn TraceSink,
+) {
+    for (i, p) in tl.phases.iter().enumerate() {
+        let op = trace.op_of(i);
+        let mut bytes = 0.0;
+        let mut link_tier = "-";
+        if p.kind == PhaseKind::Transfer {
+            if let (Some(op), Some(ep)) = (op, plan) {
+                let o = op as usize;
+                let s = &ep.structure;
+                if matches!(s.kind[o], OpKind::Collective | OpKind::Send) {
+                    let r = s.ranks[o];
+                    let (first, count) = (r.first as usize, r.count as usize);
+                    if let Some(topo) = topo {
+                        let link = if topo.spans(first, count) { &topo.inter } else { &topo.intra };
+                        bytes = ep.scalars.dur_s[o] * link.bw;
+                        link_tier = op_tier(topo, first, count);
+                    }
+                }
+            }
+        }
+        sink.span(&SpanEvent {
+            rank: p.gpu,
+            step: p.step,
+            layer: p.layer,
+            module: p.module,
+            kind: p.kind,
+            t0: p.t0,
+            t1: p.t1,
+            power_w: p.power_w,
+            energy_j: p.energy_j(),
+            bytes,
+            link_tier,
+            op,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::timeline::{ModuleKind, PhaseKind, Timeline};
+
+    #[test]
+    fn trace_op_lookup_handles_padding() {
+        let t = Trace { ops: vec![3, 7, u32::MAX] };
+        assert_eq!(t.op_of(0), Some(3));
+        assert_eq!(t.op_of(1), Some(7));
+        assert_eq!(t.op_of(2), None, "sentinel is not an op");
+        assert_eq!(t.op_of(9), None, "idle tails beyond the capture");
+    }
+
+    #[test]
+    fn tier_names_resolve_and_flat_falls_through() {
+        for t in LinkTier::ALL {
+            assert_eq!(tier_name(&t.spec()), t.name());
+        }
+        let flat = crate::config::HwSpec::default().flat_link();
+        assert_eq!(tier_name(&flat), "flat");
+    }
+
+    #[test]
+    fn emit_spans_covers_every_phase_in_order() {
+        let mut tl = Timeline::new(2, 20.0);
+        tl.push(0, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 1.0, 200.0);
+        tl.push(1, PhaseKind::Compute, ModuleKind::Mlp, 0, 0, 0.5, 200.0);
+        tl.wait_until(1, 1.0, ModuleKind::AllReduce, 0, 0, 95.0);
+        tl.finalize();
+        let trace = Trace { ops: vec![0, 0, 1] };
+        let mut sink = VecSink::default();
+        emit_spans(&tl, &trace, None, None, &mut sink);
+        assert_eq!(sink.events.len(), tl.phases.len());
+        assert_eq!(sink.events[0].op, Some(0));
+        assert_eq!(sink.events[2].kind, PhaseKind::Wait);
+        assert!((sink.events[0].energy_j - 200.0).abs() < 1e-12);
+        assert_eq!(sink.events[0].link_tier, "-");
+    }
+}

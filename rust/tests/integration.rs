@@ -649,6 +649,100 @@ fn serve_replays_jsonl_and_synthetic_traces_end_to_end() {
 }
 
 #[test]
+fn perfetto_export_is_schema_valid_and_deterministic_per_seed() {
+    use piep::cluster::LinkTier;
+    use piep::simulator::run::execute_traced;
+    use piep::trace::export::perfetto_json;
+    use piep::util::json::Json;
+
+    let hw = HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &[]);
+    let topo = hw.topo();
+    let knobs = SimKnobs {
+        sim_decode_steps: 4,
+        ..SimKnobs::default()
+    };
+    for seed in [7u64, 21, 99] {
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8).with_seed(seed);
+        let (plan, built) = execute_traced(&cfg, &hw, &knobs);
+        let trace = built.trace.as_ref().expect("trace captured");
+        let a = perfetto_json(&built.timeline, trace, Some(&plan), Some(&topo));
+
+        // Byte-determinism: an independent re-execution of the same seed
+        // renders the identical file.
+        let (plan2, built2) = execute_traced(&cfg, &hw, &knobs);
+        let b = perfetto_json(
+            &built2.timeline,
+            built2.trace.as_ref().unwrap(),
+            Some(&plan2),
+            Some(&topo),
+        );
+        assert_eq!(a, b, "seed {seed}: export must be byte-deterministic");
+
+        // Trace-event schema shape: what ui.perfetto.dev requires to load.
+        let doc = Json::parse(&a).expect("export is valid JSON");
+        assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+        assert!(!events.is_empty());
+        let mut pids = std::collections::BTreeSet::new();
+        let (mut spans, mut counters) = (0usize, 0usize);
+        for ev in events {
+            let ph = ev.get("ph").and_then(Json::as_str).expect("event ph");
+            assert!(matches!(ph, "X" | "M" | "C"), "unexpected ph {ph}");
+            pids.insert(ev.get("pid").and_then(Json::as_usize).expect("event pid"));
+            match ph {
+                "X" => {
+                    spans += 1;
+                    for key in ["name", "cat", "ts", "dur", "args"] {
+                        assert!(ev.get(key).is_some(), "X event missing {key}");
+                    }
+                }
+                "C" => {
+                    counters += 1;
+                    let w = ev
+                        .get("args")
+                        .and_then(|a| a.get("power_w"))
+                        .and_then(Json::as_f64)
+                        .expect("counter power_w");
+                    assert!(w.is_finite() && w > 0.0);
+                }
+                _ => {}
+            }
+        }
+        assert!(spans > 0 && counters > 0);
+        // One pid per rank plus the dedicated power-counter pid.
+        assert_eq!(pids.len(), 5, "4 rank pids + the counter pid");
+        assert!(pids.contains(&4));
+    }
+}
+
+#[test]
+fn trace_knob_off_leaves_records_byte_identical() {
+    // The trace capture must be a pure observer: enabling it changes no
+    // resolved quantity in the record (RNG stream, clocks, energies,
+    // critical-path attribution are all identical).
+    let hw = HwSpec::default();
+    let off = SimKnobs {
+        sim_decode_steps: 4,
+        ..SimKnobs::default()
+    };
+    let on = off.clone().with_trace(true);
+    for par in [Parallelism::Tensor, Parallelism::Pipeline] {
+        let cfg = RunConfig::new("Vicuna-7B", par, 4, 8).with_seed(11);
+        let a = piep::simulator::simulate_run(&cfg, &hw, &off);
+        let b = piep::simulator::simulate_run(&cfg, &hw, &on);
+        assert_eq!(a.true_total_j, b.true_total_j, "{}", par.label());
+        assert_eq!(a.meter_total_j, b.meter_total_j);
+        assert_eq!(a.wall_s, b.wall_s);
+        assert_eq!(a.module_energy_j, b.module_energy_j);
+        assert_eq!(a.wait_samples, b.wait_samples);
+        assert_eq!(a.crit_share_j, b.crit_share_j);
+        assert_eq!(a.bound_by, b.bound_by);
+        assert_eq!(a.wait_frac, b.wait_frac);
+        assert_eq!(a.gpu_util, b.gpu_util);
+    }
+}
+
+#[test]
 fn unknown_model_panics_cleanly() {
     let result = std::panic::catch_unwind(|| {
         let cfg = RunConfig::new("GPT-5", Parallelism::Tensor, 2, 8);

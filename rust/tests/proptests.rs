@@ -907,3 +907,116 @@ fn prop_fleet_argmin_matches_exhaustive_eval() {
         )
     });
 }
+
+#[test]
+fn prop_critpath_length_equals_makespan() {
+    // The critical-path walk must span exactly the makespan, and its three
+    // buckets (on-path, slack, idle) must partition the timeline's GPU-side
+    // energy to rel 1e-9 — for every strategy (pure + hybrid) on flat,
+    // tiered, and heterogeneous testbeds, serial and batched.
+    use piep::cluster::{GpuSpec, LinkTier};
+    use piep::simulator::power::PowerModel;
+    use piep::simulator::run::execute_traced;
+    use piep::trace::critpath::{critical_path, critical_path_with};
+    forall(120, 3, |r| r.next_u64() & 0xffff, |&seed| {
+        let testbeds = [
+            HwSpec::default(),
+            HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &[]),
+            HwSpec::cluster_testbed(
+                2,
+                2,
+                LinkTier::PciE,
+                LinkTier::PciE,
+                &[GpuSpec::a6000(), GpuSpec::h100()],
+            ),
+        ];
+        let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.extend(hybrids4());
+        let check = |tl: &piep::simulator::Timeline,
+                     cp: &piep::trace::critpath::CritPath,
+                     tag: &str|
+         -> Result<(), String> {
+            let mk = tl.makespan();
+            ensure(
+                (cp.len_s - mk).abs() <= 1e-9 * mk.max(1e-12),
+                format!("{tag}: critpath len {} != makespan {mk}", cp.len_s),
+            )?;
+            let total = tl.gpu_energy_j();
+            let parts = cp.on_path_j + cp.off_path_j + cp.idle_j;
+            ensure(
+                (parts - total).abs() <= 1e-9 * total.max(1e-12),
+                format!("{tag}: buckets {parts} != timeline energy {total}"),
+            )?;
+            ensure(cp.on_path_j > 0.0, format!("{tag}: on-path energy positive"))
+        };
+        for (ti, hw) in testbeds.iter().enumerate() {
+            let topo = hw.topo();
+            for &par in &pars {
+                let cfg = RunConfig::new("Vicuna-7B", par, 4, 8).with_seed(seed);
+                let (plan, built) = execute_traced(&cfg, hw, &knobs());
+                let trace = built.trace.as_ref().expect("execute_traced captures the trace");
+                let cp = critical_path_with(&built.timeline, Some((trace, &plan, &topo)));
+                check(&built.timeline, &cp, &format!("{par:?}/testbed{ti}"))?;
+            }
+        }
+        // Batched lanes: two TP shapes bound to one cached structure and
+        // resolved in a single engine walk satisfy the same invariants
+        // per lane.
+        let hw = HwSpec::default();
+        let tknobs = knobs().with_trace(true);
+        let cache = piep::plan::PlanCache::new();
+        let cfgs = [
+            RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8).with_seed(seed),
+            RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 32).with_seed(seed ^ 1),
+        ];
+        let spec = piep::models::by_name("Vicuna-7B").unwrap();
+        let plans: Vec<_> = cfgs.iter().map(|c| cache.get_or_lower(c, &hw, &tknobs)).collect();
+        let batch = piep::plan::ExecBatch::new(plans);
+        let conditions = cfgs.iter().map(|c| (PowerModel::new(&hw), Rng::new(c.seed))).collect();
+        for (lane, (built, _, _)) in piep::parallelism::execute_batch(&batch, &spec, &tknobs, conditions, 1)
+            .into_iter()
+            .enumerate()
+        {
+            ensure(built.trace.is_some(), "batched lanes capture the trace too")?;
+            let cp = critical_path(&built.timeline);
+            check(&built.timeline, &cp, &format!("batched lane {lane}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pruned_tune_argmin_matches_exhaustive() {
+    // Branch-and-bound pruning must be invisible at the argmin: same
+    // deployment key, bit-equal J/token as the exhaustive (--no-prune)
+    // search, and every surviving candidate scores identically.
+    use piep::eval::tune::{run_tune, TuneOptions};
+    forall(121, 3, |r| r.next_u64() & 0xffff, |&seed| {
+        let opts = TuneOptions {
+            knobs: knobs(),
+            gpu_counts: vec![2, 4],
+            batches: vec![8, 32],
+            passes: 2,
+            base_seed: seed,
+            ..TuneOptions::default()
+        };
+        let full = run_tune(&opts);
+        let pruned = run_tune(&TuneOptions { prune: true, ..opts });
+        let a = full.argmin_j_token.expect("exhaustive argmin");
+        let b = pruned.argmin_j_token.expect("pruned argmin");
+        ensure(a.key == b.key, format!("argmin {} != exhaustive {}", b.key, a.key))?;
+        ensure(a.j_per_token == b.j_per_token, "argmin score bit-equal")?;
+        ensure(
+            pruned.candidates.len() + pruned.pruned == full.candidates.len(),
+            "survivors + pruned partition the grid",
+        )?;
+        for c in &pruned.candidates {
+            let f = full.candidates.iter().find(|f| f.key == c.key);
+            ensure(
+                f.is_some_and(|f| f.j_per_token == c.j_per_token),
+                format!("survivor {} rescored under pruning", c.key),
+            )?;
+        }
+        Ok(())
+    });
+}
