@@ -44,6 +44,9 @@ pub(crate) fn cmd_critpath(args: &Args) {
             if gpus >= 4 {
                 out.push(Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap());
             }
+            if gpus >= 2 {
+                out.push(Parallelism::expert(gpus));
+            }
             out
         });
 

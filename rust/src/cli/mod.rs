@@ -106,28 +106,39 @@ pub fn run() {
 }
 
 fn help() {
-    println!("piep — Parallelized Inference Energy Predictor (reproduction)\n");
-    println!("USAGE: piep <command> [flags]\n");
-    println!("COMMANDS");
+    print!("{}", help_text());
+}
+
+/// The full `piep help` text, generated from [`COMMANDS`] so the table and
+/// the help screen cannot drift apart (asserted in tests).
+fn help_text() -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "piep — Parallelized Inference Energy Predictor (reproduction)\n");
+    let _ = writeln!(out, "USAGE: piep <command> [flags]\n");
+    let _ = writeln!(out, "COMMANDS");
     for (name, _, desc) in COMMANDS {
         let mut lines = desc.lines();
-        println!("  {name:<12} {}", lines.next().unwrap_or(""));
+        let _ = writeln!(out, "  {name:<12} {}", lines.next().unwrap_or(""));
         for l in lines {
-            println!("  {:<12} {l}", "");
+            let _ = writeln!(out, "  {:<12} {l}", "");
         }
     }
-    println!("  {:<12} paper experiment harnesses:", "<experiment>");
-    println!("  {:<12} {}", "", reproduce::id_list(&reproduce::PAPER_EXPERIMENTS));
-    println!("  {:<12} extension studies (see DESIGN.md):", "");
-    println!("  {:<12} {}", "", reproduce::id_list(&reproduce::EXTENSION_EXPERIMENTS));
-    println!(
+    let _ = writeln!(out, "  {:<12} paper experiment harnesses:", "<experiment>");
+    let _ = writeln!(out, "  {:<12} {}", "", reproduce::id_list(&reproduce::PAPER_EXPERIMENTS));
+    let _ = writeln!(out, "  {:<12} extension studies (see DESIGN.md):", "");
+    let _ = writeln!(out, "  {:<12} {}", "", reproduce::id_list(&reproduce::EXTENSION_EXPERIMENTS));
+    let _ = writeln!(
+        out,
         "\nTESTBED FLAGS (shared by plan, sweep, serve, bench-sim, tune, fleet, critpath)\n{}",
         topo::TOPO_HELP
     );
-    println!(
+    let _ = writeln!(
+        out,
         "\nFLAGS\n\
          \x20 --model NAME --family NAME --batch N\n\
-         \x20 --parallelism tp|pp|dp|<hybrid label, e.g. tp2xpp>\n\
+         \x20 --parallelism tp|pp|dp|ep<N> (expert/MoE, e.g. ep4)\n\
+         \x20               |<hybrid label, e.g. tp2xpp>\n\
          \x20 --seq-out N --passes N --steps N --seed N --threads N\n\
          \x20 --engine-threads N (per-rank event-engine pool; 1 = serial) --out DIR\n\
          \x20 --no-batch (sweep, tune, fleet: disable batched multi-candidate\n\
@@ -137,6 +148,7 @@ fn help() {
          \x20            candidates whose critical-path energy lower bound\n\
          \x20            exceeds the incumbent J/token are skipped unsimulated)"
     );
+    out
 }
 
 #[cfg(test)]
@@ -155,5 +167,19 @@ mod tests {
         // The `fleet` subcommand wins over the `fleet` report experiment;
         // the experiment stays reachable as `piep reproduce fleet`.
         assert!(reproduce::is_experiment_id("fleet"));
+    }
+
+    #[test]
+    fn help_names_every_subcommand_and_the_ep_label() {
+        let text = help_text();
+        for (name, _, _) in COMMANDS {
+            assert!(
+                text.lines().any(|l| l.trim_start().starts_with(name)),
+                "{name} missing from help"
+            );
+        }
+        // The strategy flag documents the expert-parallel label family.
+        assert!(text.contains("ep<N>"), "expert label missing from FLAGS");
+        assert!(text.contains("ep4"), "ep example missing from FLAGS");
     }
 }

@@ -32,11 +32,12 @@ pub(crate) const PAPER_EXPERIMENTS: [(&str, Harness); 15] = [
 ];
 
 /// Extension studies beyond the paper's evaluation (see DESIGN.md).
-pub(crate) const EXTENSION_EXPERIMENTS: [(&str, Harness); 7] = [
+pub(crate) const EXTENSION_EXPERIMENTS: [(&str, Harness); 8] = [
     ("crosshw", report::crosshw),
     ("sensitivity", report::sensitivity),
     ("ablate-ring", report::ablate_ring),
     ("parallelism-matrix", report::parallelism_matrix),
+    ("expert", report::expert_study),
     ("serving", report::serving),
     ("tune-study", report::tune_study),
     // Shadowed by the `fleet` subcommand at the top level; run it as
@@ -106,7 +107,7 @@ mod tests {
             .chain(EXTENSION_EXPERIMENTS.iter())
             .map(|(name, _)| *name)
             .collect();
-        assert_eq!(ids.len(), 22);
+        assert_eq!(ids.len(), 23);
         for id in &ids {
             assert!(is_experiment_id(id), "{id} must dispatch");
         }

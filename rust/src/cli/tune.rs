@@ -36,6 +36,7 @@ pub(crate) fn cmd_tune(args: &Args) {
             crate::config::Parallelism::Tensor,
             crate::config::Parallelism::Pipeline,
             crate::config::Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap(),
+            crate::config::Parallelism::expert(4),
         ])
     } else {
         args.get("strategies").map(|s| {

@@ -302,6 +302,14 @@ pub struct SimKnobs {
     /// state, NCCL channel placement) — the paper's "higher variance ...
     /// due to the inherent non-determinism in communication".
     pub sync_jitter_cv: f64,
+    /// Per-run lognormal cv of the MoE top-k routing imbalance: expert
+    /// parallelism draws one persistent hot-expert load multiplier per rank
+    /// (clamped ≥ 1 — hot experts only slow down), which stretches expert
+    /// MLP compute and widens the straggler rendezvous at the all-to-all
+    /// dispatch/combine barriers. Only drawn by plans that carry all-to-all
+    /// collectives (`Plan::draws_route_bias`); every other strategy's seed
+    /// stream is untouched.
+    pub route_imbalance_cv: f64,
     /// Probability that a (rank, step) compute phase is a straggler.
     pub straggler_p: f64,
     /// Straggler slowdown multiplier range (uniform).
@@ -380,6 +388,7 @@ impl Default for SimKnobs {
             rank_bias_cv: 0.08,
             sync_jitter_s: 40.0e-6,
             sync_jitter_cv: 0.35,
+            route_imbalance_cv: 0.30,
             straggler_p: 0.006,
             straggler_scale: (1.4, 2.8),
             thermal_cv: 0.14,
@@ -500,6 +509,7 @@ mod tests {
     fn knob_defaults_sane() {
         let k = SimKnobs::default();
         assert!(k.compute_cv > 0.0 && k.compute_cv < 0.5);
+        assert!(k.route_imbalance_cv > 0.0 && k.route_imbalance_cv < 1.0);
         assert!(k.straggler_scale.0 > 1.0);
         assert!(k.straggler_scale.1 > k.straggler_scale.0);
         assert!(k.sim_decode_steps >= 8);

@@ -71,6 +71,19 @@ pub enum Parallelism {
         /// Ranks per inner group (the outer degree is `gpus / inner_degree`).
         inner_degree: usize,
     },
+    /// Expert parallelism (MoE): attention replicated on every rank, MLP
+    /// experts sharded across all `degree` ranks, with per-layer all-to-all
+    /// dispatch/combine collectives routing each token's top-k expert
+    /// activations. Labels serialize as `"ep<degree>"` (e.g. `"ep4"`).
+    Expert {
+        /// Expert-parallel degree (the whole mesh: `degree == gpus`).
+        degree: usize,
+        /// Experts each token routes to (payload multiplier on dispatch).
+        top_k: usize,
+        /// Per-expert capacity factor, percent (125 = 1.25× even share);
+        /// headroom buffered for routing imbalance.
+        capacity_pct: usize,
+    },
 }
 
 impl Parallelism {
@@ -97,6 +110,17 @@ impl Parallelism {
             outer,
             inner_degree,
         })
+    }
+
+    /// Construct an expert-parallel deployment with the canonical MoE
+    /// routing defaults (top-2 routing, 1.25× capacity factor) — the shape
+    /// `parse("ep<degree>")` yields.
+    pub fn expert(degree: usize) -> Parallelism {
+        Parallelism::Expert {
+            degree,
+            top_k: 2,
+            capacity_pct: 125,
+        }
     }
 
     pub fn is_hybrid(&self) -> bool {
@@ -148,6 +172,15 @@ impl Parallelism {
         }
     }
 
+    /// Expert-parallel degree within the composition (1 when absent).
+    /// Expert parallelism takes the whole mesh (no hybrid nesting yet).
+    pub fn expert_degree(&self, gpus: usize) -> usize {
+        match *self {
+            Parallelism::Expert { .. } => gpus,
+            _ => 1,
+        }
+    }
+
     /// Display/grouping name. Hybrid names omit the inner degree (use
     /// `label` for the unambiguous serialized form).
     pub fn name(&self) -> &'static str {
@@ -161,12 +194,14 @@ impl Parallelism {
                 (Strategy::Pipeline, Strategy::Data) => "pipeline+data",
                 _ => "hybrid",
             },
+            Parallelism::Expert { .. } => "expert",
         }
     }
 
     /// Unambiguous label, stable under `parse` roundtrips: pure strategies
     /// keep their names; hybrids serialize as `"<inner><degree>x<outer>"`
-    /// (e.g. `"tp2xpp"`).
+    /// (e.g. `"tp2xpp"`); expert parallelism as `"ep<degree>"` (e.g.
+    /// `"ep4"`).
     pub fn label(&self) -> String {
         match *self {
             Parallelism::Hybrid {
@@ -174,6 +209,7 @@ impl Parallelism {
                 outer,
                 inner_degree,
             } => format!("{}{}x{}", inner.short(), inner_degree, outer.short()),
+            Parallelism::Expert { degree, .. } => format!("ep{degree}"),
             _ => self.name().to_string(),
         }
     }
@@ -185,6 +221,15 @@ impl Parallelism {
             "pipeline" | "pp" => return Some(Parallelism::Pipeline),
             "data" | "dp" => return Some(Parallelism::Data),
             _ => {}
+        }
+        // Expert labels: "ep<degree>", e.g. "ep4" — checked before the
+        // hybrid path ("ep…" never contains an 'x' strategy pair).
+        if let Some(d) = t.strip_prefix("ep") {
+            let degree: usize = d.parse().ok()?;
+            if degree < 2 {
+                return None;
+            }
+            return Some(Parallelism::expert(degree));
         }
         // Hybrid labels: "<inner><degree>x<outer>", e.g. "tp2xpp".
         let (lhs, rhs) = t.split_once('x')?;
@@ -362,6 +407,40 @@ mod tests {
         );
         assert_eq!(Parallelism::parse("tpxpp"), None); // degree is mandatory
         assert_eq!(Parallelism::parse("dp2xtp"), None); // non-canonical order
+    }
+
+    #[test]
+    fn expert_label_parse_roundtrip() {
+        for degree in [2usize, 4, 8] {
+            let p = Parallelism::expert(degree);
+            assert_eq!(p.label(), format!("ep{degree}"));
+            assert_eq!(Parallelism::parse(&p.label()), Some(p), "{}", p.label());
+        }
+        // Defaults are the canonical MoE routing shape.
+        assert_eq!(
+            Parallelism::parse("ep4"),
+            Some(Parallelism::Expert {
+                degree: 4,
+                top_k: 2,
+                capacity_pct: 125
+            })
+        );
+        assert_eq!(Parallelism::parse("ep"), None); // degree is mandatory
+        assert_eq!(Parallelism::parse("ep1"), None); // degenerate degree
+        assert_eq!(Parallelism::parse("ep2x"), None); // trailing garbage
+        assert_eq!(Parallelism::expert(4).name(), "expert");
+    }
+
+    #[test]
+    fn expert_degree_takes_the_whole_mesh() {
+        let p = Parallelism::expert(4);
+        assert_eq!(p.expert_degree(4), 4);
+        assert_eq!(p.tensor_degree(4), 1);
+        assert_eq!(p.pipeline_degree(4), 1);
+        assert_eq!(p.data_degree(4), 1);
+        assert!(!p.is_hybrid());
+        // Non-expert strategies have expert degree 1.
+        assert_eq!(Parallelism::Tensor.expert_degree(4), 1);
     }
 
     #[test]

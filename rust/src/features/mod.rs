@@ -84,6 +84,15 @@ pub mod module_feat {
     /// `ln(1 + intra_bw/inter_bw − 1)` on comm leaves: how much slower the
     /// boundary-crossing ring steps run (0.0 when single-tier).
     pub const TIER_BW_RATIO: usize = super::RUN_FEATURES + 10;
+    /// `ln(1 + ep − 1)` on all-to-all leaves: the expert-parallel degree
+    /// (how many expert hosts the token exchange spans). 0.0 on every
+    /// non-expert strategy, so pre-EP feature vectors are unchanged
+    /// (DESIGN.md §16).
+    pub const EP_DEGREE: usize = super::RUN_FEATURES + 12;
+    /// `ln(1 + top_k·capacity − 1)` on all-to-all leaves: the routing
+    /// fan-out pressure (tokens buffered per slot) that drives the
+    /// routing-imbalance width of the rendezvous. 0.0 off all-to-all.
+    pub const EP_ROUTING: usize = super::RUN_FEATURES + 13;
 }
 
 /// Indices of the model-structure features (for the Table-9 ablation).
@@ -222,6 +231,13 @@ pub fn module_features(
         let g = r.config.gpus;
         let par = r.config.parallelism;
         let (tp, pp, dp) = (par.tensor_degree(g), par.pipeline_degree(g), par.data_degree(g));
+        let ep = par.expert_degree(g);
+        let (top_k, capacity) = match par {
+            crate::config::Parallelism::Expert { top_k, capacity_pct, .. } => {
+                (top_k.max(1), capacity_pct.max(100) as f64 / 100.0)
+            }
+            _ => (2, 1.25),
+        };
         let (ar_batch, p2p_micro, ag_batch) = if par.is_hybrid() {
             let shard = (r.config.batch + dp - 1) / dp; // per-replica batch
             let micro = (shard + pp - 1) / pp; // per-stage microbatch
@@ -237,8 +253,15 @@ pub fn module_features(
             ModuleKind::AllReduce => (2 * tp.saturating_sub(1)) as f64,
             ModuleKind::AllGather => ag_ring.saturating_sub(1) as f64,
             ModuleKind::P2PTransfer => 1.0,
+            ModuleKind::AllToAll => ep.saturating_sub(1) as f64,
             _ => 0.0,
         };
+        if kind == ModuleKind::AllToAll {
+            // Expert-parallel descriptors (comm-leaf-only: the run-level
+            // padding contract keeps these slots zero everywhere else).
+            x[module_feat::EP_DEGREE] = logf(ep as f64 - 1.0);
+            x[module_feat::EP_ROUTING] = logf(top_k as f64 * capacity - 1.0);
+        }
         // Cluster-tier descriptors: zero on the flat single-node testbed,
         // so pre-topology feature vectors are unchanged.
         x[module_feat::TIER_NODES] = logf(r.nodes as f64 - 1.0);
@@ -249,6 +272,12 @@ pub fn module_features(
                 ModuleKind::AllReduce => r.spec.allreduce_payload_bytes(ar_batch, 1),
                 ModuleKind::AllGather => r.spec.allgather_payload_bytes(ag_batch),
                 ModuleKind::P2PTransfer => r.spec.p2p_payload_bytes(p2p_micro, 1) / tp as f64,
+                // Per-rank token-exchange payload: the rank's batch shard
+                // routed to top_k experts with capacity headroom.
+                ModuleKind::AllToAll => {
+                    let shard = (r.config.batch + ep - 1) / ep;
+                    (shard * r.spec.hidden * r.spec.dtype_bytes) as f64 * top_k as f64 * capacity
+                }
                 _ => 0.0,
             };
             x[module_feat::PAYLOAD_MB] = logf(payload / 1e6);
@@ -438,6 +467,37 @@ mod tests {
         // Compute leaves carry no tier descriptors.
         let mlp = module_features(&r, Leaf::compute(ModuleKind::Mlp), 32.0, None, FeatureOpts::default());
         assert_eq!(mlp[module_feat::TIER_NODES], 0.0);
+    }
+
+    #[test]
+    fn alltoall_leaves_carry_expert_descriptors() {
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::expert(4), 4, 8).with_seed(1);
+        let r = simulate_run(&cfg, &HwSpec::default(), &SimKnobs::default());
+        let xfer = module_features(
+            &r,
+            Leaf::transfer(ModuleKind::AllToAll),
+            64.0,
+            None,
+            FeatureOpts::default(),
+        );
+        assert!(xfer[module_feat::PAYLOAD_MB] > 0.0);
+        assert_eq!(xfer[module_feat::RING_STEPS], 3.0); // ep − 1
+        assert!(xfer[module_feat::EP_DEGREE] > 0.0);
+        assert!(xfer[module_feat::EP_ROUTING] > 0.0);
+        // Non-expert comm leaves keep the EP slots zero (padding contract).
+        let tp = record();
+        let ar = module_features(
+            &tp,
+            Leaf::transfer(ModuleKind::AllReduce),
+            64.0,
+            None,
+            FeatureOpts::default(),
+        );
+        assert_eq!(ar[module_feat::EP_DEGREE], 0.0);
+        assert_eq!(ar[module_feat::EP_ROUTING], 0.0);
+        // And EP run-level vectors keep the tail past the comm slots zero.
+        let run = run_features(&r, FeatureOpts::default());
+        assert!(run[module_feat::EP_DEGREE] == 0.0 && run[module_feat::EP_ROUTING] == 0.0);
     }
 
     #[test]

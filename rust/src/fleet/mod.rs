@@ -24,6 +24,38 @@
 //!   Σ replica step J + cold-start J == cluster J (rel 1e-9);
 //! * **bit-determinism** — the same (trace, config, seed) reproduces
 //!   identical routing decisions, per-request records, and cluster energy.
+//!
+//! # Example: route one trace through a two-replica fleet
+//!
+//! ```
+//! use piep::config::{Parallelism, TestbedSpec};
+//! use piep::fleet::{simulate_fleet, FleetConfig, ReplicaSpec, RouterPolicy};
+//! use piep::serve::{synthesize, ServeConfig, SynthSpec};
+//!
+//! let trace = synthesize(
+//!     &SynthSpec {
+//!         requests: 3,
+//!         prompt_mean: 32.0,
+//!         prompt_range: (8, 64),
+//!         output_mean: 4.0,
+//!         output_range: (2, 6),
+//!         ..SynthSpec::default()
+//!     },
+//!     7,
+//! );
+//! let replica = || ReplicaSpec::new(
+//!     ServeConfig::new("Vicuna-7B", Parallelism::Tensor, 2),
+//!     TestbedSpec::Flat { gpus: 2 },
+//! );
+//! let cfg = FleetConfig::new(vec![replica(), replica()])
+//!     .with_router(RouterPolicy::EnergyAware)
+//!     .with_base_seed(7);
+//! let res = simulate_fleet(&trace, &cfg);
+//! assert_eq!(res.requests.len(), trace.len());
+//! // Conservation: attributed + cold-start energy equals the cluster total.
+//! let attributed = res.attributed_energy_j();
+//! assert!((attributed - res.cluster_energy_j).abs() <= 1e-9 * res.cluster_energy_j);
+//! ```
 
 pub mod autoscaler;
 pub mod router;

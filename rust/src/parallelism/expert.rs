@@ -1,0 +1,236 @@
+//! Expert-parallel lowerer (MoE all-to-all).
+//!
+//! The mesh is treated as a pool of expert hosts: attention (and the
+//! small surrounding modules) runs data-parallel — each rank processes
+//! its own batch shard with a full replica of the non-expert weights —
+//! while the MLP weights are sharded one expert group per rank. Every
+//! transformer block therefore inserts *two* all-to-all rendezvous per
+//! pass: a dispatch that routes each rank's top-k token assignments to
+//! the ranks hosting the selected experts, and a combine that routes the
+//! expert outputs back. Both are jittered rendezvous events over the
+//! tiered interconnect, and the expert MLP between them is additionally
+//! stretched by a per-rank routing-imbalance multiplier (hot experts —
+//! see `simulator::skew`), which is what makes the all-to-all waiting
+//! phase wider and more informative than the tensor-parallel AllReduce.
+//!
+//! Per-rank dispatch payload is `tokens × top_k × hidden × dtype ×
+//! capacity`, where `capacity` (≥ 1) buffers the routing headroom real
+//! MoE runtimes allocate for imbalanced experts.
+
+use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use crate::models::ModelSpec;
+use crate::plan::{Plan, PlanBuilder, PlanSink, WaitRecord};
+use crate::simulator::collective;
+use crate::simulator::perf::PerfModel;
+use crate::simulator::timeline::ModuleKind;
+
+use super::LowerMeta;
+
+/// Reference lowering into the interpreted `Plan` representation.
+pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -> Plan {
+    let mut b = PlanBuilder::new(cfg.gpus);
+    let m = lower_into(spec, hw, knobs, cfg, &mut b);
+    b.finish(m.sim_steps, m.comm_bytes_per_step, m.draws_sync_jitter)
+}
+
+/// Lowering pass, generic over the sink (reference build, SoA compile, or
+/// shape rebind — see `plan::PlanSink`).
+pub fn lower_into<S: PlanSink>(
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+    b: &mut S,
+) -> LowerMeta {
+    let g = cfg.gpus;
+    let perf = PerfModel::new(hw);
+    let topo = hw.topo();
+    let mut comm_bytes_per_step = 0.0;
+    let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
+
+    // Routing shape: taken from the strategy when it is `Expert` (the
+    // normal path); the defaults keep the lowerer usable standalone.
+    let (top_k, capacity_pct) = match cfg.parallelism {
+        Parallelism::Expert { top_k, capacity_pct, .. } => (top_k.max(1), capacity_pct.max(100)),
+        _ => (2, 125),
+    };
+    let capacity = capacity_pct as f64 / 100.0;
+
+    // Attention is data-parallel: each rank owns a batch shard.
+    let shard = (cfg.batch + g - 1) / g;
+    // Expert MLP: each token activates `top_k` experts; the assignments
+    // spread over the g expert hosts, so per-rank expert compute is the
+    // dense MLP at `tokens × top_k` sharded g ways.
+    let expert_tokens = cfg.batch * top_k;
+
+    // All-to-all rendezvous over all g ranks — hierarchical when the mesh
+    // spans nodes (local exchange, leader exchange, local redistribution).
+    // Returns bytes moved.
+    let topo_ref = &topo;
+    let alltoall = move |b: &mut S, payload_per_rank: f64, layer: u16, step: u32| -> f64 {
+        if g == 1 {
+            // A single rank hosts every expert: no collective at all.
+            return 0.0;
+        }
+        let t = collective::alltoall_hier(topo_ref, 0, g, payload_per_rank);
+        let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        b.collective_tiered(0..g, ModuleKind::AllToAll, layer, step, xfer, wire, true, WaitRecord::All);
+        t.cost.bytes_moved
+    };
+
+    // ---- Prefill (step 0): compute-bound pass over the prompt.
+    let prefill_payload =
+        (shard * cfg.seq_in * spec.hidden * spec.dtype_bytes) as f64 * top_k as f64 * capacity;
+    b.compute(0..g, perf.embed_decode(spec, shard * cfg.seq_in), ModuleKind::Embedding, 0, 0);
+    for layer in 0..spec.layers as u16 {
+        b.compute(0..g, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+        b.compute(0..g, perf.attn_prefill(spec, shard, cfg.seq_in, 1), ModuleKind::SelfAttention, layer, 0);
+        b.compute(0..g, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+        alltoall(&mut *b, prefill_payload, layer, 0);
+        b.compute(0..g, perf.mlp_prefill(spec, expert_tokens, cfg.seq_in, g), ModuleKind::Mlp, layer, 0);
+        alltoall(&mut *b, prefill_payload, layer, 0);
+    }
+
+    // ---- Decode: `sim_steps` representative steps spread over seq_out.
+    let decode_payload = (shard * spec.hidden * spec.dtype_bytes) as f64 * top_k as f64 * capacity;
+    for si in 0..sim_steps {
+        let step = (si + 1) as u32;
+        // Representative KV context for this sampled step.
+        let frac = (si as f64 + 0.5) / sim_steps as f64;
+        let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
+
+        b.compute(0..g, perf.embed_decode(spec, shard), ModuleKind::Embedding, 0, step);
+        for layer in 0..spec.layers as u16 {
+            b.compute(0..g, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+            b.compute(0..g, perf.attn_decode(spec, shard, context, 1), ModuleKind::SelfAttention, layer, step);
+            b.compute(0..g, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+            let b1 = alltoall(&mut *b, decode_payload, layer, step);
+            b.compute(0..g, perf.mlp_decode(spec, expert_tokens, g), ModuleKind::Mlp, layer, step);
+            let b2 = alltoall(&mut *b, decode_payload, layer, step);
+            if si == 0 {
+                comm_bytes_per_step += b1 + b2;
+            }
+        }
+        // Logits are data-parallel (full head replica per rank).
+        b.compute(0..g, perf.logits_decode(spec, shard, 1), ModuleKind::LogitsHead, 0, step);
+    }
+
+    // Terminal collation of the per-rank output shards, as in data
+    // parallelism (the sequences never leave their home rank).
+    if g > 1 {
+        let payload = spec.allgather_payload_bytes(shard);
+        let t = collective::allgather_ring(&topo, 0, g, g, payload);
+        let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        b.collective_tiered(0..g, ModuleKind::AllGather, 0, sim_steps as u32, xfer, wire, false, WaitRecord::All);
+        comm_bytes_per_step += t.cost.bytes_moved / sim_steps as f64;
+    }
+
+    LowerMeta {
+        sim_steps,
+        comm_bytes_per_step,
+        draws_sync_jitter: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+    use crate::parallelism::BuiltRun;
+    use crate::simulator::power::PowerModel;
+    use crate::simulator::timeline::PhaseKind;
+    use crate::util::rng::Rng;
+
+    fn build_run(gpus: usize, seed: u64) -> BuiltRun {
+        let spec = by_name("Vicuna-7B").unwrap();
+        let hw = HwSpec::default();
+        let knobs = SimKnobs {
+            sim_decode_steps: 4,
+            ..SimKnobs::default()
+        };
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::expert(gpus), gpus, 8).with_seed(seed);
+        let power = PowerModel::new(&hw);
+        let mut rng = Rng::new(seed);
+        crate::parallelism::build(&spec, &hw, &knobs, &cfg, &power, &mut rng)
+    }
+
+    #[test]
+    fn alltoall_count_matches_structure() {
+        let r = build_run(2, 1);
+        // 2 all-to-alls per layer per pass (prefill + 4 decode steps).
+        let a2a_xfers = r
+            .timeline
+            .phases
+            .iter()
+            .filter(|p| p.module == ModuleKind::AllToAll && p.kind == PhaseKind::Transfer)
+            .count();
+        let expected = 2 * 32 * (1 + 4) * 2; // syncs × ranks
+        assert_eq!(a2a_xfers, expected);
+    }
+
+    #[test]
+    fn plan_is_seed_free_and_structured() {
+        let spec = by_name("Vicuna-7B").unwrap();
+        let hw = HwSpec::default();
+        let knobs = SimKnobs {
+            sim_decode_steps: 4,
+            ..SimKnobs::default()
+        };
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::expert(2), 2, 8);
+        let plan = lower(&spec, &hw, &knobs, &cfg);
+        let (compute, coll, send, recv) = plan.op_census();
+        assert!(compute > 0);
+        // 2 all-to-alls × 32 layers × 5 passes + 1 terminal AllGather.
+        assert_eq!(coll, 2 * 32 * 5 + 1);
+        assert_eq!((send, recv), (0, 0));
+        assert!(plan.draws_sync_jitter);
+        assert!(plan.draws_route_bias, "all-to-alls must arm the routing-imbalance draw");
+        assert!(plan.comm_bytes_per_step > 0.0);
+    }
+
+    #[test]
+    fn waits_are_nonnegative_and_some_positive() {
+        let r = build_run(4, 2);
+        assert!(r.wait_samples.iter().all(|&w| w >= 0.0));
+        let positive = r.wait_samples.iter().filter(|&&w| w > 0.0).count();
+        // With skew, all but the slowest rank wait at nearly every sync.
+        assert!(positive as f64 > 0.5 * r.wait_samples.len() as f64);
+    }
+
+    #[test]
+    fn single_gpu_has_no_comm() {
+        let r = build_run(1, 3);
+        assert!(!r
+            .timeline
+            .phases
+            .iter()
+            .any(|p| p.kind == PhaseKind::Transfer));
+        assert!(r.wait_samples.iter().all(|&w| w == 0.0));
+    }
+
+    #[test]
+    fn more_gpus_faster_decode() {
+        let r2 = build_run(2, 4);
+        let r4 = build_run(4, 4);
+        let d2 = r2.timeline.makespan() - r2.prefill_end;
+        let d4 = r4.timeline.makespan() - r4.prefill_end;
+        assert!(d4 < d2, "decode g=4 {d4} vs g=2 {d2}");
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let a = build_run(2, 9);
+        let b = build_run(2, 9);
+        assert_eq!(a.timeline.makespan(), b.timeline.makespan());
+        assert_eq!(a.wait_samples, b.wait_samples);
+    }
+
+    #[test]
+    fn ranks_synchronized_after_final_collective() {
+        let r = build_run(4, 5);
+        let clocks: Vec<f64> = (0..4).map(|g| r.timeline.clock(g)).collect();
+        for c in &clocks {
+            assert!((c - clocks[0]).abs() < 1e-12);
+        }
+    }
+}

@@ -15,14 +15,38 @@
 //! * data: independent replicas, terminal output AllGather;
 //! * hybrid: pairwise compositions of the above over a 2-D rank mesh
 //!   (TP×PP, TP×DP, PP×DP), reusing the same communication points
-//!   group-locally.
+//!   group-locally;
+//! * expert: MoE expert parallelism — attention replicated, expert MLPs
+//!   sharded across the mesh, per-layer all-to-all dispatch/combine
+//!   collectives, plus a seeded top-k routing-imbalance skew source
+//!   (DESIGN.md §16).
 //!
 //! Lowering is deterministic (no seed enters a plan); the discrete-event
 //! engine (`simulator::engine`) injects rank skew and launch-desync jitter
 //! at execution time and resolves the collectives as straggler-determined
 //! rendezvous events.
+//!
+//! # Example
+//!
+//! Lower a configuration into the reference Plan IR and inspect its op
+//! census:
+//!
+//! ```
+//! use piep::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+//!
+//! let cfg = RunConfig::builder("Vicuna-7B")
+//!     .parallelism(Parallelism::expert(4))
+//!     .gpus(4)
+//!     .batch(8)
+//!     .build();
+//! let spec = piep::models::by_name("Vicuna-7B").unwrap();
+//! let plan = piep::parallelism::lower(&spec, &HwSpec::default(), &SimKnobs::default(), &cfg);
+//! let (compute, collective, _send, _recv) = plan.op_census();
+//! assert!(compute > 0 && collective > 0);
+//! ```
 
 pub mod data;
+pub mod expert;
 pub mod hybrid;
 pub mod pipeline;
 pub mod tensor;
@@ -60,6 +84,7 @@ pub fn lower(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig) -
         Parallelism::Pipeline => pipeline::lower(spec, hw, knobs, cfg),
         Parallelism::Data => data::lower(spec, hw, knobs, cfg),
         Parallelism::Hybrid { .. } => hybrid::lower(spec, hw, knobs, cfg),
+        Parallelism::Expert { .. } => expert::lower(spec, hw, knobs, cfg),
     }
 }
 
@@ -77,6 +102,7 @@ pub fn lower_into<S: PlanSink>(
         Parallelism::Pipeline => pipeline::lower_into(spec, hw, knobs, cfg, sink),
         Parallelism::Data => data::lower_into(spec, hw, knobs, cfg, sink),
         Parallelism::Hybrid { .. } => hybrid::lower_into(spec, hw, knobs, cfg, sink),
+        Parallelism::Expert { .. } => expert::lower_into(spec, hw, knobs, cfg, sink),
     }
 }
 
@@ -120,7 +146,7 @@ pub fn rebind(
 pub fn structure_key(knobs: &SimKnobs, cfg: &RunConfig) -> String {
     let sim_steps = knobs.sim_decode_steps.min(cfg.seq_out).max(1);
     let num_micro = match cfg.parallelism {
-        Parallelism::Tensor | Parallelism::Data => 0,
+        Parallelism::Tensor | Parallelism::Data | Parallelism::Expert { .. } => 0,
         Parallelism::Pipeline => pipeline::microbatches(cfg.batch, cfg.gpus).1,
         Parallelism::Hybrid {
             inner,
@@ -159,6 +185,7 @@ pub fn structure_key(knobs: &SimKnobs, cfg: &RunConfig) -> String {
 pub(crate) fn run_stochastics(
     num_ranks: usize,
     draws_sync_jitter: bool,
+    draws_route_bias: bool,
     spec: &ModelSpec,
     knobs: &SimKnobs,
     power: &PowerModel,
@@ -175,6 +202,12 @@ pub(crate) fn run_stochastics(
     } else {
         0.0
     };
+    // The MoE routing-imbalance draw comes last and is gated on the plan
+    // carrying all-to-all collectives, so every pre-existing strategy's
+    // seed stream is byte-identical to before this source existed.
+    if draws_route_bias {
+        skew.draw_route_bias(num_ranks, knobs.route_imbalance_cv, rng);
+    }
     (skew, sync_jitter)
 }
 
@@ -192,8 +225,15 @@ pub fn execute_plan(
     rng: &mut Rng,
     threads: usize,
 ) -> BuiltRun {
-    let (skew, sync_jitter) =
-        run_stochastics(plan.num_ranks, plan.draws_sync_jitter, spec, knobs, power, rng);
+    let (skew, sync_jitter) = run_stochastics(
+        plan.num_ranks,
+        plan.draws_sync_jitter,
+        plan.draws_route_bias,
+        spec,
+        knobs,
+        power,
+        rng,
+    );
     engine::execute(plan, power, &skew, sync_jitter, rng, threads, knobs.trace)
 }
 
@@ -212,6 +252,7 @@ pub fn execute_compiled(
     let (skew, sync_jitter) = run_stochastics(
         plan.num_ranks(),
         plan.structure.draws_sync_jitter,
+        plan.structure.draws_route_bias,
         spec,
         knobs,
         power,
@@ -243,6 +284,7 @@ pub fn execute_batch(
             let (skew, sync_jitter) = run_stochastics(
                 batch.structure.num_ranks,
                 batch.structure.draws_sync_jitter,
+                batch.structure.draws_route_bias,
                 spec,
                 knobs,
                 &power,

@@ -66,6 +66,10 @@ pub struct PlanStructure {
     pub num_edges: u32,
     /// Whether this strategy draws the per-run launch-desync scale.
     pub draws_sync_jitter: bool,
+    /// Whether this plan draws the per-rank MoE routing-imbalance
+    /// multipliers — derived from the presence of all-to-all collectives
+    /// at `finish` time, mirroring `Plan::draws_route_bias`.
+    pub draws_route_bias: bool,
 }
 
 impl PlanStructure {
@@ -162,6 +166,7 @@ impl ExecPlan {
             record: idx.iter().map(|&i| s.record[i]).collect(),
             num_edges: s.num_edges,
             draws_sync_jitter: s.draws_sync_jitter,
+            draws_route_bias: s.draws_route_bias,
         };
         let scalars = ShapeScalars {
             dur_s: idx.iter().map(|&i| sc.dur_s[i]).collect(),
@@ -358,6 +363,11 @@ impl StructureBuilder {
     }
 
     pub fn finish(self, sim_steps: usize, comm_bytes_per_step: f64, draws_sync_jitter: bool) -> ExecPlan {
+        let draws_route_bias = self
+            .kind
+            .iter()
+            .zip(&self.module)
+            .any(|(k, m)| *k == OpKind::Collective && *m == ModuleKind::AllToAll);
         ExecPlan {
             structure: Arc::new(PlanStructure {
                 num_ranks: self.num_ranks,
@@ -371,6 +381,7 @@ impl StructureBuilder {
                 record: self.record,
                 num_edges: self.num_edges,
                 draws_sync_jitter,
+                draws_route_bias,
             }),
             scalars: Arc::new(ShapeScalars {
                 dur_s: self.dur_s,
@@ -596,6 +607,7 @@ mod tests {
         assert_eq!(ep.num_ranks(), plan.num_ranks);
         assert_eq!(ep.structure.num_edges, plan.num_edges);
         assert!(ep.structure.draws_sync_jitter);
+        assert!(!ep.structure.draws_route_bias, "no all-to-all ops here");
         assert_eq!(ep.scalars.sim_steps, 2);
         assert_eq!(ep.scalars.comm_bytes_per_step, 64.0);
         assert_eq!(ep.scalars.dur_s, vec![1e-3, 1e-4, 2e-4, 0.0, 3e-3]);
@@ -682,6 +694,19 @@ mod tests {
         let a = compile(&sample_plan());
         let b = compile(&sample_plan()); // equal layout, different Arc
         let _ = ExecBatch::new(vec![a, b]);
+    }
+
+    #[test]
+    fn alltoall_structures_flag_route_bias_and_survive_slicing() {
+        let mut b = StructureBuilder::new(4);
+        b.compute(0..4, timing(1e-3), ModuleKind::SelfAttention, 0, 0);
+        b.collective(0..4, ModuleKind::AllToAll, 0, 0, 1e-4, true, WaitRecord::All);
+        b.compute(0..4, timing(2e-3), ModuleKind::Mlp, 0, 1);
+        b.collective(0..4, ModuleKind::AllToAll, 0, 1, 1e-4, true, WaitRecord::All);
+        let ep = b.finish(1, 32.0, true);
+        assert!(ep.structure.draws_route_bias);
+        let decode = ep.slice_steps(|s| s > 0);
+        assert!(decode.structure.draws_route_bias, "slices keep the flag");
     }
 
     #[test]

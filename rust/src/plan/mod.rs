@@ -28,6 +28,29 @@
 //! `SimKnobs::reference_engine`). The hot paths compile into the
 //! structure-of-arrays `exec::ExecPlan` instead — same op sequence, split
 //! into a mesh-keyed structure and a shape-scalar table (DESIGN.md §12).
+//!
+//! # Example: one structure lowering, then scalar rebinds
+//!
+//! ```
+//! use piep::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+//! use piep::plan::PlanCache;
+//!
+//! let hw = HwSpec::default();
+//! let knobs = SimKnobs { sim_decode_steps: 2, ..SimKnobs::default() };
+//! let cache = PlanCache::new();
+//!
+//! // First access lowers the expert-parallel mesh structure...
+//! let warm = RunConfig::new("Vicuna-7B", Parallelism::expert(2), 2, 8);
+//! let _ = cache.get_or_lower(&warm, &hw, &knobs);
+//! // ...a new prompt length is shape-level: served by a scalar rebind.
+//! let mut probe = warm.clone();
+//! probe.seq_in += 64;
+//! let _ = cache.get_or_lower(&probe, &hw, &knobs);
+//!
+//! let stats = cache.stats();
+//! assert_eq!(stats.structure_lowerings, 1);
+//! assert_eq!(stats.rebinds, 1);
+//! ```
 
 pub mod cache;
 pub mod exec;
@@ -183,6 +206,12 @@ pub struct Plan {
     /// tensor and hybrid planners sample it once per run even when no
     /// collective ends up jittered, preserving the seed stream).
     pub draws_sync_jitter: bool,
+    /// Whether this plan draws the per-rank MoE routing-imbalance
+    /// multipliers (`SkewModel::draw_route_bias`). Derived at `finish`
+    /// time from the presence of all-to-all collectives, so only the
+    /// expert-parallel strategy consumes the extra draws — every other
+    /// strategy's seed stream stays byte-identical.
+    pub draws_route_bias: bool,
     /// Decode steps simulated explicitly (before extrapolation).
     pub sim_steps: usize,
     /// Collective/P2P payload bytes moved per simulated decode step.
@@ -306,11 +335,21 @@ impl PlanBuilder {
         comm_bytes_per_step: f64,
         draws_sync_jitter: bool,
     ) -> Plan {
+        let draws_route_bias = self.ops.iter().any(|op| {
+            matches!(
+                op,
+                Op::Collective {
+                    module: ModuleKind::AllToAll,
+                    ..
+                }
+            )
+        });
         Plan {
             num_ranks: self.num_ranks,
             ops: self.ops,
             num_edges: self.num_edges,
             draws_sync_jitter,
+            draws_route_bias,
             sim_steps,
             comm_bytes_per_step,
         }
@@ -410,6 +449,15 @@ mod tests {
     }
 
     #[test]
+    fn alltoall_collectives_flag_route_bias_draws() {
+        let mut b = PlanBuilder::new(4);
+        b.compute(0..4, timing(), ModuleKind::SelfAttention, 0, 0);
+        b.collective(0..4, ModuleKind::AllToAll, 0, 0, 1e-4, true, WaitRecord::All);
+        let plan = b.finish(1, 0.0, true);
+        assert!(plan.draws_route_bias);
+    }
+
+    #[test]
     fn rank_range_iterates_and_contains() {
         let r = RankRange::of(2..5);
         assert_eq!(r.iter().collect::<Vec<_>>(), vec![2, 3, 4]);
@@ -427,6 +475,7 @@ mod tests {
         b.recv(1..2, 0, 2, e);
         let plan = b.finish(1, 0.0, true);
         assert!(plan.draws_sync_jitter);
+        assert!(!plan.draws_route_bias, "no all-to-all ops here");
         assert!(!plan.ops[0].is_sync());
         for op in &plan.ops[1..] {
             assert!(op.is_sync());

@@ -45,6 +45,7 @@ fn module_key(m: ModuleKind) -> &'static str {
         ModuleKind::AllReduce => "allreduce",
         ModuleKind::P2PTransfer => "p2p",
         ModuleKind::AllGather => "allgather",
+        ModuleKind::AllToAll => "alltoall",
     }
 }
 
@@ -224,9 +225,10 @@ pub fn run_from_json(j: &Json) -> Result<RunRecord, String> {
 /// Save a profiled dataset (runs; the sync DB is rebuilt on load).
 pub fn save_dataset(runs: &[RunRecord], path: &str) -> std::io::Result<()> {
     let j = obj(vec![
-        // v3: critical-path attribution (v2 added phase-resolved comm
-        // splits + unattributed residual).
-        ("format", s("piep-dataset-v3")),
+        // v4: expert-parallel runs with "alltoall" module rows (v3 added
+        // critical-path attribution, v2 phase-resolved comm splits +
+        // unattributed residual).
+        ("format", s("piep-dataset-v4")),
         ("runs", Json::Arr(runs.iter().map(run_to_json).collect())),
     ]);
     std::fs::write(path, j.render())
@@ -236,13 +238,14 @@ pub fn save_dataset(runs: &[RunRecord], path: &str) -> std::io::Result<()> {
 pub fn load_dataset(path: &str) -> Result<super::Dataset, String> {
     let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
     let j = Json::parse(&text)?;
-    // v2 files load with critical-path fields defaulted — the attribution
-    // did not exist when they were profiled.
+    // Older lineages load with their missing fields defaulted: v2 files
+    // predate critical-path attribution, v3 files simply contain no
+    // expert-parallel runs.
     if !matches!(
         j.get("format").and_then(Json::as_str),
-        Some("piep-dataset-v2") | Some("piep-dataset-v3")
+        Some("piep-dataset-v2") | Some("piep-dataset-v3") | Some("piep-dataset-v4")
     ) {
-        return Err("not a piep dataset file (expected piep-dataset-v2/v3)".into());
+        return Err("not a piep dataset file (expected piep-dataset-v2/v3/v4)".into());
     }
     let runs: Result<Vec<RunRecord>, String> = j
         .get("runs")
@@ -480,6 +483,9 @@ mod tests {
             RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 16),
             // Hybrid config: exercises the label()/parse() roundtrip.
             RunConfig::new("Vicuna-7B", hybrid, 4, 8),
+            // Expert config: exercises the "ep" label roundtrip and the
+            // "alltoall" module rows (schema v4).
+            RunConfig::new("Vicuna-7B", Parallelism::expert(2), 2, 8),
         ])
     }
 
@@ -614,5 +620,26 @@ mod tests {
         for m in ModuleKind::ALL {
             assert_eq!(module_from_key(module_key(m)), Some(m));
         }
+    }
+
+    #[test]
+    fn v3_headers_still_load_and_v4_carries_alltoall_rows() {
+        let ds = tiny_dataset();
+        let path = "target/test-store-dataset-v3.json";
+        save_dataset(&ds.runs, path).unwrap();
+        // The v4 file carries "alltoall" module rows for the expert run.
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("piep-dataset-v4"));
+        assert!(text.contains("\"alltoall\""));
+        // A v3 header (pre-expert dataset) is still accepted.
+        std::fs::write(path, text.replace("piep-dataset-v4", "piep-dataset-v3")).unwrap();
+        let loaded = load_dataset(path).unwrap();
+        assert_eq!(loaded.runs.len(), ds.runs.len());
+        let ep = loaded
+            .runs
+            .iter()
+            .find(|r| r.config.parallelism == Parallelism::expert(2))
+            .expect("expert run survives the roundtrip");
+        assert!(ep.module_energy_j.contains_key(&ModuleKind::AllToAll));
     }
 }

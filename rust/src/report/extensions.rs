@@ -198,6 +198,58 @@ pub fn parallelism_matrix(ctx: &mut ReportCtx) -> Table {
     t
 }
 
+/// Expert-parallelism study (DESIGN.md §16): full-mesh MoE all-to-all vs
+/// the paper's pure strategies at fixed work — decode latency, J/token,
+/// the all-to-all energy itself, and the communication share. The ep rows
+/// carry nonzero AllToAll energy; the paper strategies never do.
+pub fn expert_study(ctx: &mut ReportCtx) -> Table {
+    use crate::simulator::timeline::ModuleKind;
+    let hw = ctx.campaign.hw.clone();
+    let knobs = ctx.campaign.knobs.clone();
+    let mut t = Table::new(
+        "Extension — expert parallelism (MoE all-to-all) vs paper strategies (Vicuna-7B, batch 32)",
+        &["Strategy", "GPUs", "ms/token", "J/token", "A2A J", "Comm share"],
+    );
+    for gpus in [2usize, 4] {
+        for par in [Parallelism::Tensor, Parallelism::Data, Parallelism::expert(gpus)] {
+            let spec = crate::models::by_name("Vicuna-7B").unwrap();
+            if !crate::workload::runnable(&spec, par, gpus, &hw) {
+                continue;
+            }
+            let runs: Vec<_> = (0..4u64)
+                .map(|s| {
+                    let cfg = RunConfig::new("Vicuna-7B", par, gpus, 32).with_seed(s);
+                    crate::simulator::simulate_run(&cfg, &hw, &knobs)
+                })
+                .collect();
+            let ms = stats::mean(&runs.iter().map(|r| r.time_per_token_s() * 1e3).collect::<Vec<_>>());
+            let jt = stats::mean(&runs.iter().map(|r| r.energy_per_token_j()).collect::<Vec<_>>());
+            let a2a = stats::mean(
+                &runs
+                    .iter()
+                    .map(|r| r.module_energy_j.get(&ModuleKind::AllToAll).copied().unwrap_or(0.0))
+                    .collect::<Vec<_>>(),
+            );
+            let share = stats::mean(
+                &runs
+                    .iter()
+                    .map(|r| 100.0 * r.comm_energy_j() / r.true_total_j)
+                    .collect::<Vec<_>>(),
+            );
+            t.row(vec![
+                par.label(),
+                gpus.to_string(),
+                fnum(ms, 2),
+                fnum(jt, 3),
+                fnum(a2a, 1),
+                pct(share),
+            ]);
+        }
+    }
+    ctx.emit(&t, "ext_expert");
+    t
+}
+
 /// Topology/tuner study (DESIGN.md §11): run the energy-aware strategy
 /// autotuner on the flat single-node testbed and on a 2-node NVLink +
 /// InfiniBand fleet, and tabulate each fleet's Pareto front — showing how
@@ -392,6 +444,23 @@ mod tests {
             let p50: f64 = row[3].parse().unwrap();
             let p99: f64 = row[4].parse().unwrap();
             assert!(p50 > 0.0 && p99 >= p50, "{}: p50 {p50} p99 {p99}", row[0]);
+        }
+    }
+
+    #[test]
+    fn expert_study_rows_carry_alltoall_energy_only_for_ep() {
+        let mut ctx = quick_ctx("target/test-reports");
+        let t = expert_study(&mut ctx);
+        for label in ["ep2", "ep4", "tp", "dp"] {
+            assert!(t.rows.iter().any(|r| r[0] == label), "{label} missing");
+        }
+        for row in &t.rows {
+            let a2a: f64 = row[4].parse().unwrap();
+            if row[0].starts_with("ep") {
+                assert!(a2a > 0.0, "{}: expert rows burn all-to-all energy", row[0]);
+            } else {
+                assert_eq!(a2a, 0.0, "{}: paper strategies have no all-to-all", row[0]);
+            }
         }
     }
 

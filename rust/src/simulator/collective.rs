@@ -114,6 +114,86 @@ pub fn allgather(hw: &HwSpec, n: usize, payload_per_rank: f64) -> CollectiveCost
     allgather_link(&hw.flat_link(), n, payload_per_rank)
 }
 
+/// All-to-all exchange of `payload` bytes per rank across `n` ranks over
+/// one link tier: each rank scatters payload/n-byte chunks to the n−1
+/// peers (keeping its own shard local), pairwise-exchanged over n−1 steps.
+/// The per-step chunk matches the AllGather formula's shape, but the total
+/// bytes moved stay constant in n for a fixed per-rank payload — the MoE
+/// dispatch cost is latency-dominated at high degree.
+pub fn alltoall_link(link: &LinkSpec, n: usize, payload_per_rank: f64) -> CollectiveCost {
+    assert!(n >= 1);
+    if n == 1 {
+        return CollectiveCost::ZERO;
+    }
+    let steps = n - 1;
+    let chunk = payload_per_rank / n as f64;
+    let bytes_moved = chunk * steps as f64;
+    let transfer_s = link.base_latency + steps as f64 * (link.step_latency + chunk / link.bw);
+    CollectiveCost {
+        transfer_s,
+        steps,
+        bytes_moved,
+    }
+}
+
+/// All-to-all over the legacy flat link (`HwSpec` constants).
+pub fn alltoall(hw: &HwSpec, n: usize, payload_per_rank: f64) -> CollectiveCost {
+    alltoall_link(&hw.flat_link(), n, payload_per_rank)
+}
+
+/// Hierarchical all-to-all over ranks `[first, first + count)` of the
+/// topology. Single-node ranges pay the intra-node tier with the flat
+/// formula (bit-identical to `alltoall_link`); multi-node ranges decompose
+/// as an intra-node all-to-all (local shard exchange) followed by an
+/// inter-node all-to-all among one leader per node carrying the full
+/// boundary-crossing fraction of the payload, then an intra-node
+/// redistribution hop — mirroring `allreduce_hier`'s leader-averaging of
+/// bytes and wire energy over the range.
+pub fn alltoall_hier(topo: &Topology, first: usize, count: usize, payload_per_rank: f64) -> TieredCost {
+    if count <= 1 {
+        return TieredCost::ZERO;
+    }
+    let nodes = topo.nodes_spanned(first, count);
+    if nodes <= 1 {
+        return TieredCost::of(alltoall_link(&topo.intra, count, payload_per_rank), &topo.intra);
+    }
+    let local = topo.max_local(first, count);
+    // Intra-node shard exchange among local peers.
+    let intra = if local > 1 {
+        alltoall_link(&topo.intra, local, payload_per_rank)
+    } else {
+        CollectiveCost::ZERO
+    };
+    // Node leaders exchange the boundary-crossing fraction of every local
+    // rank's payload: (nodes−1)/nodes of local×payload bytes leave the node.
+    let cross_frac = (nodes - 1) as f64 / nodes as f64;
+    let inter_payload = payload_per_rank * local as f64 * cross_frac;
+    let inter = alltoall_link(&topo.inter, nodes, inter_payload);
+    // Leaders redistribute the received remote shards to local peers.
+    let redist = if local > 1 {
+        p2p_link(&topo.intra, payload_per_rank * cross_frac)
+    } else {
+        CollectiveCost::ZERO
+    };
+    let transfer_s = intra.transfer_s + inter.transfer_s + redist.transfer_s;
+    // Only one leader per node drives the inter ring and the
+    // redistribution; average their bytes/wire energy over the range as
+    // `allreduce_hier` does.
+    let leaders_frac = nodes as f64 / count as f64;
+    let per_rank_inter_bytes = inter.bytes_moved * leaders_frac;
+    let per_rank_redist_bytes = redist.bytes_moved * leaders_frac;
+    let wire_j = (intra.bytes_moved + per_rank_redist_bytes) * topo.intra.energy_per_byte
+        + per_rank_inter_bytes * topo.inter.energy_per_byte;
+    TieredCost {
+        cost: CollectiveCost {
+            transfer_s,
+            steps: intra.steps + inter.steps + redist.steps,
+            bytes_moved: intra.bytes_moved + per_rank_redist_bytes + per_rank_inter_bytes,
+        },
+        wire_w: if transfer_s > 0.0 { wire_j / transfer_s } else { 0.0 },
+    }
+}
+
 /// Point-to-point transfer over one link tier.
 pub fn p2p_link(link: &LinkSpec, payload: f64) -> CollectiveCost {
     CollectiveCost {
@@ -382,6 +462,59 @@ mod tests {
             (applied_wire_j - physical_wire_j).abs() < 1e-9 * physical_wire_j,
             "{applied_wire_j} vs {physical_wire_j}"
         );
+    }
+
+    #[test]
+    fn alltoall_steps_and_bytes() {
+        let h = hw();
+        let c = alltoall(&h, 4, 1e6);
+        assert_eq!(c.steps, 3);
+        // Each rank keeps its own 1/n shard: moves (n-1)/n of its payload.
+        assert!((c.bytes_moved - 0.75e6).abs() < 1e-6);
+        assert_eq!(alltoall(&h, 1, 1e6).transfer_s, 0.0);
+        // Total bytes moved are bounded by the per-rank payload, so the
+        // bandwidth term grows sublinearly in n ((n−1)/n of payload).
+        let t2 = alltoall(&h, 2, 64e6).transfer_s;
+        let t8 = alltoall(&h, 8, 64e6).transfer_s;
+        assert!(t8 > t2, "more peers cost more: {t2} vs {t8}");
+        assert!(t8 < 2.0 * t2, "but sublinearly: {t2} vs {t8}");
+    }
+
+    #[test]
+    fn single_node_alltoall_hier_is_bit_identical_to_flat() {
+        use crate::cluster::Topology;
+        let h = hw();
+        let topo = Topology::single_node(h.flat_link());
+        for n in 1..=8usize {
+            for payload in [0.0, 64.0 * 1024.0, 1e6, 64e6] {
+                let t = alltoall_hier(&topo, 0, n, payload);
+                assert_eq!(t.cost, alltoall(&h, n, payload), "alltoall n={n}");
+                assert_eq!(t.wire_w, 0.0, "flat link has no wire term");
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_crossing_a_node_boundary_costs_more() {
+        use crate::cluster::{LinkTier, Topology};
+        let topo = Topology::multi_node(2, LinkTier::NvLink, LinkTier::InfiniBand);
+        let intra_only = Topology::single_node(LinkTier::NvLink.spec());
+        let payload = 4e6;
+        let flat = alltoall_hier(&intra_only, 0, 4, payload);
+        let hier = alltoall_hier(&topo, 0, 4, payload);
+        assert!(
+            hier.cost.transfer_s > flat.cost.transfer_s,
+            "{} vs {}",
+            hier.cost.transfer_s,
+            flat.cost.transfer_s
+        );
+        assert!(hier.wire_w > 0.0, "named tiers carry wire power");
+        // One GPU per node degenerates to the pure inter-node exchange.
+        let solo = Topology::multi_node(1, LinkTier::NvLink, LinkTier::InfiniBand);
+        let t = alltoall_hier(&solo, 0, 4, payload);
+        let inter = alltoall_link(&topo.inter, 4, payload * 0.75);
+        assert_eq!(t.cost.transfer_s, inter.transfer_s);
+        assert_eq!(t.cost.steps, inter.steps);
     }
 
     #[test]

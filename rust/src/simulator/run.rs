@@ -329,10 +329,10 @@ fn finish_record(
     // §Perf); converted to maps once at the end. Communication modules get
     // a parallel wait/transfer decomposition from the engine's explicit
     // sync-wait phases.
-    let mut module_gpu_arr = [0.0f64; 8];
-    let mut module_time_arr = [0.0f64; 8];
-    let mut comm_wait_arr = [0.0f64; 8];
-    let mut comm_xfer_arr = [0.0f64; 8];
+    let mut module_gpu_arr = [0.0f64; ModuleKind::COUNT];
+    let mut module_time_arr = [0.0f64; ModuleKind::COUNT];
+    let mut comm_wait_arr = [0.0f64; ModuleKind::COUNT];
+    let mut comm_xfer_arr = [0.0f64; ModuleKind::COUNT];
     let mut gpu_j = vec![0.0f64; g];
     let mut idle_j = 0.0f64;
     let mut busy_time = 0.0f64;
@@ -560,6 +560,7 @@ pub(crate) fn floor_energy_per_token(
     let (skew, _) = parallelism::run_stochastics(
         plan.num_ranks(),
         plan.structure.draws_sync_jitter,
+        plan.structure.draws_route_bias,
         spec,
         knobs,
         &c.power,
@@ -664,6 +665,12 @@ mod tests {
         assert!(!pp.module_energy_j.contains_key(&ModuleKind::AllReduce));
         let dp = run("Vicuna-7B", Parallelism::Data, 2, 8, 3);
         assert!(dp.module_energy_j[&ModuleKind::AllGather] > 0.0);
+        let ep = run("Vicuna-7B", Parallelism::expert(2), 2, 8, 3);
+        assert!(ep.module_energy_j[&ModuleKind::AllToAll] > 0.0);
+        assert!(!ep.module_energy_j.contains_key(&ModuleKind::AllReduce));
+        // The all-to-all rendezvous records both wait and transfer energy.
+        let (w, x) = ep.comm_split_j[&ModuleKind::AllToAll];
+        assert!(w > 0.0 && x > 0.0);
     }
 
     #[test]
@@ -807,6 +814,9 @@ mod tests {
             Parallelism::Pipeline,
             Parallelism::Data,
             Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap(),
+            // Expert: the routing-imbalance multiplier is clamped ≥ 1, so
+            // the (imbalance-blind) floor must still lower-bound it.
+            Parallelism::expert(4),
         ];
         for par in pars {
             for seed in [1u64, 42, 1000] {

@@ -25,6 +25,14 @@ pub struct SkewModel {
     /// what makes Mistral/Qwen modules harder to predict (paper Table 2).
     attn_bias: f64,
     mlp_bias: f64,
+    /// Per-rank MoE routing-imbalance load multiplier (expert parallelism
+    /// only): a rank hosting hot experts processes more than its even
+    /// share of tokens, stretching its expert MLP compute — which is what
+    /// widens the straggler rendezvous at the all-to-all barriers. Empty
+    /// (the identity) for every non-expert strategy; entries are clamped
+    /// ≥ 1 so the critical-path floor (`trace::critpath::floor_resolve`),
+    /// which ignores it, stays a sound lower bound.
+    route_bias: Vec<f64>,
     /// Precomputed lognormal sigma for `compute_cv` (hot path: one
     /// `exp` per sample instead of two `ln` + `sqrt` + `exp`).
     sigma: f64,
@@ -58,8 +66,20 @@ impl SkewModel {
             rank_bias,
             attn_bias: rng.lognormal_mean_cv(1.0, module_cv),
             mlp_bias: rng.lognormal_mean_cv(1.0, module_cv * 0.8),
+            route_bias: Vec::new(),
             sigma: (1.0 + compute_cv * compute_cv).ln().sqrt(),
         }
+    }
+
+    /// Draw the per-rank MoE routing-imbalance multipliers (one lognormal
+    /// draw per rank, clamped ≥ 1 — hot experts only slow a rank down).
+    /// Called *after* every other run-level draw, and only for plans that
+    /// carry all-to-all collectives, so every non-expert strategy's seed
+    /// stream is byte-identical to before this source existed.
+    pub fn draw_route_bias(&mut self, num_gpus: usize, cv: f64, rng: &mut Rng) {
+        self.route_bias = (0..num_gpus)
+            .map(|_| rng.lognormal_mean_cv(1.0, cv).max(1.0))
+            .collect();
     }
 
     /// Fold a heterogeneous fleet's per-rank compute throughput into the
@@ -84,7 +104,10 @@ impl SkewModel {
         }
     }
 
-    /// Sample a compute duration with the module-kind bias applied.
+    /// Sample a compute duration with the module-kind bias applied. Under
+    /// expert parallelism the rank's routing-imbalance multiplier stretches
+    /// its MLP (expert) compute; the `route_bias` vector is empty for every
+    /// other strategy, keeping their float sequences bit-identical.
     pub fn sample_module(
         &self,
         nominal: f64,
@@ -92,7 +115,11 @@ impl SkewModel {
         module: ModuleKind,
         rng: &mut Rng,
     ) -> f64 {
-        self.sample(nominal * self.module_mult(module), rank, rng)
+        let mut nominal = nominal * self.module_mult(module);
+        if module == ModuleKind::Mlp && !self.route_bias.is_empty() {
+            nominal *= self.route_bias[rank];
+        }
+        self.sample(nominal, rank, rng)
     }
 
     /// Sample the actual duration of a compute phase with nominal duration
@@ -171,6 +198,29 @@ mod tests {
         assert_eq!(a.rank_bias(0), b.rank_bias(0), "scale 1.0 is the identity");
         // Subsequent draws are unchanged (apply_fleet consumed no RNG).
         assert_eq!(ra.next_u64(), rb.next_u64());
+    }
+
+    #[test]
+    fn route_bias_defaults_to_identity_and_clamps_at_one() {
+        let (mut m, mut rng) = model(11);
+        // Without a draw: sample_module(Mlp) matches the plain biased path.
+        let (m2, mut rng2) = model(11);
+        assert_eq!(
+            m.sample_module(1e-3, 1, ModuleKind::Mlp, &mut rng),
+            m2.sample(1e-3 * m2.module_mult(ModuleKind::Mlp), 1, &mut rng2)
+        );
+        m.draw_route_bias(4, 0.30, &mut rng);
+        for r in 0..4 {
+            // Hot experts only slow ranks down — the floor bound relies on it.
+            let with = m.sample_module(1e-3, r, ModuleKind::Mlp, &mut rng.clone());
+            let without = m.sample(1e-3 * m.module_mult(ModuleKind::Mlp), r, &mut rng.clone());
+            assert!(with >= without, "rank {r}: {with} < {without}");
+            // Non-MLP modules are untouched by routing imbalance.
+            assert_eq!(
+                m.sample_module(1e-3, r, ModuleKind::SelfAttention, &mut rng.clone()),
+                m.sample(1e-3 * m.module_mult(ModuleKind::SelfAttention), r, &mut rng.clone())
+            );
+        }
     }
 
     #[test]

@@ -23,10 +23,15 @@ pub enum ModuleKind {
     P2PTransfer,
     /// Data-parallel terminal output collation.
     AllGather,
+    /// Expert-parallel (MoE) all-to-all token dispatch/combine.
+    AllToAll,
 }
 
 impl ModuleKind {
-    pub const ALL: [ModuleKind; 8] = [
+    /// Number of module kinds (dense-array dimension on hot paths).
+    pub const COUNT: usize = 9;
+
+    pub const ALL: [ModuleKind; ModuleKind::COUNT] = [
         ModuleKind::Embedding,
         ModuleKind::Norm,
         ModuleKind::SelfAttention,
@@ -35,9 +40,10 @@ impl ModuleKind {
         ModuleKind::AllReduce,
         ModuleKind::P2PTransfer,
         ModuleKind::AllGather,
+        ModuleKind::AllToAll,
     ];
 
-    /// Dense index (0..8) for array-based aggregation on hot paths.
+    /// Dense index (0..COUNT) for array-based aggregation on hot paths.
     #[inline]
     pub fn idx(&self) -> usize {
         match self {
@@ -49,6 +55,7 @@ impl ModuleKind {
             ModuleKind::AllReduce => 5,
             ModuleKind::P2PTransfer => 6,
             ModuleKind::AllGather => 7,
+            ModuleKind::AllToAll => 8,
         }
     }
 
@@ -62,6 +69,7 @@ impl ModuleKind {
             ModuleKind::AllReduce => "AllReduce",
             ModuleKind::P2PTransfer => "P2PTransfer",
             ModuleKind::AllGather => "AllGather",
+            ModuleKind::AllToAll => "AllToAll",
         }
     }
 
@@ -69,7 +77,10 @@ impl ModuleKind {
     pub fn is_comm(&self) -> bool {
         matches!(
             self,
-            ModuleKind::AllReduce | ModuleKind::P2PTransfer | ModuleKind::AllGather
+            ModuleKind::AllReduce
+                | ModuleKind::P2PTransfer
+                | ModuleKind::AllGather
+                | ModuleKind::AllToAll
         )
     }
 }
@@ -431,6 +442,16 @@ mod tests {
 
     fn mk() -> Timeline {
         Timeline::new(2, 20.0)
+    }
+
+    #[test]
+    fn module_kind_indices_are_dense_and_consistent() {
+        assert_eq!(ModuleKind::ALL.len(), ModuleKind::COUNT);
+        for (i, m) in ModuleKind::ALL.iter().enumerate() {
+            assert_eq!(m.idx(), i, "{m:?}");
+        }
+        assert!(ModuleKind::AllToAll.is_comm());
+        assert_eq!(ModuleKind::AllToAll.name(), "AllToAll");
     }
 
     #[test]

@@ -21,6 +21,28 @@
 //! * [`export`] — Chrome trace-event / Perfetto JSON rendering (one pid
 //!   per rank plus an instantaneous total-power counter track) for
 //!   `ui.perfetto.dev`.
+//!
+//! # Example: trace a run and attribute its critical path
+//!
+//! ```
+//! use piep::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+//! use piep::simulator::run::execute_traced;
+//! use piep::trace::critpath::critical_path_with;
+//!
+//! let hw = HwSpec::default();
+//! let knobs = SimKnobs { sim_decode_steps: 2, ..SimKnobs::default() };
+//! let cfg = RunConfig::new("Vicuna-7B", Parallelism::expert(2), 2, 8);
+//! let (plan, built) = execute_traced(&cfg, &hw, &knobs);
+//! let trace = built.trace.as_ref().expect("execute_traced captures the trace");
+//!
+//! let topo = hw.topo();
+//! let cp = critical_path_with(&built.timeline, Some((trace, &plan, &topo)));
+//! // The chain spans exactly the makespan...
+//! assert!((cp.len_s - built.timeline.makespan()).abs() <= 1e-9 * cp.len_s);
+//! // ...and the three buckets partition the timeline's GPU-side energy.
+//! let total = built.timeline.gpu_energy_j();
+//! assert!((cp.on_path_j + cp.off_path_j + cp.idle_j - total).abs() <= 1e-9 * total);
+//! ```
 
 pub mod critpath;
 pub mod export;

@@ -6,7 +6,7 @@
 //! (Llama-70B to 4 GPUs only).
 
 use crate::config::{HwSpec, Parallelism, RunConfig, Strategy};
-use crate::models::{self, Family, ModelSpec};
+use crate::models::{self, Family, MlpKind, ModelSpec};
 
 pub const BATCHES: [usize; 4] = [8, 16, 32, 64];
 pub const SEQ_OUTS: [usize; 2] = [512, 1024];
@@ -31,6 +31,18 @@ pub fn weights_per_gpu_bytes(spec: &ModelSpec, parallelism: Parallelism, gpus: u
         Parallelism::Pipeline => total / gpus as f64,
         // Data parallelism replicates the full model per GPU.
         Parallelism::Data => total,
+        // Expert parallelism shards only the MLP (expert) weights across
+        // the mesh; attention, norms, and embeddings are replicated like
+        // data parallelism.
+        Parallelism::Expert { .. } => {
+            let h = spec.hidden as f64;
+            let mlp_per_layer = match spec.mlp {
+                MlpKind::Gelu => 2.0 * h * spec.ffn as f64,
+                MlpKind::SwiGlu => 3.0 * h * spec.ffn as f64,
+            };
+            let mlp_total = mlp_per_layer * spec.layers as f64 * spec.dtype_bytes as f64;
+            (total - mlp_total) + mlp_total / gpus as f64
+        }
         Parallelism::Hybrid {
             inner,
             outer,
@@ -61,6 +73,13 @@ pub fn runnable(spec: &ModelSpec, parallelism: Parallelism, gpus: usize, hw: &Hw
     if let Parallelism::Hybrid { inner_degree, .. } = parallelism {
         // Both mesh axes need degree >= 2 and must tile the GPU count.
         if inner_degree < 2 || gpus % inner_degree != 0 || gpus / inner_degree < 2 {
+            return false;
+        }
+    }
+    if let Parallelism::Expert { degree, .. } = parallelism {
+        // Expert parallelism spans the whole mesh: the label's degree must
+        // name the GPU count exactly (ep4 is a 4-rank deployment).
+        if degree != gpus || gpus < 2 {
             return false;
         }
     }
@@ -111,6 +130,27 @@ pub fn vicuna_grid(parallelism: Parallelism, hw: &HwSpec) -> Vec<RunConfig> {
         .collect()
 }
 
+/// Expert-parallel grid over one family: full-mesh EP (`ep{g}`) at each
+/// GPU count of the paper regime, gated by the EP VRAM model (only the
+/// MLP/expert weights shard across ranks).
+pub fn family_grid_expert(family: Family, hw: &HwSpec) -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    for spec in models::family_variants(family) {
+        for &g in &GPU_COUNTS {
+            let par = Parallelism::expert(g);
+            if !runnable(&spec, par, g, hw) {
+                continue;
+            }
+            for &b in &BATCHES {
+                for &s in &SEQ_OUTS {
+                    out.push(RunConfig::new(spec.name, par, g, b).with_seq_out(s));
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Inner degrees that factor a `gpus`-rank mesh into two axes of degree
 /// >= 2 each (e.g. 4 -> [2], 8 -> [2, 4], 2 -> []).
 pub fn hybrid_inner_degrees(gpus: usize) -> Vec<usize> {
@@ -118,11 +158,15 @@ pub fn hybrid_inner_degrees(gpus: usize) -> Vec<usize> {
 }
 
 /// Every deployment strategy realizable on a `gpus`-rank mesh: the three
-/// pure strategies plus every canonical hybrid factorization — the search
-/// axis of the energy-aware autotuner (`eval::tune`).
+/// pure paper strategies, every canonical hybrid factorization, and (on
+/// meshes of ≥ 2 ranks) full-mesh expert parallelism — the search axis of
+/// the energy-aware autotuner (`eval::tune`).
 pub fn deployment_candidates(gpus: usize) -> Vec<Parallelism> {
     let mut out = Parallelism::ALL.to_vec();
     out.extend(hybrid_parallelisms(gpus));
+    if gpus >= 2 {
+        out.push(Parallelism::expert(gpus));
+    }
     out
 }
 
@@ -249,12 +293,52 @@ mod tests {
     }
 
     #[test]
-    fn deployment_candidates_cover_pure_and_hybrid() {
-        assert_eq!(deployment_candidates(2), Parallelism::ALL.to_vec());
+    fn deployment_candidates_cover_pure_hybrid_and_expert() {
+        let c2 = deployment_candidates(2);
+        assert_eq!(c2.len(), 3 + 1); // pure strategies + ep2
+        assert!(c2.contains(&Parallelism::expert(2)));
         let c4 = deployment_candidates(4);
-        assert_eq!(c4.len(), 3 + 3);
+        assert_eq!(c4.len(), 3 + 3 + 1);
         assert!(c4.contains(&Parallelism::Tensor));
         assert!(c4.iter().any(|p| p.is_hybrid()));
+        assert!(c4.contains(&Parallelism::expert(4)));
+    }
+
+    #[test]
+    fn expert_vram_sits_between_tensor_and_data() {
+        // EP shards only the MLP weights: heavier than TP (which also
+        // shards attention) but lighter than full DP replication.
+        let spec = models::by_name("Vicuna-13B").unwrap();
+        let total = spec.param_count() * spec.dtype_bytes as f64;
+        let ep = weights_per_gpu_bytes(&spec, Parallelism::expert(4), 4);
+        let tp = weights_per_gpu_bytes(&spec, Parallelism::Tensor, 4);
+        assert!(ep > tp, "ep {ep} vs tp {tp}");
+        assert!(ep < total, "ep {ep} vs dp {total}");
+        // And EP admits models DP cannot host.
+        let v33 = models::by_name("Vicuna-33B").unwrap();
+        assert!(!runnable(&v33, Parallelism::Data, 4, &hw()));
+        assert!(runnable(&v33, Parallelism::expert(4), 4, &hw()));
+        // The label's degree must name the mesh exactly.
+        assert!(!runnable(&spec, Parallelism::expert(4), 2, &hw()));
+        assert!(!runnable(&spec, Parallelism::expert(2), 4, &hw()));
+    }
+
+    #[test]
+    fn expert_grid_spans_the_vicuna_family() {
+        let grid = family_grid_expert(Family::Vicuna, &hw());
+        assert!(!grid.is_empty());
+        for c in &grid {
+            // Degree always tracks the GPU count, and every config
+            // re-validates against the EP VRAM model.
+            assert_eq!(c.parallelism.expert_degree(c.gpus), c.gpus, "{}", c.key());
+            let spec = models::by_name(&c.model).unwrap();
+            assert!(runnable(&spec, c.parallelism, c.gpus, &hw()), "{}", c.key());
+        }
+        // The 33B — which DP cannot host at all — appears under EP, and
+        // the 7B gets both GPU counts of the paper regime.
+        assert!(grid.iter().any(|c| c.model == "Vicuna-33B" && c.gpus == 4));
+        assert!(grid.iter().any(|c| c.model == "Vicuna-7B" && c.gpus == 2));
+        assert!(grid.iter().any(|c| c.model == "Vicuna-7B" && c.gpus == 4));
     }
 
     #[test]

@@ -78,7 +78,8 @@ fn prop_comm_modules_match_parallelism() {
     let hw = HwSpec::default();
     let k = knobs();
     forall(102, 40, gen_cfg, |t| {
-        for par in [Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data] {
+        let ep = Parallelism::expert([1usize, 2, 4][t.1]);
+        for par in [Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data, ep] {
             let cfg = cfg_of(t, par);
             let spec = piep::models::by_name(&cfg.model).unwrap();
             if !piep::workload::runnable(&spec, par, cfg.gpus, &hw) {
@@ -106,6 +107,11 @@ fn prop_comm_modules_match_parallelism() {
                     ensure(has(ModuleKind::AllGather), "DP has AllGather")?;
                     ensure(!has(ModuleKind::AllReduce), "DP has no AllReduce")?;
                     ensure(!has(ModuleKind::P2PTransfer), "DP has no P2P")?;
+                }
+                Parallelism::Expert { .. } => {
+                    ensure(has(ModuleKind::AllToAll), "EP has AllToAll")?;
+                    ensure(!has(ModuleKind::AllReduce), "EP has no AllReduce")?;
+                    ensure(!has(ModuleKind::P2PTransfer), "EP has no P2P")?;
                 }
                 Parallelism::Hybrid { .. } => unreachable!("pure strategies only here"),
             }
@@ -160,6 +166,7 @@ fn prop_energy_conservation_every_strategy() {
     let k = knobs();
     forall(109, 20, gen_cfg, |t| {
         let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.push(Parallelism::expert([1usize, 2, 4][t.1]));
         pars.extend(hybrids4());
         for par in pars {
             let mut cfg = cfg_of(t, par);
@@ -255,6 +262,7 @@ fn prop_compiled_engine_matches_reference_engine() {
     };
     forall(116, 8, gen_cfg, |t| {
         let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.push(Parallelism::expert([1usize, 2, 4][t.1]));
         pars.extend(hybrids4());
         for hw in &testbeds {
             for &par in &pars {
@@ -306,6 +314,7 @@ fn prop_batched_execution_is_bit_identical_to_serial() {
     let k = knobs();
     forall(119, 3, gen_cfg, |t| {
         let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.push(Parallelism::expert([1usize, 2, 4][t.1]));
         pars.extend(hybrids4());
         for hw in &testbeds {
             for &par in &pars {
@@ -931,6 +940,7 @@ fn prop_critpath_length_equals_makespan() {
             ),
         ];
         let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.push(Parallelism::expert(4));
         pars.extend(hybrids4());
         let check = |tl: &piep::simulator::Timeline,
                      cp: &piep::trace::critpath::CritPath,
