@@ -1,0 +1,85 @@
+//! Rebind-path benchmark (criterion-style output, harness = false).
+//!
+//! Times `parallelism::rebind` (lowerer replay against a cached
+//! structure) against `AffineProgram::eval` (the shape-affine scalar
+//! program captured at compile time, DESIGN.md §17) over the standard
+//! prompt-length shape grid per mesh, and asserts the two paths produce
+//! byte-identical `ShapeScalars` for every shape — the bench doubles as
+//! a bit-identity check. CI runs this target and uploads its output
+//! (`BENCH_rebind.txt`) as the `rebind-bench` artifact.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use piep::config::{HwSpec, Parallelism, RunConfig, SimKnobs, Strategy};
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut(usize)) -> f64 {
+    // Warmup.
+    f(0);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        f(i);
+    }
+    let dt = t0.elapsed();
+    let per = dt / iters as u32;
+    println!("bench:rebind/{name:<30} time: {per:>12.2?}   ({iters} iters, total {dt:?})");
+    dt.as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let hw = HwSpec::default();
+    let knobs = SimKnobs {
+        sim_decode_steps: 8,
+        ..SimKnobs::default()
+    };
+    let tp2pp = Parallelism::hybrid(Strategy::Tensor, Strategy::Pipeline, 2).unwrap();
+    let cases: Vec<(&str, RunConfig)> = vec![
+        ("vicuna7b_tp4", RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8)),
+        ("vicuna13b_pp4", RunConfig::new("Vicuna-13B", Parallelism::Pipeline, 4, 32)),
+        ("vicuna7b_dp4", RunConfig::new("Vicuna-7B", Parallelism::Data, 4, 32)),
+        ("vicuna7b_ep4", RunConfig::new("Vicuna-7B", Parallelism::expert(4), 4, 32)),
+        ("vicuna13b_tp2xpp", RunConfig::new("Vicuna-13B", tp2pp, 4, 32)),
+    ];
+
+    for (label, cfg) in &cases {
+        let spec = piep::models::by_name(&cfg.model).unwrap();
+        let (base, program) = piep::parallelism::compile_affine(&spec, &hw, &knobs, cfg);
+        let program =
+            program.unwrap_or_else(|n| panic!("{label}: {n} unruled ops in the affine capture"));
+        // Shapes varying only in prompt length: never a structural change.
+        let shapes: Vec<RunConfig> = [64usize, 128, 256, 512]
+            .iter()
+            .map(|&seq_in| {
+                let mut c = cfg.clone();
+                c.seq_in = seq_in;
+                c
+            })
+            .collect();
+        // Bit-identity before timing: the speedup is meaningless if the
+        // two paths could diverge.
+        for c in &shapes {
+            let replayed = piep::parallelism::rebind(&base.structure, &spec, &hw, &knobs, c);
+            let evaled = program.eval(&base.structure, &spec, &hw, &knobs, c);
+            assert_eq!(
+                piep::plan::affine::scalars_mismatch(&replayed.scalars, &evaled.scalars),
+                0,
+                "{label}: affine eval must be byte-identical to lowerer replay at seq_in {}",
+                c.seq_in
+            );
+        }
+        let per_replay = bench(&format!("{label}/replay"), 200, |i| {
+            let c = &shapes[i % shapes.len()];
+            black_box(piep::parallelism::rebind(&base.structure, &spec, &hw, &knobs, c));
+        });
+        let per_affine = bench(&format!("{label}/affine"), 200, |i| {
+            let c = &shapes[i % shapes.len()];
+            black_box(program.eval(&base.structure, &spec, &hw, &knobs, c));
+        });
+        println!(
+            "bench:rebind/{label}/speedup          affine {:.2}x vs replay ({} ops, {} unique rules)",
+            per_replay / per_affine.max(1e-12),
+            base.len(),
+            program.rules.len()
+        );
+    }
+}

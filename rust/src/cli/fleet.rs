@@ -60,7 +60,9 @@ pub(crate) fn cmd_fleet(args: &Args) {
         arrival: ArrivalKind::parse(args.get_or("arrival", "diurnal")).expect("arrival (poisson|bursty|diurnal)"),
         sessions: args.get_usize("sessions", 4),
         autoscale,
-        knobs: SimKnobs::default().with_batch_execution(!args.has("no-batch")),
+        knobs: SimKnobs::default()
+            .with_batch_execution(!args.has("no-batch"))
+            .with_affine_rebind(!args.has("no-affine")),
         seed: args.get_u64("seed", 0xF1EE7),
         threads: args.get_usize("threads", 0),
     };
@@ -127,12 +129,15 @@ pub(crate) fn cmd_fleet(args: &Args) {
         );
         println!(
             "[fleet] best {}: Σ replica J + cold-start J == cluster J ({:.1} J over {} replicas, \
-             {} shared lowerer(s), {} structure lowering(s), {} batched step walk(s) × {} lanes)",
+             {} shared lowerer(s), {} structure lowering(s), {} affine rebind(s) ({} coverage), \
+             {} batched step walk(s) × {} lanes)",
             best.label,
             full.cluster_energy_j,
             best.replicas,
             full.shared_lowerers,
             full.cache.structure_lowerings,
+            full.cache.affine_rebinds,
+            full.cache.affine_coverage_label(),
             full.cache.batches,
             full.cache.mean_batch_width_label(),
         );

@@ -85,6 +85,7 @@ pub(crate) fn campaign_from(args: &Args) -> Campaign {
         sim_decode_steps: args.get_usize("steps", 16),
         engine_threads: args.get_usize("engine-threads", 1),
         batch_execution: !args.has("no-batch"),
+        affine_rebind: !args.has("no-affine"),
         ..SimKnobs::default()
     };
     c.base_seed = args.get_u64("seed", c.base_seed);
@@ -146,7 +147,10 @@ fn help_text() -> String {
          \x20            serial reference)\n\
          \x20 --no-prune (tune: keep the exhaustive search; by default\n\
          \x20            candidates whose critical-path energy lower bound\n\
-         \x20            exceeds the incumbent J/token are skipped unsimulated)"
+         \x20            exceeds the incumbent J/token are skipped unsimulated)\n\
+         \x20 --no-affine (disable shape-affine rebind compilation; every\n\
+         \x20            cache rebind replays the lowerer, the pinned\n\
+         \x20            reference — results are bit-identical either way)"
     );
     out
 }

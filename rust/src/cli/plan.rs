@@ -27,6 +27,7 @@ pub(crate) fn cmd_plan(args: &Args) {
     let knobs = SimKnobs {
         sim_decode_steps: args.get_usize("steps", 8),
         batch_execution: !args.has("no-batch"),
+        affine_rebind: !args.has("no-affine"),
         ..SimKnobs::default()
     };
     let hw = super::topo::parse_testbed(args, false).hw();
@@ -70,7 +71,7 @@ pub(crate) fn cmd_plan(args: &Args) {
     let mut grid_cfgs: Vec<RunConfig> = Vec::new();
     let mut per_strategy = Table::new(
         "Plan — two-level cache over the shape grid (per strategy)",
-        &["Strategy", "Shapes", "Structure lowerings", "Scalar rebinds", "Reuse"],
+        &["Strategy", "Shapes", "Structure lowerings", "Scalar rebinds", "Reuse", "Affine"],
     );
     for &par in &pars {
         let before = cache.stats();
@@ -87,12 +88,21 @@ pub(crate) fn cmd_plan(args: &Args) {
         let after = cache.stats();
         let lowered = after.structure_lowerings - before.structure_lowerings;
         let rebound = after.rebinds - before.rebinds;
+        let affine = after.affine_rebinds - before.affine_rebinds;
+        // "-" when a strategy never rebound (every shape lowered fresh):
+        // affine coverage of zero rebinds is undefined, not 0%.
+        let affine_label = if rebound == 0 {
+            "-".to_string()
+        } else {
+            pct(100.0 * affine as f64 / rebound as f64)
+        };
         per_strategy.row(vec![
             par.label(),
             shapes_n.to_string(),
             lowered.to_string(),
             rebound.to_string(),
             pct(100.0 * (shapes_n - lowered) as f64 / shapes_n as f64),
+            affine_label,
         ]);
     }
     print!("{}", per_strategy.render());
@@ -109,6 +119,14 @@ pub(crate) fn cmd_plan(args: &Args) {
         structures,
         shapes_cached,
         100.0 * st.reuse_rate()
+    );
+    println!(
+        "[plan] affine rebinds: {} of {} ({} coverage), {} replay fallbacks, {} probe-rejected ops",
+        st.affine_rebinds,
+        st.rebinds,
+        st.affine_coverage_label(),
+        st.replay_fallbacks,
+        st.probe_rejected_ops
     );
 
     // ---- batched execution over the same grid: one engine walk per mesh

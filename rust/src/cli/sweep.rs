@@ -11,7 +11,7 @@ use super::campaign_from;
 /// committed seed (the authoring container has no toolchain to measure
 /// wall-times). A null anywhere else means a corrupt or hand-edited
 /// baseline — the gate fails loudly instead of silently disarming.
-const NULLABLE_COLUMNS: [&str; 17] = [
+const NULLABLE_COLUMNS: [&str; 20] = [
     "threads",
     "configs",
     "runs",
@@ -29,13 +29,17 @@ const NULLABLE_COLUMNS: [&str; 17] = [
     "prune_wall_s",
     "prune_speedup",
     "pruned_candidates",
+    "affine_wall_s",
+    "affine_speedup",
+    "affine_ops_pct",
 ];
 
 /// Schema-tolerant baseline validation: v1 baselines simply lack the
 /// lower/rebind columns added in v2, v1/v2 baselines lack the batched
 /// execution columns added in v3, v1..v3 baselines lack the pruning
-/// columns added in v4 (absence is fine — the gate skips the missing
-/// column and says so), and unknown *extra* columns are ignored.
+/// columns added in v4, v1..v4 baselines lack the affine-rebind columns
+/// added in v5 (absence is fine — the gate skips the missing column and
+/// says so), and unknown *extra* columns are ignored.
 /// Only two things are fatal: a schema outside the `piep-sweep-bench-*`
 /// family, and a null in a column not known to be nullable.
 fn validate_baseline(path: &str, base: &Json) {
@@ -225,9 +229,60 @@ pub(crate) fn cmd_sweep(args: &Args) {
             tune_pruned.candidates.len() + tune_pruned.pruned
         );
 
+        // Affine-vs-replay rebind microtiming (DESIGN.md §17): both caches
+        // are warmed on the sweep grid (structure lowerings, program
+        // capture + probe verification all paid up front), then a second
+        // shape grid — the same configs at a shifted seq_out, which changes
+        // the shape key but never the mesh structure — is rebound through
+        // each. The affine side evaluates the accepted scalar programs in
+        // O(ops); the replay side re-runs the lowerer per shape
+        // (`--no-affine` semantics). The assert pins bit-identity between
+        // the two paths over the whole grid.
+        let knobs_replay = bench_knobs.clone().with_affine_rebind(false);
+        let cache_affine = crate::plan::PlanCache::new();
+        let cache_replay = crate::plan::PlanCache::new();
+        for cfg in &all_cfgs {
+            std::hint::black_box(cache_affine.get_or_lower(cfg, bench_hw, bench_knobs));
+            std::hint::black_box(cache_replay.get_or_lower(cfg, bench_hw, &knobs_replay));
+        }
+        let rebind_cfgs: Vec<RunConfig> =
+            all_cfgs.iter().map(|c| (*c).clone().with_seq_out(c.seq_out + 32)).collect();
+        let t7 = std::time::Instant::now();
+        for cfg in &rebind_cfgs {
+            std::hint::black_box(cache_affine.get_or_lower(cfg, bench_hw, bench_knobs));
+        }
+        let affine_s = t7.elapsed().as_secs_f64();
+        let t8 = std::time::Instant::now();
+        for cfg in &rebind_cfgs {
+            std::hint::black_box(cache_replay.get_or_lower(cfg, bench_hw, &knobs_replay));
+        }
+        let replay_s = t8.elapsed().as_secs_f64();
+        for cfg in &rebind_cfgs {
+            let a = cache_affine.get_or_lower(cfg, bench_hw, bench_knobs);
+            let r = cache_replay.get_or_lower(cfg, bench_hw, &knobs_replay);
+            assert_eq!(
+                crate::plan::affine::scalars_mismatch(&a.scalars, &r.scalars),
+                0,
+                "affine rebind must be bit-identical to lowerer replay for {}",
+                cfg.key()
+            );
+        }
+        let affine_speedup = replay_s / affine_s.max(1e-9);
+        let astats = cache_affine.stats();
+        let affine_ops_pct = 100.0 * astats.affine_coverage();
+        println!(
+            "sweep bench: replay rebind {:.1}ms vs affine rebind {:.1}ms over {} shapes \
+             ({affine_speedup:.2}x; {} coverage, {} probe-rejected ops)",
+            replay_s * 1e3,
+            affine_s * 1e3,
+            rebind_cfgs.len(),
+            astats.affine_coverage_label(),
+            astats.probe_rejected_ops
+        );
+
         let path = args.get_or("save-bench", "BENCH_sweep.json");
         let j = obj(vec![
-            ("schema", s("piep-sweep-bench-v4")),
+            ("schema", s("piep-sweep-bench-v5")),
             ("threads", num(threads as f64)),
             ("passes", num(opts.campaign.passes as f64)),
             ("sim_decode_steps", num(opts.campaign.knobs.sim_decode_steps as f64)),
@@ -247,6 +302,9 @@ pub(crate) fn cmd_sweep(args: &Args) {
             ("prune_wall_s", num(prune_s)),
             ("prune_speedup", num(prune_speedup)),
             ("pruned_candidates", num(tune_pruned.pruned as f64)),
+            ("affine_wall_s", num(affine_s)),
+            ("affine_speedup", num(affine_speedup)),
+            ("affine_ops_pct", num(affine_ops_pct)),
             (
                 "scenarios",
                 arr(parallel
@@ -279,7 +337,7 @@ pub(crate) fn cmd_sweep(args: &Args) {
             // only compare when the baseline measured the same work. The
             // batch column additionally requires the same tune-grid lane
             // count (grid or pass changes would skew the ratio).
-            let gate_cols: [(&str, f64, bool); 3] = [
+            let gate_cols: [(&str, f64, bool); 4] = [
                 ("parallel_wall_s", parallel_s, workload_matches),
                 (
                     "batch_wall_s",
@@ -291,6 +349,7 @@ pub(crate) fn cmd_sweep(args: &Args) {
                     prune_s,
                     workload_matches && basef("pruned_candidates") == Some(tune_pruned.pruned as f64),
                 ),
+                ("affine_wall_s", affine_s, workload_matches),
             ];
             for (col, measured, comparable) in gate_cols {
                 match base.get(col).map(|v| v.as_f64()) {

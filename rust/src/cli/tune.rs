@@ -51,6 +51,7 @@ pub(crate) fn cmd_tune(args: &Args) {
         knobs: SimKnobs {
             sim_decode_steps: args.get_usize("steps", if smoke { 4 } else { 8 }),
             batch_execution: !args.has("no-batch"),
+            affine_rebind: !args.has("no-affine"),
             ..SimKnobs::default()
         },
         model,
@@ -126,13 +127,15 @@ pub(crate) fn cmd_tune(args: &Args) {
     println!(
         "[tune] {} candidates scored, {} pruned by the critical-path bound \
          ({} on the Pareto front) in {wall:?}; \
-         plan cache: {} lowerings, {} rebinds, {} shape hits; \
+         plan cache: {} lowerings, {} rebinds ({} affine, {} replay), {} shape hits; \
          batched execution: {} batches × {} lanes mean, {} serial fallbacks",
         res.candidates.len(),
         res.pruned,
         res.pareto.len(),
         res.cache.structure_lowerings,
         res.cache.rebinds,
+        res.cache.affine_rebinds,
+        res.cache.replay_fallbacks,
         res.cache.shape_hits,
         res.cache.batches,
         res.cache.mean_batch_width_label(),

@@ -370,6 +370,15 @@ pub struct SimKnobs {
     /// (property-tested); off ⇒ each candidate runs its own walk (the
     /// pinned reference, also the `--no-batch` escape hatch).
     pub batch_execution: bool,
+    /// Serve shape rebinds from the structure's compiled shape-affine
+    /// scalar program (`plan::affine`, DESIGN.md §17) when one was
+    /// captured and verified at structure-compile time. Pure wall-time
+    /// optimization — accepted programs are bit-identical to the
+    /// `ShapeBinding` replay (probe-verified at compile, property-tested),
+    /// and rejected structures fall back to the replay regardless of this
+    /// knob; off ⇒ every rebind replays the lowering (the pinned
+    /// reference, also the `--no-affine` escape hatch).
+    pub affine_rebind: bool,
     /// Capture an execution trace alongside every materialized timeline:
     /// the engine records, per phase, the index of the plan op that
     /// produced it (`trace::Trace`), which the observability layer
@@ -406,6 +415,7 @@ impl Default for SimKnobs {
             engine_threads: 1,
             reference_engine: false,
             batch_execution: true,
+            affine_rebind: true,
             trace: false,
         }
     }
@@ -428,6 +438,12 @@ impl SimKnobs {
     /// Enable/disable batched multi-candidate execution (`--no-batch`).
     pub fn with_batch_execution(mut self, on: bool) -> SimKnobs {
         self.batch_execution = on;
+        self
+    }
+
+    /// Enable/disable affine rebind evaluation (`--no-affine`).
+    pub fn with_affine_rebind(mut self, on: bool) -> SimKnobs {
+        self.affine_rebind = on;
         self
     }
 

@@ -488,6 +488,35 @@ mod tests {
     }
 
     #[test]
+    fn affine_tuner_matches_replay_tuner() {
+        // affine_rebind off pins every rebind to lowerer replay; the
+        // default affine path must score the identical grid bit-for-bit.
+        let opts = tiny_opts();
+        let on = run_tune(&opts);
+        let off = run_tune(&TuneOptions {
+            knobs: opts.knobs.clone().with_affine_rebind(false),
+            ..opts.clone()
+        });
+        assert_eq!(on.candidates.len(), off.candidates.len());
+        for (a, b) in on.candidates.iter().zip(&off.candidates) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.j_per_token, b.j_per_token);
+            assert_eq!(a.j_per_request, b.j_per_request);
+            assert_eq!(a.ms_per_token, b.ms_per_token);
+            assert_eq!(a.sync_share, b.sync_share);
+        }
+        // The knob routes the rebinds, it never changes their count.
+        assert_eq!(on.cache.rebinds, off.cache.rebinds);
+        assert_eq!(off.cache.affine_rebinds, 0, "off-path never evaluates a program");
+        assert_eq!(off.cache.replay_fallbacks, off.cache.rebinds);
+        assert_eq!(
+            on.cache.affine_rebinds + on.cache.replay_fallbacks,
+            on.cache.rebinds,
+            "every rebind is either affine or replay"
+        );
+    }
+
+    #[test]
     fn two_node_fleet_tunes_end_to_end() {
         let hw = HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &[]);
         let opts = TuneOptions {

@@ -342,6 +342,9 @@ pub fn simulate_fleet(trace: &Trace, cfg: &FleetConfig) -> FleetResult {
         let (c, _) = lw.stats();
         cache.structure_lowerings += c.structure_lowerings;
         cache.rebinds += c.rebinds;
+        cache.affine_rebinds += c.affine_rebinds;
+        cache.replay_fallbacks += c.replay_fallbacks;
+        cache.probe_rejected_ops += c.probe_rejected_ops;
         cache.shape_hits += c.shape_hits;
         cache.batches += c.batches;
         cache.batched_lanes += c.batched_lanes;

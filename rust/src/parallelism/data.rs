@@ -8,6 +8,7 @@
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::models::ModelSpec;
+use crate::plan::affine::{BatchArg, CollKind, CommBase, CommScale, CommTerm, ComputeRule, OpRule, PayloadRule};
 use crate::plan::{Plan, PlanBuilder, PlanSink, WaitRecord};
 use crate::simulator::collective;
 use crate::simulator::perf::PerfModel;
@@ -38,14 +39,20 @@ pub fn lower_into<S: PlanSink>(
     let shard = (cfg.batch + g - 1) / g; // per-replica batch
 
     // Each replica runs prefill + decode independently.
+    let sa = BatchArg::CeilDiv(g as u32);
     for rank in 0..g {
         // Prefill.
+        b.rule(OpRule::Compute(ComputeRule::Embed { batch: sa, times_seq_in: true }));
         b.compute(rank..rank + 1, perf.embed_decode(spec, shard * cfg.seq_in), ModuleKind::Embedding, 0, 0);
         for layer in 0..spec.layers as u16 {
+            b.rule(OpRule::Compute(ComputeRule::NormPrefill { batch: sa }));
             b.compute(rank..rank + 1, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
             let ta = perf.attn_prefill(spec, shard, cfg.seq_in, 1);
+            b.rule(OpRule::Compute(ComputeRule::AttnPrefill { batch: sa, g: 1 }));
             b.compute(rank..rank + 1, ta, ModuleKind::SelfAttention, layer, 0);
+            b.rule(OpRule::Compute(ComputeRule::NormPrefill { batch: sa }));
             b.compute(rank..rank + 1, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+            b.rule(OpRule::Compute(ComputeRule::MlpPrefill { batch: sa, g: 1 }));
             b.compute(rank..rank + 1, perf.mlp_prefill(spec, shard, cfg.seq_in, 1), ModuleKind::Mlp, layer, 0);
         }
         // Decode.
@@ -53,14 +60,20 @@ pub fn lower_into<S: PlanSink>(
             let step = (si + 1) as u32;
             let frac = (si as f64 + 0.5) / sim_steps as f64;
             let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
+            b.rule(OpRule::Compute(ComputeRule::Embed { batch: sa, times_seq_in: false }));
             b.compute(rank..rank + 1, perf.embed_decode(spec, shard), ModuleKind::Embedding, 0, step);
             for layer in 0..spec.layers as u16 {
+                b.rule(OpRule::Compute(ComputeRule::NormDecode { batch: sa }));
                 b.compute(rank..rank + 1, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
                 let ta = perf.attn_decode(spec, shard, context, 1);
+                b.rule(OpRule::Compute(ComputeRule::AttnDecode { batch: sa, si: si as u32, g: 1 }));
                 b.compute(rank..rank + 1, ta, ModuleKind::SelfAttention, layer, step);
+                b.rule(OpRule::Compute(ComputeRule::NormDecode { batch: sa }));
                 b.compute(rank..rank + 1, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+                b.rule(OpRule::Compute(ComputeRule::MlpDecode { batch: sa, g: 1 }));
                 b.compute(rank..rank + 1, perf.mlp_decode(spec, shard, 1), ModuleKind::Mlp, layer, step);
             }
+            b.rule(OpRule::Compute(ComputeRule::LogitsDecode { batch: sa, g: 1 }));
             b.compute(rank..rank + 1, perf.logits_decode(spec, shard, 1), ModuleKind::LogitsHead, 0, step);
         }
     }
@@ -74,7 +87,14 @@ pub fn lower_into<S: PlanSink>(
         let payload = spec.allgather_payload_bytes(shard);
         let t = collective::allgather_ring(&topo, 0, g, g, payload);
         let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        let ag_coll = CollKind::AllGatherRing { first: 0, n: g as u32, ring: g as u32 };
+        let pr_ag = PayloadRule::Ag { batch: sa };
+        b.rule(OpRule::Collective { coll: ag_coll, payload: pr_ag });
         b.collective_tiered(0..g, ModuleKind::AllGather, 0, sim_steps as u32, xfer, wire, false, WaitRecord::All);
+        b.comm_term(CommTerm {
+            base: CommBase::Coll { coll: ag_coll, payload: pr_ag },
+            scale: CommScale::OverSteps,
+        });
         comm_bytes_per_step = t.cost.bytes_moved / sim_steps as f64;
     }
 

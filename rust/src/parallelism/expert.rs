@@ -19,6 +19,7 @@
 
 use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
 use crate::models::ModelSpec;
+use crate::plan::affine::{BatchArg, CollKind, CommBase, CommScale, CommTerm, ComputeRule, OpRule, PayloadRule};
 use crate::plan::{Plan, PlanBuilder, PlanSink, WaitRecord};
 use crate::simulator::collective;
 use crate::simulator::perf::PerfModel;
@@ -67,51 +68,72 @@ pub fn lower_into<S: PlanSink>(
     // spans nodes (local exchange, leader exchange, local redistribution).
     // Returns bytes moved.
     let topo_ref = &topo;
-    let alltoall = move |b: &mut S, payload_per_rank: f64, layer: u16, step: u32| -> f64 {
+    let a2a_coll = CollKind::AllToAllHier { first: 0, n: g as u32 };
+    let alltoall = move |b: &mut S, payload_per_rank: f64, pr: PayloadRule, layer: u16, step: u32| -> f64 {
         if g == 1 {
             // A single rank hosts every expert: no collective at all.
             return 0.0;
         }
         let t = collective::alltoall_hier(topo_ref, 0, g, payload_per_rank);
         let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        b.rule(OpRule::Collective { coll: a2a_coll, payload: pr });
         b.collective_tiered(0..g, ModuleKind::AllToAll, layer, step, xfer, wire, true, WaitRecord::All);
         t.cost.bytes_moved
     };
 
     // ---- Prefill (step 0): compute-bound pass over the prompt.
+    let sa = BatchArg::CeilDiv(g as u32);
+    let et = BatchArg::TimesTopK;
     let prefill_payload =
         (shard * cfg.seq_in * spec.hidden * spec.dtype_bytes) as f64 * top_k as f64 * capacity;
+    let pr_prefill = PayloadRule::ExpertActs { batch: sa, times_seq_in: true };
+    b.rule(OpRule::Compute(ComputeRule::Embed { batch: sa, times_seq_in: true }));
     b.compute(0..g, perf.embed_decode(spec, shard * cfg.seq_in), ModuleKind::Embedding, 0, 0);
     for layer in 0..spec.layers as u16 {
+        b.rule(OpRule::Compute(ComputeRule::NormPrefill { batch: sa }));
         b.compute(0..g, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+        b.rule(OpRule::Compute(ComputeRule::AttnPrefill { batch: sa, g: 1 }));
         b.compute(0..g, perf.attn_prefill(spec, shard, cfg.seq_in, 1), ModuleKind::SelfAttention, layer, 0);
+        b.rule(OpRule::Compute(ComputeRule::NormPrefill { batch: sa }));
         b.compute(0..g, perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
-        alltoall(&mut *b, prefill_payload, layer, 0);
+        alltoall(&mut *b, prefill_payload, pr_prefill, layer, 0);
+        b.rule(OpRule::Compute(ComputeRule::MlpPrefill { batch: et, g: g as u32 }));
         b.compute(0..g, perf.mlp_prefill(spec, expert_tokens, cfg.seq_in, g), ModuleKind::Mlp, layer, 0);
-        alltoall(&mut *b, prefill_payload, layer, 0);
+        alltoall(&mut *b, prefill_payload, pr_prefill, layer, 0);
     }
 
     // ---- Decode: `sim_steps` representative steps spread over seq_out.
     let decode_payload = (shard * spec.hidden * spec.dtype_bytes) as f64 * top_k as f64 * capacity;
+    let pr_decode = PayloadRule::ExpertActs { batch: sa, times_seq_in: false };
     for si in 0..sim_steps {
         let step = (si + 1) as u32;
         // Representative KV context for this sampled step.
         let frac = (si as f64 + 0.5) / sim_steps as f64;
         let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
 
+        b.rule(OpRule::Compute(ComputeRule::Embed { batch: sa, times_seq_in: false }));
         b.compute(0..g, perf.embed_decode(spec, shard), ModuleKind::Embedding, 0, step);
         for layer in 0..spec.layers as u16 {
+            b.rule(OpRule::Compute(ComputeRule::NormDecode { batch: sa }));
             b.compute(0..g, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+            b.rule(OpRule::Compute(ComputeRule::AttnDecode { batch: sa, si: si as u32, g: 1 }));
             b.compute(0..g, perf.attn_decode(spec, shard, context, 1), ModuleKind::SelfAttention, layer, step);
+            b.rule(OpRule::Compute(ComputeRule::NormDecode { batch: sa }));
             b.compute(0..g, perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
-            let b1 = alltoall(&mut *b, decode_payload, layer, step);
+            let b1 = alltoall(&mut *b, decode_payload, pr_decode, layer, step);
+            b.rule(OpRule::Compute(ComputeRule::MlpDecode { batch: et, g: g as u32 }));
             b.compute(0..g, perf.mlp_decode(spec, expert_tokens, g), ModuleKind::Mlp, layer, step);
-            let b2 = alltoall(&mut *b, decode_payload, layer, step);
+            let b2 = alltoall(&mut *b, decode_payload, pr_decode, layer, step);
             if si == 0 {
+                b.comm_term(CommTerm {
+                    base: CommBase::CollPair { coll: a2a_coll, payload: pr_decode },
+                    scale: CommScale::One,
+                });
                 comm_bytes_per_step += b1 + b2;
             }
         }
         // Logits are data-parallel (full head replica per rank).
+        b.rule(OpRule::Compute(ComputeRule::LogitsDecode { batch: sa, g: 1 }));
         b.compute(0..g, perf.logits_decode(spec, shard, 1), ModuleKind::LogitsHead, 0, step);
     }
 
@@ -121,7 +143,14 @@ pub fn lower_into<S: PlanSink>(
         let payload = spec.allgather_payload_bytes(shard);
         let t = collective::allgather_ring(&topo, 0, g, g, payload);
         let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        let ag_coll = CollKind::AllGatherRing { first: 0, n: g as u32, ring: g as u32 };
+        let pr_ag = PayloadRule::Ag { batch: sa };
+        b.rule(OpRule::Collective { coll: ag_coll, payload: pr_ag });
         b.collective_tiered(0..g, ModuleKind::AllGather, 0, sim_steps as u32, xfer, wire, false, WaitRecord::All);
+        b.comm_term(CommTerm {
+            base: CommBase::Coll { coll: ag_coll, payload: pr_ag },
+            scale: CommScale::OverSteps,
+        });
         comm_bytes_per_step += t.cost.bytes_moved / sim_steps as f64;
     }
 

@@ -27,6 +27,7 @@ use std::ops::Range;
 
 use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs, Strategy};
 use crate::models::ModelSpec;
+use crate::plan::affine::{BatchArg, CollKind, CommBase, CommScale, CommTerm, ComputeRule, OpRule, PayloadRule};
 use crate::plan::{Plan, PlanBuilder, PlanSink, WaitRecord};
 use crate::simulator::collective;
 use crate::simulator::perf::PerfModel;
@@ -51,6 +52,7 @@ impl Mesh<'_> {
         b: &mut S,
         ranks: Range<usize>,
         payload: f64,
+        pr: PayloadRule,
         layer: u16,
         step: u32,
     ) -> f64 {
@@ -60,6 +62,10 @@ impl Mesh<'_> {
         }
         let t = collective::allreduce_hier(&self.topo, ranks.start, n, payload);
         let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        b.rule(OpRule::Collective {
+            coll: CollKind::AllReduceHier { first: ranks.start as u32, n: n as u32 },
+            payload: pr,
+        });
         b.collective_tiered(ranks, ModuleKind::AllReduce, layer, step, xfer, wire, true, WaitRecord::All);
         t.cost.bytes_moved
     }
@@ -71,6 +77,7 @@ impl Mesh<'_> {
         b: &mut S,
         ranks: Range<usize>,
         payload_per_rank: f64,
+        pr: PayloadRule,
         step: u32,
     ) -> f64 {
         let n = ranks.len();
@@ -78,6 +85,10 @@ impl Mesh<'_> {
             return 0.0;
         }
         let t = collective::allgather_ring(&self.topo, ranks.start, n, n, payload_per_rank);
+        b.rule(OpRule::Collective {
+            coll: CollKind::AllGatherRing { first: ranks.start as u32, n: n as u32, ring: n as u32 },
+            payload: pr,
+        });
         b.collective_tiered(ranks, ModuleKind::AllGather, 0, step, t.cost.transfer_s, t.wire_w, false, WaitRecord::All);
         t.cost.bytes_moved
     }
@@ -91,10 +102,15 @@ impl Mesh<'_> {
         num_ranks: usize,
         groups: usize,
         payload_per_group: f64,
+        pr: PayloadRule,
         step: u32,
     ) -> f64 {
         let t = collective::allgather_ring(&self.topo, 0, num_ranks, groups, payload_per_group);
         let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        b.rule(OpRule::Collective {
+            coll: CollKind::AllGatherRing { first: 0, n: num_ranks as u32, ring: groups as u32 },
+            payload: pr,
+        });
         b.collective_tiered(0..num_ranks, ModuleKind::AllGather, 0, step, xfer, wire, false, WaitRecord::All);
         t.cost.bytes_moved
     }
@@ -184,8 +200,14 @@ fn tp_pp_pass<S: PlanSink>(
     } else {
         spec.allreduce_payload_bytes(micro, 1)
     };
+    let mb_arg = BatchArg::Micro { stages: do_ as u32 };
+    let pr_ar = PayloadRule::Acts { batch: mb_arg, times_seq_in: prefill };
+    // The caller keeps only the first decode pass's bytes for
+    // `comm_bytes_per_step`; emit comm terms on exactly that pass.
+    let record = !prefill && step == 1;
     for (stage, range) in ranges.iter().enumerate() {
         let ranks = stage * di..(stage + 1) * di;
+        let ar_coll = CollKind::AllReduceHier { first: ranks.start as u32, n: di as u32 };
         for mb in 0..num_micro {
             if stage > 0 {
                 // Hop-local recv: every TP rank of the stage busy-waits for
@@ -199,6 +221,7 @@ fn tp_pp_pass<S: PlanSink>(
                 } else {
                     mesh.perf.embed_decode(spec, micro)
                 };
+                b.rule(OpRule::Compute(ComputeRule::Embed { batch: mb_arg, times_seq_in: prefill }));
                 b.compute(ranks.clone(), t, ModuleKind::Embedding, 0, step);
             }
             for layer in range.clone() {
@@ -215,20 +238,66 @@ fn tp_pp_pass<S: PlanSink>(
                         mesh.perf.mlp_decode(spec, micro, di),
                     )
                 };
+                let (rn, ra, rm) = if prefill {
+                    (
+                        ComputeRule::NormPrefill { batch: mb_arg },
+                        ComputeRule::AttnPrefill { batch: mb_arg, g: di as u32 },
+                        ComputeRule::MlpPrefill { batch: mb_arg, g: di as u32 },
+                    )
+                } else {
+                    (
+                        ComputeRule::NormDecode { batch: mb_arg },
+                        ComputeRule::AttnDecode { batch: mb_arg, si: step - 1, g: di as u32 },
+                        ComputeRule::MlpDecode { batch: mb_arg, g: di as u32 },
+                    )
+                };
+                b.rule(OpRule::Compute(rn));
                 b.compute(ranks.clone(), tn, ModuleKind::Norm, layer as u16, step);
+                b.rule(OpRule::Compute(ra));
                 b.compute(ranks.clone(), ta, ModuleKind::SelfAttention, layer as u16, step);
-                bytes += mesh.allreduce(b, ranks.clone(), ar_payload, layer as u16, step);
+                bytes += mesh.allreduce(b, ranks.clone(), ar_payload, pr_ar, layer as u16, step);
+                if record {
+                    // Two *separate* accumulations in this loop — not a
+                    // summed pair — so two separate terms keep fold order.
+                    b.comm_term(CommTerm {
+                        base: CommBase::Coll { coll: ar_coll, payload: pr_ar },
+                        scale: CommScale::One,
+                    });
+                }
+                b.rule(OpRule::Compute(rn));
                 b.compute(ranks.clone(), tn, ModuleKind::Norm, layer as u16, step);
+                b.rule(OpRule::Compute(rm));
                 b.compute(ranks.clone(), tm, ModuleKind::Mlp, layer as u16, step);
-                bytes += mesh.allreduce(b, ranks.clone(), ar_payload, layer as u16, step);
+                bytes += mesh.allreduce(b, ranks.clone(), ar_payload, pr_ar, layer as u16, step);
+                if record {
+                    b.comm_term(CommTerm {
+                        base: CommBase::Coll { coll: ar_coll, payload: pr_ar },
+                        scale: CommScale::One,
+                    });
+                }
             }
             if stage + 1 == do_ {
                 // Vocab-parallel logits on the last stage's TP group, then
                 // the group-local shard AllGather (decode only).
+                b.rule(OpRule::Compute(ComputeRule::LogitsDecode { batch: mb_arg, g: di as u32 }));
                 b.compute(ranks.clone(), mesh.perf.logits_decode(spec, micro, di), ModuleKind::LogitsHead, 0, step);
                 if !prefill {
                     let shard_payload = spec.allgather_payload_bytes(micro) / di as f64;
-                    bytes += mesh.allgather(b, ranks.clone(), shard_payload, step);
+                    let pr_ag = PayloadRule::AgShard { batch: mb_arg, div: di as u32 };
+                    bytes += mesh.allgather(b, ranks.clone(), shard_payload, pr_ag, step);
+                    if record {
+                        b.comm_term(CommTerm {
+                            base: CommBase::Coll {
+                                coll: CollKind::AllGatherRing {
+                                    first: ranks.start as u32,
+                                    n: di as u32,
+                                    ring: di as u32,
+                                },
+                                payload: pr_ag,
+                            },
+                            scale: CommScale::One,
+                        });
+                    }
                 }
             } else {
                 // Shard-wise boundary edge: rank i of this stage feeds rank
@@ -236,8 +305,21 @@ fn tp_pp_pass<S: PlanSink>(
                 // it pays the inter-node tier when the stage boundary
                 // crosses a node boundary for any shard pair.
                 let t = collective::p2p_range(&mesh.topo, ranks.start, di, ranks.start + di, p2p_payload / di as f64);
+                let p2p_coll = CollKind::P2pRange {
+                    src: ranks.start as u32,
+                    count: di as u32,
+                    dst: (ranks.start + di) as u32,
+                };
+                let pr_p2p = PayloadRule::ActsShard { batch: mb_arg, times_seq_in: prefill, div: di as u32 };
+                b.rule(OpRule::Send { coll: p2p_coll, payload: pr_p2p });
                 boundary[mb] = b.send_tiered(ranks.clone(), range.end as u16, step, t.cost.transfer_s, t.wire_w);
                 bytes += t.cost.bytes_moved * di as f64;
+                if record {
+                    b.comm_term(CommTerm {
+                        base: CommBase::Coll { coll: p2p_coll, payload: pr_p2p },
+                        scale: CommScale::Times(di as u32),
+                    });
+                }
             }
         }
     }
@@ -272,6 +354,7 @@ fn tp_pp<S: PlanSink>(
         }
         // Autoregressive serialization: the token sampled on the last stage
         // gates the next step's stage-0 embedding on every rank.
+        b.rule(OpRule::Barrier);
         b.collective(0..g, ModuleKind::P2PTransfer, 0, step, 0.0, false, WaitRecord::None);
     }
     comm
@@ -290,19 +373,30 @@ fn tp_dp<S: PlanSink>(
     let shard = (cfg.batch + do_ - 1) / do_;
     let mut comm = 0.0;
 
+    let sa = BatchArg::CeilDiv(do_ as u32);
+    let pr_prefill = PayloadRule::Acts { batch: sa, times_seq_in: true };
+    let pr_decode = PayloadRule::Acts { batch: sa, times_seq_in: false };
+    let pr_ag = PayloadRule::AgShard { batch: sa, div: di as u32 };
     for rep in 0..do_ {
         let ranks = rep * di..(rep + 1) * di;
+        let ar_coll = CollKind::AllReduceHier { first: ranks.start as u32, n: di as u32 };
+        let ag_coll = CollKind::AllGatherRing { first: ranks.start as u32, n: di as u32, ring: di as u32 };
         // ---- Prefill within this replica group (tensor-planner semantics).
         let prefill_payload = (shard * cfg.seq_in * spec.hidden * spec.dtype_bytes) as f64;
+        b.rule(OpRule::Compute(ComputeRule::Embed { batch: sa, times_seq_in: true }));
         b.compute(ranks.clone(), mesh.perf.embed_decode(spec, shard * cfg.seq_in), ModuleKind::Embedding, 0, 0);
         for layer in 0..spec.layers as u16 {
+            b.rule(OpRule::Compute(ComputeRule::NormPrefill { batch: sa }));
             b.compute(ranks.clone(), mesh.perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
             let ta = mesh.perf.attn_prefill(spec, shard, cfg.seq_in, di);
+            b.rule(OpRule::Compute(ComputeRule::AttnPrefill { batch: sa, g: di as u32 }));
             b.compute(ranks.clone(), ta, ModuleKind::SelfAttention, layer, 0);
-            mesh.allreduce(b, ranks.clone(), prefill_payload, layer, 0);
+            mesh.allreduce(b, ranks.clone(), prefill_payload, pr_prefill, layer, 0);
+            b.rule(OpRule::Compute(ComputeRule::NormPrefill { batch: sa }));
             b.compute(ranks.clone(), mesh.perf.norm_prefill(spec, shard, cfg.seq_in), ModuleKind::Norm, layer, 0);
+            b.rule(OpRule::Compute(ComputeRule::MlpPrefill { batch: sa, g: di as u32 }));
             b.compute(ranks.clone(), mesh.perf.mlp_prefill(spec, shard, cfg.seq_in, di), ModuleKind::Mlp, layer, 0);
-            mesh.allreduce(b, ranks.clone(), prefill_payload, layer, 0);
+            mesh.allreduce(b, ranks.clone(), prefill_payload, pr_prefill, layer, 0);
         }
 
         // ---- Decode steps within this replica group.
@@ -311,36 +405,59 @@ fn tp_dp<S: PlanSink>(
             let step = (si + 1) as u32;
             let frac = (si as f64 + 0.5) / sim_steps as f64;
             let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
+            b.rule(OpRule::Compute(ComputeRule::Embed { batch: sa, times_seq_in: false }));
             b.compute(ranks.clone(), mesh.perf.embed_decode(spec, shard), ModuleKind::Embedding, 0, step);
             for layer in 0..spec.layers as u16 {
+                b.rule(OpRule::Compute(ComputeRule::NormDecode { batch: sa }));
                 b.compute(ranks.clone(), mesh.perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
                 let ta = mesh.perf.attn_decode(spec, shard, context, di);
+                b.rule(OpRule::Compute(ComputeRule::AttnDecode { batch: sa, si: si as u32, g: di as u32 }));
                 b.compute(ranks.clone(), ta, ModuleKind::SelfAttention, layer, step);
-                let b1 = mesh.allreduce(b, ranks.clone(), decode_payload, layer, step);
+                let b1 = mesh.allreduce(b, ranks.clone(), decode_payload, pr_decode, layer, step);
+                b.rule(OpRule::Compute(ComputeRule::NormDecode { batch: sa }));
                 b.compute(ranks.clone(), mesh.perf.norm_decode(spec, shard), ModuleKind::Norm, layer, step);
+                b.rule(OpRule::Compute(ComputeRule::MlpDecode { batch: sa, g: di as u32 }));
                 b.compute(ranks.clone(), mesh.perf.mlp_decode(spec, shard, di), ModuleKind::Mlp, layer, step);
-                let b2 = mesh.allreduce(b, ranks.clone(), decode_payload, layer, step);
+                let b2 = mesh.allreduce(b, ranks.clone(), decode_payload, pr_decode, layer, step);
                 if si == 0 {
+                    b.comm_term(CommTerm {
+                        base: CommBase::CollPair { coll: ar_coll, payload: pr_decode },
+                        scale: CommScale::One,
+                    });
                     comm += b1 + b2;
                 }
             }
             // Vocab-parallel logits + group-local shard AllGather.
+            b.rule(OpRule::Compute(ComputeRule::LogitsDecode { batch: sa, g: di as u32 }));
             b.compute(ranks.clone(), mesh.perf.logits_decode(spec, shard, di), ModuleKind::LogitsHead, 0, step);
             let shard_payload = spec.allgather_payload_bytes(shard) / di as f64;
-            let bytes = mesh.allgather(b, ranks.clone(), shard_payload, step);
+            let bytes = mesh.allgather(b, ranks.clone(), shard_payload, pr_ag, step);
             if si == 0 {
+                b.comm_term(CommTerm {
+                    base: CommBase::Coll { coll: ag_coll, payload: pr_ag },
+                    scale: CommScale::One,
+                });
                 comm += bytes;
             }
         }
     }
 
+    let pr_term = PayloadRule::Ag { batch: sa };
     let terminal = mesh.terminal_collation(
         b,
         di * do_,
         do_,
         spec.allgather_payload_bytes(shard),
+        pr_term,
         sim_steps as u32,
     );
+    b.comm_term(CommTerm {
+        base: CommBase::Coll {
+            coll: CollKind::AllGatherRing { first: 0, n: (di * do_) as u32, ring: do_ as u32 },
+            payload: pr_term,
+        },
+        scale: CommScale::OverSteps,
+    });
     comm + terminal / sim_steps as f64
 }
 
@@ -356,6 +473,7 @@ fn pp_group_pass<S: PlanSink>(
     ranges: &[Range<usize>],
     micro: usize,
     num_micro: usize,
+    mb_arg: BatchArg,
     step: u32,
     context: usize,
     prefill: bool,
@@ -367,6 +485,7 @@ fn pp_group_pass<S: PlanSink>(
     } else {
         spec.p2p_payload_bytes(micro, 1)
     };
+    let pr_boundary = PayloadRule::Acts { batch: mb_arg, times_seq_in: prefill };
     for (stage, range) in ranges.iter().enumerate() {
         let rank = base + stage;
         for mb in 0..num_micro {
@@ -379,6 +498,7 @@ fn pp_group_pass<S: PlanSink>(
                 } else {
                     mesh.perf.embed_decode(spec, micro)
                 };
+                b.rule(OpRule::Compute(ComputeRule::Embed { batch: mb_arg, times_seq_in: prefill }));
                 b.compute(rank..rank + 1, t, ModuleKind::Embedding, 0, step);
             }
             for layer in range.clone() {
@@ -395,19 +515,38 @@ fn pp_group_pass<S: PlanSink>(
                         mesh.perf.mlp_decode(spec, micro, 1),
                     )
                 };
-                for (t, module) in [
-                    (tn, ModuleKind::Norm),
-                    (ta, ModuleKind::SelfAttention),
-                    (tn, ModuleKind::Norm),
-                    (tm, ModuleKind::Mlp),
+                let (rn, ra, rm) = if prefill {
+                    (
+                        ComputeRule::NormPrefill { batch: mb_arg },
+                        ComputeRule::AttnPrefill { batch: mb_arg, g: 1 },
+                        ComputeRule::MlpPrefill { batch: mb_arg, g: 1 },
+                    )
+                } else {
+                    (
+                        ComputeRule::NormDecode { batch: mb_arg },
+                        ComputeRule::AttnDecode { batch: mb_arg, si: step - 1, g: 1 },
+                        ComputeRule::MlpDecode { batch: mb_arg, g: 1 },
+                    )
+                };
+                for (t, rule, module) in [
+                    (tn, rn, ModuleKind::Norm),
+                    (ta, ra, ModuleKind::SelfAttention),
+                    (tn, rn, ModuleKind::Norm),
+                    (tm, rm, ModuleKind::Mlp),
                 ] {
+                    b.rule(OpRule::Compute(rule));
                     b.compute(rank..rank + 1, t, module, layer as u16, step);
                 }
             }
             if stage + 1 == stages {
+                b.rule(OpRule::Compute(ComputeRule::LogitsDecode { batch: mb_arg, g: 1 }));
                 b.compute(rank..rank + 1, mesh.perf.logits_decode(spec, micro, 1), ModuleKind::LogitsHead, 0, step);
             } else {
                 let t = collective::p2p_range(&mesh.topo, rank, 1, rank + 1, payload);
+                b.rule(OpRule::Send {
+                    coll: CollKind::P2pRange { src: rank as u32, count: 1, dst: rank as u32 + 1 },
+                    payload: pr_boundary,
+                });
                 boundary[mb] = b.send_tiered(rank..rank + 1, range.end as u16, step, t.cost.transfer_s, t.wire_w);
             }
         }
@@ -429,33 +568,48 @@ fn pp_dp<S: PlanSink>(
     let ranges = stage_layers(spec.layers, di);
     let (micro, num_micro) = microbatches(shard, di);
     let mut decode_bytes_group = 0.0;
+    let mb_arg = BatchArg::MicroOfCeilDiv { d: do_ as u32, stages: di as u32 };
 
     for rep in 0..do_ {
         let base = rep * di;
-        pp_group_pass(mesh, cfg, b, base, di, &ranges, micro, num_micro, 0, cfg.seq_in, true);
+        pp_group_pass(mesh, cfg, b, base, di, &ranges, micro, num_micro, mb_arg, 0, cfg.seq_in, true);
 
         for si in 0..sim_steps {
             let step = (si + 1) as u32;
             let frac = (si as f64 + 0.5) / sim_steps as f64;
             let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
             let bytes = pp_group_pass(
-                mesh, cfg, b, base, di, &ranges, micro, num_micro, step, context, false,
+                mesh, cfg, b, base, di, &ranges, micro, num_micro, mb_arg, step, context, false,
             );
             if si == 0 && rep == 0 {
+                b.comm_term(CommTerm {
+                    base: CommBase::Boundary { stages: di as u32, batch: BatchArg::CeilDiv(do_ as u32) },
+                    scale: CommScale::Times(do_ as u32),
+                });
                 decode_bytes_group = bytes;
             }
             // Group-local autoregressive step barrier.
+            b.rule(OpRule::Barrier);
             b.collective(base..base + di, ModuleKind::P2PTransfer, 0, step, 0.0, false, WaitRecord::None);
         }
     }
 
+    let pr_term = PayloadRule::Ag { batch: BatchArg::CeilDiv(do_ as u32) };
     let terminal = mesh.terminal_collation(
         b,
         di * do_,
         do_,
         spec.allgather_payload_bytes(shard),
+        pr_term,
         sim_steps as u32,
     );
+    b.comm_term(CommTerm {
+        base: CommBase::Coll {
+            coll: CollKind::AllGatherRing { first: 0, n: (di * do_) as u32, ring: do_ as u32 },
+            payload: pr_term,
+        },
+        scale: CommScale::OverSteps,
+    });
     decode_bytes_group * do_ as f64 + terminal / sim_steps as f64
 }
 

@@ -114,6 +114,23 @@ pub fn compile(spec: &ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &RunConfig)
     b.finish(m.sim_steps, m.comm_bytes_per_step, m.draws_sync_jitter)
 }
 
+/// Like [`compile`], but also capture the structure's shape-affine scalar
+/// program (DESIGN.md §17) from the lowerer's `PlanSink::rule` /
+/// `comm_term` annotations. The `ExecPlan` is always the full compile;
+/// the program is `Err(n)` — with `n` the number of unannotated ops —
+/// when the lowering could not be captured, in which case rebinds for
+/// this structure stay on the replay path.
+pub fn compile_affine(
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+) -> (ExecPlan, Result<crate::plan::affine::AffineProgram, usize>) {
+    let mut b = crate::plan::affine::RuleCapture::new(cfg.gpus);
+    let m = lower_into(spec, hw, knobs, cfg, &mut b);
+    b.finish(m.sim_steps, m.comm_bytes_per_step, m.draws_sync_jitter)
+}
+
 /// Rebind a cached mesh structure to a new shape: replay the lowering pass
 /// writing only the scalar table (array-fill cost; the structure `Arc` is
 /// shared, not copied). The caller guarantees `structure` was compiled for

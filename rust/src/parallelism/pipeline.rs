@@ -12,6 +12,7 @@
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::models::ModelSpec;
+use crate::plan::affine::{BatchArg, CollKind, CommBase, CommScale, CommTerm, ComputeRule, OpRule, PayloadRule};
 use crate::plan::{Plan, PlanBuilder, PlanSink, WaitRecord};
 use crate::simulator::collective;
 use crate::simulator::perf::PerfModel;
@@ -68,6 +69,7 @@ pub fn lower_into<S: PlanSink>(
 
     // One full pass (prefill with seq tokens, or a decode step) pipelined
     // over microbatches. Returns payload bytes transferred per pass.
+    let mb_arg = BatchArg::Micro { stages: g as u32 };
     let run_pass = |b: &mut S, step: u32, context: usize, prefill: bool| -> f64 {
         // Boundary edge per microbatch (overwritten stage by stage).
         let mut boundary: Vec<u32> = vec![u32::MAX; num_micro];
@@ -76,6 +78,7 @@ pub fn lower_into<S: PlanSink>(
         } else {
             spec.p2p_payload_bytes(micro, 1)
         };
+        let pr_boundary = PayloadRule::Acts { batch: mb_arg, times_seq_in: prefill };
         for (stage, range) in ranges.iter().enumerate() {
             for mb in 0..num_micro {
                 // Consume our input edge: the previous stage's boundary
@@ -90,6 +93,7 @@ pub fn lower_into<S: PlanSink>(
                     } else {
                         perf.embed_decode(spec, micro)
                     };
+                    b.rule(OpRule::Compute(ComputeRule::Embed { batch: mb_arg, times_seq_in: prefill }));
                     b.compute(stage..stage + 1, t, ModuleKind::Embedding, 0, step);
                 }
                 for layer in range.clone() {
@@ -106,21 +110,40 @@ pub fn lower_into<S: PlanSink>(
                             perf.mlp_decode(spec, micro, 1),
                         )
                     };
-                    for (t, module) in [
-                        (tn, ModuleKind::Norm),
-                        (ta, ModuleKind::SelfAttention),
-                        (tn, ModuleKind::Norm),
-                        (tm, ModuleKind::Mlp),
+                    let (rn, ra, rm) = if prefill {
+                        (
+                            ComputeRule::NormPrefill { batch: mb_arg },
+                            ComputeRule::AttnPrefill { batch: mb_arg, g: 1 },
+                            ComputeRule::MlpPrefill { batch: mb_arg, g: 1 },
+                        )
+                    } else {
+                        (
+                            ComputeRule::NormDecode { batch: mb_arg },
+                            ComputeRule::AttnDecode { batch: mb_arg, si: step - 1, g: 1 },
+                            ComputeRule::MlpDecode { batch: mb_arg, g: 1 },
+                        )
+                    };
+                    for (t, rule, module) in [
+                        (tn, rn, ModuleKind::Norm),
+                        (ta, ra, ModuleKind::SelfAttention),
+                        (tn, rn, ModuleKind::Norm),
+                        (tm, rm, ModuleKind::Mlp),
                     ] {
+                        b.rule(OpRule::Compute(rule));
                         b.compute(stage..stage + 1, t, module, layer as u16, step);
                     }
                 }
                 if stage + 1 == g {
+                    b.rule(OpRule::Compute(ComputeRule::LogitsDecode { batch: mb_arg, g: 1 }));
                     b.compute(stage..stage + 1, perf.logits_decode(spec, micro, 1), ModuleKind::LogitsHead, 0, step);
                 } else {
                     // Send boundary activations to the next stage — over
                     // the inter-node tier when the boundary crosses nodes.
                     let t = collective::p2p_range(&topo, stage, 1, stage + 1, payload);
+                    b.rule(OpRule::Send {
+                        coll: CollKind::P2pRange { src: stage as u32, count: 1, dst: stage as u32 + 1 },
+                        payload: pr_boundary,
+                    });
                     boundary[mb] = b.send_tiered(stage..stage + 1, range.end as u16, step, t.cost.transfer_s, t.wire_w);
                 }
             }
@@ -141,8 +164,13 @@ pub fn lower_into<S: PlanSink>(
         let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
         let bytes = run_pass(&mut *b, (si + 1) as u32, context, false);
         if si == 0 {
+            b.comm_term(CommTerm {
+                base: CommBase::Boundary { stages: g as u32, batch: BatchArg::Full },
+                scale: CommScale::One,
+            });
             decode_bytes = bytes;
         }
+        b.rule(OpRule::Barrier);
         b.collective(0..g, ModuleKind::P2PTransfer, 0, (si + 1) as u32, 0.0, false, WaitRecord::None);
     }
 

@@ -11,6 +11,7 @@
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
 use crate::models::ModelSpec;
+use crate::plan::affine::{BatchArg, CollKind, CommBase, CommScale, CommTerm, ComputeRule, OpRule, PayloadRule};
 use crate::plan::{Plan, PlanBuilder, PlanSink, WaitRecord};
 use crate::simulator::collective;
 use crate::simulator::perf::PerfModel;
@@ -44,57 +45,86 @@ pub fn lower_into<S: PlanSink>(
     // mesh spans nodes (intra-node reduce, inter-node exchange, intra-node
     // broadcast). Returns bytes moved.
     let topo_ref = &topo;
-    let allreduce = move |b: &mut S, payload: f64, layer: u16, step: u32| -> f64 {
+    let gu = g as u32;
+    let ar_coll = CollKind::AllReduceHier { first: 0, n: gu };
+    let allreduce = move |b: &mut S, payload: f64, pr: PayloadRule, layer: u16, step: u32| -> f64 {
         if g == 1 {
             // No collective is emitted at all on a single GPU.
             return 0.0;
         }
         let t = collective::allreduce_hier(topo_ref, 0, g, payload);
         let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+        b.rule(OpRule::Collective { coll: ar_coll, payload: pr });
         b.collective_tiered(0..g, ModuleKind::AllReduce, layer, step, xfer, wire, true, WaitRecord::All);
         t.cost.bytes_moved
     };
 
     // ---- Prefill (step 0): compute-bound pass over the prompt.
     let prefill_payload = (cfg.batch * cfg.seq_in * spec.hidden * spec.dtype_bytes) as f64;
+    let pr_prefill = PayloadRule::Acts { batch: BatchArg::Full, times_seq_in: true };
+    b.rule(OpRule::Compute(ComputeRule::Embed { batch: BatchArg::Full, times_seq_in: true }));
     b.compute(0..g, perf.embed_decode(spec, cfg.batch * cfg.seq_in), ModuleKind::Embedding, 0, 0);
     for layer in 0..spec.layers as u16 {
+        b.rule(OpRule::Compute(ComputeRule::NormPrefill { batch: BatchArg::Full }));
         b.compute(0..g, perf.norm_prefill(spec, cfg.batch, cfg.seq_in), ModuleKind::Norm, layer, 0);
+        b.rule(OpRule::Compute(ComputeRule::AttnPrefill { batch: BatchArg::Full, g: gu }));
         b.compute(0..g, perf.attn_prefill(spec, cfg.batch, cfg.seq_in, g), ModuleKind::SelfAttention, layer, 0);
-        allreduce(&mut *b, prefill_payload, layer, 0);
+        allreduce(&mut *b, prefill_payload, pr_prefill, layer, 0);
+        b.rule(OpRule::Compute(ComputeRule::NormPrefill { batch: BatchArg::Full }));
         b.compute(0..g, perf.norm_prefill(spec, cfg.batch, cfg.seq_in), ModuleKind::Norm, layer, 0);
+        b.rule(OpRule::Compute(ComputeRule::MlpPrefill { batch: BatchArg::Full, g: gu }));
         b.compute(0..g, perf.mlp_prefill(spec, cfg.batch, cfg.seq_in, g), ModuleKind::Mlp, layer, 0);
-        allreduce(&mut *b, prefill_payload, layer, 0);
+        allreduce(&mut *b, prefill_payload, pr_prefill, layer, 0);
     }
 
     // ---- Decode: `sim_steps` representative steps spread over seq_out.
     let decode_payload = spec.allreduce_payload_bytes(cfg.batch, 1);
+    let pr_decode = PayloadRule::Acts { batch: BatchArg::Full, times_seq_in: false };
+    let ag_coll = CollKind::AllGatherRing { first: 0, n: gu, ring: gu };
+    let pr_ag = PayloadRule::AgShard { batch: BatchArg::Full, div: gu };
     for si in 0..sim_steps {
         let step = (si + 1) as u32;
         // Representative KV context for this sampled step.
         let frac = (si as f64 + 0.5) / sim_steps as f64;
         let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
 
+        b.rule(OpRule::Compute(ComputeRule::Embed { batch: BatchArg::Full, times_seq_in: false }));
         b.compute(0..g, perf.embed_decode(spec, cfg.batch), ModuleKind::Embedding, 0, step);
         for layer in 0..spec.layers as u16 {
+            b.rule(OpRule::Compute(ComputeRule::NormDecode { batch: BatchArg::Full }));
             b.compute(0..g, perf.norm_decode(spec, cfg.batch), ModuleKind::Norm, layer, step);
+            b.rule(OpRule::Compute(ComputeRule::AttnDecode { batch: BatchArg::Full, si: si as u32, g: gu }));
             b.compute(0..g, perf.attn_decode(spec, cfg.batch, context, g), ModuleKind::SelfAttention, layer, step);
-            let b1 = allreduce(&mut *b, decode_payload, layer, step);
+            let b1 = allreduce(&mut *b, decode_payload, pr_decode, layer, step);
+            b.rule(OpRule::Compute(ComputeRule::NormDecode { batch: BatchArg::Full }));
             b.compute(0..g, perf.norm_decode(spec, cfg.batch), ModuleKind::Norm, layer, step);
+            b.rule(OpRule::Compute(ComputeRule::MlpDecode { batch: BatchArg::Full, g: gu }));
             b.compute(0..g, perf.mlp_decode(spec, cfg.batch, g), ModuleKind::Mlp, layer, step);
-            let b2 = allreduce(&mut *b, decode_payload, layer, step);
+            let b2 = allreduce(&mut *b, decode_payload, pr_decode, layer, step);
             if si == 0 {
+                // `b1 + b2` is summed before the accumulate — a CollPair
+                // term, and exact (0-byte when g == 1).
+                b.comm_term(CommTerm {
+                    base: CommBase::CollPair { coll: ar_coll, payload: pr_decode },
+                    scale: CommScale::One,
+                });
                 comm_bytes_per_step += b1 + b2;
             }
         }
         // Vocab-parallel logits + AllGather of the shards.
+        b.rule(OpRule::Compute(ComputeRule::LogitsDecode { batch: BatchArg::Full, g: gu }));
         b.compute(0..g, perf.logits_decode(spec, cfg.batch, g), ModuleKind::LogitsHead, 0, step);
         if g > 1 {
             let shard = spec.allgather_payload_bytes(cfg.batch) / g as f64;
             let t = collective::allgather_ring(&topo, 0, g, g, shard);
             let (xfer, wire) = (t.cost.transfer_s, t.wire_w);
+            b.rule(OpRule::Collective { coll: ag_coll, payload: pr_ag });
             b.collective_tiered(0..g, ModuleKind::AllGather, 0, step, xfer, wire, false, WaitRecord::All);
             if si == 0 {
+                b.comm_term(CommTerm {
+                    base: CommBase::Coll { coll: ag_coll, payload: pr_ag },
+                    scale: CommScale::One,
+                });
                 comm_bytes_per_step += t.cost.bytes_moved;
             }
         }

@@ -1,0 +1,646 @@
+//! Shape-affine rebind compilation (DESIGN.md §17).
+//!
+//! A cached `PlanStructure` fixes the op *sequence* of a mesh; a shape
+//! rebind re-derives only the per-op scalar table (`ShapeScalars`). Today's
+//! replay path (`parallelism::rebind`) does that by re-running the full
+//! lowering pass per shape. This module compiles the pass **once** into a
+//! symbolic *shape-affine scalar program*: while the structure is lowered,
+//! the lowerers announce — via the default-no-op `PlanSink::rule` /
+//! `PlanSink::comm_term` hooks — which closed-form rule produced each op's
+//! scalars and each `comm_bytes_per_step` accumulation term. Rebinding a
+//! new shape then evaluates the captured rules directly (an O(unique-rules)
+//! pass over the interned rule set plus an O(ops) scatter), with no lowerer
+//! replay.
+//!
+//! **Bit-identity by construction + verification.** Every rule evaluates
+//! the *same* model functions the lowerer calls — `simulator::perf`
+//! timings, `simulator::collective` α–β costs, `ModelSpec` payload-byte
+//! helpers — with the same integer arguments and the same f64 fold order,
+//! so an accepted program is bit-identical to the replay, not approximately
+//! equal. The claim is still never trusted: at structure-compile time the
+//! cache (`plan::cache`) evaluates the program at the compile shape and at
+//! a basis of held-out probe shapes (batch, prompt length, decode-step
+//! spread) and compares every scalar bit-for-bit against the replayed
+//! lowering. Any mismatch — or any op the lowerer failed to annotate —
+//! rejects the whole structure's program, which then falls back to the
+//! `ShapeBinding` replay forever (counted in
+//! `CacheStats::probe_rejected_ops`). Correctness never depends on the
+//! fit; a wrong or missing rule costs coverage, not accuracy.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::cluster::Topology;
+use crate::config::{HwSpec, Parallelism, RunConfig, SimKnobs};
+use crate::models::ModelSpec;
+use crate::parallelism::pipeline::microbatches;
+use crate::plan::exec::{ExecPlan, PlanStructure, ShapeScalars, StructureBuilder};
+use crate::plan::{PlanSink, WaitRecord};
+use crate::simulator::collective::{self, TieredCost};
+use crate::simulator::perf::{ModuleTiming, PerfModel};
+use crate::simulator::timeline::ModuleKind;
+
+/// Symbolic batch argument of a rule: how the op's token count derives
+/// from `RunConfig::batch`. All variants replay the lowerers' integer
+/// arithmetic exactly (ceil-divides, GPipe microbatching, MoE top-k).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BatchArg {
+    /// `cfg.batch` (tensor-parallel full batch).
+    Full,
+    /// `ceil(cfg.batch / d)` (data/expert shard, hybrid replica shard).
+    CeilDiv(u32),
+    /// `pipeline::microbatches(cfg.batch, stages).0` (GPipe microbatch).
+    Micro { stages: u32 },
+    /// Microbatch of a replica shard: `microbatches(ceil(batch/d), stages).0`
+    /// (the PP×DP inner pipeline).
+    MicroOfCeilDiv { d: u32, stages: u32 },
+    /// `cfg.batch * top_k` (expert-parallel dispatch token count).
+    TimesTopK,
+}
+
+impl BatchArg {
+    fn eval(self, cfg: &RunConfig, top_k: usize) -> usize {
+        match self {
+            BatchArg::Full => cfg.batch,
+            BatchArg::CeilDiv(d) => {
+                let d = d as usize;
+                (cfg.batch + d - 1) / d
+            }
+            BatchArg::Micro { stages } => microbatches(cfg.batch, stages as usize).0,
+            BatchArg::MicroOfCeilDiv { d, stages } => {
+                let d = d as usize;
+                microbatches((cfg.batch + d - 1) / d, stages as usize).0
+            }
+            BatchArg::TimesTopK => cfg.batch * top_k,
+        }
+    }
+}
+
+/// Which roofline perf-model call produced a compute op's timing. The
+/// structural arguments (sharding degree, decode-step index) are baked at
+/// capture time; the shape arguments (batch, sequence lengths) stay
+/// symbolic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ComputeRule {
+    /// `perf.embed_decode(spec, b [* cfg.seq_in])` — token embedding
+    /// (prefill embeds the whole prompt, decode one token per sequence).
+    Embed { batch: BatchArg, times_seq_in: bool },
+    NormPrefill { batch: BatchArg },
+    AttnPrefill { batch: BatchArg, g: u32 },
+    MlpPrefill { batch: BatchArg, g: u32 },
+    NormDecode { batch: BatchArg },
+    /// `perf.attn_decode(spec, b, context, g)` with the representative KV
+    /// context of sampled decode step `si`.
+    AttnDecode { batch: BatchArg, si: u32, g: u32 },
+    MlpDecode { batch: BatchArg, g: u32 },
+    LogitsDecode { batch: BatchArg, g: u32 },
+}
+
+/// Which α–β collective cost call priced a communication op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollKind {
+    AllReduceHier { first: u32, n: u32 },
+    AllGatherRing { first: u32, n: u32, ring: u32 },
+    AllToAllHier { first: u32, n: u32 },
+    P2pRange { src: u32, count: u32, dst: u32 },
+}
+
+impl CollKind {
+    fn eval(self, topo: &Topology, payload: f64) -> TieredCost {
+        match self {
+            CollKind::AllReduceHier { first, n } => {
+                collective::allreduce_hier(topo, first as usize, n as usize, payload)
+            }
+            CollKind::AllGatherRing { first, n, ring } => {
+                collective::allgather_ring(topo, first as usize, n as usize, ring as usize, payload)
+            }
+            CollKind::AllToAllHier { first, n } => {
+                collective::alltoall_hier(topo, first as usize, n as usize, payload)
+            }
+            CollKind::P2pRange { src, count, dst } => {
+                collective::p2p_range(topo, src as usize, count as usize, dst as usize, payload)
+            }
+        }
+    }
+}
+
+/// Symbolic payload-byte expression of a communication op. Each variant
+/// replays one of the lowerers' payload formulas token-for-token (the
+/// `ModelSpec` byte helpers all share the integer product
+/// `tokens × hidden × dtype_bytes`, converted to f64 once).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PayloadRule {
+    /// `(b [* seq_in] * hidden * dtype_bytes) as f64` — activation bytes
+    /// (covers `allreduce_payload_bytes` and `p2p_payload_bytes`).
+    Acts { batch: BatchArg, times_seq_in: bool },
+    /// `Acts / div as f64` — a 1/div activation shard (TP×PP boundaries).
+    ActsShard { batch: BatchArg, times_seq_in: bool, div: u32 },
+    /// `spec.allgather_payload_bytes(b)` — terminal logit collation.
+    Ag { batch: BatchArg },
+    /// `Ag / div as f64` — vocab-parallel logit shard.
+    AgShard { batch: BatchArg, div: u32 },
+    /// `Acts * top_k as f64 * capacity` — MoE all-to-all dispatch payload.
+    ExpertActs { batch: BatchArg, times_seq_in: bool },
+}
+
+impl PayloadRule {
+    fn eval(self, cx: &EvalCtx) -> f64 {
+        let acts = |batch: BatchArg, times_seq_in: bool| -> f64 {
+            let b = batch.eval(cx.cfg, cx.top_k);
+            let n = if times_seq_in { b * cx.cfg.seq_in } else { b };
+            (n * cx.spec.hidden * cx.spec.dtype_bytes) as f64
+        };
+        match self {
+            PayloadRule::Acts { batch, times_seq_in } => acts(batch, times_seq_in),
+            PayloadRule::ActsShard { batch, times_seq_in, div } => {
+                acts(batch, times_seq_in) / div as f64
+            }
+            PayloadRule::Ag { batch } => {
+                cx.spec.allgather_payload_bytes(batch.eval(cx.cfg, cx.top_k))
+            }
+            PayloadRule::AgShard { batch, div } => {
+                cx.spec.allgather_payload_bytes(batch.eval(cx.cfg, cx.top_k)) / div as f64
+            }
+            PayloadRule::ExpertActs { batch, times_seq_in } => {
+                acts(batch, times_seq_in) * cx.top_k as f64 * cx.capacity
+            }
+        }
+    }
+}
+
+/// The closed-form rule behind one op slot's `(dur_s, aux)` scalars.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpRule {
+    Compute(ComputeRule),
+    /// Rendezvous collective: `dur = cost.transfer_s`, `aux = wire_w`.
+    Collective { coll: CollKind, payload: PayloadRule },
+    /// Zero-duration synchronization barrier: `(0.0, 0.0)`.
+    Barrier,
+    /// P2P edge producer: same scalar derivation as `Collective`.
+    Send { coll: CollKind, payload: PayloadRule },
+    /// P2P edge consumer: `(0.0, 0.0)` (auto-annotated by `RuleCapture`).
+    Recv,
+}
+
+impl OpRule {
+    fn eval(self, cx: &EvalCtx) -> (f64, f64) {
+        match self {
+            OpRule::Compute(c) => {
+                let t = c.eval(cx);
+                (t.dur_s, t.util)
+            }
+            OpRule::Collective { coll, payload } | OpRule::Send { coll, payload } => {
+                let t = coll.eval(&cx.topo, payload.eval(cx));
+                (t.cost.transfer_s, t.wire_w)
+            }
+            OpRule::Barrier | OpRule::Recv => (0.0, 0.0),
+        }
+    }
+}
+
+impl ComputeRule {
+    fn eval(self, cx: &EvalCtx) -> ModuleTiming {
+        let (spec, cfg, perf) = (cx.spec, cx.cfg, &cx.perf);
+        match self {
+            ComputeRule::Embed { batch, times_seq_in } => {
+                let b = batch.eval(cfg, cx.top_k);
+                let n = if times_seq_in { b * cfg.seq_in } else { b };
+                perf.embed_decode(spec, n)
+            }
+            ComputeRule::NormPrefill { batch } => {
+                perf.norm_prefill(spec, batch.eval(cfg, cx.top_k), cfg.seq_in)
+            }
+            ComputeRule::AttnPrefill { batch, g } => {
+                perf.attn_prefill(spec, batch.eval(cfg, cx.top_k), cfg.seq_in, g as usize)
+            }
+            ComputeRule::MlpPrefill { batch, g } => {
+                perf.mlp_prefill(spec, batch.eval(cfg, cx.top_k), cfg.seq_in, g as usize)
+            }
+            ComputeRule::NormDecode { batch } => perf.norm_decode(spec, batch.eval(cfg, cx.top_k)),
+            ComputeRule::AttnDecode { batch, si, g } => {
+                // The lowerers' representative-KV-context formula, verbatim.
+                let frac = (si as f64 + 0.5) / cx.sim_steps as f64;
+                let context = cfg.seq_in + (frac * cfg.seq_out as f64) as usize;
+                perf.attn_decode(spec, batch.eval(cfg, cx.top_k), context, g as usize)
+            }
+            ComputeRule::MlpDecode { batch, g } => {
+                perf.mlp_decode(spec, batch.eval(cfg, cx.top_k), g as usize)
+            }
+            ComputeRule::LogitsDecode { batch, g } => {
+                perf.logits_decode(spec, batch.eval(cfg, cx.top_k), g as usize)
+            }
+        }
+    }
+}
+
+/// One additive term of the `comm_bytes_per_step` accumulation, emitted at
+/// the lowerer's accumulation site so the replayed f64 fold order — which
+/// bit-level identity depends on — is preserved exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommTerm {
+    pub base: CommBase,
+    pub scale: CommScale,
+}
+
+/// The bytes-moved expression of one accumulation term.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CommBase {
+    /// `bytes_moved` of one collective call.
+    Coll { coll: CollKind, payload: PayloadRule },
+    /// `v + v` for two identical back-to-back calls (the lowerers'
+    /// `comm += b1 + b2` sites — summed *before* the accumulate).
+    CollPair { coll: CollKind, payload: PayloadRule },
+    /// A full pipelined pass's boundary traffic:
+    /// `p2p_payload_bytes(micro, 1) * (stages - 1) as f64 * num_micro as f64`
+    /// with `(micro, num_micro) = microbatches(b, stages)`.
+    Boundary { stages: u32, batch: BatchArg },
+}
+
+/// Scaling applied to a term's bytes value before accumulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CommScale {
+    One,
+    /// `v / sim_steps as f64` (terminal per-run collations).
+    OverSteps,
+    /// `v * k as f64` (per-shard / per-replica multiplication).
+    Times(u32),
+}
+
+impl CommTerm {
+    fn apply(self, acc: f64, cx: &EvalCtx) -> f64 {
+        let v = match self.base {
+            CommBase::Coll { coll, payload } => coll.eval(&cx.topo, payload.eval(cx)).cost.bytes_moved,
+            CommBase::CollPair { coll, payload } => {
+                let b = coll.eval(&cx.topo, payload.eval(cx)).cost.bytes_moved;
+                b + b
+            }
+            CommBase::Boundary { stages, batch } => {
+                let stages = stages as usize;
+                let (micro, num_micro) = microbatches(batch.eval(cx.cfg, cx.top_k), stages);
+                cx.spec.p2p_payload_bytes(micro, 1) * (stages - 1) as f64 * num_micro as f64
+            }
+        };
+        let scaled = match self.scale {
+            CommScale::One => v,
+            CommScale::OverSteps => v / cx.sim_steps as f64,
+            CommScale::Times(k) => v * k as f64,
+        };
+        acc + scaled
+    }
+}
+
+/// Everything a rule evaluation reads besides the rule itself: the shape
+/// (`cfg`), the model/hardware constants, and the derived step/routing
+/// parameters — computed once per rebind, exactly as the lowerers compute
+/// them.
+struct EvalCtx<'a> {
+    spec: &'a ModelSpec,
+    cfg: &'a RunConfig,
+    perf: PerfModel,
+    topo: Topology,
+    sim_steps: usize,
+    top_k: usize,
+    capacity: f64,
+}
+
+impl<'a> EvalCtx<'a> {
+    fn new(spec: &'a ModelSpec, hw: &HwSpec, knobs: &SimKnobs, cfg: &'a RunConfig) -> EvalCtx<'a> {
+        let (top_k, capacity_pct) = match cfg.parallelism {
+            Parallelism::Expert { top_k, capacity_pct, .. } => (top_k.max(1), capacity_pct.max(100)),
+            _ => (2, 125),
+        };
+        EvalCtx {
+            spec,
+            cfg,
+            perf: PerfModel::new(hw),
+            topo: hw.topo(),
+            sim_steps: knobs.sim_decode_steps.min(cfg.seq_out).max(1),
+            top_k,
+            capacity: capacity_pct as f64 / 100.0,
+        }
+    }
+}
+
+/// A compiled shape-affine scalar program: the interned rule set, the
+/// per-op rule index, and the ordered `comm_bytes_per_step` terms.
+/// Interning is where the speedup lives — a 32-layer decode pass repeats
+/// each per-layer rule 32×, so the program evaluates each distinct rule
+/// once and scatters the result over the op table.
+#[derive(Debug)]
+pub struct AffineProgram {
+    pub rules: Vec<OpRule>,
+    /// Rule index per op slot (`len == structure.len()`).
+    pub op_rule: Vec<u32>,
+    pub comm: Vec<CommTerm>,
+}
+
+impl AffineProgram {
+    /// Rebind `structure` to the shape of `cfg` by evaluating the program:
+    /// no lowerer call, O(unique rules) model evaluations, O(ops) scatter.
+    /// Bit-identical to `parallelism::rebind` on every accepted program
+    /// (enforced by the cache's compile-time probe verification).
+    pub fn eval(
+        &self,
+        structure: &Arc<PlanStructure>,
+        spec: &ModelSpec,
+        hw: &HwSpec,
+        knobs: &SimKnobs,
+        cfg: &RunConfig,
+    ) -> ExecPlan {
+        debug_assert_eq!(self.op_rule.len(), structure.len());
+        let cx = EvalCtx::new(spec, hw, knobs, cfg);
+        let vals: Vec<(f64, f64)> = self.rules.iter().map(|r| r.eval(&cx)).collect();
+        let mut dur_s = Vec::with_capacity(self.op_rule.len());
+        let mut aux = Vec::with_capacity(self.op_rule.len());
+        for &ri in &self.op_rule {
+            let (d, a) = vals[ri as usize];
+            dur_s.push(d);
+            aux.push(a);
+        }
+        let comm_bytes_per_step = self.comm.iter().fold(0.0, |acc, t| t.apply(acc, &cx));
+        ExecPlan {
+            structure: Arc::clone(structure),
+            scalars: Arc::new(ShapeScalars {
+                dur_s,
+                aux,
+                sim_steps: cx.sim_steps,
+                comm_bytes_per_step,
+            }),
+        }
+    }
+}
+
+/// Number of scalar slots on which two shape tables disagree at the bit
+/// level (0 ⇒ byte-identical). Shape-level metadata mismatches count as
+/// whole-table rejections.
+pub fn scalars_mismatch(a: &ShapeScalars, b: &ShapeScalars) -> usize {
+    if a.sim_steps != b.sim_steps || a.dur_s.len() != b.dur_s.len() || a.aux.len() != b.aux.len() {
+        return a.dur_s.len().max(b.dur_s.len()).max(1);
+    }
+    let mut m = 0;
+    for i in 0..a.dur_s.len() {
+        if a.dur_s[i].to_bits() != b.dur_s[i].to_bits() || a.aux[i].to_bits() != b.aux[i].to_bits() {
+            m += 1;
+        }
+    }
+    if a.comm_bytes_per_step.to_bits() != b.comm_bytes_per_step.to_bits() {
+        m += 1;
+    }
+    m
+}
+
+/// The held-out probe basis the cache verifies a captured program against:
+/// perturbations of the compile shape along prompt length, batch, and
+/// decode-step spread. Probes that would change the mesh structure
+/// (`parallelism::structure_key`) are filtered out by the caller; the
+/// prompt-length probes never do, so at least two probes always survive.
+pub fn probe_shapes(cfg: &RunConfig) -> Vec<RunConfig> {
+    let mut probes = Vec::with_capacity(4);
+    let mut p = cfg.clone();
+    p.seq_in += 64;
+    probes.push(p);
+    let mut p = cfg.clone();
+    p.seq_in += 192;
+    probes.push(p);
+    let mut p = cfg.clone();
+    p.batch *= 2;
+    probes.push(p);
+    let mut p = cfg.clone();
+    p.seq_out += 64;
+    probes.push(p);
+    probes
+}
+
+/// Lowering sink that compiles a structure *and* captures its shape-affine
+/// program in one pass: every structural emission is forwarded to an inner
+/// `StructureBuilder`, while the immediately preceding `rule()` annotation
+/// is interned into the program. Ops the lowerer failed to annotate (or
+/// annotated inconsistently) are counted and poison the capture — the
+/// structure still compiles, only the program is discarded.
+#[derive(Debug)]
+pub struct RuleCapture {
+    inner: StructureBuilder,
+    pending: Option<OpRule>,
+    interner: HashMap<OpRule, u32>,
+    rules: Vec<OpRule>,
+    op_rule: Vec<u32>,
+    comm: Vec<CommTerm>,
+    unruled: usize,
+}
+
+impl RuleCapture {
+    pub fn new(num_ranks: usize) -> RuleCapture {
+        RuleCapture {
+            inner: StructureBuilder::new(num_ranks),
+            pending: None,
+            interner: HashMap::new(),
+            rules: Vec::new(),
+            op_rule: Vec::new(),
+            comm: Vec::new(),
+            unruled: 0,
+        }
+    }
+
+    fn intern(&mut self, r: OpRule) -> u32 {
+        if let Some(&i) = self.interner.get(&r) {
+            return i;
+        }
+        let i = self.rules.len() as u32;
+        self.rules.push(r);
+        self.interner.insert(r, i);
+        i
+    }
+
+    /// Consume the pending annotation for the op being emitted; a missing
+    /// annotation poisons the capture (sentinel index, never evaluated).
+    fn take_rule(&mut self) -> u32 {
+        match self.pending.take() {
+            Some(r) => self.intern(r),
+            None => {
+                self.unruled += 1;
+                u32::MAX
+            }
+        }
+    }
+
+    /// Finish the compile: the `ExecPlan` is always valid; the program is
+    /// `Err(unannotated op count)` when any op lacked a rule.
+    pub fn finish(
+        mut self,
+        sim_steps: usize,
+        comm_bytes_per_step: f64,
+        draws_sync_jitter: bool,
+    ) -> (ExecPlan, Result<AffineProgram, usize>) {
+        if self.pending.take().is_some() {
+            // A trailing rule() with no op behind it: corrupt capture.
+            self.unruled += 1;
+        }
+        let ep = self.inner.finish(sim_steps, comm_bytes_per_step, draws_sync_jitter);
+        let prog = if self.unruled > 0 {
+            Err(self.unruled)
+        } else {
+            Ok(AffineProgram {
+                rules: self.rules,
+                op_rule: self.op_rule,
+                comm: self.comm,
+            })
+        };
+        (ep, prog)
+    }
+}
+
+impl PlanSink for RuleCapture {
+    fn compute(&mut self, ranks: Range<usize>, timing: ModuleTiming, module: ModuleKind, layer: u16, step: u32) {
+        let ri = self.take_rule();
+        self.op_rule.push(ri);
+        self.inner.compute(ranks, timing, module, layer, step);
+    }
+
+    fn collective_tiered(
+        &mut self,
+        ranks: Range<usize>,
+        module: ModuleKind,
+        layer: u16,
+        step: u32,
+        transfer_s: f64,
+        wire_w: f64,
+        jitter: bool,
+        record: WaitRecord,
+    ) {
+        let ri = self.take_rule();
+        self.op_rule.push(ri);
+        self.inner
+            .collective_tiered(ranks, module, layer, step, transfer_s, wire_w, jitter, record);
+    }
+
+    fn send_tiered(&mut self, ranks: Range<usize>, layer: u16, step: u32, transfer_s: f64, wire_w: f64) -> u32 {
+        let ri = self.take_rule();
+        self.op_rule.push(ri);
+        self.inner.send_tiered(ranks, layer, step, transfer_s, wire_w)
+    }
+
+    fn recv(&mut self, ranks: Range<usize>, layer: u16, step: u32, edge: u32) {
+        if self.pending.take().is_some() {
+            // Receives derive no scalars; a stray annotation here means the
+            // lowerer mis-paired a rule with its op.
+            self.unruled += 1;
+        }
+        let ri = self.intern(OpRule::Recv);
+        self.op_rule.push(ri);
+        self.inner.recv(ranks, layer, step, edge);
+    }
+
+    fn rule(&mut self, rule: OpRule) {
+        if self.pending.replace(rule).is_some() {
+            // The previous annotation was never consumed by an op.
+            self.unruled += 1;
+        }
+    }
+
+    fn comm_term(&mut self, term: CommTerm) {
+        self.comm.push(term);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Parallelism;
+    use crate::parallelism;
+
+    fn knobs() -> SimKnobs {
+        SimKnobs {
+            sim_decode_steps: 4,
+            ..SimKnobs::default()
+        }
+    }
+
+    fn capture(cfg: &RunConfig, hw: &HwSpec, knobs: &SimKnobs) -> (ExecPlan, AffineProgram) {
+        let spec = crate::models::by_name(&cfg.model).unwrap();
+        let (ep, prog) = parallelism::compile_affine(&spec, hw, knobs, cfg);
+        (ep, prog.expect("every stock lowerer annotates every op"))
+    }
+
+    #[test]
+    fn capture_covers_all_ops_for_every_strategy() {
+        let hw = HwSpec::default();
+        let knobs = knobs();
+        for par in [
+            Parallelism::Tensor,
+            Parallelism::Pipeline,
+            Parallelism::Data,
+            Parallelism::expert(4),
+        ] {
+            let cfg = RunConfig::new("Vicuna-7B", par, 4, 8);
+            let (ep, prog) = capture(&cfg, &hw, &knobs);
+            assert_eq!(prog.op_rule.len(), ep.len());
+            assert!(
+                prog.rules.len() < ep.len() / 4,
+                "interning must collapse the per-layer repetition ({} rules / {} ops)",
+                prog.rules.len(),
+                ep.len()
+            );
+        }
+    }
+
+    #[test]
+    fn eval_at_compile_shape_is_bit_identical() {
+        let hw = HwSpec::default();
+        let knobs = knobs();
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8);
+        let spec = crate::models::by_name(&cfg.model).unwrap();
+        let (ep, prog) = capture(&cfg, &hw, &knobs);
+        let evd = prog.eval(&ep.structure, &spec, &hw, &knobs, &cfg);
+        assert_eq!(scalars_mismatch(&ep.scalars, &evd.scalars), 0);
+    }
+
+    #[test]
+    fn eval_matches_replay_at_probe_shapes() {
+        let hw = HwSpec::default();
+        let knobs = knobs();
+        let cfg = RunConfig::new("Vicuna-7B", Parallelism::expert(2), 2, 8);
+        let spec = crate::models::by_name(&cfg.model).unwrap();
+        let (ep, prog) = capture(&cfg, &hw, &knobs);
+        let key = parallelism::structure_key(&knobs, &cfg);
+        let mut probed = 0;
+        for p in probe_shapes(&cfg) {
+            if parallelism::structure_key(&knobs, &p) != key {
+                continue;
+            }
+            probed += 1;
+            let replay = parallelism::rebind(&ep.structure, &spec, &hw, &knobs, &p);
+            let affine = prog.eval(&ep.structure, &spec, &hw, &knobs, &p);
+            assert_eq!(scalars_mismatch(&replay.scalars, &affine.scalars), 0, "probe {p:?}");
+        }
+        assert!(probed >= 2, "prompt-length probes never change the mesh key");
+    }
+
+    #[test]
+    fn unannotated_op_poisons_the_capture_not_the_plan() {
+        let mut b = RuleCapture::new(2);
+        // No rule() before the op: the structure must still compile.
+        b.compute(0..2, ModuleTiming { dur_s: 1e-3, util: 0.7 }, ModuleKind::Mlp, 0, 0);
+        let (ep, prog) = b.finish(1, 0.0, false);
+        assert_eq!(ep.len(), 1);
+        assert_eq!(prog.unwrap_err(), 1);
+    }
+
+    #[test]
+    fn mismatch_counter_is_bit_exact() {
+        let a = ShapeScalars {
+            dur_s: vec![1.0, 2.0],
+            aux: vec![0.5, 0.5],
+            sim_steps: 2,
+            comm_bytes_per_step: 64.0,
+        };
+        let b = ShapeScalars {
+            dur_s: vec![1.0, 2.0 + f64::EPSILON],
+            aux: vec![0.5, 0.5],
+            sim_steps: 2,
+            comm_bytes_per_step: 64.0,
+        };
+        assert_eq!(scalars_mismatch(&a, &a), 0);
+        assert_eq!(scalars_mismatch(&a, &b), 1);
+    }
+}

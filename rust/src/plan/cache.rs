@@ -18,7 +18,11 @@
 //!
 //! A tune grid or serving trace therefore lowers each mesh topology once
 //! and rebinds hundreds of shapes — the hit-rate contract asserted by the
-//! integration tests. The cache is shared across `util::par` workers; on a
+//! integration tests. Structure compiles additionally capture and
+//! probe-verify a shape-affine scalar program (`plan::affine`, DESIGN.md
+//! §17); accepted programs serve later rebinds without replaying the
+//! lowerer at all, and rejected ones pin the structure to the replay path
+//! (`CacheStats::{affine_rebinds, replay_fallbacks, probe_rejected_ops}`). The cache is shared across `util::par` workers; on a
 //! miss the worker lowers outside the lock (a racing duplicate lowering is
 //! harmless — plans are deterministic, last insert wins — though it can
 //! overcount `CacheStats` by the duplicate; the stats are exact under
@@ -29,7 +33,9 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::config::{HwSpec, RunConfig, SimKnobs};
+use crate::models::ModelSpec;
 use crate::parallelism;
+use crate::plan::affine::{self, AffineProgram};
 use crate::plan::exec::{ExecPlan, PlanStructure};
 
 /// Hit/miss counters of the two cache levels.
@@ -54,6 +60,19 @@ pub struct CacheStats {
     /// (batching disabled via `SimKnobs::batch_execution`, or the
     /// reference engine selected).
     pub serial_fallbacks: usize,
+    /// Rebinds served by the structure's shape-affine scalar program
+    /// (`plan::affine` — no lowerer replay). Always a subset of `rebinds`:
+    /// `affine_rebinds + replay_fallbacks == rebinds`.
+    pub affine_rebinds: usize,
+    /// Rebinds served by the `ShapeBinding` lowering replay — because the
+    /// affine knob is off, the structure's program was rejected at compile
+    /// time, or no program was captured.
+    pub replay_fallbacks: usize,
+    /// Scalar slots (or unannotated ops) on which a captured affine
+    /// program disagreed with the replayed lowering during compile-time
+    /// probe verification. Any nonzero count rejected that structure's
+    /// whole program, pinning its rebinds to the replay path.
+    pub probe_rejected_ops: usize,
 }
 
 impl CacheStats {
@@ -89,13 +108,42 @@ impl CacheStats {
             format!("{:.1}", self.mean_batch_width())
         }
     }
+
+    /// Fraction of rebinds served by the affine program (0 when no rebind
+    /// has happened).
+    pub fn affine_coverage(&self) -> f64 {
+        if self.rebinds == 0 {
+            return 0.0;
+        }
+        self.affine_rebinds as f64 / self.rebinds as f64
+    }
+
+    /// Affine coverage formatted for summary lines: `"-"` when no rebind
+    /// ran at all (printing `0%` would read as a measured fallback rate).
+    pub fn affine_coverage_label(&self) -> String {
+        if self.rebinds == 0 {
+            "-".into()
+        } else {
+            format!("{:.0}%", 100.0 * self.affine_coverage())
+        }
+    }
+}
+
+/// A cached mesh structure plus its (optional) verified shape-affine
+/// scalar program. `affine: None` means rebinds replay the lowering —
+/// either the knob was off at compile time, the lowerer left ops
+/// unannotated, or probe verification rejected the captured program.
+#[derive(Debug, Clone)]
+struct CachedStructure {
+    structure: Arc<PlanStructure>,
+    affine: Option<Arc<AffineProgram>>,
 }
 
 /// Thread-safe two-level map from configuration identity to its compiled
 /// plan.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    structures: Mutex<HashMap<String, Arc<PlanStructure>>>,
+    structures: Mutex<HashMap<String, CachedStructure>>,
     shapes: Mutex<HashMap<String, ExecPlan>>,
     stats: Mutex<CacheStats>,
 }
@@ -105,6 +153,48 @@ pub struct PlanCache {
 /// the decode-step knob complete it.
 fn shape_key(cfg: &RunConfig, knobs: &SimKnobs) -> String {
     format!("{}/in{}/steps{}", cfg.key(), cfg.seq_in, knobs.sim_decode_steps)
+}
+
+/// Compile-time acceptance check of a captured affine program: evaluate it
+/// at the compile shape and at every structure-preserving held-out probe
+/// shape (`affine::probe_shapes`), requiring bit-level agreement with the
+/// replayed lowering on every scalar. Returns the accepted program, or
+/// `None` plus the mismatch count that rejected it. Rejection costs only
+/// coverage — the structure's rebinds stay on the (always-correct) replay.
+fn verified_program(
+    ep: &ExecPlan,
+    prog: Result<AffineProgram, usize>,
+    spec: &ModelSpec,
+    hw: &HwSpec,
+    knobs: &SimKnobs,
+    cfg: &RunConfig,
+) -> (Option<Arc<AffineProgram>>, usize) {
+    let prog = match prog {
+        Ok(p) => p,
+        Err(unruled) => return (None, unruled.max(1)),
+    };
+    // Self-check: the program must reproduce the compile shape exactly.
+    let self_eval = prog.eval(&ep.structure, spec, hw, knobs, cfg);
+    let m = affine::scalars_mismatch(&ep.scalars, &self_eval.scalars);
+    if m > 0 {
+        return (None, m);
+    }
+    // Held-out probes. Probes that change the mesh key are skipped: they
+    // could not share this structure (or program) in the first place. The
+    // prompt-length probes never change the key, so at least two run.
+    let key = parallelism::structure_key(knobs, cfg);
+    for probe in affine::probe_shapes(cfg) {
+        if parallelism::structure_key(knobs, &probe) != key {
+            continue;
+        }
+        let replay = parallelism::rebind(&ep.structure, spec, hw, knobs, &probe);
+        let evaluated = prog.eval(&ep.structure, spec, hw, knobs, &probe);
+        let m = affine::scalars_mismatch(&replay.scalars, &evaluated.scalars);
+        if m > 0 {
+            return (None, m);
+        }
+    }
+    (Some(Arc::new(prog)), 0)
 }
 
 impl PlanCache {
@@ -126,18 +216,47 @@ impl PlanCache {
         let mesh_key = parallelism::structure_key(knobs, cfg);
         let cached_structure = self.structures.lock().unwrap().get(&mesh_key).cloned();
         let ep = match cached_structure {
-            Some(structure) => {
-                self.stats.lock().unwrap().rebinds += 1;
-                parallelism::rebind(&structure, &spec, hw, knobs, cfg)
+            Some(cs) => {
+                let use_affine = knobs.affine_rebind && cs.affine.is_some();
+                {
+                    let mut st = self.stats.lock().unwrap();
+                    st.rebinds += 1;
+                    if use_affine {
+                        st.affine_rebinds += 1;
+                    } else {
+                        st.replay_fallbacks += 1;
+                    }
+                }
+                if use_affine {
+                    cs.affine
+                        .as_ref()
+                        .unwrap()
+                        .eval(&cs.structure, &spec, hw, knobs, cfg)
+                } else {
+                    parallelism::rebind(&cs.structure, &spec, hw, knobs, cfg)
+                }
             }
             None => {
-                let ep = parallelism::compile(&spec, hw, knobs, cfg);
-                self.stats.lock().unwrap().structure_lowerings += 1;
+                let (ep, affine, rejected) = if knobs.affine_rebind {
+                    let (ep, prog) = parallelism::compile_affine(&spec, hw, knobs, cfg);
+                    let (affine, rejected) = verified_program(&ep, prog, &spec, hw, knobs, cfg);
+                    (ep, affine, rejected)
+                } else {
+                    (parallelism::compile(&spec, hw, knobs, cfg), None, 0)
+                };
+                {
+                    let mut st = self.stats.lock().unwrap();
+                    st.structure_lowerings += 1;
+                    st.probe_rejected_ops += rejected;
+                }
                 self.structures
                     .lock()
                     .unwrap()
                     .entry(mesh_key)
-                    .or_insert_with(|| Arc::clone(&ep.structure));
+                    .or_insert_with(|| CachedStructure {
+                        structure: Arc::clone(&ep.structure),
+                        affine,
+                    });
                 ep
             }
         };
@@ -250,6 +369,69 @@ mod tests {
         assert_eq!((st.structure_lowerings, st.rebinds, st.shape_hits), (1, 2, 0));
         assert_eq!(cache.sizes(), (1, 3));
         assert!(st.reuse_rate() > 0.6);
+    }
+
+    #[test]
+    fn affine_rebinds_split_the_rebind_counter() {
+        // Same grid as `same_mesh_new_shape_rebinds_instead_of_relowering`:
+        // with the affine knob on (the default) both rebinds must be served
+        // by the accepted program, with zero probe rejections.
+        let cache = PlanCache::new();
+        let hw = HwSpec::default();
+        let knobs = knobs();
+        cache.get_or_lower(&RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8), &hw, &knobs);
+        cache.get_or_lower(&RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 32), &hw, &knobs);
+        let mut long_prompt = RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8);
+        long_prompt.seq_in = 512;
+        cache.get_or_lower(&long_prompt, &hw, &knobs);
+        let st = cache.stats();
+        assert_eq!(st.rebinds, 2);
+        assert_eq!(st.affine_rebinds, 2, "stock lowerers must pass probe verification");
+        assert_eq!(st.replay_fallbacks, 0);
+        assert_eq!(st.probe_rejected_ops, 0);
+        assert_eq!(st.affine_rebinds + st.replay_fallbacks, st.rebinds);
+    }
+
+    #[test]
+    fn no_affine_knob_pins_the_replay_path_bit_identically() {
+        let hw = HwSpec::default();
+        let on = knobs();
+        let off = knobs().with_affine_rebind(false);
+        for par in [
+            Parallelism::Tensor,
+            Parallelism::Pipeline,
+            Parallelism::Data,
+            Parallelism::expert(4),
+        ] {
+            let cache_on = PlanCache::new();
+            let cache_off = PlanCache::new();
+            for (batch, seq_in) in [(8, 128), (8, 256), (16, 128)] {
+                let mut cfg = RunConfig::new("Vicuna-7B", par, 4, batch);
+                cfg.seq_in = seq_in;
+                let a = cache_on.get_or_lower(&cfg, &hw, &on);
+                let b = cache_off.get_or_lower(&cfg, &hw, &off);
+                assert_eq!(
+                    affine::scalars_mismatch(&a.scalars, &b.scalars),
+                    0,
+                    "{par:?} b{batch} in{seq_in}: affine and replay rebinds must be bit-identical"
+                );
+            }
+            let (son, soff) = (cache_on.stats(), cache_off.stats());
+            assert_eq!(son.rebinds, soff.rebinds, "{par:?}: the knob must not change access counts");
+            assert_eq!(soff.affine_rebinds, 0, "{par:?}: --no-affine serves every rebind by replay");
+            assert_eq!(soff.replay_fallbacks, soff.rebinds);
+        }
+    }
+
+    #[test]
+    fn affine_coverage_label_guards_the_zero_rebind_case() {
+        let mut st = CacheStats::default();
+        assert_eq!(st.affine_coverage_label(), "-", "no rebinds ⇒ no coverage to report");
+        st.rebinds = 4;
+        st.affine_rebinds = 3;
+        st.replay_fallbacks = 1;
+        assert_eq!(st.affine_coverage_label(), "75%");
+        assert!((st.affine_coverage() - 0.75).abs() < 1e-12);
     }
 
     #[test]

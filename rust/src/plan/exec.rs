@@ -98,9 +98,11 @@ impl PlanStructure {
     }
 }
 
-/// Shape half of a compiled plan: the per-op scalar table re-derived by a
-/// `ShapeBinding` for every new (batch, sequence, step) shape on an
-/// unchanged mesh.
+/// Shape half of a compiled plan: the per-op scalar table re-derived for
+/// every new (batch, sequence, step) shape on an unchanged mesh — by a
+/// `ShapeBinding` lowerer replay, or in O(ops) by an accepted
+/// shape-affine program (`plan::affine`, DESIGN.md §17); the two paths
+/// produce byte-identical tables.
 #[derive(Debug)]
 pub struct ShapeScalars {
     /// Per-op duration: nominal compute seconds (`Compute`), transfer

@@ -52,6 +52,7 @@
 //! assert_eq!(stats.rebinds, 1);
 //! ```
 
+pub mod affine;
 pub mod cache;
 pub mod exec;
 
@@ -60,6 +61,7 @@ use std::ops::Range;
 use crate::simulator::perf::ModuleTiming;
 use crate::simulator::timeline::ModuleKind;
 
+pub use affine::{AffineProgram, CommTerm, OpRule, RuleCapture};
 pub use cache::{CacheStats, PlanCache};
 pub use exec::{ExecBatch, ExecPlan, PlanStructure, ShapeBinding, ShapeScalars, StructureBuilder};
 
@@ -309,6 +311,18 @@ pub trait PlanSink {
     fn send(&mut self, ranks: Range<usize>, layer: u16, step: u32, transfer_s: f64) -> u32 {
         self.send_tiered(ranks, layer, step, transfer_s, 0.0)
     }
+
+    /// Announce the shape-affine rule behind the *next* op emission
+    /// (DESIGN.md §17). Lowerers call this immediately before the
+    /// `compute` / collective / send the rule describes; sinks that do not
+    /// compile affine programs ignore it, so plain structure compiles and
+    /// `ShapeBinding` replays pay nothing.
+    fn rule(&mut self, _rule: affine::OpRule) {}
+
+    /// Announce one additive term of the `comm_bytes_per_step`
+    /// accumulation, at the accumulation site (preserving fold order).
+    /// Default no-op, like [`PlanSink::rule`].
+    fn comm_term(&mut self, _term: affine::CommTerm) {}
 }
 
 /// Incremental builder used by the strategy lowerers (the reference

@@ -293,6 +293,11 @@ mod tests {
         let (cache, steps) = lw.stats();
         assert_eq!(cache.structure_lowerings, 1, "one structure for every context");
         assert_eq!(cache.rebinds, 3, "further contexts are scalar rebinds");
+        assert_eq!(
+            cache.affine_rebinds + cache.replay_fallbacks,
+            cache.rebinds,
+            "every rebind is either an affine evaluation or a lowerer replay"
+        );
         assert_eq!(steps, 4);
         // Longer context -> strictly more attention time in the slice.
         let attn = |p: &ExecPlan| -> f64 {

@@ -23,6 +23,14 @@
 //! The explicit *sync-wait* vs *transfer* phases this engine emits are
 //! what give the run record its phase-resolved communication/
 //! synchronization energy isolation.
+//!
+//! Buffer churn on the hot paths is absorbed by [`EngineScratch`]: a
+//! per-thread pool of the engine's internal vectors (sampled durations,
+//! per-op offsets, rendezvous times, edge clocks, the merged keyed phase
+//! list) recycled across runs, so sweep / tune / serve / fleet loops do
+//! not re-allocate per execution (DESIGN.md §17). Pooling never changes
+//! results — buffers are cleared on take and every arithmetic fold order
+//! is unchanged (property-tested).
 
 use crate::plan::exec::{ExecBatch, ExecPlan, OpKind};
 use crate::plan::{Op, Plan, WaitRecord};
@@ -50,6 +58,78 @@ pub struct BuiltRun {
     /// when `SimKnobs::trace` is on; `None` otherwise — the capture is the
     /// knob's only cost, the resolved run is identical either way.
     pub trace: Option<crate::trace::Trace>,
+}
+
+/// Reusable engine buffers, pooled per thread across runs.
+///
+/// `resolve_compiled` / `resolve_batch` and `materialize` draw their
+/// internal vectors (sampled durations, per-op offsets, rendezvous times,
+/// edge-ready clocks, the merged keyed phase list) from here instead of
+/// allocating, and return them once the run's outputs have been
+/// extracted. Buffers that escape into the returned `BuiltRun` — final
+/// clocks, wait samples, phases, the trace — are never pooled. Reuse is
+/// invisible to results: every buffer is cleared before use and no fold
+/// order changes (pinned by
+/// `prop_scratch_reuse_leaves_records_byte_identical`).
+#[derive(Debug, Default)]
+pub struct EngineScratch {
+    f64_pool: Vec<Vec<f64>>,
+    u32_pool: Vec<Vec<u32>>,
+    keyed_pool: Vec<Vec<(u64, Phase)>>,
+}
+
+/// Pool-size cap: prevents pathological growth when a wide batch returns
+/// more buffers than steady-state execution takes back out.
+const SCRATCH_POOL_CAP: usize = 64;
+
+impl EngineScratch {
+    pub fn new() -> EngineScratch {
+        EngineScratch::default()
+    }
+
+    fn take_f64(&mut self) -> Vec<f64> {
+        let mut v = self.f64_pool.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    fn take_u32(&mut self) -> Vec<u32> {
+        let mut v = self.u32_pool.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    fn take_keyed(&mut self) -> Vec<(u64, Phase)> {
+        let mut v = self.keyed_pool.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    fn put_f64(&mut self, v: Vec<f64>) {
+        if self.f64_pool.len() < SCRATCH_POOL_CAP {
+            self.f64_pool.push(v);
+        }
+    }
+
+    fn put_u32(&mut self, v: Vec<u32>) {
+        if self.u32_pool.len() < SCRATCH_POOL_CAP {
+            self.u32_pool.push(v);
+        }
+    }
+
+    fn put_keyed(&mut self, v: Vec<(u64, Phase)>) {
+        if self.keyed_pool.len() < SCRATCH_POOL_CAP {
+            self.keyed_pool.push(v);
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread scratch backing the signature-stable entry points
+    /// (`execute`, `execute_compiled`, `execute_batch`); the `_scratch`
+    /// variants accept an explicit pool for callers that manage their own.
+    static SCRATCH: std::cell::RefCell<EngineScratch> =
+        std::cell::RefCell::new(EngineScratch::new());
 }
 
 /// Resolved stochastic state of one run: everything pass 2 needs to expand
@@ -281,15 +361,26 @@ fn rank_phases(
 /// Pass 1 over the compiled SoA arrays: identical walk, clock advance, and
 /// RNG draw order to `resolve` — the two paths are bit-identical for the
 /// same seed stream (property-tested).
-fn resolve_compiled(ep: &ExecPlan, skew: &SkewModel, sync_jitter: f64, rng: &mut Rng) -> Resolved {
+fn resolve_compiled(
+    ep: &ExecPlan,
+    skew: &SkewModel,
+    sync_jitter: f64,
+    rng: &mut Rng,
+    scratch: &mut EngineScratch,
+) -> Resolved {
     let s = &*ep.structure;
     let sc = &*ep.scalars;
     let n_ops = s.len();
+    // Clocks and wait samples escape into the `BuiltRun`; the rest come
+    // from (and return to) the scratch pool.
     let mut clocks = vec![0.0f64; s.num_ranks];
-    let mut durs: Vec<f64> = Vec::new();
-    let mut dur_at = vec![0u32; n_ops];
-    let mut sync_t = vec![0.0f64; n_ops];
-    let mut edges = vec![0.0f64; s.num_edges as usize];
+    let mut durs = scratch.take_f64();
+    let mut dur_at = scratch.take_u32();
+    dur_at.resize(n_ops, 0);
+    let mut sync_t = scratch.take_f64();
+    sync_t.resize(n_ops, 0.0);
+    let mut edges = scratch.take_f64();
+    edges.resize(s.num_edges as usize, 0.0);
     let mut wait_samples = Vec::new();
     let mut prefill_end = 0.0f64;
 
@@ -355,6 +446,7 @@ fn resolve_compiled(ep: &ExecPlan, skew: &SkewModel, sync_jitter: f64, rng: &mut
             }
         }
     }
+    scratch.put_f64(edges);
 
     Resolved {
         durs,
@@ -459,6 +551,7 @@ fn rank_phases_compiled(ep: &ExecPlan, res: &Resolved, power: &PowerModel, rank:
 /// the exact serial emission order, bill the idle tail per rank, and wrap
 /// the run's side channels. Used verbatim by the single-plan and batched
 /// execution paths so their timelines cannot drift.
+#[allow(clippy::too_many_arguments)]
 fn materialize(
     num_ranks: usize,
     power: &PowerModel,
@@ -467,6 +560,7 @@ fn materialize(
     sim_steps: usize,
     comm_bytes_per_step: f64,
     trace: bool,
+    scratch: &mut EngineScratch,
 ) -> BuiltRun {
     keyed.sort_unstable_by_key(|(k, _)| *k);
     // The op index is the high bits of the emission key (`seq_key`), so
@@ -475,7 +569,13 @@ fn materialize(
     let trace = trace.then(|| crate::trace::Trace {
         ops: keyed.iter().map(|(k, _)| (k >> 24) as u32).collect(),
     });
-    let phases: Vec<Phase> = keyed.into_iter().map(|(_, p)| p).collect();
+    let phases: Vec<Phase> = keyed.drain(..).map(|(_, p)| p).collect();
+    scratch.put_keyed(keyed);
+    // Pass-1 working vectors go back to the pool; clocks and wait samples
+    // escape into the timeline / run record and stay owned.
+    scratch.put_f64(res.durs);
+    scratch.put_u32(res.dur_at);
+    scratch.put_f64(res.sync_t);
 
     let mut timeline = Timeline::from_parts(
         num_ranks,
@@ -513,13 +613,36 @@ pub fn execute_compiled(
     threads: usize,
     trace: bool,
 ) -> BuiltRun {
-    let res = resolve_compiled(ep, skew, sync_jitter, rng);
+    SCRATCH.with(|s| {
+        execute_compiled_scratch(ep, power, skew, sync_jitter, rng, threads, trace, &mut s.borrow_mut())
+    })
+}
+
+/// `execute_compiled` with an explicit scratch pool — the signature-stable
+/// wrapper above routes through a per-thread pool; callers that manage
+/// their own reuse (and the scratch property test) pass one here.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_compiled_scratch(
+    ep: &ExecPlan,
+    power: &PowerModel,
+    skew: &SkewModel,
+    sync_jitter: f64,
+    rng: &mut Rng,
+    threads: usize,
+    trace: bool,
+    scratch: &mut EngineScratch,
+) -> BuiltRun {
+    let res = resolve_compiled(ep, skew, sync_jitter, rng, scratch);
 
     let num_ranks = ep.num_ranks();
     let ranks: Vec<usize> = (0..num_ranks).collect();
     let per_rank = par::par_map(&ranks, threads, |&r| rank_phases_compiled(ep, &res, power, r));
-    let keyed: Vec<(u64, Phase)> = per_rank.into_iter().flatten().collect();
-    materialize(num_ranks, power, keyed, res, ep.scalars.sim_steps, ep.scalars.comm_bytes_per_step, trace)
+    let mut keyed = scratch.take_keyed();
+    for mut v in per_rank {
+        keyed.append(&mut v);
+        scratch.put_keyed(v);
+    }
+    materialize(num_ranks, power, keyed, res, ep.scalars.sim_steps, ep.scalars.comm_bytes_per_step, trace, scratch)
 }
 
 /// Per-lane stochastic state of a batched execution. Each candidate owns
@@ -541,17 +664,30 @@ pub struct BatchLane {
 /// the per-lane draw sequence across ops is exactly the sequence
 /// `resolve_compiled` would produce for that lane, so results are
 /// bit-identical per lane (property-tested).
-fn resolve_batch(batch: &ExecBatch, lanes: &mut [BatchLane]) -> Vec<Resolved> {
+fn resolve_batch(batch: &ExecBatch, lanes: &mut [BatchLane], scratch: &mut EngineScratch) -> Vec<Resolved> {
     let s = &*batch.structure;
     let k = lanes.len();
     let n_ops = s.len();
     // The dur offsets are a pure function of the structure walk, identical
     // across lanes: computed once, cloned into each lane's `Resolved`.
-    let mut dur_at = vec![0u32; n_ops];
+    let mut dur_at = scratch.take_u32();
+    dur_at.resize(n_ops, 0);
     let mut clocks = vec![vec![0.0f64; s.num_ranks]; k];
-    let mut durs: Vec<Vec<f64>> = vec![Vec::new(); k];
-    let mut sync_t = vec![vec![0.0f64; n_ops]; k];
-    let mut edges = vec![vec![0.0f64; s.num_edges as usize]; k];
+    let mut durs: Vec<Vec<f64>> = (0..k).map(|_| scratch.take_f64()).collect();
+    let mut sync_t: Vec<Vec<f64>> = (0..k)
+        .map(|_| {
+            let mut v = scratch.take_f64();
+            v.resize(n_ops, 0.0);
+            v
+        })
+        .collect();
+    let mut edges: Vec<Vec<f64>> = (0..k)
+        .map(|_| {
+            let mut v = scratch.take_f64();
+            v.resize(s.num_edges as usize, 0.0);
+            v
+        })
+        .collect();
     let mut waits: Vec<Vec<f64>> = vec![Vec::new(); k];
     let mut prefill_end = vec![0.0f64; k];
 
@@ -628,7 +764,11 @@ fn resolve_batch(batch: &ExecBatch, lanes: &mut [BatchLane]) -> Vec<Resolved> {
         }
     }
 
-    durs.into_iter()
+    for e in edges {
+        scratch.put_f64(e);
+    }
+    let out: Vec<Resolved> = durs
+        .into_iter()
         .zip(sync_t)
         .zip(clocks)
         .zip(waits)
@@ -641,7 +781,9 @@ fn resolve_batch(batch: &ExecBatch, lanes: &mut [BatchLane]) -> Vec<Resolved> {
             wait_samples,
             prefill_end,
         })
-        .collect()
+        .collect();
+    scratch.put_u32(dur_at);
+    out
 }
 
 /// Execute K shape-bindings of one mesh structure in a single engine
@@ -650,8 +792,20 @@ fn resolve_batch(batch: &ExecBatch, lanes: &mut [BatchLane]) -> Vec<Resolved> {
 /// `BuiltRun` per lane, each bit-identical to what `execute_compiled`
 /// would produce for that lane's plan and stochastic state alone.
 pub fn execute_batch(batch: &ExecBatch, lanes: &mut [BatchLane], threads: usize, trace: bool) -> Vec<BuiltRun> {
+    SCRATCH.with(|s| execute_batch_scratch(batch, lanes, threads, trace, &mut s.borrow_mut()))
+}
+
+/// `execute_batch` with an explicit scratch pool (see
+/// [`execute_compiled_scratch`]).
+pub fn execute_batch_scratch(
+    batch: &ExecBatch,
+    lanes: &mut [BatchLane],
+    threads: usize,
+    trace: bool,
+    scratch: &mut EngineScratch,
+) -> Vec<BuiltRun> {
     assert_eq!(lanes.len(), batch.width(), "one stochastic lane per candidate");
-    let reses = resolve_batch(batch, lanes);
+    let reses = resolve_batch(batch, lanes, scratch);
     let lanes: &[BatchLane] = lanes;
 
     let num_ranks = batch.structure.num_ranks;
@@ -665,9 +819,11 @@ pub fn execute_batch(batch: &ExecBatch, lanes: &mut [BatchLane], threads: usize,
     let mut per_job = per_job.into_iter();
     let mut runs = Vec::with_capacity(batch.width());
     for (l, res) in reses.into_iter().enumerate() {
-        let mut keyed: Vec<(u64, Phase)> = Vec::new();
+        let mut keyed = scratch.take_keyed();
         for _ in 0..num_ranks {
-            keyed.extend(per_job.next().expect("one materialization job per (lane, rank)"));
+            let mut v = per_job.next().expect("one materialization job per (lane, rank)");
+            keyed.append(&mut v);
+            scratch.put_keyed(v);
         }
         let sc = &batch.lanes[l].scalars;
         runs.push(materialize(
@@ -678,6 +834,7 @@ pub fn execute_batch(batch: &ExecBatch, lanes: &mut [BatchLane], threads: usize,
             sc.sim_steps,
             sc.comm_bytes_per_step,
             trace,
+            scratch,
         ));
     }
     runs
@@ -705,7 +862,18 @@ pub fn execute(
     let ranks: Vec<usize> = (0..plan.num_ranks).collect();
     let per_rank = par::par_map(&ranks, threads, |&r| rank_phases(plan, &res, power, r));
     let keyed: Vec<(u64, Phase)> = per_rank.into_iter().flatten().collect();
-    materialize(plan.num_ranks, power, keyed, res, plan.sim_steps, plan.comm_bytes_per_step, trace)
+    SCRATCH.with(|s| {
+        materialize(
+            plan.num_ranks,
+            power,
+            keyed,
+            res,
+            plan.sim_steps,
+            plan.comm_bytes_per_step,
+            trace,
+            &mut s.borrow_mut(),
+        )
+    })
 }
 
 #[cfg(test)]
@@ -938,6 +1106,49 @@ mod tests {
                 }
                 assert_eq!(a.timeline.gpu_energy_j(), b.timeline.gpu_energy_j());
             }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_across_runs() {
+        // Two consecutive runs through one scratch pool must equal a run
+        // through a fresh pool: buffers are cleared on take and no fold
+        // order changes. The second run is the interesting one — it draws
+        // warm (previously returned) buffers.
+        let hw = HwSpec::default();
+        let power = PowerModel::new(&hw);
+        let mut b = PlanBuilder::new(4);
+        for step in 0..3u32 {
+            for layer in 0..6u16 {
+                b.compute(0..4, t(1e-3), ModuleKind::SelfAttention, layer, step);
+                b.collective(0..4, ModuleKind::AllReduce, layer, step, 1e-4, true, WaitRecord::All);
+            }
+            let e = b.send(0..2, 0, step, 2e-4);
+            b.recv(2..4, 0, step, e);
+        }
+        let plan = b.finish(2, 1.0, true);
+        let ep = crate::plan::exec::compile(&plan);
+        let run_with = |scratch: &mut EngineScratch| {
+            let mut rng = Rng::new(23);
+            let skew = SkewModel::new(&SimKnobs::default(), 4, &mut rng);
+            execute_compiled_scratch(&ep, &power, &skew, 40e-6, &mut rng, 1, true, scratch)
+        };
+        let fresh = run_with(&mut EngineScratch::new());
+        let mut pool = EngineScratch::new();
+        let first = run_with(&mut pool);
+        let second = run_with(&mut pool);
+        for r in [&first, &second] {
+            assert_eq!(fresh.wait_samples, r.wait_samples);
+            assert_eq!(fresh.prefill_end, r.prefill_end);
+            assert_eq!(fresh.timeline.phases.len(), r.timeline.phases.len());
+            for (pa, pb) in fresh.timeline.phases.iter().zip(&r.timeline.phases) {
+                assert_eq!((pa.gpu, pa.kind, pa.module), (pb.gpu, pb.kind, pb.module));
+                assert_eq!(pa.t0, pb.t0);
+                assert_eq!(pa.t1, pb.t1);
+                assert_eq!(pa.power_w, pb.power_w);
+            }
+            assert_eq!(fresh.trace.as_ref().unwrap().ops, r.trace.as_ref().unwrap().ops);
+            assert_eq!(fresh.timeline.gpu_energy_j(), r.timeline.gpu_energy_j());
         }
     }
 

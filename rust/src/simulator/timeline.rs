@@ -144,7 +144,9 @@ impl Timeline {
     /// Reassemble a timeline from externally materialized phases (the
     /// event engine's parallel path). `clocks` must equal each GPU's final
     /// phase end time; per-GPU phases must be contiguous and time-ordered,
-    /// as `push` would have produced them.
+    /// as `push` would have produced them. Both vectors are taken by value
+    /// and owned for the timeline's lifetime — they are exactly the engine
+    /// buffers that must *not* be recycled into `EngineScratch`.
     pub(crate) fn from_parts(
         num_gpus: usize,
         idle_w: f64,

@@ -1030,3 +1030,159 @@ fn prop_pruned_tune_argmin_matches_exhaustive() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_affine_rebind_is_bit_identical_to_replay() {
+    // The cache's shape-affine programs must reproduce lowerer replay bit
+    // for bit on every strategy × testbed × shape — and on this tree's
+    // lowerers no probe may reject, so coverage is total and the rebind
+    // counter splits cleanly into affine evaluations vs replay fallbacks.
+    use piep::cluster::{GpuSpec, LinkTier};
+    use piep::plan::affine::scalars_mismatch;
+    forall(122, 3, |r| r.next_u64() & 0xffff, |&seed| {
+        let testbeds = [
+            HwSpec::default(),
+            HwSpec::cluster_testbed(2, 2, LinkTier::NvLink, LinkTier::InfiniBand, &[]),
+            HwSpec::cluster_testbed(
+                2,
+                2,
+                LinkTier::PciE,
+                LinkTier::PciE,
+                &[GpuSpec::a6000(), GpuSpec::h100()],
+            ),
+        ];
+        let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.push(Parallelism::expert(4));
+        pars.extend(hybrids4());
+        let k_on = knobs();
+        let k_off = knobs().with_affine_rebind(false);
+        for hw in &testbeds {
+            let on = piep::plan::PlanCache::new();
+            let off = piep::plan::PlanCache::new();
+            for &par in &pars {
+                // Shape grid spanning batch, prompt length, and decode
+                // span; only batch can ever change the structure key.
+                for (batch, seq_in, seq_out) in
+                    [(8usize, 64usize, 512usize), (8, 256, 512), (32, 64, 512), (8, 64, 576)]
+                {
+                    let mut cfg = RunConfig::new("Vicuna-7B", par, 4, batch)
+                        .with_seq_out(seq_out)
+                        .with_seed(seed);
+                    cfg.seq_in = seq_in;
+                    let a = on.get_or_lower(&cfg, hw, &k_on);
+                    let b = off.get_or_lower(&cfg, hw, &k_off);
+                    ensure(
+                        scalars_mismatch(&a.scalars, &b.scalars) == 0,
+                        format!("{par:?} b{batch} in{seq_in} out{seq_out}: affine != replay"),
+                    )?;
+                }
+            }
+            let (s_on, s_off) = (on.stats(), off.stats());
+            ensure(s_on.rebinds == s_off.rebinds, "the knob never changes the rebind count")?;
+            ensure(
+                s_on.affine_rebinds + s_on.replay_fallbacks == s_on.rebinds,
+                "rebinds split into affine + replay",
+            )?;
+            ensure(
+                s_on.probe_rejected_ops == 0,
+                format!("{} probe-rejected ops: a lowerer rule drifted", s_on.probe_rejected_ops),
+            )?;
+            ensure(
+                s_on.rebinds > 0 && s_on.affine_rebinds == s_on.rebinds,
+                "full affine coverage on these lowerers",
+            )?;
+            ensure(s_off.affine_rebinds == 0, "off-path never evaluates a program")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scratch_reuse_leaves_records_byte_identical() {
+    // Pooled engine buffers must be invisible in the run record: two
+    // consecutive runs through one EngineScratch (the second drawing warm
+    // buffers) equal fresh-pool runs phase for phase, bit for bit — on
+    // the single-plan path and the batched path.
+    use piep::plan::ExecBatch;
+    use piep::simulator::engine::{
+        execute_batch_scratch, execute_compiled_scratch, BatchLane, EngineScratch,
+    };
+    use piep::simulator::power::PowerModel;
+    use piep::simulator::skew::SkewModel;
+    forall(123, 3, |r| r.next_u64() & 0xffff, |&seed| {
+        let hw = HwSpec::default();
+        let k = knobs();
+        let spec = piep::models::by_name("Vicuna-7B").unwrap();
+        let same = |a: &piep::simulator::BuiltRun,
+                    b: &piep::simulator::BuiltRun,
+                    tag: &str|
+         -> Result<(), String> {
+            ensure(a.wait_samples == b.wait_samples, format!("{tag}: wait samples"))?;
+            ensure(a.prefill_end == b.prefill_end, format!("{tag}: prefill end"))?;
+            ensure(
+                a.timeline.phases.len() == b.timeline.phases.len(),
+                format!("{tag}: phase count"),
+            )?;
+            for (pa, pb) in a.timeline.phases.iter().zip(&b.timeline.phases) {
+                ensure(
+                    (pa.gpu, pa.kind, pa.module) == (pb.gpu, pb.kind, pb.module)
+                        && pa.t0.to_bits() == pb.t0.to_bits()
+                        && pa.t1.to_bits() == pb.t1.to_bits()
+                        && pa.power_w.to_bits() == pb.power_w.to_bits(),
+                    format!("{tag}: phase drift"),
+                )?;
+            }
+            ensure(
+                a.timeline.gpu_energy_j().to_bits() == b.timeline.gpu_energy_j().to_bits(),
+                format!("{tag}: energy"),
+            )
+        };
+        let mut pars = vec![Parallelism::Tensor, Parallelism::Pipeline, Parallelism::Data];
+        pars.push(Parallelism::expert(4));
+        pars.extend(hybrids4());
+        let mut pool = EngineScratch::new();
+        for &par in &pars {
+            let cfg = RunConfig::new("Vicuna-7B", par, 4, 8).with_seed(seed);
+            let ep = piep::parallelism::compile(&spec, &hw, &k, &cfg);
+            let run = |scratch: &mut EngineScratch| {
+                let power = PowerModel::new(&hw);
+                let mut rng = Rng::new(seed ^ 0xA5);
+                let skew = SkewModel::new(&k, cfg.gpus, &mut rng);
+                execute_compiled_scratch(&ep, &power, &skew, 40e-6, &mut rng, 1, false, scratch)
+            };
+            let fresh = run(&mut EngineScratch::new());
+            let first = run(&mut pool);
+            let second = run(&mut pool);
+            same(&fresh, &first, &format!("{par:?} cold pool"))?;
+            same(&fresh, &second, &format!("{par:?} warm pool"))?;
+        }
+        // Batched path through the same (now warm) pool.
+        let cache = piep::plan::PlanCache::new();
+        let cfgs = [
+            RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 8).with_seed(seed),
+            RunConfig::new("Vicuna-7B", Parallelism::Tensor, 4, 32).with_seed(seed ^ 1),
+        ];
+        let plans: Vec<_> = cfgs.iter().map(|c| cache.get_or_lower(c, &hw, &k)).collect();
+        let batch = ExecBatch::new(plans);
+        let lanes = || -> Vec<BatchLane> {
+            cfgs.iter()
+                .map(|c| {
+                    let mut rng = Rng::new(c.seed);
+                    let skew = SkewModel::new(&k, c.gpus, &mut rng);
+                    BatchLane {
+                        power: PowerModel::new(&hw),
+                        skew,
+                        sync_jitter: 40e-6,
+                        rng,
+                    }
+                })
+                .collect()
+        };
+        let fresh = execute_batch_scratch(&batch, &mut lanes(), 1, false, &mut EngineScratch::new());
+        let warm = execute_batch_scratch(&batch, &mut lanes(), 1, false, &mut pool);
+        for (l, (a, b)) in fresh.iter().zip(&warm).enumerate() {
+            same(a, b, &format!("batched lane {l}"))?;
+        }
+        Ok(())
+    });
+}
